@@ -1,0 +1,83 @@
+//! Figure-5-style analysis: validate the three insights behind the
+//! adaptive strategy on the benchmark collection.
+//!
+//!   left   — WB benefit at N=1 vs avg_row (short rows → WB wins)
+//!   middle — PR vs SR speedup across N (PR wins only at small N)
+//!   right  — WB benefit at N=128 vs stdv/avg (skew → WB wins)
+//!
+//!     cargo run --release --example adaptive_analysis
+
+use ge_spmm::bench::figures::{load_bench_matrices, sim_suite, N_SWEEP};
+use ge_spmm::bench::Table;
+use ge_spmm::sim::{GpuConfig, SimKernel};
+use ge_spmm::util::stats;
+
+fn main() {
+    let gpu = GpuConfig::rtx3090();
+    eprintln!("building collection …");
+    let matrices = load_bench_matrices();
+    eprintln!("{} matrices ready on {}", matrices.len(), gpu.name);
+
+    // ---- left panel: WB benefit (PR family) at N=1 vs avg_row ----
+    println!("\n[Fig 5 left] workload-balancing benefit at N=1 vs avg_row");
+    let pr_rs = sim_suite(&matrices, SimKernel::PrRs, 1, &gpu);
+    let pr_wb = sim_suite(&matrices, SimKernel::PrWb, 1, &gpu);
+    let benefit1: Vec<f64> = pr_rs.iter().zip(&pr_wb).map(|(a, b)| a / b).collect();
+    let avg_rows: Vec<f64> = matrices.iter().map(|m| m.features.avg_row).collect();
+    let mut t = Table::new(&["avg_row bucket", "matrices", "geomean WB benefit"]);
+    for (lo, hi) in [(0.0, 4.0), (4.0, 12.0), (12.0, 40.0), (40.0, 1e9)] {
+        let sel: Vec<f64> = (0..matrices.len())
+            .filter(|&i| avg_rows[i] >= lo && avg_rows[i] < hi)
+            .map(|i| benefit1[i])
+            .collect();
+        if !sel.is_empty() {
+            t.row(vec![
+                if hi > 1e8 { format!("≥{lo}") } else { format!("{lo}–{hi}") },
+                sel.len().to_string(),
+                format!("{:.2}×", stats::geomean(&sel)),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "spearman(avg_row, WB benefit) = {:.2}  (paper: negative — short rows benefit)",
+        stats::spearman(&avg_rows, &benefit1)
+    );
+
+    // ---- middle panel: PR vs SR across N ----
+    println!("\n[Fig 5 middle] parallel- vs sequential-reduction across N");
+    let mut t = Table::new(&["N", "geomean SR/PR (>1 ⇒ PR wins)"]);
+    for n in N_SWEEP {
+        let sr = sim_suite(&matrices, SimKernel::SrRs, n, &gpu);
+        let pr = sim_suite(&matrices, SimKernel::PrRs, n, &gpu);
+        let ratios: Vec<f64> = sr.iter().zip(&pr).map(|(s, p)| s / p).collect();
+        t.row(vec![n.to_string(), format!("{:.2}×", stats::geomean(&ratios))]);
+    }
+    t.print();
+
+    // ---- right panel: WB benefit (SR family) at N=128 vs cv ----
+    println!("\n[Fig 5 right] workload-balancing benefit at N=128 vs stdv/avg");
+    let sr_rs = sim_suite(&matrices, SimKernel::SrRs, 128, &gpu);
+    let sr_wb = sim_suite(&matrices, SimKernel::SrWb, 128, &gpu);
+    let benefit128: Vec<f64> = sr_rs.iter().zip(&sr_wb).map(|(a, b)| a / b).collect();
+    let cvs: Vec<f64> = matrices.iter().map(|m| m.features.cv_row).collect();
+    let mut t = Table::new(&["stdv/avg bucket", "matrices", "geomean WB benefit"]);
+    for (lo, hi) in [(0.0, 0.25), (0.25, 1.0), (1.0, 3.0), (3.0, 1e9)] {
+        let sel: Vec<f64> = (0..matrices.len())
+            .filter(|&i| cvs[i] >= lo && cvs[i] < hi)
+            .map(|i| benefit128[i])
+            .collect();
+        if !sel.is_empty() {
+            t.row(vec![
+                if hi > 1e8 { format!("≥{lo}") } else { format!("{lo}–{hi}") },
+                sel.len().to_string(),
+                format!("{:.2}×", stats::geomean(&sel)),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "spearman(stdv/avg, WB benefit) = {:.2}  (paper: positive — skew benefits)",
+        stats::spearman(&cvs, &benefit128)
+    );
+}

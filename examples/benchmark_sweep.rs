@@ -1,0 +1,55 @@
+//! Figure-6-style sweep from the coordinator's perspective: for every
+//! matrix in the benchmark collection and every dense width, compare
+//! "ours" (oracle over the four designs) and "ours with rule-based"
+//! against the cuSPARSE-like and ASpT-like baselines on all three GPU
+//! models, printing per-family and overall geomean speedups.
+//!
+//!     cargo run --release --example benchmark_sweep [--full]
+
+use ge_spmm::bench::figures::{
+    geomean_speedup, load_bench_matrices, load_matrices, sim_ours_best, sim_ours_rules, sim_suite,
+};
+use ge_spmm::bench::Table;
+use ge_spmm::gen::Collection;
+use ge_spmm::selector::AdaptiveSelector;
+use ge_spmm::sim::{GpuConfig, SimKernel};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    eprintln!("building collection …");
+    let matrices = if full {
+        load_matrices(Collection::suite())
+    } else {
+        load_bench_matrices()
+    };
+    eprintln!("{} matrices ready", matrices.len());
+    let sel = AdaptiveSelector::default();
+
+    for gpu in GpuConfig::all() {
+        println!("\n=== {} ===", gpu.name);
+        let mut t = Table::new(&[
+            "N", "ours/cusparse", "rules/cusparse", "ours/aspt", "rules best-kernel share",
+        ]);
+        for n in [1usize, 4, 32, 128] {
+            let cus = sim_suite(&matrices, SimKernel::CuSparse, n, &gpu);
+            let aspt = sim_suite(&matrices, SimKernel::Aspt, n, &gpu);
+            let best = sim_ours_best(&matrices, n, &gpu);
+            let rules = sim_ours_rules(&matrices, &sel, n, &gpu);
+            // fraction of matrices where the rules matched the oracle
+            let mut hits = 0usize;
+            for i in 0..matrices.len() {
+                if rules[i] <= best[i] * 1.001 {
+                    hits += 1;
+                }
+            }
+            t.row(vec![
+                n.to_string(),
+                format!("{:.2}×", geomean_speedup(&cus, &best)),
+                format!("{:.2}×", geomean_speedup(&cus, &rules)),
+                format!("{:.2}×", geomean_speedup(&aspt, &best)),
+                format!("{}/{}", hits, matrices.len()),
+            ]);
+        }
+        t.print();
+    }
+}

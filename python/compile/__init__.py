@@ -1,0 +1,3 @@
+"""Build-time Python package: Pallas kernels (L1), JAX GCN model (L2) and
+the AOT lowering path. Never imported at runtime - the Rust coordinator
+loads the HLO text artifacts this package emits."""

@@ -1,0 +1,251 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts + manifest.json.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the ``xla`` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Emits, under ``--out-dir`` (default ``../artifacts``):
+
+- ``spmm_<variant>_<bucket>_n<N>.hlo.txt`` for each of the paper's four
+  kernel designs × shape buckets × dense widths — the kernel library the
+  Rust coordinator routes requests to;
+- ``gcn_step.hlo.txt`` / ``gcn_fwd.hlo.txt`` — the L2 GCN train step and
+  inference forward;
+- ``manifest.json`` describing every artifact's inputs/outputs so the Rust
+  runtime can validate shapes before execution.
+
+Run once via ``make artifacts``; Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import pr_rs, pr_wb, sr_rs, sr_wb
+
+# ----------------------------------------------------------------- buckets
+
+# Shape buckets for the SpMM artifact library. A request is routed to the
+# smallest bucket it fits; operands are zero-padded to the bucket shape.
+BUCKETS = {
+    # name: (m_pad, k, ell_width, num_segments, seg_len)
+    "s": dict(m_pad=512, k=512, width=32, nseg=512, seg_len=32),
+    "m": dict(m_pad=4096, k=4096, width=64, nseg=4096, seg_len=32),
+}
+N_VALUES = [1, 4, 32, 128]
+ROW_BLOCK = 128
+SEG_BLOCK = 128
+
+# GCN model dimensions (Cora-scale synthetic graph; multiples of ROW_BLOCK)
+GCN = dict(nodes=2816, feats=64, hidden=32, classes=7, width=32, lr=0.05)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def describe(shape, dtype):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def lower_spmm(variant: str, bucket: str, n: int):
+    """Lower one SpMM artifact; returns (hlo_text, manifest_entry)."""
+    b = BUCKETS[bucket]
+    m_pad, k, width, nseg, seg_len = b["m_pad"], b["k"], b["width"], b["nseg"], b["seg_len"]
+    if variant in ("sr_rs", "pr_rs"):
+        kern = {"sr_rs": sr_rs, "pr_rs": pr_rs}[variant]
+
+        def fn(vals, cols, x):
+            return (kern.spmm(vals, cols, x, row_block=ROW_BLOCK),)
+
+        args = (
+            spec((m_pad, width)),
+            spec((m_pad, width), jnp.int32),
+            spec((k, n)),
+        )
+        inputs = [
+            {"name": "a_values", **describe((m_pad, width), "f32")},
+            {"name": "a_col_idx", **describe((m_pad, width), "i32")},
+            {"name": "x", **describe((k, n), "f32")},
+        ]
+    else:
+        kern = {"sr_wb": sr_wb, "pr_wb": pr_wb}[variant]
+
+        def fn(vals, cols, rows, x):
+            return (kern.spmm(vals, cols, rows, x, m_pad=m_pad, seg_block=SEG_BLOCK),)
+
+        args = (
+            spec((nseg, seg_len)),
+            spec((nseg, seg_len), jnp.int32),
+            spec((nseg, seg_len), jnp.int32),
+            spec((k, n)),
+        )
+        inputs = [
+            {"name": "a_values", **describe((nseg, seg_len), "f32")},
+            {"name": "a_col_idx", **describe((nseg, seg_len), "i32")},
+            {"name": "a_row_idx", **describe((nseg, seg_len), "i32")},
+            {"name": "x", **describe((k, n), "f32")},
+        ]
+    lowered = jax.jit(fn).lower(*args)
+    entry = {
+        "kind": "spmm",
+        "variant": variant,
+        "bucket": bucket,
+        "n": n,
+        "params": {k2: v for k2, v in b.items()},
+        "row_block": ROW_BLOCK,
+        "seg_block": SEG_BLOCK,
+        "inputs": inputs,
+        "outputs": [{"name": "y", **describe((m_pad, n), "f32")}],
+    }
+    return to_hlo_text(lowered), entry
+
+
+def lower_gcn_step():
+    g = GCN
+    nodes, feats, hidden, classes, width = (
+        g["nodes"],
+        g["feats"],
+        g["hidden"],
+        g["classes"],
+        g["width"],
+    )
+
+    def fn(w1, w2, a_vals, a_cols, x, y, mask):
+        return model.train_step(w1, w2, a_vals, a_cols, x, y, mask, lr=g["lr"])
+
+    args = (
+        spec((feats, hidden)),
+        spec((hidden, classes)),
+        spec((nodes, width)),
+        spec((nodes, width), jnp.int32),
+        spec((nodes, feats)),
+        spec((nodes, classes)),
+        spec((nodes,)),
+    )
+    lowered = jax.jit(fn).lower(*args)
+    entry = {
+        "kind": "gcn_step",
+        "params": dict(g),
+        "inputs": [
+            {"name": "w1", **describe((feats, hidden), "f32")},
+            {"name": "w2", **describe((hidden, classes), "f32")},
+            {"name": "a_values", **describe((nodes, width), "f32")},
+            {"name": "a_col_idx", **describe((nodes, width), "i32")},
+            {"name": "features", **describe((nodes, feats), "f32")},
+            {"name": "labels_onehot", **describe((nodes, classes), "f32")},
+            {"name": "mask", **describe((nodes,), "f32")},
+        ],
+        "outputs": [
+            {"name": "w1_new", **describe((feats, hidden), "f32")},
+            {"name": "w2_new", **describe((hidden, classes), "f32")},
+            {"name": "loss", **describe((), "f32")},
+        ],
+    }
+    return to_hlo_text(lowered), entry
+
+
+def lower_gcn_fwd():
+    g = GCN
+    nodes, feats, hidden, classes, width = (
+        g["nodes"],
+        g["feats"],
+        g["hidden"],
+        g["classes"],
+        g["width"],
+    )
+
+    def fn(w1, w2, a_vals, a_cols, x):
+        return (model.forward((w1, w2), a_vals, a_cols, x),)
+
+    args = (
+        spec((feats, hidden)),
+        spec((hidden, classes)),
+        spec((nodes, width)),
+        spec((nodes, width), jnp.int32),
+        spec((nodes, feats)),
+    )
+    lowered = jax.jit(fn).lower(*args)
+    entry = {
+        "kind": "gcn_fwd",
+        "params": dict(g),
+        "inputs": [
+            {"name": "w1", **describe((feats, hidden), "f32")},
+            {"name": "w2", **describe((hidden, classes), "f32")},
+            {"name": "a_values", **describe((nodes, width), "f32")},
+            {"name": "a_col_idx", **describe((nodes, width), "i32")},
+            {"name": "features", **describe((nodes, feats), "f32")},
+        ],
+        "outputs": [{"name": "logits", **describe((nodes, classes), "f32")}],
+    }
+    return to_hlo_text(lowered), entry
+
+
+VARIANTS = ["sr_rs", "sr_wb", "pr_rs", "pr_wb"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", default="s,m", help="comma-separated bucket names")
+    ap.add_argument("--n-values", default=",".join(str(n) for n in N_VALUES))
+    ap.add_argument("--skip-gcn", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "artifacts": []}
+
+    buckets = [b for b in args.buckets.split(",") if b]
+    n_values = [int(n) for n in args.n_values.split(",") if n]
+
+    for bucket in buckets:
+        for variant in VARIANTS:
+            for n in n_values:
+                name = f"spmm_{variant}_{bucket}_n{n}"
+                text, entry = lower_spmm(variant, bucket, n)
+                path = f"{name}.hlo.txt"
+                with open(os.path.join(args.out_dir, path), "w") as f:
+                    f.write(text)
+                entry["name"] = name
+                entry["file"] = path
+                manifest["artifacts"].append(entry)
+                print(f"wrote {path} ({len(text)} chars)")
+
+    if not args.skip_gcn:
+        for name, (text, entry) in {
+            "gcn_step": lower_gcn_step(),
+            "gcn_fwd": lower_gcn_fwd(),
+        }.items():
+            path = f"{name}.hlo.txt"
+            with open(os.path.join(args.out_dir, path), "w") as f:
+                f.write(text)
+            entry["name"] = name
+            entry["file"] = path
+            manifest["artifacts"].append(entry)
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Sparse-format converters mirroring ``rust/src/sparse``.
+
+The Pallas kernels need static shapes, so sparse matrices are padded into
+two layouts (identical to the Rust side, see ``sparse/ell.rs`` and
+``sparse/segments.rs``):
+
+- **ELL** for the row-split kernels: ``(rows_padded, width)`` value/column
+  planes, zero-filled past each row's true length;
+- **segments** for the workload-balanced kernels: the CSR non-zero stream
+  cut into fixed-length segments, each element carrying its row index;
+  padding repeats the last real row with value 0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+WARP = 32  # lane count of a segment (mirrors kernels::WARP in Rust)
+
+
+@dataclasses.dataclass
+class Csr:
+    """Minimal CSR container (no scipy dependency)."""
+
+    rows: int
+    cols: int
+    indptr: np.ndarray  # (rows+1,) int32
+    indices: np.ndarray  # (nnz,) int32
+    data: np.ndarray  # (nnz,) float32
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    @staticmethod
+    def from_coo(rows: int, cols: int, r: np.ndarray, c: np.ndarray, v: np.ndarray) -> "Csr":
+        """Build CSR from triplets (sorted, duplicates summed)."""
+        order = np.lexsort((c, r))
+        r, c, v = r[order], c[order], v[order]
+        # sum duplicates
+        if len(r) > 0:
+            keep = np.ones(len(r), dtype=bool)
+            same = (r[1:] == r[:-1]) & (c[1:] == c[:-1])
+            # accumulate runs of duplicates
+            if same.any():
+                out_r, out_c, out_v = [], [], []
+                i = 0
+                while i < len(r):
+                    j = i
+                    acc = 0.0
+                    while j < len(r) and r[j] == r[i] and c[j] == c[i]:
+                        acc += float(v[j])
+                        j += 1
+                    out_r.append(r[i])
+                    out_c.append(c[i])
+                    out_v.append(acc)
+                    i = j
+                r = np.array(out_r, dtype=np.int64)
+                c = np.array(out_c, dtype=np.int64)
+                v = np.array(out_v, dtype=np.float64)
+            del keep
+        indptr = np.zeros(rows + 1, dtype=np.int32)
+        np.add.at(indptr[1:], r.astype(np.int64), 1)
+        indptr = np.cumsum(indptr, dtype=np.int32)
+        return Csr(rows, cols, indptr, c.astype(np.int32), v.astype(np.float32))
+
+    @staticmethod
+    def random(rows: int, cols: int, density: float, rng: np.random.Generator) -> "Csr":
+        mask = rng.random((rows, cols)) < density
+        r, c = np.nonzero(mask)
+        v = rng.normal(size=len(r)).astype(np.float32)
+        return Csr.from_coo(rows, cols, r, c, v)
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.rows, self.cols), np.float32)
+        for row in range(self.rows):
+            lo, hi = self.indptr[row], self.indptr[row + 1]
+            np.add.at(out[row], self.indices[lo:hi], self.data[lo:hi])
+        return out
+
+    def row_lengths(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+
+@dataclasses.dataclass
+class Ell:
+    """Padded ELLPACK planes (mirrors ``EllMatrix``)."""
+
+    rows: int
+    cols: int
+    rows_padded: int
+    width: int
+    values: np.ndarray  # (rows_padded, width) f32
+    col_idx: np.ndarray  # (rows_padded, width) i32
+
+
+def to_ell(csr: Csr, width_align: int = 8, row_block: int = 8, min_width: int | None = None) -> Ell:
+    """Convert CSR → ELL with width/row padding (identical to the Rust
+    converter). ``min_width`` forces at least that padded width so a matrix
+    can target a fixed artifact bucket."""
+    lens = csr.row_lengths()
+    max_nnz = int(lens.max()) if csr.rows else 0
+    width = max(-(-max_nnz // width_align), 1) * width_align
+    if min_width is not None:
+        if max_nnz > min_width:
+            raise ValueError(f"row length {max_nnz} exceeds bucket width {min_width}")
+        width = min_width
+    rows_padded = -(-csr.rows // row_block) * row_block
+    values = np.zeros((rows_padded, width), np.float32)
+    col_idx = np.zeros((rows_padded, width), np.int32)
+    for r in range(csr.rows):
+        lo, hi = csr.indptr[r], csr.indptr[r + 1]
+        values[r, : hi - lo] = csr.data[lo:hi]
+        col_idx[r, : hi - lo] = csr.indices[lo:hi]
+    return Ell(csr.rows, csr.cols, rows_padded, width, values, col_idx)
+
+
+@dataclasses.dataclass
+class Segments:
+    """Fixed-nnz segment planes (mirrors ``SegmentedMatrix``)."""
+
+    rows: int
+    cols: int
+    seg_len: int
+    num_segments: int
+    values: np.ndarray  # (num_segments, seg_len) f32
+    col_idx: np.ndarray  # (num_segments, seg_len) i32
+    row_idx: np.ndarray  # (num_segments, seg_len) i32
+    nnz: int
+
+
+def to_segments(csr: Csr, seg_len: int = WARP, min_segments: int | None = None) -> Segments:
+    """Cut the CSR stream into fixed-length segments; padding repeats the
+    last real (row, col) with value 0 so it folds into an existing run."""
+    nnz = csr.nnz
+    num_segments = max(-(-nnz // seg_len), 1)
+    if min_segments is not None:
+        if num_segments > min_segments:
+            raise ValueError(f"{num_segments} segments exceed bucket {min_segments}")
+        num_segments = min_segments
+    padded = num_segments * seg_len
+    rows = np.repeat(np.arange(csr.rows, dtype=np.int32), csr.row_lengths())
+    vals = np.zeros(padded, np.float32)
+    cols = np.zeros(padded, np.int32)
+    ridx = np.zeros(padded, np.int32)
+    vals[:nnz] = csr.data
+    cols[:nnz] = csr.indices
+    ridx[:nnz] = rows
+    if nnz > 0:
+        cols[nnz:] = cols[nnz - 1]
+        ridx[nnz:] = ridx[nnz - 1]
+    return Segments(
+        csr.rows,
+        csr.cols,
+        seg_len,
+        num_segments,
+        vals.reshape(num_segments, seg_len),
+        cols.reshape(num_segments, seg_len),
+        ridx.reshape(num_segments, seg_len),
+        nnz,
+    )
+
+
+def pad_rows(m: int, block: int) -> int:
+    """Round a row count up to a block multiple."""
+    return -(-m // block) * block

@@ -1,0 +1,1 @@
+"""Layer-1 Pallas kernels: the four designs of the paper Fig. 2 space."""

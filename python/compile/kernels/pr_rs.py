@@ -1,0 +1,59 @@
+"""PR-RS Pallas kernel — parallel reduction, row split, with VDL.
+
+TPU adaptation of CSR-Vector (paper Fig. 2(c)): for each row the whole
+padded ELL row is processed *vectorized* — the elementwise multiply runs
+across the lane dimension of the VPU, and the merge tree is ``jnp.sum``
+over the width axis (XLA lowers it to a log-depth reduction). Each lane's
+dense load is the contiguous ``(1, N)`` fragment of X — the VDL
+optimization (§2.1.2): for N ∈ {2, 4} that fragment rides in the same
+32-byte sector a single f32 would occupy.
+
+The whole row block is reduced in one shot:
+
+    Y[block] = Σ_k  vals[:, k, None] · X[cols[:, k], :]
+
+which is exactly "N-partial-sums per lane, merge-tree at the end"
+expressed in array form.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 128
+
+
+def _kernel(vals_ref, cols_ref, x_ref, o_ref):
+    vals = vals_ref[...]  # (RB, W)
+    cols = cols_ref[...]
+    x = x_ref[...]  # (K, N)
+    rb, w = vals.shape
+    # VDL gather: every (row, lane) pulls its (1, N) fragment
+    frags = jnp.take(x, cols.reshape(-1), axis=0).reshape(rb, w, -1)
+    # lane multiply + merge tree (jnp.sum lowers to a log-depth reduce)
+    o_ref[...] = jnp.sum(vals[:, :, None] * frags, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def spmm(values: jnp.ndarray, col_idx: jnp.ndarray, x: jnp.ndarray, *, row_block: int = ROW_BLOCK):
+    """Y[m_pad, N] = ELL(values, col_idx) · X via parallel reduction."""
+    m_pad, width = values.shape
+    k, n = x.shape
+    assert m_pad % row_block == 0, f"{m_pad} rows not a multiple of {row_block}"
+    grid = (m_pad // row_block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block, width), lambda b: (b, 0)),
+            pl.BlockSpec((row_block, width), lambda b: (b, 0)),
+            pl.BlockSpec((k, n), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_block, n), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.float32),
+        interpret=True,
+    )(values, col_idx, x)

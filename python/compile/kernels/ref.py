@@ -1,0 +1,36 @@
+"""Pure-numpy/jnp oracles — the correctness ground truth for every Pallas
+kernel (pytest compares kernel output against these)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..formats import Csr, Ell, Segments
+
+
+def spmm_dense(csr: Csr, x: np.ndarray) -> np.ndarray:
+    """Reference Y = A·X via the dense reconstruction. O(M·K·N): tests only."""
+    return csr.to_dense() @ x
+
+
+def spmm_ell(ell: Ell, x: np.ndarray) -> np.ndarray:
+    """Oracle over the padded ELL planes (padded rows included, zero)."""
+    gathered = x[ell.col_idx.reshape(-1)].reshape(ell.rows_padded, ell.width, -1)
+    return (ell.values[:, :, None] * gathered).sum(axis=1)
+
+
+def spmm_segments(seg: Segments, x: np.ndarray, m_pad: int) -> np.ndarray:
+    """Oracle over the segment planes: scatter-add of value×x-row."""
+    out = np.zeros((m_pad, x.shape[1]), np.float32)
+    v = seg.values.reshape(-1)
+    c = seg.col_idx.reshape(-1)
+    r = seg.row_idx.reshape(-1)
+    np.add.at(out, r, v[:, None] * x[c])
+    return out
+
+
+def spmm_ell_jnp(values: jnp.ndarray, col_idx: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """jnp oracle used inside L2 gradient checks (differentiable wrt x)."""
+    gathered = x[col_idx.reshape(-1)].reshape(values.shape[0], values.shape[1], -1)
+    return (values[:, :, None] * gathered).sum(axis=1)

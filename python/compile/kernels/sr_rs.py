@@ -1,0 +1,65 @@
+"""SR-RS Pallas kernel — sequential reduction, row split (+ CSC analog).
+
+TPU adaptation of the paper's baseline/CSC design (see DESIGN.md
+§Hardware-Adaptation): the grid walks row blocks; the padded ELL row
+(``values``/``col_idx``) *is* the staged sparse tile — BlockSpec brings it
+from HBM to VMEM in one contiguous transfer, and the dense fragments for
+the whole block are gathered up front (the CSC insight: coalesced loads
+first, then iterate out of fast memory). The reduction itself is an
+explicit sequential ``fori_loop`` over the row width — sequential
+reduction, exactly the paper's design axis.
+
+Pallas runs ``interpret=True`` — correct numerics on the CPU PJRT backend;
+real-TPU lowering would emit a Mosaic custom call this environment cannot
+execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# rows per grid step (§Perf: fewer interpreter grid steps)
+ROW_BLOCK = 128
+
+
+def _kernel(vals_ref, cols_ref, x_ref, o_ref):
+    vals = vals_ref[...]  # (RB, W)
+    cols = cols_ref[...]
+    x = x_ref[...]
+    rb, w = vals.shape
+    n = x.shape[1]
+    # CSC stage-in: coalesced gather of every (1, N) fragment the block
+    # needs (HBM→VMEM), before any arithmetic
+    frags = jnp.take(x, cols.reshape(-1), axis=0).reshape(rb, w, n)
+    prod = vals[:, :, None] * frags
+    # sequential reduction over the staged row (the SR design axis)
+    def body(k, acc):
+        return acc + prod[:, k, :]
+
+    o_ref[...] = jax.lax.fori_loop(0, w, body, jnp.zeros((rb, n), jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def spmm(values: jnp.ndarray, col_idx: jnp.ndarray, x: jnp.ndarray, *, row_block: int = ROW_BLOCK):
+    """Y[m_pad, N] = ELL(values, col_idx) · X. ``m_pad`` must divide by
+    ``row_block``."""
+    m_pad, width = values.shape
+    k, n = x.shape
+    assert m_pad % row_block == 0, f"{m_pad} rows not a multiple of {row_block}"
+    grid = (m_pad // row_block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block, width), lambda b: (b, 0)),
+            pl.BlockSpec((row_block, width), lambda b: (b, 0)),
+            pl.BlockSpec((k, n), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_block, n), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.float32),
+        interpret=True,
+    )(values, col_idx, x)

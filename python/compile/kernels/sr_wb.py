@@ -1,0 +1,90 @@
+"""SR-WB Pallas kernel — sequential reduction over fixed-nnz segments.
+
+The workload-balancing half of the paper's design space (Fig. 2(b)):
+every grid step owns a block of equal-size non-zero segments, so the work
+per step is constant regardless of the row-length distribution. Because
+segments cross row boundaries, the kernel carries an accumulator and
+flushes it whenever the row index changes (read-modify-write into the full
+output block — the TPU grid is sequential, so accumulation across grid
+steps is well-defined; the CUDA version uses atomics here).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SEG_BLOCK = 128  # segments per grid step (§Perf: fewer interpreter grid steps)
+
+
+def _kernel(vals_ref, cols_ref, rows_ref, x_ref, o_ref):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    sb, s = vals_ref.shape
+    n = x_ref.shape[1]
+    total = sb * s
+    vals = vals_ref[...].reshape(total)
+    cols = cols_ref[...].reshape(total)
+    rows = rows_ref[...].reshape(total)
+    x = x_ref[...]
+    # CSR-Stream shape: the *loads* are parallel (one coalesced gather of
+    # every fragment in the block — §Perf hoisted this out of the loop),
+    # the *reduction* stays sequential per element.
+    prod = jnp.take(x, cols, axis=0) * vals[:, None]
+
+    def body(i, carry):
+        acc, cur = carry
+        r = rows[i]
+        same = r == cur
+
+        # flush the finished row run (sequential grid ⇒ safe accumulate)
+        @pl.when(jnp.logical_not(same))
+        def _flush():
+            prev = o_ref[pl.ds(cur, 1), :]
+            o_ref[pl.ds(cur, 1), :] = prev + acc[None, :]
+
+        acc = jnp.where(same, acc, jnp.zeros_like(acc))
+        return acc + prod[i], r
+
+    init = (jnp.zeros((n,), jnp.float32), rows[0])
+    acc, cur = jax.lax.fori_loop(0, total, body, init)
+    # trailing run
+    prev = o_ref[pl.ds(cur, 1), :]
+    o_ref[pl.ds(cur, 1), :] = prev + acc[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("m_pad", "seg_block"))
+def spmm(
+    values: jnp.ndarray,
+    col_idx: jnp.ndarray,
+    row_idx: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    m_pad: int,
+    seg_block: int = SEG_BLOCK,
+):
+    """Y[m_pad, N] = segments(values, col_idx, row_idx) · X."""
+    nseg, s = values.shape
+    k, n = x.shape
+    assert nseg % seg_block == 0, f"{nseg} segments not a multiple of {seg_block}"
+    grid = (nseg // seg_block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((seg_block, s), lambda b: (b, 0)),
+            pl.BlockSpec((seg_block, s), lambda b: (b, 0)),
+            pl.BlockSpec((seg_block, s), lambda b: (b, 0)),
+            pl.BlockSpec((k, n), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m_pad, n), lambda b: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.float32),
+        interpret=True,
+    )(values, col_idx, row_idx, x)

@@ -1,0 +1,104 @@
+"""Layer 2 — GCN forward/backward in JAX, calling the Layer-1 kernels.
+
+The paper's headline application is GNN training ("our kernel is being
+integrated into popular graph learning frameworks to accelerate GNN
+training"). This module defines a 2-layer GCN whose neighbor aggregation
+is the Layer-1 SpMM kernel:
+
+    H₁ = relu( Â·X · W₁ )          logits = Â·H₁ · W₂
+
+with Â the symmetric GCN-normalized adjacency in padded ELL form. ``spmm``
+carries a ``custom_vjp``: the backward pass routes the adjoint through the
+*same kernel* on Âᵀ — and since Â is symmetric, on Â itself — so both
+training directions exercise the Pallas kernel (no fallback to generic
+XLA scatter in the bwd).
+
+Everything here is build-time only; ``aot.py`` lowers ``train_step`` /
+``forward`` to HLO text for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import pr_rs
+
+# Row block shared with the kernel grid; model dims must be multiples.
+ROW_BLOCK = 128
+
+
+@jax.custom_vjp
+def spmm(values, col_idx, x):
+    """Â·X through the Layer-1 kernel (PR-RS with VDL fragments)."""
+    return pr_rs.spmm(values, col_idx, x, row_block=ROW_BLOCK)
+
+
+def _spmm_fwd(values, col_idx, x):
+    return spmm(values, col_idx, x), (values, col_idx)
+
+
+def _spmm_bwd(res, g):
+    values, col_idx = res
+    # Â is symmetric ⇒ Âᵀ·g = Â·g: same kernel, same operand planes.
+    dx = pr_rs.spmm(values, col_idx, g, row_block=ROW_BLOCK)
+    return (
+        jnp.zeros_like(values),  # adjacency is constant
+        np.zeros(col_idx.shape, dtype=jax.dtypes.float0),
+        dx,
+    )
+
+
+spmm.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+def forward(params, a_vals, a_cols, feats):
+    """2-layer GCN logits."""
+    w1, w2 = params
+    h = jax.nn.relu(spmm(a_vals, a_cols, feats) @ w1)
+    return spmm(a_vals, a_cols, h) @ w2
+
+
+def masked_cross_entropy(logits, labels_onehot, mask):
+    """Softmax cross-entropy averaged over masked (labeled) nodes."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    per_node = -(labels_onehot * logp).sum(axis=-1)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (per_node * mask).sum() / denom
+
+
+def loss_fn(params, a_vals, a_cols, feats, labels_onehot, mask):
+    return masked_cross_entropy(forward(params, a_vals, a_cols, feats), labels_onehot, mask)
+
+
+def train_step(w1, w2, a_vals, a_cols, feats, labels_onehot, mask, lr=0.05):
+    """One SGD step; returns (w1', w2', loss). This is the function the
+    AOT path lowers — the Rust trainer feeds weights back in each step."""
+    loss, grads = jax.value_and_grad(loss_fn)((w1, w2), a_vals, a_cols, feats, labels_onehot, mask)
+    g1, g2 = grads
+    return w1 - lr * g1, w2 - lr * g2, loss
+
+
+def accuracy(logits, labels_onehot, mask):
+    """Masked classification accuracy (used by tests and examples)."""
+    pred = jnp.argmax(logits, axis=-1)
+    true = jnp.argmax(labels_onehot, axis=-1)
+    hits = (pred == true) * mask
+    return hits.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def init_params(rng: np.random.Generator, n_feats: int, hidden: int, classes: int):
+    """Glorot-ish initialization, float32."""
+    s1 = np.sqrt(2.0 / (n_feats + hidden))
+    s2 = np.sqrt(2.0 / (hidden + classes))
+    w1 = (rng.normal(size=(n_feats, hidden)) * s1).astype(np.float32)
+    w2 = (rng.normal(size=(hidden, classes)) * s2).astype(np.float32)
+    return w1, w2
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def train_step_jit(w1, w2, a_vals, a_cols, feats, labels_onehot, mask, lr=0.05):
+    return train_step(w1, w2, a_vals, a_cols, feats, labels_onehot, mask, lr=lr)

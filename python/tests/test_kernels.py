@@ -1,0 +1,188 @@
+"""L1 correctness: every Pallas kernel vs the pure-numpy oracle.
+
+This is the core correctness signal for the compile path: if these pass,
+the HLO artifacts the Rust runtime executes compute the right numbers.
+Hypothesis sweeps shapes, densities and N; fixed seeds keep CI stable.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats
+from compile.kernels import pr_rs, pr_wb, ref, sr_rs, sr_wb
+
+RNG = np.random.default_rng(12345)
+
+
+def make_problem(rows, cols, n, density, seed, max_row=None):
+    rng = np.random.default_rng(seed)
+    csr = formats.Csr.random(rows, cols, density, rng)
+    if max_row is not None:
+        assert csr.row_lengths().max() <= max_row
+    x = rng.normal(size=(cols, n)).astype(np.float32)
+    return csr, x
+
+
+def run_ell_kernel(kernel, csr, x, row_block=8):
+    ell = formats.to_ell(csr, width_align=4, row_block=row_block)
+    out = np.asarray(kernel.spmm(ell.values, ell.col_idx, x, row_block=row_block))
+    want = ref.spmm_ell(ell, x)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+    # padded rows are exact zeros
+    np.testing.assert_array_equal(out[csr.rows :], 0.0)
+    # and the real rows match the dense reference
+    np.testing.assert_allclose(out[: csr.rows], ref.spmm_dense(csr, x), rtol=1e-4, atol=1e-4)
+
+
+def run_seg_kernel(kernel, csr, x, seg_len=8, seg_block=4):
+    seg = formats.to_segments(csr, seg_len=seg_len)
+    # pad segments to the block multiple
+    nseg = formats.pad_rows(seg.num_segments, seg_block)
+    if nseg != seg.num_segments:
+        pad = nseg - seg.num_segments
+        seg.values = np.concatenate([seg.values, np.zeros((pad, seg_len), np.float32)])
+        last_c = seg.col_idx[-1, -1]
+        last_r = seg.row_idx[-1, -1]
+        seg.col_idx = np.concatenate([seg.col_idx, np.full((pad, seg_len), last_c, np.int32)])
+        seg.row_idx = np.concatenate([seg.row_idx, np.full((pad, seg_len), last_r, np.int32)])
+        seg.num_segments = nseg
+    m_pad = formats.pad_rows(csr.rows, 8)
+    out = np.asarray(
+        kernel.spmm(seg.values, seg.col_idx, seg.row_idx, x, m_pad=m_pad, seg_block=seg_block)
+    )
+    want = ref.spmm_segments(seg, x, m_pad)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out[: csr.rows], ref.spmm_dense(csr, x), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- fixed cases
+
+
+@pytest.mark.parametrize("kernel", [sr_rs, pr_rs], ids=["sr_rs", "pr_rs"])
+@pytest.mark.parametrize("n", [1, 2, 4, 16])
+def test_ell_kernels_match_reference(kernel, n):
+    csr, x = make_problem(37, 29, n, 0.2, seed=1)
+    run_ell_kernel(kernel, csr, x)
+
+
+@pytest.mark.parametrize("kernel", [sr_wb, pr_wb], ids=["sr_wb", "pr_wb"])
+@pytest.mark.parametrize("n", [1, 2, 4, 16])
+def test_segment_kernels_match_reference(kernel, n):
+    csr, x = make_problem(37, 29, n, 0.2, seed=2)
+    run_seg_kernel(kernel, csr, x)
+
+
+@pytest.mark.parametrize("kernel", [sr_wb, pr_wb], ids=["sr_wb", "pr_wb"])
+def test_segment_kernels_mega_row(kernel):
+    """One row holding most non-zeros: runs span many segments/blocks."""
+    rng = np.random.default_rng(3)
+    r = np.concatenate([np.full(100, 3), np.arange(20)])
+    c = np.concatenate([rng.permutation(128)[:100], rng.integers(0, 128, 20)])
+    v = rng.normal(size=len(r)).astype(np.float32)
+    csr = formats.Csr.from_coo(24, 128, r, c, v)
+    x = rng.normal(size=(128, 4)).astype(np.float32)
+    run_seg_kernel(kernel, csr, x)
+
+
+@pytest.mark.parametrize("kernel", [sr_rs, pr_rs], ids=["sr_rs", "pr_rs"])
+def test_ell_kernels_empty_rows(kernel):
+    csr = formats.Csr.from_coo(
+        16, 16, np.array([0, 15]), np.array([5, 2]), np.array([1.5, -2.0], np.float32)
+    )
+    x = RNG.normal(size=(16, 3)).astype(np.float32)
+    run_ell_kernel(kernel, csr, x)
+
+
+def test_all_four_kernels_agree():
+    """The four designs must compute identical results on the same input."""
+    csr, x = make_problem(50, 40, 8, 0.15, seed=4)
+    ell = formats.to_ell(csr, width_align=4, row_block=8)
+    a = np.asarray(sr_rs.spmm(ell.values, ell.col_idx, x, row_block=8))[: csr.rows]
+    b = np.asarray(pr_rs.spmm(ell.values, ell.col_idx, x, row_block=8))[: csr.rows]
+    seg = formats.to_segments(csr, seg_len=8)
+    nseg = formats.pad_rows(seg.num_segments, 4)
+    pad = nseg - seg.num_segments
+    if pad:
+        seg.values = np.concatenate([seg.values, np.zeros((pad, 8), np.float32)])
+        seg.col_idx = np.concatenate([seg.col_idx, np.full((pad, 8), seg.col_idx[-1, -1], np.int32)])
+        seg.row_idx = np.concatenate([seg.row_idx, np.full((pad, 8), seg.row_idx[-1, -1], np.int32)])
+    m_pad = formats.pad_rows(csr.rows, 8)
+    c = np.asarray(sr_wb.spmm(seg.values, seg.col_idx, seg.row_idx, x, m_pad=m_pad, seg_block=4))[: csr.rows]
+    d = np.asarray(pr_wb.spmm(seg.values, seg.col_idx, seg.row_idx, x, m_pad=m_pad, seg_block=4))[: csr.rows]
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(a, d, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- hypothesis
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(4, 40),
+    cols=st.integers(4, 40),
+    n=st.sampled_from([1, 2, 3, 4, 8]),
+    density=st.floats(0.05, 0.5),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_ell_kernels(rows, cols, n, density, seed):
+    csr, x = make_problem(rows, cols, n, density, seed)
+    run_ell_kernel(sr_rs, csr, x)
+    run_ell_kernel(pr_rs, csr, x)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(4, 40),
+    cols=st.integers(4, 40),
+    n=st.sampled_from([1, 2, 4, 8]),
+    density=st.floats(0.05, 0.5),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_segment_kernels(rows, cols, n, density, seed):
+    csr, x = make_problem(rows, cols, n, density, seed)
+    run_seg_kernel(sr_wb, csr, x)
+    run_seg_kernel(pr_wb, csr, x)
+
+
+# -------------------------------------------------------------- formats
+
+
+def test_ell_roundtrip_matches_dense():
+    csr, _ = make_problem(23, 31, 1, 0.3, seed=5)
+    ell = formats.to_ell(csr, width_align=8, row_block=4)
+    dense = np.zeros((csr.rows, csr.cols), np.float32)
+    for r in range(csr.rows):
+        for k in range(ell.width):
+            dense[r, ell.col_idx[r, k]] += ell.values[r, k]
+    np.testing.assert_allclose(dense, csr.to_dense(), rtol=1e-6, atol=1e-6)
+
+
+def test_segments_cover_stream():
+    csr, _ = make_problem(23, 31, 1, 0.3, seed=6)
+    seg = formats.to_segments(csr, seg_len=8)
+    flat_v = seg.values.reshape(-1)[: seg.nnz]
+    np.testing.assert_array_equal(flat_v, csr.data)
+    assert (seg.values.reshape(-1)[seg.nnz :] == 0).all()
+
+
+def test_bucket_width_enforced():
+    csr, _ = make_problem(8, 32, 1, 0.9, seed=7)
+    with pytest.raises(ValueError):
+        formats.to_ell(csr, min_width=2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(rows=st.integers(1, 30), cols=st.integers(1, 30), density=st.floats(0.0, 0.6), seed=st.integers(0, 2**31))
+def test_hypothesis_format_roundtrips(rows, cols, density, seed):
+    rng = np.random.default_rng(seed)
+    csr = formats.Csr.random(rows, cols, density, rng)
+    ell = formats.to_ell(csr)
+    np.testing.assert_allclose(
+        ref.spmm_ell(ell, np.eye(cols, dtype=np.float32))[:rows], csr.to_dense(), rtol=1e-6, atol=1e-6
+    )
+    seg = formats.to_segments(csr)
+    np.testing.assert_allclose(
+        ref.spmm_segments(seg, np.eye(cols, dtype=np.float32), rows), csr.to_dense(), rtol=1e-6, atol=1e-6
+    )

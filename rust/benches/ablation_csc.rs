@@ -1,0 +1,42 @@
+//! §2.1.3 CSC ablation: coalesced sparse-row caching vs the pure
+//! sequential-reduction SpMM at N=128, on the R-MAT micro benchmark.
+//!
+//! Paper: CSC = 1.20× average (RTX3090 model).
+
+use ge_spmm::bench::figures::{geomean_speedup, load_matrices};
+use ge_spmm::bench::Table;
+use ge_spmm::gen::Collection;
+use ge_spmm::sim::{simulate, GpuConfig, SimKernel};
+
+fn main() {
+    println!("== §2.1.3 ablation: CSC vs pure sequential SpMM at N=128 ==");
+    let gpu = GpuConfig::rtx3090();
+    eprintln!("building R-MAT micro benchmark …");
+    let specs: Vec<_> = Collection::suite()
+        .into_iter()
+        .filter(|s| s.name.starts_with("rmat_s1"))
+        .take(27)
+        .collect();
+    let matrices = load_matrices(specs);
+
+    let mut with = Vec::new();
+    let mut without = Vec::new();
+    let mut t = Table::new(&["matrix", "CSC", "no CSC", "speedup"]);
+    for m in &matrices {
+        let a = simulate(SimKernel::SrRs, &m.sim, 128, &gpu).seconds;
+        let b = simulate(SimKernel::SrRsNoCsc, &m.sim, 128, &gpu).seconds;
+        t.row(vec![
+            m.name.clone(),
+            format!("{:.0}µs", a * 1e6),
+            format!("{:.0}µs", b * 1e6),
+            format!("{:.2}×", b / a),
+        ]);
+        with.push(a);
+        without.push(b);
+    }
+    t.print();
+    println!(
+        "\ngeomean CSC speedup: {:.2}× (paper: 1.20×)",
+        geomean_speedup(&without, &with)
+    );
+}

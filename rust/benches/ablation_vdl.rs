@@ -1,0 +1,55 @@
+//! §2.1.2 VDL ablation: float2-style VDL (PR-RS at N=2) against running
+//! two separate SpMVs, on 27 R-MAT matrices spanning size, sparsity and
+//! skew — the paper's exact micro-benchmark design.
+//!
+//! Paper: VDL = 1.89× (RTX3090 model).
+
+use ge_spmm::bench::figures::{geomean_speedup, load_matrices};
+use ge_spmm::bench::Table;
+use ge_spmm::gen::collection::MatrixSpec;
+use ge_spmm::gen::Collection;
+use ge_spmm::sim::{simulate, GpuConfig, SimKernel};
+
+/// The 27-matrix R-MAT micro benchmark: 3 scales × 3 edge factors × 3
+/// skews (paper §2.1.2: "various size, sparsity and distribution").
+fn rmat27() -> Vec<MatrixSpec> {
+    // reuse the suite's R-MAT entries where available, and synthesize the
+    // grid deterministically through Collection naming
+    let mut specs = Vec::new();
+    for s in &Collection::suite() {
+        if s.name.starts_with("rmat_s1") {
+            specs.push(s.clone());
+        }
+    }
+    specs.truncate(27);
+    specs
+}
+
+fn main() {
+    println!("== §2.1.2 ablation: VDL (N=2) vs two SpMVs on R-MAT ==");
+    let gpu = GpuConfig::rtx3090();
+    eprintln!("building R-MAT micro benchmark …");
+    let matrices = load_matrices(rmat27());
+    println!("{} R-MAT matrices", matrices.len());
+
+    let mut vdl = Vec::new();
+    let mut two_spmv = Vec::new();
+    let mut t = Table::new(&["matrix", "VDL n=2", "2×SpMV", "speedup"]);
+    for m in &matrices {
+        let a = simulate(SimKernel::PrRs, &m.sim, 2, &gpu).seconds;
+        let b = simulate(SimKernel::PrRsNSpmv, &m.sim, 2, &gpu).seconds;
+        t.row(vec![
+            m.name.clone(),
+            format!("{:.1}µs", a * 1e6),
+            format!("{:.1}µs", b * 1e6),
+            format!("{:.2}×", b / a),
+        ]);
+        vdl.push(a);
+        two_spmv.push(b);
+    }
+    t.print();
+    println!(
+        "\ngeomean VDL speedup: {:.2}× (paper: 1.89×)",
+        geomean_speedup(&two_spmv, &vdl)
+    );
+}

@@ -1,0 +1,56 @@
+//! §2.1.1 VSR ablation: at N=1, on what fraction of the collection does
+//! VSR (PR-WB) beat all three alternatives — the plain baseline (SR-RS),
+//! balancing alone (SR-WB) and parallel reduction alone (PR-RS)?
+//!
+//! Paper: VSR wins on 40.8% of SuiteSparse (RTX3090 model).
+
+use ge_spmm::bench::figures::{load_bench_matrices, sim_suite};
+use ge_spmm::bench::Table;
+use ge_spmm::sim::{GpuConfig, SimKernel};
+
+fn main() {
+    println!("== §2.1.1 ablation: VSR vs the other three designs at N=1 ==");
+    let gpu = GpuConfig::rtx3090();
+    eprintln!("building collection …");
+    let matrices = load_bench_matrices();
+    let sr_rs = sim_suite(&matrices, SimKernel::SrRs, 1, &gpu);
+    let sr_wb = sim_suite(&matrices, SimKernel::SrWb, 1, &gpu);
+    let pr_rs = sim_suite(&matrices, SimKernel::PrRs, 1, &gpu);
+    let pr_wb = sim_suite(&matrices, SimKernel::PrWb, 1, &gpu);
+
+    let mut wins = 0usize;
+    let mut per_winner = [0usize; 4];
+    let mut t = Table::new(&["matrix", "sr_rs", "sr_wb", "pr_rs", "vsr(pr_wb)", "winner"]);
+    for i in 0..matrices.len() {
+        let times = [sr_rs[i], sr_wb[i], pr_rs[i], pr_wb[i]];
+        let best = times
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        per_winner[best] += 1;
+        if best == 3 {
+            wins += 1;
+        }
+        t.row(vec![
+            matrices[i].name.clone(),
+            format!("{:.1}µs", sr_rs[i] * 1e6),
+            format!("{:.1}µs", sr_wb[i] * 1e6),
+            format!("{:.1}µs", pr_rs[i] * 1e6),
+            format!("{:.1}µs", pr_wb[i] * 1e6),
+            ["sr_rs", "sr_wb", "pr_rs", "VSR"][best].to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nVSR wins on {}/{} = {:.1}% of matrices (paper: 40.8%)",
+        wins,
+        matrices.len(),
+        100.0 * wins as f64 / matrices.len() as f64
+    );
+    println!(
+        "winner split: sr_rs {} | sr_wb {} | pr_rs {} | vsr {}",
+        per_winner[0], per_winner[1], per_winner[2], per_winner[3]
+    );
+}

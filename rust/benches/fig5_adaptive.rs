@@ -1,0 +1,76 @@
+//! Fig. 5: validation of the adaptive strategy (three panels).
+//!
+//!   left   — WB benefit at N=1 correlates negatively with avg_row
+//!   middle — PR beats SR only at small N (crossover ≈ paper's N≤4 rule)
+//!   right  — WB benefit at N=128 correlates with stdv/avg
+
+use ge_spmm::bench::figures::{load_bench_matrices, sim_suite, N_SWEEP};
+use ge_spmm::bench::Table;
+use ge_spmm::sim::{GpuConfig, SimKernel};
+use ge_spmm::util::stats;
+
+fn bucket_table(
+    label: &str,
+    xs: &[f64],
+    benefit: &[f64],
+    buckets: &[(f64, f64)],
+) {
+    let mut t = Table::new(&[label, "matrices", "geomean WB benefit"]);
+    for &(lo, hi) in buckets {
+        let sel: Vec<f64> = (0..xs.len())
+            .filter(|&i| xs[i] >= lo && xs[i] < hi)
+            .map(|i| benefit[i])
+            .collect();
+        if !sel.is_empty() {
+            t.row(vec![
+                if hi > 1e8 {
+                    format!("≥{lo}")
+                } else {
+                    format!("{lo}–{hi}")
+                },
+                sel.len().to_string(),
+                format!("{:.2}×", stats::geomean(&sel)),
+            ]);
+        }
+    }
+    t.print();
+}
+
+fn main() {
+    println!("== Fig 5: adaptive-strategy validation (rtx3090 model) ==");
+    let gpu = GpuConfig::rtx3090();
+    eprintln!("building collection …");
+    let matrices = load_bench_matrices();
+
+    println!("\n[left] WB benefit (PR-RS/PR-WB) at N=1 vs avg_row");
+    let pr_rs = sim_suite(&matrices, SimKernel::PrRs, 1, &gpu);
+    let pr_wb = sim_suite(&matrices, SimKernel::PrWb, 1, &gpu);
+    let benefit1: Vec<f64> = pr_rs.iter().zip(&pr_wb).map(|(a, b)| a / b).collect();
+    let avg: Vec<f64> = matrices.iter().map(|m| m.features.avg_row).collect();
+    bucket_table("avg_row", &avg, &benefit1, &[(0.0, 4.0), (4.0, 12.0), (12.0, 40.0), (40.0, 1e9)]);
+    println!(
+        "spearman(avg_row, benefit) = {:.2} (paper: negative)",
+        stats::spearman(&avg, &benefit1)
+    );
+
+    println!("\n[middle] SR/PR geomean across N (>1 ⇒ PR wins; paper: PR wins only small N)");
+    let mut t = Table::new(&["N", "SR/PR"]);
+    for n in N_SWEEP {
+        let sr = sim_suite(&matrices, SimKernel::SrRs, n, &gpu);
+        let pr = sim_suite(&matrices, SimKernel::PrRs, n, &gpu);
+        let r: Vec<f64> = sr.iter().zip(&pr).map(|(s, p)| s / p).collect();
+        t.row(vec![n.to_string(), format!("{:.2}×", stats::geomean(&r))]);
+    }
+    t.print();
+
+    println!("\n[right] WB benefit (SR-RS/SR-WB) at N=128 vs stdv/avg");
+    let sr_rs = sim_suite(&matrices, SimKernel::SrRs, 128, &gpu);
+    let sr_wb = sim_suite(&matrices, SimKernel::SrWb, 128, &gpu);
+    let benefit128: Vec<f64> = sr_rs.iter().zip(&sr_wb).map(|(a, b)| a / b).collect();
+    let cv: Vec<f64> = matrices.iter().map(|m| m.features.cv_row).collect();
+    bucket_table("stdv/avg", &cv, &benefit128, &[(0.0, 0.25), (0.25, 1.0), (1.0, 3.0), (3.0, 1e9)]);
+    println!(
+        "spearman(stdv/avg, benefit) = {:.2} (paper: positive)",
+        stats::spearman(&cv, &benefit128)
+    );
+}

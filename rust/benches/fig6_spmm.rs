@@ -1,0 +1,42 @@
+//! Fig. 6, SpMM rows: ours vs cuSPARSE across N, and vs ASpT at the
+//! N ∈ {32, 128} settings ASpT supports, on all three GPU models.
+//!
+//! Paper: ours/cuSPARSE ranges 1.26–1.41× (V100), 1.09–1.44× (RTX2080),
+//! 1.22–1.57× (RTX3090); ours/ASpT = 1.21/1.14/1.16× at N=32 and
+//! 1.18/1.14/1.06× at N=128.
+
+use ge_spmm::bench::figures::{
+    geomean_speedup, load_bench_matrices, sim_ours_best, sim_ours_rules, sim_suite,
+};
+use ge_spmm::bench::Table;
+use ge_spmm::selector::AdaptiveSelector;
+use ge_spmm::sim::{GpuConfig, SimKernel};
+
+fn main() {
+    println!("== Fig 6 / SpMM: ours vs cuSPARSE and ASpT ==");
+    eprintln!("building collection …");
+    let matrices = load_bench_matrices();
+    let sel = AdaptiveSelector::default();
+    for gpu in GpuConfig::all() {
+        println!("\n--- {} ---", gpu.name);
+        let mut t = Table::new(&["N", "ours/cusparse", "rules/cusparse", "ours/aspt"]);
+        for n in [2usize, 4, 8, 16, 32, 64, 128] {
+            let cus = sim_suite(&matrices, SimKernel::CuSparse, n, &gpu);
+            let aspt = sim_suite(&matrices, SimKernel::Aspt, n, &gpu);
+            let best = sim_ours_best(&matrices, n, &gpu);
+            let rules = sim_ours_rules(&matrices, &sel, n, &gpu);
+            t.row(vec![
+                n.to_string(),
+                format!("{:.2}×", geomean_speedup(&cus, &best)),
+                format!("{:.2}×", geomean_speedup(&cus, &rules)),
+                if n >= 32 {
+                    format!("{:.2}×", geomean_speedup(&aspt, &best))
+                } else {
+                    "-".into()
+                },
+            ]);
+        }
+        t.print();
+    }
+    println!("\npaper ranges: cuSPARSE 1.26–1.41 / 1.09–1.44 / 1.22–1.57; ASpT n32 1.21/1.14/1.16, n128 1.18/1.14/1.06");
+}

@@ -1,0 +1,32 @@
+//! Fig. 6, SpMV row: ours (best-of-4 and rule-based) vs cuSPARSE on the
+//! three GPU models over the benchmark collection at N=1.
+//!
+//! Paper: ours/cuSPARSE = 1.14× (V100), 1.07× (RTX2080), 1.11× (RTX3090).
+
+use ge_spmm::bench::figures::{
+    geomean_speedup, load_bench_matrices, sim_ours_best, sim_ours_rules, sim_suite,
+};
+use ge_spmm::bench::Table;
+use ge_spmm::selector::AdaptiveSelector;
+use ge_spmm::sim::{GpuConfig, SimKernel};
+
+fn main() {
+    println!("== Fig 6 / SpMV (N=1): ours vs cuSPARSE ==");
+    eprintln!("building collection …");
+    let matrices = load_bench_matrices();
+    let sel = AdaptiveSelector::default();
+    let mut t = Table::new(&["gpu", "ours/cusparse", "rules/cusparse", "paper (ours)"]);
+    let paper = [("v100", 1.14), ("rtx2080", 1.07), ("rtx3090", 1.11)];
+    for (gpu, p) in GpuConfig::all().into_iter().zip(paper) {
+        let cus = sim_suite(&matrices, SimKernel::CuSparse, 1, &gpu);
+        let best = sim_ours_best(&matrices, 1, &gpu);
+        let rules = sim_ours_rules(&matrices, &sel, 1, &gpu);
+        t.row(vec![
+            gpu.name.to_string(),
+            format!("{:.2}×", geomean_speedup(&cus, &best)),
+            format!("{:.2}×", geomean_speedup(&cus, &rules)),
+            format!("{:.2}×", p.1),
+        ]);
+    }
+    t.print();
+}

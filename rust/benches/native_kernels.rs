@@ -1,0 +1,53 @@
+//! Wallclock benchmark of the native CPU kernels (the Rust ports of the
+//! four designs plus the baselines) — the L3 hot path measured on this
+//! machine. Not a paper figure; feeds EXPERIMENTS.md §Perf.
+
+use ge_spmm::bench::harness::bench_fn;
+use ge_spmm::gen::Collection;
+use ge_spmm::kernels::baseline::{aspt_like_spmm, cusparse_like_spmm, AsptMatrix};
+use ge_spmm::kernels::{run_kernel, KernelKind, PreparedMatrix};
+use ge_spmm::sparse::DenseMatrix;
+use ge_spmm::util::prng::Xoshiro256;
+use ge_spmm::util::threadpool::ThreadPool;
+
+fn main() {
+    println!("== native kernel wallclock (this machine) ==");
+    let pool = ThreadPool::default_parallel();
+    println!("threads: {}", pool.workers());
+    let specs: Vec<_> = ["uniform_s12_e8", "rmat_s12_e8_g500", "band_n16384_b8"]
+        .iter()
+        .filter_map(|n| Collection::suite().into_iter().find(|s| &s.name == n))
+        .collect();
+    for spec in specs {
+        let csr = spec.build();
+        let prepared = PreparedMatrix::new(csr.clone());
+        let aspt = AsptMatrix::from_csr(&csr);
+        println!(
+            "\n--- {} ({}x{}, nnz {}) ---",
+            spec.name,
+            csr.rows,
+            csr.cols,
+            csr.nnz()
+        );
+        for n in [1usize, 4, 32, 128] {
+            let mut rng = Xoshiro256::seeded(7);
+            let x = DenseMatrix::random(csr.cols, n, 1.0, &mut rng);
+            let mut y = DenseMatrix::zeros(csr.rows, n);
+            let flops = 2.0 * csr.nnz() as f64 * n as f64;
+            for kind in KernelKind::ALL {
+                let s = bench_fn(&format!("{} n={n} {}", spec.name, kind.label()), || {
+                    run_kernel(kind, &prepared, &x, &mut y, &pool);
+                });
+                println!("{}  ({:.2} GFLOP/s)", s.line(), flops / s.median_s() / 1e9);
+            }
+            let s = bench_fn(&format!("{} n={n} cusparse-like", spec.name), || {
+                cusparse_like_spmm(&csr, &x, &mut y, &pool);
+            });
+            println!("{}  ({:.2} GFLOP/s)", s.line(), flops / s.median_s() / 1e9);
+            let s = bench_fn(&format!("{} n={n} aspt-like", spec.name), || {
+                aspt_like_spmm(&aspt, &x, &mut y, &pool);
+            });
+            println!("{}  ({:.2} GFLOP/s)", s.line(), flops / s.median_s() / 1e9);
+        }
+    }
+}

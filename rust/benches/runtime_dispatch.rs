@@ -1,0 +1,45 @@
+//! L3 dispatch latency: how much the coordinator adds around the PJRT
+//! execution (selection, routing, packing-cache hit, unpacking), plus
+//! batcher throughput. Feeds EXPERIMENTS.md §Perf.
+
+use ge_spmm::bench::harness::bench_fn;
+use ge_spmm::coordinator::batcher::Batcher;
+use ge_spmm::coordinator::SpmmEngine;
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix};
+use ge_spmm::util::prng::Xoshiro256;
+use std::path::Path;
+
+fn main() {
+    println!("== coordinator dispatch & batching latency ==");
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let engine = SpmmEngine::new(Path::new("artifacts")).unwrap();
+    let mut rng = Xoshiro256::seeded(11);
+    let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(400, 400, 0.01, &mut rng));
+    let h = engine.register(a.clone());
+
+    for n in [1usize, 4, 32] {
+        let x = DenseMatrix::random(400, n, 1.0, &mut rng);
+        // prime compile + packing caches
+        engine.spmm(h, &x).unwrap();
+        let s = bench_fn(&format!("spmm dispatch n={n} (warm)"), || {
+            let _ = engine.spmm(h, &x).unwrap();
+        });
+        println!("{}", s.line());
+    }
+
+    // batcher: 4 single-column requests coalesced into one n=4 execution
+    let xs: Vec<DenseMatrix> = (0..4)
+        .map(|_| DenseMatrix::random(400, 1, 1.0, &mut rng))
+        .collect();
+    let s = bench_fn("batcher 4×(n=1) → one n=4 call", || {
+        let mut b = Batcher::new(&engine, 4);
+        for (i, x) in xs.iter().enumerate() {
+            let _ = b.submit(h, x.clone(), i as u64).unwrap();
+        }
+    });
+    println!("{}", s.line());
+    println!("\n{}", engine.metrics.summary());
+}

@@ -1,0 +1,58 @@
+//! §3.2: performance loss of the rule-based selection vs the oracle, and
+//! vs always running a single fixed kernel, averaged over the collection
+//! and all N.
+//!
+//! Paper: rules lose 12%/5%/10% (V100/2080/3090) vs oracle; the best
+//! fixed-kernel policy loses ≥68%.
+
+use ge_spmm::bench::figures::{load_bench_matrices, sim_ours_best, sim_ours_rules, sim_suite};
+use ge_spmm::bench::Table;
+use ge_spmm::selector::AdaptiveSelector;
+use ge_spmm::sim::{GpuConfig, SimKernel};
+use ge_spmm::util::stats;
+
+fn main() {
+    println!("== §3.2: selection loss vs oracle, rules vs fixed kernels ==");
+    eprintln!("building collection …");
+    let matrices = load_bench_matrices();
+    let sel = AdaptiveSelector::default();
+    let n_values = [1usize, 4, 32, 128];
+
+    for gpu in GpuConfig::all() {
+        let mut ratios_rules = Vec::new();
+        let mut ratios_fixed: [Vec<f64>; 4] = Default::default();
+        for &n in &n_values {
+            let best = sim_ours_best(&matrices, n, &gpu);
+            let rules = sim_ours_rules(&matrices, &sel, n, &gpu);
+            for i in 0..matrices.len() {
+                ratios_rules.push(rules[i] / best[i]);
+            }
+            for (ki, &k) in SimKernel::OURS.iter().enumerate() {
+                let t = sim_suite(&matrices, k, n, &gpu);
+                for i in 0..matrices.len() {
+                    ratios_fixed[ki].push(t[i] / best[i]);
+                }
+            }
+        }
+        let mut t = Table::new(&["policy", "mean loss vs oracle"]);
+        t.row(vec![
+            "rule-based (ours)".into(),
+            format!("{:.1}%", (stats::geomean(&ratios_rules) - 1.0) * 100.0),
+        ]);
+        let mut best_fixed = f64::INFINITY;
+        for (ki, k) in SimKernel::OURS.iter().enumerate() {
+            let loss = stats::geomean(&ratios_fixed[ki]) - 1.0;
+            best_fixed = best_fixed.min(loss);
+            t.row(vec![
+                format!("always {}", k.label()),
+                format!("{:.1}%", loss * 100.0),
+            ]);
+        }
+        println!("\n--- {} ---", gpu.name);
+        t.print();
+        println!(
+            "best fixed-kernel loss: {:.1}% (paper: ≥68%); rules (paper: 5–12%)",
+            best_fixed * 100.0
+        );
+    }
+}

@@ -1,0 +1,150 @@
+//! Shared machinery for the figure/table reproductions in `rust/benches/`.
+//!
+//! Every bench needs the same pipeline: build the benchmark collection
+//! (in parallel), extract features, run the simulator for a set of kernel
+//! designs across N and GPU configs, and aggregate speedups. Centralizing
+//! it keeps each bench file focused on the paper artifact it regenerates.
+
+use crate::features::MatrixFeatures;
+use crate::gen::collection::{Collection, Family, MatrixSpec};
+use crate::sim::{simulate, GpuConfig, SimKernel, SimMatrix};
+use crate::util::stats;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Mutex;
+
+/// A prepared benchmark matrix.
+pub struct BenchMatrix {
+    pub name: String,
+    pub family: Family,
+    pub features: MatrixFeatures,
+    pub sim: SimMatrix,
+}
+
+/// Build the bench suite in parallel (preprocessing dominates; the
+/// simulations themselves are run by the callers).
+pub fn load_bench_matrices() -> Vec<BenchMatrix> {
+    load_matrices(Collection::bench_suite())
+}
+
+/// Build an arbitrary spec list in parallel, preserving order.
+pub fn load_matrices(specs: Vec<MatrixSpec>) -> Vec<BenchMatrix> {
+    let pool = ThreadPool::default_parallel();
+    let out: Mutex<Vec<(usize, BenchMatrix)>> = Mutex::new(Vec::with_capacity(specs.len()));
+    pool.run_dynamic(specs.len(), 1, |range| {
+        for i in range {
+            let spec = &specs[i];
+            let csr = spec.build();
+            let features = MatrixFeatures::of(&csr);
+            let bm = BenchMatrix {
+                name: spec.name.clone(),
+                family: spec.family,
+                features,
+                sim: SimMatrix::new(csr),
+            };
+            out.lock().unwrap().push((i, bm));
+        }
+    });
+    let mut v = out.into_inner().unwrap();
+    v.sort_by_key(|(i, _)| *i);
+    v.into_iter().map(|(_, bm)| bm).collect()
+}
+
+/// Per-matrix simulated seconds for one kernel at (n, gpu), parallel over
+/// matrices.
+pub fn sim_suite(
+    matrices: &[BenchMatrix],
+    kernel: SimKernel,
+    n: usize,
+    gpu: &GpuConfig,
+) -> Vec<f64> {
+    let pool = ThreadPool::default_parallel();
+    let out: Mutex<Vec<(usize, f64)>> = Mutex::new(Vec::with_capacity(matrices.len()));
+    pool.run_dynamic(matrices.len(), 1, |range| {
+        for i in range {
+            let s = simulate(kernel, &matrices[i].sim, n, gpu).seconds;
+            out.lock().unwrap().push((i, s));
+        }
+    });
+    let mut v = out.into_inner().unwrap();
+    v.sort_by_key(|(i, _)| *i);
+    v.into_iter().map(|(_, s)| s).collect()
+}
+
+/// Best-of-the-four-designs seconds per matrix (the paper's "ours",
+/// offline-profiled mode).
+pub fn sim_ours_best(matrices: &[BenchMatrix], n: usize, gpu: &GpuConfig) -> Vec<f64> {
+    let per_kernel: Vec<Vec<f64>> = SimKernel::OURS
+        .iter()
+        .map(|&k| sim_suite(matrices, k, n, gpu))
+        .collect();
+    (0..matrices.len())
+        .map(|i| per_kernel.iter().map(|v| v[i]).fold(f64::INFINITY, f64::min))
+        .collect()
+}
+
+/// Rule-selected seconds per matrix (the paper's "ours with rule-based").
+pub fn sim_ours_rules(
+    matrices: &[BenchMatrix],
+    sel: &crate::selector::AdaptiveSelector,
+    n: usize,
+    gpu: &GpuConfig,
+) -> Vec<f64> {
+    matrices
+        .iter()
+        .map(|m| {
+            let k = sel.select(&m.features, n);
+            simulate(SimKernel::from_kind(k), &m.sim, n, gpu).seconds
+        })
+        .collect()
+}
+
+/// Geometric-mean speedup of `ours` over `baseline` (elementwise ratios).
+pub fn geomean_speedup(baseline: &[f64], ours: &[f64]) -> f64 {
+    let ratios: Vec<f64> = baseline
+        .iter()
+        .zip(ours)
+        .map(|(b, o)| b / o)
+        .collect();
+    stats::geomean(&ratios)
+}
+
+/// The paper's N sweep.
+pub const N_SWEEP: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_suite_is_reasonably_sized() {
+        let specs = Collection::bench_suite();
+        assert!(
+            (25..=45).contains(&specs.len()),
+            "bench suite has {} entries",
+            specs.len()
+        );
+        // covers every family
+        let fams: std::collections::HashSet<_> = specs.iter().map(|s| s.family).collect();
+        assert!(fams.len() >= 6, "families covered: {}", fams.len());
+    }
+
+    #[test]
+    fn geomean_speedup_basic() {
+        assert!((geomean_speedup(&[2.0, 2.0], &[1.0, 1.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean_speedup(&[1.0, 4.0], &[2.0, 2.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_and_sim_mini() {
+        let ms = load_matrices(Collection::mini_suite());
+        assert!(!ms.is_empty());
+        let gpu = GpuConfig::v100();
+        let times = sim_suite(&ms, SimKernel::SrRs, 32, &gpu);
+        assert_eq!(times.len(), ms.len());
+        assert!(times.iter().all(|&t| t.is_finite() && t > 0.0));
+        let best = sim_ours_best(&ms, 32, &gpu);
+        for i in 0..ms.len() {
+            assert!(best[i] <= times[i] + 1e-15);
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Wallclock measurement: warmup, calibrated iteration count, robust
+//! summary statistics. The shape criterion users expect, sized for this
+//! project.
+
+use crate::util::stats;
+use std::time::{Duration, Instant};
+
+/// Summary of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iterations: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub mean: Duration,
+}
+
+impl BenchStats {
+    /// Median seconds (convenience for ratio computations).
+    pub fn median_s(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+
+    /// One-line report.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} {:>12} median  [{} .. {}]  ({} iters)",
+            self.name,
+            crate::util::timer::fmt_duration(self.median),
+            crate::util::timer::fmt_duration(self.p10),
+            crate::util::timer::fmt_duration(self.p90),
+            self.iterations
+        )
+    }
+}
+
+/// Measurement budget.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_millis(500),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+/// Measure `f` under the default budget.
+pub fn bench_fn<F: FnMut()>(name: &str, f: F) -> BenchStats {
+    bench_fn_with(name, BenchConfig::default(), f)
+}
+
+/// Measure `f` under an explicit budget.
+pub fn bench_fn_with<F: FnMut()>(name: &str, config: BenchConfig, mut f: F) -> BenchStats {
+    // warmup + single-shot estimate
+    let start = Instant::now();
+    let mut warm_iters = 0usize;
+    while start.elapsed() < config.warmup || warm_iters == 0 {
+        f();
+        warm_iters += 1;
+        if warm_iters > config.max_iters {
+            break;
+        }
+    }
+    let per_iter = start.elapsed().as_secs_f64() / warm_iters as f64;
+    let iters = ((config.measure.as_secs_f64() / per_iter.max(1e-9)) as usize)
+        .clamp(config.min_iters, config.max_iters);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let median = stats::median(&samples);
+    let p10 = stats::quantile(&samples, 0.1);
+    let p90 = stats::quantile(&samples, 0.9);
+    let mean = stats::mean(&samples);
+    BenchStats {
+        name: name.to_string(),
+        iterations: iters,
+        median: Duration::from_secs_f64(median),
+        p10: Duration::from_secs_f64(p10),
+        p90: Duration::from_secs_f64(p90),
+        mean: Duration::from_secs_f64(mean),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 1000,
+        };
+        let mut acc = 0u64;
+        let stats = bench_fn_with("spin", cfg, || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(stats.iterations >= 3);
+        assert!(stats.median > Duration::ZERO);
+        assert!(stats.p10 <= stats.median && stats.median <= stats.p90);
+        assert!(stats.line().contains("spin"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Benchmark substrate: a criterion-like measurement harness plus table
+//! formatting shared by `rust/benches/*` (all `harness = false`, since
+//! criterion is not in the offline registry).
+
+pub mod figures;
+pub mod harness;
+pub mod table;
+
+pub use harness::{bench_fn, BenchStats};
+pub use table::Table;

@@ -1,0 +1,138 @@
+//! Coordinator metrics: request counts, per-kernel selection counts, and
+//! latency aggregates. Lock-light (atomics + a mutex-guarded latency
+//! reservoir) so the hot path stays cheap.
+
+use crate::kernels::KernelKind;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Aggregate metrics for an engine instance.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    by_kernel: [AtomicU64; 4],
+    /// total execution nanoseconds
+    exec_ns: AtomicU64,
+    /// bounded latency reservoir for quantiles (most recent 4096)
+    latencies: Mutex<Vec<u64>>,
+}
+
+const RESERVOIR: usize = 4096;
+
+impl Metrics {
+    /// Record one completed request.
+    pub fn record(&self, kernel: KernelKind, latency: Duration) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let idx = KernelKind::ALL.iter().position(|k| *k == kernel).unwrap();
+        self.by_kernel[idx].fetch_add(1, Ordering::Relaxed);
+        let ns = latency.as_nanos() as u64;
+        self.exec_ns.fetch_add(ns, Ordering::Relaxed);
+        let mut res = self.latencies.lock().unwrap();
+        if res.len() >= RESERVOIR {
+            let idx = (self.requests.load(Ordering::Relaxed) as usize) % RESERVOIR;
+            res[idx] = ns;
+        } else {
+            res.push(ns);
+        }
+    }
+
+    /// Record a failed request.
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Completed request count.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Error count.
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Requests per kernel, in [`KernelKind::ALL`] order.
+    pub fn kernel_counts(&self) -> [u64; 4] {
+        [
+            self.by_kernel[0].load(Ordering::Relaxed),
+            self.by_kernel[1].load(Ordering::Relaxed),
+            self.by_kernel[2].load(Ordering::Relaxed),
+            self.by_kernel[3].load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Mean execution latency.
+    pub fn mean_latency(&self) -> Duration {
+        let n = self.requests();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.exec_ns.load(Ordering::Relaxed) / n)
+    }
+
+    /// Latency quantile from the reservoir.
+    pub fn latency_quantile(&self, q: f64) -> Duration {
+        let res = self.latencies.lock().unwrap();
+        if res.is_empty() {
+            return Duration::ZERO;
+        }
+        let xs: Vec<f64> = res.iter().map(|&ns| ns as f64).collect();
+        Duration::from_nanos(crate::util::stats::quantile(&xs, q) as u64)
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let counts = self.kernel_counts();
+        format!(
+            "requests={} errors={} mean={:?} p50={:?} p99={:?} kernels[sr_rs={} sr_wb={} pr_rs={} pr_wb={}]",
+            self.requests(),
+            self.errors(),
+            self.mean_latency(),
+            self.latency_quantile(0.5),
+            self.latency_quantile(0.99),
+            counts[0],
+            counts[1],
+            counts[2],
+            counts[3],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = Metrics::default();
+        m.record(KernelKind::PrWb, Duration::from_micros(100));
+        m.record(KernelKind::PrWb, Duration::from_micros(300));
+        m.record(KernelKind::SrRs, Duration::from_micros(200));
+        m.record_error();
+        assert_eq!(m.requests(), 3);
+        assert_eq!(m.errors(), 1);
+        assert_eq!(m.kernel_counts(), [1, 0, 0, 2]);
+        assert_eq!(m.mean_latency(), Duration::from_micros(200));
+        assert!(m.latency_quantile(0.99) >= m.latency_quantile(0.5));
+        assert!(m.summary().contains("requests=3"));
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(Metrics::default());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.record(KernelKind::SrWb, Duration::from_nanos(10));
+                    }
+                });
+            }
+        });
+        assert_eq!(m.requests(), 8000);
+        assert_eq!(m.kernel_counts()[1], 8000);
+    }
+}

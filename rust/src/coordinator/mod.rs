@@ -1,0 +1,18 @@
+//! The coordinator — Layer 3's service surface.
+//!
+//! Productizes the paper's adaptive-kernel contribution: a caller
+//! registers sparse matrices once ([`engine::SpmmEngine`]), then submits
+//! SpMM requests; the engine extracts features, picks a kernel via the
+//! Fig.-4 rules, routes to the right AOT artifact bucket, packs operands,
+//! and executes on the PJRT runtime. [`batcher`] coalesces narrow
+//! requests along the dense-width axis (the paper's own batching axis: N
+//! *is* the batch dimension in GNN workloads); [`metrics`] tracks
+//! per-kernel counts and latency; [`server`] runs the request loop.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod pack;
+pub mod server;
+
+pub use engine::{MatrixHandle, SpmmEngine};

@@ -1,0 +1,195 @@
+//! Operand packing: sparse matrices and dense operands → bucket-shaped
+//! tensors for the fixed-shape AOT artifacts.
+//!
+//! Buckets are zero-padded: ELL rows beyond the matrix get zero values and
+//! column 0; segment padding repeats the last real (row, col) with value 0
+//! (exactly the Python-side `formats.py` conventions — both sides must
+//! agree or the kernels read garbage).
+
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::tensor::Tensor;
+use crate::sparse::{CsrMatrix, DenseMatrix, EllMatrix, SegmentedMatrix};
+use anyhow::{anyhow, Result};
+
+/// ELL planes padded to a bucket: `(values, col_idx)` of shape
+/// `(m_pad, width)`.
+pub fn ell_tensors(csr: &CsrMatrix, spec: &ArtifactSpec) -> Result<(Tensor, Tensor)> {
+    let m_pad = spec.param("m_pad").ok_or_else(|| anyhow!("bucket missing m_pad"))?;
+    let width = spec.param("width").ok_or_else(|| anyhow!("bucket missing width"))?;
+    if csr.rows > m_pad {
+        return Err(anyhow!("matrix rows {} exceed bucket m_pad {m_pad}", csr.rows));
+    }
+    let ell = EllMatrix::from_csr(csr, 1, 1);
+    if ell.width > width {
+        return Err(anyhow!("row length {} exceeds bucket width {width}", ell.width));
+    }
+    let mut values = vec![0f32; m_pad * width];
+    let mut cols = vec![0i32; m_pad * width];
+    for r in 0..csr.rows {
+        let (rc, rv) = csr.row(r);
+        for k in 0..rc.len() {
+            values[r * width + k] = rv[k];
+            cols[r * width + k] = rc[k] as i32;
+        }
+    }
+    Ok((
+        Tensor::f32(vec![m_pad, width], values),
+        Tensor::i32(vec![m_pad, width], cols),
+    ))
+}
+
+/// Segment planes padded to a bucket: `(values, col_idx, row_idx)` of
+/// shape `(nseg, seg_len)`.
+pub fn segment_tensors(csr: &CsrMatrix, spec: &ArtifactSpec) -> Result<(Tensor, Tensor, Tensor)> {
+    let nseg = spec.param("nseg").ok_or_else(|| anyhow!("bucket missing nseg"))?;
+    let seg_len = spec.param("seg_len").ok_or_else(|| anyhow!("bucket missing seg_len"))?;
+    let seg = SegmentedMatrix::from_csr(csr, seg_len);
+    if seg.num_segments > nseg {
+        return Err(anyhow!(
+            "{} segments exceed bucket nseg {nseg}",
+            seg.num_segments
+        ));
+    }
+    let padded = nseg * seg_len;
+    let mut values = vec![0f32; padded];
+    let mut cols = vec![0i32; padded];
+    let mut rows = vec![0i32; padded];
+    let real = seg.num_segments * seg_len;
+    values[..real].copy_from_slice(&seg.values);
+    for i in 0..real {
+        cols[i] = seg.col_idx[i] as i32;
+        rows[i] = seg.row_idx[i] as i32;
+    }
+    // bucket padding repeats the trailing (row, col) with value 0
+    let (pad_c, pad_r) = if real > 0 {
+        (cols[real - 1], rows[real - 1])
+    } else {
+        (0, 0)
+    };
+    for i in real..padded {
+        cols[i] = pad_c;
+        rows[i] = pad_r;
+    }
+    Ok((
+        Tensor::f32(vec![nseg, seg_len], values),
+        Tensor::i32(vec![nseg, seg_len], cols),
+        Tensor::i32(vec![nseg, seg_len], rows),
+    ))
+}
+
+/// Dense operand padded to the bucket's `(k, n)`.
+pub fn dense_tensor(x: &DenseMatrix, k_bucket: usize, n_bucket: usize) -> Result<Tensor> {
+    if x.rows > k_bucket || x.cols > n_bucket {
+        return Err(anyhow!(
+            "dense operand {}x{} exceeds bucket {k_bucket}x{n_bucket}",
+            x.rows,
+            x.cols
+        ));
+    }
+    let mut data = vec![0f32; k_bucket * n_bucket];
+    for r in 0..x.rows {
+        data[r * n_bucket..r * n_bucket + x.cols].copy_from_slice(x.row(r));
+    }
+    Ok(Tensor::f32(vec![k_bucket, n_bucket], data))
+}
+
+/// Slice the `(m_pad, n_bucket)` artifact output back to `(rows, n)`.
+pub fn unpack_output(out: &Tensor, rows: usize, n: usize) -> Result<DenseMatrix> {
+    let shape = out.shape();
+    if shape.len() != 2 || shape[0] < rows || shape[1] < n {
+        return Err(anyhow!("output shape {:?} cannot contain {rows}x{n}", shape));
+    }
+    let data = out.as_f32()?;
+    let n_bucket = shape[1];
+    let mut result = DenseMatrix::zeros(rows, n);
+    for r in 0..rows {
+        result.data[r * n..(r + 1) * n].copy_from_slice(&data[r * n_bucket..r * n_bucket + n]);
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+    use std::collections::BTreeMap;
+
+    fn spec(m_pad: usize, k: usize, width: usize, nseg: usize, seg_len: usize) -> ArtifactSpec {
+        let mut params = BTreeMap::new();
+        params.insert("m_pad".to_string(), m_pad);
+        params.insert("k".to_string(), k);
+        params.insert("width".to_string(), width);
+        params.insert("nseg".to_string(), nseg);
+        params.insert("seg_len".to_string(), seg_len);
+        ArtifactSpec {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            kind: "spmm".into(),
+            variant: Some("sr_rs".into()),
+            bucket: Some("s".into()),
+            n: Some(4),
+            params,
+            inputs: vec![],
+            outputs: vec![],
+        }
+    }
+
+    fn small_csr() -> CsrMatrix {
+        let mut coo = CooMatrix::new(3, 5);
+        coo.push(0, 1, 1.0);
+        coo.push(0, 4, 2.0);
+        coo.push(2, 0, 3.0);
+        CsrMatrix::from_coo(&coo)
+    }
+
+    #[test]
+    fn ell_packing_layout() {
+        let (v, c) = ell_tensors(&small_csr(), &spec(8, 8, 4, 8, 4)).unwrap();
+        assert_eq!(v.shape(), &[8, 4]);
+        let vd = v.as_f32().unwrap();
+        assert_eq!(&vd[0..2], &[1.0, 2.0]);
+        assert_eq!(vd[2], 0.0); // padded slot
+        assert!(vd[4..8].iter().all(|&v| v == 0.0)); // empty row 1
+        assert_eq!(vd[8], 3.0); // row 2, first slot
+        match c {
+            Tensor::I32 { data, .. } => {
+                assert_eq!(&data[0..2], &[1, 4]);
+                assert_eq!(data[8], 0); // row 2 col index
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn ell_packing_rejects_oversize() {
+        assert!(ell_tensors(&small_csr(), &spec(2, 8, 4, 8, 4)).is_err()); // rows
+        assert!(ell_tensors(&small_csr(), &spec(8, 8, 1, 8, 4)).is_err()); // width
+    }
+
+    #[test]
+    fn segment_packing_pads_with_trailing_row() {
+        let (v, c, r) = segment_tensors(&small_csr(), &spec(8, 8, 4, 4, 2)).unwrap();
+        assert_eq!(v.shape(), &[4, 2]);
+        let vd = v.as_f32().unwrap();
+        assert_eq!(&vd[0..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(vd[3], 0.0);
+        match (c, r) {
+            (Tensor::I32 { data: cd, .. }, Tensor::I32 { data: rd, .. }) => {
+                // padding repeats (row 2, col 0)
+                assert!(cd[3..].iter().all(|&x| x == 0));
+                assert!(rd[3..].iter().all(|&x| x == 2));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn dense_pack_unpack_roundtrip() {
+        let x = DenseMatrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let t = dense_tensor(&x, 4, 8).unwrap();
+        assert_eq!(t.shape(), &[4, 8]);
+        let back = unpack_output(&t, 2, 3).unwrap();
+        assert_eq!(back, x);
+        assert!(dense_tensor(&x, 1, 8).is_err());
+    }
+}

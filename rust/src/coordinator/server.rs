@@ -1,0 +1,107 @@
+//! Request-loop server: a channel-fed worker thread that batches and
+//! executes SpMM requests (the deployment shape of the coordinator).
+//!
+//! Uses std mpsc — the offline registry has no tokio; the loop is the
+//! same select-batch-execute structure a tokio runtime would drive.
+
+use super::batcher::{BatchedResult, Batcher};
+use super::engine::{MatrixHandle, SpmmEngine};
+use crate::sparse::DenseMatrix;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// A request into the server.
+pub struct Request {
+    pub matrix: MatrixHandle,
+    pub x: DenseMatrix,
+    pub tag: u64,
+    /// where the result is delivered
+    pub reply: mpsc::Sender<ServerReply>,
+}
+
+/// Result delivered to the requester.
+#[derive(Debug)]
+pub enum ServerReply {
+    Ok(BatchedResult),
+    Err(String),
+}
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// max combined dense width before a batch is forced out
+    pub max_width: usize,
+    /// flush deadline for partially-filled batches
+    pub max_delay: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_width: 128,
+            max_delay: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Run the request loop until the channel closes. Intended to be spawned
+/// on a worker thread with the engine shared by reference.
+pub fn serve(engine: &SpmmEngine, rx: mpsc::Receiver<Request>, config: ServerConfig) {
+    let mut batcher = Batcher::new(engine, config.max_width);
+    let mut repliers: std::collections::HashMap<u64, mpsc::Sender<ServerReply>> =
+        std::collections::HashMap::new();
+    let mut deadline: Option<Instant> = None;
+
+    let deliver = |results: Vec<BatchedResult>,
+                   repliers: &mut std::collections::HashMap<u64, mpsc::Sender<ServerReply>>| {
+        for r in results {
+            if let Some(tx) = repliers.remove(&r.tag) {
+                let _ = tx.send(ServerReply::Ok(r));
+            }
+        }
+    };
+
+    loop {
+        let timeout = deadline
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_secs(3600));
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                repliers.insert(req.tag, req.reply.clone());
+                match batcher.submit(req.matrix, req.x, req.tag) {
+                    Ok(results) => deliver(results, &mut repliers),
+                    Err(e) => {
+                        if let Some(tx) = repliers.remove(&req.tag) {
+                            let _ = tx.send(ServerReply::Err(e.to_string()));
+                        }
+                    }
+                }
+                if batcher.pending() > 0 && deadline.is_none() {
+                    deadline = Some(Instant::now() + config.max_delay);
+                }
+                if batcher.pending() == 0 {
+                    deadline = None;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // deadline reached: flush partial batches
+                match batcher.flush_all() {
+                    Ok(results) => deliver(results, &mut repliers),
+                    Err(e) => {
+                        // deliver the error to everyone still waiting
+                        for (_, tx) in repliers.drain() {
+                            let _ = tx.send(ServerReply::Err(e.to_string()));
+                        }
+                    }
+                }
+                deadline = None;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                let _ = batcher.flush_all().map(|r| deliver(r, &mut repliers));
+                return;
+            }
+        }
+    }
+}
+
+// End-to-end server tests (needing artifacts) live in rust/tests/.

@@ -1,0 +1,136 @@
+//! Sparse-matrix feature extraction — the inputs to the adaptive selector.
+//!
+//! The paper's selection strategy (§2.2) uses *low-cost* statistics of the
+//! row-length distribution: the mean `avg_row`, the standard deviation
+//! `stdv_row`, and their ratio (coefficient of variation). All are O(rows)
+//! given CSR `indptr`, i.e. essentially free next to the SpMM itself.
+
+use crate::sparse::CsrMatrix;
+use crate::util::stats;
+
+/// Row-length statistics of a sparse matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MatrixFeatures {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// mean row length (`avg_row` in the paper)
+    pub avg_row: f64,
+    /// population stddev of row lengths (`stdv_row` in the paper)
+    pub stdv_row: f64,
+    /// `stdv_row / avg_row` — the paper's balancing metric
+    pub cv_row: f64,
+    /// maximum row length (bottleneck row)
+    pub max_row: usize,
+    /// fraction of empty rows
+    pub empty_frac: f64,
+    /// Gini coefficient of row lengths (auxiliary imbalance measure)
+    pub gini_row: f64,
+}
+
+impl MatrixFeatures {
+    /// Extract features from CSR (O(rows)).
+    pub fn of(csr: &CsrMatrix) -> Self {
+        let lens = csr.row_lengths();
+        let avg = stats::mean(&lens);
+        let stdv = stats::stddev(&lens);
+        let max_row = lens.iter().cloned().fold(0.0f64, f64::max) as usize;
+        let empty = lens.iter().filter(|&&l| l == 0.0).count();
+        Self {
+            rows: csr.rows,
+            cols: csr.cols,
+            nnz: csr.nnz(),
+            avg_row: avg,
+            stdv_row: stdv,
+            cv_row: if avg == 0.0 { 0.0 } else { stdv / avg },
+            max_row,
+            empty_frac: if csr.rows == 0 {
+                0.0
+            } else {
+                empty as f64 / csr.rows as f64
+            },
+            gini_row: stats::gini(&lens),
+        }
+    }
+
+    /// Total floating-point work of `A × X` with dense width `n`:
+    /// 2·nnz·n flops (multiply + add).
+    pub fn flops(&self, n: usize) -> f64 {
+        2.0 * self.nnz as f64 * n as f64
+    }
+
+    /// One-line summary for logs/bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}x{} nnz={} avg_row={:.2} stdv_row={:.2} cv={:.2} max_row={} empty={:.1}%",
+            self.rows,
+            self.cols,
+            self.nnz,
+            self.avg_row,
+            self.stdv_row,
+            self.cv_row,
+            self.max_row,
+            self.empty_frac * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn features_of_known_matrix() {
+        // rows of length 2, 0, 4
+        let mut coo = CooMatrix::new(3, 8);
+        for c in 0..2 {
+            coo.push(0, c, 1.0);
+        }
+        for c in 0..4 {
+            coo.push(2, c, 1.0);
+        }
+        let f = MatrixFeatures::of(&CsrMatrix::from_coo(&coo));
+        assert_eq!(f.nnz, 6);
+        assert!((f.avg_row - 2.0).abs() < 1e-12);
+        let expected_stdv = ((4.0 + 4.0 + 0.0) / 3.0f64).sqrt(); // lens 2,0,4 mean 2
+        assert!((f.stdv_row - expected_stdv).abs() < 1e-12);
+        assert_eq!(f.max_row, 4);
+        assert!((f.empty_frac - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(f.flops(16) as u64, 2 * 6 * 16);
+    }
+
+    #[test]
+    fn balanced_matrix_has_low_cv() {
+        let mut rng = Xoshiro256::seeded(71);
+        let m = crate::gen::banded::banded(200, &[-1, 0, 1], &mut rng);
+        let f = MatrixFeatures::of(&CsrMatrix::from_coo(&m));
+        assert!(f.cv_row < 0.1, "cv {}", f.cv_row);
+        assert!(f.gini_row < 0.05, "gini {}", f.gini_row);
+    }
+
+    #[test]
+    fn skewed_matrix_has_high_cv() {
+        let mut rng = Xoshiro256::seeded(72);
+        let cfg = crate::gen::powerlaw::PowerLawConfig {
+            rows: 1000,
+            cols: 2000,
+            alpha: 1.6,
+            min_row: 1,
+            max_row: 800,
+        };
+        let f = MatrixFeatures::of(&CsrMatrix::from_coo(&cfg.generate(&mut rng)));
+        assert!(f.cv_row > 1.0, "cv {}", f.cv_row);
+        assert!(f.gini_row > 0.3, "gini {}", f.gini_row);
+    }
+
+    #[test]
+    fn summary_contains_key_fields() {
+        let coo = CooMatrix::new(4, 4);
+        let f = MatrixFeatures::of(&CsrMatrix::from_coo(&coo));
+        let s = f.summary();
+        assert!(s.contains("4x4"));
+        assert!(s.contains("nnz=0"));
+    }
+}

@@ -1,0 +1,92 @@
+//! Block-diagonal and bipartite-block generators — clustered sparsity.
+//!
+//! These model matrices with locally dense structure (circuit, FEM and
+//! community-graph matrices in SuiteSparse): non-zeros cluster in blocks,
+//! giving good dense-row locality — the regime where ASpT-style tiling
+//! shines and where the paper's parallel-reduction keeps dense-matrix
+//! loads local.
+
+use crate::sparse::CooMatrix;
+use crate::util::prng::Xoshiro256;
+
+/// Block-diagonal matrix: `nblocks` square blocks of size `block`, each
+/// filled with density `block_density`.
+pub fn block_diagonal(
+    nblocks: usize,
+    block: usize,
+    block_density: f64,
+    rng: &mut Xoshiro256,
+) -> CooMatrix {
+    let n = nblocks * block;
+    let mut coo = CooMatrix::new(n, n);
+    for b in 0..nblocks {
+        let base = b * block;
+        for r in 0..block {
+            for c in 0..block {
+                if rng.chance(block_density) {
+                    coo.push(base + r, base + c, rng.next_f32() * 2.0 - 1.0);
+                }
+            }
+        }
+    }
+    coo.canonicalize();
+    coo
+}
+
+/// Random block matrix: a `grid × grid` tiling where each tile is dense
+/// with probability `tile_prob` (then filled at `tile_density`), else
+/// empty. Produces the mixed dense/sparse tiles ASpT exploits.
+pub fn block_random(
+    grid: usize,
+    tile: usize,
+    tile_prob: f64,
+    tile_density: f64,
+    rng: &mut Xoshiro256,
+) -> CooMatrix {
+    let n = grid * tile;
+    let mut coo = CooMatrix::new(n, n);
+    for br in 0..grid {
+        for bc in 0..grid {
+            if rng.chance(tile_prob) {
+                for r in 0..tile {
+                    for c in 0..tile {
+                        if rng.chance(tile_density) {
+                            coo.push(br * tile + r, bc * tile + c, rng.next_f32() * 2.0 - 1.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    coo.canonicalize();
+    coo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_diagonal_stays_in_blocks() {
+        let mut rng = Xoshiro256::seeded(61);
+        let m = block_diagonal(4, 8, 0.5, &mut rng);
+        assert_eq!(m.rows, 32);
+        for i in 0..m.nnz() {
+            let r = m.row_idx[i] as usize;
+            let c = m.col_idx[i] as usize;
+            assert_eq!(r / 8, c / 8, "entry ({r},{c}) escapes its block");
+        }
+    }
+
+    #[test]
+    fn block_random_density_within_active_tiles() {
+        let mut rng = Xoshiro256::seeded(62);
+        let m = block_random(8, 16, 0.25, 0.5, &mut rng);
+        let expected = (8.0 * 8.0 * 0.25) * (16.0 * 16.0 * 0.5);
+        let got = m.nnz() as f64;
+        assert!(
+            (got - expected).abs() < expected * 0.5,
+            "nnz {got} vs expected {expected}"
+        );
+    }
+}

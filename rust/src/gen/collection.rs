@@ -1,0 +1,383 @@
+//! The synthetic benchmark collection — stand-in for SuiteSparse.
+//!
+//! Builds a deterministic suite of matrices spanning the feature axes the
+//! paper's selection heuristics depend on:
+//!
+//! - `avg_row` (mean row length): 2 … 512
+//! - `stdv_row/avg_row` (cv): ≈0 (banded) … >10 (heavy power-law)
+//! - dimension: 1k … 131k rows
+//!
+//! Seven families × parameter grids ≈ 130 matrices. Each entry carries a
+//! [`MatrixSpec`] so benches can report per-family breakdowns. Everything
+//! is seeded from the matrix name, so any single matrix can be regenerated
+//! in isolation.
+
+use super::banded::{banded, laplacian_2d};
+use super::blockdiag::{block_diagonal, block_random};
+use super::powerlaw::PowerLawConfig;
+use super::rmat::RmatConfig;
+use crate::sparse::{CooMatrix, CsrMatrix};
+use crate::util::prng::Xoshiro256;
+
+/// Generator family of a collection entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    Rmat,
+    Uniform,
+    PowerLaw,
+    Banded,
+    Stencil,
+    BlockDiag,
+    BlockRandom,
+    Spike,
+}
+
+impl Family {
+    /// Short label used in bench output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Family::Rmat => "rmat",
+            Family::Uniform => "uniform",
+            Family::PowerLaw => "powerlaw",
+            Family::Banded => "banded",
+            Family::Stencil => "stencil",
+            Family::BlockDiag => "blockdiag",
+            Family::BlockRandom => "blockrand",
+            Family::Spike => "spike",
+        }
+    }
+}
+
+/// Description of one matrix in the collection: how to build it.
+#[derive(Clone, Debug)]
+pub struct MatrixSpec {
+    pub name: String,
+    pub family: Family,
+    params: Params,
+}
+
+#[derive(Clone, Debug)]
+enum Params {
+    Rmat { scale: u32, ef: f64, a: f64, b: f64, c: f64 },
+    Uniform { scale: u32, ef: f64 },
+    PowerLaw { rows: usize, alpha: f64, avg: usize },
+    Banded { n: usize, half_band: usize },
+    Stencil { side: usize },
+    BlockDiag { nblocks: usize, block: usize, density: f64 },
+    /// short uniform rows plus a few fixed-length mega rows (circuit /
+    /// power-grid style dense rows — the extreme-skew regime)
+    Spike { rows: usize, avg: f64, spikes: usize, spike_len: usize },
+    BlockRandom { grid: usize, tile: usize, tile_prob: f64 },
+}
+
+impl MatrixSpec {
+    /// Deterministic per-matrix seed derived from the name.
+    fn seed(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in self.name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// Materialize as COO.
+    pub fn build_coo(&self) -> CooMatrix {
+        let mut rng = Xoshiro256::seeded(self.seed());
+        match &self.params {
+            Params::Rmat { scale, ef, a, b, c } => RmatConfig::new(*scale, *ef)
+                .with_probs(*a, *b, *c)
+                .generate(&mut rng),
+            Params::Uniform { scale, ef } => {
+                RmatConfig::uniform(*scale, *ef).generate(&mut rng)
+            }
+            Params::PowerLaw { rows, alpha, avg } => {
+                // choose max_row so the bounded-Pareto mean lands near avg
+                let cfg = PowerLawConfig {
+                    rows: *rows,
+                    cols: *rows,
+                    alpha: *alpha,
+                    min_row: 1.max(avg / 4),
+                    max_row: (avg * 40).min(*rows),
+                };
+                cfg.generate(&mut rng)
+            }
+            Params::Banded { n, half_band } => {
+                let offsets: Vec<i64> =
+                    (-(*half_band as i64)..=(*half_band as i64)).collect();
+                banded(*n, &offsets, &mut rng)
+            }
+            Params::Stencil { side } => laplacian_2d(*side),
+            Params::BlockDiag {
+                nblocks,
+                block,
+                density,
+            } => block_diagonal(*nblocks, *block, *density, &mut rng),
+            Params::Spike {
+                rows,
+                avg,
+                spikes,
+                spike_len,
+            } => {
+                let mut coo =
+                    CooMatrix::random_uniform(*rows, *rows, *avg / *rows as f64, &mut rng);
+                let len = (*spike_len).min(*rows);
+                for sp in 0..*spikes {
+                    let r = sp * (*rows / (*spikes + 1));
+                    for c in rng.sample_distinct(*rows, len) {
+                        coo.push(r, c, rng.next_f32() * 2.0 - 1.0);
+                    }
+                }
+                coo.canonicalize();
+                coo
+            }
+            Params::BlockRandom {
+                grid,
+                tile,
+                tile_prob,
+            } => block_random(*grid, *tile, *tile_prob, 0.5, &mut rng),
+        }
+    }
+
+    /// Materialize as CSR.
+    pub fn build(&self) -> CsrMatrix {
+        CsrMatrix::from_coo(&self.build_coo())
+    }
+}
+
+/// The full synthetic collection.
+pub struct Collection;
+
+impl Collection {
+    /// The standard suite (~130 matrices). Deterministic order and content.
+    pub fn suite() -> Vec<MatrixSpec> {
+        let mut out = Vec::new();
+        // R-MAT skewed: scales 10..=14, edge factors {4, 8, 16, 32}, two skews
+        for scale in [10u32, 11, 12, 13, 14] {
+            for ef in [4.0, 8.0, 16.0, 32.0] {
+                for (tag, a, b, c) in [("g500", 0.57, 0.19, 0.19), ("mild", 0.45, 0.22, 0.22)] {
+                    out.push(MatrixSpec {
+                        name: format!("rmat_s{scale}_e{ef:.0}_{tag}"),
+                        family: Family::Rmat,
+                        params: Params::Rmat {
+                            scale,
+                            ef,
+                            a,
+                            b,
+                            c,
+                        },
+                    });
+                }
+            }
+        }
+        // Uniform: scales 10..=14 × edge factors {2, 8, 32, 128}
+        for scale in [10u32, 11, 12, 13, 14] {
+            for ef in [2.0, 8.0, 32.0, 128.0] {
+                out.push(MatrixSpec {
+                    name: format!("uniform_s{scale}_e{ef:.0}"),
+                    family: Family::Uniform,
+                    params: Params::Uniform { scale, ef },
+                });
+            }
+        }
+        // Power-law: rows {4k, 16k, 65k} × alpha {1.6, 2.0, 2.8} × avg {4, 16, 64}
+        for rows in [4096usize, 16384, 65536] {
+            for alpha in [1.6f64, 2.0, 2.8] {
+                for avg in [4usize, 16, 64] {
+                    out.push(MatrixSpec {
+                        name: format!("plaw_n{rows}_a{alpha:.1}_d{avg}"),
+                        family: Family::PowerLaw,
+                        params: Params::PowerLaw { rows, alpha, avg },
+                    });
+                }
+            }
+        }
+        // Banded: n {4k, 16k, 65k, 131k} × half-band {1, 2, 8, 32, 256}
+        for n in [4096usize, 16384, 65536, 131072] {
+            for hb in [1usize, 2, 8, 32, 256] {
+                out.push(MatrixSpec {
+                    name: format!("band_n{n}_b{hb}"),
+                    family: Family::Banded,
+                    params: Params::Banded { n, half_band: hb },
+                });
+            }
+        }
+        // Stencils: sides 64, 128, 256, 362 (n up to ~131k)
+        for side in [64usize, 128, 256, 362] {
+            out.push(MatrixSpec {
+                name: format!("lap2d_{side}"),
+                family: Family::Stencil,
+                params: Params::Stencil { side },
+            });
+        }
+        // Block-diagonal: blocks {64×64, 256×32, 1024×16} × density {0.3, 0.7}
+        for (nblocks, block) in [(64usize, 64usize), (256, 32), (1024, 16)] {
+            for density in [0.3f64, 0.7] {
+                out.push(MatrixSpec {
+                    name: format!("bdiag_{nblocks}x{block}_d{density:.1}"),
+                    family: Family::BlockDiag,
+                    params: Params::BlockDiag {
+                        nblocks,
+                        block,
+                        density,
+                    },
+                });
+            }
+        }
+        // Spike: extreme skew — short rows + a few fixed mega rows
+        for (rows, avg, spikes, spike_len) in [
+            (4096usize, 4.0, 3usize, 2048usize),
+            (8192, 4.0, 4, 4096),
+            (16384, 8.0, 4, 8192),
+            (8192, 2.0, 8, 2048),
+        ] {
+            out.push(MatrixSpec {
+                name: format!("spike_n{rows}_s{spikes}_l{spike_len}"),
+                family: Family::Spike,
+                params: Params::Spike {
+                    rows,
+                    avg,
+                    spikes,
+                    spike_len,
+                },
+            });
+        }
+        // Block-random: grid {32, 64} × tile {16, 32} × tile_prob {0.05, 0.15}
+        for grid in [32usize, 64] {
+            for tile in [16usize, 32] {
+                for tile_prob in [0.05f64, 0.15] {
+                    out.push(MatrixSpec {
+                        name: format!("brand_g{grid}_t{tile}_p{tile_prob:.2}"),
+                        family: Family::BlockRandom,
+                        params: Params::BlockRandom {
+                            grid,
+                            tile,
+                            tile_prob,
+                        },
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// The benchmark subset: representative coverage of every family and
+    /// feature regime, sized so a full `cargo bench` pass (all figures ×
+    /// kernels × GPUs) completes in minutes. Selection is by name, so the
+    /// subset is stable under suite extensions.
+    pub fn bench_suite() -> Vec<MatrixSpec> {
+        const KEEP: &[&str] = &[
+            // R-MAT skewed, three scales × two edge factors
+            "rmat_s10_e8_g500",
+            "rmat_s11_e16_g500",
+            "rmat_s12_e8_g500",
+            "rmat_s12_e32_g500",
+            "rmat_s13_e8_g500",
+            "rmat_s11_e8_mild",
+            "rmat_s12_e16_mild",
+            // uniform, short and long rows
+            "uniform_s10_e2",
+            "uniform_s11_e8",
+            "uniform_s12_e2",
+            "uniform_s12_e32",
+            "uniform_s13_e8",
+            "uniform_s12_e128",
+            // power-law, three skews × sizes
+            "plaw_n4096_a1.6_d4",
+            "plaw_n4096_a2.0_d16",
+            "plaw_n16384_a1.6_d16",
+            "plaw_n16384_a2.0_d4",
+            "plaw_n16384_a2.8_d64",
+            "plaw_n65536_a2.0_d16",
+            // banded / stencil (balanced)
+            "band_n4096_b1",
+            "band_n4096_b32",
+            "band_n16384_b2",
+            "band_n16384_b8",
+            "band_n65536_b8",
+            "lap2d_64",
+            "lap2d_128",
+            "lap2d_256",
+            // clustered
+            "bdiag_64x64_d0.3",
+            "bdiag_256x32_d0.7",
+            "bdiag_1024x16_d0.3",
+            "brand_g32_t16_p0.15",
+            "brand_g64_t32_p0.05",
+            // extreme skew
+            "spike_n4096_s3_l2048",
+            "spike_n8192_s4_l4096",
+            "spike_n8192_s8_l2048",
+        ];
+        Self::suite()
+            .into_iter()
+            .filter(|s| KEEP.contains(&s.name.as_str()))
+            .collect()
+    }
+
+    /// A small deterministic subset (for fast tests / CI): every family,
+    /// small sizes.
+    pub fn mini_suite() -> Vec<MatrixSpec> {
+        Self::suite()
+            .into_iter()
+            .filter(|s| {
+                matches!(
+                    s.name.as_str(),
+                    "rmat_s10_e8_g500"
+                        | "uniform_s10_e8"
+                        | "plaw_n4096_a2.0_d16"
+                        | "band_n4096_b2"
+                        | "band_n4096_b32"
+                        | "lap2d_64"
+                        | "bdiag_64x64_d0.3"
+                        | "brand_g32_t16_p0.05"
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::MatrixFeatures;
+
+    #[test]
+    fn suite_size_and_unique_names() {
+        let suite = Collection::suite();
+        assert!(suite.len() >= 120, "suite has {} entries", suite.len());
+        let names: std::collections::HashSet<_> = suite.iter().map(|s| &s.name).collect();
+        assert_eq!(names.len(), suite.len(), "duplicate names");
+    }
+
+    #[test]
+    fn mini_suite_builds_and_is_deterministic() {
+        for spec in Collection::mini_suite() {
+            let a = spec.build();
+            let b = spec.build();
+            assert_eq!(a, b, "{} not deterministic", spec.name);
+            assert!(a.nnz() > 0, "{} is empty", spec.name);
+        }
+    }
+
+    #[test]
+    fn feature_space_is_spanned() {
+        // The suite must contain both very balanced and very skewed
+        // matrices, and both short and long average rows — otherwise the
+        // selector calibration has nothing to learn from.
+        let mut max_cv: f64 = 0.0;
+        let mut min_cv = f64::INFINITY;
+        let mut max_avg: f64 = 0.0;
+        let mut min_avg = f64::INFINITY;
+        for spec in Collection::mini_suite() {
+            let f = MatrixFeatures::of(&spec.build());
+            max_cv = max_cv.max(f.cv_row);
+            min_cv = min_cv.min(f.cv_row);
+            max_avg = max_avg.max(f.avg_row);
+            min_avg = min_avg.min(f.avg_row);
+        }
+        assert!(min_cv < 0.2, "no balanced matrix (min cv {min_cv})");
+        assert!(max_cv > 1.0, "no skewed matrix (max cv {max_cv})");
+        assert!(min_avg < 10.0 && max_avg > 30.0, "avg_row span [{min_avg},{max_avg}]");
+    }
+}

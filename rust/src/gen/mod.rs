@@ -1,0 +1,16 @@
+//! Synthetic sparse-matrix generation.
+//!
+//! The paper evaluates on the SuiteSparse collection and synthesizes micro
+//! benchmarks with R-MAT. SuiteSparse cannot be downloaded in this offline
+//! environment, so [`collection`] builds a deterministic 180-matrix suite
+//! that spans the same feature space (row-length mean 2–512, coefficient of
+//! variation 0–30, dimension 1e3–2e5) using the generator families below;
+//! see `DESIGN.md` §Substitutions.
+
+pub mod banded;
+pub mod blockdiag;
+pub mod collection;
+pub mod powerlaw;
+pub mod rmat;
+
+pub use collection::{Collection, MatrixSpec};

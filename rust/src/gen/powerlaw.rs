@@ -1,0 +1,107 @@
+//! Power-law row-length generator — the *skewed* end of the feature space.
+//!
+//! Directly parameterizes the row-length distribution: row lengths are
+//! drawn from a discrete Pareto with exponent `alpha`, producing the
+//! heavy-tailed degree profiles where the paper's workload-balancing is
+//! essential (Insight 2). Unlike R-MAT, the skew is controlled exactly.
+
+use crate::sparse::CooMatrix;
+use crate::util::prng::Xoshiro256;
+
+/// Parameters for the power-law generator.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerLawConfig {
+    pub rows: usize,
+    pub cols: usize,
+    /// Pareto exponent; smaller = heavier tail (1.5–3.5 realistic).
+    pub alpha: f64,
+    /// minimum row length.
+    pub min_row: usize,
+    /// cap on row length (also bounded by `cols`).
+    pub max_row: usize,
+}
+
+impl PowerLawConfig {
+    /// Generate: each row gets `len ~ Pareto(alpha)` distinct columns.
+    pub fn generate(&self, rng: &mut Xoshiro256) -> CooMatrix {
+        assert!(self.alpha > 1.0, "alpha must exceed 1 for a finite mean");
+        assert!(self.min_row >= 1);
+        let max_row = self.max_row.min(self.cols);
+        let mut coo = CooMatrix::new(self.rows, self.cols);
+        for r in 0..self.rows {
+            // inverse-CDF sample of a bounded Pareto
+            let u = rng.next_f64();
+            let lo = self.min_row as f64;
+            let hi = max_row as f64;
+            let a = self.alpha - 1.0; // tail exponent of the CCDF
+            let len = (lo.powf(-a) - u * (lo.powf(-a) - hi.powf(-a))).powf(-1.0 / a);
+            let len = (len.round() as usize).clamp(self.min_row, max_row);
+            for c in rng.sample_distinct(self.cols, len) {
+                coo.push(r, c, rng.next_f32() * 2.0 - 1.0);
+            }
+        }
+        coo.canonicalize();
+        coo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CsrMatrix;
+    use crate::util::stats;
+
+    #[test]
+    fn row_lengths_within_bounds() {
+        let mut rng = Xoshiro256::seeded(51);
+        let cfg = PowerLawConfig {
+            rows: 300,
+            cols: 400,
+            alpha: 2.0,
+            min_row: 2,
+            max_row: 64,
+        };
+        let csr = CsrMatrix::from_coo(&cfg.generate(&mut rng));
+        for r in 0..csr.rows {
+            let n = csr.row_nnz(r);
+            assert!((2..=64).contains(&n), "row {r} has {n} nnz");
+        }
+    }
+
+    #[test]
+    fn smaller_alpha_is_more_skewed() {
+        let mut rng = Xoshiro256::seeded(52);
+        let make = |alpha, rng: &mut Xoshiro256| {
+            let cfg = PowerLawConfig {
+                rows: 2000,
+                cols: 4000,
+                alpha,
+                min_row: 1,
+                max_row: 1000,
+            };
+            stats::cv(&CsrMatrix::from_coo(&cfg.generate(rng)).row_lengths())
+        };
+        let heavy = make(1.6, &mut rng);
+        let light = make(3.5, &mut rng);
+        assert!(heavy > 2.0 * light, "cv heavy {heavy} vs light {light}");
+    }
+
+    #[test]
+    fn no_duplicate_columns_within_row() {
+        let mut rng = Xoshiro256::seeded(53);
+        let cfg = PowerLawConfig {
+            rows: 100,
+            cols: 50,
+            alpha: 2.5,
+            min_row: 1,
+            max_row: 50,
+        };
+        let csr = CsrMatrix::from_coo(&cfg.generate(&mut rng));
+        for r in 0..csr.rows {
+            let (cols, _) = csr.row(r);
+            for k in 1..cols.len() {
+                assert!(cols[k] > cols[k - 1], "row {r} has dup/unsorted cols");
+            }
+        }
+    }
+}

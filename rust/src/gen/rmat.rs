@@ -1,0 +1,158 @@
+//! R-MAT recursive matrix generator (Chakrabarti, Zhan & Faloutsos, 2004).
+//!
+//! The paper uses R-MAT for its VDL/CSC micro benchmarks ("27 matrices with
+//! the R-MAT generator using various size, sparsity and distribution
+//! parameters", §2.1.2). The generator drops each edge into one of four
+//! quadrants with probabilities (a, b, c, d) recursively; skewed
+//! probabilities yield power-law row lengths.
+
+use crate::sparse::CooMatrix;
+use crate::util::prng::Xoshiro256;
+
+/// R-MAT parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RmatConfig {
+    /// log2 of the (square) dimension.
+    pub scale: u32,
+    /// average non-zeros per row.
+    pub edge_factor: f64,
+    /// quadrant probabilities; must sum to 1.
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// perturbation of quadrant probabilities per level (standard R-MAT
+    /// noise to avoid exact self-similarity).
+    pub noise: f64,
+}
+
+impl RmatConfig {
+    /// Default Graph500-style skew (a=0.57, b=0.19, c=0.19, d=0.05).
+    pub fn new(scale: u32, edge_factor: f64) -> Self {
+        Self {
+            scale,
+            edge_factor,
+            a: 0.57,
+            b: 0.19,
+            c: 0.19,
+            noise: 0.05,
+        }
+    }
+
+    /// Uniform variant (a=b=c=d): Erdős–Rényi-like, balanced rows.
+    pub fn uniform(scale: u32, edge_factor: f64) -> Self {
+        Self {
+            scale,
+            edge_factor,
+            a: 0.25,
+            b: 0.25,
+            c: 0.25,
+            noise: 0.0,
+        }
+    }
+
+    /// With explicit quadrant probabilities.
+    pub fn with_probs(mut self, a: f64, b: f64, c: f64) -> Self {
+        assert!(a + b + c < 1.0 + 1e-9, "quadrant probs exceed 1");
+        self.a = a;
+        self.b = b;
+        self.c = c;
+        self
+    }
+
+    /// Dimension `2^scale`.
+    pub fn dim(&self) -> usize {
+        1usize << self.scale
+    }
+
+    /// Generate a COO matrix (duplicates merged via canonicalize; values
+    /// uniform in [-1, 1)).
+    pub fn generate(&self, rng: &mut Xoshiro256) -> CooMatrix {
+        let n = self.dim();
+        let edges = (n as f64 * self.edge_factor) as usize;
+        let mut coo = CooMatrix::new(n, n);
+        for _ in 0..edges {
+            let (r, c) = self.one_edge(rng);
+            coo.push(r, c, rng.next_f32() * 2.0 - 1.0);
+        }
+        coo.canonicalize();
+        coo
+    }
+
+    fn one_edge(&self, rng: &mut Xoshiro256) -> (usize, usize) {
+        let (mut a, mut b, mut c) = (self.a, self.b, self.c);
+        let mut r = 0usize;
+        let mut col = 0usize;
+        for level in (0..self.scale).rev() {
+            let d = 1.0 - a - b - c;
+            let x = rng.next_f64();
+            let (dr, dc) = if x < a {
+                (0, 0)
+            } else if x < a + b {
+                (0, 1)
+            } else if x < a + b + c {
+                (1, 0)
+            } else {
+                let _ = d;
+                (1, 1)
+            };
+            r |= dr << level;
+            col |= dc << level;
+            if self.noise > 0.0 {
+                // multiplicative noise, renormalized
+                let na = a * (1.0 - self.noise + 2.0 * self.noise * rng.next_f64());
+                let nb = b * (1.0 - self.noise + 2.0 * self.noise * rng.next_f64());
+                let nc = c * (1.0 - self.noise + 2.0 * self.noise * rng.next_f64());
+                let nd = (1.0 - a - b - c) * (1.0 - self.noise + 2.0 * self.noise * rng.next_f64());
+                let s = na + nb + nc + nd;
+                a = na / s;
+                b = nb / s;
+                c = nc / s;
+            }
+        }
+        (r, col)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CsrMatrix;
+    use crate::util::stats;
+
+    #[test]
+    fn shape_and_rough_nnz() {
+        let mut rng = Xoshiro256::seeded(31);
+        let coo = RmatConfig::new(10, 8.0).generate(&mut rng);
+        assert_eq!(coo.rows, 1024);
+        assert_eq!(coo.cols, 1024);
+        // duplicates merge, so nnz <= edges but should stay in the ballpark
+        let nnz = coo.nnz() as f64;
+        assert!(nnz > 0.7 * 8192.0 && nnz <= 8192.0, "nnz {nnz}");
+    }
+
+    #[test]
+    fn skewed_probs_yield_higher_row_cv_than_uniform() {
+        let mut rng = Xoshiro256::seeded(32);
+        let skewed = RmatConfig::new(11, 8.0).generate(&mut rng);
+        let uniform = RmatConfig::uniform(11, 8.0).generate(&mut rng);
+        let cv_skew = stats::cv(&CsrMatrix::from_coo(&skewed).row_lengths());
+        let cv_unif = stats::cv(&CsrMatrix::from_coo(&uniform).row_lengths());
+        assert!(
+            cv_skew > 1.5 * cv_unif,
+            "skewed cv {cv_skew} vs uniform cv {cv_unif}"
+        );
+    }
+
+    #[test]
+    fn determinism() {
+        let a = RmatConfig::new(8, 4.0).generate(&mut Xoshiro256::seeded(7));
+        let b = RmatConfig::new(8, 4.0).generate(&mut Xoshiro256::seeded(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed 1")]
+    fn with_probs_validates() {
+        RmatConfig::new(4, 2.0).with_probs(0.6, 0.4, 0.2);
+    }
+}

@@ -1,0 +1,275 @@
+//! Synthetic citation-style graph for the E2E GCN training example.
+//!
+//! Cora is not downloadable in this environment (see DESIGN.md
+//! §Substitutions); this generator reproduces the properties the workload
+//! needs: Cora-scale size, power-law-ish degrees capped to the artifact's
+//! ELL width, homophilous community structure, and labels planted by a
+//! random 2-layer GCN so that training has signal to find.
+
+use crate::sparse::{CooMatrix, CsrMatrix, DenseMatrix};
+use crate::util::prng::Xoshiro256;
+
+/// Graph/model dimensions; defaults mirror the `gcn_step` artifact bucket
+/// (`python/compile/aot.py::GCN`).
+#[derive(Clone, Copy, Debug)]
+pub struct GraphConfig {
+    /// true nodes (padded up to `nodes_padded` for the artifact)
+    pub nodes: usize,
+    pub nodes_padded: usize,
+    pub feats: usize,
+    pub classes: usize,
+    /// ELL width budget (max degree + self-loop must fit)
+    pub width: usize,
+    /// number of communities (label homophily driver)
+    pub communities: usize,
+    /// average degree target
+    pub avg_degree: f64,
+    /// fraction of nodes with a training label
+    pub label_frac: f64,
+}
+
+impl Default for GraphConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 2708, // Cora size
+            nodes_padded: 2816,
+            feats: 64,
+            classes: 7,
+            width: 32,
+            communities: 7,
+            avg_degree: 4.0,
+            label_frac: 0.3,
+        }
+    }
+}
+
+/// The generated graph: normalized adjacency in ELL planes + features,
+/// one-hot labels and the train mask, all padded to `nodes_padded`.
+pub struct SyntheticGraph {
+    pub config: GraphConfig,
+    pub csr: CsrMatrix,
+    /// Â in ELL planes (nodes_padded × width)
+    pub a_values: Vec<f32>,
+    pub a_col_idx: Vec<i32>,
+    /// node features (nodes_padded × feats)
+    pub features: Vec<f32>,
+    /// one-hot labels (nodes_padded × classes)
+    pub labels_onehot: Vec<f32>,
+    /// training mask (nodes_padded)
+    pub mask: Vec<f32>,
+    /// integer labels (for accuracy checks)
+    pub labels: Vec<usize>,
+}
+
+impl SyntheticGraph {
+    /// Generate deterministically from a seed.
+    pub fn generate(config: GraphConfig, seed: u64) -> SyntheticGraph {
+        let mut rng = Xoshiro256::seeded(seed);
+        let n = config.nodes;
+        let deg_budget = config.width - 1; // leave room for the self loop
+
+        // --- community-structured edges, degree-capped ---
+        let community: Vec<usize> = (0..n).map(|_| rng.range(0, config.communities)).collect();
+        let mut degree = vec![0usize; n];
+        let mut coo = CooMatrix::new(n, n);
+        let edges_target = (n as f64 * config.avg_degree / 2.0) as usize;
+        let mut added = 0usize;
+        let mut attempts = 0usize;
+        while added < edges_target && attempts < edges_target * 20 {
+            attempts += 1;
+            let u = rng.range(0, n);
+            // 80% intra-community edges (homophily)
+            let v = if rng.chance(0.8) {
+                // rejection-sample a same-community partner
+                let mut v = rng.range(0, n);
+                let mut tries = 0;
+                while community[v] != community[u] && tries < 16 {
+                    v = rng.range(0, n);
+                    tries += 1;
+                }
+                v
+            } else {
+                rng.range(0, n)
+            };
+            if u == v || degree[u] >= deg_budget || degree[v] >= deg_budget {
+                continue;
+            }
+            coo.push(u, v, 1.0);
+            coo.push(v, u, 1.0);
+            degree[u] += 1;
+            degree[v] += 1;
+            added += 1;
+        }
+        let csr = CsrMatrix::from_coo(&coo).gcn_normalized();
+
+        // --- ELL planes padded to (nodes_padded, width) ---
+        let np = config.nodes_padded;
+        let w = config.width;
+        let mut a_values = vec![0f32; np * w];
+        let mut a_col_idx = vec![0i32; np * w];
+        for r in 0..csr.rows {
+            let (cols, vals) = csr.row(r);
+            assert!(cols.len() <= w, "row {r} degree {} exceeds width {w}", cols.len());
+            for k in 0..cols.len() {
+                a_values[r * w + k] = vals[k];
+                a_col_idx[r * w + k] = cols[k] as i32;
+            }
+        }
+
+        // --- features: community signal + noise ---
+        let mut features = vec![0f32; np * config.feats];
+        for v in 0..n {
+            for f in 0..config.feats {
+                let signal = if f % config.communities == community[v] {
+                    1.0
+                } else {
+                    0.0
+                };
+                features[v * config.feats + f] =
+                    signal + 0.3 * (rng.next_f32() * 2.0 - 1.0);
+            }
+        }
+
+        // --- plant labels with a random 2-layer GCN over Â and features ---
+        let labels = plant_labels(&csr, &features, np, config, &mut rng);
+        let mut labels_onehot = vec![0f32; np * config.classes];
+        for v in 0..n {
+            labels_onehot[v * config.classes + labels[v]] = 1.0;
+        }
+        let mut mask = vec![0f32; np];
+        for m in mask.iter_mut().take(n) {
+            if rng.chance(config.label_frac) {
+                *m = 1.0;
+            }
+        }
+
+        SyntheticGraph {
+            config,
+            csr,
+            a_values,
+            a_col_idx,
+            features,
+            labels_onehot,
+            mask,
+            labels,
+        }
+    }
+}
+
+/// Run a small random GCN forward in Rust to derive labels.
+fn plant_labels(
+    csr: &CsrMatrix,
+    features: &[f32],
+    np: usize,
+    config: GraphConfig,
+    rng: &mut Xoshiro256,
+) -> Vec<usize> {
+    use crate::kernels::sr_rs;
+    use crate::util::threadpool::ThreadPool;
+    let n = config.nodes;
+    let f = config.feats;
+    let hidden = 16;
+    let pool = ThreadPool::default_parallel();
+    let x = DenseMatrix::from_vec(np, f, features.to_vec());
+    // Â·X  (csr is n×n; take the first n rows of x)
+    let xn = DenseMatrix::from_vec(n, f, features[..n * f].to_vec());
+    let mut agg = DenseMatrix::zeros(n, f);
+    sr_rs::spmm(csr, &xn, &mut agg, &pool);
+    // random W1 (f×hidden), relu, Â·H, random W2 (hidden×classes)
+    let mut w1 = vec![0f32; f * hidden];
+    rng.fill_uniform_f32(&mut w1, 0.5);
+    let mut h = DenseMatrix::zeros(n, hidden);
+    for r in 0..n {
+        for j in 0..hidden {
+            let mut acc = 0.0;
+            for k in 0..f {
+                acc += agg.at(r, k) * w1[k * hidden + j];
+            }
+            *h.at_mut(r, j) = acc.max(0.0);
+        }
+    }
+    let mut agg2 = DenseMatrix::zeros(n, hidden);
+    sr_rs::spmm(csr, &h, &mut agg2, &pool);
+    let mut w2 = vec![0f32; hidden * config.classes];
+    rng.fill_uniform_f32(&mut w2, 0.5);
+    let mut labels = vec![0usize; n];
+    for r in 0..n {
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for c in 0..config.classes {
+            let mut acc = 0.0;
+            for k in 0..hidden {
+                acc += agg2.at(r, k) * w2[k * config.classes + c];
+            }
+            if acc > best.1 {
+                best = (c, acc);
+            }
+        }
+        labels[r] = best.0;
+    }
+    let _ = x;
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_config() -> GraphConfig {
+        GraphConfig {
+            nodes: 300,
+            nodes_padded: 320,
+            feats: 16,
+            classes: 4,
+            width: 16,
+            communities: 4,
+            avg_degree: 3.0,
+            label_frac: 0.4,
+        }
+    }
+
+    #[test]
+    fn generates_valid_padded_planes() {
+        let g = SyntheticGraph::generate(small_config(), 7);
+        let c = g.config;
+        assert_eq!(g.a_values.len(), c.nodes_padded * c.width);
+        assert_eq!(g.features.len(), c.nodes_padded * c.feats);
+        assert_eq!(g.labels_onehot.len(), c.nodes_padded * c.classes);
+        // padding rows are zero
+        assert!(g.a_values[c.nodes * c.width..].iter().all(|&v| v == 0.0));
+        assert!(g.mask[c.nodes..].iter().all(|&m| m == 0.0));
+        // degrees respect the width budget (incl. self loop)
+        for r in 0..c.nodes {
+            assert!(g.csr.row_nnz(r) <= c.width);
+            assert!(g.csr.row_nnz(r) >= 1, "row {r} lost its self loop");
+        }
+    }
+
+    #[test]
+    fn labels_cover_multiple_classes_and_mask_nonempty() {
+        let g = SyntheticGraph::generate(small_config(), 8);
+        let distinct: std::collections::HashSet<_> = g.labels.iter().collect();
+        assert!(distinct.len() >= 2, "degenerate labels");
+        let masked = g.mask.iter().filter(|&&m| m > 0.0).count();
+        assert!(masked > 50, "mask too small: {masked}");
+    }
+
+    #[test]
+    fn determinism() {
+        let a = SyntheticGraph::generate(small_config(), 9);
+        let b = SyntheticGraph::generate(small_config(), 9);
+        assert_eq!(a.a_values, b.a_values);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn adjacency_is_symmetric_normalized() {
+        let g = SyntheticGraph::generate(small_config(), 10);
+        let d = g.csr.to_dense();
+        let n = g.config.nodes;
+        for r in 0..n {
+            for c in 0..n {
+                assert!((d[r * n + c] - d[c * n + r]).abs() < 1e-5);
+            }
+        }
+    }
+}

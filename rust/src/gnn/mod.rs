@@ -1,0 +1,13 @@
+//! GNN training driver — the end-to-end workload (paper's headline
+//! application: GNN training through these kernels).
+//!
+//! [`graph`] synthesizes a Cora-scale citation-style graph with a planted
+//! 2-layer-GCN labeling (so the loss curve is meaningfully learnable);
+//! [`trainer`] drives the AOT `gcn_step` artifact from Rust — weights
+//! live in Rust between steps, Python never runs.
+
+pub mod graph;
+pub mod trainer;
+
+pub use graph::{GraphConfig, SyntheticGraph};
+pub use trainer::{GcnTrainer, TrainReport};

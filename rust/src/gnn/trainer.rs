@@ -1,0 +1,157 @@
+//! GCN trainer: drive the AOT `gcn_step` artifact from Rust.
+//!
+//! Weights are Rust-owned tensors threaded through the step artifact;
+//! the loss comes back as the third output. This is the end-to-end proof
+//! that all three layers compose: Pallas kernel (L1) inside the JAX GCN
+//! (L2) executed by the Rust coordinator (L3).
+
+use crate::gnn::graph::SyntheticGraph;
+use crate::runtime::tensor::Tensor;
+use crate::runtime::Engine;
+use crate::util::prng::Xoshiro256;
+use anyhow::{anyhow, Result};
+use std::time::Instant;
+
+/// Training run report.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub steps: usize,
+    pub seconds: f64,
+    pub train_accuracy: f64,
+}
+
+/// Trainer over a PJRT engine and a synthetic graph.
+pub struct GcnTrainer<'e> {
+    engine: &'e Engine,
+    graph: &'e SyntheticGraph,
+    w1: Tensor,
+    w2: Tensor,
+    hidden: usize,
+}
+
+impl<'e> GcnTrainer<'e> {
+    /// Initialize weights (Glorot-ish) to match the `gcn_step` artifact.
+    pub fn new(engine: &'e Engine, graph: &'e SyntheticGraph, seed: u64) -> Result<Self> {
+        let spec = engine
+            .manifest
+            .by_name("gcn_step")
+            .ok_or_else(|| anyhow!("gcn_step artifact missing — run `make artifacts`"))?;
+        let feats = spec.param("feats").ok_or_else(|| anyhow!("missing feats"))?;
+        let hidden = spec.param("hidden").ok_or_else(|| anyhow!("missing hidden"))?;
+        let classes = spec.param("classes").ok_or_else(|| anyhow!("missing classes"))?;
+        if feats != graph.config.feats || classes != graph.config.classes {
+            return Err(anyhow!(
+                "graph dims ({}, {}) do not match artifact ({feats}, {classes})",
+                graph.config.feats,
+                graph.config.classes
+            ));
+        }
+        let mut rng = Xoshiro256::seeded(seed);
+        let s1 = (2.0 / (feats + hidden) as f32).sqrt();
+        let s2 = (2.0 / (hidden + classes) as f32).sqrt();
+        let mut w1 = vec![0f32; feats * hidden];
+        let mut w2 = vec![0f32; hidden * classes];
+        rng.fill_uniform_f32(&mut w1, s1);
+        rng.fill_uniform_f32(&mut w2, s2);
+        Ok(Self {
+            engine,
+            graph,
+            w1: Tensor::f32(vec![feats, hidden], w1),
+            w2: Tensor::f32(vec![hidden, classes], w2),
+            hidden,
+        })
+    }
+
+    fn graph_inputs(&self) -> Vec<Tensor> {
+        let c = &self.graph.config;
+        vec![
+            Tensor::f32(vec![c.nodes_padded, c.width], self.graph.a_values.clone()),
+            Tensor::i32(
+                vec![c.nodes_padded, c.width],
+                self.graph.a_col_idx.clone(),
+            ),
+            Tensor::f32(vec![c.nodes_padded, c.feats], self.graph.features.clone()),
+        ]
+    }
+
+    /// Run one SGD step; returns the loss.
+    pub fn step(&mut self) -> Result<f32> {
+        let c = &self.graph.config;
+        let mut inputs = vec![self.w1.clone(), self.w2.clone()];
+        inputs.extend(self.graph_inputs());
+        inputs.push(Tensor::f32(
+            vec![c.nodes_padded, c.classes],
+            self.graph.labels_onehot.clone(),
+        ));
+        inputs.push(Tensor::f32(vec![c.nodes_padded], self.graph.mask.clone()));
+        let out = self.engine.run("gcn_step", &inputs)?;
+        if out.len() != 3 {
+            return Err(anyhow!("gcn_step returned {} outputs", out.len()));
+        }
+        let loss = out[2].as_f32()?[0];
+        self.w1 = out[0].clone();
+        self.w2 = out[1].clone();
+        Ok(loss)
+    }
+
+    /// Inference pass via `gcn_fwd`; returns logits (nodes_padded × C).
+    pub fn forward(&self) -> Result<Vec<f32>> {
+        let mut inputs = vec![self.w1.clone(), self.w2.clone()];
+        inputs.extend(self.graph_inputs());
+        // gcn_fwd takes (w1, w2, a_vals, a_cols, feats)
+        let out = self.engine.run("gcn_fwd", &inputs[..5])?;
+        Ok(out[0].as_f32()?.to_vec())
+    }
+
+    /// Masked train accuracy from current weights.
+    pub fn train_accuracy(&self) -> Result<f64> {
+        let logits = self.forward()?;
+        let c = self.graph.config.classes;
+        let mut hit = 0usize;
+        let mut total = 0usize;
+        for v in 0..self.graph.config.nodes {
+            if self.graph.mask[v] > 0.0 {
+                let row = &logits[v * c..(v + 1) * c];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                total += 1;
+                if pred == self.graph.labels[v] {
+                    hit += 1;
+                }
+            }
+        }
+        Ok(hit as f64 / total.max(1) as f64)
+    }
+
+    /// Train for `steps` steps, logging every `log_every`.
+    pub fn train(&mut self, steps: usize, log_every: usize) -> Result<TrainReport> {
+        let start = Instant::now();
+        let mut losses = Vec::with_capacity(steps);
+        for s in 0..steps {
+            let loss = self.step()?;
+            losses.push(loss);
+            if log_every > 0 && (s % log_every == 0 || s + 1 == steps) {
+                eprintln!("step {s:4}  loss {loss:.4}");
+            }
+        }
+        let train_accuracy = self.train_accuracy()?;
+        Ok(TrainReport {
+            steps,
+            seconds: start.elapsed().as_secs_f64(),
+            losses,
+            train_accuracy,
+        })
+    }
+
+    /// Hidden width (diagnostics).
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+}
+
+// Tests requiring artifacts live in rust/tests/integration_gcn.rs.

@@ -1,0 +1,76 @@
+//! Dense reference SpMM — the correctness oracle for every other kernel.
+
+use crate::sparse::{CsrMatrix, DenseMatrix};
+
+/// Straightforward `Y = A · X` by row-wise gather; no threading, no tricks.
+/// O(nnz · N). Every other kernel is tested against this.
+pub fn spmm_reference(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix) {
+    assert_eq!(a.cols, x.rows, "inner dimension mismatch");
+    assert_eq!(y.rows, a.rows, "output rows mismatch");
+    assert_eq!(y.cols, x.cols, "output cols mismatch");
+    let n = x.cols;
+    y.data.fill(0.0);
+    for r in 0..a.rows {
+        let (cols, vals) = a.row(r);
+        let out = &mut y.data[r * n..(r + 1) * n];
+        for k in 0..cols.len() {
+            let xrow = x.row(cols[k] as usize);
+            let v = vals[k];
+            for j in 0..n {
+                out[j] += v * xrow[j];
+            }
+        }
+    }
+}
+
+/// SpMV convenience wrapper over the reference (N = 1).
+pub fn spmv_reference(a: &CsrMatrix, x: &[f32], y: &mut [f32]) {
+    assert_eq!(a.cols, x.len());
+    assert_eq!(a.rows, y.len());
+    let xm = DenseMatrix::from_vec(x.len(), 1, x.to_vec());
+    let mut ym = DenseMatrix::zeros(y.len(), 1);
+    spmm_reference(a, &xm, &mut ym);
+    y.copy_from_slice(&ym.data);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+
+    #[test]
+    fn known_product() {
+        // A = [[1, 2], [0, 3]], X = [[1, 10], [2, 20]]
+        let mut coo = CooMatrix::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, 2.0);
+        coo.push(1, 1, 3.0);
+        let a = CsrMatrix::from_coo(&coo);
+        let x = DenseMatrix::from_vec(2, 2, vec![1.0, 10.0, 2.0, 20.0]);
+        let mut y = DenseMatrix::zeros(2, 2);
+        spmm_reference(&a, &x, &mut y);
+        assert_eq!(y.data, vec![5.0, 50.0, 6.0, 60.0]);
+    }
+
+    #[test]
+    fn spmv_matches_spmm_column() {
+        let mut coo = CooMatrix::new(3, 3);
+        coo.push(0, 2, 1.5);
+        coo.push(2, 0, -2.0);
+        coo.push(2, 2, 4.0);
+        let a = CsrMatrix::from_coo(&coo);
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 3];
+        spmv_reference(&a, &x, &mut y);
+        assert_eq!(y, [4.5, 0.0, 10.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimension")]
+    fn shape_check() {
+        let a = CsrMatrix::from_coo(&CooMatrix::new(2, 3));
+        let x = DenseMatrix::zeros(2, 2);
+        let mut y = DenseMatrix::zeros(2, 2);
+        spmm_reference(&a, &x, &mut y);
+    }
+}

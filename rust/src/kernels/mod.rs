@@ -1,0 +1,137 @@
+//! Native CPU implementations of the paper's kernel designs.
+//!
+//! These serve three purposes:
+//!
+//! 1. **Correctness cross-check** against the Pallas kernels and the dense
+//!    reference (same algorithms, independent implementation);
+//! 2. **Wallclock benchmarks** on this machine (`benches/native_kernels`);
+//! 3. **Faithful algorithm ports** — `pr_wb` implements the paper's VSR
+//!    segmented-scan network literally over 32-lane arrays, so the
+//!    shuffle-network logic itself is under test, not just its result.
+//!
+//! The 2×2 design space (paper Fig. 2):
+//!
+//! |                    | row-split (RS)       | workload-balanced (WB)  |
+//! |--------------------|----------------------|--------------------------|
+//! | sequential (SR)    | [`sr_rs`] (+CSC)     | [`sr_wb`]                |
+//! | parallel-red. (PR) | [`pr_rs`] (+VDL)     | [`pr_wb`] = VSR (+VDL)   |
+//!
+//! All kernels compute `Y = A · X` for `A: M×K` sparse, `X: K×N` dense
+//! row-major, `Y: M×N` dense row-major. SpMV is the `N = 1` case.
+
+pub mod baseline;
+pub mod dense;
+pub mod pr_rs;
+pub mod pr_wb;
+pub mod sr_rs;
+pub mod sr_wb;
+
+use crate::sparse::{CsrMatrix, DenseMatrix, SegmentedMatrix};
+use crate::util::threadpool::ThreadPool;
+
+/// Lane count of the simulated SIMD bundle (a CUDA warp; maps to a VPU
+/// sublane group on TPU). The paper's kernels are written against 32.
+pub const WARP: usize = 32;
+
+/// The four kernel designs of the paper's 2×2 space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Sequential reduction, row split (CSR-scalar / cuSPARSE-default-like).
+    SrRs,
+    /// Sequential reduction over fixed-nnz segments (merge-path-like).
+    SrWb,
+    /// Parallel reduction, row split (CSR-vector).
+    PrRs,
+    /// Parallel reduction, workload-balanced — the paper's VSR.
+    PrWb,
+}
+
+impl KernelKind {
+    /// All four designs in a fixed order (bench iteration order).
+    pub const ALL: [KernelKind; 4] = [
+        KernelKind::SrRs,
+        KernelKind::SrWb,
+        KernelKind::PrRs,
+        KernelKind::PrWb,
+    ];
+
+    /// Short label used in bench output and the manifest.
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelKind::SrRs => "sr_rs",
+            KernelKind::SrWb => "sr_wb",
+            KernelKind::PrRs => "pr_rs",
+            KernelKind::PrWb => "pr_wb",
+        }
+    }
+
+    /// Parse from a label.
+    pub fn from_label(s: &str) -> Option<KernelKind> {
+        Self::ALL.iter().copied().find(|k| k.label() == s)
+    }
+
+    /// Whether this design uses workload-balancing (nnz-split).
+    pub fn is_balanced(&self) -> bool {
+        matches!(self, KernelKind::SrWb | KernelKind::PrWb)
+    }
+
+    /// Whether this design uses parallel reduction.
+    pub fn is_parallel_reduction(&self) -> bool {
+        matches!(self, KernelKind::PrRs | KernelKind::PrWb)
+    }
+}
+
+/// Pre-converted operand bundle so format conversion cost is paid once,
+/// outside the benchmarked region (mirrors how the GPU kernels take
+/// preprocessed buffers).
+pub struct PreparedMatrix {
+    pub csr: CsrMatrix,
+    pub segments: SegmentedMatrix,
+}
+
+impl PreparedMatrix {
+    /// Prepare with the standard segment length (= [`WARP`]).
+    pub fn new(csr: CsrMatrix) -> Self {
+        let segments = SegmentedMatrix::from_csr(&csr, WARP);
+        Self { csr, segments }
+    }
+}
+
+/// Dispatch an SpMM through one of the four designs.
+pub fn run_kernel(
+    kind: KernelKind,
+    a: &PreparedMatrix,
+    x: &DenseMatrix,
+    y: &mut DenseMatrix,
+    pool: &ThreadPool,
+) {
+    match kind {
+        KernelKind::SrRs => sr_rs::spmm(&a.csr, x, y, pool),
+        KernelKind::SrWb => sr_wb::spmm(&a.segments, x, y, pool),
+        KernelKind::PrRs => pr_rs::spmm(&a.csr, x, y, pool),
+        KernelKind::PrWb => pr_wb::spmm(&a.segments, x, y, pool),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_roundtrip() {
+        for k in KernelKind::ALL {
+            assert_eq!(KernelKind::from_label(k.label()), Some(k));
+        }
+        assert_eq!(KernelKind::from_label("nope"), None);
+    }
+
+    #[test]
+    fn design_space_flags() {
+        assert!(!KernelKind::SrRs.is_balanced());
+        assert!(KernelKind::SrWb.is_balanced());
+        assert!(KernelKind::PrWb.is_balanced());
+        assert!(!KernelKind::SrRs.is_parallel_reduction());
+        assert!(KernelKind::PrRs.is_parallel_reduction());
+        assert!(KernelKind::PrWb.is_parallel_reduction());
+    }
+}

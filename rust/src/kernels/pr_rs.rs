@@ -1,0 +1,237 @@
+//! PR-RS — parallel reduction, row split (CSR-Vector, Bell & Garland),
+//! plus the VDL (vector-type dense-row loading) optimization of §2.1.2.
+//!
+//! A SIMD bundle of `WARP` lanes owns one row: lanes multiply value×dense
+//! element in parallel, then a log₂(WARP) merge tree reduces the partial
+//! products. The merge tree is implemented literally over lane arrays so
+//! the algorithm (not just its result) matches the CUDA `__shfl_down`
+//! network.
+//!
+//! For SpMM the naive approach is N independent SpMV passes
+//! ([`spmm_n_spmv`], the paper's strawman). **VDL** instead makes each lane
+//! load the `(1, N)` dense-row fragment for its non-zero — one float2/4
+//! vector load in CUDA — and keep N partial sums ([`spmm`]); the paper
+//! applies it for N ≤ 4.
+
+use super::WARP;
+use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::util::threadpool::ThreadPool;
+
+/// Rows per parallel work item.
+const ROW_CHUNK: usize = 64;
+
+/// Merge-tree reduction over one lane array (the `__shfl_down` network).
+/// Returns the total in lane 0's slot.
+#[inline]
+fn tree_reduce(lanes: &mut [f32; WARP]) -> f32 {
+    let mut d = WARP / 2;
+    while d > 0 {
+        for l in 0..d {
+            lanes[l] += lanes[l + d];
+        }
+        d /= 2;
+    }
+    lanes[0]
+}
+
+/// PR-RS SpMV: one lane bundle per row, merge-tree reduction per window.
+pub fn spmv(a: &CsrMatrix, x: &[f32], y: &mut [f32], pool: &ThreadPool) {
+    assert_eq!(a.cols, x.len());
+    assert_eq!(a.rows, y.len());
+    let pool = &pool.for_work(a.nnz());
+    pool.for_each_row_chunk(y, 1, ROW_CHUNK * 4, |first_row, out| {
+        let mut lanes = [0f32; WARP];
+        for (i, o) in out.iter_mut().enumerate() {
+            let r = first_row + i;
+            if r >= a.rows {
+                break;
+            }
+            let (cols, vals) = a.row(r);
+            let mut acc = 0.0f32;
+            let mut k = 0;
+            while k < cols.len() {
+                let w = (cols.len() - k).min(WARP);
+                // parallel elementwise multiply (lanes beyond w idle — the
+                // waste the paper's Fig. 2(d) highlights for short rows)
+                for l in 0..w {
+                    lanes[l] = vals[k + l] * x[cols[k + l] as usize];
+                }
+                for l in w..WARP {
+                    lanes[l] = 0.0;
+                }
+                acc += tree_reduce(&mut lanes);
+                k += w;
+            }
+            *o = acc;
+        }
+    });
+}
+
+/// PR-RS SpMM with **VDL**: each lane loads the `(1, N)` dense-row fragment
+/// of its non-zero with one vector operation and keeps `N` partial sums.
+/// Correct for any N; the paper recommends it only for N ≤ 4 (beyond that
+/// the lane-private partials blow up — exactly Insight 1).
+pub fn spmm(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &ThreadPool) {
+    assert_eq!(a.cols, x.rows, "inner dimension mismatch");
+    assert_eq!((y.rows, y.cols), (a.rows, x.cols), "output shape mismatch");
+    let n = x.cols;
+    if n == 0 {
+        return;
+    }
+    let pool = &pool.for_work(a.nnz() * n);
+    pool.for_each_row_chunk(&mut y.data, n, ROW_CHUNK, |first_row, rows| {
+        rows.fill(0.0);
+        let nrows = rows.len() / n;
+        // lane-private partial sums: lanes × N
+        let mut lanes = vec![0f32; WARP * n];
+        for i in 0..nrows {
+            let r = first_row + i;
+            if r >= a.rows {
+                break;
+            }
+            let (cols, vals) = a.row(r);
+            let out = &mut rows[i * n..(i + 1) * n];
+            if cols.is_empty() {
+                out.fill(0.0);
+                continue;
+            }
+            // §Perf: only the lanes a row actually occupies participate —
+            // short rows zero and merge a power-of-two prefix instead of
+            // the full warp (the idle lanes hold zeros on the GPU too;
+            // skipping them changes nothing numerically).
+            let active = cols.len().min(WARP).next_power_of_two();
+            lanes[..active * n].fill(0.0);
+            let mut k = 0;
+            while k < cols.len() {
+                let w = (cols.len() - k).min(WARP);
+                for l in 0..w {
+                    // VDL: one contiguous (1, N) load per lane
+                    let xrow = x.row(cols[k + l] as usize);
+                    let v = vals[k + l];
+                    let lane = &mut lanes[l * n..(l + 1) * n];
+                    for j in 0..n {
+                        lane[j] += v * xrow[j];
+                    }
+                }
+                k += w;
+            }
+            // merge tree across the active lanes, elementwise over N
+            let mut d = active / 2;
+            while d > 0 {
+                for l in 0..d {
+                    let (dst, src) = lanes.split_at_mut((l + d) * n);
+                    let dst = &mut dst[l * n..l * n + n];
+                    let src = &src[..n];
+                    for j in 0..n {
+                        dst[j] += src[j];
+                    }
+                }
+                d /= 2;
+            }
+            out.copy_from_slice(&lanes[..n]);
+        }
+    });
+}
+
+/// The paper's strawman for PR SpMM: N independent SpMV passes, one per
+/// dense column (§2.1.2 "two-SpMV solution"). Used as the VDL ablation
+/// baseline.
+pub fn spmm_n_spmv(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &ThreadPool) {
+    assert_eq!(a.cols, x.rows, "inner dimension mismatch");
+    assert_eq!((y.rows, y.cols), (a.rows, x.cols), "output shape mismatch");
+    let n = x.cols;
+    let mut xcol = vec![0f32; x.rows];
+    let mut ycol = vec![0f32; a.rows];
+    for j in 0..n {
+        for r in 0..x.rows {
+            xcol[r] = x.at(r, j);
+        }
+        spmv(a, &xcol, &mut ycol, pool);
+        for r in 0..a.rows {
+            *y.at_mut(r, j) = ycol[r];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense::{spmm_reference, spmv_reference};
+    use crate::sparse::CooMatrix;
+    use crate::util::proptest::{assert_close, run_prop};
+
+    #[test]
+    fn tree_reduce_sums_lanes() {
+        let mut lanes = [0f32; WARP];
+        for (i, l) in lanes.iter_mut().enumerate() {
+            *l = i as f32;
+        }
+        let total = tree_reduce(&mut lanes);
+        assert_eq!(total, (0..WARP as i32).sum::<i32>() as f32);
+    }
+
+    #[test]
+    fn spmv_matches_reference() {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(301);
+        // include rows shorter and longer than WARP
+        let mut coo = CooMatrix::random_uniform(100, 120, 0.05, &mut rng);
+        for c in 0..100 {
+            coo.push(3, c, 0.01 * c as f32); // 100-nnz row: multiple windows
+        }
+        let a = CsrMatrix::from_coo(&coo);
+        let x: Vec<f32> = (0..120).map(|i| (i as f32).sin()).collect();
+        let mut want = vec![0.0; 100];
+        spmv_reference(&a, &x, &mut want);
+        let mut got = vec![0.0; 100];
+        spmv(&a, &x, &mut got, &ThreadPool::new(4));
+        assert_close(&got, &want, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn vdl_spmm_matches_reference_small_and_large_n() {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(302);
+        let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(64, 48, 0.15, &mut rng));
+        for n in [1usize, 2, 4, 16, 128] {
+            let x = DenseMatrix::random(48, n, 1.0, &mut rng);
+            let mut want = DenseMatrix::zeros(64, n);
+            spmm_reference(&a, &x, &mut want);
+            let mut got = DenseMatrix::zeros(64, n);
+            spmm(&a, &x, &mut got, &ThreadPool::new(3));
+            assert_close(&got.data, &want.data, 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn n_spmv_strawman_matches_vdl() {
+        run_prop("n-spmv equals vdl", 20, |g| {
+            let rows = g.dim();
+            let cols = g.dim();
+            let n = *g.choose(&[1usize, 2, 4]);
+            let coo = CooMatrix::random_uniform(rows, cols, 0.3, g.rng());
+            let a = CsrMatrix::from_coo(&coo);
+            let x = DenseMatrix::from_vec(cols, n, g.vec_f32(cols * n));
+            let mut via_vdl = DenseMatrix::zeros(rows, n);
+            spmm(&a, &x, &mut via_vdl, &ThreadPool::serial());
+            let mut via_nspvm = DenseMatrix::zeros(rows, n);
+            spmm_n_spmv(&a, &x, &mut via_nspvm, &ThreadPool::serial());
+            assert_close(&via_nspvm.data, &via_vdl.data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn property_vs_reference() {
+        run_prop("pr_rs spmm vs reference", 25, |g| {
+            let rows = g.dim();
+            let cols = g.dim();
+            let n = *g.choose(&[1usize, 2, 7, 32]);
+            let coo = CooMatrix::random_uniform(rows, cols, 0.25, g.rng());
+            let a = CsrMatrix::from_coo(&coo);
+            let x = DenseMatrix::from_vec(cols, n, g.vec_f32(cols * n));
+            let mut want = DenseMatrix::zeros(rows, n);
+            spmm_reference(&a, &x, &mut want);
+            let mut got = DenseMatrix::zeros(rows, n);
+            spmm(&a, &x, &mut got, &ThreadPool::new(2));
+            assert_close(&got.data, &want.data, 1e-4, 1e-4)
+        });
+    }
+}

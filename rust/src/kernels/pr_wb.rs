@@ -1,0 +1,301 @@
+//! PR-WB — the paper's **VSR** (vectorized segment reduction), §2.1.1.
+//!
+//! The combination of workload-balancing and parallel-reduction: each lane
+//! bundle processes a fixed-size segment of the non-zero stream, and since
+//! a segment may span row boundaries, the merge tree is replaced by a
+//! *segmented* scan network: the reduction "adds if the row indices of the
+//! two elements match". After the scan, each lane compares its row index
+//! with its neighbor to detect segment boundaries and dumps its result.
+//!
+//! This file ports the SIMD-shuffle network literally: `scan` runs the
+//! log-step shifted adds over 32-lane arrays with a double buffer
+//! (simultaneous shuffle semantics), and the dump rule is the paper's
+//! neighbor comparison. Tests pin the network against a scalar
+//! segmented-sum oracle, independent of the SpMM result tests.
+
+use super::WARP;
+use crate::kernels::sr_wb::SharedRows;
+use crate::sparse::{DenseMatrix, SegmentedMatrix};
+use crate::util::threadpool::ThreadPool;
+
+/// One step of the paper's segmented-scan network over a window:
+/// suffix-direction inclusive scan where lane `l` accumulates lane `l+d`
+/// iff they belong to the same row. After all log₂(WARP) steps, the lane at
+/// each row-run *start* holds that run's total.
+///
+/// `vals` is `WARP × n` (lane-major); `rows` is the per-lane row index.
+#[inline]
+fn segmented_scan(vals: &mut [f32], rows: &[u32; WARP], n: usize, scratch: &mut [f32]) {
+    let mut d = 1;
+    while d < WARP {
+        scratch[..WARP * n].copy_from_slice(&vals[..WARP * n]);
+        for l in 0..WARP - d {
+            if rows[l] == rows[l + d] {
+                let src = &scratch[(l + d) * n..(l + d + 1) * n];
+                let dst = &mut vals[l * n..(l + 1) * n];
+                for j in 0..n {
+                    dst[j] += src[j];
+                }
+            }
+        }
+        d <<= 1;
+    }
+}
+
+/// Dump rule: lane `l` is a row-run start iff `l == 0` or
+/// `rows[l-1] != rows[l]`. Returns the dumping lanes.
+#[inline]
+fn run_starts(rows: &[u32; WARP]) -> impl Iterator<Item = usize> + '_ {
+    (0..WARP).filter(move |&l| l == 0 || rows[l - 1] != rows[l])
+}
+
+/// PR-WB (VSR) SpMM over the segmented format. Supports any N; the paper
+/// pairs it with VDL-style `(1, N)` lane loads for N ≤ 4.
+pub fn spmm(a: &SegmentedMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &ThreadPool) {
+    assert_eq!(a.cols, x.rows, "inner dimension mismatch");
+    assert_eq!((y.rows, y.cols), (a.rows, x.cols), "output shape mismatch");
+    assert_eq!(a.seg_len % WARP, 0, "segment length must be a multiple of WARP");
+    let n = x.cols;
+    if n == 0 {
+        return;
+    }
+    y.data.fill(0.0);
+
+    let pool = &pool.for_work(a.nnz * n);
+    let workers = pool.workers().min(a.num_segments).max(1);
+    let per = a.num_segments.div_ceil(workers);
+    let shared = SharedRows::new(&mut y.data, n);
+
+    // Each worker owns contiguous segments; rows whose first nnz lies in
+    // the worker's range are written directly (exclusive), the worker's
+    // first row partial is carried to a sequential fix-up (same ownership
+    // scheme as sr_wb, see there).
+    let carries: Vec<(usize, Vec<f32>)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let shared = &shared;
+            let seg_lo = w * per;
+            let seg_hi = ((w + 1) * per).min(a.num_segments);
+            handles.push(scope.spawn(move || vsr_worker(a, x, shared, seg_lo, seg_hi)));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+
+    for (row, partial) in carries {
+        let out = &mut y.data[row * n..(row + 1) * n];
+        for j in 0..n {
+            out[j] += partial[j];
+        }
+    }
+}
+
+fn vsr_worker(
+    a: &SegmentedMatrix,
+    x: &DenseMatrix,
+    y: &SharedRows,
+    seg_lo: usize,
+    seg_hi: usize,
+) -> Vec<(usize, Vec<f32>)> {
+    let n = x.cols;
+    if seg_lo >= seg_hi {
+        return Vec::new();
+    }
+    let lo = seg_lo * a.seg_len;
+    let hi = seg_hi * a.seg_len;
+    let first_row = a.row_idx[lo] as usize;
+    let mut first_carry = vec![0f32; n];
+
+    let mut lane_vals = vec![0f32; WARP * n];
+    let mut scratch = vec![0f32; WARP * n];
+    let mut lane_rows = [0u32; WARP];
+
+    let mut win = lo;
+    while win < hi {
+        // 1. parallel load + multiply: lane l handles element win+l.
+        //    VDL: each lane pulls the contiguous (1, N) fragment of X.
+        for l in 0..WARP {
+            let i = win + l;
+            lane_rows[l] = a.row_idx[i];
+            let v = a.values[i];
+            let lane = &mut lane_vals[l * n..(l + 1) * n];
+            if v != 0.0 {
+                let xrow = x.row(a.col_idx[i] as usize);
+                for j in 0..n {
+                    lane[j] = v * xrow[j];
+                }
+            } else {
+                lane.fill(0.0);
+            }
+        }
+        // 2. the VSR segmented-scan network
+        segmented_scan(&mut lane_vals, &lane_rows, n, &mut scratch);
+        // 3. dump at row-run starts
+        for l in run_starts(&lane_rows) {
+            let row = lane_rows[l] as usize;
+            let lane = &lane_vals[l * n..(l + 1) * n];
+            if row == first_row {
+                // possibly shared with the previous worker → carry
+                for j in 0..n {
+                    first_carry[j] += lane[j];
+                }
+            } else {
+                // first nnz of `row` lies in this worker's range → exclusive
+                // SAFETY: see SharedRows contract.
+                let out = unsafe { y.row_mut(row) };
+                for j in 0..n {
+                    out[j] += lane[j];
+                }
+            }
+        }
+        win += WARP;
+    }
+    vec![(first_row, first_carry)]
+}
+
+/// PR-WB (VSR) SpMV — the headline §2.1.1 kernel (N = 1).
+pub fn spmv(a: &SegmentedMatrix, x: &[f32], y: &mut [f32], pool: &ThreadPool) {
+    assert_eq!(a.cols, x.len());
+    assert_eq!(a.rows, y.len());
+    let xm = DenseMatrix::from_vec(x.len(), 1, x.to_vec());
+    let mut ym = DenseMatrix::zeros(y.len(), 1);
+    spmm(a, &xm, &mut ym, pool);
+    y.copy_from_slice(&ym.data);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense::spmm_reference;
+    use crate::sparse::{CooMatrix, CsrMatrix};
+    use crate::util::proptest::{assert_close, run_prop};
+
+    /// Scalar segmented-sum oracle for the scan network.
+    fn oracle_segment_sums(vals: &[f32; WARP], rows: &[u32; WARP]) -> Vec<(u32, f32)> {
+        let mut out: Vec<(u32, f32)> = Vec::new();
+        for l in 0..WARP {
+            match out.last_mut() {
+                Some((r, acc)) if *r == rows[l] => *acc += vals[l],
+                _ => out.push((rows[l], vals[l])),
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn scan_network_matches_scalar_oracle() {
+        run_prop("vsr scan network", 200, |g| {
+            let mut vals = [0f32; WARP];
+            let mut rows = [0u32; WARP];
+            let mut r = 0u32;
+            for l in 0..WARP {
+                vals[l] = g.value();
+                // random run lengths, occasionally repeated rows
+                if l > 0 && g.chance(0.35) {
+                    r += 1;
+                }
+                rows[l] = r;
+            }
+            let mut lane_vals = vals.to_vec();
+            let mut scratch = vec![0f32; WARP];
+            segmented_scan(&mut lane_vals, &rows, 1, &mut scratch);
+            let oracle = oracle_segment_sums(&vals, &rows);
+            let starts: Vec<usize> = run_starts(&rows).collect();
+            if starts.len() != oracle.len() {
+                return Err(format!(
+                    "run count mismatch: {} starts vs {} runs",
+                    starts.len(),
+                    oracle.len()
+                ));
+            }
+            for (idx, &l) in starts.iter().enumerate() {
+                let (orow, osum) = oracle[idx];
+                if rows[l] != orow {
+                    return Err(format!("row mismatch at lane {l}"));
+                }
+                let diff = (lane_vals[l] - osum).abs();
+                if diff > 1e-4 {
+                    return Err(format!(
+                        "sum mismatch at lane {l}: {} vs {osum}",
+                        lane_vals[l]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scan_handles_single_run_and_alternating() {
+        // single run: start lane 0 holds the total
+        let vals = [1f32; WARP];
+        let rows = [5u32; WARP];
+        let mut lane_vals = vals.to_vec();
+        let mut scratch = vec![0f32; WARP];
+        segmented_scan(&mut lane_vals, &rows, 1, &mut scratch);
+        assert_eq!(lane_vals[0], WARP as f32);
+
+        // alternating rows: every lane is its own run
+        let mut rows2 = [0u32; WARP];
+        for (l, r) in rows2.iter_mut().enumerate() {
+            *r = l as u32;
+        }
+        let mut lane_vals2: Vec<f32> = (0..WARP).map(|l| l as f32).collect();
+        segmented_scan(&mut lane_vals2, &rows2, 1, &mut scratch);
+        for l in 0..WARP {
+            assert_eq!(lane_vals2[l], l as f32);
+        }
+        assert_eq!(run_starts(&rows2).count(), WARP);
+    }
+
+    #[test]
+    fn spmm_matches_reference() {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(401);
+        // skewed: exactly the workload VSR exists for
+        let cfg = crate::gen::powerlaw::PowerLawConfig {
+            rows: 120,
+            cols: 90,
+            alpha: 1.7,
+            min_row: 1,
+            max_row: 80,
+        };
+        let a = CsrMatrix::from_coo(&cfg.generate(&mut rng));
+        let seg = SegmentedMatrix::from_csr(&a, WARP);
+        for n in [1usize, 2, 4, 32] {
+            let x = DenseMatrix::random(90, n, 1.0, &mut rng);
+            let mut want = DenseMatrix::zeros(120, n);
+            spmm_reference(&a, &x, &mut want);
+            let mut got = DenseMatrix::zeros(120, n);
+            spmm(&seg, &x, &mut got, &ThreadPool::new(4));
+            assert_close(&got.data, &want.data, 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn property_vs_reference() {
+        run_prop("pr_wb spmm vs reference", 25, |g| {
+            let rows = g.dim() * 2;
+            let cols = g.dim() * 2;
+            let n = *g.choose(&[1usize, 2, 4, 8]);
+            let workers = *g.choose(&[1usize, 3, 6]);
+            let coo = CooMatrix::random_uniform(rows, cols, 0.25, g.rng());
+            let a = CsrMatrix::from_coo(&coo);
+            let seg = SegmentedMatrix::from_csr(&a, WARP);
+            let x = DenseMatrix::from_vec(cols, n, g.vec_f32(cols * n));
+            let mut want = DenseMatrix::zeros(rows, n);
+            spmm_reference(&a, &x, &mut want);
+            let mut got = DenseMatrix::zeros(rows, n);
+            spmm(&seg, &x, &mut got, &ThreadPool::new(workers));
+            assert_close(&got.data, &want.data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of WARP")]
+    fn rejects_non_warp_segments() {
+        let a = CsrMatrix::from_coo(&CooMatrix::new(4, 4));
+        let seg = SegmentedMatrix::from_csr(&a, 8);
+        let x = DenseMatrix::zeros(4, 1);
+        let mut y = DenseMatrix::zeros(4, 1);
+        spmm(&seg, &x, &mut y, &ThreadPool::serial());
+    }
+}

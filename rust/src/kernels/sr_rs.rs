@@ -1,0 +1,193 @@
+//! SR-RS — sequential reduction, row split (paper Fig. 2(a) baseline),
+//! plus the CSC (coalesced sparse-row caching) optimization of §2.1.3.
+//!
+//! On the GPU, SR-RS assigns each row to a thread (CSR-scalar) or each row
+//! to a warp iterating sequentially; here each pool worker owns a block of
+//! rows. The CSC variant stages each 32-nnz chunk of the sparse row into a
+//! stack scratch buffer first (the CUDA version stages into shared memory
+//! with one coalesced load), then streams the dense rows — the structure
+//! the paper uses to keep vectorized sparse loads under sequential
+//! reduction.
+
+use super::WARP;
+use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::util::threadpool::ThreadPool;
+
+/// Rows per parallel work item.
+const ROW_CHUNK: usize = 64;
+
+/// Plain SR-RS SpMM: each worker scans its rows sequentially.
+pub fn spmm(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &ThreadPool) {
+    assert_eq!(a.cols, x.rows, "inner dimension mismatch");
+    assert_eq!((y.rows, y.cols), (a.rows, x.cols), "output shape mismatch");
+    let n = x.cols;
+    let pool = &pool.for_work(a.nnz() * n.max(1));
+    pool.for_each_row_chunk(&mut y.data, n.max(1), ROW_CHUNK, |first_row, rows| {
+        rows.fill(0.0);
+        let nrows = rows.len() / n.max(1);
+        for i in 0..nrows {
+            let r = first_row + i;
+            if r >= a.rows {
+                break;
+            }
+            let (cols, vals) = a.row(r);
+            let out = &mut rows[i * n..(i + 1) * n];
+            for k in 0..cols.len() {
+                let v = vals[k];
+                let xrow = x.row(cols[k] as usize);
+                for j in 0..n {
+                    out[j] += v * xrow[j];
+                }
+            }
+        }
+    });
+}
+
+/// SR-RS SpMM with **CSC** (coalesced sparse-row caching): row chunks of
+/// `WARP` non-zeros are staged into a scratch buffer before the dense
+/// accumulation loop. Functionally identical to [`spmm`]; structurally it
+/// is the paper's §2.1.3 kernel and is what the simulator models as
+/// `SrRs + csc`.
+pub fn spmm_csc(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &ThreadPool) {
+    assert_eq!(a.cols, x.rows, "inner dimension mismatch");
+    assert_eq!((y.rows, y.cols), (a.rows, x.cols), "output shape mismatch");
+    let n = x.cols;
+    let pool = &pool.for_work(a.nnz() * n.max(1));
+    pool.for_each_row_chunk(&mut y.data, n.max(1), ROW_CHUNK, |first_row, rows| {
+        rows.fill(0.0);
+        let nrows = rows.len() / n.max(1);
+        // "shared memory" tiles: one coalesced load of WARP (value, col)
+        // pairs, then sequential iteration over the cached entries.
+        let mut val_tile = [0f32; WARP];
+        let mut col_tile = [0u32; WARP];
+        for i in 0..nrows {
+            let r = first_row + i;
+            if r >= a.rows {
+                break;
+            }
+            let (cols, vals) = a.row(r);
+            let out = &mut rows[i * n..(i + 1) * n];
+            let mut k = 0;
+            while k < cols.len() {
+                let tile = (cols.len() - k).min(WARP);
+                // coalesced stage-in (the CUDA kernel does this with one
+                // vector load per warp)
+                val_tile[..tile].copy_from_slice(&vals[k..k + tile]);
+                col_tile[..tile].copy_from_slice(&cols[k..k + tile]);
+                // sequential reduction over the cached tile
+                for t in 0..tile {
+                    let v = val_tile[t];
+                    let xrow = x.row(col_tile[t] as usize);
+                    for j in 0..n {
+                        out[j] += v * xrow[j];
+                    }
+                }
+                k += tile;
+            }
+        }
+    });
+}
+
+/// SR-RS SpMV (N = 1 fast path; avoids the inner-column loop).
+pub fn spmv(a: &CsrMatrix, x: &[f32], y: &mut [f32], pool: &ThreadPool) {
+    assert_eq!(a.cols, x.len());
+    assert_eq!(a.rows, y.len());
+    let pool = &pool.for_work(a.nnz());
+    pool.for_each_row_chunk(y, 1, ROW_CHUNK * 4, |first_row, out| {
+        for (i, o) in out.iter_mut().enumerate() {
+            let r = first_row + i;
+            if r >= a.rows {
+                break;
+            }
+            let (cols, vals) = a.row(r);
+            let mut acc = 0.0f32;
+            for k in 0..cols.len() {
+                acc += vals[k] * x[cols[k] as usize];
+            }
+            *o = acc;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense::{spmm_reference, spmv_reference};
+    use crate::sparse::CooMatrix;
+    use crate::util::proptest::{assert_close, run_prop};
+
+    fn check_vs_reference(rows: usize, cols: usize, n: usize, density: f64, seed: u64) {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(seed);
+        let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(rows, cols, density, &mut rng));
+        let x = DenseMatrix::random(cols, n, 1.0, &mut rng);
+        let mut want = DenseMatrix::zeros(rows, n);
+        spmm_reference(&a, &x, &mut want);
+        let pool = ThreadPool::new(4);
+        for f in [spmm, spmm_csc] {
+            let mut got = DenseMatrix::zeros(rows, n);
+            f(&a, &x, &mut got, &pool);
+            assert_close(&got.data, &want.data, 1e-5, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn matches_reference_various_shapes() {
+        check_vs_reference(50, 40, 8, 0.1, 101);
+        check_vs_reference(128, 128, 1, 0.05, 102);
+        check_vs_reference(7, 200, 33, 0.3, 103);
+        check_vs_reference(200, 7, 2, 0.5, 104);
+    }
+
+    #[test]
+    fn long_rows_exercise_csc_tiling() {
+        // rows longer than WARP force multiple scratch tiles
+        let mut coo = CooMatrix::new(4, 200);
+        for c in 0..200 {
+            coo.push(1, c, (c as f32) * 0.01);
+        }
+        let a = CsrMatrix::from_coo(&coo);
+        let mut rng = crate::util::prng::Xoshiro256::seeded(105);
+        let x = DenseMatrix::random(200, 16, 1.0, &mut rng);
+        let mut want = DenseMatrix::zeros(4, 16);
+        spmm_reference(&a, &x, &mut want);
+        let mut got = DenseMatrix::zeros(4, 16);
+        spmm_csc(&a, &x, &mut got, &ThreadPool::serial());
+        assert_close(&got.data, &want.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn spmv_matches_reference_property() {
+        run_prop("sr_rs spmv vs reference", 30, |g| {
+            let rows = g.dim() * 2;
+            let cols = g.dim() * 2;
+            let coo = CooMatrix::random_uniform(rows, cols, 0.2, g.rng());
+            let a = CsrMatrix::from_coo(&coo);
+            let x = g.vec_f32(cols);
+            let mut want = vec![0.0; rows];
+            spmv_reference(&a, &x, &mut want);
+            let mut got = vec![0.0; rows];
+            spmv(&a, &x, &mut got, &ThreadPool::new(2));
+            assert_close(&got, &want, 1e-5, 1e-5)
+        });
+    }
+
+    #[test]
+    fn spmm_matches_reference_property() {
+        run_prop("sr_rs spmm vs reference", 25, |g| {
+            let rows = g.dim();
+            let cols = g.dim();
+            let n = *g.choose(&[1usize, 2, 4, 17, 32]);
+            let coo = CooMatrix::random_uniform(rows, cols, 0.25, g.rng());
+            let a = CsrMatrix::from_coo(&coo);
+            let x = DenseMatrix::from_vec(cols, n, g.vec_f32(cols * n));
+            let mut want = DenseMatrix::zeros(rows, n);
+            spmm_reference(&a, &x, &mut want);
+            let mut got = DenseMatrix::zeros(rows, n);
+            spmm(&a, &x, &mut got, &ThreadPool::serial());
+            assert_close(&got.data, &want.data, 1e-5, 1e-5)?;
+            let mut got2 = DenseMatrix::zeros(rows, n);
+            spmm_csc(&a, &x, &mut got2, &ThreadPool::serial());
+            assert_close(&got2.data, &want.data, 1e-5, 1e-5)
+        });
+    }
+}

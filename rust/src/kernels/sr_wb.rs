@@ -1,0 +1,252 @@
+//! SR-WB — sequential reduction over fixed-nnz segments (paper Fig. 2(b)).
+//!
+//! The workload-balancing principle: instead of whole rows, every worker is
+//! assigned an equal number of *non-zeros* (segments of `WARP` entries), so
+//! no worker is bottlenecked by a pathological row. Because segments cross
+//! row boundaries, each worker must carry partial sums for rows shared with
+//! its neighbors; the carries are merged in a short sequential fix-up pass
+//! (the GPU kernels do the same with atomics or a spine pass — merge-path /
+//! CSR-stream style).
+
+use crate::sparse::{DenseMatrix, SegmentedMatrix};
+use crate::util::threadpool::ThreadPool;
+use std::cell::UnsafeCell;
+
+/// Shared mutable output rows. SAFETY contract: concurrent writers must
+/// touch disjoint row ranges; the carry scheme below guarantees it (each
+/// row is written directly only by the worker that owns its first nnz).
+pub(crate) struct SharedRows<'a> {
+    data: &'a UnsafeCell<[f32]>,
+    pub n: usize,
+}
+
+unsafe impl Sync for SharedRows<'_> {}
+
+impl<'a> SharedRows<'a> {
+    pub fn new(data: &'a mut [f32], n: usize) -> Self {
+        assert!(n > 0 && data.len() % n == 0);
+        // SAFETY: &mut guarantees exclusivity; UnsafeCell re-shares it under
+        // the disjoint-rows contract documented above.
+        let cell = unsafe { &*(data as *mut [f32] as *const UnsafeCell<[f32]>) };
+        Self { data: cell, n }
+    }
+
+    /// Mutable view of one row. SAFETY: caller must ensure no other thread
+    /// accesses row `r` concurrently.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_mut(&self, r: usize) -> &mut [f32] {
+        let base = (*self.data.get()).as_mut_ptr();
+        std::slice::from_raw_parts_mut(base.add(r * self.n), self.n)
+    }
+}
+
+/// A carried partial row: `(row, values)` produced at a worker boundary.
+type Carry = (usize, Vec<f32>);
+
+/// SR-WB SpMM over the segmented format.
+pub fn spmm(a: &SegmentedMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &ThreadPool) {
+    assert_eq!(a.cols, x.rows, "inner dimension mismatch");
+    assert_eq!((y.rows, y.cols), (a.rows, x.cols), "output shape mismatch");
+    let n = x.cols;
+    y.data.fill(0.0);
+
+    let pool = &pool.for_work(a.nnz * n.max(1));
+    let workers = pool.workers().min(a.num_segments).max(1);
+    // contiguous, equal segment ranges per worker = equal nnz per worker
+    let per = a.num_segments.div_ceil(workers);
+    let shared = SharedRows::new(&mut y.data, n.max(1));
+
+    let carries: Vec<Carry> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let shared = &shared;
+            let seg_lo = w * per;
+            let seg_hi = ((w + 1) * per).min(a.num_segments);
+            handles.push(scope.spawn(move || {
+                worker_pass(a, x, shared, seg_lo, seg_hi)
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+
+    // sequential fix-up: add boundary partials
+    for (row, partial) in carries {
+        let out = &mut y.data[row * n..(row + 1) * n];
+        for j in 0..n {
+            out[j] += partial[j];
+        }
+    }
+}
+
+/// Process segments `[seg_lo, seg_hi)` sequentially; returns the carried
+/// first-row partial (if any work was done).
+fn worker_pass(
+    a: &SegmentedMatrix,
+    x: &DenseMatrix,
+    y: &SharedRows,
+    seg_lo: usize,
+    seg_hi: usize,
+) -> Vec<Carry> {
+    let n = x.cols;
+    if seg_lo >= seg_hi {
+        return Vec::new();
+    }
+    let lo = seg_lo * a.seg_len;
+    let hi = (seg_hi * a.seg_len).min(a.values.len());
+    if lo >= hi {
+        return Vec::new();
+    }
+
+    let first_row = a.row_idx[lo] as usize;
+    let mut acc = vec![0f32; n];
+    let mut cur_row = first_row;
+    let mut carries: Vec<Carry> = Vec::new();
+    let mut flushed_first = false;
+
+    let flush = |row: usize,
+                     acc: &mut Vec<f32>,
+                     flushed_first: &mut bool,
+                     carries: &mut Vec<Carry>| {
+        if !*flushed_first {
+            // first distinct row may be shared with the previous worker:
+            // defer to the sequential fix-up
+            carries.push((row, std::mem::replace(acc, vec![0f32; n])));
+            *flushed_first = true;
+        } else {
+            // rows after the first start inside this worker's range: we own
+            // their first nnz, nobody else writes them directly.
+            // SAFETY: per the ownership argument above.
+            let out = unsafe { y.row_mut(row) };
+            for j in 0..n {
+                out[j] += acc[j];
+            }
+            acc.fill(0.0);
+        }
+    };
+
+    for i in lo..hi {
+        let r = a.row_idx[i] as usize;
+        if r != cur_row {
+            flush(cur_row, &mut acc, &mut flushed_first, &mut carries);
+            cur_row = r;
+        }
+        let v = a.values[i];
+        if v != 0.0 || i < a.nnz {
+            let xrow = x.row(a.col_idx[i] as usize);
+            for j in 0..n {
+                acc[j] += v * xrow[j];
+            }
+        }
+    }
+    // the trailing row may continue into the next worker: carry it too
+    carries.push((cur_row, acc));
+    carries
+}
+
+/// SR-WB SpMV (N = 1): scalar accumulator version of [`spmm`].
+pub fn spmv(a: &SegmentedMatrix, x: &[f32], y: &mut [f32], pool: &ThreadPool) {
+    assert_eq!(a.cols, x.len());
+    assert_eq!(a.rows, y.len());
+    let xm = DenseMatrix::from_vec(x.len(), 1, x.to_vec());
+    let mut ym = DenseMatrix::zeros(y.len(), 1);
+    spmm(a, &xm, &mut ym, pool);
+    y.copy_from_slice(&ym.data);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense::spmm_reference;
+    use crate::sparse::{CooMatrix, CsrMatrix};
+    use crate::util::proptest::{assert_close, run_prop};
+
+    fn check(a: &CsrMatrix, n: usize, seg_len: usize, workers: usize, seed: u64) {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(seed);
+        let seg = SegmentedMatrix::from_csr(a, seg_len);
+        let x = DenseMatrix::random(a.cols, n, 1.0, &mut rng);
+        let mut want = DenseMatrix::zeros(a.rows, n);
+        spmm_reference(a, &x, &mut want);
+        let mut got = DenseMatrix::zeros(a.rows, n);
+        spmm(&seg, &x, &mut got, &ThreadPool::new(workers));
+        assert_close(&got.data, &want.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn matches_reference_balanced_and_skewed() {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(201);
+        let balanced =
+            CsrMatrix::from_coo(&CooMatrix::random_uniform(100, 80, 0.1, &mut rng));
+        check(&balanced, 8, 32, 4, 202);
+        check(&balanced, 1, 32, 3, 203);
+
+        // one huge row spanning many segments and worker boundaries
+        let mut coo = CooMatrix::new(50, 300);
+        for c in 0..300 {
+            coo.push(7, c, 0.01 * c as f32);
+        }
+        for r in 0..50 {
+            coo.push(r, r, 1.0);
+        }
+        let skewed = CsrMatrix::from_coo(&coo);
+        check(&skewed, 4, 16, 5, 204);
+        check(&skewed, 128, 8, 7, 205);
+    }
+
+    #[test]
+    fn row_spanning_all_workers() {
+        // a single row holds ALL nnz: every worker carries partials for it
+        let mut coo = CooMatrix::new(3, 256);
+        for c in 0..256 {
+            coo.push(1, c, 1.0);
+        }
+        let a = CsrMatrix::from_coo(&coo);
+        let seg = SegmentedMatrix::from_csr(&a, 8);
+        let x = DenseMatrix::from_vec(256, 1, vec![1.0; 256]);
+        let mut y = DenseMatrix::zeros(3, 1);
+        spmm(&seg, &x, &mut y, &ThreadPool::new(6));
+        assert_eq!(y.data, vec![0.0, 256.0, 0.0]);
+    }
+
+    #[test]
+    fn property_vs_reference() {
+        run_prop("sr_wb spmm vs reference", 25, |g| {
+            let rows = g.dim() * 2;
+            let cols = g.dim() * 2;
+            let n = *g.choose(&[1usize, 3, 8, 32]);
+            let seg_len = *g.choose(&[1usize, 4, 16, 32]);
+            let workers = *g.choose(&[1usize, 2, 5]);
+            let coo = CooMatrix::random_uniform(rows, cols, 0.2, g.rng());
+            let a = CsrMatrix::from_coo(&coo);
+            let seg = SegmentedMatrix::from_csr(&a, seg_len);
+            let x = DenseMatrix::from_vec(cols, n, g.vec_f32(cols * n));
+            let mut want = DenseMatrix::zeros(rows, n);
+            spmm_reference(&a, &x, &mut want);
+            let mut got = DenseMatrix::zeros(rows, n);
+            spmm(&seg, &x, &mut got, &ThreadPool::new(workers));
+            assert_close(&got.data, &want.data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn spmv_wrapper() {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(206);
+        let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(60, 60, 0.15, &mut rng));
+        let seg = SegmentedMatrix::from_csr(&a, 32);
+        let x: Vec<f32> = (0..60).map(|i| i as f32 * 0.1).collect();
+        let mut want = vec![0.0; 60];
+        crate::kernels::dense::spmv_reference(&a, &x, &mut want);
+        let mut got = vec![0.0; 60];
+        spmv(&seg, &x, &mut got, &ThreadPool::new(3));
+        assert_close(&got, &want, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = CsrMatrix::from_coo(&CooMatrix::new(5, 5));
+        let seg = SegmentedMatrix::from_csr(&a, 32);
+        let x = DenseMatrix::zeros(5, 4);
+        let mut y = DenseMatrix::from_vec(5, 4, vec![9.0; 20]);
+        spmm(&seg, &x, &mut y, &ThreadPool::new(2));
+        assert_eq!(y.data, vec![0.0; 20]);
+    }
+}

@@ -1,0 +1,50 @@
+//! # ge-spmm — adaptive workload-balanced / parallel-reduction sparse kernels
+//!
+//! Reproduction of *"Efficient Sparse Matrix Kernels based on Adaptive
+//! Workload-Balancing and Parallel-Reduction"* (Huang et al., 2021) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 1** (build time, Python): the paper's four kernel designs as
+//!   Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
+//! - **Layer 2** (build time, Python): a GCN forward/backward in JAX calling
+//!   the Layer-1 kernels.
+//! - **Layer 3** (this crate): the coordinator — sparse formats, feature
+//!   extraction, the adaptive kernel selector, a PJRT runtime that executes
+//!   the AOT artifacts, native CPU reference kernels, and a GPU cost
+//!   simulator that regenerates the paper's evaluation figures.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use ge_spmm::sparse::CsrMatrix;
+//! use ge_spmm::gen::rmat::RmatConfig;
+//! use ge_spmm::features::MatrixFeatures;
+//! use ge_spmm::selector::{AdaptiveSelector, KernelKind};
+//!
+//! // Generate a power-law matrix, extract features, pick a kernel.
+//! let mut rng = ge_spmm::util::prng::Xoshiro256::seeded(42);
+//! let coo = RmatConfig::new(12, 8.0).generate(&mut rng);
+//! let csr = CsrMatrix::from_coo(&coo);
+//! let feats = MatrixFeatures::of(&csr);
+//! let kernel = AdaptiveSelector::default().select(&feats, /*n=*/ 32);
+//! assert!(matches!(kernel, KernelKind::SrRs | KernelKind::SrWb));
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod features;
+pub mod gen;
+pub mod gnn;
+pub mod kernels;
+pub mod runtime;
+pub mod selector;
+pub mod sim;
+pub mod sparse;
+pub mod util;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,262 @@
+//! `ge-spmm` — the coordinator CLI.
+//!
+//! Subcommands:
+//!   info        print artifact/manifest and platform diagnostics
+//!   features    print row-length features for a matrix (.mtx or synth:)
+//!   select      show the adaptive kernel decision for a matrix and N
+//!   spmm        run one SpMM through the runtime with adaptive routing
+//!   simulate    run the GPU cost model for all kernels on a matrix
+//!   calibrate   fit selector thresholds against simulator profiles
+//!   train-gcn   end-to-end GCN training on the synthetic graph
+//!   suite       list the synthetic benchmark collection
+//!
+//! Matrices are given as a path to a MatrixMarket file or a synthetic
+//! spec `synth:<name>` from the collection (see `suite`).
+
+use anyhow::{anyhow, bail, Result};
+use ge_spmm::coordinator::SpmmEngine;
+use ge_spmm::features::MatrixFeatures;
+use ge_spmm::gen::Collection;
+use ge_spmm::gnn::{GcnTrainer, GraphConfig, SyntheticGraph};
+use ge_spmm::runtime::Engine;
+use ge_spmm::selector::{calibrate, AdaptiveSelector};
+use ge_spmm::sim::{simulate, GpuConfig, SimKernel, SimMatrix};
+use ge_spmm::sparse::{mmio, CsrMatrix, DenseMatrix};
+use ge_spmm::util::cli::{split_subcommand, CliError, Command};
+use ge_spmm::util::prng::Xoshiro256;
+use std::path::Path;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, rest) = split_subcommand(argv);
+    let code = match run(sub.as_deref(), rest) {
+        Ok(()) => 0,
+        Err(e) => {
+            if let Some(CliError::Help(h)) = e.downcast_ref::<CliError>() {
+                println!("{h}");
+                0
+            } else {
+                eprintln!("error: {e:#}");
+                1
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(sub: Option<&str>, rest: Vec<String>) -> Result<()> {
+    match sub {
+        Some("info") => cmd_info(rest),
+        Some("features") => cmd_features(rest),
+        Some("select") => cmd_select(rest),
+        Some("spmm") => cmd_spmm(rest),
+        Some("simulate") => cmd_simulate(rest),
+        Some("calibrate") => cmd_calibrate(rest),
+        Some("train-gcn") => cmd_train_gcn(rest),
+        Some("suite") => cmd_suite(rest),
+        Some(other) => bail!("unknown subcommand '{other}' (try: info, features, select, spmm, simulate, calibrate, train-gcn, suite)"),
+        None => {
+            println!(
+                "ge-spmm {} — adaptive workload-balanced/parallel-reduction sparse kernels\n\
+                 subcommands: info, features, select, spmm, simulate, calibrate, train-gcn, suite\n\
+                 use `ge-spmm <subcommand> --help` for options",
+                ge_spmm::version()
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Load a matrix from a path or a `synth:<name>` collection spec.
+fn load_matrix(arg: &str) -> Result<CsrMatrix> {
+    if let Some(name) = arg.strip_prefix("synth:") {
+        let spec = Collection::suite()
+            .into_iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow!("no synthetic matrix named '{name}' (see `ge-spmm suite`)"))?;
+        Ok(spec.build())
+    } else {
+        Ok(CsrMatrix::from_coo(&mmio::read_matrix_market(Path::new(
+            arg,
+        ))?))
+    }
+}
+
+fn matrix_arg(args: &ge_spmm::util::cli::Args) -> Result<String> {
+    args.positional()
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("expected a matrix argument (.mtx path or synth:<name>)"))
+}
+
+fn cmd_info(rest: Vec<String>) -> Result<()> {
+    let cmd = Command::new("info", "artifact and platform diagnostics")
+        .opt("artifacts", "artifact directory", Some("artifacts"));
+    let args = cmd.parse(&rest)?;
+    let engine = Engine::new(Path::new(args.get_or("artifacts", "artifacts")))?;
+    println!("platform: {}", engine.platform());
+    println!("artifacts: {}", engine.manifest.artifacts.len());
+    for a in &engine.manifest.artifacts {
+        println!(
+            "  {:<24} kind={:<9} bucket={:<4} n={:<4} file={}",
+            a.name,
+            a.kind,
+            a.bucket.as_deref().unwrap_or("-"),
+            a.n.map(|n| n.to_string()).unwrap_or_else(|| "-".into()),
+            a.file
+        );
+    }
+    Ok(())
+}
+
+fn cmd_features(rest: Vec<String>) -> Result<()> {
+    let cmd = Command::new("features", "row-length features of a matrix");
+    let args = cmd.parse(&rest)?;
+    let m = load_matrix(&matrix_arg(&args)?)?;
+    println!("{}", MatrixFeatures::of(&m).summary());
+    Ok(())
+}
+
+fn cmd_select(rest: Vec<String>) -> Result<()> {
+    let cmd = Command::new("select", "show the adaptive kernel decision")
+        .opt("n", "dense-matrix width", Some("32"));
+    let args = cmd.parse(&rest)?;
+    let m = load_matrix(&matrix_arg(&args)?)?;
+    let n: usize = args.parse_or("n", 32);
+    let f = MatrixFeatures::of(&m);
+    let sel = AdaptiveSelector::default();
+    println!("{}", f.summary());
+    println!("{}", sel.explain(&f, n));
+    Ok(())
+}
+
+fn cmd_spmm(rest: Vec<String>) -> Result<()> {
+    let cmd = Command::new("spmm", "run one SpMM through the PJRT runtime")
+        .opt("n", "dense-matrix width", Some("4"))
+        .opt("artifacts", "artifact directory", Some("artifacts"))
+        .opt("seed", "dense operand seed", Some("42"));
+    let args = cmd.parse(&rest)?;
+    let m = load_matrix(&matrix_arg(&args)?)?;
+    let n: usize = args.parse_or("n", 4);
+    let engine = SpmmEngine::new(Path::new(args.get_or("artifacts", "artifacts")))?;
+    let h = engine.register(m.clone());
+    let mut rng = Xoshiro256::seeded(args.parse_or("seed", 42));
+    let x = DenseMatrix::random(m.cols, n, 1.0, &mut rng);
+    let resp = engine.spmm(h, &x)?;
+    println!(
+        "kernel={} artifact={} latency={:?}",
+        resp.kernel.label(),
+        resp.artifact,
+        resp.latency
+    );
+    // cross-check vs the native reference
+    let mut want = DenseMatrix::zeros(m.rows, n);
+    ge_spmm::kernels::dense::spmm_reference(&m, &x, &mut want);
+    let max_err = resp
+        .y
+        .data
+        .iter()
+        .zip(&want.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("max |err| vs native reference: {max_err:.2e}");
+    println!("{}", engine.metrics.summary());
+    Ok(())
+}
+
+fn cmd_simulate(rest: Vec<String>) -> Result<()> {
+    let cmd = Command::new("simulate", "GPU cost model for all kernels")
+        .opt("n", "dense-matrix width", Some("32"))
+        .opt("gpu", "v100 | rtx2080 | rtx3090", Some("rtx3090"));
+    let args = cmd.parse(&rest)?;
+    let m = load_matrix(&matrix_arg(&args)?)?;
+    let n: usize = args.parse_or("n", 32);
+    let gpu = GpuConfig::by_name(args.get_or("gpu", "rtx3090"))
+        .ok_or_else(|| anyhow!("unknown gpu"))?;
+    let sm = SimMatrix::new(m);
+    let mut table = ge_spmm::bench::Table::new(&["kernel", "time", "bound", "warps"]);
+    for k in [
+        SimKernel::SrRs,
+        SimKernel::SrWb,
+        SimKernel::PrRs,
+        SimKernel::PrWb,
+        SimKernel::CuSparse,
+        SimKernel::Aspt,
+    ] {
+        let r = simulate(k, &sm, n, &gpu);
+        table.row(vec![
+            k.label().to_string(),
+            ge_spmm::bench::table::secs(r.seconds),
+            format!("{:?}", r.bound),
+            r.warps.to_string(),
+        ]);
+    }
+    println!("{}x{} n={} on {}", sm.csr.rows, sm.csr.cols, n, gpu.name);
+    table.print();
+    Ok(())
+}
+
+fn cmd_calibrate(rest: Vec<String>) -> Result<()> {
+    let cmd = Command::new("calibrate", "fit selector thresholds on the collection")
+        .opt("gpu", "v100 | rtx2080 | rtx3090", Some("rtx3090"))
+        .opt("n-values", "dense widths", Some("1,4,32,128"))
+        .flag("mini", "use the mini collection (fast)");
+    let args = cmd.parse(&rest)?;
+    let gpu = GpuConfig::by_name(args.get_or("gpu", "rtx3090"))
+        .ok_or_else(|| anyhow!("unknown gpu"))?;
+    let n_values = args.parse_list("n-values", &[1usize, 4, 32, 128]);
+    let specs = if args.flag("mini") {
+        Collection::mini_suite()
+    } else {
+        Collection::suite()
+    };
+    eprintln!("building {} matrices …", specs.len());
+    let matrices: Vec<CsrMatrix> = specs.iter().map(|s| s.build()).collect();
+    eprintln!("profiling …");
+    let samples = calibrate::collect_samples(&matrices, &n_values, &gpu);
+    let cal = calibrate::calibrate(&samples);
+    println!(
+        "calibrated: T_avg={} T_cv={} (geomean loss vs oracle: {:.3})",
+        cal.selector.t_avg, cal.selector.t_cv, cal.mean_loss
+    );
+    Ok(())
+}
+
+fn cmd_train_gcn(rest: Vec<String>) -> Result<()> {
+    let cmd = Command::new("train-gcn", "end-to-end GCN training (E2E driver)")
+        .opt("steps", "training steps", Some("200"))
+        .opt("artifacts", "artifact directory", Some("artifacts"))
+        .opt("seed", "graph + init seed", Some("7"))
+        .opt("log-every", "loss log interval", Some("20"));
+    let args = cmd.parse(&rest)?;
+    let engine = Engine::new(Path::new(args.get_or("artifacts", "artifacts")))?;
+    let graph = SyntheticGraph::generate(GraphConfig::default(), args.parse_or("seed", 7));
+    let mut trainer = GcnTrainer::new(&engine, &graph, args.parse_or("seed", 7) + 1)?;
+    let report = trainer.train(args.parse_or("steps", 200), args.parse_or("log-every", 20))?;
+    println!(
+        "trained {} steps in {:.1}s  loss {:.4} → {:.4}  train-acc {:.3}",
+        report.steps,
+        report.seconds,
+        report.losses.first().unwrap_or(&f32::NAN),
+        report.losses.last().unwrap_or(&f32::NAN),
+        report.train_accuracy
+    );
+    Ok(())
+}
+
+fn cmd_suite(rest: Vec<String>) -> Result<()> {
+    let cmd = Command::new("suite", "list the synthetic benchmark collection")
+        .flag("features", "also print per-matrix features (slow)");
+    let args = cmd.parse(&rest)?;
+    let specs = Collection::suite();
+    println!("{} matrices:", specs.len());
+    for s in &specs {
+        if args.flag("features") {
+            let f = MatrixFeatures::of(&s.build());
+            println!("  {:<24} [{}] {}", s.name, s.family.label(), f.summary());
+        } else {
+            println!("  {:<24} [{}]", s.name, s.family.label());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! The PJRT execution engine: compile cache + typed execute.
+//!
+//! Wraps the `xla` crate exactly as the reference loader does
+//! (/opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifacts are compiled lazily on first use and cached for the process
+//! lifetime (compilation is milliseconds-to-seconds; execution is the hot
+//! path).
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with shape-checked inputs; returns the output tensors
+    /// (the AOT path lowers with `return_tuple=True`, so the single
+    /// result literal is a tuple we decompose).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "artifact {}: {} inputs supplied, {} expected",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            ));
+        }
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            t.matches(spec)
+                .with_context(|| format!("artifact {}", self.spec.name))?;
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.run_literals(&refs)
+    }
+
+    /// Execute with pre-converted literals (the hot path: callers cache
+    /// the conversion of operands that repeat across requests, e.g. the
+    /// packed sparse planes — see `coordinator::engine`).
+    pub fn run_literals(&self, literals: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        if literals.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "artifact {}: {} inputs supplied, {} expected",
+                self.spec.name,
+                literals.len(),
+                self.spec.inputs.len()
+            ));
+        }
+        let result = self.exe.execute::<&xla::Literal>(literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// Process-wide engine: one PJRT client + a compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedArtifact>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifact_dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling if needed) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedArtifact>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+            return Ok(hit.clone());
+        }
+        let spec = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}' in manifest"))?
+            .clone();
+        let path = self.manifest.hlo_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        let loaded = std::sync::Arc::new(LoadedArtifact { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Number of artifacts compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Convenience: load + run.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?.run(inputs)
+    }
+}
+
+// Integration tests that need real artifacts live in rust/tests/.

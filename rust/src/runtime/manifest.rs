@@ -1,0 +1,243 @@
+//! Artifact manifest: the JSON contract between `python/compile/aot.py`
+//! and the Rust runtime.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape+dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing name"))?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// SpMM-specific: kernel variant label (sr_rs / sr_wb / pr_rs / pr_wb)
+    pub variant: Option<String>,
+    /// SpMM-specific: bucket name and dense width
+    pub bucket: Option<String>,
+    pub n: Option<usize>,
+    /// bucket parameters (m_pad, k, width, nseg, seg_len) / GCN dims
+    pub params: std::collections::BTreeMap<String, usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Bucket parameter accessor.
+    pub fn param(&self, key: &str) -> Option<usize> {
+        self.params.get(key).copied()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (unit-testable without files).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let arr = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for a in arr {
+            let get_str = |k: &str| a.get(k).and_then(Json::as_str).map(|s| s.to_string());
+            let name = get_str("name").ok_or_else(|| anyhow!("artifact missing name"))?;
+            let file = get_str("file").ok_or_else(|| anyhow!("artifact missing file"))?;
+            let kind = get_str("kind").ok_or_else(|| anyhow!("artifact missing kind"))?;
+            let mut params = std::collections::BTreeMap::new();
+            if let Some(p) = a.get("params").and_then(Json::as_obj) {
+                for (k, v) in p {
+                    if let Some(u) = v.as_usize() {
+                        params.insert(k.clone(), u);
+                    }
+                }
+            }
+            let parse_tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name} missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.push(ArtifactSpec {
+                n: a.get("n").and_then(Json::as_usize),
+                variant: get_str("variant"),
+                bucket: get_str("bucket"),
+                inputs: parse_tensors("inputs")?,
+                outputs: parse_tensors("outputs")?,
+                name,
+                file,
+                kind,
+                params,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    /// Find an artifact by name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All SpMM artifacts for a kernel variant, sorted by (bucket size, n).
+    pub fn spmm_variants(&self, variant: &str) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "spmm" && a.variant.as_deref() == Some(variant))
+            .collect();
+        v.sort_by_key(|a| (a.param("m_pad").unwrap_or(0), a.n.unwrap_or(0)));
+        v
+    }
+
+    /// Select the smallest SpMM bucket fitting (rows, cols, width/segments)
+    /// at dense width `n`.
+    pub fn route_spmm(
+        &self,
+        variant: &str,
+        n: usize,
+        rows: usize,
+        cols: usize,
+        ell_width: usize,
+        num_segments: usize,
+    ) -> Option<&ArtifactSpec> {
+        self.spmm_variants(variant)
+            .into_iter()
+            .filter(|a| a.n == Some(n))
+            .find(|a| {
+                let m_ok = a.param("m_pad").is_some_and(|m| rows <= m);
+                let k_ok = a.param("k").is_some_and(|k| cols <= k);
+                let fits = if variant.ends_with("_rs") {
+                    a.param("width").is_some_and(|w| ell_width <= w)
+                } else {
+                    a.param("nseg").is_some_and(|s| num_segments <= s)
+                };
+                m_ok && k_ok && fits
+            })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, a: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "spmm_sr_rs_s_n4", "file": "a.hlo.txt", "kind": "spmm",
+         "variant": "sr_rs", "bucket": "s", "n": 4,
+         "params": {"m_pad": 512, "k": 512, "width": 32, "nseg": 512, "seg_len": 32},
+         "inputs": [{"name": "a_values", "shape": [512, 32], "dtype": "f32"}],
+         "outputs": [{"name": "y", "shape": [512, 4], "dtype": "f32"}]},
+        {"name": "spmm_sr_rs_m_n4", "file": "b.hlo.txt", "kind": "spmm",
+         "variant": "sr_rs", "bucket": "m", "n": 4,
+         "params": {"m_pad": 4096, "k": 4096, "width": 64, "nseg": 4096, "seg_len": 32},
+         "inputs": [{"name": "a_values", "shape": [4096, 64], "dtype": "f32"}],
+         "outputs": [{"name": "y", "shape": [4096, 4], "dtype": "f32"}]},
+        {"name": "gcn_step", "file": "g.hlo.txt", "kind": "gcn_step",
+         "params": {"nodes": 2752},
+         "inputs": [{"name": "w1", "shape": [64, 32], "dtype": "f32"}],
+         "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.by_name("spmm_sr_rs_s_n4").unwrap();
+        assert_eq!(a.param("m_pad"), Some(512));
+        assert_eq!(a.inputs[0].elements(), 512 * 32);
+        assert!(m.by_name("nope").is_none());
+    }
+
+    #[test]
+    fn routing_picks_smallest_fitting_bucket() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let small = m.route_spmm("sr_rs", 4, 300, 300, 16, 100).unwrap();
+        assert_eq!(small.bucket.as_deref(), Some("s"));
+        let big = m.route_spmm("sr_rs", 4, 2000, 2000, 48, 100).unwrap();
+        assert_eq!(big.bucket.as_deref(), Some("m"));
+        // too wide for any bucket
+        assert!(m.route_spmm("sr_rs", 4, 300, 300, 100, 100).is_none());
+        // wrong n
+        assert!(m.route_spmm("sr_rs", 8, 300, 300, 16, 100).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), r#"{"artifacts": []}"#).is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), "not json").is_err());
+    }
+
+    #[test]
+    fn variants_sorted_by_bucket() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let v = m.spmm_variants("sr_rs");
+        assert_eq!(v.len(), 2);
+        assert!(v[0].param("m_pad").unwrap() < v[1].param("m_pad").unwrap());
+    }
+}

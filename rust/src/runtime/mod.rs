@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! execute them from the Rust request path.
+//!
+//! Python runs once (`make artifacts`); afterwards this module is the only
+//! bridge to the compiled kernels: [`manifest`] describes the artifact
+//! library, [`executor`] wraps `PjRtClient` → `HloModuleProto::from_text`
+//! → compile → execute, and [`tensor`] converts between Rust buffers and
+//! PJRT literals.
+
+pub mod executor;
+pub mod manifest;
+pub mod tensor;
+
+pub use executor::{Engine, LoadedArtifact};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

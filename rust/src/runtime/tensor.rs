@@ -1,0 +1,139 @@
+//! Host tensors and their conversion to/from PJRT literals.
+
+use anyhow::{bail, Result};
+
+/// A host-side tensor: f32 or i32 data plus a shape. This is what the
+//  coordinator builds from sparse formats and dense operands.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    /// f32 tensor with shape validation.
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::F32 { shape, data }
+    }
+
+    /// i32 tensor with shape validation.
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::I32 { shape, data }
+    }
+
+    /// Scalar f32.
+    pub fn scalar(v: f32) -> Self {
+        Tensor::F32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    /// Shape accessor.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    /// dtype label matching the manifest ("f32"/"i32").
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Tensor::F32 { .. } => "f32",
+            Tensor::I32 { .. } => "i32",
+        }
+    }
+
+    /// f32 data (errors on dtype mismatch).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Convert to a PJRT literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read a PJRT literal back into a host tensor (f32 only — all our
+    /// artifact outputs are f32).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor::f32(dims, data))
+    }
+
+    /// Check this tensor against a manifest spec.
+    pub fn matches(&self, spec: &super::manifest::TensorSpec) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "input '{}': shape {:?} != expected {:?}",
+                spec.name,
+                self.shape(),
+                spec.shape
+            );
+        }
+        if self.dtype() != spec.dtype {
+            bail!(
+                "input '{}': dtype {} != expected {}",
+                spec.name,
+                self.dtype(),
+                spec.dtype
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_dtype() {
+        let t = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), "f32");
+        assert!(t.as_f32().is_ok());
+        let i = Tensor::i32(vec![4], vec![1, 2, 3, 4]);
+        assert_eq!(i.dtype(), "i32");
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn bad_shape_panics() {
+        Tensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn spec_matching() {
+        use crate::runtime::manifest::TensorSpec;
+        let spec = TensorSpec {
+            name: "x".into(),
+            shape: vec![2, 3],
+            dtype: "f32".into(),
+        };
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 6]).matches(&spec).is_ok());
+        assert!(Tensor::f32(vec![3, 2], vec![0.0; 6]).matches(&spec).is_err());
+        assert!(Tensor::i32(vec![2, 3], vec![0; 6]).matches(&spec).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,14 @@
+//! Adaptive kernel selection — the paper's second contribution (§2.2).
+//!
+//! [`rules`] implements the Fig. 4 decision tree over low-cost row-length
+//! statistics; [`calibrate`] fits its two thresholds against simulator
+//! profiles of the benchmark collection (the paper "empirically decides
+//! the threshold"); [`oracle`] is the profile-everything upper bound the
+//! paper calls "select the best implementation off-line".
+
+pub mod calibrate;
+pub mod oracle;
+pub mod rules;
+
+pub use crate::kernels::KernelKind;
+pub use rules::AdaptiveSelector;

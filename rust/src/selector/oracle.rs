@@ -1,0 +1,88 @@
+//! Oracle selection: profile all four kernels, keep the best.
+//!
+//! This is the paper's "profile and select the best implementation
+//! off-line" mode (§3.1) — the upper bound the rule-based selector is
+//! measured against (§3.2 reports the rules lose only 5–12% to it).
+
+use crate::features::MatrixFeatures;
+use crate::kernels::KernelKind;
+use crate::sim::{simulate, GpuConfig, SimKernel, SimMatrix};
+
+/// Result of an oracle profile: the winner and every candidate's time.
+#[derive(Clone, Debug)]
+pub struct OracleProfile {
+    pub best: KernelKind,
+    pub seconds: [(KernelKind, f64); 4],
+}
+
+/// Profile the four designs on the simulator; return the winner.
+pub fn profile(a: &SimMatrix, n: usize, gpu: &GpuConfig) -> OracleProfile {
+    let mut seconds = [(KernelKind::SrRs, 0.0); 4];
+    for (i, k) in KernelKind::ALL.iter().enumerate() {
+        let r = simulate(SimKernel::from_kind(*k), a, n, gpu);
+        seconds[i] = (*k, r.seconds);
+    }
+    let best = seconds
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+        .0;
+    OracleProfile { best, seconds }
+}
+
+impl OracleProfile {
+    /// Time of a specific kernel.
+    pub fn time_of(&self, k: KernelKind) -> f64 {
+        self.seconds.iter().find(|(kk, _)| *kk == k).unwrap().1
+    }
+
+    /// Best (oracle) time.
+    pub fn best_time(&self) -> f64 {
+        self.time_of(self.best)
+    }
+
+    /// Relative loss of choosing `k` instead of the oracle (≥ 0).
+    pub fn loss_of(&self, k: KernelKind) -> f64 {
+        self.time_of(k) / self.best_time() - 1.0
+    }
+}
+
+/// Convenience: oracle winner for a CSR matrix (builds the SimMatrix).
+pub fn best_kernel(
+    a: &crate::sparse::CsrMatrix,
+    n: usize,
+    gpu: &GpuConfig,
+) -> (KernelKind, MatrixFeatures) {
+    let feats = MatrixFeatures::of(a);
+    let sm = SimMatrix::new(a.clone());
+    (profile(&sm, n, gpu).best, feats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{CooMatrix, CsrMatrix};
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn profile_orders_consistently() {
+        let mut rng = Xoshiro256::seeded(81);
+        let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(2000, 2000, 0.004, &mut rng));
+        let sm = SimMatrix::new(a);
+        let p = profile(&sm, 32, &GpuConfig::v100());
+        assert_eq!(p.loss_of(p.best), 0.0);
+        for k in KernelKind::ALL {
+            assert!(p.loss_of(k) >= 0.0);
+            assert!(p.time_of(k) > 0.0);
+        }
+    }
+
+    #[test]
+    fn best_kernel_returns_features_too() {
+        let mut rng = Xoshiro256::seeded(82);
+        let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(500, 500, 0.01, &mut rng));
+        let (k, f) = best_kernel(&a, 1, &GpuConfig::rtx3090());
+        assert!(KernelKind::ALL.contains(&k));
+        assert!(f.nnz > 0);
+    }
+}

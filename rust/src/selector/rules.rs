@@ -1,0 +1,148 @@
+//! The Fig. 4 rule tree.
+//!
+//! ```text
+//! N ≤ 4 (incl. SpMV)  ──►  parallel reduction (with VDL)
+//!     avg_row < T_avg      ──►  PR-WB (VSR)    # short rows idle PR lanes
+//!     else                 ──►  PR-RS
+//! N > 4               ──►  sequential reduction (with CSC)
+//!     stdv/avg > T_cv      ──►  SR-WB          # skew needs balancing
+//!     else                 ──►  SR-RS
+//! ```
+//!
+//! Insight 1 picks the reduction family from N; Insight 2 applies
+//! balancing on skew (`stdv_row/avg_row`); Insight 3 tempers it — a large
+//! `avg_row` means a large total workload whose waves hide imbalance,
+//! which is why the *ratio* (not raw stdv) is the metric.
+
+use crate::features::MatrixFeatures;
+use crate::kernels::KernelKind;
+
+/// Rule-based selector with the paper's two empirical thresholds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptiveSelector {
+    /// N at or below which parallel reduction is used (paper: 4).
+    pub n_threshold: usize,
+    /// PR balancing: use VSR when `avg_row` is below this.
+    pub t_avg: f64,
+    /// SR balancing: use SR-WB when `stdv_row/avg_row` exceeds this.
+    pub t_cv: f64,
+}
+
+impl Default for AdaptiveSelector {
+    /// Paper defaults; [`super::calibrate`] refines `t_avg`/`t_cv` against
+    /// simulator profiles.
+    fn default() -> Self {
+        Self {
+            n_threshold: 4,
+            t_avg: 12.0,
+            t_cv: 1.5,
+        }
+    }
+}
+
+impl AdaptiveSelector {
+    /// Pick a kernel for a matrix with features `f` and dense width `n`.
+    pub fn select(&self, f: &MatrixFeatures, n: usize) -> KernelKind {
+        if n.max(1) <= self.n_threshold {
+            if f.avg_row < self.t_avg {
+                KernelKind::PrWb
+            } else {
+                KernelKind::PrRs
+            }
+        } else if f.cv_row > self.t_cv {
+            KernelKind::SrWb
+        } else {
+            KernelKind::SrRs
+        }
+    }
+
+    /// Human-readable explanation of a decision (used by the CLI).
+    pub fn explain(&self, f: &MatrixFeatures, n: usize) -> String {
+        let k = self.select(f, n);
+        let family = if n.max(1) <= self.n_threshold {
+            format!(
+                "N={} ≤ {} → parallel reduction; avg_row={:.1} {} T_avg={:.1}",
+                n,
+                self.n_threshold,
+                f.avg_row,
+                if f.avg_row < self.t_avg { "<" } else { "≥" },
+                self.t_avg
+            )
+        } else {
+            format!(
+                "N={} > {} → sequential reduction; stdv/avg={:.2} {} T_cv={:.2}",
+                n,
+                self.n_threshold,
+                f.cv_row,
+                if f.cv_row > self.t_cv { ">" } else { "≤" },
+                self.t_cv
+            )
+        };
+        format!("{} ⇒ {}", family, k.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{CooMatrix, CsrMatrix};
+    use crate::util::prng::Xoshiro256;
+
+    fn features(rows: usize, avg: usize, skew: bool, seed: u64) -> MatrixFeatures {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut coo = CooMatrix::random_uniform(rows, rows, avg as f64 / rows as f64, &mut rng);
+        if skew {
+            for c in 0..rows / 2 {
+                coo.push(0, c, 1.0);
+            }
+        }
+        MatrixFeatures::of(&CsrMatrix::from_coo(&coo))
+    }
+
+    #[test]
+    fn small_n_selects_parallel_reduction() {
+        let sel = AdaptiveSelector::default();
+        let f = features(500, 32, false, 1);
+        for n in [1, 2, 4] {
+            assert!(sel.select(&f, n).is_parallel_reduction(), "n={n}");
+        }
+        for n in [5, 8, 32, 128] {
+            assert!(!sel.select(&f, n).is_parallel_reduction(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn short_rows_balance_pr() {
+        let sel = AdaptiveSelector::default();
+        let short = features(2000, 3, false, 2);
+        assert_eq!(sel.select(&short, 1), KernelKind::PrWb);
+        let long = features(500, 64, false, 3);
+        assert_eq!(sel.select(&long, 1), KernelKind::PrRs);
+    }
+
+    #[test]
+    fn skew_balances_sr() {
+        let sel = AdaptiveSelector::default();
+        let flat = features(500, 16, false, 4);
+        assert_eq!(sel.select(&flat, 32), KernelKind::SrRs);
+        let skewed = features(500, 4, true, 5);
+        assert!(skewed.cv_row > 1.5, "cv {}", skewed.cv_row);
+        assert_eq!(sel.select(&skewed, 32), KernelKind::SrWb);
+    }
+
+    #[test]
+    fn n0_treated_as_spmv() {
+        let sel = AdaptiveSelector::default();
+        let f = features(500, 4, false, 6);
+        assert!(sel.select(&f, 0).is_parallel_reduction());
+    }
+
+    #[test]
+    fn explain_mentions_decision() {
+        let sel = AdaptiveSelector::default();
+        let f = features(500, 16, false, 7);
+        let e = sel.explain(&f, 64);
+        assert!(e.contains("sequential"), "{e}");
+        assert!(e.contains("sr_"), "{e}");
+    }
+}

@@ -1,0 +1,120 @@
+//! GPU hardware configurations for the cost model.
+//!
+//! Parameters for the three GPUs of the paper's evaluation (§3.1). Values
+//! are public spec-sheet numbers; the cost model only depends on their
+//! *ratios* (SM count × occupancy vs bandwidth vs clock), which is what
+//! preserves the paper's relative results across the three cards.
+
+/// Hardware description consumed by the cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuConfig {
+    pub name: &'static str,
+    /// streaming multiprocessors
+    pub sms: usize,
+    /// resident warps per SM at the occupancy these kernels achieve
+    pub warps_per_sm: usize,
+    /// core clock (GHz)
+    pub clock_ghz: f64,
+    /// DRAM bandwidth (GB/s)
+    pub dram_gbps: f64,
+    /// L2 cache size (bytes)
+    pub l2_bytes: usize,
+    /// memory transaction sector size (bytes)
+    pub sector: usize,
+    /// full cache line (bytes)
+    pub line: usize,
+    /// fixed kernel-launch overhead (seconds)
+    pub launch_s: f64,
+}
+
+impl GpuConfig {
+    /// Nvidia Tesla V100 (Volta, CC 7.0): 80 SMs, 900 GB/s HBM2.
+    pub fn v100() -> Self {
+        Self {
+            name: "v100",
+            sms: 80,
+            warps_per_sm: 32,
+            clock_ghz: 1.38,
+            dram_gbps: 900.0,
+            l2_bytes: 6 * 1024 * 1024,
+            sector: 32,
+            line: 128,
+            launch_s: 4e-6,
+        }
+    }
+
+    /// Nvidia RTX 2080 (Turing, CC 7.5): 46 SMs, 448 GB/s GDDR6.
+    pub fn rtx2080() -> Self {
+        Self {
+            name: "rtx2080",
+            sms: 46,
+            warps_per_sm: 32,
+            clock_ghz: 1.71,
+            dram_gbps: 448.0,
+            l2_bytes: 4 * 1024 * 1024,
+            sector: 32,
+            line: 128,
+            launch_s: 4e-6,
+        }
+    }
+
+    /// Nvidia RTX 3090 (Ampere, CC 8.6): 82 SMs, 936 GB/s GDDR6X.
+    pub fn rtx3090() -> Self {
+        Self {
+            name: "rtx3090",
+            sms: 82,
+            warps_per_sm: 48,
+            clock_ghz: 1.70,
+            dram_gbps: 936.0,
+            l2_bytes: 6 * 1024 * 1024,
+            sector: 32,
+            line: 128,
+            launch_s: 4e-6,
+        }
+    }
+
+    /// The three evaluation GPUs in paper order.
+    pub fn all() -> [GpuConfig; 3] {
+        [Self::v100(), Self::rtx2080(), Self::rtx3090()]
+    }
+
+    /// Look up by name.
+    pub fn by_name(name: &str) -> Option<GpuConfig> {
+        Self::all().into_iter().find(|g| g.name == name)
+    }
+
+    /// Total concurrent warp slots (SMs × resident warps).
+    pub fn warp_slots(&self) -> usize {
+        self.sms * self.warps_per_sm
+    }
+
+    /// Cycles available per second.
+    pub fn cycles_per_second(&self) -> f64 {
+        self.clock_ghz * 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_and_slots() {
+        let g = GpuConfig::by_name("v100").unwrap();
+        assert_eq!(g.warp_slots(), 80 * 32);
+        assert!(GpuConfig::by_name("h100").is_none());
+        assert_eq!(GpuConfig::all().len(), 3);
+    }
+
+    #[test]
+    fn relative_capability_ordering() {
+        // 3090 should have more parallel slots than 2080; V100 and 3090
+        // have comparable bandwidth, both well above the 2080.
+        let v100 = GpuConfig::v100();
+        let r2080 = GpuConfig::rtx2080();
+        let r3090 = GpuConfig::rtx3090();
+        assert!(r3090.warp_slots() > r2080.warp_slots());
+        assert!(v100.dram_gbps > 1.5 * r2080.dram_gbps);
+        assert!((r3090.dram_gbps - v100.dram_gbps).abs() < 100.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Execution model: per-warp cost vectors → makespan under three resource
+//! bounds.
+//!
+//! 1. **LSU bound** — each SM has one load/store pipe shared by its
+//!    resident warps, so memory-issue cycles schedule onto `SMs` slots.
+//!    This is where coalescing quality and skew both bite: a mega-row's
+//!    transactions pile onto one SM.
+//! 2. **Slot bound** — total warp cycles schedule onto
+//!    `SMs × warps_per_SM` slots (optionally capped by register-pressure
+//!    occupancy). Captures compute/latency limits.
+//! 3. **DRAM bound** — bytes / bandwidth.
+//!
+//! The paper's Insight 3 falls out of the scheduling: with many more warps
+//! than slots, makespans approach `sum/slots` and per-warp imbalance stops
+//! mattering (new warps backfill finished slots); with few warps, the
+//! longest warp dominates and workload-balancing pays.
+
+use super::config::GpuConfig;
+use super::cost::{Bound, SimResult, WarpCost};
+
+/// Greedy list-scheduling makespan: assign warps in order to the
+/// earliest-free slot. O(W log S).
+pub fn makespan_cycles(warp_cycles: impl Iterator<Item = f64>, slots: usize) -> f64 {
+    let slots = slots.max(1);
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    // fixed-point cycles (1/16 cycle resolution) for Ord
+    let to_fx = |c: f64| (c * 16.0) as u64;
+    let mut heap: BinaryHeap<Reverse<u64>> = BinaryHeap::with_capacity(slots);
+    let mut makespan = 0u64;
+    for c in warp_cycles {
+        let free_at = if heap.len() < slots {
+            0
+        } else {
+            heap.pop().unwrap().0
+        };
+        let done = free_at + to_fx(c);
+        makespan = makespan.max(done);
+        heap.push(Reverse(done));
+    }
+    makespan as f64 / 16.0
+}
+
+/// Combine per-warp costs with the bandwidth bound and launch overhead.
+/// `occupancy_cap` limits resident warps per SM (register pressure).
+pub fn combine(
+    warps: &[WarpCost],
+    dram_bytes: f64,
+    occupancy_cap: Option<usize>,
+    gpu: &GpuConfig,
+) -> SimResult {
+    let lsu = makespan_cycles(warps.iter().map(|w| w.mem), gpu.sms);
+    let resident = occupancy_cap
+        .unwrap_or(gpu.warps_per_sm)
+        .min(gpu.warps_per_sm)
+        .max(1);
+    let slots = makespan_cycles(warps.iter().map(|w| w.total()), gpu.sms * resident);
+    let lsu_s = lsu / gpu.cycles_per_second();
+    let slot_s = slots / gpu.cycles_per_second();
+    let dram_s = dram_bytes / (gpu.dram_gbps * 1e9);
+    let (body, bound) = [
+        (lsu_s, Bound::Lsu),
+        (slot_s, Bound::Slots),
+        (dram_s, Bound::Dram),
+    ]
+    .into_iter()
+    .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+    .unwrap();
+    SimResult {
+        seconds: body + gpu.launch_s,
+        lsu_cycles: lsu,
+        slot_cycles: slots,
+        dram_bytes,
+        warps: warps.len(),
+        bound,
+    }
+}
+
+/// Clamp total DRAM traffic for a repeatedly-read operand: once the
+/// operand fits in L2, re-reads are L2 hits, so DRAM sees at most one full
+/// read of it (plus the compulsory floor `min_bytes`).
+pub fn l2_corrected_bytes(
+    requested_bytes: f64,
+    operand_bytes: f64,
+    l2_bytes: usize,
+    min_bytes: f64,
+) -> f64 {
+    if operand_bytes <= l2_bytes as f64 {
+        requested_bytes.min(operand_bytes.max(min_bytes))
+    } else {
+        requested_bytes
+    }
+}
+
+/// Register-pressure occupancy cap for kernels holding `regs_per_thread`
+/// registers: SMs have a 64K × 32-bit register file.
+pub fn occupancy_from_registers(regs_per_thread: usize) -> usize {
+    const REGFILE: usize = 65_536;
+    const THREADS_PER_WARP: usize = 32;
+    (REGFILE / (THREADS_PER_WARP * regs_per_thread.max(1))).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs(mems: &[f64]) -> Vec<WarpCost> {
+        mems.iter().map(|&m| WarpCost { mem: m, alu: 0.0 }).collect()
+    }
+
+    #[test]
+    fn single_wave_is_max() {
+        let m = makespan_cycles([10.0, 50.0, 20.0].into_iter(), 8);
+        assert_eq!(m, 50.0);
+    }
+
+    #[test]
+    fn many_waves_approach_average_load() {
+        let m = makespan_cycles(std::iter::repeat(7.0).take(1000), 10);
+        assert!((m - 700.0).abs() < 1.0, "makespan {m}");
+    }
+
+    #[test]
+    fn straggler_amortizes_under_load() {
+        // Insight 3: with many short warps, one straggler hides.
+        let mut big = vec![10.0; 10_000];
+        big.push(1000.0);
+        let m = makespan_cycles(big.iter().cloned(), 4);
+        let avg_load = (10.0 * 10_000.0 + 1000.0) / 4.0;
+        assert!(m < avg_load * 1.05, "straggler should amortize: {m} vs {avg_load}");
+        // but dominates when slots are plentiful
+        let wide = makespan_cycles(big.iter().cloned(), 20_000);
+        assert_eq!(wide, 1000.0);
+    }
+
+    #[test]
+    fn combine_picks_dominant_bound() {
+        let gpu = super::super::config::GpuConfig::v100();
+        // tiny compute, huge traffic → DRAM bound
+        let r = combine(&costs(&[100.0]), 1e9, None, &gpu);
+        assert_eq!(r.bound, super::super::cost::Bound::Dram);
+        // heavy mem issue, no traffic → LSU bound
+        let r2 = combine(&costs(&vec![1e5; 1000]), 10.0, None, &gpu);
+        assert_eq!(r2.bound, super::super::cost::Bound::Lsu);
+        // alu-only warps → slot bound
+        let alu_warps: Vec<WarpCost> = (0..10_000)
+            .map(|_| WarpCost { mem: 0.0, alu: 1e4 })
+            .collect();
+        let r3 = combine(&alu_warps, 10.0, None, &gpu);
+        assert_eq!(r3.bound, super::super::cost::Bound::Slots);
+    }
+
+    #[test]
+    fn occupancy_cap_slows_slot_bound() {
+        let gpu = super::super::config::GpuConfig::v100();
+        let warps: Vec<WarpCost> = (0..100_000)
+            .map(|_| WarpCost { mem: 0.0, alu: 100.0 })
+            .collect();
+        let free = combine(&warps, 0.0, None, &gpu);
+        let capped = combine(&warps, 0.0, Some(4), &gpu);
+        assert!(
+            capped.seconds > 3.5 * free.seconds,
+            "cap should slow: {} vs {}",
+            capped.seconds,
+            free.seconds
+        );
+    }
+
+    #[test]
+    fn occupancy_from_registers_breakpoints() {
+        assert_eq!(occupancy_from_registers(32), 64);
+        assert_eq!(occupancy_from_registers(256), 8);
+        assert!(occupancy_from_registers(10_000) >= 1);
+    }
+
+    #[test]
+    fn l2_correction() {
+        assert_eq!(l2_corrected_bytes(100e6, 1e6, 6 << 20, 0.0), 1e6);
+        assert_eq!(l2_corrected_bytes(100e6, 50e6, 6 << 20, 0.0), 100e6);
+        assert_eq!(l2_corrected_bytes(100e6, 1e6, 6 << 20, 2e6), 2e6);
+    }
+}

@@ -1,0 +1,374 @@
+//! GPU cost simulator — the evaluation substrate standing in for the
+//! paper's V100 / RTX 2080 / RTX 3090 testbed (see `DESIGN.md`
+//! §Substitutions).
+//!
+//! The pipeline: [`schedules`] builds the per-warp work trace a kernel
+//! design would generate for a given matrix and dense width; [`exec`]
+//! folds the trace through the GPU's occupancy (wave) model and DRAM
+//! bandwidth; [`simulate`] is the public entry point.
+//!
+//! The model is calibrated for *relative* fidelity: who wins, by roughly
+//! what factor, and where the crossovers fall as the paper's two input
+//! axes (sparsity pattern, dense width N) vary. Absolute seconds are not
+//! comparable to the authors' testbed.
+
+pub mod config;
+pub mod cost;
+pub mod exec;
+pub mod schedules;
+
+pub use config::GpuConfig;
+pub use cost::SimResult;
+
+use crate::kernels::baseline::{AsptMatrix, AsptPanelStats};
+use crate::kernels::KernelKind;
+use crate::sparse::{CsrMatrix, SegmentedMatrix};
+
+/// Kernel designs the simulator can run (the paper's four + variants for
+/// the ablations + the two comparison baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SimKernel {
+    /// SR-RS with the CSC optimization (our sequential row-split kernel).
+    SrRs,
+    /// SR-RS without CSC (ablation §2.1.3 baseline).
+    SrRsNoCsc,
+    /// SR-WB (sequential, nnz-split segments).
+    SrWb,
+    /// PR-RS with VDL fragments (our parallel row-split kernel).
+    PrRs,
+    /// PR SpMM as N independent SpMV passes (ablation §2.1.2 strawman).
+    PrRsNSpmv,
+    /// PR-WB — VSR.
+    PrWb,
+    /// cuSPARSE-like vendor baseline.
+    CuSparse,
+    /// ASpT-like adaptive-tiling baseline.
+    Aspt,
+}
+
+impl SimKernel {
+    /// The paper's four selectable designs (what the adaptive strategy
+    /// chooses among).
+    pub const OURS: [SimKernel; 4] = [
+        SimKernel::SrRs,
+        SimKernel::SrWb,
+        SimKernel::PrRs,
+        SimKernel::PrWb,
+    ];
+
+    /// Label for bench output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimKernel::SrRs => "sr_rs",
+            SimKernel::SrRsNoCsc => "sr_rs_nocsc",
+            SimKernel::SrWb => "sr_wb",
+            SimKernel::PrRs => "pr_rs",
+            SimKernel::PrRsNSpmv => "pr_rs_nspmv",
+            SimKernel::PrWb => "pr_wb",
+            SimKernel::CuSparse => "cusparse",
+            SimKernel::Aspt => "aspt",
+        }
+    }
+
+    /// Map from the coordinator's [`KernelKind`].
+    pub fn from_kind(k: KernelKind) -> SimKernel {
+        match k {
+            KernelKind::SrRs => SimKernel::SrRs,
+            KernelKind::SrWb => SimKernel::SrWb,
+            KernelKind::PrRs => SimKernel::PrRs,
+            KernelKind::PrWb => SimKernel::PrWb,
+        }
+    }
+}
+
+/// A matrix prepared for simulation: every format the schedules need,
+/// built once.
+pub struct SimMatrix {
+    pub csr: CsrMatrix,
+    pub segments: SegmentedMatrix,
+    aspt_panels: Vec<AsptPanelStats>,
+}
+
+impl SimMatrix {
+    /// Preprocess all kernel input formats (outside any timed region,
+    /// matching how the paper amortizes format construction).
+    pub fn new(csr: CsrMatrix) -> Self {
+        let segments = SegmentedMatrix::from_csr(&csr, crate::kernels::WARP);
+        let aspt_panels = AsptMatrix::from_csr(&csr).panel_stats();
+        Self {
+            csr,
+            segments,
+            aspt_panels,
+        }
+    }
+
+    /// Total floating-point work for dense width `n`.
+    pub fn flops(&self, n: usize) -> f64 {
+        2.0 * self.csr.nnz() as f64 * n.max(1) as f64
+    }
+}
+
+/// Simulate one kernel invocation of `Y = A · X` with dense width `n`
+/// (`n == 1` ⇒ SpMV) on `gpu`.
+pub fn simulate(kernel: SimKernel, a: &SimMatrix, n: usize, gpu: &GpuConfig) -> SimResult {
+    let n = n.max(1);
+    // the strawman runs N separate SpMV launches
+    if kernel == SimKernel::PrRsNSpmv {
+        let one = simulate(SimKernel::PrRs, a, 1, gpu);
+        return SimResult {
+            seconds: one.seconds * n as f64,
+            lsu_cycles: one.lsu_cycles * n as f64,
+            slot_cycles: one.slot_cycles * n as f64,
+            dram_bytes: one.dram_bytes * n as f64,
+            warps: one.warps * n,
+            bound: one.bound,
+        };
+    }
+    let trace = match kernel {
+        SimKernel::SrRs => schedules::sr_rs(&a.csr, n, true, gpu),
+        SimKernel::SrRsNoCsc => schedules::sr_rs(&a.csr, n, false, gpu),
+        SimKernel::SrWb => schedules::sr_wb(&a.segments, n, gpu),
+        SimKernel::PrRs => schedules::pr_rs(&a.csr, n, gpu),
+        SimKernel::PrWb => schedules::pr_wb(&a.segments, n, gpu),
+        SimKernel::CuSparse => {
+            if n == 1 {
+                schedules::cusparse_spmv(&a.csr, gpu)
+            } else {
+                schedules::cusparse_spmm(&a.csr, n, gpu)
+            }
+        }
+        SimKernel::Aspt => schedules::aspt(&a.aspt_panels, n, gpu),
+        SimKernel::PrRsNSpmv => unreachable!(),
+    };
+    finish(trace, &a.csr, n, gpu)
+}
+
+/// Fold a raw trace through the L2 correction and the execution model.
+fn finish(
+    trace: schedules::KernelTrace,
+    csr: &CsrMatrix,
+    n: usize,
+    gpu: &GpuConfig,
+) -> SimResult {
+    // Dense operand X (K × N f32): re-reads are partially absorbed by L2.
+    // When X fits, DRAM sees at most one full read; when it spills, the
+    // surviving fraction of re-read traffic scales with how badly it
+    // spills (a standard capacity-miss approximation).
+    let x_bytes = (csr.cols * n * 4) as f64;
+    let dense_dram = if x_bytes <= gpu.l2_bytes as f64 {
+        trace.dense_bytes.min(x_bytes.max(trace.dense_bytes.min(x_bytes)))
+    } else {
+        let spill = 1.0 - gpu.l2_bytes as f64 / x_bytes;
+        x_bytes + (trace.dense_bytes - x_bytes).max(0.0) * spill
+    };
+    let dram = trace.sparse_bytes + dense_dram + trace.out_bytes;
+    exec::combine(&trace.warps, dram, trace.occupancy_cap, gpu)
+}
+
+/// Simulate the best of the paper's four designs (oracle selection).
+pub fn simulate_oracle(a: &SimMatrix, n: usize, gpu: &GpuConfig) -> (SimKernel, SimResult) {
+    SimKernel::OURS
+        .iter()
+        .map(|&k| (k, simulate(k, a, n, gpu)))
+        .min_by(|x, y| x.1.seconds.partial_cmp(&y.1.seconds).unwrap())
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+    use crate::util::prng::Xoshiro256;
+
+    /// seconds minus launch overhead — isolates the modeled kernel body.
+    fn body(r: SimResult, gpu: &GpuConfig) -> f64 {
+        r.seconds - gpu.launch_s
+    }
+
+    fn uniform_matrix(rows: usize, avg_row: usize, seed: u64) -> SimMatrix {
+        let mut rng = Xoshiro256::seeded(seed);
+        let density = avg_row as f64 / rows as f64;
+        SimMatrix::new(CsrMatrix::from_coo(&CooMatrix::random_uniform(
+            rows, rows, density, &mut rng,
+        )))
+    }
+
+    /// A deliberately skewed matrix: mostly short rows plus a few
+    /// fixed-size mega rows that serialize any row-split kernel. The mega
+    /// rows do NOT scale with `rows`, so growing the matrix grows only the
+    /// balanced bulk (used to show the WB edge fading with total work).
+    fn skewed_matrix(rows: usize, seed: u64) -> SimMatrix {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut coo = CooMatrix::random_uniform(rows, rows, 4.0 / rows as f64, &mut rng);
+        let mega_len = 10_000.min(rows);
+        for mega in 0..5 {
+            for k in 0..mega_len {
+                coo.push(mega * (rows / 8), (k * 2 + mega) % rows, 1.0);
+            }
+        }
+        SimMatrix::new(CsrMatrix::from_coo(&coo))
+    }
+
+    #[test]
+    fn all_kernels_produce_finite_positive_times() {
+        let m = uniform_matrix(2000, 8, 701);
+        let gpu = GpuConfig::v100();
+        for k in [
+            SimKernel::SrRs,
+            SimKernel::SrRsNoCsc,
+            SimKernel::SrWb,
+            SimKernel::PrRs,
+            SimKernel::PrRsNSpmv,
+            SimKernel::PrWb,
+            SimKernel::CuSparse,
+            SimKernel::Aspt,
+        ] {
+            for n in [1usize, 4, 32, 128] {
+                let r = simulate(k, &m, n, &gpu);
+                assert!(
+                    r.seconds.is_finite() && r.seconds > 0.0,
+                    "{:?} n={n}: {:?}",
+                    k,
+                    r
+                );
+            }
+        }
+    }
+
+    /// Paper Insight 1 / Fig. 5 middle: parallel-reduction wins at small N,
+    /// sequential-reduction (with CSC) wins at large N.
+    #[test]
+    fn pr_sr_crossover_with_n() {
+        let m = uniform_matrix(20_000, 16, 702);
+        let gpu = GpuConfig::rtx3090();
+        let pr1 = body(simulate(SimKernel::PrRs, &m, 1, &gpu), &gpu);
+        let sr1 = body(simulate(SimKernel::SrRs, &m, 1, &gpu), &gpu);
+        assert!(pr1 < sr1, "PR should win at N=1: pr {pr1} sr {sr1}");
+        let pr32 = body(simulate(SimKernel::PrRs, &m, 32, &gpu), &gpu);
+        let sr32 = body(simulate(SimKernel::SrRs, &m, 32, &gpu), &gpu);
+        assert!(sr32 < pr32, "SR should win at N=32: pr {pr32} sr {sr32}");
+        let pr128 = body(simulate(SimKernel::PrRs, &m, 128, &gpu), &gpu);
+        let sr128 = body(simulate(SimKernel::SrRs, &m, 128, &gpu), &gpu);
+        assert!(
+            sr128 < 0.7 * pr128,
+            "SR should win clearly at N=128: pr {pr128} sr {sr128}"
+        );
+    }
+
+    /// Paper Insight 2: workload-balancing wins on skewed matrices
+    /// (straggler rows), and is ≈neutral-to-negative on balanced ones.
+    #[test]
+    fn wb_helps_skewed_hurts_balanced() {
+        let gpu = GpuConfig::v100();
+        let skew = skewed_matrix(3000, 703);
+        let wb = body(simulate(SimKernel::PrWb, &skew, 1, &gpu), &gpu);
+        let rs = body(simulate(SimKernel::PrRs, &skew, 1, &gpu), &gpu);
+        assert!(
+            wb < 0.7 * rs,
+            "WB should win clearly on skew: wb {wb} rs {rs}"
+        );
+
+        let flat = uniform_matrix(20_000, 32, 704);
+        let wb2 = body(simulate(SimKernel::PrWb, &flat, 1, &gpu), &gpu);
+        let rs2 = body(simulate(SimKernel::PrRs, &flat, 1, &gpu), &gpu);
+        assert!(
+            rs2 <= wb2 * 1.05,
+            "balanced: RS should be ≥ competitive: wb {wb2} rs {rs2}"
+        );
+    }
+
+    /// Paper Insight 3: imbalance stops mattering once the workload is
+    /// large (waves amortize the straggler), so the WB edge shrinks.
+    #[test]
+    fn wb_benefit_fades_with_total_work() {
+        let gpu = GpuConfig::v100();
+        // same skew shape, small vs large total workload
+        let small = skewed_matrix(3000, 705);
+        let large = skewed_matrix(60_000, 706);
+        let edge = |m: &SimMatrix| {
+            let wb = body(simulate(SimKernel::PrWb, m, 1, &gpu), &gpu);
+            let rs = body(simulate(SimKernel::PrRs, m, 1, &gpu), &gpu);
+            rs / wb
+        };
+        let e_small = edge(&small);
+        let e_large = edge(&large);
+        assert!(
+            e_small > e_large,
+            "WB edge should fade with scale: small {e_small} large {e_large}"
+        );
+    }
+
+    /// §2.1.3: CSC speeds up sequential-reduction SpMM at large N.
+    #[test]
+    fn csc_speedup_at_n128() {
+        // sized so X stays L2-resident at n=128 (otherwise both variants
+        // are DRAM-bound and converge)
+        let m = uniform_matrix(8_000, 16, 707);
+        let gpu = GpuConfig::rtx3090();
+        let with = body(simulate(SimKernel::SrRs, &m, 128, &gpu), &gpu);
+        let without = body(simulate(SimKernel::SrRsNoCsc, &m, 128, &gpu), &gpu);
+        let speedup = without / with;
+        assert!(
+            speedup > 1.05 && speedup < 3.0,
+            "CSC speedup at N=128 out of band: {speedup}"
+        );
+    }
+
+    /// §2.1.2: VDL beats N-separate-SpMV at N=2 (paper: 1.89×).
+    #[test]
+    fn vdl_beats_n_spmv() {
+        let m = uniform_matrix(20_000, 16, 708);
+        let gpu = GpuConfig::rtx3090();
+        let vdl = body(simulate(SimKernel::PrRs, &m, 2, &gpu), &gpu);
+        let straw = simulate(SimKernel::PrRsNSpmv, &m, 2, &gpu).seconds - 2.0 * gpu.launch_s;
+        let speedup = straw / vdl;
+        assert!(
+            speedup > 1.4 && speedup < 3.0,
+            "VDL speedup out of band: {speedup}"
+        );
+    }
+
+    /// Oracle picks a sensible design per regime.
+    #[test]
+    fn oracle_respects_regimes() {
+        let gpu = GpuConfig::v100();
+        let skew = skewed_matrix(3000, 709);
+        let (k_small_n, _) = simulate_oracle(&skew, 1, &gpu);
+        assert!(
+            matches!(k_small_n, SimKernel::PrWb | SimKernel::SrWb),
+            "skewed N=1 should pick a balanced kernel, got {:?}",
+            k_small_n
+        );
+        let flat = uniform_matrix(20_000, 8, 710);
+        let (k_large_n, _) = simulate_oracle(&flat, 128, &gpu);
+        assert!(
+            matches!(k_large_n, SimKernel::SrRs | SimKernel::SrWb),
+            "N=128 should pick sequential reduction, got {:?}",
+            k_large_n
+        );
+    }
+
+    /// Ours (oracle over the four designs) should beat the vendor baseline
+    /// on both a skewed and a clustered matrix at SpMM widths.
+    #[test]
+    fn ours_beats_cusparse_spmm() {
+        let gpu = GpuConfig::rtx3090();
+        // sized so X stays L2-resident at n=128 (the paper's SuiteSparse
+        // regime) — with X spilling L2 both kernels are DRAM-bound and
+        // converge, which the model reports honestly
+        for (m, label) in [
+            (uniform_matrix(8_000, 16, 711), "uniform"),
+            (skewed_matrix(8_000, 712), "skewed"),
+        ] {
+            for n in [32usize, 128] {
+                let (_, ours) = simulate_oracle(&m, n, &gpu);
+                let cu = simulate(SimKernel::CuSparse, &m, n, &gpu);
+                let ratio = cu.seconds / ours.seconds;
+                assert!(
+                    ratio > 1.0,
+                    "{label} n={n}: ours should win, ratio {ratio}"
+                );
+            }
+        }
+    }
+}

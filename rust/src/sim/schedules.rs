@@ -1,0 +1,568 @@
+//! Per-kernel warp schedules: translate a sparse matrix + dense width into
+//! the per-warp work trace each CUDA kernel design would generate.
+//!
+//! Each builder mirrors the control structure of the corresponding kernel
+//! in `kernels/` (and of the paper's CUDA kernels):
+//!
+//! - [`sr_rs`]  — sequential reduction, row split. At small N a warp covers
+//!   `32/N` *rows* (CSR-scalar shape: divergent lanes, uncoalesced sparse
+//!   loads); at N ≥ 32 a warp covers one row × a 32-column tile (GE-SpMM
+//!   RowSplit shape: broadcast sparse loads, coalesced dense lines). With
+//!   **CSC** the sparse stream is staged warp-coalesced through shared
+//!   memory (§2.1.3).
+//! - [`sr_wb`]  — sequential reduction over fixed-nnz segments; boundary
+//!   rows flushed with atomics.
+//! - [`pr_rs`]  — CSR-Vector: warp per row, coalesced sparse loads, dense
+//!   gather of **VDL** `(1,N)` lane fragments, merge tree. Lane-private
+//!   partials cost registers: occupancy degrades as N grows (Insight 1).
+//! - [`pr_wb`]  — VSR: warp per segment, segmented-scan network, per-run
+//!   dumps (stores + boundary atomics).
+//! - [`cusparse_spmv`] / [`cusparse_spmm`] — CSR-Adaptive-style vendor
+//!   baseline (row binning; no nnz-level balancing).
+//! - [`aspt`]   — panel-tiled baseline with dense-tile reuse.
+
+use super::config::GpuConfig;
+use super::cost::{
+    distinct_sectors_with, sector_round, WarpCost, ALU, ATOMIC, MEM_ISSUE, SECTOR_ISSUE, SHFL,
+    SMEM,
+};
+use super::exec::occupancy_from_registers;
+use crate::kernels::baseline::AsptPanelStats;
+use crate::sparse::{CsrMatrix, SegmentedMatrix};
+
+/// Raw trace of one kernel invocation, before occupancy/bandwidth folding.
+#[derive(Clone, Debug, Default)]
+pub struct KernelTrace {
+    pub warps: Vec<WarpCost>,
+    /// bytes of sparse-operand traffic (streamed once, no reuse)
+    pub sparse_bytes: f64,
+    /// requested dense-operand traffic (L2 correction applied later)
+    pub dense_bytes: f64,
+    /// output traffic
+    pub out_bytes: f64,
+    /// register-pressure occupancy cap (resident warps per SM)
+    pub occupancy_cap: Option<usize>,
+}
+
+/// Columns of the dense tile covered by one warp.
+const NT: usize = 32;
+
+fn ntiles(n: usize) -> usize {
+    n.div_ceil(NT).max(1)
+}
+
+fn tile_width(n: usize, t: usize) -> usize {
+    (n - t * NT).min(NT)
+}
+
+/// Scratch buffers shared across a schedule build.
+struct Scratch {
+    addrs: Vec<u64>,
+    sectors: Vec<u64>,
+}
+
+impl Scratch {
+    fn new() -> Self {
+        Self {
+            addrs: Vec::with_capacity(64),
+            sectors: Vec::with_capacity(256),
+        }
+    }
+
+    /// Issue a gather of `len`-byte lane fragments; returns sector count.
+    fn gather(&mut self, w: &mut WarpCost, len: usize, gpu: &GpuConfig) -> usize {
+        if self.addrs.is_empty() {
+            return 0;
+        }
+        let s = distinct_sectors_with(&self.addrs, len, gpu.sector, &mut self.sectors);
+        // one LSU instruction + pipeline replays for extra sectors
+        w.mem += MEM_ISSUE + (s as f64 - 1.0) * SECTOR_ISSUE;
+        s
+    }
+}
+
+/// SR-RS: sequential reduction, row split.
+pub fn sr_rs(a: &CsrMatrix, n: usize, csc: bool, gpu: &GpuConfig) -> KernelTrace {
+    let n = n.max(1);
+    let mut tr = KernelTrace::default();
+    // CSC's shared-memory staging needs the warp to own one row; GE-SpMM
+    // uses it for the warp-per-row regime, which starts paying off at
+    // N ≥ 8. Below that the kernel is CSR-scalar-shaped (g rows per warp)
+    // and the csc flag has nothing to stage into.
+    let warp_per_row = csc && n >= 8;
+    let nt_cov = n.min(NT);
+    let g = if warp_per_row { 1 } else { (NT / nt_cov).max(1) }; // rows per warp
+    let tiles = ntiles(n);
+    let groups = a.rows.div_ceil(g);
+    let mut sc = Scratch::new();
+    tr.warps.reserve(groups * tiles);
+    for t in 0..tiles {
+        let nt = tile_width(n, t);
+        let frag = nt * 4;
+        for gi in 0..groups {
+            let r0 = gi * g;
+            let r1 = (r0 + g).min(a.rows);
+            let mut w = WarpCost::default();
+            let mut e = 0usize; // total nnz in group
+            let mut lmax = 0usize;
+            for r in r0..r1 {
+                let l = a.row_nnz(r);
+                e += l;
+                lmax = lmax.max(l);
+            }
+            // ---- sparse operand ----
+            if warp_per_row {
+                // warp-coalesced stage-in to shared memory (§2.1.3), then
+                // per-lane iteration out of smem
+                let chunks = e.div_ceil(NT);
+                w.mem += chunks as f64 * 2.0 * MEM_ISSUE;
+                // smem reads issue on the LD/ST pipe
+                w.mem += lmax as f64 * SMEM;
+            } else if g == 1 {
+                // one row per warp: per-element (val,col) broadcast — the
+                // pair rides one 8-byte access plus a half-issue for the
+                // second array
+                w.mem += lmax as f64 * 1.5 * MEM_ISSUE;
+            } else {
+                // CSR-scalar: lanes walk their own rows — per-step gather
+                // over the lanes' (val,col) pairs (8 B each)
+                for s in 0..lmax {
+                    sc.addrs.clear();
+                    for r in r0..r1 {
+                        if a.row_nnz(r) > s {
+                            sc.addrs.push((a.indptr[r] as u64 + s as u64) * 8);
+                        }
+                    }
+                    sc.gather(&mut w, 8, gpu);
+                }
+            }
+            tr.sparse_bytes += e as f64 * 8.0;
+            // ---- dense operand ----
+            if g == 1 {
+                // GE-SpMM coarsening: when the tile is narrower than the
+                // warp (8 ≤ nt < 32), lane groups process `ep = 32/nt`
+                // elements concurrently — one issue serves ep scattered
+                // fragments, extra fragments replaying per sector.
+                let ep = (NT / nt.max(1)).max(1);
+                let frag_sectors = frag.div_ceil(gpu.sector).max(1);
+                let groups = lmax.div_ceil(ep);
+                w.mem += groups as f64
+                    * (MEM_ISSUE + (ep - 1) as f64 * frag_sectors as f64 * SECTOR_ISSUE);
+                tr.dense_bytes += e as f64 * sector_round(frag, gpu);
+            } else {
+                for s in 0..lmax {
+                    sc.addrs.clear();
+                    for r in r0..r1 {
+                        if a.row_nnz(r) > s {
+                            let c = a.indices[a.indptr[r] as usize + s] as u64;
+                            sc.addrs.push(c * (n as u64 * 4) + (t as u64 * 128));
+                        }
+                    }
+                    let secs = sc.gather(&mut w, frag, gpu);
+                    tr.dense_bytes += (secs * gpu.sector) as f64;
+                }
+            }
+            // ---- compute + store ----
+            w.alu += lmax as f64 * ALU;
+            if g == 1 {
+                w.mem += MEM_ISSUE;
+            } else {
+                // adjacent output rows strided by N*4
+                sc.addrs.clear();
+                for r in r0..r1 {
+                    sc.addrs.push(r as u64 * (n as u64 * 4) + t as u64 * 128);
+                }
+                sc.gather(&mut w, frag, gpu);
+            }
+            tr.out_bytes += ((r1 - r0) * nt * 4) as f64;
+            tr.warps.push(w);
+        }
+    }
+    tr
+}
+
+/// SR-WB: sequential reduction over fixed-nnz segments.
+pub fn sr_wb(seg: &SegmentedMatrix, n: usize, gpu: &GpuConfig) -> KernelTrace {
+    let n = n.max(1);
+    let mut tr = KernelTrace::default();
+    let tiles = ntiles(n);
+    let mut sc = Scratch::new();
+    let spans: Vec<usize> = (0..seg.num_segments)
+        .map(|s| seg.segment_row_span(s))
+        .collect();
+    tr.warps.reserve(seg.num_segments * tiles);
+    for t in 0..tiles {
+        let nt = tile_width(n, t);
+        let frag = nt * 4;
+        for s in 0..seg.num_segments {
+            let (_, cols, _) = seg.segment(s);
+            let mut w = WarpCost::default();
+            // coalesced loads of val/col/row (3 × 128 B)
+            w.mem += 3.0 * MEM_ISSUE;
+            tr.sparse_bytes += (seg.seg_len * 12) as f64;
+            if n < NT {
+                // SpMV-ish: lanes hold elements, gather dense fragments,
+                // sequential smem reduction per row run
+                sc.addrs.clear();
+                sc.addrs
+                    .extend(cols.iter().map(|&c| c as u64 * (n as u64 * 4)));
+                let secs = sc.gather(&mut w, frag, gpu);
+                tr.dense_bytes += (secs * gpu.sector) as f64;
+                // serial smem reduction: one lane walks the segment; the
+                // smem reads issue on the LD/ST pipe (this is the cost
+                // VSR's shuffle network avoids)
+                w.mem += seg.seg_len as f64 * SMEM;
+                w.alu += seg.seg_len as f64 * ALU;
+            } else {
+                // SpMM: warp covers a 32-column tile, iterates elements
+                // sequentially; one dense line broadcast per element
+                w.mem += seg.seg_len as f64 * (MEM_ISSUE + SMEM);
+                tr.dense_bytes += seg.seg_len as f64 * sector_round(frag, gpu);
+                w.alu += seg.seg_len as f64 * ALU;
+            }
+            // boundary rows via (batch-amortized) atomics, interior runs
+            // via scattered stores — same carry scheme as PR-WB
+            let span = spans[s] as f64;
+            w.mem += ATOMIC + (span - 1.0).max(0.0) * SECTOR_ISSUE;
+            tr.out_bytes += span * (nt * 4) as f64;
+            tr.warps.push(w);
+        }
+    }
+    tr
+}
+
+/// Registers per thread for the PR kernels: base + N lane-private partials.
+fn pr_occupancy(n: usize) -> usize {
+    occupancy_from_registers(24 + 2 * n)
+}
+
+/// Lane-private partials beyond what the register file holds spill to
+/// local memory: each spilled partial costs a read+write per element step.
+/// This is the mechanism that makes parallel-reduction untenable at large
+/// N (Insight 1).
+const SPILL_FREE_PARTIALS: usize = 64;
+
+fn spilled_partials(n: usize) -> usize {
+    n.saturating_sub(SPILL_FREE_PARTIALS)
+}
+
+/// PR-RS: CSR-Vector with VDL `(1,N)` lane fragments.
+pub fn pr_rs(a: &CsrMatrix, n: usize, gpu: &GpuConfig) -> KernelTrace {
+    let n = n.max(1);
+    let mut tr = KernelTrace {
+        occupancy_cap: Some(pr_occupancy(n)),
+        ..Default::default()
+    };
+    let mut sc = Scratch::new();
+    let frag = n * 4;
+    tr.warps.reserve(a.rows);
+    for r in 0..a.rows {
+        let (cols, _) = a.row(r);
+        let l = cols.len();
+        let mut w = WarpCost::default();
+        let windows = l.div_ceil(NT).max(1);
+        let mut k = 0;
+        for _ in 0..windows {
+            let hi = (k + NT).min(l);
+            // coalesced sparse loads (val + col)
+            w.mem += 2.0 * MEM_ISSUE;
+            tr.sparse_bytes += (hi - k) as f64 * 8.0;
+            // dense gather of lane fragments
+            sc.addrs.clear();
+            sc.addrs
+                .extend(cols[k..hi].iter().map(|&c| c as u64 * frag as u64));
+            let secs = sc.gather(&mut w, frag.max(4), gpu);
+            tr.dense_bytes += (secs * gpu.sector) as f64;
+            // lane multiply (N partials) + merge tree (5 steps × N)
+            w.alu += n as f64 * ALU + 5.0 * SHFL * n as f64;
+            // register-spill traffic for partials past the register file
+            let spill = spilled_partials(n);
+            if spill > 0 {
+                w.mem += spill as f64 * 2.0 * MEM_ISSUE;
+                tr.dense_bytes += (32 * spill * 8) as f64;
+            }
+            k = hi;
+        }
+        // store the (1, N) output row
+        w.mem += (frag.div_ceil(gpu.line)).max(1) as f64 * MEM_ISSUE;
+        tr.out_bytes += frag as f64;
+        tr.warps.push(w);
+    }
+    tr
+}
+
+/// PR-WB: the paper's VSR.
+pub fn pr_wb(seg: &SegmentedMatrix, n: usize, gpu: &GpuConfig) -> KernelTrace {
+    let n = n.max(1);
+    let mut tr = KernelTrace {
+        occupancy_cap: Some(pr_occupancy(n)),
+        ..Default::default()
+    };
+    let mut sc = Scratch::new();
+    let frag = n * 4;
+    tr.warps.reserve(seg.num_segments);
+    for s in 0..seg.num_segments {
+        let (_, cols, _) = seg.segment(s);
+        let span = seg.segment_row_span(s) as f64;
+        let mut w = WarpCost::default();
+        // coalesced loads: val, col, row
+        w.mem += 3.0 * MEM_ISSUE;
+        tr.sparse_bytes += (seg.seg_len * 12) as f64;
+        // dense gather (VDL fragments)
+        sc.addrs.clear();
+        sc.addrs
+            .extend(cols.iter().map(|&c| c as u64 * frag as u64));
+        let secs = sc.gather(&mut w, frag.max(4), gpu);
+        tr.dense_bytes += (secs * gpu.sector) as f64;
+        // multiply + segmented-scan network (5 predicated steps × N)
+        w.alu += n as f64 * ALU + 5.0 * SHFL * n as f64;
+        // register-spill traffic (same pressure as PR-RS)
+        let spill = spilled_partials(n);
+        if spill > 0 {
+            w.mem += spill as f64 * 2.0 * MEM_ISSUE;
+            tr.dense_bytes += (32 * spill * 8) as f64;
+        }
+        // dumps: interior runs are plain scattered stores; boundary
+        // atomics amortize across the multi-segment batches one warp
+        // processes in the production kernel (VSR carries partial runs
+        // across segments in registers, GE-SpMM §4.2)
+        w.mem += ATOMIC + (span - 1.0).max(0.0) * SECTOR_ISSUE;
+        tr.out_bytes += span * frag as f64;
+        tr.warps.push(w);
+    }
+    tr
+}
+
+/// cuSPARSE-like SpMV: CSR-Adaptive. Short rows are packed into row-aligned
+/// ~32-nnz bins (CSR-Stream); long rows take the CSR-Vector path. No
+/// nnz-level balancing across row boundaries — a mega-row stays serial in
+/// one warp, which is exactly where the paper's WB kernels win.
+pub fn cusparse_spmv(a: &CsrMatrix, gpu: &GpuConfig) -> KernelTrace {
+    let mut tr = KernelTrace::default();
+    let mut sc = Scratch::new();
+    let mut r = 0usize;
+    while r < a.rows {
+        let l = a.row_nnz(r);
+        if l >= NT {
+            // CSR-Vector path
+            let (cols, _) = a.row(r);
+            let mut w = WarpCost::default();
+            let mut k = 0;
+            while k < l {
+                let hi = (k + NT).min(l);
+                w.mem += 2.0 * MEM_ISSUE;
+                tr.sparse_bytes += (hi - k) as f64 * 8.0;
+                sc.addrs.clear();
+                sc.addrs.extend(cols[k..hi].iter().map(|&c| c as u64 * 4));
+                let secs = sc.gather(&mut w, 4, gpu);
+                tr.dense_bytes += (secs * gpu.sector) as f64;
+                w.alu += ALU + 5.0 * SHFL;
+                k = hi;
+            }
+            // row-block descriptor + indptr loads + store
+            w.mem += 3.0 * MEM_ISSUE;
+            w.alu += 4.0 * ALU;
+            tr.out_bytes += 4.0;
+            tr.warps.push(w);
+            r += 1;
+        } else {
+            // CSR-Stream bin
+            let bin_start = r;
+            let mut bin_nnz = 0usize;
+            while r < a.rows && a.row_nnz(r) < NT && bin_nnz + a.row_nnz(r) <= NT {
+                bin_nnz += a.row_nnz(r);
+                r += 1;
+            }
+            if r == bin_start {
+                r += 1; // always progress
+            }
+            let mut w = WarpCost::default();
+            w.mem += 2.0 * MEM_ISSUE;
+            tr.sparse_bytes += bin_nnz as f64 * 8.0;
+            sc.addrs.clear();
+            for rr in bin_start..r {
+                let (cols, _) = a.row(rr);
+                sc.addrs.extend(cols.iter().map(|&c| c as u64 * 4));
+            }
+            let secs = sc.gather(&mut w, 4, gpu);
+            tr.dense_bytes += (secs * gpu.sector) as f64;
+            // row-block descriptor + indptr loads + per-row smem
+            // reduction + bin store
+            w.alu += 5.0 * ALU;
+            w.mem += 3.0 * MEM_ISSUE + (r - bin_start) as f64 * 2.0 * SMEM;
+            tr.out_bytes += (r - bin_start) as f64 * 4.0;
+            tr.warps.push(w);
+        }
+    }
+    tr
+}
+
+/// cuSPARSE-like SpMM: csrmm ≈ row-split sequential reduction without the
+/// paper's CSC staging. The 0.85 issue credit models csrmm2's read-only
+/// cache path, which amortizes part of the per-element broadcast cost —
+/// without it the simulated gap to GE-SpMM overshoots the measurements in
+/// the paper's own prior work ([14] reports 1.3–1.5×).
+pub fn cusparse_spmm(a: &CsrMatrix, n: usize, gpu: &GpuConfig) -> KernelTrace {
+    let mut tr = sr_rs(a, n, /*csc=*/ false, gpu);
+    for w in &mut tr.warps {
+        w.mem *= 0.85;
+    }
+    tr
+}
+
+/// ASpT-like SpMM: panels with dense-tile reuse through shared memory.
+pub fn aspt(panels: &[AsptPanelStats], n: usize, gpu: &GpuConfig) -> KernelTrace {
+    let n = n.max(1);
+    let mut tr = KernelTrace::default();
+    let tiles = ntiles(n);
+    for t in 0..tiles {
+        let nt = tile_width(n, t);
+        let frag = nt * 4;
+        for p in panels {
+            let mut w = WarpCost::default();
+            // dense tiles: one coalesced X-row load per dense column,
+            // then entries stream through smem (the reuse)
+            w.mem += p.dense_cols as f64 * MEM_ISSUE;
+            tr.dense_bytes += p.dense_cols as f64 * sector_round(frag, gpu);
+            w.mem += (p.dense_entries.div_ceil(NT)) as f64 * 2.0 * MEM_ISSUE;
+            tr.sparse_bytes += p.dense_entries as f64 * 8.0;
+            w.mem += p.dense_entries as f64 * SMEM;
+            w.alu += p.dense_entries as f64 * ALU;
+            // sparse remainder: ASpT stages it through shared memory too
+            // (it is a tuned kernel); dense loads use the same coarsening
+            // as SR-RS
+            let ep = (NT / nt.max(1)).max(1);
+            let frag_sectors = frag.div_ceil(gpu.sector).max(1);
+            let per_group = MEM_ISSUE + (ep - 1) as f64 * frag_sectors as f64 * SECTOR_ISSUE;
+            // column extraction breaks the remainder's row contiguity
+            // (GE-SpMM [14] reports this as ASpT's main regression), so
+            // the stage-in replays ~3x vs a contiguous CSR stream
+            w.mem += (p.sparse_entries.div_ceil(NT)) as f64 * 2.0 * MEM_ISSUE * 3.0
+                + (p.sparse_entries.div_ceil(ep)) as f64 * per_group;
+            w.mem += p.sparse_entries as f64 * SMEM;
+            w.alu += p.sparse_entries as f64 * ALU;
+            tr.sparse_bytes += p.sparse_entries as f64 * 8.0;
+            tr.dense_bytes += p.sparse_entries as f64 * sector_round(frag, gpu);
+            // stores
+            w.mem += ((p.rows * frag).div_ceil(gpu.line)).max(1) as f64 * MEM_ISSUE * 0.25;
+            tr.out_bytes += (p.rows * frag) as f64;
+            tr.warps.push(w);
+        }
+    }
+    tr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+    use crate::util::prng::Xoshiro256;
+
+    fn gpu() -> GpuConfig {
+        GpuConfig::rtx3090()
+    }
+
+    fn random_csr(rows: usize, cols: usize, density: f64, seed: u64) -> CsrMatrix {
+        let mut rng = Xoshiro256::seeded(seed);
+        CsrMatrix::from_coo(&CooMatrix::random_uniform(rows, cols, density, &mut rng))
+    }
+
+    fn mem_sum(t: &KernelTrace) -> f64 {
+        t.warps.iter().map(|w| w.mem).sum()
+    }
+
+    #[test]
+    fn sr_rs_groups_rows_at_small_n() {
+        let a = random_csr(128, 128, 0.1, 601);
+        // N=1 → 32 rows per warp → 4 warps; N=64 → 1 row × 2 tiles → 256
+        assert_eq!(sr_rs(&a, 1, false, &gpu()).warps.len(), 4);
+        assert_eq!(sr_rs(&a, 64, false, &gpu()).warps.len(), 256);
+    }
+
+    #[test]
+    fn csc_reduces_mem_issue_not_bytes() {
+        let a = random_csr(200, 200, 0.2, 602);
+        let with = sr_rs(&a, 128, true, &gpu());
+        let without = sr_rs(&a, 128, false, &gpu());
+        assert!(
+            mem_sum(&with) < 0.8 * mem_sum(&without),
+            "CSC should cut LSU cycles: {} vs {}",
+            mem_sum(&with),
+            mem_sum(&without)
+        );
+        assert_eq!(with.sparse_bytes, without.sparse_bytes);
+    }
+
+    #[test]
+    fn pr_fragments_ride_free_up_to_sector() {
+        let a = random_csr(128, 4096, 0.01, 603);
+        let n1 = pr_rs(&a, 1, &gpu());
+        let n4 = pr_rs(&a, 4, &gpu());
+        let n64 = pr_rs(&a, 64, &gpu());
+        assert!(
+            n4.dense_bytes < 1.5 * n1.dense_bytes,
+            "VDL economy: n4 {} vs n1 {}",
+            n4.dense_bytes,
+            n1.dense_bytes
+        );
+        assert!(n64.dense_bytes > 5.0 * n1.dense_bytes);
+        // register pressure: occupancy cap shrinks with N
+        assert!(n64.occupancy_cap.unwrap() < n1.occupancy_cap.unwrap());
+    }
+
+    #[test]
+    fn pr_wb_balances_mem_cycles() {
+        // one mega row: PR-RS gives it one huge warp; PR-WB splits it
+        let mut coo = CooMatrix::new(1000, 1000);
+        for c in 0..1000 {
+            coo.push(0, c, 1.0);
+        }
+        for r in 1..1000 {
+            coo.push(r, r, 1.0);
+        }
+        let a = CsrMatrix::from_coo(&coo);
+        let seg = SegmentedMatrix::from_csr(&a, 32);
+        let rs = pr_rs(&a, 1, &gpu());
+        let wb = pr_wb(&seg, 1, &gpu());
+        let max_mem = |t: &KernelTrace| t.warps.iter().map(|w| w.mem).fold(0.0, f64::max);
+        assert!(
+            max_mem(&rs) > 4.0 * max_mem(&wb),
+            "mega-row warp should dominate RS: {} vs {}",
+            max_mem(&rs),
+            max_mem(&wb)
+        );
+    }
+
+    #[test]
+    fn cusparse_spmv_bins_short_rows() {
+        let mut coo = CooMatrix::new(1000, 1000);
+        for r in 0..1000 {
+            coo.push(r, r, 1.0);
+            coo.push(r, (r + 1) % 1000, 1.0);
+        }
+        let a = CsrMatrix::from_coo(&coo);
+        let tr = cusparse_spmv(&a, &gpu());
+        assert!(
+            tr.warps.len() < 200,
+            "expected binning, got {} warps",
+            tr.warps.len()
+        );
+    }
+
+    #[test]
+    fn traces_are_empty_safe() {
+        let a = CsrMatrix::from_coo(&CooMatrix::new(4, 4));
+        let seg = SegmentedMatrix::from_csr(&a, 32);
+        for tr in [
+            sr_rs(&a, 8, true, &gpu()),
+            sr_rs(&a, 8, false, &gpu()),
+            sr_wb(&seg, 8, &gpu()),
+            pr_rs(&a, 8, &gpu()),
+            pr_wb(&seg, 8, &gpu()),
+            cusparse_spmv(&a, &gpu()),
+        ] {
+            assert!(!tr.warps.is_empty());
+            assert!(tr.warps.iter().all(|w| w.total().is_finite()));
+        }
+    }
+}

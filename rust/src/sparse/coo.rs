@@ -1,0 +1,182 @@
+//! COO (triplet) sparse format — generation and interchange.
+
+use crate::util::prng::Xoshiro256;
+
+/// Coordinate-format sparse matrix. Entries may be unsorted and contain
+/// duplicates until [`CooMatrix::canonicalize`] is called (duplicates sum,
+/// as is conventional for assembly).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CooMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_idx: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CooMatrix {
+    /// Empty matrix of the given shape.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            row_idx: Vec::new(),
+            col_idx: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Push one entry (no dedup).
+    pub fn push(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols, "entry ({r},{c}) out of bounds");
+        self.row_idx.push(r as u32);
+        self.col_idx.push(c as u32);
+        self.values.push(v);
+    }
+
+    /// Number of stored entries (before canonicalization may include dups).
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Sort entries by (row, col) and sum duplicates. Zero-valued entries
+    /// are retained (they still occupy a slot in CSR, matching how graph
+    /// adjacency matrices keep explicit edges).
+    pub fn canonicalize(&mut self) {
+        let n = self.nnz();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_unstable_by_key(|&i| (self.row_idx[i], self.col_idx[i]));
+        let mut row2 = Vec::with_capacity(n);
+        let mut col2 = Vec::with_capacity(n);
+        let mut val2: Vec<f32> = Vec::with_capacity(n);
+        for &i in &order {
+            let (r, c, v) = (self.row_idx[i], self.col_idx[i], self.values[i]);
+            if let (Some(&lr), Some(&lc)) = (row2.last(), col2.last()) {
+                if lr == r && lc == c {
+                    *val2.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            row2.push(r);
+            col2.push(c);
+            val2.push(v);
+        }
+        self.row_idx = row2;
+        self.col_idx = col2;
+        self.values = val2;
+    }
+
+    /// Uniform random matrix with an expected `density` in (0, 1]: each
+    /// entry is present independently — Erdős–Rényi in matrix form.
+    pub fn random_uniform(rows: usize, cols: usize, density: f64, rng: &mut Xoshiro256) -> Self {
+        let mut m = Self::new(rows, cols);
+        // Sample per-row counts binomially via thinning to avoid O(rows*cols)
+        // for large sparse shapes: geometric skipping over the flat index
+        // space.
+        let total = rows as f64 * cols as f64;
+        let expected = (total * density).round() as usize;
+        if expected == 0 {
+            return m;
+        }
+        if density > 0.1 || total < 65_536.0 {
+            // dense-ish: direct Bernoulli sweep
+            for r in 0..rows {
+                for c in 0..cols {
+                    if rng.chance(density) {
+                        m.push(r, c, rng.next_f32() * 2.0 - 1.0);
+                    }
+                }
+            }
+        } else {
+            // geometric skipping: P(gap = k) = (1-p)^k p
+            let p = density;
+            let mut pos: f64 = 0.0;
+            let lim = total;
+            loop {
+                // draw gap ~ Geometric(p)
+                let u = rng.next_f64().max(1e-300);
+                let gap = (u.ln() / (1.0 - p).ln()).floor();
+                pos += gap + 1.0;
+                if pos > lim {
+                    break;
+                }
+                let flat = (pos - 1.0) as u64;
+                let r = (flat / cols as u64) as usize;
+                let c = (flat % cols as u64) as usize;
+                m.push(r, c, rng.next_f32() * 2.0 - 1.0);
+            }
+        }
+        m
+    }
+
+    /// Dense representation (for tests on small matrices).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for i in 0..self.nnz() {
+            out[self.row_idx[i] as usize * self.cols + self.col_idx[i] as usize] += self.values[i];
+        }
+        out
+    }
+
+    /// Transposed copy (entries swapped; not canonicalized).
+    pub fn transposed(&self) -> CooMatrix {
+        CooMatrix {
+            rows: self.cols,
+            cols: self.rows,
+            row_idx: self.col_idx.clone(),
+            col_idx: self.row_idx.clone(),
+            values: self.values.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonicalize_sorts_and_sums() {
+        let mut m = CooMatrix::new(3, 3);
+        m.push(2, 1, 1.0);
+        m.push(0, 0, 2.0);
+        m.push(2, 1, 3.0);
+        m.push(0, 2, 4.0);
+        m.canonicalize();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row_idx, vec![0, 0, 2]);
+        assert_eq!(m.col_idx, vec![0, 2, 1]);
+        assert_eq!(m.values, vec![2.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn random_uniform_density_is_close() {
+        let mut rng = Xoshiro256::seeded(11);
+        let m = CooMatrix::random_uniform(200, 200, 0.05, &mut rng);
+        let got = m.nnz() as f64 / (200.0 * 200.0);
+        assert!((got - 0.05).abs() < 0.01, "density {got}");
+    }
+
+    #[test]
+    fn geometric_skipping_matches_density_for_sparse() {
+        let mut rng = Xoshiro256::seeded(12);
+        let m = CooMatrix::random_uniform(2000, 2000, 0.001, &mut rng);
+        let got = m.nnz() as f64 / (2000.0 * 2000.0);
+        assert!((got - 0.001).abs() < 2e-4, "density {got}");
+        // all in bounds, sorted order not required
+        assert!(m.row_idx.iter().all(|&r| (r as usize) < 2000));
+        assert!(m.col_idx.iter().all(|&c| (c as usize) < 2000));
+    }
+
+    #[test]
+    fn transpose_roundtrip_dense() {
+        let mut rng = Xoshiro256::seeded(13);
+        let m = CooMatrix::random_uniform(17, 9, 0.2, &mut rng);
+        let d = m.to_dense();
+        let t = m.transposed().to_dense();
+        for r in 0..17 {
+            for c in 0..9 {
+                assert_eq!(d[r * 9 + c], t[c * 17 + r]);
+            }
+        }
+    }
+}

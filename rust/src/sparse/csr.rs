@@ -1,0 +1,295 @@
+//! CSR (compressed sparse row) — the canonical kernel input format.
+
+use super::coo::CooMatrix;
+
+/// CSR matrix: `indptr[r]..indptr[r+1]` indexes the non-zeros of row `r`
+/// in `indices`/`values`. Column indices within a row are sorted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from COO (canonicalizes a copy: sorts, sums duplicates).
+    pub fn from_coo(coo: &CooMatrix) -> Self {
+        let mut c = coo.clone();
+        c.canonicalize();
+        let mut indptr = vec![0u32; c.rows + 1];
+        for &r in &c.row_idx {
+            indptr[r as usize + 1] += 1;
+        }
+        for r in 0..c.rows {
+            indptr[r + 1] += indptr[r];
+        }
+        Self {
+            rows: c.rows,
+            cols: c.cols,
+            indptr,
+            indices: c.col_idx,
+            values: c.values,
+        }
+    }
+
+    /// Build directly from raw parts (validates invariants).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<u32>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Self {
+        assert_eq!(indptr.len(), rows + 1, "indptr length");
+        assert_eq!(indices.len(), values.len(), "indices/values length");
+        assert_eq!(*indptr.last().unwrap() as usize, indices.len(), "indptr tail");
+        for r in 0..rows {
+            assert!(indptr[r] <= indptr[r + 1], "indptr must be nondecreasing");
+        }
+        assert!(
+            indices.iter().all(|&c| (c as usize) < cols),
+            "column index out of bounds"
+        );
+        Self {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Number of non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Non-zero count of one row.
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        (self.indptr[r + 1] - self.indptr[r]) as usize
+    }
+
+    /// `(columns, values)` slices of one row.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let lo = self.indptr[r] as usize;
+        let hi = self.indptr[r + 1] as usize;
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Row lengths as f64 (feature extraction input).
+    pub fn row_lengths(&self) -> Vec<f64> {
+        (0..self.rows).map(|r| self.row_nnz(r) as f64).collect()
+    }
+
+    /// Transposed copy (CSC of self, re-expressed as CSR of Aᵀ) via
+    /// counting sort — O(nnz + rows + cols).
+    pub fn transposed(&self) -> CsrMatrix {
+        let mut indptr = vec![0u32; self.cols + 1];
+        for &c in &self.indices {
+            indptr[c as usize + 1] += 1;
+        }
+        for c in 0..self.cols {
+            indptr[c + 1] += indptr[c];
+        }
+        let mut cursor = indptr.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0f32; self.nnz()];
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for k in 0..cols.len() {
+                let c = cols[k] as usize;
+                let dst = cursor[c] as usize;
+                indices[dst] = r as u32;
+                values[dst] = vals[k];
+                cursor[c] += 1;
+            }
+        }
+        CsrMatrix {
+            rows: self.cols,
+            cols: self.rows,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Dense row-major copy (tests only).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for k in 0..cols.len() {
+                out[r * self.cols + cols[k] as usize] += vals[k];
+            }
+        }
+        out
+    }
+
+    /// Normalize rows to sum 1 (left stochastic), skipping empty rows.
+    /// Used for GCN-style mean aggregation.
+    pub fn row_normalized(&self) -> CsrMatrix {
+        let mut out = self.clone();
+        for r in 0..out.rows {
+            let lo = out.indptr[r] as usize;
+            let hi = out.indptr[r + 1] as usize;
+            let sum: f32 = out.values[lo..hi].iter().sum();
+            if sum != 0.0 {
+                for v in &mut out.values[lo..hi] {
+                    *v /= sum;
+                }
+            }
+        }
+        out
+    }
+
+    /// Symmetric GCN normalization  D^{-1/2} (A + I) D^{-1/2}.
+    pub fn gcn_normalized(&self) -> CsrMatrix {
+        assert_eq!(self.rows, self.cols, "gcn normalization needs square A");
+        // A + I as COO
+        let mut coo = CooMatrix::new(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for k in 0..cols.len() {
+                coo.push(r, cols[k] as usize, vals[k]);
+            }
+            coo.push(r, r, 1.0);
+        }
+        let a_hat = CsrMatrix::from_coo(&coo);
+        let deg: Vec<f32> = (0..a_hat.rows)
+            .map(|r| a_hat.row(r).1.iter().sum::<f32>())
+            .collect();
+        let mut out = a_hat.clone();
+        for r in 0..out.rows {
+            let lo = out.indptr[r] as usize;
+            let hi = out.indptr[r + 1] as usize;
+            let dr = deg[r].max(1e-12).sqrt();
+            for k in lo..hi {
+                let c = out.indices[k] as usize;
+                let dc = deg[c].max(1e-12).sqrt();
+                out.values[k] /= dr * dc;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest::run_prop;
+
+    fn small() -> CsrMatrix {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        let mut coo = CooMatrix::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 2, 2.0);
+        coo.push(2, 0, 3.0);
+        coo.push(2, 1, 4.0);
+        CsrMatrix::from_coo(&coo)
+    }
+
+    #[test]
+    fn from_coo_layout() {
+        let m = small();
+        assert_eq!(m.indptr, vec![0, 2, 2, 4]);
+        assert_eq!(m.indices, vec![0, 2, 0, 1]);
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_nnz(1), 0);
+        let (c, v) = m.row(2);
+        assert_eq!(c, &[0, 1]);
+        assert_eq!(v, &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let m = small();
+        let t = m.transposed();
+        let d = m.to_dense();
+        let td = t.to_dense();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(d[r * 3 + c], td[c * 3 + r]);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_is_involution_property() {
+        run_prop("csr transpose involution", 40, |g| {
+            let rows = g.dim();
+            let cols = g.dim();
+            let density = g.f64_in(0.01, 0.5);
+            let coo = CooMatrix::random_uniform(rows, cols, density, g.rng());
+            let m = CsrMatrix::from_coo(&coo);
+            let tt = m.transposed().transposed();
+            if tt == m {
+                Ok(())
+            } else {
+                Err(format!("{rows}x{cols} density {density}"))
+            }
+        });
+    }
+
+    #[test]
+    fn coo_csr_dense_agree_property() {
+        run_prop("coo->csr preserves dense", 40, |g| {
+            let rows = g.dim();
+            let cols = g.dim();
+            let coo = CooMatrix::random_uniform(rows, cols, 0.3, g.rng());
+            let csr = CsrMatrix::from_coo(&coo);
+            if csr.to_dense() == coo.to_dense() {
+                Ok(())
+            } else {
+                Err(format!("{rows}x{cols}"))
+            }
+        });
+    }
+
+    #[test]
+    fn row_normalized_rows_sum_to_one() {
+        let mut rng = Xoshiro256::seeded(21);
+        let coo = CooMatrix::random_uniform(50, 50, 0.1, &mut rng);
+        let m = CsrMatrix::from_coo(&coo).row_normalized();
+        for r in 0..m.rows {
+            let (_, vals) = m.row(r);
+            if !vals.is_empty() {
+                let s: f32 = vals.iter().sum();
+                assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn gcn_normalized_is_symmetric_for_symmetric_input() {
+        // build a symmetric matrix
+        let mut coo = CooMatrix::new(6, 6);
+        for (a, b) in [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 0), (1, 4)] {
+            coo.push(a, b, 1.0);
+            coo.push(b, a, 1.0);
+        }
+        let norm = CsrMatrix::from_coo(&coo).gcn_normalized();
+        let d = norm.to_dense();
+        for r in 0..6 {
+            for c in 0..6 {
+                assert!((d[r * 6 + c] - d[c * 6 + r]).abs() < 1e-6);
+            }
+        }
+        // self-loops present
+        for r in 0..6 {
+            assert!(d[r * 6 + r] > 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "indptr tail")]
+    fn from_parts_validates() {
+        CsrMatrix::from_parts(2, 2, vec![0, 1, 3], vec![0, 1], vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,168 @@
+//! ELL (ELLPACK) padded format — input to the **row-split** kernels.
+//!
+//! Every row is padded to a common width; padded slots carry value 0 and a
+//! sentinel column (we reuse column 0 with value 0, which is harmless for
+//! SpMM). This gives the static shapes the Pallas kernels require: a
+//! `(rows_padded, width)` pair of value/index planes.
+
+use super::csr::CsrMatrix;
+
+/// Padded ELLPACK layout.
+///
+/// `values[r * width + k]` / `col_idx[r * width + k]` hold the `k`-th
+/// non-zero of row `r` (zero-filled past `row_nnz[r]`). `rows_padded` is
+/// `rows` rounded up to `row_block`, so kernels can tile rows uniformly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EllMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// rows rounded up to the row-block granularity
+    pub rows_padded: usize,
+    /// padded row width (max row nnz rounded up to `width_align`)
+    pub width: usize,
+    pub values: Vec<f32>,
+    pub col_idx: Vec<u32>,
+    /// true (unpadded) nnz per row
+    pub row_nnz: Vec<u32>,
+}
+
+impl EllMatrix {
+    /// Convert from CSR, padding rows to `width_align` columns and the row
+    /// count to `row_block` rows. `width_align`/`row_block` of 1 mean "no
+    /// alignment".
+    pub fn from_csr(csr: &CsrMatrix, width_align: usize, row_block: usize) -> Self {
+        let width_align = width_align.max(1);
+        let row_block = row_block.max(1);
+        let max_nnz = (0..csr.rows).map(|r| csr.row_nnz(r)).max().unwrap_or(0);
+        let width = max_nnz.div_ceil(width_align).max(1) * width_align;
+        let rows_padded = csr.rows.div_ceil(row_block) * row_block;
+        let mut values = vec![0f32; rows_padded * width];
+        let mut col_idx = vec![0u32; rows_padded * width];
+        let mut row_nnz = vec![0u32; rows_padded];
+        for r in 0..csr.rows {
+            let (cols, vals) = csr.row(r);
+            row_nnz[r] = cols.len() as u32;
+            let base = r * width;
+            values[base..base + vals.len()].copy_from_slice(vals);
+            col_idx[base..base + cols.len()].copy_from_slice(cols);
+        }
+        Self {
+            rows: csr.rows,
+            cols: csr.cols,
+            rows_padded,
+            width,
+            values,
+            col_idx,
+            row_nnz,
+        }
+    }
+
+    /// Stored (padded) element count.
+    pub fn padded_len(&self) -> usize {
+        self.rows_padded * self.width
+    }
+
+    /// True nnz (sum of row_nnz).
+    pub fn nnz(&self) -> usize {
+        self.row_nnz.iter().map(|&n| n as usize).sum()
+    }
+
+    /// Padding overhead ratio `padded/nnz` (∞-safe: returns padded_len when
+    /// nnz is zero). The paper's motivation for not always using ELL.
+    pub fn padding_ratio(&self) -> f64 {
+        let nnz = self.nnz();
+        if nnz == 0 {
+            self.padded_len() as f64
+        } else {
+            self.padded_len() as f64 / nnz as f64
+        }
+    }
+
+    /// Dense reconstruction (tests only).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for k in 0..self.row_nnz[r] as usize {
+                let c = self.col_idx[r * self.width + k] as usize;
+                out[r * self.cols + c] += self.values[r * self.width + k];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::CooMatrix;
+    use crate::util::proptest::run_prop;
+
+    fn csr_3x4() -> CsrMatrix {
+        let mut coo = CooMatrix::new(3, 4);
+        coo.push(0, 1, 1.0);
+        coo.push(0, 3, 2.0);
+        coo.push(0, 0, 0.5);
+        coo.push(2, 2, 3.0);
+        CsrMatrix::from_coo(&coo)
+    }
+
+    #[test]
+    fn from_csr_pads_width_and_rows() {
+        let e = EllMatrix::from_csr(&csr_3x4(), 4, 8);
+        assert_eq!(e.width, 4); // max nnz 3 -> aligned to 4
+        assert_eq!(e.rows_padded, 8);
+        assert_eq!(e.nnz(), 4);
+        assert_eq!(e.row_nnz[0], 3);
+        assert_eq!(e.row_nnz[1], 0);
+        assert_eq!(e.row_nnz[2], 1);
+        // padded slots are explicit zeros
+        assert_eq!(e.values[3], 0.0);
+        assert_eq!(e.col_idx[3], 0);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let c = csr_3x4();
+        let e = EllMatrix::from_csr(&c, 2, 4);
+        assert_eq!(e.to_dense(), c.to_dense());
+    }
+
+    #[test]
+    fn dense_roundtrip_property() {
+        run_prop("ell<->csr dense agree", 40, |g| {
+            let rows = g.dim();
+            let cols = g.dim();
+            let coo = CooMatrix::random_uniform(rows, cols, 0.3, g.rng());
+            let csr = CsrMatrix::from_coo(&coo);
+            let align = *g.choose(&[1usize, 2, 4, 8]);
+            let rb = *g.choose(&[1usize, 4, 16]);
+            let ell = EllMatrix::from_csr(&csr, align, rb);
+            if ell.to_dense() == csr.to_dense() {
+                Ok(())
+            } else {
+                Err(format!("{rows}x{cols} align {align} rb {rb}"))
+            }
+        });
+    }
+
+    #[test]
+    fn padding_ratio_reflects_skew() {
+        // one long row + many empty rows => high padding ratio
+        let mut coo = CooMatrix::new(32, 64);
+        for c in 0..64 {
+            coo.push(0, c, 1.0);
+        }
+        coo.push(1, 0, 1.0);
+        let e = EllMatrix::from_csr(&CsrMatrix::from_coo(&coo), 1, 1);
+        assert!(e.padding_ratio() > 10.0, "ratio {}", e.padding_ratio());
+    }
+
+    #[test]
+    fn empty_matrix_is_safe() {
+        let csr = CsrMatrix::from_coo(&CooMatrix::new(4, 4));
+        let e = EllMatrix::from_csr(&csr, 4, 4);
+        assert_eq!(e.nnz(), 0);
+        assert_eq!(e.width, 4); // min width respected
+        assert_eq!(e.to_dense(), vec![0.0; 16]);
+    }
+}

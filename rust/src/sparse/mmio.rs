@@ -1,0 +1,205 @@
+//! MatrixMarket (`.mtx`) I/O — the SuiteSparse interchange format.
+//!
+//! Supports `matrix coordinate {real,integer,pattern} {general,symmetric}`,
+//! which covers the overwhelming majority of SuiteSparse. Pattern entries
+//! get value 1.0; symmetric files are expanded to general on read.
+
+use super::coo::CooMatrix;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Field {
+    Real,
+    Integer,
+    Pattern,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Symmetry {
+    General,
+    Symmetric,
+}
+
+/// Read a MatrixMarket coordinate file into COO (1-based indices converted
+/// to 0-based; symmetric entries mirrored).
+pub fn read_matrix_market(path: &Path) -> Result<CooMatrix> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    read_matrix_market_from(BufReader::new(file))
+}
+
+/// Read from any buffered reader (unit-testable without files).
+pub fn read_matrix_market_from<R: BufRead>(reader: R) -> Result<CooMatrix> {
+    let mut lines = reader.lines();
+    let header = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                if !l.trim().is_empty() {
+                    break l;
+                }
+            }
+            None => bail!("empty MatrixMarket file"),
+        }
+    };
+    let toks: Vec<&str> = header.split_whitespace().collect();
+    if toks.len() < 5 || toks[0] != "%%MatrixMarket" || toks[1] != "matrix" {
+        bail!("bad MatrixMarket header: {header}");
+    }
+    if toks[2] != "coordinate" {
+        bail!("only coordinate format supported, got {}", toks[2]);
+    }
+    let field = match toks[3] {
+        "real" => Field::Real,
+        "integer" => Field::Integer,
+        "pattern" => Field::Pattern,
+        other => bail!("unsupported field type: {other}"),
+    };
+    let symmetry = match toks[4] {
+        "general" => Symmetry::General,
+        "symmetric" => Symmetry::Symmetric,
+        other => bail!("unsupported symmetry: {other}"),
+    };
+
+    // skip comments, find the size line
+    let size_line = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                let t = l.trim();
+                if t.is_empty() || t.starts_with('%') {
+                    continue;
+                }
+                break l;
+            }
+            None => bail!("missing size line"),
+        }
+    };
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>())
+        .collect::<Result<_, _>>()
+        .with_context(|| format!("bad size line: {size_line}"))?;
+    if dims.len() != 3 {
+        bail!("size line must have 3 fields: {size_line}");
+    }
+    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut coo = CooMatrix::new(rows, cols);
+    let mut read = 0usize;
+    for l in lines {
+        let l = l?;
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let parts: Vec<&str> = t.split_whitespace().collect();
+        let expect_fields = if field == Field::Pattern { 2 } else { 3 };
+        if parts.len() < expect_fields {
+            bail!("bad entry line: {t}");
+        }
+        let r: usize = parts[0].parse().with_context(|| format!("row in: {t}"))?;
+        let c: usize = parts[1].parse().with_context(|| format!("col in: {t}"))?;
+        if r == 0 || c == 0 || r > rows || c > cols {
+            bail!("entry ({r},{c}) out of bounds for {rows}x{cols}");
+        }
+        let v: f32 = match field {
+            Field::Pattern => 1.0,
+            _ => parts[2].parse().with_context(|| format!("value in: {t}"))?,
+        };
+        coo.push(r - 1, c - 1, v);
+        if symmetry == Symmetry::Symmetric && r != c {
+            coo.push(c - 1, r - 1, v);
+        }
+        read += 1;
+    }
+    if read != nnz {
+        bail!("expected {nnz} entries, found {read}");
+    }
+    Ok(coo)
+}
+
+/// Write COO as a `general real` MatrixMarket file.
+pub fn write_matrix_market(path: &Path, coo: &CooMatrix) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "% written by ge-spmm")?;
+    writeln!(f, "{} {} {}", coo.rows, coo.cols, coo.nnz())?;
+    for i in 0..coo.nnz() {
+        writeln!(
+            f,
+            "{} {} {}",
+            coo.row_idx[i] + 1,
+            coo.col_idx[i] + 1,
+            coo.values[i]
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn reads_general_real() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    % comment\n\
+                    3 4 2\n\
+                    1 2 1.5\n\
+                    3 4 -2\n";
+        let m = read_matrix_market_from(Cursor::new(text)).unwrap();
+        assert_eq!((m.rows, m.cols, m.nnz()), (3, 4, 2));
+        assert_eq!(m.to_dense()[0 * 4 + 1], 1.5);
+        assert_eq!(m.to_dense()[2 * 4 + 3], -2.0);
+    }
+
+    #[test]
+    fn reads_pattern_symmetric() {
+        let text = "%%MatrixMarket matrix coordinate pattern symmetric\n\
+                    3 3 2\n\
+                    2 1\n\
+                    3 3\n";
+        let m = read_matrix_market_from(Cursor::new(text)).unwrap();
+        // (2,1) mirrored to (1,2); diagonal (3,3) not duplicated
+        assert_eq!(m.nnz(), 3);
+        let d = m.to_dense();
+        assert_eq!(d[1 * 3 + 0], 1.0);
+        assert_eq!(d[0 * 3 + 1], 1.0);
+        assert_eq!(d[2 * 3 + 2], 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        for text in [
+            "not a header\n1 1 0\n",
+            "%%MatrixMarket matrix array real general\n1 1 0\n",
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n5 1 1.0\n",
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n",
+        ] {
+            assert!(
+                read_matrix_market_from(Cursor::new(text)).is_err(),
+                "should reject: {text}"
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let mut coo = CooMatrix::new(5, 7);
+        coo.push(0, 6, 1.0);
+        coo.push(4, 0, -3.5);
+        coo.push(2, 3, 0.25);
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ge_spmm_mmio_test_{}.mtx", std::process::id()));
+        write_matrix_market(&path, &coo).unwrap();
+        let back = read_matrix_market(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.to_dense(), coo.to_dense());
+    }
+}

@@ -1,0 +1,95 @@
+//! Sparse matrix formats and conversions.
+//!
+//! The kernel designs in the paper consume three layouts:
+//!
+//! - [`CooMatrix`] — triplet form, the interchange/generation format;
+//! - [`CsrMatrix`] — compressed sparse row, the canonical input format
+//!   (what cuSPARSE and the paper's kernels take);
+//! - [`EllMatrix`] — padded row-major layout used by the **row-split**
+//!   Pallas kernels (static shapes);
+//! - [`SegmentedMatrix`] — fixed-nnz-per-segment layout used by the
+//!   **workload-balanced** kernels (the paper's "assign each warp a fixed
+//!   number of non-zeros"), with per-element row indices.
+//!
+//! [`mmio`] reads/writes MatrixMarket files so external matrices (e.g.
+//! downloaded SuiteSparse entries) can be used when available.
+
+pub mod coo;
+pub mod csr;
+pub mod ell;
+pub mod mmio;
+pub mod segments;
+
+pub use coo::CooMatrix;
+pub use csr::CsrMatrix;
+pub use ell::EllMatrix;
+pub use segments::SegmentedMatrix;
+
+/// Dense row-major matrix with explicit shape — the `X`/`Y` operands.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    /// Zero-filled dense matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// From existing row-major data.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "dense shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Random dense matrix in `[-scale, scale)`.
+    pub fn random(rows: usize, cols: usize, scale: f32, rng: &mut crate::util::prng::Xoshiro256) -> Self {
+        let mut data = vec![0.0; rows * cols];
+        rng.fill_uniform_f32(&mut data, scale);
+        Self { rows, cols, data }
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Mutable element accessor.
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_accessors() {
+        let mut d = DenseMatrix::zeros(2, 3);
+        *d.at_mut(1, 2) = 5.0;
+        assert_eq!(d.at(1, 2), 5.0);
+        assert_eq!(d.row(1), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn from_vec_checks_shape() {
+        DenseMatrix::from_vec(2, 2, vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,204 @@
+//! Fixed-nnz segment format — input to the **workload-balanced** kernels.
+//!
+//! The paper's workload-balancing principle assigns *a fixed number of
+//! non-zeros per warp* instead of whole rows (Fig. 2(b)/(e)). This module
+//! materializes that assignment: the CSR stream of non-zeros is cut into
+//! `seg_len`-sized segments, and every element carries its row index so the
+//! kernel can perform segment reduction across row boundaries (VSR) or
+//! carry-out accumulation (SR-WB).
+
+use super::csr::CsrMatrix;
+
+/// Segmented (nnz-split) layout.
+///
+/// `values/col_idx/row_idx` are the CSR non-zero stream padded to
+/// `num_segments * seg_len`; padded slots have value 0 and row/col indices
+/// equal to the *last real row/col* (so they merge into an existing segment
+/// without affecting sums).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SegmentedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub seg_len: usize,
+    pub num_segments: usize,
+    pub values: Vec<f32>,
+    pub col_idx: Vec<u32>,
+    pub row_idx: Vec<u32>,
+    /// true nnz before padding
+    pub nnz: usize,
+}
+
+impl SegmentedMatrix {
+    /// Cut the CSR non-zero stream into segments of `seg_len` elements.
+    pub fn from_csr(csr: &CsrMatrix, seg_len: usize) -> Self {
+        assert!(seg_len > 0, "segment length must be positive");
+        let nnz = csr.nnz();
+        let num_segments = nnz.div_ceil(seg_len).max(1);
+        let padded = num_segments * seg_len;
+        let mut values = Vec::with_capacity(padded);
+        let mut col_idx = Vec::with_capacity(padded);
+        let mut row_idx = Vec::with_capacity(padded);
+        for r in 0..csr.rows {
+            let (cols, vals) = csr.row(r);
+            for k in 0..cols.len() {
+                values.push(vals[k]);
+                col_idx.push(cols[k]);
+                row_idx.push(r as u32);
+            }
+        }
+        let (pad_row, pad_col) = if nnz > 0 {
+            (row_idx[nnz - 1], col_idx[nnz - 1])
+        } else {
+            (0, 0)
+        };
+        values.resize(padded, 0.0);
+        col_idx.resize(padded, pad_col);
+        row_idx.resize(padded, pad_row);
+        Self {
+            rows: csr.rows,
+            cols: csr.cols,
+            seg_len,
+            num_segments,
+            values,
+            col_idx,
+            row_idx,
+            nnz,
+        }
+    }
+
+    /// `(values, cols, rows)` slices of segment `s`.
+    #[inline]
+    pub fn segment(&self, s: usize) -> (&[f32], &[u32], &[u32]) {
+        let lo = s * self.seg_len;
+        let hi = lo + self.seg_len;
+        (
+            &self.values[lo..hi],
+            &self.col_idx[lo..hi],
+            &self.row_idx[lo..hi],
+        )
+    }
+
+    /// Number of distinct rows touched by segment `s` — a workload metric
+    /// used by the simulator (each distinct row implies one output
+    /// update/atomic in the CUDA design).
+    pub fn segment_row_span(&self, s: usize) -> usize {
+        let (_, _, rows) = self.segment(s);
+        if rows.is_empty() {
+            return 0;
+        }
+        let mut distinct = 1;
+        for k in 1..rows.len() {
+            if rows[k] != rows[k - 1] {
+                distinct += 1;
+            }
+        }
+        distinct
+    }
+
+    /// Dense reconstruction (tests only).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.rows * self.cols];
+        for i in 0..self.nnz {
+            out[self.row_idx[i] as usize * self.cols + self.col_idx[i] as usize] +=
+                self.values[i];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::CooMatrix;
+    use crate::util::proptest::run_prop;
+
+    fn skewed() -> CsrMatrix {
+        // row 0: 5 nnz, row 1: 1 nnz, row 2: 0, row 3: 2 nnz
+        let mut coo = CooMatrix::new(4, 8);
+        for c in 0..5 {
+            coo.push(0, c, (c + 1) as f32);
+        }
+        coo.push(1, 7, 6.0);
+        coo.push(3, 0, 7.0);
+        coo.push(3, 4, 8.0);
+        CsrMatrix::from_coo(&coo)
+    }
+
+    #[test]
+    fn segments_cover_stream_in_order() {
+        let m = SegmentedMatrix::from_csr(&skewed(), 4);
+        assert_eq!(m.nnz, 8);
+        assert_eq!(m.num_segments, 2);
+        let (v0, _, r0) = m.segment(0);
+        assert_eq!(v0, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r0, &[0, 0, 0, 0]);
+        let (v1, _, r1) = m.segment(1);
+        assert_eq!(v1, &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(r1, &[0, 1, 3, 3]);
+    }
+
+    #[test]
+    fn padding_is_benign() {
+        let m = SegmentedMatrix::from_csr(&skewed(), 5);
+        assert_eq!(m.num_segments, 2);
+        let (v1, _, r1) = m.segment(1);
+        // 3 real + 2 pad entries with value 0 merged into last row
+        assert_eq!(v1[3], 0.0);
+        assert_eq!(v1[4], 0.0);
+        assert_eq!(r1[3], 3);
+        assert_eq!(r1[4], 3);
+        assert_eq!(m.to_dense(), skewed().to_dense());
+    }
+
+    #[test]
+    fn row_span_counts_boundaries() {
+        let m = SegmentedMatrix::from_csr(&skewed(), 4);
+        assert_eq!(m.segment_row_span(0), 1); // all row 0
+        assert_eq!(m.segment_row_span(1), 3); // rows 0, 1, 3
+    }
+
+    #[test]
+    fn dense_roundtrip_property() {
+        run_prop("segments dense roundtrip", 40, |g| {
+            let rows = g.dim();
+            let cols = g.dim();
+            let coo = CooMatrix::random_uniform(rows, cols, 0.3, g.rng());
+            let csr = CsrMatrix::from_coo(&coo);
+            let seg_len = *g.choose(&[1usize, 3, 8, 32]);
+            let seg = SegmentedMatrix::from_csr(&csr, seg_len);
+            if seg.to_dense() == csr.to_dense() {
+                Ok(())
+            } else {
+                Err(format!("{rows}x{cols} seg_len {seg_len}"))
+            }
+        });
+    }
+
+    #[test]
+    fn empty_matrix_one_padded_segment() {
+        let csr = CsrMatrix::from_coo(&CooMatrix::new(3, 3));
+        let m = SegmentedMatrix::from_csr(&csr, 8);
+        assert_eq!(m.num_segments, 1);
+        assert_eq!(m.nnz, 0);
+        assert_eq!(m.to_dense(), vec![0.0; 9]);
+    }
+
+    #[test]
+    fn workload_balance_invariant() {
+        // Every segment except possibly the last handles exactly seg_len
+        // real non-zeros — the paper's balancing guarantee.
+        run_prop("segment balance", 30, |g| {
+            let rows = g.dim() * 2;
+            let coo = CooMatrix::random_uniform(rows, 32, 0.2, g.rng());
+            let csr = CsrMatrix::from_coo(&coo);
+            let seg = SegmentedMatrix::from_csr(&csr, 16);
+            for s in 0..seg.num_segments.saturating_sub(1) {
+                let (v, _, _) = seg.segment(s);
+                if v.len() != 16 {
+                    return Err(format!("segment {s} has {} slots", v.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,298 @@
+//! Declarative command-line argument parsing (clap is not vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, and auto-generated `--help`. Just enough for the `ge-spmm`
+//! binary, the examples and the bench harness.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// If `true` the option is a boolean flag (no value).
+    pub is_flag: bool,
+    /// Default value (rendered in help); `None` means required-if-queried.
+    pub default: Option<&'static str>,
+}
+
+/// A parsed argument set.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Get an option value as string (falling back to the spec default).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Get with default.
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Get parsed as `T`.
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            Some(s) => s.parse().unwrap_or(default),
+            None => default,
+        }
+    }
+
+    /// Whether a boolean flag is set.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Parse a comma-separated list of `T`.
+    pub fn parse_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+/// A command (or subcommand) definition.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    /// New command with no options.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    /// Add a valued option.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: false,
+            default,
+        });
+        self
+    }
+
+    /// Add a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: true,
+            default: None,
+        });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(out, "OPTIONS:");
+        for o in &self.opts {
+            let meta = if o.is_flag {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <value>", o.name)
+            };
+            let default = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(out, "  {meta:<28} {}{default}", o.help);
+        }
+        out
+    }
+
+    /// Parse raw tokens (no program name). On `--help`, returns
+    /// `Err(CliError::Help(text))` so callers can print and exit(0).
+    pub fn parse(&self, tokens: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        // seed defaults
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if t == "--help" || t == "-h" {
+                return Err(CliError::Help(self.help()));
+            }
+            if let Some(body) = t.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.to_string()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(CliError::FlagWithValue(key.to_string()));
+                    }
+                    args.flags.push(key.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.to_string()))?
+                        }
+                    };
+                    args.values.insert(key.to_string(), val);
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+/// CLI parse failures.
+#[derive(Debug)]
+pub enum CliError {
+    /// `--help` requested; payload is the rendered help text.
+    Help(String),
+    Unknown(String),
+    MissingValue(String),
+    FlagWithValue(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Help(h) => write!(f, "{h}"),
+            CliError::Unknown(k) => write!(f, "unknown option --{k}"),
+            CliError::MissingValue(k) => write!(f, "option --{k} requires a value"),
+            CliError::FlagWithValue(k) => write!(f, "flag --{k} does not take a value"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Split `std::env::args()` into `(subcommand, rest)`; `None` if no
+/// subcommand was given.
+pub fn split_subcommand(mut argv: Vec<String>) -> (Option<String>, Vec<String>) {
+    if argv.is_empty() {
+        return (None, argv);
+    }
+    let first = argv.remove(0);
+    if first.starts_with('-') {
+        argv.insert(0, first);
+        (None, argv)
+    } else {
+        (Some(first), argv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("bench", "run benches")
+            .opt("gpu", "GPU model", Some("v100"))
+            .opt("n", "dense width", Some("32"))
+            .flag("verbose", "print more")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&toks(&[])).unwrap();
+        assert_eq!(a.get("gpu"), Some("v100"));
+        assert_eq!(a.parse_or("n", 0usize), 32);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = cmd().parse(&toks(&["--gpu", "rtx3090", "--n=64"])).unwrap();
+        assert_eq!(a.get("gpu"), Some("rtx3090"));
+        assert_eq!(a.parse_or("n", 0usize), 64);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cmd().parse(&toks(&["--verbose", "input.mtx"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["input.mtx".to_string()]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(
+            cmd().parse(&toks(&["--nope"])),
+            Err(CliError::Unknown(_))
+        ));
+        assert!(matches!(
+            cmd().parse(&toks(&["--gpu"])),
+            Err(CliError::MissingValue(_))
+        ));
+        assert!(matches!(
+            cmd().parse(&toks(&["--verbose=yes"])),
+            Err(CliError::FlagWithValue(_))
+        ));
+        assert!(matches!(
+            cmd().parse(&toks(&["--help"])),
+            Err(CliError::Help(_))
+        ));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = cmd().parse(&toks(&["--n", "1,2,4, 8"])).unwrap();
+        assert_eq!(a.parse_list("n", &[0usize]), vec![1, 2, 4, 8]);
+        let b = cmd().parse(&toks(&[])).unwrap();
+        assert_eq!(b.parse_list("missing", &[7usize]), vec![7]);
+    }
+
+    #[test]
+    fn subcommand_split() {
+        let (sub, rest) = split_subcommand(toks(&["bench", "--gpu", "v100"]));
+        assert_eq!(sub.as_deref(), Some("bench"));
+        assert_eq!(rest.len(), 2);
+        let (none, rest2) = split_subcommand(toks(&["--gpu", "v100"]));
+        assert!(none.is_none());
+        assert_eq!(rest2.len(), 2);
+    }
+}

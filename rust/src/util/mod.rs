@@ -1,0 +1,15 @@
+//! Shared substrates: PRNG, statistics, JSON, CLI parsing, thread pool,
+//! timers, and the property-test harness.
+//!
+//! The offline build environment vendors only `xla` and `anyhow`, so the
+//! conveniences a production crate would pull from crates.io (rayon, clap,
+//! criterion, proptest, serde_json) are implemented here from scratch, each
+//! scoped to exactly what this project needs.
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

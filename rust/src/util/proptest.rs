@@ -1,0 +1,289 @@
+//! Seeded property-testing harness (proptest is not vendored).
+//!
+//! A property test here is a function from a [`Gen`] (seeded generator with
+//! size hints) to `Result<(), String>`. The runner executes `cases`
+//! iterations with growing size; on failure it retries the same seed with
+//! progressively smaller size bounds — a cheap shrinking strategy that in
+//! practice localizes failures to small matrices.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries lack the libxla rpath in this container
+//! use ge_spmm::util::proptest::{run_prop, Gen};
+//! run_prop("addition commutes", 64, |g| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use super::prng::Xoshiro256;
+
+/// Generator handed to property bodies: a seeded PRNG plus the current
+/// "size" used to bound generated structures.
+pub struct Gen {
+    rng: Xoshiro256,
+    size: usize,
+}
+
+impl Gen {
+    /// Current size bound (grows with the case index).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    /// Uniform i64 in `[lo, hi]`.
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.rng.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// A "dimension": 1..=size (never zero) — handy for matrix shapes.
+    pub fn dim(&mut self) -> usize {
+        self.usize_in(1, self.size.max(1) + 1)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    /// Uniform f32 in `[-1, 1)`, the typical kernel-value distribution.
+    pub fn value(&mut self) -> f32 {
+        self.rng.next_f32() * 2.0 - 1.0
+    }
+
+    /// Bernoulli.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len())]
+    }
+
+    /// Vector of `len` f32 values in `[-1, 1)`.
+    pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.value()).collect()
+    }
+
+    /// Access the underlying PRNG (for generator modules that take one).
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// Result of a property run, for introspection in tests of the harness
+/// itself.
+#[derive(Debug)]
+pub struct PropReport {
+    pub cases_run: usize,
+    pub failure: Option<PropFailure>,
+}
+
+/// Details of the minimal observed failure.
+#[derive(Debug)]
+pub struct PropFailure {
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+/// Run a property for `cases` iterations. Panics with a reproduction line
+/// on failure. Sizes ramp from 2 to 64 across the run.
+pub fn run_prop<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let report = run_prop_with_seed(name, 0xC0FFEE ^ hash_name(name), cases, &prop);
+    if let Some(f) = report.failure {
+        panic!(
+            "property '{name}' failed (seed={:#x}, size={}): {}",
+            f.seed, f.size, f.message
+        );
+    }
+}
+
+/// Like [`run_prop`] but returns the report instead of panicking, and takes
+/// an explicit base seed. Used internally and by the harness's own tests.
+pub fn run_prop_with_seed<F>(_name: &str, base_seed: u64, cases: usize, prop: &F) -> PropReport
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 2 + (case * 62) / cases.max(1); // ramp 2..=64
+        if let Err(msg) = run_one(seed, size, prop) {
+            // Shrink: retry the same seed at smaller sizes, keep the
+            // smallest size that still fails.
+            let mut min_size = size;
+            let mut min_msg = msg;
+            let mut s = size / 2;
+            while s >= 2 {
+                match run_one(seed, s, prop) {
+                    Err(m) => {
+                        min_size = s;
+                        min_msg = m;
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            return PropReport {
+                cases_run: case + 1,
+                failure: Some(PropFailure {
+                    seed,
+                    size: min_size,
+                    message: min_msg,
+                }),
+            };
+        }
+    }
+    PropReport {
+        cases_run: cases,
+        failure: None,
+    }
+}
+
+fn run_one<F>(seed: u64, size: usize, prop: &F) -> Result<(), String>
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen {
+        rng: Xoshiro256::seeded(seed),
+        size,
+    };
+    prop(&mut g)
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a, good enough to decorrelate test seeds.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert two f32 slices are elementwise close with mixed abs/rel
+/// tolerance; reports the worst offender. Shared by kernel tests.
+pub fn assert_close(actual: &[f32], expect: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if actual.len() != expect.len() {
+        return Err(format!(
+            "length mismatch: {} vs {}",
+            actual.len(),
+            expect.len()
+        ));
+    }
+    let mut worst = (0usize, 0.0f32);
+    for i in 0..actual.len() {
+        let diff = (actual[i] - expect[i]).abs();
+        let tol = atol + rtol * expect[i].abs();
+        let excess = diff - tol;
+        if excess > worst.1 {
+            worst = (i, excess);
+        }
+    }
+    if worst.1 > 0.0 {
+        let i = worst.0;
+        Err(format!(
+            "mismatch at [{i}]: actual={} expected={} (|diff|={}, atol={atol}, rtol={rtol})",
+            actual[i],
+            expect[i],
+            (actual[i] - expect[i]).abs()
+        ))
+    } else {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let r = run_prop_with_seed("ok", 1, 50, &|g: &mut Gen| {
+            let v = g.usize_in(0, 10);
+            if v < 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(r.cases_run, 50);
+        assert!(r.failure.is_none());
+    }
+
+    #[test]
+    fn failing_property_reports_and_shrinks() {
+        // Fails whenever size >= 8; shrinking should walk below the first
+        // failing size.
+        let r = run_prop_with_seed("bad", 2, 100, &|g: &mut Gen| {
+            if g.size() >= 8 {
+                Err(format!("size {}", g.size()))
+            } else {
+                Ok(())
+            }
+        });
+        let f = r.failure.expect("must fail");
+        assert!(f.size >= 8, "shrunk below the failure threshold: {}", f.size);
+        assert!(f.size <= 16, "shrink did not reduce size: {}", f.size);
+    }
+
+    #[test]
+    fn gen_ranges_hold() {
+        let r = run_prop_with_seed("ranges", 3, 200, &|g: &mut Gen| {
+            let d = g.dim();
+            if d == 0 || d > 65 {
+                return Err(format!("dim {d}"));
+            }
+            let x = g.f64_in(-2.0, 3.0);
+            if !(-2.0..3.0).contains(&x) {
+                return Err(format!("f64 {x}"));
+            }
+            let v = g.value();
+            if !(-1.0..1.0).contains(&v) {
+                return Err(format!("value {v}"));
+            }
+            Ok(())
+        });
+        assert!(r.failure.is_none(), "{:?}", r.failure);
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6).is_ok());
+        assert!(assert_close(&[1.0, 2.1], &[1.0, 2.0], 1e-3, 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, 1e-3).is_err());
+        // rel tolerance scales with magnitude
+        assert!(assert_close(&[1000.1], &[1000.0], 0.0, 1e-3).is_ok());
+    }
+
+    #[test]
+    fn determinism_same_seed_same_failure() {
+        let prop = |g: &mut Gen| -> Result<(), String> {
+            let v = g.usize_in(0, 1000);
+            if v > 900 {
+                Err(format!("{v}"))
+            } else {
+                Ok(())
+            }
+        };
+        let a = run_prop_with_seed("det", 42, 500, &prop);
+        let b = run_prop_with_seed("det", 42, 500, &prop);
+        match (a.failure, b.failure) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.seed, y.seed);
+                assert_eq!(x.message, y.message);
+            }
+            (None, None) => {}
+            _ => panic!("nondeterministic outcome"),
+        }
+    }
+}

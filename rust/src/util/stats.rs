@@ -1,0 +1,283 @@
+//! Small statistics helpers used by feature extraction, the selector
+//! calibration, and the benchmark harness.
+
+/// Arithmetic mean. Returns 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation. Returns 0 for slices of length < 2.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Coefficient of variation (`stddev / mean`); 0 when the mean is 0.
+pub fn cv(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        0.0
+    } else {
+        stddev(xs) / m
+    }
+}
+
+/// Quantile with linear interpolation, `q` in `[0, 1]`.
+/// Sorts a copy; fine for the sizes used here.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = pos - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Median (50th percentile).
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Geometric mean; ignores non-positive entries (they would be -inf in
+/// log space). Returns 0 if nothing remains. The paper's speedup summaries
+/// are geometric means over the benchmark suite.
+pub fn geomean(xs: &[f64]) -> f64 {
+    let logs: Vec<f64> = xs.iter().filter(|&&x| x > 0.0).map(|x| x.ln()).collect();
+    if logs.is_empty() {
+        return 0.0;
+    }
+    (logs.iter().sum::<f64>() / logs.len() as f64).exp()
+}
+
+/// Gini coefficient of a non-negative distribution — used as an auxiliary
+/// row-imbalance feature (0 = perfectly balanced, →1 = maximally skewed).
+pub fn gini(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total: f64 = v.iter().sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    // G = (2 * sum_i i*x_(i) ) / (n * sum x) - (n+1)/n, with i starting at 1.
+    let weighted: f64 = v.iter().enumerate().map(|(i, x)| (i as f64 + 1.0) * x).sum();
+    (2.0 * weighted) / (n as f64 * total) - (n as f64 + 1.0) / n as f64
+}
+
+/// Pearson correlation coefficient. Returns 0 if either side is constant.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        cov += dx * dy;
+        vx += dx * dx;
+        vy += dy * dy;
+    }
+    if vx == 0.0 || vy == 0.0 {
+        0.0
+    } else {
+        cov / (vx.sqrt() * vy.sqrt())
+    }
+}
+
+/// Spearman rank correlation (Pearson over ranks, average ranks for ties).
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    pearson(&ranks(xs), &ranks(ys))
+}
+
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = avg_rank;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Simple online histogram with fixed log-spaced bin edges; used in bench
+/// reports.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    edges: Vec<f64>,
+    counts: Vec<u64>,
+}
+
+impl Histogram {
+    /// Log-spaced bins between `lo` and `hi` (both > 0).
+    pub fn log_spaced(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && bins > 0);
+        let ratio = (hi / lo).powf(1.0 / bins as f64);
+        let mut edges = Vec::with_capacity(bins + 1);
+        let mut e = lo;
+        for _ in 0..=bins {
+            edges.push(e);
+            e *= ratio;
+        }
+        Self {
+            counts: vec![0; bins + 2], // underflow + bins + overflow
+            edges,
+        }
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, x: f64) {
+        let nbins = self.edges.len() - 1;
+        if x < self.edges[0] {
+            self.counts[0] += 1;
+        } else if x >= self.edges[nbins] {
+            self.counts[nbins + 1] += 1;
+        } else {
+            // binary search for the bin
+            let mut lo = 0;
+            let mut hi = nbins;
+            while hi - lo > 1 {
+                let mid = (lo + hi) / 2;
+                if x < self.edges[mid] {
+                    hi = mid;
+                } else {
+                    lo = mid;
+                }
+            }
+            self.counts[lo + 1] += 1;
+        }
+    }
+
+    /// (bin lower edge, count) pairs, including under/overflow as
+    /// `-inf`/last-edge pseudo bins when non-empty.
+    pub fn rows(&self) -> Vec<(f64, u64)> {
+        let nbins = self.edges.len() - 1;
+        let mut out = Vec::new();
+        if self.counts[0] > 0 {
+            out.push((f64::NEG_INFINITY, self.counts[0]));
+        }
+        for b in 0..nbins {
+            out.push((self.edges[b], self.counts[b + 1]));
+        }
+        if self.counts[nbins + 1] > 0 {
+            out.push((self.edges[nbins], self.counts[nbins + 1]));
+        }
+        out
+    }
+
+    /// Total observations recorded.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_stddev_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.0).abs() < 1e-12);
+        assert!((cv(&xs) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_singleton_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[]), 0.0);
+        assert_eq!(stddev(&[3.0]), 0.0);
+        assert_eq!(cv(&[]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(geomean(&[]), 0.0);
+        assert_eq!(gini(&[]), 0.0);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        let xs = [2.0, 0.5];
+        assert!((geomean(&xs) - 1.0).abs() < 1e-12);
+        // non-positive entries are ignored
+        assert!((geomean(&[4.0, 0.0, -1.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_extremes() {
+        assert!(gini(&[1.0, 1.0, 1.0, 1.0]).abs() < 1e-12);
+        let skewed = gini(&[0.0, 0.0, 0.0, 100.0]);
+        assert!(skewed > 0.7, "gini of fully-concentrated dist: {skewed}");
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let zs = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &zs) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&xs, &[5.0; 4]), 0.0);
+    }
+
+    #[test]
+    fn spearman_is_rank_based() {
+        // monotone but nonlinear -> spearman 1, pearson < 1
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let ys = [1.0, 8.0, 27.0, 64.0, 125.0];
+        assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-12);
+        assert!(pearson(&xs, &ys) < 1.0);
+    }
+
+    #[test]
+    fn histogram_bins_and_overflow() {
+        let mut h = Histogram::log_spaced(1.0, 100.0, 4);
+        for x in [0.5, 1.5, 15.0, 99.0, 200.0] {
+            h.record(x);
+        }
+        assert_eq!(h.total(), 5);
+        let rows = h.rows();
+        assert!(rows[0].0.is_infinite()); // underflow present
+        assert_eq!(rows.last().unwrap().1, 1); // overflow count
+    }
+}

@@ -1,0 +1,256 @@
+//! A small fixed-size thread pool with scoped parallel-for.
+//!
+//! The vendored registry has neither rayon nor tokio, so the native kernels
+//! and the simulator parallelize through this pool. It provides:
+//!
+//! - [`ThreadPool::scope_chunks`] — parallel iteration over index ranges
+//!   (static chunking), the shape every kernel here needs;
+//! - [`ThreadPool::run_dynamic`] — dynamic work-stealing-lite via an atomic
+//!   cursor, for irregular workloads (e.g. skewed rows).
+//!
+//! Work items borrow from the caller's stack via `std::thread::scope`-style
+//! lifetimes: we spawn the pool threads lazily per call using scoped
+//! threads, which keeps the implementation safe without `unsafe`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Thread pool facade. Threads are scoped per call (cheap at the sizes used
+/// here: kernel invocations are >100µs), so the pool is just a worker-count
+/// policy object and can be freely cloned.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadPool {
+    workers: usize,
+}
+
+impl ThreadPool {
+    /// Pool with an explicit worker count (min 1).
+    pub fn new(workers: usize) -> Self {
+        Self {
+            workers: workers.max(1),
+        }
+    }
+
+    /// Pool sized to available parallelism.
+    pub fn default_parallel() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::new(n)
+    }
+
+    /// Serial pool (useful to A/B threading in benches).
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Threshold below which parallelism does not pay: scoped threads are
+    /// spawned per call (~tens of µs for a full pool), so small kernels
+    /// run serially (§Perf).
+    pub const SERIAL_WORK_THRESHOLD: usize = 1 << 18;
+
+    /// A pool sized for `work` abstract units (≈ flops/bytes touched):
+    /// serial below the threshold, `self` otherwise.
+    pub fn for_work(&self, work: usize) -> ThreadPool {
+        if work < Self::SERIAL_WORK_THRESHOLD {
+            ThreadPool::serial()
+        } else {
+            *self
+        }
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `body(range)` over `0..n` split into contiguous chunks, one chunk
+    /// stream per worker. `body` must be `Sync` (called concurrently).
+    ///
+    /// Chunks are statically assigned: worker `w` gets chunk indices
+    /// `w, w+W, w+2W, ...` of size `chunk`.
+    pub fn scope_chunks<F>(&self, n: usize, chunk: usize, body: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        let nchunks = n.div_ceil(chunk);
+        if self.workers == 1 || nchunks == 1 {
+            for c in 0..nchunks {
+                let lo = c * chunk;
+                body(lo..(lo + chunk).min(n));
+            }
+            return;
+        }
+        let workers = self.workers.min(nchunks);
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let body = &body;
+                scope.spawn(move || {
+                    let mut c = w;
+                    while c < nchunks {
+                        let lo = c * chunk;
+                        body(lo..(lo + chunk).min(n));
+                        c += workers;
+                    }
+                });
+            }
+        });
+    }
+
+    /// Dynamic scheduling: workers repeatedly claim the next `chunk`-sized
+    /// slice of `0..n` from a shared atomic cursor. Use when per-item cost
+    /// is highly skewed (the exact situation the paper's workload-balanced
+    /// kernels address on the GPU).
+    pub fn run_dynamic<F>(&self, n: usize, chunk: usize, body: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        if self.workers == 1 {
+            let mut lo = 0;
+            while lo < n {
+                body(lo..(lo + chunk).min(n));
+                lo += chunk;
+            }
+            return;
+        }
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers {
+                let body = &body;
+                let cursor = &cursor;
+                scope.spawn(move || loop {
+                    let lo = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if lo >= n {
+                        break;
+                    }
+                    body(lo..(lo + chunk).min(n));
+                });
+            }
+        });
+    }
+
+    /// Map over disjoint mutable output chunks: splits `out` into
+    /// `chunk`-row pieces (rows of width `width`) and calls
+    /// `body(first_row, rows_slice)` in parallel. This is the safe pattern
+    /// for "each worker writes its own rows" kernels.
+    pub fn for_each_row_chunk<T, F>(&self, out: &mut [T], width: usize, chunk_rows: usize, body: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(width > 0, "row width must be positive");
+        assert_eq!(out.len() % width, 0, "output not a whole number of rows");
+        let chunk_rows = chunk_rows.max(1);
+        if self.workers == 1 {
+            for (c, rows) in out.chunks_mut(chunk_rows * width).enumerate() {
+                body(c * chunk_rows, rows);
+            }
+            return;
+        }
+        std::thread::scope(|scope| {
+            // Hand contiguous row blocks to scoped threads round-robin.
+            let mut pieces: Vec<(usize, &mut [T])> = Vec::new();
+            for (c, rows) in out.chunks_mut(chunk_rows * width).enumerate() {
+                pieces.push((c * chunk_rows, rows));
+            }
+            let nworkers = self.workers.min(pieces.len().max(1));
+            let queue: Vec<Vec<(usize, &mut [T])>> = split_round_robin(pieces, nworkers);
+            for worker_items in queue {
+                let body = &body;
+                scope.spawn(move || {
+                    for (first_row, rows) in worker_items {
+                        body(first_row, rows);
+                    }
+                });
+            }
+        });
+    }
+}
+
+fn split_round_robin<T>(items: Vec<T>, ways: usize) -> Vec<Vec<T>> {
+    let mut out: Vec<Vec<T>> = (0..ways).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        out[i % ways].push(item);
+    }
+    out
+}
+
+impl Default for ThreadPool {
+    fn default() -> Self {
+        Self::default_parallel()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn scope_chunks_covers_every_index_once() {
+        let n = 1003;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        ThreadPool::new(4).scope_chunks(n, 17, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn run_dynamic_covers_every_index_once() {
+        let n = 997;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        ThreadPool::new(8).run_dynamic(n, 13, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn serial_pool_matches_parallel_result() {
+        let n = 256;
+        let sum_with = |pool: ThreadPool| {
+            let acc = AtomicU64::new(0);
+            pool.scope_chunks(n, 10, |r| {
+                let local: u64 = r.map(|i| i as u64).sum();
+                acc.fetch_add(local, Ordering::Relaxed);
+            });
+            acc.load(Ordering::Relaxed)
+        };
+        assert_eq!(sum_with(ThreadPool::serial()), sum_with(ThreadPool::new(6)));
+    }
+
+    #[test]
+    fn for_each_row_chunk_writes_disjoint_rows() {
+        let rows = 37;
+        let width = 8;
+        let mut out = vec![0u32; rows * width];
+        ThreadPool::new(4).for_each_row_chunk(&mut out, width, 5, |first_row, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = (first_row + i / width) as u32;
+            }
+        });
+        for r in 0..rows {
+            for c in 0..width {
+                assert_eq!(out[r * width + c], r as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_items_is_noop() {
+        ThreadPool::new(4).scope_chunks(0, 8, |_| panic!("should not run"));
+        ThreadPool::new(4).run_dynamic(0, 8, |_| panic!("should not run"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Timing helpers for the bench harness and ad-hoc profiling.
+
+use std::time::{Duration, Instant};
+
+/// Measure the wall time of `f`, returning `(result, elapsed)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// A named stopwatch that accumulates across start/stop pairs.
+/// Used by the coordinator's metrics and in profiling examples.
+#[derive(Debug)]
+pub struct Stopwatch {
+    name: String,
+    total: Duration,
+    laps: u64,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    /// New stopped stopwatch.
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            total: Duration::ZERO,
+            laps: 0,
+            started: None,
+        }
+    }
+
+    /// Begin a lap. Panics if already running.
+    pub fn start(&mut self) {
+        assert!(self.started.is_none(), "stopwatch '{}' already running", self.name);
+        self.started = Some(Instant::now());
+    }
+
+    /// End the current lap. Panics if not running.
+    pub fn stop(&mut self) {
+        let s = self
+            .started
+            .take()
+            .unwrap_or_else(|| panic!("stopwatch '{}' not running", self.name));
+        self.total += s.elapsed();
+        self.laps += 1;
+    }
+
+    /// Time a closure as one lap.
+    pub fn lap<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+
+    /// Total accumulated time.
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    /// Number of completed laps.
+    pub fn laps(&self) -> u64 {
+        self.laps
+    }
+
+    /// Mean lap duration (zero if no laps).
+    pub fn mean(&self) -> Duration {
+        if self.laps == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.laps as u32
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: total {:?} over {} laps (mean {:?})",
+            self.name,
+            self.total,
+            self.laps,
+            self.mean()
+        )
+    }
+}
+
+/// Format a duration in adaptive units (ns/µs/ms/s), e.g. for bench tables.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_value_and_positive_time() {
+        let (v, d) = time_it(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499_500);
+        assert!(d >= Duration::ZERO);
+    }
+
+    #[test]
+    fn stopwatch_accumulates_laps() {
+        let mut sw = Stopwatch::new("t");
+        for _ in 0..3 {
+            sw.lap(|| std::hint::black_box((0..100).sum::<u64>()));
+        }
+        assert_eq!(sw.laps(), 3);
+        assert!(sw.total() >= sw.mean());
+        assert!(sw.summary().contains("3 laps"));
+    }
+
+    #[test]
+    #[should_panic(expected = "already running")]
+    fn double_start_panics() {
+        let mut sw = Stopwatch::new("x");
+        sw.start();
+        sw.start();
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(12)), "12ns");
+        assert!(fmt_duration(Duration::from_micros(12)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(12)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+    }
+}

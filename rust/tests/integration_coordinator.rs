@@ -1,0 +1,128 @@
+//! Integration: batcher and server request loop over real artifacts.
+
+use ge_spmm::coordinator::batcher::Batcher;
+use ge_spmm::coordinator::server::{serve, Request, ServerConfig, ServerReply};
+use ge_spmm::coordinator::SpmmEngine;
+use ge_spmm::kernels::dense::spmm_reference;
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix};
+use ge_spmm::util::prng::Xoshiro256;
+use std::path::Path;
+use std::sync::mpsc;
+
+fn artifact_dir() -> &'static Path {
+    let p = Path::new("artifacts");
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifacts/manifest.json missing — run `make artifacts` first"
+    );
+    p
+}
+
+fn matrix(seed: u64) -> CsrMatrix {
+    let mut rng = Xoshiro256::seeded(seed);
+    CsrMatrix::from_coo(&CooMatrix::random_uniform(120, 120, 0.05, &mut rng))
+}
+
+#[test]
+fn batcher_coalesces_and_results_match_unbatched() {
+    let engine = SpmmEngine::new(artifact_dir()).unwrap();
+    let a = matrix(2001);
+    let h = engine.register(a.clone());
+    let mut rng = Xoshiro256::seeded(2002);
+
+    let xs: Vec<DenseMatrix> = (0..4)
+        .map(|_| DenseMatrix::random(120, 1, 1.0, &mut rng))
+        .collect();
+
+    let mut batcher = Batcher::new(&engine, 4);
+    let mut results = Vec::new();
+    for (i, x) in xs.iter().enumerate() {
+        results.extend(batcher.submit(h, x.clone(), i as u64).unwrap());
+    }
+    // 4 columns = max_width → auto-flush happened
+    assert_eq!(results.len(), 4);
+    assert_eq!(batcher.pending(), 0);
+    // exactly one artifact execution served all four requests
+    assert_eq!(engine.metrics.requests(), 1);
+    for r in &results {
+        assert_eq!(r.batch_size, 4);
+        let x = &xs[r.tag as usize];
+        let mut want = DenseMatrix::zeros(120, 1);
+        spmm_reference(&a, x, &mut want);
+        let max_err = r
+            .y
+            .data
+            .iter()
+            .zip(&want.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-4, "tag {} err {max_err}", r.tag);
+    }
+}
+
+#[test]
+fn batcher_flush_all_handles_partial_batches() {
+    let engine = SpmmEngine::new(artifact_dir()).unwrap();
+    let a = matrix(2003);
+    let h = engine.register(a.clone());
+    let mut rng = Xoshiro256::seeded(2004);
+    let mut batcher = Batcher::new(&engine, 128);
+    let x = DenseMatrix::random(120, 2, 1.0, &mut rng);
+    assert!(batcher.submit(h, x.clone(), 7).unwrap().is_empty());
+    assert_eq!(batcher.pending(), 1);
+    let results = batcher.flush_all().unwrap();
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].tag, 7);
+    assert_eq!(results[0].y.cols, 2);
+}
+
+#[test]
+fn server_loop_round_trips_requests() {
+    // The PJRT client is !Send, so the engine (and `serve`) stay on this
+    // thread; requesters live on a spawned producer thread — the same
+    // topology a deployment would use (engine thread + I/O threads).
+    let engine = SpmmEngine::new(artifact_dir()).unwrap();
+    let a = matrix(2005);
+    let h = engine.register(a.clone());
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let config = ServerConfig {
+        max_width: 4,
+        max_delay: std::time::Duration::from_millis(5),
+    };
+
+    let producer = std::thread::spawn(move || {
+        let mut rng = Xoshiro256::seeded(2006);
+        let mut replies = Vec::new();
+        // 5 single-column requests: 4 flush on width, 1 on deadline
+        for tag in 0..5u64 {
+            let (rtx, rrx) = mpsc::channel();
+            let x = DenseMatrix::random(120, 1, 1.0, &mut rng);
+            tx.send(Request {
+                matrix: h,
+                x,
+                tag,
+                reply: rtx,
+            })
+            .unwrap();
+            replies.push(rrx);
+        }
+        drop(tx); // close the channel so the server loop exits when done
+        for (tag, rrx) in replies.into_iter().enumerate() {
+            match rrx
+                .recv_timeout(std::time::Duration::from_secs(60))
+                .unwrap()
+            {
+                ServerReply::Ok(r) => {
+                    assert_eq!(r.tag, tag as u64);
+                    assert_eq!(r.y.rows, 120);
+                }
+                ServerReply::Err(e) => panic!("request {tag} failed: {e}"),
+            }
+        }
+    });
+
+    serve(&engine, rx, config);
+    producer.join().unwrap();
+    assert!(engine.metrics.requests() >= 2, "batching should have merged");
+}

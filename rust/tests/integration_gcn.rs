@@ -1,0 +1,63 @@
+//! Integration: the end-to-end GCN training path (L1 Pallas kernel inside
+//! L2 JAX train step executed by the L3 Rust runtime).
+
+use ge_spmm::gnn::{GcnTrainer, GraphConfig, SyntheticGraph};
+use ge_spmm::runtime::Engine;
+use std::path::Path;
+
+fn artifact_dir() -> &'static Path {
+    let p = Path::new("artifacts");
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifacts/manifest.json missing — run `make artifacts` first"
+    );
+    p
+}
+
+#[test]
+fn gcn_step_runs_and_loss_decreases() {
+    let engine = Engine::new(artifact_dir()).unwrap();
+    let graph = SyntheticGraph::generate(GraphConfig::default(), 31);
+    let mut trainer = GcnTrainer::new(&engine, &graph, 32).unwrap();
+    let report = trainer.train(20, 0).unwrap();
+    assert_eq!(report.losses.len(), 20);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    assert!(
+        report.losses[19] < report.losses[0],
+        "loss did not decrease: {} -> {}",
+        report.losses[0],
+        report.losses[19]
+    );
+}
+
+#[test]
+fn gcn_forward_produces_finite_logits() {
+    let engine = Engine::new(artifact_dir()).unwrap();
+    let graph = SyntheticGraph::generate(GraphConfig::default(), 33);
+    let trainer = GcnTrainer::new(&engine, &graph, 34).unwrap();
+    let logits = trainer.forward().unwrap();
+    assert_eq!(
+        logits.len(),
+        graph.config.nodes_padded * graph.config.classes
+    );
+    assert!(logits.iter().all(|v| v.is_finite()));
+    let acc = trainer.train_accuracy().unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn mismatched_graph_is_rejected() {
+    let engine = Engine::new(artifact_dir()).unwrap();
+    let cfg = GraphConfig {
+        nodes: 100,
+        nodes_padded: 128,
+        feats: 8, // artifact expects 64
+        classes: 3,
+        width: 8,
+        communities: 3,
+        avg_degree: 3.0,
+        label_frac: 0.3,
+    };
+    let graph = SyntheticGraph::generate(cfg, 35);
+    assert!(GcnTrainer::new(&engine, &graph, 36).is_err());
+}

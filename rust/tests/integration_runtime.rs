@@ -1,0 +1,150 @@
+//! Integration: PJRT runtime executing real AOT artifacts.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use ge_spmm::coordinator::SpmmEngine;
+use ge_spmm::kernels::dense::spmm_reference;
+use ge_spmm::kernels::KernelKind;
+use ge_spmm::runtime::Engine;
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix};
+use ge_spmm::util::prng::Xoshiro256;
+use std::path::Path;
+
+fn artifact_dir() -> &'static Path {
+    let p = Path::new("artifacts");
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifacts/manifest.json missing — run `make artifacts` first"
+    );
+    p
+}
+
+fn small_matrix(rows: usize, cols: usize, density: f64, seed: u64) -> CsrMatrix {
+    let mut rng = Xoshiro256::seeded(seed);
+    CsrMatrix::from_coo(&CooMatrix::random_uniform(rows, cols, density, &mut rng))
+}
+
+#[test]
+fn manifest_loads_and_lists_all_variants() {
+    let engine = Engine::new(artifact_dir()).unwrap();
+    assert_eq!(engine.platform(), "cpu");
+    for v in ["sr_rs", "sr_wb", "pr_rs", "pr_wb"] {
+        let variants = engine.manifest.spmm_variants(v);
+        assert!(
+            variants.len() >= 4,
+            "expected ≥4 {v} artifacts, got {}",
+            variants.len()
+        );
+    }
+    assert!(engine.manifest.by_name("gcn_step").is_some());
+    assert!(engine.manifest.by_name("gcn_fwd").is_some());
+}
+
+#[test]
+fn every_kernel_variant_matches_native_reference() {
+    let engine = SpmmEngine::new(artifact_dir()).unwrap();
+    let a = small_matrix(100, 90, 0.08, 1001);
+    let h = engine.register(a.clone());
+    let mut rng = Xoshiro256::seeded(1002);
+    for n in [1usize, 4] {
+        let x = DenseMatrix::random(90, n, 1.0, &mut rng);
+        let mut want = DenseMatrix::zeros(100, n);
+        spmm_reference(&a, &x, &mut want);
+        for kind in KernelKind::ALL {
+            let resp = engine.spmm_with(h, &x, kind).unwrap();
+            assert_eq!(resp.y.rows, 100);
+            assert_eq!(resp.y.cols, n);
+            let max_err = resp
+                .y
+                .data
+                .iter()
+                .zip(&want.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_err < 1e-4,
+                "{} n={n}: max err {max_err}",
+                kind.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn adaptive_path_selects_and_executes() {
+    let engine = SpmmEngine::new(artifact_dir()).unwrap();
+    // short-row matrix at n=1 → expect a PR kernel per the Fig. 4 rules
+    let a = small_matrix(400, 400, 0.008, 1003);
+    let h = engine.register(a.clone());
+    let mut rng = Xoshiro256::seeded(1004);
+    let x = DenseMatrix::random(400, 1, 1.0, &mut rng);
+    let resp = engine.spmm(h, &x).unwrap();
+    assert!(
+        resp.kernel.is_parallel_reduction(),
+        "expected PR at n=1, got {}",
+        resp.kernel.label()
+    );
+    // wide request → SR family
+    let x32 = DenseMatrix::random(400, 32, 1.0, &mut rng);
+    let resp32 = engine.spmm(h, &x32).unwrap();
+    assert!(!resp32.kernel.is_parallel_reduction());
+    assert_eq!(engine.metrics.requests(), 2);
+}
+
+#[test]
+fn routes_to_bigger_bucket_and_odd_n_pads() {
+    let engine = SpmmEngine::new(artifact_dir()).unwrap();
+    // 600 rows exceed the s bucket (512) → must route to m
+    let a = small_matrix(600, 600, 0.005, 1005);
+    let h = engine.register(a.clone());
+    let mut rng = Xoshiro256::seeded(1006);
+    // n=3 routes to the n=4 artifact and slices back
+    let x = DenseMatrix::random(600, 3, 1.0, &mut rng);
+    let resp = engine.spmm(h, &x).unwrap();
+    assert!(resp.artifact.contains("_m_n4"), "artifact {}", resp.artifact);
+    let mut want = DenseMatrix::zeros(600, 3);
+    spmm_reference(&a, &x, &mut want);
+    let max_err = resp
+        .y
+        .data
+        .iter()
+        .zip(&want.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-4, "max err {max_err}");
+}
+
+#[test]
+fn oversize_matrix_is_rejected_cleanly() {
+    let engine = SpmmEngine::new(artifact_dir()).unwrap();
+    let a = small_matrix(5000, 5000, 0.002, 1007);
+    let h = engine.register(a);
+    let mut rng = Xoshiro256::seeded(1008);
+    let x = DenseMatrix::random(5000, 4, 1.0, &mut rng);
+    let err = engine.spmm(h, &x).unwrap_err().to_string();
+    assert!(err.contains("bucket"), "unexpected error: {err}");
+}
+
+#[test]
+fn dimension_mismatch_is_rejected() {
+    let engine = SpmmEngine::new(artifact_dir()).unwrap();
+    let a = small_matrix(50, 60, 0.1, 1009);
+    let h = engine.register(a);
+    let x = DenseMatrix::zeros(50, 4); // should be 60 rows
+    assert!(engine.spmm(h, &x).is_err());
+    assert_eq!(engine.metrics.errors(), 1);
+}
+
+#[test]
+fn packed_operand_cache_reuses_across_requests() {
+    let engine = SpmmEngine::new(artifact_dir()).unwrap();
+    let a = small_matrix(200, 200, 0.02, 1010);
+    let h = engine.register(a);
+    let mut rng = Xoshiro256::seeded(1011);
+    let x = DenseMatrix::random(200, 4, 1.0, &mut rng);
+    let r1 = engine.spmm(h, &x).unwrap();
+    let r2 = engine.spmm(h, &x).unwrap();
+    assert_eq!(r1.y, r2.y);
+    // second request should not be slower by more than ~compile+pack time
+    assert_eq!(engine.metrics.requests(), 2);
+}
