@@ -1,10 +1,14 @@
 //! Quickstart: the 60-second tour of the public API.
 //!
 //! Generates a sparse matrix, inspects its features, lets the adaptive
-//! selector pick a kernel, executes the SpMM on the PJRT runtime, and
-//! cross-checks the numbers against the native reference kernel.
+//! selector pick a kernel, executes the SpMM on the default native
+//! backend, and cross-checks the numbers against the dense reference.
+//! (Build an engine with `SpmmEngine::new(artifact_dir)` under the
+//! `pjrt` feature to route the same calls to AOT artifacts instead.)
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//! These top-level examples are illustrative sources, not registered
+//! Cargo example targets; `rust/tests/native_coordinator.rs` exercises
+//! the same flow under `cargo test`.
 
 use anyhow::Result;
 use ge_spmm::coordinator::SpmmEngine;
@@ -13,7 +17,6 @@ use ge_spmm::gen::rmat::RmatConfig;
 use ge_spmm::kernels::dense::spmm_reference;
 use ge_spmm::sparse::{CsrMatrix, DenseMatrix};
 use ge_spmm::util::prng::Xoshiro256;
-use std::path::Path;
 
 fn main() -> Result<()> {
     // 1. A power-law sparse matrix (the paper's GNN/graph regime).
@@ -22,15 +25,15 @@ fn main() -> Result<()> {
     let feats = MatrixFeatures::of(&csr);
     println!("matrix:   {}", feats.summary());
 
-    // 2. The coordinator: artifact library + adaptive selector + runtime.
-    let engine = SpmmEngine::new(Path::new("artifacts"))?;
-    let handle = engine.register(csr.clone());
+    // 2. The coordinator: adaptive selector + native execution backend.
+    let engine = SpmmEngine::native();
+    let handle = engine.register(csr.clone())?;
     println!(
         "decision: {}",
         engine.selector.explain(&feats, 4)
     );
 
-    // 3. Run Y = A·X through the three-layer stack.
+    // 3. Run Y = A·X through the coordinator.
     let x = DenseMatrix::random(csr.cols, 4, 1.0, &mut rng);
     let resp = engine.spmm(handle, &x)?;
     println!(

@@ -5,8 +5,8 @@
 use ge_spmm::bench::harness::bench_fn;
 use ge_spmm::gen::Collection;
 use ge_spmm::kernels::baseline::{aspt_like_spmm, cusparse_like_spmm, AsptMatrix};
-use ge_spmm::kernels::{run_kernel, KernelKind, PreparedMatrix};
-use ge_spmm::sparse::DenseMatrix;
+use ge_spmm::kernels::{pr_rs, pr_wb, sr_rs, sr_wb, KernelKind, WARP};
+use ge_spmm::sparse::{DenseMatrix, SegmentedMatrix};
 use ge_spmm::util::prng::Xoshiro256;
 use ge_spmm::util::threadpool::ThreadPool;
 
@@ -20,7 +20,9 @@ fn main() {
         .collect();
     for spec in specs {
         let csr = spec.build();
-        let prepared = PreparedMatrix::new(csr.clone());
+        // Same prepared layouts NativeBackend builds, but hand-held here so
+        // the timed region is the kernel alone (no output allocation).
+        let segments = SegmentedMatrix::from_csr(&csr, WARP);
         let aspt = AsptMatrix::from_csr(&csr);
         println!(
             "\n--- {} ({}x{}, nnz {}) ---",
@@ -36,7 +38,12 @@ fn main() {
             let flops = 2.0 * csr.nnz() as f64 * n as f64;
             for kind in KernelKind::ALL {
                 let s = bench_fn(&format!("{} n={n} {}", spec.name, kind.label()), || {
-                    run_kernel(kind, &prepared, &x, &mut y, &pool);
+                    match kind {
+                        KernelKind::SrRs => sr_rs::spmm(&csr, &x, &mut y, &pool),
+                        KernelKind::SrWb => sr_wb::spmm(&segments, &x, &mut y, &pool),
+                        KernelKind::PrRs => pr_rs::spmm(&csr, &x, &mut y, &pool),
+                        KernelKind::PrWb => pr_wb::spmm(&segments, &x, &mut y, &pool),
+                    }
                 });
                 println!("{}  ({:.2} GFLOP/s)", s.line(), flops / s.median_s() / 1e9);
             }

@@ -18,7 +18,7 @@ fn main() {
     let engine = SpmmEngine::new(Path::new("artifacts")).unwrap();
     let mut rng = Xoshiro256::seeded(11);
     let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(400, 400, 0.01, &mut rng));
-    let h = engine.register(a.clone());
+    let h = engine.register(a.clone()).unwrap();
 
     for n in [1usize, 4, 32] {
         let x = DenseMatrix::random(400, n, 1.0, &mut rng);

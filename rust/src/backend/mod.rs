@@ -1,0 +1,162 @@
+//! Execution backends — the seam between the coordinator and *how an SpMM
+//! actually runs*.
+//!
+//! The paper's contribution is the **adaptive use** of workload-balancing
+//! and parallel-reduction, not any single kernel implementation. The
+//! [`SpmmBackend`] trait keeps that separation explicit: everything above
+//! it (registration, feature extraction, the Fig.-4 selector, batching,
+//! serving, metrics) is backend-agnostic, and a backend only has to answer
+//! two questions —
+//!
+//! 1. [`SpmmBackend::prepare`]: convert a CSR matrix once into whatever
+//!    operand layout the backend executes from (segments/ELL planes,
+//!    packed device literals, ...), paid off the request path;
+//! 2. [`SpmmBackend::execute`]: run `Y = A · X` through one of the four
+//!    [`KernelKind`] designs against that prepared operand.
+//!
+//! Two implementations exist:
+//!
+//! - [`NativeBackend`] — the faithful CPU ports in [`crate::kernels`] over
+//!   the scoped [`crate::util::threadpool::ThreadPool`]. Always available;
+//!   the default.
+//! - `PjrtBackend` (`pjrt` cargo feature) — routes to the AOT-compiled
+//!   Pallas artifacts through the PJRT runtime in `crate::runtime`.
+//!
+//! See `DESIGN.md` for the backend feature matrix.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use crate::kernels::KernelKind;
+use crate::sparse::{CsrMatrix, DenseMatrix};
+use anyhow::{anyhow, Result};
+use std::any::Any;
+
+/// A matrix prepared for repeated execution by one backend.
+///
+/// The shape metadata is backend-independent (the engine validates request
+/// dimensions against it); the `state` payload is the backend's own
+/// prepared representation, recovered via [`PreparedOperand::state`].
+pub struct PreparedOperand {
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    state: Box<dyn Any + Send + Sync>,
+}
+
+impl PreparedOperand {
+    /// Wrap a backend-specific prepared representation.
+    pub fn new(rows: usize, cols: usize, nnz: usize, state: Box<dyn Any + Send + Sync>) -> Self {
+        Self {
+            rows,
+            cols,
+            nnz,
+            state,
+        }
+    }
+
+    /// Row count of the prepared matrix.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count of the prepared matrix.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Non-zero count of the prepared matrix.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Downcast to a backend's prepared state. Errors if the operand was
+    /// prepared by a different backend (a coordinator wiring bug).
+    pub fn state<T: Any>(&self) -> Result<&T> {
+        self.state
+            .downcast_ref::<T>()
+            .ok_or_else(|| anyhow!("prepared operand belongs to a different backend"))
+    }
+
+    /// Validate a dense operand's inner dimension against this matrix —
+    /// the one shared check the engine and every backend perform.
+    pub fn check_operand(&self, x: &DenseMatrix) -> Result<()> {
+        if x.rows != self.cols {
+            return Err(anyhow!(
+                "inner dimension mismatch: A is {}x{}, X is {}x{}",
+                self.rows,
+                self.cols,
+                x.rows,
+                x.cols
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Result of one backend execution.
+#[derive(Clone, Debug)]
+pub struct Execution {
+    /// The dense result `Y` (rows × x.cols).
+    pub y: DenseMatrix,
+    /// The executed unit: an artifact name for `PjrtBackend`, a
+    /// `native/<kernel>` label for [`NativeBackend`].
+    pub artifact: String,
+}
+
+/// An SpMM execution backend: prepare once, execute many.
+///
+/// `Send + Sync` so one engine can be shared across a server thread and
+/// request producers (the deployment topology in `coordinator::server`).
+pub trait SpmmBackend: Send + Sync {
+    /// Short backend label for logs and responses.
+    fn name(&self) -> &'static str;
+
+    /// Convert a CSR matrix into this backend's execution layout. Called
+    /// once per registered matrix, off the request path.
+    fn prepare(&self, csr: &CsrMatrix) -> Result<PreparedOperand>;
+
+    /// Execute `Y = A · X` with the given kernel design. `x.rows` has been
+    /// validated against [`PreparedOperand::cols`] by the caller, but a
+    /// backend is free to re-check.
+    fn execute(
+        &self,
+        operand: &PreparedOperand,
+        x: &DenseMatrix,
+        kernel: KernelKind,
+    ) -> Result<Execution>;
+
+    /// Dense widths this backend routes natively, ascending, or `None` if
+    /// any width is accepted (no fixed-shape artifact library).
+    fn available_n(&self) -> Option<Vec<usize>> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepared_operand_downcast_guards_backend_identity() {
+        let op = PreparedOperand::new(2, 3, 1, Box::new(42usize));
+        assert_eq!(op.rows(), 2);
+        assert_eq!(op.cols(), 3);
+        assert_eq!(op.nnz(), 1);
+        assert_eq!(*op.state::<usize>().unwrap(), 42);
+        assert!(op.state::<String>().is_err());
+    }
+
+    #[test]
+    fn check_operand_validates_inner_dimension() {
+        let op = PreparedOperand::new(2, 3, 1, Box::new(()));
+        assert!(op.check_operand(&DenseMatrix::zeros(3, 5)).is_ok());
+        let err = op.check_operand(&DenseMatrix::zeros(2, 5)).unwrap_err();
+        assert!(err.to_string().contains("dimension mismatch"));
+    }
+}

@@ -1,0 +1,158 @@
+//! The native CPU backend: the four faithful kernel ports executed on the
+//! scoped thread pool.
+//!
+//! This is the always-available default backend — it is what makes the
+//! full coordinator stack (selector → batcher → server) runnable on any
+//! machine with no artifacts and no libxla. It absorbs the former
+//! free-function `kernels::run_kernel` / `PreparedMatrix` dispatch path so
+//! the crate has exactly one prepare-once/execute-many pipeline.
+
+use super::{Execution, PreparedOperand, SpmmBackend};
+use crate::kernels::{pr_rs, pr_wb, sr_rs, sr_wb, KernelKind, WARP};
+use crate::sparse::{CsrMatrix, DenseMatrix, SegmentedMatrix};
+use crate::util::threadpool::ThreadPool;
+use anyhow::Result;
+
+/// Native prepared operand: CSR for the row-split kernels plus the
+/// `WARP`-length segmented layout for the workload-balanced kernels, both
+/// built once at registration (mirrors how the GPU kernels take
+/// preprocessed buffers).
+struct NativePrepared {
+    csr: CsrMatrix,
+    segments: SegmentedMatrix,
+}
+
+/// CPU execution backend over [`crate::kernels`].
+#[derive(Clone, Copy, Debug)]
+pub struct NativeBackend {
+    pool: ThreadPool,
+}
+
+impl NativeBackend {
+    /// Backend over an explicit pool (worker-count policy).
+    pub fn new(pool: ThreadPool) -> Self {
+        Self { pool }
+    }
+
+    /// Single-worker backend (deterministic scheduling; A/B baseline).
+    pub fn serial() -> Self {
+        Self::new(ThreadPool::serial())
+    }
+
+    /// The pool kernels execute on.
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+}
+
+impl Default for NativeBackend {
+    /// Backend sized to available parallelism.
+    fn default() -> Self {
+        Self::new(ThreadPool::default_parallel())
+    }
+}
+
+impl SpmmBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn prepare(&self, csr: &CsrMatrix) -> Result<PreparedOperand> {
+        let segments = SegmentedMatrix::from_csr(csr, WARP);
+        Ok(PreparedOperand::new(
+            csr.rows,
+            csr.cols,
+            csr.nnz(),
+            Box::new(NativePrepared {
+                csr: csr.clone(),
+                segments,
+            }),
+        ))
+    }
+
+    fn execute(
+        &self,
+        operand: &PreparedOperand,
+        x: &DenseMatrix,
+        kernel: KernelKind,
+    ) -> Result<Execution> {
+        let prep: &NativePrepared = operand.state()?;
+        operand.check_operand(x)?;
+        let mut y = DenseMatrix::zeros(prep.csr.rows, x.cols);
+        // Degenerate shapes (no output rows / zero-width X) have nothing to
+        // compute; skip the kernels, which assume at least one output row.
+        if prep.csr.rows > 0 && x.cols > 0 {
+            match kernel {
+                KernelKind::SrRs => sr_rs::spmm(&prep.csr, x, &mut y, &self.pool),
+                KernelKind::SrWb => sr_wb::spmm(&prep.segments, x, &mut y, &self.pool),
+                KernelKind::PrRs => pr_rs::spmm(&prep.csr, x, &mut y, &self.pool),
+                KernelKind::PrWb => pr_wb::spmm(&prep.segments, x, &mut y, &self.pool),
+            }
+        }
+        Ok(Execution {
+            y,
+            artifact: format!("native/{}", kernel.label()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense::spmm_reference;
+    use crate::sparse::CooMatrix;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest::assert_close;
+
+    #[test]
+    fn all_kernels_match_reference_through_the_trait() {
+        let mut rng = Xoshiro256::seeded(31);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(90, 70, 0.08, &mut rng));
+        let backend = NativeBackend::new(ThreadPool::new(3));
+        let op = backend.prepare(&csr).unwrap();
+        assert_eq!((op.rows(), op.cols(), op.nnz()), (90, 70, csr.nnz()));
+        let x = DenseMatrix::random(70, 5, 1.0, &mut rng);
+        let mut want = DenseMatrix::zeros(90, 5);
+        spmm_reference(&csr, &x, &mut want);
+        for kind in KernelKind::ALL {
+            let exec = backend.execute(&op, &x, kind).unwrap();
+            assert_eq!(exec.artifact, format!("native/{}", kind.label()));
+            assert_close(&exec.y.data, &want.data, 1e-5, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn dimension_mismatch_is_rejected() {
+        let csr = CsrMatrix::from_coo(&CooMatrix::new(4, 6));
+        let backend = NativeBackend::serial();
+        let op = backend.prepare(&csr).unwrap();
+        let x = DenseMatrix::zeros(5, 2); // should be 6 rows
+        assert!(backend.execute(&op, &x, KernelKind::SrRs).is_err());
+    }
+
+    #[test]
+    fn empty_matrix_yields_zeros() {
+        let csr = CsrMatrix::from_coo(&CooMatrix::new(5, 5));
+        let backend = NativeBackend::default();
+        let op = backend.prepare(&csr).unwrap();
+        let x = DenseMatrix::from_vec(5, 3, vec![1.0; 15]);
+        for kind in KernelKind::ALL {
+            let exec = backend.execute(&op, &x, kind).unwrap();
+            assert_eq!(exec.y.data, vec![0.0; 15]);
+        }
+    }
+
+    #[test]
+    fn zero_width_x_is_handled() {
+        let mut coo = CooMatrix::new(3, 3);
+        coo.push(0, 0, 1.0);
+        let csr = CsrMatrix::from_coo(&coo);
+        let backend = NativeBackend::default();
+        let op = backend.prepare(&csr).unwrap();
+        let x = DenseMatrix::zeros(3, 0);
+        for kind in KernelKind::ALL {
+            let exec = backend.execute(&op, &x, kind).unwrap();
+            assert_eq!((exec.y.rows, exec.y.cols), (3, 0));
+        }
+    }
+}

@@ -1,14 +1,19 @@
 //! `SpmmEngine` — the coordinator's core: register matrices, submit SpMM
-//! requests, get adaptively-routed PJRT executions back.
+//! requests, get adaptively-routed executions back from whichever
+//! [`SpmmBackend`] the engine was built over.
+//!
+//! The engine owns everything backend-agnostic: handle management,
+//! feature extraction, the Fig.-4 adaptive selector, dimension
+//! validation, latency/metrics accounting. Execution itself — native CPU
+//! kernels by default, PJRT artifacts behind the `pjrt` feature — is
+//! entirely behind the trait.
 
 use super::metrics::Metrics;
-use super::pack;
+use crate::backend::{NativeBackend, PreparedOperand, SpmmBackend};
 use crate::features::MatrixFeatures;
 use crate::kernels::KernelKind;
-use crate::runtime::manifest::ArtifactSpec;
-use crate::runtime::Engine;
 use crate::selector::AdaptiveSelector;
-use crate::sparse::{CsrMatrix, DenseMatrix, EllMatrix, SegmentedMatrix};
+use crate::sparse::{CsrMatrix, DenseMatrix};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -20,18 +25,14 @@ use std::time::Instant;
 pub struct MatrixHandle(usize);
 
 struct Registered {
-    csr: CsrMatrix,
     features: MatrixFeatures,
-    ell_width: usize,
-    num_segments: usize,
-    /// packed + literal-converted operand cache keyed by artifact name
-    packed: Mutex<HashMap<String, Arc<Vec<xla::Literal>>>>,
+    prepared: PreparedOperand,
 }
 
-/// The coordinator engine: adaptive selection + artifact routing +
+/// The coordinator engine: adaptive selection + backend routing +
 /// execution + metrics.
 pub struct SpmmEngine {
-    runtime: Engine,
+    backend: Box<dyn SpmmBackend>,
     pub selector: AdaptiveSelector,
     pub metrics: Metrics,
     matrices: Mutex<HashMap<usize, Arc<Registered>>>,
@@ -43,20 +44,35 @@ pub struct SpmmEngine {
 pub struct SpmmResponse {
     pub y: DenseMatrix,
     pub kernel: KernelKind,
+    /// Executed unit: artifact name (pjrt) or `native/<kernel>` label.
     pub artifact: String,
     pub latency: std::time::Duration,
 }
 
 impl SpmmEngine {
-    /// Build over an artifact directory (see `make artifacts`).
-    pub fn new(artifact_dir: &std::path::Path) -> Result<SpmmEngine> {
-        Ok(SpmmEngine {
-            runtime: Engine::new(artifact_dir)?,
+    /// Engine over the native CPU backend sized to available parallelism —
+    /// the default deployment shape (no artifacts, no libxla).
+    pub fn native() -> SpmmEngine {
+        Self::with_backend(Box::new(NativeBackend::default()))
+    }
+
+    /// Engine over an explicit backend.
+    pub fn with_backend(backend: Box<dyn SpmmBackend>) -> SpmmEngine {
+        SpmmEngine {
+            backend,
             selector: AdaptiveSelector::default(),
             metrics: Metrics::default(),
             matrices: Mutex::new(HashMap::new()),
             next_id: AtomicUsize::new(0),
-        })
+        }
+    }
+
+    /// Engine over the PJRT artifact backend (see `make artifacts`).
+    #[cfg(feature = "pjrt")]
+    pub fn new(artifact_dir: &std::path::Path) -> Result<SpmmEngine> {
+        Ok(Self::with_backend(Box::new(
+            crate::backend::PjrtBackend::new(artifact_dir)?,
+        )))
     }
 
     /// With a custom (e.g. calibrated) selector.
@@ -65,24 +81,27 @@ impl SpmmEngine {
         self
     }
 
-    /// Register a sparse matrix; features and format metadata are
-    /// extracted once here, off the request path.
-    pub fn register(&self, csr: CsrMatrix) -> MatrixHandle {
+    /// Label of the backend this engine executes on.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The backend itself (diagnostics, downcasting).
+    pub fn backend(&self) -> &dyn SpmmBackend {
+        self.backend.as_ref()
+    }
+
+    /// Register a sparse matrix; features are extracted and the backend's
+    /// prepared operand is built once here, off the request path.
+    pub fn register(&self, csr: CsrMatrix) -> Result<MatrixHandle> {
         let features = MatrixFeatures::of(&csr);
-        let ell_width = EllMatrix::from_csr(&csr, 1, 1).width;
-        let num_segments = SegmentedMatrix::from_csr(&csr, 32).num_segments;
+        let prepared = self.backend.prepare(&csr)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.matrices.lock().unwrap().insert(
-            id,
-            Arc::new(Registered {
-                csr,
-                features,
-                ell_width,
-                num_segments,
-                packed: Mutex::new(HashMap::new()),
-            }),
-        );
-        MatrixHandle(id)
+        self.matrices
+            .lock()
+            .unwrap()
+            .insert(id, Arc::new(Registered { features, prepared }));
+        Ok(MatrixHandle(id))
     }
 
     /// Features of a registered matrix.
@@ -99,26 +118,10 @@ impl SpmmEngine {
             .ok_or_else(|| anyhow!("unknown matrix handle {:?}", h))
     }
 
-    /// The artifact dense widths available for routing, ascending.
-    pub fn available_n(&self) -> Vec<usize> {
-        let mut ns: Vec<usize> = self
-            .runtime
-            .manifest
-            .artifacts
-            .iter()
-            .filter_map(|a| a.n)
-            .collect();
-        ns.sort_unstable();
-        ns.dedup();
-        ns
-    }
-
-    /// Smallest artifact width ≥ n.
-    fn route_n(&self, n: usize) -> Result<usize> {
-        self.available_n()
-            .into_iter()
-            .find(|&a| a >= n)
-            .ok_or_else(|| anyhow!("no artifact bucket for n={n}"))
+    /// Dense widths the backend routes natively (ascending), or `None` if
+    /// it accepts any width (no fixed-shape artifact library).
+    pub fn available_n(&self) -> Option<Vec<usize>> {
+        self.backend.available_n()
     }
 
     /// Execute `Y = A · X` with adaptive kernel selection.
@@ -136,99 +139,95 @@ impl SpmmEngine {
         kernel: KernelKind,
     ) -> Result<SpmmResponse> {
         let reg = self.get(h)?;
-        if x.rows != reg.csr.cols {
+        if let Err(e) = reg.prepared.check_operand(x) {
             self.metrics.record_error();
-            return Err(anyhow!(
-                "inner dimension mismatch: A is {}x{}, X is {}x{}",
-                reg.csr.rows,
-                reg.csr.cols,
-                x.rows,
-                x.cols
-            ));
+            return Err(e);
         }
-        let n_bucket = self.route_n(x.cols.max(1))?;
-        let spec = self
-            .runtime
-            .manifest
-            .route_spmm(
-                kernel.label(),
-                n_bucket,
-                reg.csr.rows,
-                reg.csr.cols,
-                reg.ell_width,
-                reg.num_segments,
-            )
-            .ok_or_else(|| {
-                self.metrics.record_error();
-                anyhow!(
-                    "no {} bucket fits matrix {}x{} (width {}, {} segments) at n={}",
-                    kernel.label(),
-                    reg.csr.rows,
-                    reg.csr.cols,
-                    reg.ell_width,
-                    reg.num_segments,
-                    n_bucket
-                )
-            })?
-            .clone();
-
         let start = Instant::now();
-        let sparse_inputs = self.packed_operands(&reg, &spec)?;
-        let k_bucket = spec.param("k").ok_or_else(|| anyhow!("bucket missing k"))?;
-        let x_lit = pack::dense_tensor(x, k_bucket, n_bucket)?.to_literal()?;
-        let mut inputs: Vec<&xla::Literal> = sparse_inputs.iter().collect();
-        inputs.push(&x_lit);
-        let outputs = self.runtime.load(&spec.name)?.run_literals(&inputs)?;
-        let y = pack::unpack_output(&outputs[0], reg.csr.rows, x.cols)?;
+        let exec = match self.backend.execute(&reg.prepared, x, kernel) {
+            Ok(exec) => exec,
+            Err(e) => {
+                self.metrics.record_error();
+                return Err(e);
+            }
+        };
         let latency = start.elapsed();
         self.metrics.record(kernel, latency);
         Ok(SpmmResponse {
-            y,
+            y: exec.y,
             kernel,
-            artifact: spec.name,
+            artifact: exec.artifact,
             latency,
         })
     }
-
-    /// Packed sparse operands for (matrix, artifact), cached as PJRT
-    /// literals: packing AND host→literal conversion are O(bucket), so
-    /// they are paid once per (matrix, artifact) and reused across
-    /// requests — this is what keeps repeat traffic cheap (§Perf).
-    fn packed_operands(
-        &self,
-        reg: &Registered,
-        spec: &ArtifactSpec,
-    ) -> Result<Arc<Vec<xla::Literal>>> {
-        if let Some(hit) = reg.packed.lock().unwrap().get(&spec.name) {
-            return Ok(hit.clone());
-        }
-        let variant = spec
-            .variant
-            .as_deref()
-            .ok_or_else(|| anyhow!("artifact {} has no variant", spec.name))?;
-        let tensors = if variant.ends_with("_rs") {
-            let (v, c) = pack::ell_tensors(&reg.csr, spec)?;
-            vec![v, c]
-        } else {
-            let (v, c, r) = pack::segment_tensors(&reg.csr, spec)?;
-            vec![v, c, r]
-        };
-        let literals = tensors
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()?;
-        let arc = Arc::new(literals);
-        reg.packed
-            .lock()
-            .unwrap()
-            .insert(spec.name.clone(), arc.clone());
-        Ok(arc)
-    }
-
-    /// Direct access to the PJRT runtime (GCN trainer, diagnostics).
-    pub fn runtime(&self) -> &Engine {
-        &self.runtime
-    }
 }
 
-// Engine tests requiring real artifacts live in rust/tests/.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense::spmm_reference;
+    use crate::sparse::CooMatrix;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest::assert_close;
+
+    fn matrix(seed: u64) -> CsrMatrix {
+        let mut rng = Xoshiro256::seeded(seed);
+        CsrMatrix::from_coo(&CooMatrix::random_uniform(80, 60, 0.1, &mut rng))
+    }
+
+    #[test]
+    fn native_engine_round_trip_all_kernels() {
+        let engine = SpmmEngine::native();
+        assert_eq!(engine.backend_name(), "native");
+        assert_eq!(engine.available_n(), None);
+        let a = matrix(301);
+        let h = engine.register(a.clone()).unwrap();
+        let mut rng = Xoshiro256::seeded(302);
+        let x = DenseMatrix::random(60, 7, 1.0, &mut rng);
+        let mut want = DenseMatrix::zeros(80, 7);
+        spmm_reference(&a, &x, &mut want);
+        for kind in KernelKind::ALL {
+            let resp = engine.spmm_with(h, &x, kind).unwrap();
+            assert_eq!(resp.kernel, kind);
+            assert!(resp.artifact.contains(kind.label()));
+            assert_close(&resp.y.data, &want.data, 1e-5, 1e-5).unwrap();
+        }
+        assert_eq!(engine.metrics.requests(), 4);
+        assert_eq!(engine.metrics.errors(), 0);
+    }
+
+    #[test]
+    fn adaptive_selection_executes_and_records() {
+        let engine = SpmmEngine::native();
+        let a = matrix(303);
+        let h = engine.register(a.clone()).unwrap();
+        let mut rng = Xoshiro256::seeded(304);
+        let x = DenseMatrix::random(60, 32, 1.0, &mut rng);
+        let resp = engine.spmm(h, &x).unwrap();
+        let expect = engine.selector.select(&engine.features(h).unwrap(), x.cols);
+        assert_eq!(resp.kernel, expect);
+        let mut want = DenseMatrix::zeros(80, 32);
+        spmm_reference(&a, &x, &mut want);
+        assert_close(&resp.y.data, &want.data, 1e-5, 1e-5).unwrap();
+        assert_eq!(engine.metrics.kernel_counts().iter().sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn dimension_mismatch_is_rejected_and_counted() {
+        let engine = SpmmEngine::native();
+        let h = engine.register(matrix(305)).unwrap();
+        let x = DenseMatrix::zeros(59, 4); // should be 60 rows
+        assert!(engine.spmm(h, &x).is_err());
+        assert_eq!(engine.metrics.errors(), 1);
+        assert_eq!(engine.metrics.requests(), 0);
+    }
+
+    #[test]
+    fn unknown_handle_is_rejected() {
+        let engine = SpmmEngine::native();
+        let other = SpmmEngine::native();
+        let h = other.register(matrix(306)).unwrap();
+        assert!(engine.spmm(h, &DenseMatrix::zeros(60, 1)).is_err());
+        assert!(engine.features(h).is_err());
+    }
+}

@@ -3,15 +3,21 @@
 //! Productizes the paper's adaptive-kernel contribution: a caller
 //! registers sparse matrices once ([`engine::SpmmEngine`]), then submits
 //! SpMM requests; the engine extracts features, picks a kernel via the
-//! Fig.-4 rules, routes to the right AOT artifact bucket, packs operands,
-//! and executes on the PJRT runtime. [`batcher`] coalesces narrow
+//! Fig.-4 rules, and executes through its [`crate::backend::SpmmBackend`]
+//! — the native CPU kernels by default, or the AOT artifact path on the
+//! PJRT runtime with the `pjrt` feature. [`batcher`] coalesces narrow
 //! requests along the dense-width axis (the paper's own batching axis: N
 //! *is* the batch dimension in GNN workloads); [`metrics`] tracks
-//! per-kernel counts and latency; [`server`] runs the request loop.
+//! per-kernel counts and latency; [`server`] runs the request loop. All
+//! of them are backend-agnostic.
+//!
+//! `pack` (bucket-shaped operand packing for fixed-shape artifacts) is
+//! only meaningful for the PJRT backend and is gated with it.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod pack;
 pub mod server;
 

@@ -26,9 +26,6 @@ pub mod pr_wb;
 pub mod sr_rs;
 pub mod sr_wb;
 
-use crate::sparse::{CsrMatrix, DenseMatrix, SegmentedMatrix};
-use crate::util::threadpool::ThreadPool;
-
 /// Lane count of the simulated SIMD bundle (a CUDA warp; maps to a VPU
 /// sublane group on TPU). The paper's kernels are written against 32.
 pub const WARP: usize = 32;
@@ -81,37 +78,10 @@ impl KernelKind {
     }
 }
 
-/// Pre-converted operand bundle so format conversion cost is paid once,
-/// outside the benchmarked region (mirrors how the GPU kernels take
-/// preprocessed buffers).
-pub struct PreparedMatrix {
-    pub csr: CsrMatrix,
-    pub segments: SegmentedMatrix,
-}
-
-impl PreparedMatrix {
-    /// Prepare with the standard segment length (= [`WARP`]).
-    pub fn new(csr: CsrMatrix) -> Self {
-        let segments = SegmentedMatrix::from_csr(&csr, WARP);
-        Self { csr, segments }
-    }
-}
-
-/// Dispatch an SpMM through one of the four designs.
-pub fn run_kernel(
-    kind: KernelKind,
-    a: &PreparedMatrix,
-    x: &DenseMatrix,
-    y: &mut DenseMatrix,
-    pool: &ThreadPool,
-) {
-    match kind {
-        KernelKind::SrRs => sr_rs::spmm(&a.csr, x, y, pool),
-        KernelKind::SrWb => sr_wb::spmm(&a.segments, x, y, pool),
-        KernelKind::PrRs => pr_rs::spmm(&a.csr, x, y, pool),
-        KernelKind::PrWb => pr_wb::spmm(&a.segments, x, y, pool),
-    }
-}
+// NOTE: the former `PreparedMatrix` / `run_kernel` free-function dispatch
+// path lives in `crate::backend::NativeBackend` now — prepare-once /
+// execute-many goes through the `SpmmBackend` trait so the native kernels
+// and the PJRT artifacts share one pipeline.
 
 #[cfg(test)]
 mod tests {

@@ -9,9 +9,16 @@
 //! - **Layer 2** (build time, Python): a GCN forward/backward in JAX calling
 //!   the Layer-1 kernels.
 //! - **Layer 3** (this crate): the coordinator — sparse formats, feature
-//!   extraction, the adaptive kernel selector, a PJRT runtime that executes
-//!   the AOT artifacts, native CPU reference kernels, and a GPU cost
-//!   simulator that regenerates the paper's evaluation figures.
+//!   extraction, the adaptive kernel selector, pluggable execution
+//!   backends behind the [`backend::SpmmBackend`] trait, native CPU
+//!   kernel ports, and a GPU cost simulator that regenerates the paper's
+//!   evaluation figures.
+//!
+//! Execution is backend-agnostic: [`backend::NativeBackend`] (the CPU
+//! kernel ports, always available, the default) and `backend::PjrtBackend`
+//! (the PJRT runtime executing the AOT artifacts, behind the `pjrt` cargo
+//! feature — off by default because it needs libxla). The [`runtime`]
+//! module and the artifact packing/training paths are gated with it.
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index.
 //!
@@ -32,12 +39,14 @@
 //! assert!(matches!(kernel, KernelKind::SrRs | KernelKind::SrWb));
 //! ```
 
+pub mod backend;
 pub mod bench;
 pub mod coordinator;
 pub mod features;
 pub mod gen;
 pub mod gnn;
 pub mod kernels;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod selector;
 pub mod sim;

@@ -1,13 +1,14 @@
 //! `ge-spmm` — the coordinator CLI.
 //!
 //! Subcommands:
-//!   info        print artifact/manifest and platform diagnostics
+//!   info        print backend/artifact/platform diagnostics
 //!   features    print row-length features for a matrix (.mtx or synth:)
 //!   select      show the adaptive kernel decision for a matrix and N
-//!   spmm        run one SpMM through the runtime with adaptive routing
+//!   spmm        run one SpMM through the coordinator with adaptive routing
+//!               (--backend native|pjrt; native is the default)
 //!   simulate    run the GPU cost model for all kernels on a matrix
 //!   calibrate   fit selector thresholds against simulator profiles
-//!   train-gcn   end-to-end GCN training on the synthetic graph
+//!   train-gcn   end-to-end GCN training (needs the `pjrt` feature)
 //!   suite       list the synthetic benchmark collection
 //!
 //! Matrices are given as a path to a MatrixMarket file or a synthetic
@@ -17,12 +18,14 @@ use anyhow::{anyhow, bail, Result};
 use ge_spmm::coordinator::SpmmEngine;
 use ge_spmm::features::MatrixFeatures;
 use ge_spmm::gen::Collection;
+#[cfg(feature = "pjrt")]
 use ge_spmm::gnn::{GcnTrainer, GraphConfig, SyntheticGraph};
+#[cfg(feature = "pjrt")]
 use ge_spmm::runtime::Engine;
 use ge_spmm::selector::{calibrate, AdaptiveSelector};
 use ge_spmm::sim::{simulate, GpuConfig, SimKernel, SimMatrix};
 use ge_spmm::sparse::{mmio, CsrMatrix, DenseMatrix};
-use ge_spmm::util::cli::{split_subcommand, CliError, Command};
+use ge_spmm::util::cli::{split_subcommand, Args, CliError, Command};
 use ge_spmm::util::prng::Xoshiro256;
 use std::path::Path;
 
@@ -89,10 +92,12 @@ fn matrix_arg(args: &ge_spmm::util::cli::Args) -> Result<String> {
         .ok_or_else(|| anyhow!("expected a matrix argument (.mtx path or synth:<name>)"))
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_info(rest: Vec<String>) -> Result<()> {
-    let cmd = Command::new("info", "artifact and platform diagnostics")
+    let cmd = Command::new("info", "backend, artifact and platform diagnostics")
         .opt("artifacts", "artifact directory", Some("artifacts"));
     let args = cmd.parse(&rest)?;
+    println!("backends: native, pjrt");
     let engine = Engine::new(Path::new(args.get_or("artifacts", "artifacts")))?;
     println!("platform: {}", engine.platform());
     println!("artifacts: {}", engine.manifest.artifacts.len());
@@ -106,6 +111,18 @@ fn cmd_info(rest: Vec<String>) -> Result<()> {
             a.file
         );
     }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_info(rest: Vec<String>) -> Result<()> {
+    let cmd = Command::new("info", "backend diagnostics");
+    let _args = cmd.parse(&rest)?;
+    println!("backends: native (pjrt disabled at compile time)");
+    println!(
+        "artifact diagnostics need the `pjrt` feature — rebuild with \
+         `cargo build --features pjrt`"
+    );
     Ok(())
 }
 
@@ -130,21 +147,37 @@ fn cmd_select(rest: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// Build the engine a CLI command asked for (`--backend native|pjrt`).
+fn build_engine(args: &Args) -> Result<SpmmEngine> {
+    match args.get_or("backend", "native") {
+        "native" => Ok(SpmmEngine::native()),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => SpmmEngine::new(Path::new(args.get_or("artifacts", "artifacts"))),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!(
+            "this build has no PJRT support — rebuild with `cargo build --features pjrt`"
+        ),
+        other => bail!("unknown backend '{other}' (expected: native, pjrt)"),
+    }
+}
+
 fn cmd_spmm(rest: Vec<String>) -> Result<()> {
-    let cmd = Command::new("spmm", "run one SpMM through the PJRT runtime")
+    let cmd = Command::new("spmm", "run one SpMM through the coordinator")
         .opt("n", "dense-matrix width", Some("4"))
-        .opt("artifacts", "artifact directory", Some("artifacts"))
+        .opt("backend", "execution backend: native | pjrt", Some("native"))
+        .opt("artifacts", "artifact directory (pjrt backend)", Some("artifacts"))
         .opt("seed", "dense operand seed", Some("42"));
     let args = cmd.parse(&rest)?;
     let m = load_matrix(&matrix_arg(&args)?)?;
     let n: usize = args.parse_or("n", 4);
-    let engine = SpmmEngine::new(Path::new(args.get_or("artifacts", "artifacts")))?;
-    let h = engine.register(m.clone());
+    let engine = build_engine(&args)?;
+    let h = engine.register(m.clone())?;
     let mut rng = Xoshiro256::seeded(args.parse_or("seed", 42));
     let x = DenseMatrix::random(m.cols, n, 1.0, &mut rng);
     let resp = engine.spmm(h, &x)?;
     println!(
-        "kernel={} artifact={} latency={:?}",
+        "backend={} kernel={} artifact={} latency={:?}",
+        engine.backend_name(),
         resp.kernel.label(),
         resp.artifact,
         resp.latency
@@ -222,6 +255,15 @@ fn cmd_calibrate(rest: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train_gcn(_rest: Vec<String>) -> Result<()> {
+    bail!(
+        "`train-gcn` drives the AOT `gcn_step` artifact and needs the `pjrt` \
+         feature — rebuild with `cargo build --features pjrt`"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train_gcn(rest: Vec<String>) -> Result<()> {
     let cmd = Command::new("train-gcn", "end-to-end GCN training (E2E driver)")
         .opt("steps", "training steps", Some("200"))

@@ -521,7 +521,7 @@ mod tests {
             coo.push(r, r, 1.0);
         }
         let a = CsrMatrix::from_coo(&coo);
-        let seg = SegmentedMatrix::from_csr(&a, 32);
+        let seg = SegmentedMatrix::from_csr(&a, crate::kernels::WARP);
         let rs = pr_rs(&a, 1, &gpu());
         let wb = pr_wb(&seg, 1, &gpu());
         let max_mem = |t: &KernelTrace| t.warps.iter().map(|w| w.mem).fold(0.0, f64::max);
@@ -552,7 +552,7 @@ mod tests {
     #[test]
     fn traces_are_empty_safe() {
         let a = CsrMatrix::from_coo(&CooMatrix::new(4, 4));
-        let seg = SegmentedMatrix::from_csr(&a, 32);
+        let seg = SegmentedMatrix::from_csr(&a, crate::kernels::WARP);
         for tr in [
             sr_rs(&a, 8, true, &gpu()),
             sr_rs(&a, 8, false, &gpu()),

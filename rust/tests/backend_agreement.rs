@@ -1,0 +1,152 @@
+//! Cross-kernel agreement through the `SpmmBackend` trait.
+//!
+//! All four `KernelKind` designs, driven through `NativeBackend` via the
+//! trait (prepare once, execute many), must match the dense reference on
+//! uniform, R-MAT and banded matrices at N ∈ {1, 4, 32, 128}, including
+//! empty-row and empty-matrix edge cases. This is the default-feature
+//! stand-in for the artifact cross-check in `integration_runtime.rs`.
+
+use ge_spmm::backend::{NativeBackend, SpmmBackend};
+use ge_spmm::gen::banded::banded;
+use ge_spmm::gen::rmat::RmatConfig;
+use ge_spmm::kernels::dense::spmm_reference;
+use ge_spmm::kernels::KernelKind;
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix};
+use ge_spmm::util::prng::Xoshiro256;
+use ge_spmm::util::proptest::{assert_close, run_prop};
+use ge_spmm::util::threadpool::ThreadPool;
+
+/// The dense widths the artifact library is compiled at — the agreement
+/// surface the paper's adaptive selector routes over.
+const WIDTHS: [usize; 4] = [1, 4, 32, 128];
+
+/// Prepare `csr` once, then check every kernel design against the dense
+/// reference for the given operand.
+fn check_all_kernels(
+    backend: &NativeBackend,
+    csr: &CsrMatrix,
+    x: &DenseMatrix,
+) -> Result<(), String> {
+    let mut want = DenseMatrix::zeros(csr.rows, x.cols);
+    spmm_reference(csr, x, &mut want);
+    let op = backend.prepare(csr).map_err(|e| e.to_string())?;
+    for kind in KernelKind::ALL {
+        let exec = backend
+            .execute(&op, x, kind)
+            .map_err(|e| format!("{}: {e}", kind.label()))?;
+        if (exec.y.rows, exec.y.cols) != (csr.rows, x.cols) {
+            return Err(format!(
+                "{}: output shape {}x{}, expected {}x{}",
+                kind.label(),
+                exec.y.rows,
+                exec.y.cols,
+                csr.rows,
+                x.cols
+            ));
+        }
+        assert_close(&exec.y.data, &want.data, 1e-4, 1e-4)
+            .map_err(|m| format!("{}: {m}", kind.label()))?;
+    }
+    Ok(())
+}
+
+#[test]
+fn uniform_matrices_agree_across_kernels() {
+    run_prop("backend agreement: uniform", 24, |g| {
+        let rows = g.dim() * 2;
+        let cols = g.dim() * 2;
+        let density = g.f64_in(0.02, 0.3);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(rows, cols, density, g.rng()));
+        let n = *g.choose(&WIDTHS);
+        let workers = *g.choose(&[1usize, 2, 4]);
+        let backend = NativeBackend::new(ThreadPool::new(workers));
+        let x = DenseMatrix::from_vec(cols, n, g.vec_f32(cols * n));
+        check_all_kernels(&backend, &csr, &x)
+    });
+}
+
+#[test]
+fn rmat_matrices_agree_across_kernels() {
+    run_prop("backend agreement: rmat", 10, |g| {
+        let scale = g.usize_in(4, 9) as u32; // 16..256 vertices
+        let edge_factor = g.f64_in(2.0, 8.0);
+        let csr = CsrMatrix::from_coo(&RmatConfig::new(scale, edge_factor).generate(g.rng()));
+        let n = *g.choose(&WIDTHS);
+        let workers = *g.choose(&[1usize, 3]);
+        let backend = NativeBackend::new(ThreadPool::new(workers));
+        let x = DenseMatrix::from_vec(csr.cols, n, g.vec_f32(csr.cols * n));
+        check_all_kernels(&backend, &csr, &x)
+    });
+}
+
+#[test]
+fn banded_matrices_agree_across_kernels() {
+    run_prop("backend agreement: banded", 12, |g| {
+        let dim = g.dim() * 4 + 4;
+        let offsets: &[i64] = *g.choose(&[
+            &[0i64][..],
+            &[-1, 0, 1][..],
+            &[-8, -1, 0, 1, 8][..],
+        ]);
+        let csr = CsrMatrix::from_coo(&banded(dim, offsets, g.rng()));
+        let n = *g.choose(&WIDTHS);
+        let backend = NativeBackend::new(ThreadPool::new(*g.choose(&[1usize, 2, 5])));
+        let x = DenseMatrix::from_vec(csr.cols, n, g.vec_f32(csr.cols * n));
+        check_all_kernels(&backend, &csr, &x)
+    });
+}
+
+#[test]
+fn empty_matrix_agrees_at_all_widths() {
+    // Zero non-zeros: every kernel must produce an all-zero result.
+    let csr = CsrMatrix::from_coo(&CooMatrix::new(64, 48));
+    let backend = NativeBackend::new(ThreadPool::new(4));
+    let mut rng = Xoshiro256::seeded(71);
+    for n in WIDTHS {
+        let x = DenseMatrix::random(48, n, 1.0, &mut rng);
+        check_all_kernels(&backend, &csr, &x).unwrap();
+        let op = backend.prepare(&csr).unwrap();
+        let exec = backend.execute(&op, &x, KernelKind::PrWb).unwrap();
+        assert!(exec.y.data.iter().all(|&v| v == 0.0));
+    }
+}
+
+#[test]
+fn empty_rows_agree_at_all_widths() {
+    // Only every third row populated: row-split kernels see empty rows,
+    // balanced kernels see segments skipping rows.
+    let mut coo = CooMatrix::new(90, 60);
+    let mut rng = Xoshiro256::seeded(72);
+    for r in (0..90).step_by(3) {
+        for _ in 0..4 {
+            let c = (rng.below(60)) as usize;
+            coo.push(r, c, rng.next_f32());
+        }
+    }
+    let csr = CsrMatrix::from_coo(&coo);
+    let backend = NativeBackend::new(ThreadPool::new(3));
+    for n in WIDTHS {
+        let x = DenseMatrix::random(60, n, 1.0, &mut rng);
+        check_all_kernels(&backend, &csr, &x).unwrap();
+    }
+}
+
+#[test]
+fn pathological_skew_agrees_at_all_widths() {
+    // One row holds almost all non-zeros: the exact case the paper's
+    // workload-balanced designs exist for.
+    let mut coo = CooMatrix::new(40, 500);
+    for c in 0..500 {
+        coo.push(11, c, 0.002 * c as f32);
+    }
+    for r in 0..40 {
+        coo.push(r, r, 1.0);
+    }
+    let csr = CsrMatrix::from_coo(&coo);
+    let backend = NativeBackend::new(ThreadPool::new(6));
+    let mut rng = Xoshiro256::seeded(73);
+    for n in WIDTHS {
+        let x = DenseMatrix::random(500, n, 1.0, &mut rng);
+        check_all_kernels(&backend, &csr, &x).unwrap();
+    }
+}

@@ -27,7 +27,7 @@ fn matrix(seed: u64) -> CsrMatrix {
 fn batcher_coalesces_and_results_match_unbatched() {
     let engine = SpmmEngine::new(artifact_dir()).unwrap();
     let a = matrix(2001);
-    let h = engine.register(a.clone());
+    let h = engine.register(a.clone()).unwrap();
     let mut rng = Xoshiro256::seeded(2002);
 
     let xs: Vec<DenseMatrix> = (0..4)
@@ -64,7 +64,7 @@ fn batcher_coalesces_and_results_match_unbatched() {
 fn batcher_flush_all_handles_partial_batches() {
     let engine = SpmmEngine::new(artifact_dir()).unwrap();
     let a = matrix(2003);
-    let h = engine.register(a.clone());
+    let h = engine.register(a.clone()).unwrap();
     let mut rng = Xoshiro256::seeded(2004);
     let mut batcher = Batcher::new(&engine, 128);
     let x = DenseMatrix::random(120, 2, 1.0, &mut rng);
@@ -83,7 +83,7 @@ fn server_loop_round_trips_requests() {
     // topology a deployment would use (engine thread + I/O threads).
     let engine = SpmmEngine::new(artifact_dir()).unwrap();
     let a = matrix(2005);
-    let h = engine.register(a.clone());
+    let h = engine.register(a.clone()).unwrap();
 
     let (tx, rx) = mpsc::channel::<Request>();
     let config = ServerConfig {

@@ -44,7 +44,7 @@ fn manifest_loads_and_lists_all_variants() {
 fn every_kernel_variant_matches_native_reference() {
     let engine = SpmmEngine::new(artifact_dir()).unwrap();
     let a = small_matrix(100, 90, 0.08, 1001);
-    let h = engine.register(a.clone());
+    let h = engine.register(a.clone()).unwrap();
     let mut rng = Xoshiro256::seeded(1002);
     for n in [1usize, 4] {
         let x = DenseMatrix::random(90, n, 1.0, &mut rng);
@@ -75,7 +75,7 @@ fn adaptive_path_selects_and_executes() {
     let engine = SpmmEngine::new(artifact_dir()).unwrap();
     // short-row matrix at n=1 → expect a PR kernel per the Fig. 4 rules
     let a = small_matrix(400, 400, 0.008, 1003);
-    let h = engine.register(a.clone());
+    let h = engine.register(a.clone()).unwrap();
     let mut rng = Xoshiro256::seeded(1004);
     let x = DenseMatrix::random(400, 1, 1.0, &mut rng);
     let resp = engine.spmm(h, &x).unwrap();
@@ -96,7 +96,7 @@ fn routes_to_bigger_bucket_and_odd_n_pads() {
     let engine = SpmmEngine::new(artifact_dir()).unwrap();
     // 600 rows exceed the s bucket (512) → must route to m
     let a = small_matrix(600, 600, 0.005, 1005);
-    let h = engine.register(a.clone());
+    let h = engine.register(a.clone()).unwrap();
     let mut rng = Xoshiro256::seeded(1006);
     // n=3 routes to the n=4 artifact and slices back
     let x = DenseMatrix::random(600, 3, 1.0, &mut rng);
@@ -118,7 +118,7 @@ fn routes_to_bigger_bucket_and_odd_n_pads() {
 fn oversize_matrix_is_rejected_cleanly() {
     let engine = SpmmEngine::new(artifact_dir()).unwrap();
     let a = small_matrix(5000, 5000, 0.002, 1007);
-    let h = engine.register(a);
+    let h = engine.register(a).unwrap();
     let mut rng = Xoshiro256::seeded(1008);
     let x = DenseMatrix::random(5000, 4, 1.0, &mut rng);
     let err = engine.spmm(h, &x).unwrap_err().to_string();
@@ -129,7 +129,7 @@ fn oversize_matrix_is_rejected_cleanly() {
 fn dimension_mismatch_is_rejected() {
     let engine = SpmmEngine::new(artifact_dir()).unwrap();
     let a = small_matrix(50, 60, 0.1, 1009);
-    let h = engine.register(a);
+    let h = engine.register(a).unwrap();
     let x = DenseMatrix::zeros(50, 4); // should be 60 rows
     assert!(engine.spmm(h, &x).is_err());
     assert_eq!(engine.metrics.errors(), 1);
@@ -139,7 +139,7 @@ fn dimension_mismatch_is_rejected() {
 fn packed_operand_cache_reuses_across_requests() {
     let engine = SpmmEngine::new(artifact_dir()).unwrap();
     let a = small_matrix(200, 200, 0.02, 1010);
-    let h = engine.register(a);
+    let h = engine.register(a).unwrap();
     let mut rng = Xoshiro256::seeded(1011);
     let x = DenseMatrix::random(200, 4, 1.0, &mut rng);
     let r1 = engine.spmm(h, &x).unwrap();

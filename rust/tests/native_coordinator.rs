@@ -1,0 +1,184 @@
+//! Coordinator integration on the native backend — the default-feature
+//! end-to-end test of the full serving stack: register → select → batch →
+//! serve → metrics, with zero artifacts and zero libxla.
+//!
+//! Mirrors `integration_coordinator.rs` (which drives the same stack
+//! through PJRT artifacts and is gated behind the `pjrt` feature).
+
+use ge_spmm::coordinator::batcher::Batcher;
+use ge_spmm::coordinator::server::{serve, Request, ServerConfig, ServerReply};
+use ge_spmm::coordinator::SpmmEngine;
+use ge_spmm::kernels::dense::spmm_reference;
+use ge_spmm::kernels::KernelKind;
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix};
+use ge_spmm::util::prng::Xoshiro256;
+use ge_spmm::util::proptest::assert_close;
+use std::sync::mpsc;
+use std::time::Duration;
+
+fn matrix(seed: u64) -> CsrMatrix {
+    let mut rng = Xoshiro256::seeded(seed);
+    CsrMatrix::from_coo(&CooMatrix::random_uniform(120, 120, 0.05, &mut rng))
+}
+
+#[test]
+fn every_kernel_reachable_through_engine_matches_reference() {
+    let engine = SpmmEngine::native();
+    let a = matrix(4001);
+    let h = engine.register(a.clone()).unwrap();
+    let mut rng = Xoshiro256::seeded(4002);
+    for n in [1usize, 4, 32, 128] {
+        let x = DenseMatrix::random(120, n, 1.0, &mut rng);
+        let mut want = DenseMatrix::zeros(120, n);
+        spmm_reference(&a, &x, &mut want);
+        for kind in KernelKind::ALL {
+            let resp = engine.spmm_with(h, &x, kind).unwrap();
+            assert_eq!(resp.artifact, format!("native/{}", kind.label()));
+            assert_close(&resp.y.data, &want.data, 1e-4, 1e-4)
+                .unwrap_or_else(|m| panic!("{} n={n}: {m}", kind.label()));
+        }
+    }
+    // every request accounted for, exactly once, under some kernel
+    assert_eq!(engine.metrics.requests(), 16);
+    assert_eq!(engine.metrics.kernel_counts(), [4, 4, 4, 4]);
+    assert_eq!(engine.metrics.errors(), 0);
+}
+
+#[test]
+fn batcher_coalesces_and_results_match_unbatched() {
+    let engine = SpmmEngine::native();
+    let a = matrix(4003);
+    let h = engine.register(a.clone()).unwrap();
+    let mut rng = Xoshiro256::seeded(4004);
+
+    let xs: Vec<DenseMatrix> = (0..4)
+        .map(|_| DenseMatrix::random(120, 1, 1.0, &mut rng))
+        .collect();
+
+    let mut batcher = Batcher::new(&engine, 4);
+    let mut results = Vec::new();
+    for (i, x) in xs.iter().enumerate() {
+        results.extend(batcher.submit(h, x.clone(), i as u64).unwrap());
+    }
+    // 4 columns = max_width → auto-flush happened
+    assert_eq!(results.len(), 4);
+    assert_eq!(batcher.pending(), 0);
+    // exactly one backend execution served all four requests
+    assert_eq!(engine.metrics.requests(), 1);
+    for r in &results {
+        assert_eq!(r.batch_size, 4);
+        let x = &xs[r.tag as usize];
+        let mut want = DenseMatrix::zeros(120, 1);
+        spmm_reference(&a, x, &mut want);
+        assert_close(&r.y.data, &want.data, 1e-4, 1e-4)
+            .unwrap_or_else(|m| panic!("tag {}: {m}", r.tag));
+    }
+}
+
+#[test]
+fn server_loop_with_concurrent_producers_matches_unbatched() {
+    let engine = SpmmEngine::native();
+    let a = matrix(4005);
+    let b = matrix(4006);
+    let ha = engine.register(a.clone()).unwrap();
+    let hb = engine.register(b.clone()).unwrap();
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let config = ServerConfig {
+        max_width: 4,
+        max_delay: Duration::from_millis(5),
+    };
+
+    const PRODUCERS: u64 = 3;
+    const PER_PRODUCER: u64 = 6;
+
+    let mut producers = Vec::new();
+    for p in 0..PRODUCERS {
+        let tx = tx.clone();
+        let a = a.clone();
+        let b = b.clone();
+        producers.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256::seeded(5000 + p);
+            let mut pending = Vec::new();
+            for i in 0..PER_PRODUCER {
+                let tag = p * PER_PRODUCER + i; // globally unique
+                let (use_b, n) = ((i % 2) == 1, if i % 3 == 0 { 2 } else { 1 });
+                let (h, m) = if use_b { (hb, &b) } else { (ha, &a) };
+                let x = DenseMatrix::random(120, n, 1.0, &mut rng);
+                let mut want = DenseMatrix::zeros(120, n);
+                spmm_reference(m, &x, &mut want);
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(Request {
+                    matrix: h,
+                    x,
+                    tag,
+                    reply: rtx,
+                })
+                .unwrap();
+                pending.push((tag, want, rrx));
+            }
+            drop(tx);
+            for (tag, want, rrx) in pending {
+                match rrx.recv_timeout(Duration::from_secs(60)).unwrap() {
+                    ServerReply::Ok(r) => {
+                        assert_eq!(r.tag, tag);
+                        assert!(r.batch_size >= 1);
+                        assert_close(&r.y.data, &want.data, 1e-4, 1e-4)
+                            .unwrap_or_else(|m| panic!("tag {tag}: {m}"));
+                    }
+                    ServerReply::Err(e) => panic!("request {tag} failed: {e}"),
+                }
+            }
+        }));
+    }
+    drop(tx); // close the channel once all producers finish
+
+    serve(&engine, rx, config);
+    for p in producers {
+        p.join().unwrap();
+    }
+
+    // Metrics add up: every backend execution is counted under exactly one
+    // kernel, no errors, and batching can only merge — never drop or
+    // duplicate — requests.
+    let total = PRODUCERS * PER_PRODUCER;
+    let requests = engine.metrics.requests();
+    assert!((1..=total).contains(&requests), "requests {requests}");
+    assert_eq!(engine.metrics.kernel_counts().iter().sum::<u64>(), requests);
+    assert_eq!(engine.metrics.errors(), 0);
+    assert!(engine.metrics.mean_latency() > Duration::ZERO);
+}
+
+#[test]
+fn server_reports_errors_and_metrics_count_them() {
+    let engine = SpmmEngine::native();
+    let h = engine.register(matrix(4007)).unwrap();
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request {
+        matrix: h,
+        // wrong inner dimension (119 rows, should be 120) at full batch
+        // width so the flush — and the failure — happens immediately
+        x: DenseMatrix::zeros(119, 4),
+        tag: 9,
+        reply: rtx,
+    })
+    .unwrap();
+    drop(tx);
+
+    serve(
+        &engine,
+        rx,
+        ServerConfig {
+            max_width: 4,
+            max_delay: Duration::from_millis(2),
+        },
+    );
+    match rrx.recv_timeout(Duration::from_secs(10)).unwrap() {
+        ServerReply::Err(e) => assert!(e.contains("dimension"), "unexpected error: {e}"),
+        ServerReply::Ok(_) => panic!("dimension mismatch must not succeed"),
+    }
+    assert_eq!(engine.metrics.errors(), 1);
+    assert_eq!(engine.metrics.requests(), 0);
+}
