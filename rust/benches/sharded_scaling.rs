@@ -1,0 +1,65 @@
+//! Wallclock scaling of `ShardedBackend` vs the unsharded `NativeBackend`
+//! across shard counts {1, 2, 4, 8} on a `gen/` power-law and a uniform
+//! matrix at N ∈ {4, 32, 128} — the fan-out/gather overhead vs
+//! parallelism trade of the sharded execution subsystem. Feeds the
+//! DESIGN.md experiment index; per-shard kernel choices are reported via
+//! the backend's `Metrics` shard counters and the execution artifact.
+
+use ge_spmm::backend::{NativeBackend, SpmmBackend};
+use ge_spmm::bench::harness::bench_fn;
+use ge_spmm::features::MatrixFeatures;
+use ge_spmm::gen::Collection;
+use ge_spmm::selector::AdaptiveSelector;
+use ge_spmm::shard::ShardedBackend;
+use ge_spmm::sparse::DenseMatrix;
+use ge_spmm::util::prng::Xoshiro256;
+
+const MATRICES: [&str; 2] = ["plaw_n16384_a1.6_d16", "uniform_s12_e8"];
+const SHARDS: [usize; 4] = [1, 2, 4, 8];
+const WIDTHS: [usize; 3] = [4, 32, 128];
+
+fn main() {
+    println!("== sharded fan-out scaling (this machine) ==");
+    let suite = Collection::suite();
+    for name in MATRICES {
+        let spec = suite
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("no suite matrix named '{name}'"));
+        let csr = spec.build();
+        let feats = MatrixFeatures::of(&csr);
+        println!("\n--- {name} ({}) ---", feats.summary());
+        let selector = AdaptiveSelector::default();
+        let native = NativeBackend::default();
+        let op = native.prepare(&csr).expect("native prepare");
+        for n in WIDTHS {
+            let mut rng = Xoshiro256::seeded(17);
+            let x = DenseMatrix::random(csr.cols, n, 1.0, &mut rng);
+            let kernel = selector.select(&feats, n);
+            let base = bench_fn(&format!("{name} n={n} native/{}", kernel.label()), || {
+                native.execute(&op, &x, kernel).expect("native execute");
+            });
+            println!("{}", base.line());
+            for k in SHARDS {
+                let backend = ShardedBackend::new(k).adaptive(selector);
+                let sop = backend.prepare(&csr).expect("sharded prepare");
+                // one untimed pass to surface the per-shard kernel choices
+                let exec = backend.execute(&sop, &x, kernel).expect("sharded execute");
+                let stats = bench_fn(&format!("{name} n={n} sharded k={k}"), || {
+                    backend.execute(&sop, &x, kernel).expect("sharded execute");
+                });
+                let counts = backend.metrics().shard_kernel_counts();
+                println!(
+                    "{}  x{:.2} vs native  {}  shard execs [sr_rs={} sr_wb={} pr_rs={} pr_wb={}]",
+                    stats.line(),
+                    base.median_s() / stats.median_s(),
+                    exec.artifact,
+                    counts[0],
+                    counts[1],
+                    counts[2],
+                    counts[3],
+                );
+            }
+        }
+    }
+}

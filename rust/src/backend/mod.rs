@@ -14,11 +14,15 @@
 //! 2. [`SpmmBackend::execute`]: run `Y = A · X` through one of the four
 //!    [`KernelKind`] designs against that prepared operand.
 //!
-//! Two implementations exist:
+//! Three implementations exist:
 //!
 //! - [`NativeBackend`] — the faithful CPU ports in [`crate::kernels`] over
 //!   the scoped [`crate::util::threadpool::ThreadPool`]. Always available;
 //!   the default.
+//! - [`ShardedBackend`] (in [`crate::shard`]) — nnz-balanced row
+//!   partitioning with per-shard adaptive selection, fanning out over any
+//!   inner backend. Composes: it is both an `SpmmBackend` and a consumer
+//!   of one.
 //! - `PjrtBackend` (`pjrt` cargo feature) — routes to the AOT-compiled
 //!   Pallas artifacts through the PJRT runtime in `crate::runtime`.
 //!
@@ -28,6 +32,7 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+pub use crate::shard::ShardedBackend;
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;

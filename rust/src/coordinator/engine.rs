@@ -31,10 +31,14 @@ struct Registered {
 
 /// The coordinator engine: adaptive selection + backend routing +
 /// execution + metrics.
+///
+/// `metrics` is shared (`Arc`) so backends that produce sub-request
+/// telemetry — the sharded backend records one entry per shard execution
+/// — can write into the same instance the engine reports from.
 pub struct SpmmEngine {
     backend: Box<dyn SpmmBackend>,
     pub selector: AdaptiveSelector,
-    pub metrics: Metrics,
+    pub metrics: Arc<Metrics>,
     matrices: Mutex<HashMap<usize, Arc<Registered>>>,
     next_id: AtomicUsize,
 }
@@ -56,12 +60,55 @@ impl SpmmEngine {
         Self::with_backend(Box::new(NativeBackend::default()))
     }
 
+    /// Engine over a `k`-way sharded native backend: matrices are split
+    /// into nnz-balanced row shards at registration, and every request
+    /// fans out with *per-shard* adaptive kernel selection (the engine's
+    /// request-level choice is recorded as usual; each shard's own choice
+    /// lands in the [`Metrics`] shard counters). `k = 1` behaves like
+    /// [`SpmmEngine::native`] with sharding bookkeeping.
+    pub fn sharded(k: usize) -> SpmmEngine {
+        Self::sharded_with_selector(k, AdaptiveSelector::default())
+    }
+
+    /// [`SpmmEngine::sharded`] with explicit (e.g. calibrated) selector
+    /// thresholds, installed at *both* grains: the engine's request-level
+    /// selector and the backend's per-shard selector. Use this — not
+    /// [`SpmmEngine::with_selector`] — to calibrate a sharded engine.
+    pub fn sharded_with_selector(k: usize, selector: AdaptiveSelector) -> SpmmEngine {
+        let metrics = Arc::new(Metrics::default());
+        let backend = crate::shard::ShardedBackend::new(k)
+            .adaptive(selector)
+            .with_metrics(metrics.clone());
+        let mut engine = Self::assemble(Box::new(backend), metrics);
+        engine.selector = selector;
+        engine
+    }
+
     /// Engine over an explicit backend.
+    ///
+    /// A [`crate::shard::ShardedBackend`] boxed through here keeps its
+    /// own private metrics instance — use
+    /// [`SpmmEngine::with_sharded_backend`] instead so shard telemetry
+    /// lands in the engine's metrics.
     pub fn with_backend(backend: Box<dyn SpmmBackend>) -> SpmmEngine {
+        Self::assemble(backend, Arc::new(Metrics::default()))
+    }
+
+    /// Engine over a custom-composed sharded backend (e.g.
+    /// `ShardedBackend::over(pjrt, k)`), rebinding the backend's shard
+    /// counters to the engine's own [`Metrics`] so
+    /// `engine.metrics.shard_*` observes the fan-out.
+    pub fn with_sharded_backend(backend: crate::shard::ShardedBackend) -> SpmmEngine {
+        let metrics = Arc::new(Metrics::default());
+        let backend = backend.with_metrics(metrics.clone());
+        Self::assemble(Box::new(backend), metrics)
+    }
+
+    fn assemble(backend: Box<dyn SpmmBackend>, metrics: Arc<Metrics>) -> SpmmEngine {
         SpmmEngine {
             backend,
             selector: AdaptiveSelector::default(),
-            metrics: Metrics::default(),
+            metrics,
             matrices: Mutex::new(HashMap::new()),
             next_id: AtomicUsize::new(0),
         }
@@ -76,6 +123,10 @@ impl SpmmEngine {
     }
 
     /// With a custom (e.g. calibrated) selector.
+    ///
+    /// This sets the *request-level* selector only. A sharded backend's
+    /// per-shard selector is fixed at construction — build calibrated
+    /// sharded engines with [`SpmmEngine::sharded_with_selector`] instead.
     pub fn with_selector(mut self, selector: AdaptiveSelector) -> Self {
         self.selector = selector;
         self
@@ -132,6 +183,11 @@ impl SpmmEngine {
     }
 
     /// Execute with an explicit kernel choice (oracle / ablation paths).
+    ///
+    /// Adaptive sharded backends ([`SpmmEngine::sharded`]) treat `kernel`
+    /// as a hint: each shard re-selects from its own features, and the
+    /// actual per-shard choices are observable via the [`Metrics`] shard
+    /// counters.
     pub fn spmm_with(
         &self,
         h: MatrixHandle,
@@ -210,6 +266,69 @@ mod tests {
         spmm_reference(&a, &x, &mut want);
         assert_close(&resp.y.data, &want.data, 1e-5, 1e-5).unwrap();
         assert_eq!(engine.metrics.kernel_counts().iter().sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn sharded_engine_matches_native_and_counts_shards() {
+        let a = matrix(307);
+        let mut rng = Xoshiro256::seeded(308);
+        let x = DenseMatrix::random(60, 16, 1.0, &mut rng);
+        let native = SpmmEngine::native();
+        let sharded = SpmmEngine::sharded(3);
+        assert_eq!(sharded.backend_name(), "sharded");
+        let hn = native.register(a.clone()).unwrap();
+        let hs = sharded.register(a).unwrap();
+        let want = native.spmm(hn, &x).unwrap();
+        let got = sharded.spmm(hs, &x).unwrap();
+        assert_close(&got.y.data, &want.y.data, 1e-5, 1e-5).unwrap();
+        assert!(got.artifact.starts_with("sharded(k="), "{}", got.artifact);
+        // one request, one shard execution per shard
+        assert_eq!(sharded.metrics.requests(), 1);
+        assert_eq!(
+            sharded.metrics.shard_executions(),
+            sharded.metrics.shard_kernel_counts().iter().sum::<u64>()
+        );
+        assert!(sharded.metrics.shard_executions() >= 2);
+        assert!(sharded.metrics.summary().contains("shards["), "shared Arc");
+        // features are those of the whole matrix, not a shard
+        assert_eq!(
+            sharded.features(hs).unwrap().rows,
+            native.features(hn).unwrap().rows
+        );
+    }
+
+    #[test]
+    fn sharded_with_selector_installs_thresholds_at_both_grains() {
+        let custom = AdaptiveSelector {
+            n_threshold: 2,
+            t_avg: 5.0,
+            t_cv: 0.5,
+        };
+        let engine = SpmmEngine::sharded_with_selector(2, custom);
+        assert_eq!(engine.selector, custom);
+        // the request-level choice follows the custom thresholds
+        let h = engine.register(matrix(310)).unwrap();
+        let mut rng = Xoshiro256::seeded(311);
+        let x = DenseMatrix::random(60, 3, 1.0, &mut rng);
+        let resp = engine.spmm(h, &x).unwrap();
+        assert_eq!(
+            resp.kernel,
+            custom.select(&engine.features(h).unwrap(), 3)
+        );
+    }
+
+    #[test]
+    fn sharded_engine_diverges_kernels_across_regimes() {
+        // Two-regime fixture: at N=1 the long-row head shard wants PR-RS,
+        // the short-row tail PR-WB.
+        let mut rng = Xoshiro256::seeded(309);
+        let engine = SpmmEngine::sharded(2);
+        let h = engine
+            .register(crate::shard::features::two_regime_matrix())
+            .unwrap();
+        let x = DenseMatrix::random(2048, 1, 1.0, &mut rng);
+        engine.spmm(h, &x).unwrap();
+        assert_eq!(engine.metrics.shard_kernel_counts(), [0, 0, 1, 1]);
     }
 
     #[test]

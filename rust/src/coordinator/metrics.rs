@@ -1,6 +1,11 @@
 //! Coordinator metrics: request counts, per-kernel selection counts, and
 //! latency aggregates. Lock-light (atomics + a mutex-guarded latency
 //! reservoir) so the hot path stays cheap.
+//!
+//! Requests and shards are counted separately: one sharded request fans
+//! out into K shard executions, each with its own kernel choice and
+//! wallclock. The `shard_*` counters are how per-shard adaptivity is
+//! observed from outside (`crate::shard::ShardedBackend` records them).
 
 use crate::kernels::KernelKind;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -17,6 +22,12 @@ pub struct Metrics {
     exec_ns: AtomicU64,
     /// bounded latency reservoir for quantiles (most recent 4096)
     latencies: Mutex<Vec<u64>>,
+    /// shard-level counters (sharded backends only; zero otherwise)
+    shard_execs: AtomicU64,
+    shard_by_kernel: [AtomicU64; 4],
+    shard_ns: AtomicU64,
+    /// slowest single shard execution seen — the fan-out straggler bound
+    shard_max_ns: AtomicU64,
 }
 
 const RESERVOIR: usize = 4096;
@@ -41,6 +52,18 @@ impl Metrics {
     /// Record a failed request.
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one shard execution inside a sharded request. `kernel` is
+    /// the shard's own choice, which in adaptive mode may differ from the
+    /// request-level kernel recorded by [`Metrics::record`].
+    pub fn record_shard(&self, kernel: KernelKind, latency: Duration) {
+        self.shard_execs.fetch_add(1, Ordering::Relaxed);
+        let idx = KernelKind::ALL.iter().position(|k| *k == kernel).unwrap();
+        self.shard_by_kernel[idx].fetch_add(1, Ordering::Relaxed);
+        let ns = latency.as_nanos() as u64;
+        self.shard_ns.fetch_add(ns, Ordering::Relaxed);
+        self.shard_max_ns.fetch_max(ns, Ordering::Relaxed);
     }
 
     /// Completed request count.
@@ -72,6 +95,37 @@ impl Metrics {
         Duration::from_nanos(self.exec_ns.load(Ordering::Relaxed) / n)
     }
 
+    /// Shard executions recorded (0 unless a sharded backend is in use).
+    pub fn shard_executions(&self) -> u64 {
+        self.shard_execs.load(Ordering::Relaxed)
+    }
+
+    /// Shard executions per kernel, in [`KernelKind::ALL`] order — the
+    /// observable trace of per-shard adaptive choices.
+    pub fn shard_kernel_counts(&self) -> [u64; 4] {
+        [
+            self.shard_by_kernel[0].load(Ordering::Relaxed),
+            self.shard_by_kernel[1].load(Ordering::Relaxed),
+            self.shard_by_kernel[2].load(Ordering::Relaxed),
+            self.shard_by_kernel[3].load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Mean single-shard execution latency.
+    pub fn shard_mean_latency(&self) -> Duration {
+        let n = self.shard_executions();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.shard_ns.load(Ordering::Relaxed) / n)
+    }
+
+    /// Slowest single-shard execution — the straggler that bounds fan-out
+    /// wallclock.
+    pub fn shard_max_latency(&self) -> Duration {
+        Duration::from_nanos(self.shard_max_ns.load(Ordering::Relaxed))
+    }
+
     /// Latency quantile from the reservoir.
     pub fn latency_quantile(&self, q: f64) -> Duration {
         let res = self.latencies.lock().unwrap();
@@ -82,10 +136,11 @@ impl Metrics {
         Duration::from_nanos(crate::util::stats::quantile(&xs, q) as u64)
     }
 
-    /// One-line summary for logs.
+    /// One-line summary for logs. Shard-level counters are appended only
+    /// when a sharded backend actually recorded them.
     pub fn summary(&self) -> String {
         let counts = self.kernel_counts();
-        format!(
+        let mut out = format!(
             "requests={} errors={} mean={:?} p50={:?} p99={:?} kernels[sr_rs={} sr_wb={} pr_rs={} pr_wb={}]",
             self.requests(),
             self.errors(),
@@ -96,7 +151,21 @@ impl Metrics {
             counts[1],
             counts[2],
             counts[3],
-        )
+        );
+        if self.shard_executions() > 0 {
+            let sc = self.shard_kernel_counts();
+            out.push_str(&format!(
+                " shards[execs={} mean={:?} max={:?} sr_rs={} sr_wb={} pr_rs={} pr_wb={}]",
+                self.shard_executions(),
+                self.shard_mean_latency(),
+                self.shard_max_latency(),
+                sc[0],
+                sc[1],
+                sc[2],
+                sc[3],
+            ));
+        }
+        out
     }
 }
 
@@ -117,6 +186,23 @@ mod tests {
         assert_eq!(m.mean_latency(), Duration::from_micros(200));
         assert!(m.latency_quantile(0.99) >= m.latency_quantile(0.5));
         assert!(m.summary().contains("requests=3"));
+    }
+
+    #[test]
+    fn shard_counters_are_separate_from_requests() {
+        let m = Metrics::default();
+        assert_eq!(m.shard_executions(), 0);
+        assert!(!m.summary().contains("shards["));
+        m.record(KernelKind::SrRs, Duration::from_micros(500));
+        m.record_shard(KernelKind::SrWb, Duration::from_micros(100));
+        m.record_shard(KernelKind::PrWb, Duration::from_micros(300));
+        assert_eq!(m.requests(), 1);
+        assert_eq!(m.shard_executions(), 2);
+        assert_eq!(m.shard_kernel_counts(), [0, 1, 0, 1]);
+        assert_eq!(m.shard_mean_latency(), Duration::from_micros(200));
+        assert_eq!(m.shard_max_latency(), Duration::from_micros(300));
+        let s = m.summary();
+        assert!(s.contains("shards[execs=2"), "{s}");
     }
 
     #[test]

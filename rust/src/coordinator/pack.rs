@@ -156,7 +156,7 @@ mod tests {
                 assert_eq!(&data[0..2], &[1, 4]);
                 assert_eq!(data[8], 0); // row 2 col index
             }
-            _ => panic!(),
+            other => panic!("ell col_idx tensor must be I32, got {other:?}"),
         }
     }
 
@@ -179,7 +179,7 @@ mod tests {
                 assert!(cd[3..].iter().all(|&x| x == 0));
                 assert!(rd[3..].iter().all(|&x| x == 2));
             }
-            _ => panic!(),
+            (c, r) => panic!("segment col_idx/row_idx tensors must be I32, got {c:?} / {r:?}"),
         }
     }
 

@@ -31,23 +31,39 @@ pub struct MatrixFeatures {
 impl MatrixFeatures {
     /// Extract features from CSR (O(rows)).
     pub fn of(csr: &CsrMatrix) -> Self {
-        let lens = csr.row_lengths();
+        Self::of_row_range(csr, 0..csr.rows)
+    }
+
+    /// Features of a contiguous row range, read off the parent CSR without
+    /// materializing the slice — what `crate::shard` feeds the per-shard
+    /// selector. O(range length); `of(csr)` is the `0..rows` case.
+    pub fn of_row_range(csr: &CsrMatrix, rows: std::ops::Range<usize>) -> Self {
+        assert!(
+            rows.start <= rows.end && rows.end <= csr.rows,
+            "row range {}..{} out of bounds for {} rows",
+            rows.start,
+            rows.end,
+            csr.rows
+        );
+        let nrows = rows.end - rows.start;
+        let nnz = (csr.indptr[rows.end] - csr.indptr[rows.start]) as usize;
+        let lens: Vec<f64> = rows.map(|r| csr.row_nnz(r) as f64).collect();
         let avg = stats::mean(&lens);
         let stdv = stats::stddev(&lens);
         let max_row = lens.iter().cloned().fold(0.0f64, f64::max) as usize;
         let empty = lens.iter().filter(|&&l| l == 0.0).count();
         Self {
-            rows: csr.rows,
+            rows: nrows,
             cols: csr.cols,
-            nnz: csr.nnz(),
+            nnz,
             avg_row: avg,
             stdv_row: stdv,
             cv_row: if avg == 0.0 { 0.0 } else { stdv / avg },
             max_row,
-            empty_frac: if csr.rows == 0 {
+            empty_frac: if nrows == 0 {
                 0.0
             } else {
-                empty as f64 / csr.rows as f64
+                empty as f64 / nrows as f64
             },
             gini_row: stats::gini(&lens),
         }
@@ -123,6 +139,17 @@ mod tests {
         let f = MatrixFeatures::of(&CsrMatrix::from_coo(&cfg.generate(&mut rng)));
         assert!(f.cv_row > 1.0, "cv {}", f.cv_row);
         assert!(f.gini_row > 0.3, "gini {}", f.gini_row);
+    }
+
+    #[test]
+    fn row_range_features_match_slice_extraction() {
+        let mut rng = Xoshiro256::seeded(73);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(120, 80, 0.07, &mut rng));
+        for range in [0..csr.rows, 0..40, 40..115, 115..csr.rows, 7..7] {
+            let direct = MatrixFeatures::of_row_range(&csr, range.clone());
+            let via_slice = MatrixFeatures::of(&csr.row_slice(range));
+            assert_eq!(direct, via_slice);
+        }
     }
 
     #[test]

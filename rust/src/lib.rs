@@ -49,6 +49,7 @@ pub mod kernels;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod selector;
+pub mod shard;
 pub mod sim;
 pub mod sparse;
 pub mod util;

@@ -147,10 +147,17 @@ fn cmd_select(rest: Vec<String>) -> Result<()> {
     Ok(())
 }
 
-/// Build the engine a CLI command asked for (`--backend native|pjrt`).
+/// Build the engine a CLI command asked for (`--backend native|pjrt`,
+/// `--shards N` for nnz-balanced row fan-out on the native backend).
 fn build_engine(args: &Args) -> Result<SpmmEngine> {
+    let shards = args.parse_positive("shards", 1);
     match args.get_or("backend", "native") {
+        "native" if shards > 1 => Ok(SpmmEngine::sharded(shards)),
         "native" => Ok(SpmmEngine::native()),
+        "pjrt" if shards > 1 => bail!(
+            "--shards is only supported on the native backend (the artifact \
+             library is compiled for whole-matrix buckets)"
+        ),
         #[cfg(feature = "pjrt")]
         "pjrt" => SpmmEngine::new(Path::new(args.get_or("artifacts", "artifacts"))),
         #[cfg(not(feature = "pjrt"))]
@@ -166,6 +173,7 @@ fn cmd_spmm(rest: Vec<String>) -> Result<()> {
         .opt("n", "dense-matrix width", Some("4"))
         .opt("backend", "execution backend: native | pjrt", Some("native"))
         .opt("artifacts", "artifact directory (pjrt backend)", Some("artifacts"))
+        .opt("shards", "nnz-balanced row shards, native backend (1 = unsharded)", Some("1"))
         .opt("seed", "dense operand seed", Some("42"));
     let args = cmd.parse(&rest)?;
     let m = load_matrix(&matrix_arg(&args)?)?;

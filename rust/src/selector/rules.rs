@@ -56,6 +56,14 @@ impl AdaptiveSelector {
         }
     }
 
+    /// One decision per shard feature set — the Fig. 4 rules applied at
+    /// the row-partition grain (`crate::shard`). A skewed head shard and a
+    /// uniform tail shard of the same matrix can legitimately pick
+    /// different kernels here; that is the point of sharded adaptivity.
+    pub fn select_shards(&self, shards: &[MatrixFeatures], n: usize) -> Vec<KernelKind> {
+        shards.iter().map(|f| self.select(f, n)).collect()
+    }
+
     /// Human-readable explanation of a decision (used by the CLI).
     pub fn explain(&self, f: &MatrixFeatures, n: usize) -> String {
         let k = self.select(f, n);
@@ -135,6 +143,18 @@ mod tests {
         let sel = AdaptiveSelector::default();
         let f = features(500, 4, false, 6);
         assert!(sel.select(&f, 0).is_parallel_reduction());
+    }
+
+    #[test]
+    fn per_shard_selection_can_diverge() {
+        let sel = AdaptiveSelector::default();
+        let head = features(2000, 3, false, 8); // short rows -> PR-WB at small N
+        let tail = features(500, 64, false, 9); // long rows -> PR-RS at small N
+        assert_eq!(
+            sel.select_shards(&[head, tail], 1),
+            vec![KernelKind::PrWb, KernelKind::PrRs]
+        );
+        assert!(sel.select_shards(&[], 1).is_empty());
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! `ShardedBackend` — fan-out/gather SpMM execution over a row partition.
+//!
+//! Implements [`SpmmBackend`] by delegation: `prepare` splits the matrix
+//! with [`RowPartition::balanced`], extracts per-shard features, and
+//! prepares each row slice through a shared inner backend
+//! ([`NativeBackend`] by default — any `Box<dyn SpmmBackend>` works);
+//! `execute` runs the shards concurrently and reassembles their outputs,
+//! which are disjoint contiguous row blocks of `Y`, so the gather is a
+//! copy with no reduction step.
+//!
+//! Kernel choice has two modes:
+//!
+//! - **fixed** (default): every shard runs the caller's `KernelKind` —
+//!   what ablations and cross-backend agreement tests need;
+//! - **adaptive** ([`ShardedBackend::adaptive`]): each shard re-runs the
+//!   Fig.-4 rules on its *own* features, so a skewed head shard and a
+//!   uniform tail shard of one matrix execute different kernels in the
+//!   same request. The caller's kernel becomes a hint that per-shard
+//!   dynamics override; the actual choices are observable through the
+//!   [`Metrics`] shard counters.
+
+use super::features::{self, ShardFeatures};
+use super::partition::{PartitionConfig, RowPartition};
+use crate::backend::{Execution, NativeBackend, PreparedOperand, SpmmBackend};
+use crate::coordinator::metrics::Metrics;
+use crate::features::MatrixFeatures;
+use crate::kernels::KernelKind;
+use crate::selector::AdaptiveSelector;
+use crate::sparse::{CsrMatrix, DenseMatrix};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One prepared shard: its span + features and the inner backend's
+/// prepared operand for the row slice.
+struct PreparedShard {
+    features: ShardFeatures,
+    operand: PreparedOperand,
+}
+
+/// The sharded backend's prepared state for one registered matrix.
+struct ShardedPrepared {
+    shards: Vec<PreparedShard>,
+}
+
+/// Row-sharded execution backend over any inner [`SpmmBackend`].
+pub struct ShardedBackend {
+    inner: Box<dyn SpmmBackend>,
+    config: PartitionConfig,
+    selector: Option<AdaptiveSelector>,
+    metrics: Arc<Metrics>,
+}
+
+impl ShardedBackend {
+    /// Sharded execution over a full-parallelism [`NativeBackend`],
+    /// fixed-kernel mode, default imbalance bound.
+    ///
+    /// The inner pool is deliberately *not* divided by K: the partition
+    /// can shrink below the requested K per matrix (imbalance bound,
+    /// K > rows), and a statically divided pool would then strand most
+    /// of the machine — a collapsed single-shard partition on a
+    /// `cores/K`-sized pool runs K× slower than plain native. With the
+    /// full pool a collapsed partition degrades to exactly native
+    /// performance, while high fan-out costs only transient scheduler
+    /// oversubscription (pool threads are scoped per kernel call, and
+    /// `ThreadPool::for_work` keeps small shards serial anyway).
+    pub fn new(shards: usize) -> Self {
+        Self::over(Box::new(NativeBackend::default()), shards)
+    }
+
+    /// Sharded execution over an explicit inner backend.
+    pub fn over(inner: Box<dyn SpmmBackend>, shards: usize) -> Self {
+        Self {
+            inner,
+            config: PartitionConfig::new(shards),
+            selector: None,
+            metrics: Arc::new(Metrics::default()),
+        }
+    }
+
+    /// Enable per-shard adaptive selection with the given rule thresholds.
+    pub fn adaptive(mut self, selector: AdaptiveSelector) -> Self {
+        self.selector = Some(selector);
+        self
+    }
+
+    /// Override the partition imbalance bound (see
+    /// [`RowPartition::balanced`]).
+    pub fn with_max_imbalance(mut self, bound: f64) -> Self {
+        self.config.max_imbalance = bound;
+        self
+    }
+
+    /// Record shard executions into a shared metrics instance (the engine
+    /// passes its own so request- and shard-level counters land together).
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = metrics;
+        self
+    }
+
+    /// The metrics instance shard executions are recorded into.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// The partition configuration in effect.
+    pub fn config(&self) -> PartitionConfig {
+        self.config
+    }
+
+    /// The per-shard selector, if adaptive mode is on.
+    pub fn selector(&self) -> Option<AdaptiveSelector> {
+        self.selector
+    }
+}
+
+impl SpmmBackend for ShardedBackend {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn prepare(&self, csr: &CsrMatrix) -> Result<PreparedOperand> {
+        let partition = RowPartition::balanced(csr, &self.config);
+        let mut shards = Vec::with_capacity(partition.len());
+        for sf in features::extract(csr, &partition) {
+            let sub = csr.row_slice(sf.span.rows.clone());
+            let operand = self
+                .inner
+                .prepare(&sub)
+                .with_context(|| format!("preparing shard rows {:?}", sf.span.rows))?;
+            shards.push(PreparedShard {
+                features: sf,
+                operand,
+            });
+        }
+        Ok(PreparedOperand::new(
+            csr.rows,
+            csr.cols,
+            csr.nnz(),
+            Box::new(ShardedPrepared { shards }),
+        ))
+    }
+
+    fn execute(
+        &self,
+        operand: &PreparedOperand,
+        x: &DenseMatrix,
+        kernel: KernelKind,
+    ) -> Result<Execution> {
+        let prep: &ShardedPrepared = operand.state()?;
+        operand.check_operand(x)?;
+        let n = x.cols;
+        let kernels: Vec<KernelKind> = match &self.selector {
+            Some(sel) => {
+                let feats: Vec<MatrixFeatures> =
+                    prep.shards.iter().map(|s| s.features.features).collect();
+                sel.select_shards(&feats, n)
+            }
+            None => vec![kernel; prep.shards.len()],
+        };
+        // Fan out: one scoped thread per shard (K is small), all sharing
+        // the inner backend; each reports its own wallclock so stragglers
+        // are visible in the shard metrics.
+        let inner = self.inner.as_ref();
+        let results: Vec<Result<(Execution, Duration)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = prep
+                .shards
+                .iter()
+                .zip(&kernels)
+                .map(|(shard, &k)| {
+                    scope.spawn(move || -> Result<(Execution, Duration)> {
+                        let t0 = Instant::now();
+                        let exec = inner.execute(&shard.operand, x, k)?;
+                        Ok((exec, t0.elapsed()))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard thread panicked"))
+                .collect()
+        });
+        // Gather: shard i produced rows `span.rows` of Y, a contiguous
+        // row-major block — reassembly is a straight copy.
+        let mut y = DenseMatrix::zeros(operand.rows(), n);
+        let mut labels = Vec::with_capacity(prep.shards.len());
+        for (i, ((shard, &k), res)) in prep.shards.iter().zip(&kernels).zip(results).enumerate() {
+            let (exec, took) = res.with_context(|| {
+                format!("shard {i} (rows {:?})", shard.features.span.rows)
+            })?;
+            let lo = shard.features.span.rows.start * n;
+            y.data[lo..lo + exec.y.data.len()].copy_from_slice(&exec.y.data);
+            self.metrics.record_shard(k, took);
+            labels.push(exec.artifact);
+        }
+        Ok(Execution {
+            y,
+            artifact: format!("sharded(k={})[{}]", prep.shards.len(), labels.join("+")),
+        })
+    }
+
+    fn available_n(&self) -> Option<Vec<usize>> {
+        self.inner.available_n()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense::spmm_reference;
+    use crate::sparse::CooMatrix;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest::assert_close;
+
+    #[test]
+    fn fixed_mode_matches_reference_for_all_kernels() {
+        let mut rng = Xoshiro256::seeded(401);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(120, 90, 0.08, &mut rng));
+        let backend = ShardedBackend::new(3);
+        let op = backend.prepare(&csr).unwrap();
+        assert_eq!((op.rows(), op.cols(), op.nnz()), (120, 90, csr.nnz()));
+        let x = DenseMatrix::random(90, 6, 1.0, &mut rng);
+        let mut want = DenseMatrix::zeros(120, 6);
+        spmm_reference(&csr, &x, &mut want);
+        for kind in KernelKind::ALL {
+            let exec = backend.execute(&op, &x, kind).unwrap();
+            assert!(exec.artifact.starts_with("sharded(k=3)["), "{}", exec.artifact);
+            assert!(exec.artifact.contains(kind.label()), "{}", exec.artifact);
+            assert_close(&exec.y.data, &want.data, 1e-5, 1e-5).unwrap();
+        }
+        assert_eq!(backend.metrics().shard_executions(), 4 * 3);
+    }
+
+    #[test]
+    fn adaptive_mode_diverges_per_shard_and_records() {
+        // Two-regime fixture: K=2 cuts between the long-row head and the
+        // short-row tail; at N=1 the head picks PR-RS and the tail PR-WB.
+        let csr = features::two_regime_matrix();
+        let mut rng = Xoshiro256::seeded(402);
+        let backend = ShardedBackend::new(2).adaptive(AdaptiveSelector::default());
+        let op = backend.prepare(&csr).unwrap();
+        let x = DenseMatrix::random(2048, 1, 1.0, &mut rng);
+        // the caller's kernel is only a hint in adaptive mode
+        let exec = backend.execute(&op, &x, KernelKind::SrRs).unwrap();
+        let mut want = DenseMatrix::zeros(csr.rows, 1);
+        spmm_reference(&csr, &x, &mut want);
+        assert_close(&exec.y.data, &want.data, 1e-4, 1e-4).unwrap();
+        let counts = backend.metrics().shard_kernel_counts();
+        assert_eq!(counts, [0, 0, 1, 1], "sr_rs/sr_wb/pr_rs/pr_wb: {counts:?}");
+        assert!(exec.artifact.contains("pr_rs") && exec.artifact.contains("pr_wb"));
+    }
+
+    #[test]
+    fn degenerate_shapes_fan_out_safely() {
+        let backend = ShardedBackend::new(4);
+        // empty matrix
+        let empty = CsrMatrix::from_coo(&CooMatrix::new(0, 7));
+        let op = backend.prepare(&empty).unwrap();
+        let exec = backend
+            .execute(&op, &DenseMatrix::zeros(7, 3), KernelKind::PrWb)
+            .unwrap();
+        assert_eq!((exec.y.rows, exec.y.cols), (0, 3));
+        // more shards than rows
+        let mut coo = CooMatrix::new(3, 4);
+        coo.push(0, 1, 2.0);
+        coo.push(2, 3, 4.0);
+        let tiny = CsrMatrix::from_coo(&coo);
+        let op = backend.prepare(&tiny).unwrap();
+        let x = DenseMatrix::from_vec(4, 2, (0..8).map(|i| i as f32).collect());
+        let mut want = DenseMatrix::zeros(3, 2);
+        spmm_reference(&tiny, &x, &mut want);
+        for kind in KernelKind::ALL {
+            let exec = backend.execute(&op, &x, kind).unwrap();
+            assert_eq!(exec.y.data, want.data);
+        }
+        // zero-width dense operand
+        let exec = backend
+            .execute(&op, &DenseMatrix::zeros(4, 0), KernelKind::SrWb)
+            .unwrap();
+        assert_eq!((exec.y.rows, exec.y.cols), (3, 0));
+    }
+
+    #[test]
+    fn dimension_mismatch_is_rejected() {
+        let mut rng = Xoshiro256::seeded(403);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(30, 20, 0.2, &mut rng));
+        let backend = ShardedBackend::new(2);
+        let op = backend.prepare(&csr).unwrap();
+        let bad = DenseMatrix::zeros(19, 2);
+        assert!(backend.execute(&op, &bad, KernelKind::SrRs).is_err());
+        // operands from a different backend are refused
+        let native = NativeBackend::serial();
+        let foreign = native.prepare(&csr).unwrap();
+        assert!(backend
+            .execute(&foreign, &DenseMatrix::zeros(20, 2), KernelKind::SrRs)
+            .is_err());
+    }
+}

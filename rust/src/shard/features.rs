@@ -1,0 +1,119 @@
+//! Per-shard feature extraction — the paper's input-dynamics statistics
+//! applied at the partition grain.
+//!
+//! The Fig.-4 selector reacts to row-length statistics of *whatever it is
+//! about to execute on*. Globally those statistics blur: a power-law
+//! matrix whose head rows are thousand-nnz hubs and whose tail is nearly
+//! uniform averages out to "moderately skewed", and one kernel serves
+//! both regimes badly. Extracting [`MatrixFeatures`] per [`ShardSpan`]
+//! un-blurs them — the head shard sees its own high CV and long rows, the
+//! tail shard its own short uniform rows, and each gets the kernel its
+//! regime wants. Extraction reads the parent CSR's `indptr` directly
+//! ([`MatrixFeatures::of_row_range`]), so the whole pass is O(rows).
+
+use super::partition::{RowPartition, ShardSpan};
+use crate::features::MatrixFeatures;
+use crate::sparse::CsrMatrix;
+
+/// One shard's span together with its locally-extracted features.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardFeatures {
+    pub span: ShardSpan,
+    pub features: MatrixFeatures,
+}
+
+/// Extract features for every shard of `partition`, in shard order.
+pub fn extract(csr: &CsrMatrix, partition: &RowPartition) -> Vec<ShardFeatures> {
+    partition
+        .spans()
+        .iter()
+        .map(|span| ShardFeatures {
+            span: span.clone(),
+            features: MatrixFeatures::of_row_range(csr, span.rows.clone()),
+        })
+        .collect()
+}
+
+/// Test fixture shared across the shard/engine test suites: head shard of
+/// 32 long rows (64 nnz each), tail shard of 1024 short rows (2 nnz each)
+/// — equal nnz halves, so a 2-way nnz-balanced cut lands at (or within a
+/// row or two of) the regime boundary at row 32.
+#[cfg(test)]
+pub(crate) fn two_regime_matrix() -> CsrMatrix {
+    use crate::sparse::CooMatrix;
+    use crate::util::prng::Xoshiro256;
+    let mut coo = CooMatrix::new(32 + 1024, 2048);
+    for r in 0..32 {
+        for c in 0..64 {
+            coo.push(r, c * 16, 1.0);
+        }
+    }
+    let mut rng = Xoshiro256::seeded(91);
+    for r in 0..1024 {
+        for _ in 0..2 {
+            coo.push(32 + r, rng.below(2048) as usize, 1.0);
+        }
+    }
+    CsrMatrix::from_coo(&coo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelKind;
+    use crate::selector::AdaptiveSelector;
+    use crate::sparse::CooMatrix;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn per_shard_features_see_local_regimes() {
+        let csr = two_regime_matrix();
+        let p = RowPartition::split(&csr, 2);
+        // the nnz-balanced cut lands at (or within a row or two of) the
+        // regime boundary at row 32
+        let cut = p.spans()[0].rows.end;
+        assert!((30..=34).contains(&cut), "cut {cut} ({})", p.summary());
+        let feats = extract(&csr, &p);
+        assert_eq!(feats.len(), 2);
+        assert!(
+            feats[0].features.avg_row > 12.0,
+            "head avg {}",
+            feats[0].features.avg_row
+        );
+        assert!(
+            feats[1].features.avg_row < 3.0,
+            "tail avg {}",
+            feats[1].features.avg_row
+        );
+        // global features blur the two regimes into one middling average
+        let global = MatrixFeatures::of(&csr);
+        assert!(global.avg_row < feats[0].features.avg_row);
+        assert!(global.avg_row > feats[1].features.avg_row);
+    }
+
+    #[test]
+    fn selection_diverges_across_shards() {
+        let csr = two_regime_matrix();
+        let p = RowPartition::split(&csr, 2);
+        let feats: Vec<MatrixFeatures> =
+            extract(&csr, &p).iter().map(|sf| sf.features).collect();
+        let sel = AdaptiveSelector::default();
+        // SpMV regime (N ≤ 4): long head rows -> PR-RS, short tail -> PR-WB
+        assert_eq!(
+            sel.select_shards(&feats, 1),
+            vec![KernelKind::PrRs, KernelKind::PrWb]
+        );
+    }
+
+    #[test]
+    fn extract_matches_standalone_slices() {
+        let mut rng = Xoshiro256::seeded(92);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(200, 150, 0.05, &mut rng));
+        let p = RowPartition::split(&csr, 3);
+        for sf in extract(&csr, &p) {
+            let sub = csr.row_slice(sf.span.rows.clone());
+            assert_eq!(sf.features, MatrixFeatures::of(&sub));
+            assert_eq!(sf.features.nnz, sf.span.nnz);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Sharded execution — the paper's adaptivity applied one grain up.
+//!
+//! The kernels balance work *within* one SpMM call (fixed-nnz segments
+//! per warp); this subsystem balances work *across* calls: a matrix is
+//! cut into K row-contiguous shards of near-equal non-zero count
+//! ([`partition`], the 1D nnz-balanced layout that distributed-memory
+//! SpMM work treats as the workhorse), each shard's own row-length
+//! statistics are extracted ([`features`]), the Fig.-4 rules run per
+//! shard, and a fan-out/gather executor ([`ShardedBackend`]) runs the
+//! shards concurrently over any inner [`crate::backend::SpmmBackend`].
+//!
+//! The payoff mirrors DA-SpMM's observation that selection should track
+//! input dynamics: a power-law matrix is not one regime but several, and
+//! per-shard selection lets its hub-heavy head run a workload-balanced
+//! kernel while its uniform tail runs row-split — within a single
+//! request. Shard boundaries are row-aligned, so every output row is
+//! produced by exactly one shard and the gather is a plain row-block
+//! copy (no atomics, no reduction).
+//!
+//! Entry points: [`crate::coordinator::SpmmEngine::sharded`] for the full
+//! coordinator stack, or [`ShardedBackend`] directly.
+
+pub mod backend;
+pub mod features;
+pub mod partition;
+
+pub use backend::ShardedBackend;
+pub use features::ShardFeatures;
+pub use partition::{PartitionConfig, RowPartition, ShardSpan, DEFAULT_MAX_IMBALANCE};

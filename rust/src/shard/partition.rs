@@ -1,0 +1,334 @@
+//! nnz-balanced row partitioning — the 1D layout that scales SpMM out.
+//!
+//! A [`RowPartition`] cuts a CSR matrix into K row-contiguous shards whose
+//! non-zero counts are as equal as row granularity permits. Because CSR's
+//! `indptr` *is* the prefix sum of row lengths, each greedy cut is a
+//! binary search for the row boundary nearest the ideal prefix
+//! `i·nnz/K` — O(K log rows) total, free next to any SpMM.
+//!
+//! Row granularity bounds what balancing can achieve: a single huge row
+//! cannot be split (rows are the unit the kernels consume), so
+//! `max_shard_nnz ≤ ⌈nnz/K⌉ + max_row_nnz` is the guarantee, not perfect
+//! K-way equality. [`RowPartition::balanced`] makes the residual skew
+//! explicit: it shrinks K until the measured [`RowPartition::imbalance`]
+//! fits the configured bound — fewer, fatter shards instead of a fan-out
+//! whose wallclock one straggler shard dominates.
+
+use crate::sparse::CsrMatrix;
+use std::ops::Range;
+
+/// Default imbalance bound: no shard may carry more than 2× the ideal
+/// `nnz/K` share. Loose enough that realistic power-law matrices keep
+/// their requested K; tight enough that a spike row collapses the fan-out
+/// instead of wasting K−1 idle shards.
+pub const DEFAULT_MAX_IMBALANCE: f64 = 2.0;
+
+/// How to partition: requested shard count plus the imbalance bound
+/// [`RowPartition::balanced`] enforces by shrinking K.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PartitionConfig {
+    /// Requested shard count (clamped to `1..=rows`).
+    pub shards: usize,
+    /// Largest tolerated `max_shard_nnz / (nnz/K)`, at least 1.
+    pub max_imbalance: f64,
+}
+
+impl PartitionConfig {
+    /// Config with the default imbalance bound.
+    pub fn new(shards: usize) -> Self {
+        Self {
+            shards,
+            max_imbalance: DEFAULT_MAX_IMBALANCE,
+        }
+    }
+}
+
+/// One shard: a contiguous row range and its non-zero count.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSpan {
+    pub rows: Range<usize>,
+    pub nnz: usize,
+}
+
+/// A complete row partition: consecutive [`ShardSpan`]s covering
+/// `0..rows` exactly once, in order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowPartition {
+    spans: Vec<ShardSpan>,
+    total_nnz: usize,
+}
+
+impl RowPartition {
+    /// Greedy prefix-sum split into (up to) `k` shards. `k` is clamped to
+    /// `1..=rows` so every shard holds at least one row (K > rows
+    /// degenerates to one shard per row); an empty matrix yields a single
+    /// empty shard.
+    pub fn split(csr: &CsrMatrix, k: usize) -> RowPartition {
+        Self::split_clamped(csr, k.clamp(1, csr.rows.max(1)))
+    }
+
+    /// Split honoring `cfg.max_imbalance`: retry with K−1 shards until the
+    /// measured imbalance fits the bound (K = 1 always does — a single
+    /// shard is perfectly "balanced").
+    pub fn balanced(csr: &CsrMatrix, cfg: &PartitionConfig) -> RowPartition {
+        let bound = cfg.max_imbalance.max(1.0);
+        let mut k = cfg.shards.clamp(1, csr.rows.max(1));
+        loop {
+            let p = Self::split_clamped(csr, k);
+            if k == 1 || p.imbalance() <= bound {
+                return p;
+            }
+            k -= 1;
+        }
+    }
+
+    fn split_clamped(csr: &CsrMatrix, k: usize) -> RowPartition {
+        debug_assert!(k >= 1 && k <= csr.rows.max(1));
+        let rows = csr.rows;
+        let total = csr.indptr[rows] as u64;
+        let mut cuts = Vec::with_capacity(k + 1);
+        cuts.push(0usize);
+        for i in 1..k {
+            let ideal = (total * i as u64 / k as u64) as u32;
+            // `indptr` is the row-length prefix sum: binary-search the two
+            // row boundaries straddling the ideal cut and keep the nearer.
+            let hi = csr.indptr.partition_point(|&p| p < ideal);
+            let pick = if hi == 0 {
+                0
+            } else {
+                let lo = hi - 1;
+                if ideal - csr.indptr[lo] <= csr.indptr[hi] - ideal {
+                    lo
+                } else {
+                    hi
+                }
+            };
+            // Keep cuts strictly increasing and leave ≥1 row for each
+            // remaining shard (safe: k ≤ rows).
+            let prev = *cuts.last().unwrap();
+            cuts.push(pick.clamp(prev + 1, rows - (k - i)));
+        }
+        cuts.push(rows);
+        let spans = cuts
+            .windows(2)
+            .map(|w| ShardSpan {
+                rows: w[0]..w[1],
+                nnz: (csr.indptr[w[1]] - csr.indptr[w[0]]) as usize,
+            })
+            .collect();
+        RowPartition {
+            spans,
+            total_nnz: total as usize,
+        }
+    }
+
+    /// Shard count (≥ 1).
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Never true — a partition always holds at least one span.
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// The shards, in row order.
+    pub fn spans(&self) -> &[ShardSpan] {
+        &self.spans
+    }
+
+    /// Total non-zeros across all shards.
+    pub fn total_nnz(&self) -> usize {
+        self.total_nnz
+    }
+
+    /// Largest single-shard non-zero count.
+    pub fn max_shard_nnz(&self) -> usize {
+        self.spans.iter().map(|s| s.nnz).max().unwrap_or(0)
+    }
+
+    /// `max_shard_nnz / (nnz/K)` — 1.0 is perfect balance; 1.0 for an
+    /// empty matrix.
+    pub fn imbalance(&self) -> f64 {
+        if self.total_nnz == 0 {
+            return 1.0;
+        }
+        self.max_shard_nnz() as f64 * self.len() as f64 / self.total_nnz as f64
+    }
+
+    /// One-line log summary.
+    pub fn summary(&self) -> String {
+        let nnzs: Vec<String> = self.spans.iter().map(|s| s.nnz.to_string()).collect();
+        format!(
+            "k={} nnz=[{}] imbalance={:.2}",
+            self.len(),
+            nnzs.join(","),
+            self.imbalance()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::powerlaw::PowerLawConfig;
+    use crate::gen::rmat::RmatConfig;
+    use crate::sparse::CooMatrix;
+    use crate::util::proptest::run_prop;
+
+    /// Coverage invariants shared by every partition test: consecutive
+    /// spans, full row coverage in order, per-span nnz consistent with
+    /// `indptr`, non-empty spans whenever the matrix has rows.
+    fn assert_covers(p: &RowPartition, csr: &CsrMatrix) -> Result<(), String> {
+        let spans = p.spans();
+        if spans.first().map(|s| s.rows.start) != Some(0) {
+            return Err("first span does not start at row 0".into());
+        }
+        if spans.last().map(|s| s.rows.end) != Some(csr.rows) {
+            return Err("last span does not end at the last row".into());
+        }
+        for w in spans.windows(2) {
+            if w[0].rows.end != w[1].rows.start {
+                return Err(format!("gap/overlap at {:?} -> {:?}", w[0].rows, w[1].rows));
+            }
+        }
+        for s in spans {
+            let want = (csr.indptr[s.rows.end] - csr.indptr[s.rows.start]) as usize;
+            if s.nnz != want {
+                return Err(format!("span {:?} nnz {} != {}", s.rows, s.nnz, want));
+            }
+            if csr.rows > 0 && s.rows.is_empty() {
+                return Err(format!("empty span {:?}", s.rows));
+            }
+        }
+        if spans.iter().map(|s| s.nnz).sum::<usize>() != p.total_nnz() {
+            return Err("span nnz does not sum to total".into());
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn known_cuts_on_uniform_rows() {
+        // 8 rows × 4 nnz: K=4 must cut exactly every 2 rows.
+        let mut coo = CooMatrix::new(8, 16);
+        for r in 0..8 {
+            for c in 0..4 {
+                coo.push(r, c * 3, 1.0);
+            }
+        }
+        let csr = CsrMatrix::from_coo(&coo);
+        let p = RowPartition::split(&csr, 4);
+        let rows: Vec<Range<usize>> = p.spans().iter().map(|s| s.rows.clone()).collect();
+        assert_eq!(rows, vec![0..2, 2..4, 4..6, 6..8]);
+        assert!(p.spans().iter().all(|s| s.nnz == 8));
+        assert!((p.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // empty matrix: one empty shard
+        let empty = CsrMatrix::from_coo(&CooMatrix::new(0, 4));
+        let p = RowPartition::split(&empty, 5);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.spans()[0], ShardSpan { rows: 0..0, nnz: 0 });
+        assert_eq!(p.imbalance(), 1.0);
+        // K > rows clamps to one row per shard
+        let mut coo = CooMatrix::new(3, 3);
+        coo.push(1, 1, 1.0);
+        let csr = CsrMatrix::from_coo(&coo);
+        let p = RowPartition::split(&csr, 10);
+        assert_eq!(p.len(), 3);
+        assert_covers(&p, &csr).unwrap();
+        // all-empty rows still cover
+        let hollow = CsrMatrix::from_coo(&CooMatrix::new(6, 6));
+        let p = RowPartition::split(&hollow, 4);
+        assert_eq!(p.len(), 4);
+        assert_covers(&p, &hollow).unwrap();
+        assert_eq!(p.total_nnz(), 0);
+    }
+
+    #[test]
+    fn balanced_shrinks_k_under_a_spike() {
+        // One row holds ~all nnz: no multi-shard split can balance, so
+        // balanced() must fall back to fewer shards within the bound.
+        let mut coo = CooMatrix::new(40, 600);
+        for c in 0..600 {
+            coo.push(20, c, 1.0);
+        }
+        for r in 0..40 {
+            coo.push(r, r, 1.0);
+        }
+        let csr = CsrMatrix::from_coo(&coo);
+        let raw = RowPartition::split(&csr, 8);
+        assert!(raw.imbalance() > 2.0, "spike should defeat an 8-way split");
+        let cfg = PartitionConfig {
+            shards: 8,
+            max_imbalance: 2.0,
+        };
+        let p = RowPartition::balanced(&csr, &cfg);
+        assert!(p.len() < 8, "k should shrink, got {}", p.len());
+        assert!(p.imbalance() <= 2.0, "imbalance {}", p.imbalance());
+        assert_covers(&p, &csr).unwrap();
+    }
+
+    #[test]
+    fn coverage_and_bound_property() {
+        run_prop("partition coverage + imbalance bound", 60, |g| {
+            let csr = match g.usize_in(0, 3) {
+                0 => {
+                    let rows = g.dim() * 4;
+                    let cols = g.dim() * 4;
+                    let density = g.f64_in(0.01, 0.3);
+                    CsrMatrix::from_coo(&CooMatrix::random_uniform(rows, cols, density, g.rng()))
+                }
+                1 => {
+                    let scale = g.usize_in(4, 8) as u32;
+                    CsrMatrix::from_coo(&RmatConfig::new(scale, 4.0).generate(g.rng()))
+                }
+                _ => {
+                    let cfg = PowerLawConfig {
+                        rows: g.dim() * 8,
+                        cols: g.dim() * 8,
+                        alpha: g.f64_in(1.5, 2.8),
+                        min_row: 1,
+                        max_row: g.dim() * 8,
+                    };
+                    CsrMatrix::from_coo(&cfg.generate(g.rng()))
+                }
+            };
+            let k = *g.choose(&[1usize, 2, 3, 7, csr.rows + 1]);
+            let p = RowPartition::split(&csr, k);
+            assert_covers(&p, &csr)?;
+            if p.len() != k.clamp(1, csr.rows.max(1)) {
+                return Err(format!("k {} -> {} shards", k, p.len()));
+            }
+            // greedy guarantee: ideal share + one row of slack
+            let max_row = (0..csr.rows).map(|r| csr.row_nnz(r)).max().unwrap_or(0);
+            let bound = p.total_nnz() / p.len() + max_row + 1;
+            if p.max_shard_nnz() > bound {
+                return Err(format!(
+                    "max shard {} exceeds {} ({})",
+                    p.max_shard_nnz(),
+                    bound,
+                    p.summary()
+                ));
+            }
+            // balanced() honors its configured bound
+            let cfg = PartitionConfig {
+                shards: k,
+                max_imbalance: *g.choose(&[1.1f64, 1.5, 2.0, 4.0]),
+            };
+            let b = RowPartition::balanced(&csr, &cfg);
+            assert_covers(&b, &csr)?;
+            if b.len() > 1 && b.imbalance() > cfg.max_imbalance {
+                return Err(format!(
+                    "balanced imbalance {} > {} ({})",
+                    b.imbalance(),
+                    cfg.max_imbalance,
+                    b.summary()
+                ));
+            }
+            Ok(())
+        });
+    }
+}

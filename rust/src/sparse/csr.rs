@@ -85,6 +85,31 @@ impl CsrMatrix {
         (0..self.rows).map(|r| self.row_nnz(r) as f64).collect()
     }
 
+    /// Extract rows `range` as a standalone CSR matrix over the same
+    /// column space — the shard operand of `crate::shard`. O(slice nnz).
+    pub fn row_slice(&self, range: std::ops::Range<usize>) -> CsrMatrix {
+        assert!(
+            range.start <= range.end && range.end <= self.rows,
+            "row slice {}..{} out of bounds for {} rows",
+            range.start,
+            range.end,
+            self.rows
+        );
+        let base = self.indptr[range.start];
+        let lo = base as usize;
+        let hi = self.indptr[range.end] as usize;
+        CsrMatrix {
+            rows: range.end - range.start,
+            cols: self.cols,
+            indptr: self.indptr[range.start..=range.end]
+                .iter()
+                .map(|&p| p - base)
+                .collect(),
+            indices: self.indices[lo..hi].to_vec(),
+            values: self.values[lo..hi].to_vec(),
+        }
+    }
+
     /// Transposed copy (CSC of self, re-expressed as CSR of Aᵀ) via
     /// counting sort — O(nnz + rows + cols).
     pub fn transposed(&self) -> CsrMatrix {
@@ -248,6 +273,37 @@ mod tests {
                 Ok(())
             } else {
                 Err(format!("{rows}x{cols}"))
+            }
+        });
+    }
+
+    #[test]
+    fn row_slice_extracts_contiguous_rows() {
+        let m = small();
+        let s = m.row_slice(1..3);
+        assert_eq!((s.rows, s.cols), (2, 3));
+        assert_eq!(s.indptr, vec![0, 0, 2]);
+        assert_eq!(s.to_dense(), &m.to_dense()[3..9]);
+        // degenerate slices
+        assert_eq!(m.row_slice(0..0).nnz(), 0);
+        assert_eq!(m.row_slice(0..3), m);
+    }
+
+    #[test]
+    fn row_slices_reassemble_to_dense_property() {
+        run_prop("csr row slices reassemble", 40, |g| {
+            let rows = g.dim();
+            let cols = g.dim();
+            let coo = CooMatrix::random_uniform(rows, cols, 0.3, g.rng());
+            let m = CsrMatrix::from_coo(&coo);
+            let cut = g.usize_in(0, rows + 1);
+            let (head, tail) = (m.row_slice(0..cut), m.row_slice(cut..rows));
+            let mut dense = head.to_dense();
+            dense.extend_from_slice(&tail.to_dense());
+            if dense == m.to_dense() {
+                Ok(())
+            } else {
+                Err(format!("{rows}x{cols} cut {cut}"))
             }
         });
     }

@@ -45,6 +45,12 @@ impl Args {
         }
     }
 
+    /// Get parsed as `usize`, clamped to at least 1 — for count-like
+    /// options (shard counts, worker counts) where 0 is never meaningful.
+    pub fn parse_positive(&self, name: &str, default: usize) -> usize {
+        self.parse_or(name, default).max(1)
+    }
+
     /// Whether a boolean flag is set.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
@@ -249,6 +255,24 @@ mod tests {
         let a = cmd().parse(&toks(&["--gpu", "rtx3090", "--n=64"])).unwrap();
         assert_eq!(a.get("gpu"), Some("rtx3090"));
         assert_eq!(a.parse_or("n", 0usize), 64);
+    }
+
+    #[test]
+    fn parse_positive_clamps_zero_and_garbage() {
+        let c = Command::new("t", "t").opt("shards", "row shards", Some("1"));
+        assert_eq!(c.parse(&toks(&[])).unwrap().parse_positive("shards", 1), 1);
+        assert_eq!(
+            c.parse(&toks(&["--shards", "4"])).unwrap().parse_positive("shards", 1),
+            4
+        );
+        assert_eq!(
+            c.parse(&toks(&["--shards", "0"])).unwrap().parse_positive("shards", 1),
+            1
+        );
+        assert_eq!(
+            c.parse(&toks(&["--shards", "nope"])).unwrap().parse_positive("shards", 3),
+            3
+        );
     }
 
     #[test]

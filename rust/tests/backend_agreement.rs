@@ -1,19 +1,32 @@
-//! Cross-kernel agreement through the `SpmmBackend` trait.
+//! Cross-kernel and cross-backend agreement through the `SpmmBackend`
+//! trait.
 //!
 //! All four `KernelKind` designs, driven through `NativeBackend` via the
 //! trait (prepare once, execute many), must match the dense reference on
 //! uniform, R-MAT and banded matrices at N ∈ {1, 4, 32, 128}, including
 //! empty-row and empty-matrix edge cases. This is the default-feature
 //! stand-in for the artifact cross-check in `integration_runtime.rs`.
+//!
+//! The sharded tests additionally drive every kernel through
+//! `ShardedBackend` and demand **bit-for-bit** equality with the
+//! unsharded `NativeBackend` and the dense reference. That is checked on
+//! integer-valued operands, where every f32 partial sum is exactly
+//! representable: any dropped, duplicated, or misplaced row — the
+//! failure modes of a partition/gather bug — changes the result exactly.
+//! (On arbitrary float data the workload-balanced kernels' summation
+//! grouping shifts with segment alignment, which sharding legitimately
+//! changes, so float agreement is checked separately with tolerances.)
 
 use ge_spmm::backend::{NativeBackend, SpmmBackend};
 use ge_spmm::gen::banded::banded;
+use ge_spmm::gen::powerlaw::PowerLawConfig;
 use ge_spmm::gen::rmat::RmatConfig;
 use ge_spmm::kernels::dense::spmm_reference;
 use ge_spmm::kernels::KernelKind;
+use ge_spmm::shard::ShardedBackend;
 use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix};
 use ge_spmm::util::prng::Xoshiro256;
-use ge_spmm::util::proptest::{assert_close, run_prop};
+use ge_spmm::util::proptest::{assert_close, run_prop, Gen};
 use ge_spmm::util::threadpool::ThreadPool;
 
 /// The dense widths the artifact library is compiled at — the agreement
@@ -129,6 +142,156 @@ fn empty_rows_agree_at_all_widths() {
         let x = DenseMatrix::random(60, n, 1.0, &mut rng);
         check_all_kernels(&backend, &csr, &x).unwrap();
     }
+}
+
+/// Integer-valued CSR (values in ±1..=4) with a mix of dense-ish, sparse
+/// and empty rows — all f32 sums over it are exact.
+fn int_matrix(rows: usize, cols: usize, rng: &mut Xoshiro256) -> CsrMatrix {
+    let mut coo = CooMatrix::new(rows, cols);
+    for r in 0..rows {
+        let len = match rng.below(4) {
+            0 => 0,                             // empty row
+            1 => (rng.below(4) + 1) as usize,   // short row
+            _ => (rng.below(17) + 4) as usize,  // longer row
+        };
+        for _ in 0..len.min(cols) {
+            let sign = if rng.chance(0.5) { 1.0f32 } else { -1.0 };
+            let v = (rng.below(4) + 1) as f32 * sign;
+            coo.push(r, rng.below(cols as u64) as usize, v);
+        }
+    }
+    CsrMatrix::from_coo(&coo)
+}
+
+/// Integer-valued dense operand (entries in -8..=8).
+fn int_dense(rows: usize, cols: usize, rng: &mut Xoshiro256) -> DenseMatrix {
+    let data = (0..rows * cols)
+        .map(|_| (rng.below(17) as i64 - 8) as f32)
+        .collect();
+    DenseMatrix::from_vec(rows, cols, data)
+}
+
+/// Run every kernel through both an unsharded `NativeBackend` and
+/// `ShardedBackend(k)` on integer operands; results must equal each other
+/// and the dense reference bit-for-bit.
+fn check_sharded_bit_for_bit(csr: &CsrMatrix, x: &DenseMatrix, k: usize) {
+    let native = NativeBackend::new(ThreadPool::new(3));
+    let sharded = ShardedBackend::new(k);
+    let op_n = native.prepare(csr).unwrap();
+    let op_s = sharded.prepare(csr).unwrap();
+    let mut want = DenseMatrix::zeros(csr.rows, x.cols);
+    spmm_reference(csr, x, &mut want);
+    for kind in KernelKind::ALL {
+        let yn = native.execute(&op_n, x, kind).unwrap().y;
+        let ys = sharded.execute(&op_s, x, kind).unwrap().y;
+        assert_eq!(
+            yn.data,
+            want.data,
+            "native {} != reference ({}x{}, k={k})",
+            kind.label(),
+            csr.rows,
+            csr.cols
+        );
+        assert_eq!(
+            ys.data,
+            yn.data,
+            "sharded {} != native ({}x{}, k={k})",
+            kind.label(),
+            csr.rows,
+            csr.cols
+        );
+    }
+}
+
+#[test]
+fn sharded_all_kernels_bit_for_bit_vs_unsharded() {
+    let mut rng = Xoshiro256::seeded(81);
+    for k in [2usize, 4] {
+        for (rows, cols) in [(97, 64), (160, 200), (33, 17)] {
+            let csr = int_matrix(rows, cols, &mut rng);
+            for n in WIDTHS {
+                let x = int_dense(cols, n, &mut rng);
+                check_sharded_bit_for_bit(&csr, &x, k);
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_bit_for_bit_edge_cases() {
+    let mut rng = Xoshiro256::seeded(82);
+    for k in [2usize, 4] {
+        // empty matrix
+        let empty = CsrMatrix::from_coo(&CooMatrix::new(50, 30));
+        check_sharded_bit_for_bit(&empty, &int_dense(30, 4, &mut rng), k);
+        // every third row populated, the rest empty
+        let mut coo = CooMatrix::new(48, 36);
+        for r in (0..48).step_by(3) {
+            for j in 0..5u64 {
+                coo.push(r, (r + j as usize * 7) % 36, (j + 1) as f32);
+            }
+        }
+        let sparse_rows = CsrMatrix::from_coo(&coo);
+        for n in WIDTHS {
+            check_sharded_bit_for_bit(&sparse_rows, &int_dense(36, n, &mut rng), k);
+        }
+        // K > rows degenerates to one shard per row
+        let tiny = int_matrix(3, 12, &mut rng);
+        check_sharded_bit_for_bit(&tiny, &int_dense(12, 4, &mut rng), 7);
+        // zero-rows matrix
+        let zero_rows = CsrMatrix::from_coo(&CooMatrix::new(0, 9));
+        check_sharded_bit_for_bit(&zero_rows, &int_dense(9, 4, &mut rng), k);
+    }
+}
+
+/// Generate one matrix of the ISSUE-mandated families for the sharding
+/// property: uniform, R-MAT, or power-law.
+fn family_matrix(g: &mut Gen) -> CsrMatrix {
+    match g.usize_in(0, 3) {
+        0 => {
+            let rows = g.dim() * 3;
+            let cols = g.dim() * 3;
+            let density = g.f64_in(0.02, 0.3);
+            CsrMatrix::from_coo(&CooMatrix::random_uniform(rows, cols, density, g.rng()))
+        }
+        1 => {
+            let scale = g.usize_in(4, 8) as u32;
+            let ef = g.f64_in(2.0, 8.0);
+            CsrMatrix::from_coo(&RmatConfig::new(scale, ef).generate(g.rng()))
+        }
+        _ => {
+            let cfg = PowerLawConfig {
+                rows: g.dim() * 6,
+                cols: g.dim() * 6,
+                alpha: g.f64_in(1.5, 2.8),
+                min_row: 1,
+                max_row: g.dim() * 6,
+            };
+            CsrMatrix::from_coo(&cfg.generate(g.rng()))
+        }
+    }
+}
+
+#[test]
+fn sharded_matches_reference_across_k_property() {
+    run_prop("sharded vs dense reference", 20, |g| {
+        let csr = family_matrix(g);
+        let k = *g.choose(&[1usize, 2, 3, 7, csr.rows + 1]);
+        let n = *g.choose(&WIDTHS);
+        let x = DenseMatrix::from_vec(csr.cols, n, g.vec_f32(csr.cols * n));
+        let mut want = DenseMatrix::zeros(csr.rows, n);
+        spmm_reference(&csr, &x, &mut want);
+        let backend = ShardedBackend::new(k);
+        let op = backend.prepare(&csr).map_err(|e| e.to_string())?;
+        for kind in KernelKind::ALL {
+            let exec = backend
+                .execute(&op, &x, kind)
+                .map_err(|e| format!("{} k={k}: {e}", kind.label()))?;
+            assert_close(&exec.y.data, &want.data, 1e-4, 1e-4)
+                .map_err(|m| format!("{} k={k} ({}x{}): {m}", kind.label(), csr.rows, csr.cols))?;
+        }
+        Ok(())
+    });
 }
 
 #[test]
