@@ -5,8 +5,8 @@
 //!
 //!     make artifacts && cargo run --release --example gcn_train
 //!
-//! Prints the loss curve; the run recorded in EXPERIMENTS.md used the
-//! default 300 steps.
+//! Prints the loss curve; recorded runs (see BENCHMARKS.md for the
+//! convention) used the default 300 steps.
 
 use anyhow::Result;
 use ge_spmm::gnn::{GcnTrainer, GraphConfig, SyntheticGraph};

@@ -1,6 +1,7 @@
 //! Wallclock benchmark of the native CPU kernels (the Rust ports of the
 //! four designs plus the baselines) — the L3 hot path measured on this
-//! machine. Not a paper figure; feeds EXPERIMENTS.md §Perf.
+//! machine. Not a paper figure; feeds DESIGN.md §Perf (recording
+//! convention in BENCHMARKS.md).
 
 use ge_spmm::bench::harness::bench_fn;
 use ge_spmm::gen::Collection;

@@ -1,6 +1,7 @@
 //! L3 dispatch latency: how much the coordinator adds around the PJRT
 //! execution (selection, routing, packing-cache hit, unpacking), plus
-//! batcher throughput. Feeds EXPERIMENTS.md §Perf.
+//! batcher throughput. Feeds DESIGN.md §Perf (recording convention in
+//! BENCHMARKS.md).
 
 use ge_spmm::bench::harness::bench_fn;
 use ge_spmm::coordinator::batcher::Batcher;

@@ -1,0 +1,128 @@
+//! Serving-layer throughput on this machine: (1) registration cost with
+//! and without the prepared-matrix cache — the prepare-once/execute-many
+//! amortization the serving layer exists for — and (2) end-to-end
+//! requests/sec through the multi-worker `Server` across worker counts
+//! on a mixed-matrix workload. Feeds the DESIGN.md experiment index; see
+//! BENCHMARKS.md for how to record results.
+
+use ge_spmm::bench::harness::{bench_fn_with, BenchConfig};
+use ge_spmm::coordinator::server::{Request, Server, ServerConfig, ServerReply};
+use ge_spmm::coordinator::SpmmEngine;
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix};
+use ge_spmm::util::prng::Xoshiro256;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+const MATRICES: usize = 4;
+const PRODUCERS: usize = 4;
+const REQUESTS_PER_PRODUCER: usize = 128;
+const WIDTH: usize = 8;
+const ROWS: usize = 1024;
+const DENSITY: f64 = 0.01;
+
+fn mix_matrix(i: usize) -> CsrMatrix {
+    let mut rng = Xoshiro256::seeded(7000 + i as u64);
+    CsrMatrix::from_coo(&CooMatrix::random_uniform(ROWS, ROWS, DENSITY, &mut rng))
+}
+
+fn registration_cost() {
+    println!("-- registration: prepared-matrix cache on vs off --");
+    let csr = mix_matrix(0);
+    // every uncached iteration retains a prepared matrix in the engine's
+    // handle map — keep the iteration budget small to bound memory
+    let budget = BenchConfig {
+        warmup: Duration::from_millis(30),
+        measure: Duration::from_millis(200),
+        min_iters: 5,
+        max_iters: 200,
+    };
+    let uncached = SpmmEngine::native();
+    let base = bench_fn_with("register (no cache)", budget, || {
+        uncached.register(csr.clone()).expect("register");
+    });
+    println!("{}", base.line());
+    let cached = SpmmEngine::native().with_prepared_cache(64 << 20);
+    let warm = bench_fn_with("register (cache hit)", budget, || {
+        cached.register(csr.clone()).expect("register");
+    });
+    println!(
+        "{}  x{:.1} vs no cache  ({})",
+        warm.line(),
+        base.median_s() / warm.median_s(),
+        cached.metrics.summary(),
+    );
+}
+
+/// Push the fixed workload through a server with `workers` workers;
+/// returns (completed, wallclock).
+fn run_traffic(workers: usize) -> (u64, Duration) {
+    let engine = Arc::new(SpmmEngine::serving(64 << 20, usize::MAX, 1));
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig {
+            workers,
+            ..ServerConfig::default()
+        },
+    );
+    let t0 = Instant::now();
+    let ok = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let engine = engine.clone();
+                let server = &server;
+                s.spawn(move || {
+                    let handles: Vec<_> = (0..MATRICES)
+                        .map(|i| engine.register(mix_matrix(i)).expect("register"))
+                        .collect();
+                    let mut rng = Xoshiro256::seeded(7100 + p as u64);
+                    let mut replies = Vec::with_capacity(REQUESTS_PER_PRODUCER);
+                    for r in 0..REQUESTS_PER_PRODUCER {
+                        let (rtx, rrx) = mpsc::channel();
+                        server.submit(Request {
+                            matrix: handles[r % handles.len()],
+                            x: DenseMatrix::random(ROWS, WIDTH, 1.0, &mut rng),
+                            tag: (p * REQUESTS_PER_PRODUCER + r) as u64,
+                            reply: rtx,
+                        });
+                        replies.push(rrx);
+                    }
+                    replies
+                        .into_iter()
+                        .filter(|rrx| {
+                            matches!(
+                                rrx.recv_timeout(Duration::from_secs(120)),
+                                Ok(ServerReply::Ok(_))
+                            )
+                        })
+                        .count() as u64
+                })
+            })
+            .collect();
+        joins
+            .into_iter()
+            .map(|j| j.join().expect("producer panicked"))
+            .sum::<u64>()
+    });
+    let elapsed = t0.elapsed();
+    server.shutdown();
+    (ok, elapsed)
+}
+
+fn main() {
+    println!("== serving throughput (this machine) ==");
+    registration_cost();
+    println!(
+        "\n-- server: {PRODUCERS} producers x {REQUESTS_PER_PRODUCER} requests, \
+         {MATRICES} matrices ({ROWS}x{ROWS}, density {DENSITY}), n={WIDTH} --"
+    );
+    let mut base_rps = None;
+    for workers in [1usize, 2, 4] {
+        let (ok, elapsed) = run_traffic(workers);
+        let rps = ok as f64 / elapsed.as_secs_f64().max(1e-9);
+        let speedup = base_rps.map(|b: f64| rps / b).unwrap_or(1.0);
+        base_rps.get_or_insert(rps);
+        println!(
+            "workers={workers}  completed={ok}  {elapsed:?}  {rps:.0} req/s  x{speedup:.2} vs 1 worker"
+        );
+    }
+}

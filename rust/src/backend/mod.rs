@@ -23,17 +23,24 @@
 //!   partitioning with per-shard adaptive selection, fanning out over any
 //!   inner backend. Composes: it is both an `SpmmBackend` and a consumer
 //!   of one.
+//! - [`RoutedBackend`] — a registration-time nnz router over two inner
+//!   backends; the serving layer's large-matrix policy (small matrices
+//!   stay unsharded, big ones take the per-shard-adaptive path).
 //! - `PjrtBackend` (`pjrt` cargo feature) — routes to the AOT-compiled
 //!   Pallas artifacts through the PJRT runtime in `crate::runtime`.
 //!
-//! See `DESIGN.md` for the backend feature matrix.
+//! See `DESIGN.md` §Execution backends for the backend feature matrix and
+//! `DESIGN.md` §Serving layer for how the router and the prepared-matrix
+//! cache compose in front of these.
 
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod routed;
 
 pub use crate::shard::ShardedBackend;
 pub use native::NativeBackend;
+pub use routed::RoutedBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 

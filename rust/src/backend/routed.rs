@@ -1,0 +1,168 @@
+//! Size-routed execution: small matrices execute unsharded, large ones
+//! fan out through the sharded path.
+//!
+//! Sharding only pays when a matrix is large enough for the fan-out
+//! overhead (scoped threads + gather copy) to amortize against per-shard
+//! parallelism and per-shard adaptive selection; on a small matrix it is
+//! pure overhead. [`RoutedBackend`] makes that decision once, at
+//! registration: `prepare` compares the matrix's nnz against a threshold
+//! and builds the prepared state through the matching inner backend, and
+//! every later `execute` follows the side recorded in the operand — the
+//! request path pays nothing for the routing. This is the serving
+//! layer's large-matrix routing policy (see `DESIGN.md` §Serving layer).
+
+use super::{Execution, NativeBackend, PreparedOperand, SpmmBackend};
+use crate::kernels::KernelKind;
+use crate::selector::AdaptiveSelector;
+use crate::shard::ShardedBackend;
+use crate::sparse::{CsrMatrix, DenseMatrix};
+use anyhow::Result;
+
+/// Routed prepared state: the side chosen at registration plus the inner
+/// backend's operand.
+struct RoutedPrepared {
+    large: bool,
+    operand: PreparedOperand,
+}
+
+/// Registration-time nnz router over two inner backends.
+pub struct RoutedBackend {
+    small: Box<dyn SpmmBackend>,
+    large: Box<dyn SpmmBackend>,
+    threshold_nnz: usize,
+}
+
+impl RoutedBackend {
+    /// Default serving composition: an unsharded [`NativeBackend`] below
+    /// `threshold_nnz`, a `shards`-way per-shard-adaptive
+    /// [`ShardedBackend`] at or above it.
+    pub fn new(threshold_nnz: usize, shards: usize) -> Self {
+        Self::over(
+            Box::new(NativeBackend::default()),
+            Box::new(ShardedBackend::new(shards.max(1)).adaptive(AdaptiveSelector::default())),
+            threshold_nnz,
+        )
+    }
+
+    /// Route between two explicit backends: matrices with
+    /// `nnz >= threshold_nnz` prepare and execute through `large`, the
+    /// rest through `small`.
+    pub fn over(
+        small: Box<dyn SpmmBackend>,
+        large: Box<dyn SpmmBackend>,
+        threshold_nnz: usize,
+    ) -> Self {
+        Self {
+            small,
+            large,
+            threshold_nnz,
+        }
+    }
+
+    /// The nnz count at or above which matrices take the large path.
+    pub fn threshold_nnz(&self) -> usize {
+        self.threshold_nnz
+    }
+}
+
+impl SpmmBackend for RoutedBackend {
+    fn name(&self) -> &'static str {
+        "routed"
+    }
+
+    fn prepare(&self, csr: &CsrMatrix) -> Result<PreparedOperand> {
+        let large = csr.nnz() >= self.threshold_nnz;
+        let inner = if large {
+            self.large.prepare(csr)?
+        } else {
+            self.small.prepare(csr)?
+        };
+        Ok(PreparedOperand::new(
+            csr.rows,
+            csr.cols,
+            csr.nnz(),
+            Box::new(RoutedPrepared {
+                large,
+                operand: inner,
+            }),
+        ))
+    }
+
+    fn execute(
+        &self,
+        operand: &PreparedOperand,
+        x: &DenseMatrix,
+        kernel: KernelKind,
+    ) -> Result<Execution> {
+        let prep: &RoutedPrepared = operand.state()?;
+        if prep.large {
+            self.large.execute(&prep.operand, x, kernel)
+        } else {
+            self.small.execute(&prep.operand, x, kernel)
+        }
+    }
+
+    fn available_n(&self) -> Option<Vec<usize>> {
+        // Diagnostic only: the default serving composition is
+        // width-agnostic on both sides. With a fixed-width inner, the
+        // small side's buckets are reported when it has any, else the
+        // large side's — a per-matrix answer would need the operand.
+        self.small.available_n().or_else(|| self.large.available_n())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense::spmm_reference;
+    use crate::sparse::CooMatrix;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest::assert_close;
+
+    fn check_routed(csr: &CsrMatrix, backend: &RoutedBackend, want_prefix: &str) {
+        let mut rng = Xoshiro256::seeded(csr.nnz() as u64 + 901);
+        let op = backend.prepare(csr).unwrap();
+        let x = DenseMatrix::random(csr.cols, 5, 1.0, &mut rng);
+        let mut want = DenseMatrix::zeros(csr.rows, 5);
+        spmm_reference(csr, &x, &mut want);
+        let exec = backend.execute(&op, &x, KernelKind::SrRs).unwrap();
+        assert!(
+            exec.artifact.starts_with(want_prefix),
+            "expected {want_prefix}, got {}",
+            exec.artifact
+        );
+        assert_close(&exec.y.data, &want.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn routes_by_nnz_threshold_at_registration() {
+        let mut rng = Xoshiro256::seeded(902);
+        let small = CsrMatrix::from_coo(&CooMatrix::random_uniform(40, 30, 0.05, &mut rng));
+        let large = CsrMatrix::from_coo(&CooMatrix::random_uniform(200, 150, 0.2, &mut rng));
+        let backend = RoutedBackend::new(small.nnz() + 1, 3);
+        assert_eq!(backend.name(), "routed");
+        assert_eq!(backend.threshold_nnz(), small.nnz() + 1);
+        assert_eq!(backend.available_n(), None);
+        check_routed(&small, &backend, "native/");
+        check_routed(&large, &backend, "sharded(k=");
+    }
+
+    #[test]
+    fn threshold_is_inclusive_on_the_large_side() {
+        let mut rng = Xoshiro256::seeded(903);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(60, 60, 0.1, &mut rng));
+        check_routed(&csr, &RoutedBackend::new(csr.nnz(), 2), "sharded(k=");
+        check_routed(&csr, &RoutedBackend::new(csr.nnz() + 1, 2), "native/");
+    }
+
+    #[test]
+    fn foreign_operands_are_rejected() {
+        let mut rng = Xoshiro256::seeded(904);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(30, 20, 0.2, &mut rng));
+        let backend = RoutedBackend::new(usize::MAX, 2);
+        let foreign = NativeBackend::serial().prepare(&csr).unwrap();
+        assert!(backend
+            .execute(&foreign, &DenseMatrix::zeros(20, 2), KernelKind::SrRs)
+            .is_err());
+    }
+}

@@ -10,7 +10,7 @@
 
 use super::engine::{MatrixHandle, SpmmEngine};
 use crate::sparse::DenseMatrix;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 
 /// One pending request: a dense operand and where to deliver the result.
@@ -22,20 +22,52 @@ struct Pending {
 /// Per-request result.
 #[derive(Debug)]
 pub struct BatchedResult {
+    /// The caller's correlation id from the submitted request.
     pub tag: u64,
+    /// This request's columns of the batched execution result.
     pub y: DenseMatrix,
     /// how many requests shared the executed artifact call
     pub batch_size: usize,
 }
 
+/// One failed batch execution: the engine error together with the tags
+/// of every request that was in the batch, so a caller can answer each
+/// affected requester instead of losing them.
+#[derive(Debug)]
+pub struct FlushError {
+    /// Tags of the requests consumed by the failed batch.
+    pub tags: Vec<u64>,
+    /// The underlying engine error.
+    pub error: anyhow::Error,
+}
+
+/// Outcome of a flush: per-request results of the batches that executed,
+/// plus a [`FlushError`] per batch that did not. A multi-matrix flush
+/// continues past a failing matrix, so one bad batch cannot take down
+/// unrelated pending requests.
+#[derive(Debug, Default)]
+pub struct FlushOutcome {
+    /// Results of the successfully executed batches.
+    pub results: Vec<BatchedResult>,
+    /// One entry per batch whose execution failed.
+    pub failures: Vec<FlushError>,
+}
+
 /// Width-coalescing batcher. Not thread-safe by itself; the server wraps
 /// it in its worker loop.
+///
+/// Queues are keyed by [`SpmmEngine::batch_key`], not by handle: on a
+/// cached engine, distinct handles registered from content-identical
+/// matrices share one queue (each queue remembers a representative
+/// handle to execute with), so cross-client traffic against the same
+/// graph coalesces at the same grain the prepared-matrix cache dedupes
+/// at.
 pub struct Batcher<'e> {
     engine: &'e SpmmEngine,
     /// max combined width before a forced flush (should equal the widest
     /// artifact bucket)
     pub max_width: usize,
-    queues: HashMap<MatrixHandle, Vec<Pending>>,
+    queues: HashMap<u64, (MatrixHandle, Vec<Pending>)>,
 }
 
 impl<'e> Batcher<'e> {
@@ -49,34 +81,48 @@ impl<'e> Batcher<'e> {
     }
 
     /// Enqueue a request; flushes automatically when the queue reaches the
-    /// bucket width. Returns any results produced by an automatic flush.
-    pub fn submit(
-        &mut self,
-        h: MatrixHandle,
-        x: DenseMatrix,
-        tag: u64,
-    ) -> Result<Vec<BatchedResult>> {
-        let q = self.queues.entry(h).or_default();
-        q.push(Pending { x, tag });
-        let width: usize = q.iter().map(|p| p.x.cols).sum();
+    /// bucket width, returning any outcome that flush produced.
+    ///
+    /// The request is validated **before** it is queued: an `Err` here
+    /// means this request alone was rejected (unknown handle, inner
+    /// dimension mismatch) and no pending request was touched — a bad
+    /// operand must not poison the batch it would have been packed into.
+    pub fn submit(&mut self, h: MatrixHandle, x: DenseMatrix, tag: u64) -> Result<FlushOutcome> {
+        let expected = self.engine.features(h)?.cols;
+        if x.rows != expected {
+            self.engine.metrics.record_error();
+            return Err(anyhow!(
+                "inner dimension mismatch: matrix has {expected} cols, X has {} rows",
+                x.rows
+            ));
+        }
+        let key = self.engine.batch_key(h)?;
+        let entry = self.queues.entry(key).or_insert_with(|| (h, Vec::new()));
+        entry.1.push(Pending { x, tag });
+        let width: usize = entry.1.iter().map(|p| p.x.cols).sum();
         if width >= self.max_width {
-            self.flush_one(h)
+            Ok(self.flush(key))
         } else {
-            Ok(Vec::new())
+            Ok(FlushOutcome::default())
         }
     }
 
-    /// Pending request count across all matrices.
+    /// Pending request count across all queues.
     pub fn pending(&self) -> usize {
-        self.queues.values().map(|q| q.len()).sum()
+        self.queues.values().map(|(_, q)| q.len()).sum()
     }
 
-    /// Flush one matrix's queue.
-    pub fn flush_one(&mut self, h: MatrixHandle) -> Result<Vec<BatchedResult>> {
-        let q = match self.queues.remove(&h) {
-            Some(q) if !q.is_empty() => q,
-            _ => return Ok(Vec::new()),
+    /// Flush one coalescing queue. A failed execution is reported as a
+    /// [`FlushError`] carrying every consumed tag — never silently
+    /// dropped.
+    fn flush(&mut self, key: u64) -> FlushOutcome {
+        let mut outcome = FlushOutcome::default();
+        let (h, q) = match self.queues.remove(&key) {
+            Some((h, q)) if !q.is_empty() => (h, q),
+            _ => return outcome,
         };
+        // all operands share x.rows: submit validated each against the
+        // registered matrix's inner dimension
         let k = q[0].x.rows;
         let total: usize = q.iter().map(|p| p.x.cols).sum();
         // pack columns side by side
@@ -89,9 +135,17 @@ impl<'e> Batcher<'e> {
             }
             off += p.x.cols;
         }
-        let resp = self.engine.spmm(h, &combined)?;
+        let resp = match self.engine.spmm(h, &combined) {
+            Ok(resp) => resp,
+            Err(error) => {
+                outcome.failures.push(FlushError {
+                    tags: q.iter().map(|p| p.tag).collect(),
+                    error,
+                });
+                return outcome;
+            }
+        };
         // split result columns back out
-        let mut out = Vec::with_capacity(q.len());
         let rows = resp.y.rows;
         let mut off = 0;
         for p in &q {
@@ -101,23 +155,26 @@ impl<'e> Batcher<'e> {
                     .copy_from_slice(&resp.y.data[r * total + off..r * total + off + p.x.cols]);
             }
             off += p.x.cols;
-            out.push(BatchedResult {
+            outcome.results.push(BatchedResult {
                 tag: p.tag,
                 y,
                 batch_size: q.len(),
             });
         }
-        Ok(out)
+        outcome
     }
 
-    /// Flush everything (deadline path).
-    pub fn flush_all(&mut self) -> Result<Vec<BatchedResult>> {
-        let handles: Vec<MatrixHandle> = self.queues.keys().copied().collect();
-        let mut out = Vec::new();
-        for h in handles {
-            out.extend(self.flush_one(h)?);
+    /// Flush everything (deadline path), continuing past failing batches
+    /// so one matrix's error cannot starve the others.
+    pub fn flush_all(&mut self) -> FlushOutcome {
+        let keys: Vec<u64> = self.queues.keys().copied().collect();
+        let mut outcome = FlushOutcome::default();
+        for key in keys {
+            let one = self.flush(key);
+            outcome.results.extend(one.results);
+            outcome.failures.extend(one.failures);
         }
-        Ok(out)
+        outcome
     }
 }
 

@@ -1,0 +1,210 @@
+//! Prepared-matrix cache: a content-fingerprinted, byte-budgeted LRU
+//! registry of backend-prepared state.
+//!
+//! The paper's adaptive selection pays off in the prepare-once /
+//! execute-many regime; serving traffic only reaches that regime if
+//! *preparation itself* is deduplicated across clients. Every client that
+//! registers a graph pays `SpmmBackend::prepare` — O(nnz) format
+//! conversion — unless someone already prepared the same content. This
+//! cache keys prepared state by [`crate::sparse::CsrMatrix::fingerprint`]
+//! (a 64-bit content hash), so repeated traffic against the same graph
+//! skips preparation entirely, across handles, threads and clients. The
+//! fingerprint is trusted without a full content comparison — a 64-bit
+//! collision would silently alias two matrices; that risk is vanishing
+//! for organic traffic but the hash is not adversarially collision
+//! resistant, so don't expose a cached engine to hostile matrix content.
+//!
+//! Eviction is least-recently-used under a byte budget. Costs are
+//! supplied by the caller (the engine passes
+//! [`crate::sparse::CsrMatrix::heap_bytes`], a backend-independent proxy
+//! for prepared-state size). An entry larger than the whole budget is
+//! not cached at all — it would immediately evict everything else for a
+//! reuse that cannot happen under that budget anyway.
+//!
+//! The cache is value-generic: [`crate::coordinator::SpmmEngine`]
+//! instantiates it with its private registration record, and the tests
+//! here exercise the policy with plain integers. See `DESIGN.md`
+//! §Serving layer.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// One resident entry: the shared value, its billed size, and the
+/// logical timestamp of its last touch.
+struct Entry<T> {
+    value: Arc<T>,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// Mutex-guarded cache state: the entries, their total billed bytes, and
+/// a monotonic tick that orders touches for LRU eviction.
+struct Inner<T> {
+    entries: HashMap<u64, Entry<T>>,
+    bytes: usize,
+    tick: u64,
+}
+
+/// Byte-budgeted LRU cache from content fingerprints to shared values.
+///
+/// All operations take one short mutex; values are handed out as
+/// [`Arc`] clones so hits never copy the prepared state.
+pub struct PreparedCache<T> {
+    budget: usize,
+    inner: Mutex<Inner<T>>,
+}
+
+impl<T> PreparedCache<T> {
+    /// Empty cache that will evict to stay within `budget_bytes`.
+    pub fn new(budget_bytes: usize) -> Self {
+        Self {
+            budget: budget_bytes,
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                bytes: 0,
+                tick: 0,
+            }),
+        }
+    }
+
+    /// The configured byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Number of resident entries.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total billed bytes of the resident entries.
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Look up a fingerprint; a hit refreshes the entry's LRU position.
+    pub fn get(&self, fingerprint: u64) -> Option<Arc<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let entry = inner.entries.get_mut(&fingerprint)?;
+        entry.last_used = tick;
+        Some(entry.value.clone())
+    }
+
+    /// Insert a value billed at `bytes`, evicting least-recently-used
+    /// entries (never the one just inserted) until the budget holds
+    /// again. Returns how many entries were evicted. Re-inserting a
+    /// resident fingerprint replaces it without double-billing; a value
+    /// larger than the whole budget is not cached (returns 0).
+    pub fn insert(&self, fingerprint: u64, value: Arc<T>, bytes: usize) -> u64 {
+        if bytes > self.budget {
+            return 0;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let entry = Entry {
+            value,
+            bytes,
+            last_used: tick,
+        };
+        if let Some(old) = inner.entries.insert(fingerprint, entry) {
+            inner.bytes -= old.bytes;
+        }
+        inner.bytes += bytes;
+        let mut evicted = 0;
+        while inner.bytes > self.budget {
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|&(&fp, _)| fp != fingerprint)
+                .min_by_key(|&(_, e)| e.last_used)
+                .map(|(&fp, _)| fp);
+            match victim {
+                Some(fp) => {
+                    let old = inner.entries.remove(&fp).expect("victim is resident");
+                    inner.bytes -= old.bytes;
+                    evicted += 1;
+                }
+                None => break,
+            }
+        }
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(v: usize) -> Arc<usize> {
+        Arc::new(v)
+    }
+
+    #[test]
+    fn hit_returns_shared_value_and_miss_returns_none() {
+        let cache: PreparedCache<usize> = PreparedCache::new(1000);
+        assert!(cache.is_empty());
+        assert_eq!(cache.get(7), None);
+        assert_eq!(cache.insert(7, entry(70), 100), 0);
+        assert_eq!(*cache.get(7).unwrap(), 70);
+        assert_eq!((cache.len(), cache.bytes()), (1, 100));
+        assert_eq!(cache.budget_bytes(), 1000);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_under_byte_budget() {
+        let cache: PreparedCache<usize> = PreparedCache::new(100);
+        assert_eq!(cache.insert(1, entry(1), 40), 0);
+        assert_eq!(cache.insert(2, entry(2), 40), 0);
+        // touch 1 so 2 is now the LRU entry
+        assert!(cache.get(1).is_some());
+        // 40 + 40 + 40 > 100 → evict exactly one entry: 2
+        assert_eq!(cache.insert(3, entry(3), 40), 1);
+        assert!(cache.get(2).is_none());
+        assert!(cache.get(1).is_some());
+        assert!(cache.get(3).is_some());
+        assert_eq!((cache.len(), cache.bytes()), (2, 80));
+    }
+
+    #[test]
+    fn one_large_insert_can_evict_many() {
+        let cache: PreparedCache<usize> = PreparedCache::new(100);
+        for fp in 0..4u64 {
+            cache.insert(fp, entry(fp as usize), 25);
+        }
+        assert_eq!(cache.len(), 4);
+        // 100 + 50 > 100 → evict fingerprints 0 and 1 (oldest first)
+        assert_eq!(cache.insert(9, entry(9), 50), 2);
+        assert!(cache.get(0).is_none());
+        assert!(cache.get(1).is_none());
+        assert!(cache.get(9).is_some());
+        assert_eq!((cache.len(), cache.bytes()), (3, 100));
+    }
+
+    #[test]
+    fn oversized_values_are_not_cached() {
+        let cache: PreparedCache<usize> = PreparedCache::new(100);
+        cache.insert(1, entry(1), 60);
+        assert_eq!(cache.insert(2, entry(2), 101), 0);
+        assert!(cache.get(2).is_none());
+        // the resident entry was not disturbed
+        assert!(cache.get(1).is_some());
+        assert_eq!((cache.len(), cache.bytes()), (1, 60));
+    }
+
+    #[test]
+    fn reinsert_replaces_without_double_billing() {
+        let cache: PreparedCache<usize> = PreparedCache::new(100);
+        cache.insert(5, entry(50), 60);
+        assert_eq!(cache.insert(5, entry(51), 80), 0);
+        assert_eq!(*cache.get(5).unwrap(), 51);
+        assert_eq!((cache.len(), cache.bytes()), (1, 80));
+    }
+}

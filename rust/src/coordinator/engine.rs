@@ -8,6 +8,7 @@
 //! kernels by default, PJRT artifacts behind the `pjrt` feature — is
 //! entirely behind the trait.
 
+use super::cache::PreparedCache;
 use super::metrics::Metrics;
 use crate::backend::{NativeBackend, PreparedOperand, SpmmBackend};
 use crate::features::MatrixFeatures;
@@ -27,6 +28,12 @@ pub struct MatrixHandle(usize);
 struct Registered {
     features: MatrixFeatures,
     prepared: PreparedOperand,
+    /// Stable identity of this registration's prepared state: the content
+    /// fingerprint on cached engines (shared by every handle that hit the
+    /// same cache entry), a unique id otherwise. The serving layer routes
+    /// and batches on this, so co-batchable traffic coalesces at the same
+    /// grain the cache dedupes at.
+    batch_key: u64,
 }
 
 /// The coordinator engine: adaptive selection + backend routing +
@@ -37,19 +44,28 @@ struct Registered {
 /// — can write into the same instance the engine reports from.
 pub struct SpmmEngine {
     backend: Box<dyn SpmmBackend>,
+    /// Request-level kernel selector (the paper's Fig.-4 rules).
     pub selector: AdaptiveSelector,
+    /// Shared telemetry: request, shard, cache and admission counters.
     pub metrics: Arc<Metrics>,
     matrices: Mutex<HashMap<usize, Arc<Registered>>>,
+    /// Prepared-matrix cache keyed by content fingerprint; `None` keeps
+    /// the pre-serving behavior (every registration pays `prepare`).
+    cache: Option<PreparedCache<Registered>>,
     next_id: AtomicUsize,
 }
 
 /// Outcome of one SpMM request.
 #[derive(Debug)]
 pub struct SpmmResponse {
+    /// The dense result `Y = A · X`.
     pub y: DenseMatrix,
+    /// The request-level kernel choice that was executed (or hinted, on
+    /// per-shard-adaptive backends).
     pub kernel: KernelKind,
     /// Executed unit: artifact name (pjrt) or `native/<kernel>` label.
     pub artifact: String,
+    /// Wallclock of the backend execution.
     pub latency: std::time::Duration,
 }
 
@@ -104,12 +120,51 @@ impl SpmmEngine {
         Self::assemble(Box::new(backend), metrics)
     }
 
+    /// The serving deployment shape: a size-routed backend (unsharded
+    /// native below `shard_threshold_nnz` non-zeros, `shards`-way
+    /// per-shard-adaptive above — shard telemetry lands in the engine's
+    /// [`Metrics`]) behind a prepared-matrix cache of
+    /// `cache_budget_bytes`. This is what `ge-spmm serve` and the
+    /// multi-worker [`crate::coordinator::server::Server`] run on.
+    pub fn serving(
+        cache_budget_bytes: usize,
+        shard_threshold_nnz: usize,
+        shards: usize,
+    ) -> SpmmEngine {
+        let metrics = Arc::new(Metrics::default());
+        let selector = AdaptiveSelector::default();
+        let large = crate::shard::ShardedBackend::new(shards.max(1))
+            .adaptive(selector)
+            .with_metrics(metrics.clone());
+        let backend = crate::backend::RoutedBackend::over(
+            Box::new(NativeBackend::default()),
+            Box::new(large),
+            shard_threshold_nnz,
+        );
+        let mut engine = Self::assemble(Box::new(backend), metrics);
+        engine.selector = selector;
+        engine.with_prepared_cache(cache_budget_bytes)
+    }
+
+    /// Enable the prepared-matrix cache: registrations of
+    /// content-identical matrices (same [`CsrMatrix::fingerprint`]) reuse
+    /// the backend-prepared state instead of paying `prepare` again. The
+    /// budget is denominated in source-CSR heap bytes
+    /// ([`CsrMatrix::heap_bytes`]); least-recently-registered matrices
+    /// are evicted when it overflows. Hits, misses and evictions are
+    /// observable through [`Metrics`].
+    pub fn with_prepared_cache(mut self, budget_bytes: usize) -> Self {
+        self.cache = Some(PreparedCache::new(budget_bytes));
+        self
+    }
+
     fn assemble(backend: Box<dyn SpmmBackend>, metrics: Arc<Metrics>) -> SpmmEngine {
         SpmmEngine {
             backend,
             selector: AdaptiveSelector::default(),
             metrics,
             matrices: Mutex::new(HashMap::new()),
+            cache: None,
             next_id: AtomicUsize::new(0),
         }
     }
@@ -143,16 +198,68 @@ impl SpmmEngine {
     }
 
     /// Register a sparse matrix; features are extracted and the backend's
-    /// prepared operand is built once here, off the request path.
+    /// prepared operand is built once here, off the request path. With a
+    /// prepared-matrix cache ([`SpmmEngine::with_prepared_cache`]),
+    /// registering content-identical matrices — same
+    /// [`CsrMatrix::fingerprint`] — shares one prepared state across
+    /// handles and skips `prepare` entirely on a hit.
     pub fn register(&self, csr: CsrMatrix) -> Result<MatrixHandle> {
-        let features = MatrixFeatures::of(&csr);
-        let prepared = self.backend.prepare(&csr)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.matrices
-            .lock()
-            .unwrap()
-            .insert(id, Arc::new(Registered { features, prepared }));
+        let registered = match &self.cache {
+            Some(cache) => {
+                let fingerprint = csr.fingerprint();
+                match cache.get(fingerprint) {
+                    Some(hit) => {
+                        self.metrics.record_cache_hit();
+                        hit
+                    }
+                    None => {
+                        self.metrics.record_cache_miss();
+                        let fresh = Arc::new(Registered {
+                            features: MatrixFeatures::of(&csr),
+                            prepared: self.backend.prepare(&csr)?,
+                            batch_key: fingerprint,
+                        });
+                        let evicted = cache.insert(fingerprint, fresh.clone(), csr.heap_bytes());
+                        self.metrics.record_cache_evictions(evicted);
+                        fresh
+                    }
+                }
+            }
+            None => Arc::new(Registered {
+                features: MatrixFeatures::of(&csr),
+                prepared: self.backend.prepare(&csr)?,
+                batch_key: id as u64,
+            }),
+        };
+        self.matrices.lock().unwrap().insert(id, registered);
         Ok(MatrixHandle(id))
+    }
+
+    /// Stable identity of the prepared state a handle resolves to: on a
+    /// cached engine, handles registered from content-identical matrices
+    /// share one key (the fingerprint); otherwise each registration has
+    /// its own. The serving layer routes and batches on this, so
+    /// co-batchable traffic from distinct handles still coalesces.
+    pub fn batch_key(&self, h: MatrixHandle) -> Result<u64> {
+        Ok(self.get(h)?.batch_key)
+    }
+
+    /// Drop a handle's registration, releasing the engine's reference to
+    /// its prepared state (the prepared-matrix cache keeps its own
+    /// reference until LRU eviction, so a re-registration of the same
+    /// content can still hit). Returns whether the handle was registered.
+    /// Handles are never recycled; long-running serving deployments
+    /// should unregister handles they no longer route to, or the handle
+    /// map grows with every registration.
+    pub fn unregister(&self, h: MatrixHandle) -> bool {
+        self.matrices.lock().unwrap().remove(&h.0).is_some()
+    }
+
+    /// `(entries, resident bytes)` of the prepared-matrix cache, or
+    /// `None` if the engine was built without one.
+    pub fn cache_usage(&self) -> Option<(usize, usize)> {
+        self.cache.as_ref().map(|c| (c.len(), c.bytes()))
     }
 
     /// Features of a registered matrix.
@@ -342,11 +449,83 @@ mod tests {
     }
 
     #[test]
+    fn prepared_cache_shares_state_across_handles() {
+        let engine = SpmmEngine::native().with_prepared_cache(64 << 20);
+        assert_eq!(engine.cache_usage(), Some((0, 0)));
+        let a = matrix(312);
+        let bytes = a.heap_bytes();
+        let h1 = engine.register(a.clone()).unwrap();
+        let h2 = engine.register(a.clone()).unwrap();
+        assert_ne!(h1, h2, "handles stay distinct across cache hits");
+        assert_eq!(engine.metrics.cache_misses(), 1);
+        assert_eq!(engine.metrics.cache_hits(), 1);
+        assert_eq!(engine.cache_usage(), Some((1, bytes)));
+        // both handles execute against the shared prepared state
+        let mut rng = Xoshiro256::seeded(313);
+        let x = DenseMatrix::random(60, 4, 1.0, &mut rng);
+        let y1 = engine.spmm(h1, &x).unwrap().y;
+        let y2 = engine.spmm(h2, &x).unwrap().y;
+        assert_eq!(y1.data, y2.data);
+    }
+
+    #[test]
+    fn serving_engine_routes_by_size_and_counts_cache() {
+        let small = matrix(314);
+        let large = {
+            let mut rng = Xoshiro256::seeded(315);
+            CsrMatrix::from_coo(&CooMatrix::random_uniform(300, 60, 0.2, &mut rng))
+        };
+        assert!(small.nnz() < large.nnz());
+        let engine = SpmmEngine::serving(64 << 20, small.nnz() + 1, 2);
+        assert_eq!(engine.backend_name(), "routed");
+        let hs = engine.register(small.clone()).unwrap();
+        let hl = engine.register(large.clone()).unwrap();
+        let mut rng = Xoshiro256::seeded(316);
+        let x = DenseMatrix::random(60, 8, 1.0, &mut rng);
+        let resp_small = engine.spmm(hs, &x).unwrap();
+        assert!(
+            resp_small.artifact.starts_with("native/"),
+            "{}",
+            resp_small.artifact
+        );
+        assert_eq!(engine.metrics.shard_executions(), 0);
+        let resp_large = engine.spmm(hl, &x).unwrap();
+        assert!(
+            resp_large.artifact.starts_with("sharded(k="),
+            "{}",
+            resp_large.artifact
+        );
+        assert!(engine.metrics.shard_executions() >= 2);
+        // results agree with the reference on both routes
+        for (m, resp) in [(&small, &resp_small), (&large, &resp_large)] {
+            let mut want = DenseMatrix::zeros(m.rows, 8);
+            spmm_reference(m, &x, &mut want);
+            assert_close(&resp.y.data, &want.data, 1e-4, 1e-4).unwrap();
+        }
+        assert_eq!(engine.metrics.cache_misses(), 2);
+    }
+
+    #[test]
     fn unknown_handle_is_rejected() {
         let engine = SpmmEngine::native();
         let other = SpmmEngine::native();
         let h = other.register(matrix(306)).unwrap();
         assert!(engine.spmm(h, &DenseMatrix::zeros(60, 1)).is_err());
         assert!(engine.features(h).is_err());
+    }
+
+    #[test]
+    fn unregister_releases_the_handle_but_not_the_cache() {
+        let engine = SpmmEngine::native().with_prepared_cache(64 << 20);
+        let a = matrix(317);
+        let h = engine.register(a.clone()).unwrap();
+        assert!(engine.unregister(h));
+        assert!(!engine.unregister(h), "second unregister is a no-op");
+        assert!(engine.spmm(h, &DenseMatrix::zeros(60, 1)).is_err());
+        // the cache still holds the prepared state: re-registering the
+        // same content is a hit under a fresh handle
+        let h2 = engine.register(a).unwrap();
+        assert_ne!(h, h2);
+        assert_eq!(engine.metrics.cache_hits(), 1);
     }
 }

@@ -28,6 +28,14 @@ pub struct Metrics {
     shard_ns: AtomicU64,
     /// slowest single shard execution seen — the fan-out straggler bound
     shard_max_ns: AtomicU64,
+    /// prepared-matrix cache counters (engines with a cache only)
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_evictions: AtomicU64,
+    /// serving-layer admission counters (multi-worker `Server` only)
+    rejected: AtomicU64,
+    /// high-water mark of in-flight requests observed at admission
+    queue_depth_max: AtomicU64,
 }
 
 const RESERVOIR: usize = 4096;
@@ -126,6 +134,59 @@ impl Metrics {
         Duration::from_nanos(self.shard_max_ns.load(Ordering::Relaxed))
     }
 
+    /// Record a prepared-matrix cache hit (registration skipped prepare).
+    pub fn record_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a prepared-matrix cache miss (registration paid prepare).
+    pub fn record_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` cache evictions caused by one insertion.
+    pub fn record_cache_evictions(&self, n: u64) {
+        if n > 0 {
+            self.cache_evictions.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a request refused at admission (server at capacity).
+    pub fn record_rejection(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the in-flight request count observed at one admission;
+    /// keeps the high-water mark.
+    pub fn record_queue_depth(&self, depth: usize) {
+        self.queue_depth_max.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Prepared-matrix cache hits (registrations that skipped prepare).
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Prepared-matrix cache misses (registrations that paid prepare).
+    pub fn cache_misses(&self) -> u64 {
+        self.cache_misses.load(Ordering::Relaxed)
+    }
+
+    /// Entries evicted from the prepared-matrix cache so far.
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache_evictions.load(Ordering::Relaxed)
+    }
+
+    /// Requests refused at admission (server at capacity).
+    pub fn rejections(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of in-flight requests observed at admission.
+    pub fn max_queue_depth(&self) -> u64 {
+        self.queue_depth_max.load(Ordering::Relaxed)
+    }
+
     /// Latency quantile from the reservoir.
     pub fn latency_quantile(&self, q: f64) -> Duration {
         let res = self.latencies.lock().unwrap();
@@ -136,8 +197,8 @@ impl Metrics {
         Duration::from_nanos(crate::util::stats::quantile(&xs, q) as u64)
     }
 
-    /// One-line summary for logs. Shard-level counters are appended only
-    /// when a sharded backend actually recorded them.
+    /// One-line summary for logs. Shard, cache and admission counters are
+    /// appended only when their subsystem actually recorded something.
     pub fn summary(&self) -> String {
         let counts = self.kernel_counts();
         let mut out = format!(
@@ -163,6 +224,21 @@ impl Metrics {
                 sc[1],
                 sc[2],
                 sc[3],
+            ));
+        }
+        if self.cache_hits() + self.cache_misses() > 0 {
+            out.push_str(&format!(
+                " cache[hits={} misses={} evictions={}]",
+                self.cache_hits(),
+                self.cache_misses(),
+                self.cache_evictions(),
+            ));
+        }
+        if self.rejections() > 0 || self.max_queue_depth() > 0 {
+            out.push_str(&format!(
+                " queue[max_depth={} rejected={}]",
+                self.max_queue_depth(),
+                self.rejections(),
             ));
         }
         out
@@ -203,6 +279,31 @@ mod tests {
         assert_eq!(m.shard_max_latency(), Duration::from_micros(300));
         let s = m.summary();
         assert!(s.contains("shards[execs=2"), "{s}");
+    }
+
+    #[test]
+    fn cache_and_admission_counters_are_opt_in_sections() {
+        let m = Metrics::default();
+        let base = m.summary();
+        assert!(!base.contains("cache["), "{base}");
+        assert!(!base.contains("queue["), "{base}");
+        m.record_cache_miss();
+        m.record_cache_hit();
+        m.record_cache_hit();
+        m.record_cache_evictions(0); // no-op
+        m.record_cache_evictions(3);
+        assert_eq!(m.cache_hits(), 2);
+        assert_eq!(m.cache_misses(), 1);
+        assert_eq!(m.cache_evictions(), 3);
+        m.record_queue_depth(4);
+        m.record_queue_depth(9);
+        m.record_queue_depth(2);
+        m.record_rejection();
+        assert_eq!(m.max_queue_depth(), 9);
+        assert_eq!(m.rejections(), 1);
+        let s = m.summary();
+        assert!(s.contains("cache[hits=2 misses=1 evictions=3]"), "{s}");
+        assert!(s.contains("queue[max_depth=9 rejected=1]"), "{s}");
     }
 
     #[test]

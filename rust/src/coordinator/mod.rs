@@ -1,24 +1,39 @@
 //! The coordinator — Layer 3's service surface.
 //!
-//! Productizes the paper's adaptive-kernel contribution: a caller
-//! registers sparse matrices once ([`engine::SpmmEngine`]), then submits
-//! SpMM requests; the engine extracts features, picks a kernel via the
-//! Fig.-4 rules, and executes through its [`crate::backend::SpmmBackend`]
-//! — the native CPU kernels by default, or the AOT artifact path on the
-//! PJRT runtime with the `pjrt` feature. [`batcher`] coalesces narrow
-//! requests along the dense-width axis (the paper's own batching axis: N
-//! *is* the batch dimension in GNN workloads); [`metrics`] tracks
-//! per-kernel counts and latency; [`server`] runs the request loop. All
-//! of them are backend-agnostic.
+//! Productizes the paper's adaptive-kernel contribution as a serving
+//! stack: a caller registers sparse matrices once
+//! ([`engine::SpmmEngine`]), then submits SpMM requests; the engine
+//! extracts features, picks a kernel via the Fig.-4 rules, and executes
+//! through its [`crate::backend::SpmmBackend`] — the native CPU kernels
+//! by default, the size-routed sharded composition under
+//! [`SpmmEngine::serving`], or the AOT artifact path on the PJRT runtime
+//! with the `pjrt` feature.
 //!
-//! `pack` (bucket-shaped operand packing for fixed-shape artifacts) is
-//! only meaningful for the PJRT backend and is gated with it.
+//! - [`cache`] — the prepared-matrix registry: content-fingerprinted,
+//!   byte-budgeted LRU reuse of backend-prepared state, so repeated
+//!   traffic against the same graph skips preparation entirely;
+//! - [`batcher`] — coalesces narrow requests along the dense-width axis
+//!   (the paper's own batching axis: N *is* the batch dimension in GNN
+//!   workloads);
+//! - [`server`] — the concurrent request path: N workers over one shared
+//!   engine, per-matrix routing, an admission bound, graceful shutdown;
+//! - [`metrics`] — per-kernel counts, latency, shard/cache/admission
+//!   telemetry.
+//!
+//! All of them are backend-agnostic. `pack` (bucket-shaped operand
+//! packing for fixed-shape artifacts) is only meaningful for the PJRT
+//! backend and is gated with it. See `DESIGN.md` §Serving layer for the
+//! deployment shape this module implements.
+#![warn(missing_docs)]
 
 pub mod batcher;
+pub mod cache;
 pub mod engine;
 pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod pack;
 pub mod server;
 
+pub use cache::PreparedCache;
 pub use engine::{MatrixHandle, SpmmEngine};
+pub use server::{Server, ServerConfig};

@@ -1,38 +1,82 @@
-//! Request-loop server: a channel-fed worker thread that batches and
-//! executes SpMM requests (the deployment shape of the coordinator).
+//! Concurrent serving layer: a multi-worker request path over one shared
+//! [`SpmmEngine`].
 //!
-//! Uses std mpsc — the offline registry has no tokio; the loop is the
-//! same select-batch-execute structure a tokio runtime would drive.
+//! [`Server::start`] spawns `N` worker threads, each running the
+//! select-batch-execute loop over its own [`Batcher`]. Requests are
+//! routed to workers **by registration identity**
+//! ([`SpmmEngine::batch_key`]: content fingerprint on a cached engine),
+//! so one matrix's stream — even across clients holding distinct handles
+//! to the same graph — lands on one worker, whose batcher coalesces it
+//! along the dense-width axis, while distinct matrices execute on
+//! different workers in parallel.
+//! [`Server::submit`] enforces the [`ServerConfig::max_queue`] admission
+//! bound: past it, requests are refused immediately with a
+//! [`ServerReply::Err`] instead of queueing without bound, and the
+//! refusal is counted in the engine's
+//! [`Metrics`](super::metrics::Metrics). [`Server::shutdown`] (or drop)
+//! disconnects the workers, which flush their partial batches and exit —
+//! no admitted request is abandoned.
+//!
+//! [`serve`] remains the single-threaded loop (one worker driven on the
+//! caller's thread) for callers that own the receiving end, e.g. an
+//! engine pinned to its thread by a `!Send` PJRT client. Uses std mpsc —
+//! the offline registry has no tokio; the loop is the same structure a
+//! tokio runtime would drive. See `DESIGN.md` §Serving layer.
 
-use super::batcher::{BatchedResult, Batcher};
+use super::batcher::{BatchedResult, Batcher, FlushOutcome};
 use super::engine::{MatrixHandle, SpmmEngine};
 use crate::sparse::DenseMatrix;
-use std::sync::mpsc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// A request into the server.
 pub struct Request {
+    /// Handle of a matrix registered on the serving engine.
     pub matrix: MatrixHandle,
+    /// The dense operand `X`.
     pub x: DenseMatrix,
+    /// Caller-chosen correlation id; it keys the reply routing, so it
+    /// must be unique among in-flight requests — a duplicate is rejected
+    /// with a [`ServerReply::Err`] rather than silently orphaning the
+    /// earlier requester.
     pub tag: u64,
-    /// where the result is delivered
+    /// Where the result is delivered.
     pub reply: mpsc::Sender<ServerReply>,
 }
 
 /// Result delivered to the requester.
 #[derive(Debug)]
 pub enum ServerReply {
+    /// The batched execution result for this request's tag.
     Ok(BatchedResult),
+    /// The request failed (execution error, admission refusal, or a
+    /// worker becoming unavailable).
     Err(String),
 }
 
-/// Server configuration.
+/// Serving-layer configuration: batching, concurrency and admission.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
-    /// max combined dense width before a batch is forced out
+    /// Max combined dense width queued on one matrix before its batch is
+    /// forced out (should equal the widest artifact bucket on
+    /// fixed-width backends).
     pub max_width: usize,
-    /// flush deadline for partially-filled batches
+    /// Flush deadline for partially-filled batches: the longest a
+    /// request waits for co-batchable traffic before executing anyway.
     pub max_delay: Duration,
+    /// Worker threads spawned by [`Server::start`]. Each owns its own
+    /// [`Batcher`]; requests route to a worker by registration identity
+    /// ([`SpmmEngine::batch_key`]), so one matrix's traffic coalesces
+    /// while distinct matrices parallelize.
+    pub workers: usize,
+    /// Admission bound: max in-flight (admitted, unanswered) requests
+    /// across all workers. Submissions past it are refused immediately
+    /// with a [`ServerReply::Err`] — backpressure instead of unbounded
+    /// queue growth.
+    pub max_queue: usize,
 }
 
 impl Default for ServerConfig {
@@ -40,23 +84,48 @@ impl Default for ServerConfig {
         Self {
             max_width: 128,
             max_delay: Duration::from_millis(2),
+            workers: 4,
+            max_queue: 1024,
         }
     }
 }
 
-/// Run the request loop until the channel closes. Intended to be spawned
-/// on a worker thread with the engine shared by reference.
-pub fn serve(engine: &SpmmEngine, rx: mpsc::Receiver<Request>, config: ServerConfig) {
+/// Decrement an in-flight counter, saturating at zero (the [`serve`]
+/// entry point drives the loop with a counter nothing increments).
+fn release(depth: &AtomicUsize) {
+    let _ = depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| d.checked_sub(1));
+}
+
+/// One worker's request loop: receive, batch per matrix, flush on width
+/// or deadline, deliver replies, and release admission slots as requests
+/// complete. Runs until the channel closes, then flushes what's pending.
+fn worker_loop(
+    engine: &SpmmEngine,
+    rx: mpsc::Receiver<Request>,
+    config: ServerConfig,
+    depth: &AtomicUsize,
+) {
     let mut batcher = Batcher::new(engine, config.max_width);
-    let mut repliers: std::collections::HashMap<u64, mpsc::Sender<ServerReply>> =
-        std::collections::HashMap::new();
+    let mut repliers: HashMap<u64, mpsc::Sender<ServerReply>> = HashMap::new();
     let mut deadline: Option<Instant> = None;
 
-    let deliver = |results: Vec<BatchedResult>,
-                   repliers: &mut std::collections::HashMap<u64, mpsc::Sender<ServerReply>>| {
-        for r in results {
+    // Answer every request a flush settled — successes and per-batch
+    // failures alike — and release its admission slot. `FlushError`
+    // carries the tags its batch consumed, so no replier can leak.
+    let deliver = |outcome: FlushOutcome, repliers: &mut HashMap<u64, mpsc::Sender<ServerReply>>| {
+        for r in outcome.results {
             if let Some(tx) = repliers.remove(&r.tag) {
+                release(depth);
                 let _ = tx.send(ServerReply::Ok(r));
+            }
+        }
+        for f in outcome.failures {
+            let msg = f.error.to_string();
+            for tag in f.tags {
+                if let Some(tx) = repliers.remove(&tag) {
+                    release(depth);
+                    let _ = tx.send(ServerReply::Err(msg.clone()));
+                }
             }
         }
     };
@@ -67,12 +136,26 @@ pub fn serve(engine: &SpmmEngine, rx: mpsc::Receiver<Request>, config: ServerCon
             .unwrap_or(Duration::from_secs(3600));
         match rx.recv_timeout(timeout) {
             Ok(req) => {
-                repliers.insert(req.tag, req.reply.clone());
-                match batcher.submit(req.matrix, req.x, req.tag) {
-                    Ok(results) => deliver(results, &mut repliers),
-                    Err(e) => {
-                        if let Some(tx) = repliers.remove(&req.tag) {
-                            let _ = tx.send(ServerReply::Err(e.to_string()));
+                if repliers.contains_key(&req.tag) {
+                    // tag collision with an in-flight request: reject this
+                    // one rather than orphan the earlier requester and
+                    // leak its admission slot
+                    release(depth);
+                    let _ = req.reply.send(ServerReply::Err(format!(
+                        "duplicate in-flight tag {}",
+                        req.tag
+                    )));
+                } else {
+                    repliers.insert(req.tag, req.reply.clone());
+                    match batcher.submit(req.matrix, req.x, req.tag) {
+                        Ok(outcome) => deliver(outcome, &mut repliers),
+                        Err(e) => {
+                            // pre-queue validation failure: this request
+                            // alone was rejected, nothing else was touched
+                            if let Some(tx) = repliers.remove(&req.tag) {
+                                release(depth);
+                                let _ = tx.send(ServerReply::Err(e.to_string()));
+                            }
                         }
                     }
                 }
@@ -85,23 +168,150 @@ pub fn serve(engine: &SpmmEngine, rx: mpsc::Receiver<Request>, config: ServerCon
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 // deadline reached: flush partial batches
-                match batcher.flush_all() {
-                    Ok(results) => deliver(results, &mut repliers),
-                    Err(e) => {
-                        // deliver the error to everyone still waiting
-                        for (_, tx) in repliers.drain() {
-                            let _ = tx.send(ServerReply::Err(e.to_string()));
-                        }
-                    }
-                }
+                deliver(batcher.flush_all(), &mut repliers);
                 deadline = None;
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                let _ = batcher.flush_all().map(|r| deliver(r, &mut repliers));
+                deliver(batcher.flush_all(), &mut repliers);
                 return;
             }
         }
     }
 }
 
-// End-to-end server tests (needing artifacts) live in rust/tests/.
+/// Run the request loop until the channel closes, on the caller's
+/// thread. This is the single-worker deployment shape (and what each
+/// [`Server`] worker runs internally); use it directly when the engine
+/// cannot leave the current thread, e.g. over a `!Send` PJRT client.
+pub fn serve(engine: &SpmmEngine, rx: mpsc::Receiver<Request>, config: ServerConfig) {
+    worker_loop(engine, rx, config, &AtomicUsize::new(0));
+}
+
+/// Handle to a running multi-worker server over a shared [`SpmmEngine`].
+///
+/// Producers call [`Server::submit`] from any thread; replies arrive on
+/// each request's own channel. Dropping the handle (or calling
+/// [`Server::shutdown`]) stops admission, lets the workers drain and
+/// flush, and joins them.
+pub struct Server {
+    engine: Arc<SpmmEngine>,
+    txs: Vec<mpsc::Sender<Request>>,
+    workers: Vec<JoinHandle<()>>,
+    depth: Arc<AtomicUsize>,
+    max_queue: usize,
+}
+
+impl Server {
+    /// Spawn `config.workers` worker threads (at least one) over a shared
+    /// engine and start accepting submissions.
+    pub fn start(engine: Arc<SpmmEngine>, config: ServerConfig) -> Server {
+        let nworkers = config.workers.max(1);
+        let depth = Arc::new(AtomicUsize::new(0));
+        let mut txs = Vec::with_capacity(nworkers);
+        let mut workers = Vec::with_capacity(nworkers);
+        for _ in 0..nworkers {
+            let (tx, rx) = mpsc::channel::<Request>();
+            txs.push(tx);
+            let engine = engine.clone();
+            let depth = depth.clone();
+            workers.push(std::thread::spawn(move || {
+                let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    worker_loop(&engine, rx, config, &depth);
+                }));
+                if ran.is_err() {
+                    // surface the crash immediately: this worker's
+                    // in-flight requests are lost and its share of the
+                    // routing space goes unserved until shutdown
+                    eprintln!("ge-spmm server: worker thread panicked");
+                }
+            }));
+        }
+        Server {
+            engine,
+            txs,
+            workers,
+            depth,
+            max_queue: config.max_queue.max(1),
+        }
+    }
+
+    /// Submit a request. Routed by the engine's
+    /// [`batch_key`](SpmmEngine::batch_key) — the registration identity —
+    /// so one matrix's stream (including content-identical handles from
+    /// other clients, on a cached engine) lands on one worker, whose
+    /// batcher coalesces it, while distinct matrices spread across
+    /// workers. Returns `false` — after delivering a
+    /// [`ServerReply::Err`] on the request's reply channel and counting
+    /// the refusal in the engine metrics — when the admission bound is
+    /// hit or the target worker is gone.
+    pub fn submit(&self, req: Request) -> bool {
+        let admitted = self.depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+            if d < self.max_queue {
+                Some(d + 1)
+            } else {
+                None
+            }
+        });
+        let previous = match admitted {
+            Ok(previous) => previous,
+            Err(_) => {
+                self.engine.metrics.record_rejection();
+                let _ = req.reply.send(ServerReply::Err(format!(
+                    "server at capacity ({} requests in flight)",
+                    self.max_queue
+                )));
+                return false;
+            }
+        };
+        self.engine.metrics.record_queue_depth(previous + 1);
+        // unknown handles route anywhere; the worker's batcher rejects
+        // them individually at validation
+        let key = self.engine.batch_key(req.matrix).unwrap_or(u64::MAX);
+        let worker = (key % self.txs.len() as u64) as usize;
+        if let Err(mpsc::SendError(req)) = self.txs[worker].send(req) {
+            // worker gone: undo the admission and surface the failure
+            release(&self.depth);
+            self.engine.metrics.record_rejection();
+            let _ = req
+                .reply
+                .send(ServerReply::Err("server worker unavailable".to_string()));
+            return false;
+        }
+        true
+    }
+
+    /// Requests currently admitted but not yet answered.
+    pub fn in_flight(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Graceful shutdown: stop accepting, let every worker drain its
+    /// queue and flush partial batches, then join. Equivalent to
+    /// dropping the handle, but explicit at call sites.
+    pub fn shutdown(mut self) {
+        self.finish();
+    }
+
+    fn finish(&mut self) {
+        self.txs.clear(); // disconnect → workers flush and exit
+        for w in self.workers.drain(..) {
+            // worker threads catch and report their own panics
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+// End-to-end server tests live in rust/tests/: native_coordinator.rs
+// (single worker, artifact-free), serving_cache.rs (multi-worker, cache,
+// admission), integration_coordinator.rs (PJRT artifacts).

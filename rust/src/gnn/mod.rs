@@ -3,7 +3,7 @@
 //!
 //! [`graph`] synthesizes a Cora-scale citation-style graph with a planted
 //! 2-layer-GCN labeling (so the loss curve is meaningfully learnable);
-//! [`trainer`] drives the AOT `gcn_step` artifact from Rust — weights
+//! `trainer` (feature `pjrt`) drives the AOT `gcn_step` artifact from Rust — weights
 //! live in Rust between steps, Python never runs. The trainer needs the
 //! PJRT runtime and is gated on the `pjrt` feature; the graph synthesis
 //! is backend-independent and always available.

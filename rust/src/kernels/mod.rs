@@ -18,6 +18,11 @@
 //!
 //! All kernels compute `Y = A · X` for `A: M×K` sparse, `X: K×N` dense
 //! row-major, `Y: M×N` dense row-major. SpMV is the `N = 1` case.
+//!
+//! Callers never dispatch these directly: execution goes through
+//! [`crate::backend::SpmmBackend`] (`DESIGN.md` §Execution backends);
+//! the warp-to-VPU mapping behind the ports is described in `DESIGN.md`
+//! §Hardware-Adaptation.
 
 pub mod baseline;
 pub mod dense;

@@ -15,12 +15,22 @@
 //!   evaluation figures.
 //!
 //! Execution is backend-agnostic: [`backend::NativeBackend`] (the CPU
-//! kernel ports, always available, the default) and `backend::PjrtBackend`
-//! (the PJRT runtime executing the AOT artifacts, behind the `pjrt` cargo
-//! feature — off by default because it needs libxla). The [`runtime`]
-//! module and the artifact packing/training paths are gated with it.
+//! kernel ports, always available, the default), [`backend::ShardedBackend`]
+//! (nnz-balanced row fan-out with per-shard adaptive selection),
+//! [`backend::RoutedBackend`] (registration-time size routing between the
+//! two), and `backend::PjrtBackend` (the PJRT runtime executing the AOT
+//! artifacts, behind the `pjrt` cargo feature — off by default because it
+//! needs libxla). The `runtime` module and the artifact packing/training
+//! paths are gated with it.
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index.
+//! On top sits the [`coordinator`] serving layer: a prepared-matrix cache
+//! (content-fingerprinted, byte-budgeted LRU) and a multi-worker server
+//! with per-matrix request routing, width batching, an admission bound
+//! and graceful shutdown — `ge-spmm serve` drives it from the CLI.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment
+//! index, and `BENCHMARKS.md` for the bench harness and the recording
+//! convention.
 //!
 //! ## Quick start
 //!

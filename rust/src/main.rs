@@ -6,6 +6,9 @@
 //!   select      show the adaptive kernel decision for a matrix and N
 //!   spmm        run one SpMM through the coordinator with adaptive routing
 //!               (--backend native|pjrt; native is the default)
+//!   serve       drive a synthetic workload through the concurrent serving
+//!               layer (worker threads + prepared-matrix cache + size
+//!               routing) and report throughput and metrics
 //!   simulate    run the GPU cost model for all kernels on a matrix
 //!   calibrate   fit selector thresholds against simulator profiles
 //!   train-gcn   end-to-end GCN training (needs the `pjrt` feature)
@@ -53,15 +56,16 @@ fn run(sub: Option<&str>, rest: Vec<String>) -> Result<()> {
         Some("features") => cmd_features(rest),
         Some("select") => cmd_select(rest),
         Some("spmm") => cmd_spmm(rest),
+        Some("serve") => cmd_serve(rest),
         Some("simulate") => cmd_simulate(rest),
         Some("calibrate") => cmd_calibrate(rest),
         Some("train-gcn") => cmd_train_gcn(rest),
         Some("suite") => cmd_suite(rest),
-        Some(other) => bail!("unknown subcommand '{other}' (try: info, features, select, spmm, simulate, calibrate, train-gcn, suite)"),
+        Some(other) => bail!("unknown subcommand '{other}' (try: info, features, select, spmm, serve, simulate, calibrate, train-gcn, suite)"),
         None => {
             println!(
                 "ge-spmm {} — adaptive workload-balanced/parallel-reduction sparse kernels\n\
-                 subcommands: info, features, select, spmm, simulate, calibrate, train-gcn, suite\n\
+                 subcommands: info, features, select, spmm, serve, simulate, calibrate, train-gcn, suite\n\
                  use `ge-spmm <subcommand> --help` for options",
                 ge_spmm::version()
             );
@@ -202,6 +206,124 @@ fn cmd_spmm(rest: Vec<String>) -> Result<()> {
         .fold(0.0f32, f32::max);
     println!("max |err| vs native reference: {max_err:.2e}");
     println!("{}", engine.metrics.summary());
+    Ok(())
+}
+
+fn cmd_serve(rest: Vec<String>) -> Result<()> {
+    use ge_spmm::coordinator::server::{Request, Server, ServerConfig, ServerReply};
+    use ge_spmm::sparse::CooMatrix;
+    use std::sync::{mpsc, Arc};
+    use std::time::{Duration, Instant};
+
+    let cmd = Command::new(
+        "serve",
+        "drive a synthetic workload through the concurrent serving layer",
+    )
+    .opt("workers", "server worker threads", Some("4"))
+    .opt("producers", "concurrent client threads", Some("4"))
+    .opt("requests", "requests per client", Some("64"))
+    .opt("matrices", "distinct matrices in the traffic mix", Some("4"))
+    .opt("rows", "rows = cols of each synthetic matrix", Some("512"))
+    .opt("density", "nnz density of each synthetic matrix", Some("0.02"))
+    .opt("n", "dense width per request", Some("8"))
+    .opt("max-width", "batcher width bound", Some("128"))
+    .opt("max-delay-ms", "partial-batch flush deadline (ms)", Some("2"))
+    .opt("max-queue", "admission bound (in-flight requests)", Some("1024"))
+    .opt("cache-mb", "prepared-matrix cache budget (MiB)", Some("64"))
+    .opt(
+        "shard-threshold",
+        "nnz at or above which a matrix routes to the sharded backend",
+        Some("250000"),
+    )
+    .opt("shards", "row-shard fan-out for large matrices", Some("4"))
+    .opt("seed", "workload seed", Some("42"));
+    let args = cmd.parse(&rest)?;
+
+    let producers = args.parse_positive("producers", 4);
+    let requests = args.parse_positive("requests", 64);
+    let matrices = args.parse_positive("matrices", 4);
+    let rows = args.parse_positive("rows", 512);
+    let density: f64 = args.parse_or("density", 0.02);
+    let n = args.parse_positive("n", 8);
+    let seed: u64 = args.parse_or("seed", 42);
+
+    let engine = Arc::new(SpmmEngine::serving(
+        args.parse_positive("cache-mb", 64) << 20,
+        args.parse_positive("shard-threshold", 250_000),
+        args.parse_positive("shards", 4),
+    ));
+    let config = ServerConfig {
+        max_width: args.parse_positive("max-width", 128),
+        max_delay: Duration::from_millis(args.parse_or("max-delay-ms", 2)),
+        workers: args.parse_positive("workers", 4),
+        max_queue: args.parse_positive("max-queue", 1024),
+    };
+    let server = Server::start(engine.clone(), config);
+    println!(
+        "serving: {} workers, {producers} producers x {requests} requests, \
+         {matrices} matrices ({rows}x{rows}, density {density}), n={n}",
+        server.workers()
+    );
+
+    let t0 = Instant::now();
+    let (ok, failed) = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..producers)
+            .map(|p| {
+                let engine = engine.clone();
+                let server = &server;
+                s.spawn(move || {
+                    // Every client builds and registers the same matrix
+                    // mix: all registrations past the first client's are
+                    // prepared-cache hits.
+                    let handles: Vec<_> = (0..matrices)
+                        .map(|i| {
+                            let mut mrng = Xoshiro256::seeded(seed + i as u64);
+                            let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(
+                                rows, rows, density, &mut mrng,
+                            ));
+                            engine.register(csr).expect("register")
+                        })
+                        .collect();
+                    let mut rng = Xoshiro256::seeded(seed ^ (0x9e37 + p as u64));
+                    let mut replies = Vec::with_capacity(requests);
+                    for r in 0..requests {
+                        let (rtx, rrx) = mpsc::channel();
+                        server.submit(Request {
+                            matrix: handles[r % handles.len()],
+                            x: DenseMatrix::random(rows, n, 1.0, &mut rng),
+                            tag: (p * requests + r) as u64,
+                            reply: rtx,
+                        });
+                        replies.push(rrx);
+                    }
+                    let (mut ok, mut failed) = (0u64, 0u64);
+                    for rrx in replies {
+                        match rrx.recv_timeout(Duration::from_secs(120)) {
+                            Ok(ServerReply::Ok(_)) => ok += 1,
+                            _ => failed += 1,
+                        }
+                    }
+                    (ok, failed)
+                })
+            })
+            .collect();
+        joins
+            .into_iter()
+            .map(|j| j.join().expect("producer panicked"))
+            .fold((0u64, 0u64), |(a, b), (o, f)| (a + o, b + f))
+    });
+    let elapsed = t0.elapsed();
+    server.shutdown();
+
+    println!(
+        "served {ok} requests ({failed} rejected/failed) in {elapsed:?} \
+         ({:.0} req/s)",
+        ok as f64 / elapsed.as_secs_f64().max(1e-9)
+    );
+    println!("{}", engine.metrics.summary());
+    if let Some((entries, bytes)) = engine.cache_usage() {
+        println!("cache: {entries} prepared matrices resident, {bytes} bytes");
+    }
     Ok(())
 }
 

@@ -5,6 +5,10 @@
 //! profiles of the benchmark collection (the paper "empirically decides
 //! the threshold"); [`oracle`] is the profile-everything upper bound the
 //! paper calls "select the best implementation off-line".
+//!
+//! The rules run at two grains: per request in
+//! [`crate::coordinator::SpmmEngine`], and per row shard inside
+//! [`crate::shard::ShardedBackend`] (`DESIGN.md` §Sharded execution).
 
 pub mod calibrate;
 pub mod oracle;

@@ -18,7 +18,12 @@
 //! copy (no atomics, no reduction).
 //!
 //! Entry points: [`crate::coordinator::SpmmEngine::sharded`] for the full
-//! coordinator stack, or [`ShardedBackend`] directly.
+//! coordinator stack, [`ShardedBackend`] directly, or — in the serving
+//! composition — behind [`crate::backend::RoutedBackend`], which sends
+//! only sufficiently large matrices down this path
+//! ([`crate::coordinator::SpmmEngine::serving`]). See `DESIGN.md`
+//! §Sharded execution for the partitioning/numerics contract and
+//! `DESIGN.md` §Serving layer for the routing policy.
 
 pub mod backend;
 pub mod features;

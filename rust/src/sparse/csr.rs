@@ -66,6 +66,41 @@ impl CsrMatrix {
         self.values.len()
     }
 
+    /// 64-bit content fingerprint (FNV-1a over the dimensions, the CSR
+    /// layout arrays and the value bit patterns). Byte-identical matrices
+    /// always fingerprint equal, regardless of how they were built — the
+    /// cache key of the serving layer's prepared-matrix registry
+    /// (`coordinator::cache`). Distinct contents can collide in principle
+    /// (FNV-1a is a 64-bit non-cryptographic hash): vanishingly unlikely
+    /// for organic traffic, but do not key security decisions on it.
+    /// O(nnz), i.e. no more than one backend `prepare` pass.
+    pub fn fingerprint(&self) -> u64 {
+        fn eat(h: u64, x: u64) -> u64 {
+            (h ^ x).wrapping_mul(0x0000_0100_0000_01b3)
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        h = eat(h, self.rows as u64);
+        h = eat(h, self.cols as u64);
+        for &p in &self.indptr {
+            h = eat(h, p as u64);
+        }
+        for &c in &self.indices {
+            h = eat(h, c as u64);
+        }
+        for &v in &self.values {
+            h = eat(h, v.to_bits() as u64);
+        }
+        h
+    }
+
+    /// Heap footprint of the CSR arrays in bytes. The serving layer's
+    /// cache budget is denominated in these — a backend-independent proxy
+    /// for the size of the prepared state built from this matrix.
+    pub fn heap_bytes(&self) -> usize {
+        (self.indptr.len() + self.indices.len()) * std::mem::size_of::<u32>()
+            + self.values.len() * std::mem::size_of::<f32>()
+    }
+
     /// Non-zero count of one row.
     #[inline]
     pub fn row_nnz(&self, r: usize) -> usize {
@@ -347,5 +382,30 @@ mod tests {
     #[should_panic(expected = "indptr tail")]
     fn from_parts_validates() {
         CsrMatrix::from_parts(2, 2, vec![0, 1, 3], vec![0, 1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn fingerprint_is_content_determined() {
+        let m = small();
+        // rebuilding from the same triplets fingerprints identically
+        assert_eq!(m.fingerprint(), small().fingerprint());
+        assert_eq!(m.fingerprint(), m.clone().fingerprint());
+        // any content change moves the fingerprint
+        let mut value_changed = m.clone();
+        value_changed.values[0] += 1.0;
+        assert_ne!(m.fingerprint(), value_changed.fingerprint());
+        let mut index_changed = m.clone();
+        index_changed.indices[0] += 1;
+        assert_ne!(m.fingerprint(), index_changed.fingerprint());
+        // same (empty) content at transposed dimensions differs
+        let a = CsrMatrix::from_coo(&CooMatrix::new(3, 4));
+        let b = CsrMatrix::from_coo(&CooMatrix::new(4, 3));
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn heap_bytes_counts_the_three_arrays() {
+        let m = small(); // indptr 4, indices 4, values 4
+        assert_eq!(m.heap_bytes(), (4 + 4) * 4 + 4 * 4);
     }
 }

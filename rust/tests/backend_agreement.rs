@@ -29,6 +29,9 @@ use ge_spmm::util::prng::Xoshiro256;
 use ge_spmm::util::proptest::{assert_close, run_prop, Gen};
 use ge_spmm::util::threadpool::ThreadPool;
 
+mod common;
+use common::int_dense;
+
 /// The dense widths the artifact library is compiled at — the agreement
 /// surface the paper's adaptive selector routes over.
 const WIDTHS: [usize; 4] = [1, 4, 32, 128];
@@ -161,14 +164,6 @@ fn int_matrix(rows: usize, cols: usize, rng: &mut Xoshiro256) -> CsrMatrix {
         }
     }
     CsrMatrix::from_coo(&coo)
-}
-
-/// Integer-valued dense operand (entries in -8..=8).
-fn int_dense(rows: usize, cols: usize, rng: &mut Xoshiro256) -> DenseMatrix {
-    let data = (0..rows * cols)
-        .map(|_| (rng.below(17) as i64 - 8) as f32)
-        .collect();
-    DenseMatrix::from_vec(rows, cols, data)
 }
 
 /// Run every kernel through both an unsharded `NativeBackend` and

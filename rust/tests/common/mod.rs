@@ -1,0 +1,14 @@
+//! Helpers shared by the integration-test binaries.
+
+use ge_spmm::sparse::DenseMatrix;
+use ge_spmm::util::prng::Xoshiro256;
+
+/// Integer-valued dense operand (entries in -8..=8) — every f32 partial
+/// sum over it is exactly representable, the discipline the bit-for-bit
+/// agreement tests rely on (see `backend_agreement.rs`).
+pub fn int_dense(rows: usize, cols: usize, rng: &mut Xoshiro256) -> DenseMatrix {
+    let data = (0..rows * cols)
+        .map(|_| (rng.below(17) as i64 - 8) as f32)
+        .collect();
+    DenseMatrix::from_vec(rows, cols, data)
+}

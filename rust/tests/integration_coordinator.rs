@@ -37,7 +37,7 @@ fn batcher_coalesces_and_results_match_unbatched() {
     let mut batcher = Batcher::new(&engine, 4);
     let mut results = Vec::new();
     for (i, x) in xs.iter().enumerate() {
-        results.extend(batcher.submit(h, x.clone(), i as u64).unwrap());
+        results.extend(batcher.submit(h, x.clone(), i as u64).unwrap().results);
     }
     // 4 columns = max_width → auto-flush happened
     assert_eq!(results.len(), 4);
@@ -68,9 +68,11 @@ fn batcher_flush_all_handles_partial_batches() {
     let mut rng = Xoshiro256::seeded(2004);
     let mut batcher = Batcher::new(&engine, 128);
     let x = DenseMatrix::random(120, 2, 1.0, &mut rng);
-    assert!(batcher.submit(h, x.clone(), 7).unwrap().is_empty());
+    assert!(batcher.submit(h, x.clone(), 7).unwrap().results.is_empty());
     assert_eq!(batcher.pending(), 1);
-    let results = batcher.flush_all().unwrap();
+    let outcome = batcher.flush_all();
+    assert!(outcome.failures.is_empty());
+    let results = outcome.results;
     assert_eq!(results.len(), 1);
     assert_eq!(results[0].tag, 7);
     assert_eq!(results[0].y.cols, 2);
@@ -89,6 +91,7 @@ fn server_loop_round_trips_requests() {
     let config = ServerConfig {
         max_width: 4,
         max_delay: std::time::Duration::from_millis(5),
+        ..ServerConfig::default()
     };
 
     let producer = std::thread::spawn(move || {

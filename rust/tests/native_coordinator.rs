@@ -58,7 +58,9 @@ fn batcher_coalesces_and_results_match_unbatched() {
     let mut batcher = Batcher::new(&engine, 4);
     let mut results = Vec::new();
     for (i, x) in xs.iter().enumerate() {
-        results.extend(batcher.submit(h, x.clone(), i as u64).unwrap());
+        let out = batcher.submit(h, x.clone(), i as u64).unwrap();
+        assert!(out.failures.is_empty());
+        results.extend(out.results);
     }
     // 4 columns = max_width → auto-flush happened
     assert_eq!(results.len(), 4);
@@ -87,6 +89,7 @@ fn server_loop_with_concurrent_producers_matches_unbatched() {
     let config = ServerConfig {
         max_width: 4,
         max_delay: Duration::from_millis(5),
+        ..ServerConfig::default()
     };
 
     const PRODUCERS: u64 = 3;
@@ -173,6 +176,7 @@ fn server_reports_errors_and_metrics_count_them() {
         ServerConfig {
             max_width: 4,
             max_delay: Duration::from_millis(2),
+            ..ServerConfig::default()
         },
     );
     match rrx.recv_timeout(Duration::from_secs(10)).unwrap() {

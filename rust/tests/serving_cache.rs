@@ -1,0 +1,316 @@
+//! Serving-layer integration on the native backend: the prepared-matrix
+//! cache observed through the engine (fingerprint identity, hit/miss
+//! counters, byte-budgeted LRU eviction), nnz-threshold routing to the
+//! sharded path, the `ServerConfig` surface, admission control, and a
+//! concurrent multi-worker smoke test whose results must match serial
+//! unsharded execution bit-for-bit on integer operands (where every f32
+//! partial sum is exact — the same discipline as `backend_agreement.rs`).
+
+use ge_spmm::coordinator::batcher::Batcher;
+use ge_spmm::coordinator::server::{Request, Server, ServerConfig, ServerReply};
+use ge_spmm::coordinator::SpmmEngine;
+use ge_spmm::kernels::dense::spmm_reference;
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix};
+use ge_spmm::util::prng::Xoshiro256;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+mod common;
+use common::int_dense;
+
+/// Deterministic matrix with exactly 4 nnz in every row — fixed, known
+/// `heap_bytes` across seeds, integer values (exact f32 sums).
+fn fixed_size_matrix(rows: usize, cols: usize, seed: u64) -> CsrMatrix {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut coo = CooMatrix::new(rows, cols);
+    for r in 0..rows {
+        for j in 0..4u64 {
+            let c = ((r as u64 * 31 + j * 7 + rng.below(3)) % cols as u64) as usize;
+            coo.push(r, c, (rng.below(8) + 1) as f32);
+        }
+    }
+    CsrMatrix::from_coo(&coo)
+}
+
+#[test]
+fn fingerprint_identity_governs_cache_hits() {
+    let engine = SpmmEngine::native().with_prepared_cache(64 << 20);
+    let a = fixed_size_matrix(64, 48, 11);
+    let same_content = fixed_size_matrix(64, 48, 11);
+    let different = fixed_size_matrix(64, 48, 12);
+    assert_eq!(a.fingerprint(), same_content.fingerprint());
+    assert_ne!(a.fingerprint(), different.fingerprint());
+
+    engine.register(a).unwrap();
+    engine.register(same_content).unwrap(); // hit: same content, new instance
+    engine.register(different).unwrap(); // miss: different content
+    assert_eq!(engine.metrics.cache_hits(), 1);
+    assert_eq!(engine.metrics.cache_misses(), 2);
+    assert_eq!(engine.cache_usage().unwrap().0, 2);
+}
+
+#[test]
+fn lru_eviction_respects_byte_budget_and_recency() {
+    let a = fixed_size_matrix(64, 48, 21);
+    let b = fixed_size_matrix(64, 48, 22);
+    let c = fixed_size_matrix(64, 48, 23);
+    let bytes = a.heap_bytes();
+    assert_eq!(bytes, b.heap_bytes());
+    // room for exactly two entries
+    let engine = SpmmEngine::native().with_prepared_cache(2 * bytes);
+
+    engine.register(a.clone()).unwrap(); // miss: {a}
+    engine.register(b.clone()).unwrap(); // miss: {a, b}
+    engine.register(a.clone()).unwrap(); // hit — a is now more recent than b
+    engine.register(c.clone()).unwrap(); // miss: evicts b (LRU) → {a, c}
+    assert_eq!(engine.metrics.cache_evictions(), 1);
+    engine.register(b).unwrap(); // miss again: b was evicted; evicts a → {c, b}
+    engine.register(c).unwrap(); // hit: c survived both evictions
+    assert_eq!(engine.metrics.cache_hits(), 2);
+    assert_eq!(engine.metrics.cache_misses(), 4);
+    assert_eq!(engine.metrics.cache_evictions(), 2);
+    assert_eq!(engine.cache_usage(), Some((2, 2 * bytes)));
+}
+
+#[test]
+fn server_config_default_is_self_describing() {
+    let config = ServerConfig::default();
+    assert_eq!(config.max_width, 128);
+    assert_eq!(config.max_delay, Duration::from_millis(2));
+    assert_eq!(config.workers, 4);
+    assert_eq!(config.max_queue, 1024);
+}
+
+#[test]
+fn large_matrices_route_to_the_sharded_path() {
+    let small = fixed_size_matrix(32, 40, 31); // 128 nnz
+    let large = fixed_size_matrix(512, 40, 32); // 2048 nnz
+    let engine = SpmmEngine::serving(64 << 20, small.nnz() + 1, 2);
+    let hs = engine.register(small.clone()).unwrap();
+    let hl = engine.register(large.clone()).unwrap();
+    let mut rng = Xoshiro256::seeded(33);
+    let x = int_dense(40, 4, &mut rng);
+
+    let resp = engine.spmm(hs, &x).unwrap();
+    assert!(resp.artifact.starts_with("native/"), "{}", resp.artifact);
+    assert_eq!(engine.metrics.shard_executions(), 0, "small stays unsharded");
+    let mut want = DenseMatrix::zeros(32, 4);
+    spmm_reference(&small, &x, &mut want);
+    assert_eq!(resp.y.data, want.data, "bit-for-bit on integer operands");
+
+    let resp = engine.spmm(hl, &x).unwrap();
+    assert!(resp.artifact.starts_with("sharded(k="), "{}", resp.artifact);
+    assert!(engine.metrics.shard_executions() >= 2, "fan-out recorded");
+    let mut want = DenseMatrix::zeros(512, 4);
+    spmm_reference(&large, &x, &mut want);
+    assert_eq!(resp.y.data, want.data, "bit-for-bit on integer operands");
+}
+
+#[test]
+fn content_identical_handles_share_a_batch() {
+    let engine = SpmmEngine::native().with_prepared_cache(64 << 20);
+    let m = fixed_size_matrix(40, 30, 51);
+    let h1 = engine.register(m.clone()).unwrap();
+    let h2 = engine.register(m.clone()).unwrap();
+    assert_eq!(
+        engine.batch_key(h1).unwrap(),
+        engine.batch_key(h2).unwrap(),
+        "cached handles share the registration identity"
+    );
+    let mut rng = Xoshiro256::seeded(52);
+    let x1 = int_dense(30, 1, &mut rng);
+    let x2 = int_dense(30, 1, &mut rng);
+    let mut want1 = DenseMatrix::zeros(40, 1);
+    let mut want2 = DenseMatrix::zeros(40, 1);
+    spmm_reference(&m, &x1, &mut want1);
+    spmm_reference(&m, &x2, &mut want2);
+    let mut batcher = Batcher::new(&engine, 2);
+    assert!(batcher.submit(h1, x1, 1).unwrap().results.is_empty());
+    let out = batcher.submit(h2, x2, 2).unwrap(); // width 2 → auto-flush
+    assert!(out.failures.is_empty());
+    assert_eq!(out.results.len(), 2);
+    // one engine execution served both handles' requests
+    assert_eq!(engine.metrics.requests(), 1);
+    for r in &out.results {
+        assert_eq!(r.batch_size, 2);
+        let want = if r.tag == 1 { &want1 } else { &want2 };
+        assert_eq!(r.y.data, want.data);
+    }
+}
+
+#[test]
+fn duplicate_in_flight_tags_are_rejected() {
+    let engine = Arc::new(SpmmEngine::native().with_prepared_cache(64 << 20));
+    let h = engine.register(fixed_size_matrix(24, 20, 61)).unwrap();
+    // long deadline + unreachable width: the first request stays in
+    // flight, so the second submission with the same tag must collide
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig {
+            max_width: 1000,
+            max_delay: Duration::from_millis(600),
+            workers: 1,
+            max_queue: 16,
+        },
+    );
+    let mut rng = Xoshiro256::seeded(62);
+    let (tx1, rx1) = mpsc::channel();
+    let (tx2, rx2) = mpsc::channel();
+    for reply in [tx1, tx2] {
+        assert!(server.submit(Request {
+            matrix: h,
+            x: int_dense(20, 1, &mut rng),
+            tag: 7,
+            reply,
+        }));
+    }
+    match rx2.recv_timeout(Duration::from_secs(30)).unwrap() {
+        ServerReply::Err(e) => assert!(e.contains("duplicate"), "{e}"),
+        ServerReply::Ok(_) => panic!("colliding tag must be rejected"),
+    }
+    match rx1.recv_timeout(Duration::from_secs(30)).unwrap() {
+        ServerReply::Ok(r) => assert_eq!(r.tag, 7),
+        ServerReply::Err(e) => panic!("first request must still deliver: {e}"),
+    }
+    assert_eq!(server.in_flight(), 0, "the rejected duplicate released its slot");
+    server.shutdown();
+}
+
+#[test]
+fn admission_bound_rejects_and_recovers() {
+    let engine = Arc::new(SpmmEngine::native().with_prepared_cache(64 << 20));
+    let h = engine.register(fixed_size_matrix(48, 36, 41)).unwrap();
+    // One worker, a queue of 2, and a batcher that cannot flush on width:
+    // admitted requests stay in flight until the (long) deadline, so the
+    // 3rd and 4th submissions deterministically hit the admission bound.
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig {
+            max_width: 1000,
+            max_delay: Duration::from_millis(600),
+            workers: 1,
+            max_queue: 2,
+        },
+    );
+    let mut rng = Xoshiro256::seeded(42);
+    let mut replies = Vec::new();
+    let mut accepted = 0;
+    for tag in 0..4u64 {
+        let (rtx, rrx) = mpsc::channel();
+        if server.submit(Request {
+            matrix: h,
+            x: int_dense(36, 1, &mut rng),
+            tag,
+            reply: rtx,
+        }) {
+            accepted += 1;
+        }
+        replies.push(rrx);
+    }
+    assert_eq!(accepted, 2);
+    assert_eq!(server.in_flight(), 2);
+    let (mut ok, mut rejected) = (0, 0);
+    for rrx in replies {
+        match rrx.recv_timeout(Duration::from_secs(30)).unwrap() {
+            ServerReply::Ok(_) => ok += 1,
+            ServerReply::Err(e) => {
+                assert!(e.contains("capacity"), "{e}");
+                rejected += 1;
+            }
+        }
+    }
+    assert_eq!((ok, rejected), (2, 2));
+    assert_eq!(engine.metrics.rejections(), 2);
+    assert_eq!(engine.metrics.max_queue_depth(), 2);
+    // the deadline flush released the admitted slots
+    assert_eq!(server.in_flight(), 0);
+    server.shutdown();
+    assert_eq!(engine.metrics.errors(), 0);
+}
+
+#[test]
+fn concurrent_server_matches_serial_bit_for_bit() {
+    const PRODUCERS: usize = 4;
+    const MATRICES: usize = 3;
+    const REQUESTS: usize = 24;
+
+    let engine = Arc::new(SpmmEngine::native().with_prepared_cache(64 << 20));
+    // warm the cache once from this thread, so every per-producer
+    // registration below is deterministically a hit
+    for i in 0..MATRICES {
+        engine
+            .register(fixed_size_matrix(60 + 20 * i, 50, 100 + i as u64))
+            .unwrap();
+    }
+    assert_eq!(engine.metrics.cache_misses(), MATRICES as u64);
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig {
+            max_width: 8,
+            max_delay: Duration::from_millis(2),
+            workers: 3,
+            max_queue: 4096,
+        },
+    );
+
+    std::thread::scope(|s| {
+        for p in 0..PRODUCERS {
+            let engine = engine.clone();
+            let server = &server;
+            s.spawn(move || {
+                // every producer registers the same matrix mix: the first
+                // landing prepares, the rest hit the cache
+                let mats: Vec<CsrMatrix> = (0..MATRICES)
+                    .map(|i| fixed_size_matrix(60 + 20 * i, 50, 100 + i as u64))
+                    .collect();
+                let handles: Vec<_> = mats
+                    .iter()
+                    .map(|m| engine.register(m.clone()).unwrap())
+                    .collect();
+                let mut rng = Xoshiro256::seeded(4200 + p as u64);
+                let mut pending = Vec::new();
+                for r in 0..REQUESTS {
+                    let i = r % MATRICES;
+                    let n = 1 + r % 3;
+                    let x = int_dense(50, n, &mut rng);
+                    // serial unsharded ground truth, exact on int operands
+                    let mut want = DenseMatrix::zeros(mats[i].rows, n);
+                    spmm_reference(&mats[i], &x, &mut want);
+                    let tag = (p * REQUESTS + r) as u64;
+                    let (rtx, rrx) = mpsc::channel();
+                    assert!(server.submit(Request {
+                        matrix: handles[i],
+                        x,
+                        tag,
+                        reply: rtx,
+                    }));
+                    pending.push((tag, want, rrx));
+                }
+                for (tag, want, rrx) in pending {
+                    match rrx.recv_timeout(Duration::from_secs(60)).unwrap() {
+                        ServerReply::Ok(r) => {
+                            assert_eq!(r.tag, tag);
+                            assert_eq!(
+                                r.y.data, want.data,
+                                "tag {tag}: batched concurrent result differs from serial"
+                            );
+                        }
+                        ServerReply::Err(e) => panic!("request {tag} failed: {e}"),
+                    }
+                }
+            });
+        }
+    });
+    server.shutdown();
+
+    // every execution accounted for, none failed, nothing left in flight
+    assert_eq!(engine.metrics.errors(), 0);
+    assert_eq!(engine.metrics.rejections(), 0);
+    let requests = engine.metrics.requests();
+    assert!((1..=(PRODUCERS * REQUESTS) as u64).contains(&requests));
+    // cache: the warmup paid the only prepares; every producer-side
+    // registration hit the shared prepared state
+    assert_eq!(engine.metrics.cache_misses(), MATRICES as u64);
+    assert_eq!(engine.metrics.cache_hits(), (PRODUCERS * MATRICES) as u64);
+    assert_eq!(engine.cache_usage().unwrap().0, MATRICES);
+}
