@@ -1,0 +1,79 @@
+//! Measured-calibration bench: wallclock cost of profiling the suite on
+//! this machine, and the selection quality (geomean slowdown vs the
+//! measured oracle) of the paper-default thresholds vs the
+//! measured-calibrated ones. This is the `calibrate --measured` path
+//! under measurement itself — the number that justifies shipping a
+//! hardware profile with a deployment. See BENCHMARKS.md for recording
+//! (`-- --json <path>` writes the record automatically).
+
+use ge_spmm::bench::record::{json_path_arg, BenchRecord};
+use ge_spmm::gen::Collection;
+use ge_spmm::selector::measured::{collect_samples, MeasureConfig};
+use ge_spmm::selector::{calibrate, AdaptiveSelector};
+use ge_spmm::sparse::CsrMatrix;
+use ge_spmm::util::json::{num, obj, Json};
+use std::time::Instant;
+
+/// Per-cell measurement budget (ms). Small: the suite has
+/// |matrices| × |N| × 4 cells.
+const BUDGET_MS: u64 = 20;
+const N_VALUES: [usize; 3] = [1, 4, 32];
+
+fn main() {
+    println!("== measured calibration (this machine) ==");
+    let backend = ge_spmm::backend::NativeBackend::default();
+    let specs = Collection::mini_suite();
+    let matrices: Vec<CsrMatrix> = specs.iter().map(|s| s.build()).collect();
+    println!(
+        "suite: {} matrices x N in {N_VALUES:?}, {BUDGET_MS} ms/cell budget",
+        matrices.len()
+    );
+
+    let cfg = MeasureConfig::default().with_budget_ms(BUDGET_MS);
+    let t0 = Instant::now();
+    let samples = collect_samples(&matrices, &N_VALUES, &backend, &cfg).expect("profiling");
+    let profile_secs = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let cal = calibrate::calibrate(&samples);
+    let fit_secs = t1.elapsed().as_secs_f64();
+
+    let default_loss = calibrate::selector_loss(&AdaptiveSelector::default(), &samples);
+    println!(
+        "profiled {} samples in {profile_secs:.2}s; grid search {fit_secs:.4}s",
+        samples.len()
+    );
+    println!(
+        "default thresholds   T_avg={:<5} T_cv={:<5} geomean slowdown vs oracle: {:.4}",
+        AdaptiveSelector::default().t_avg,
+        AdaptiveSelector::default().t_cv,
+        default_loss
+    );
+    println!(
+        "measured-calibrated  T_avg={:<5} T_cv={:<5} geomean slowdown vs oracle: {:.4}",
+        cal.selector.t_avg, cal.selector.t_cv, cal.mean_loss
+    );
+    println!(
+        "calibration recovers {:.1}% of the default's loss over the oracle",
+        if default_loss > 1.0 {
+            100.0 * (default_loss - cal.mean_loss) / (default_loss - 1.0)
+        } else {
+            0.0
+        }
+    );
+
+    if let Some(path) = json_path_arg() {
+        let mut rec = BenchRecord::new("calibration").with_config(obj(vec![
+            ("matrices", num(matrices.len() as f64)),
+            ("n_values", Json::Arr(N_VALUES.iter().map(|&n| num(n as f64)).collect())),
+            ("budget_ms", num(BUDGET_MS as f64)),
+        ]));
+        rec.push_value("profiling wallclock", profile_secs, "s");
+        rec.push_value("grid-search wallclock", fit_secs, "s");
+        rec.push_value("default thresholds loss", default_loss, "geomean slowdown");
+        rec.push_value("calibrated loss", cal.mean_loss, "geomean slowdown");
+        rec.push_value("calibrated T_avg", cal.selector.t_avg, "");
+        rec.push_value("calibrated T_cv", cal.selector.t_cv, "");
+        rec.save(&path).expect("writing bench record");
+        println!("wrote {}", path.display());
+    }
+}

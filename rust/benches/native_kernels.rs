@@ -4,10 +4,12 @@
 //! convention in BENCHMARKS.md).
 
 use ge_spmm::bench::harness::bench_fn;
+use ge_spmm::bench::record::{json_path_arg, BenchRecord};
 use ge_spmm::gen::Collection;
 use ge_spmm::kernels::baseline::{aspt_like_spmm, cusparse_like_spmm, AsptMatrix};
 use ge_spmm::kernels::{pr_rs, pr_wb, sr_rs, sr_wb, KernelKind, WARP};
 use ge_spmm::sparse::{DenseMatrix, SegmentedMatrix};
+use ge_spmm::util::json::{num, obj, Json};
 use ge_spmm::util::prng::Xoshiro256;
 use ge_spmm::util::threadpool::ThreadPool;
 
@@ -15,6 +17,18 @@ fn main() {
     println!("== native kernel wallclock (this machine) ==");
     let pool = ThreadPool::default_parallel();
     println!("threads: {}", pool.workers());
+    let mut record = json_path_arg().map(|path| {
+        (
+            path,
+            BenchRecord::new("native_kernels").with_config(obj(vec![
+                ("threads", num(pool.workers() as f64)),
+                (
+                    "n_values",
+                    Json::Arr([1usize, 4, 32, 128].iter().map(|&n| num(n as f64)).collect()),
+                ),
+            ])),
+        )
+    });
     let specs: Vec<_> = ["uniform_s12_e8", "rmat_s12_e8_g500", "band_n16384_b8"]
         .iter()
         .filter_map(|n| Collection::suite().into_iter().find(|s| &s.name == n))
@@ -37,6 +51,17 @@ fn main() {
             let x = DenseMatrix::random(csr.cols, n, 1.0, &mut rng);
             let mut y = DenseMatrix::zeros(csr.rows, n);
             let flops = 2.0 * csr.nnz() as f64 * n as f64;
+            let mut report = |s: &ge_spmm::bench::BenchStats| {
+                println!("{}  ({:.2} GFLOP/s)", s.line(), flops / s.median_s() / 1e9);
+                if let Some((_, rec)) = record.as_mut() {
+                    rec.push_latency(s);
+                    rec.push_value(
+                        &format!("{} throughput", s.name),
+                        flops / s.median_s() / 1e9,
+                        "GFLOP/s",
+                    );
+                }
+            };
             for kind in KernelKind::ALL {
                 let s = bench_fn(&format!("{} n={n} {}", spec.name, kind.label()), || {
                     match kind {
@@ -46,16 +71,20 @@ fn main() {
                         KernelKind::PrWb => pr_wb::spmm(&segments, &x, &mut y, &pool),
                     }
                 });
-                println!("{}  ({:.2} GFLOP/s)", s.line(), flops / s.median_s() / 1e9);
+                report(&s);
             }
             let s = bench_fn(&format!("{} n={n} cusparse-like", spec.name), || {
                 cusparse_like_spmm(&csr, &x, &mut y, &pool);
             });
-            println!("{}  ({:.2} GFLOP/s)", s.line(), flops / s.median_s() / 1e9);
+            report(&s);
             let s = bench_fn(&format!("{} n={n} aspt-like", spec.name), || {
                 aspt_like_spmm(&aspt, &x, &mut y, &pool);
             });
-            println!("{}  ({:.2} GFLOP/s)", s.line(), flops / s.median_s() / 1e9);
+            report(&s);
         }
+    }
+    if let Some((path, rec)) = record {
+        rec.save(&path).expect("writing bench record");
+        println!("wrote {}", path.display());
     }
 }

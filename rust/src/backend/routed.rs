@@ -44,6 +44,29 @@ impl RoutedBackend {
         )
     }
 
+    /// Serving composition with online refinement: like
+    /// [`RoutedBackend::new`], but the large side's per-shard choices
+    /// come from (and report back to) a shared
+    /// [`OnlineSelector`](crate::selector::OnlineSelector) instead of
+    /// fixed thresholds. Shard telemetry is recorded into the selector's
+    /// own [`Metrics`](crate::coordinator::metrics::Metrics) instance,
+    /// so counters and cost EWMAs stay in one place (the engine shares
+    /// that same instance in `SpmmEngine::serving_online`). The small
+    /// side stays an unsharded [`NativeBackend`]; its request-level
+    /// choices are the engine's to make (and observe).
+    pub fn online(
+        threshold_nnz: usize,
+        shards: usize,
+        selector: std::sync::Arc<crate::selector::OnlineSelector>,
+    ) -> Self {
+        let metrics = selector.metrics();
+        Self::over(
+            Box::new(NativeBackend::default()),
+            Box::new(ShardedBackend::new(shards.max(1)).online(selector).with_metrics(metrics)),
+            threshold_nnz,
+        )
+    }
+
     /// Route between two explicit backends: matrices with
     /// `nnz >= threshold_nnz` prepare and execute through `large`, the
     /// rest through `small`.
@@ -153,6 +176,35 @@ mod tests {
         let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(60, 60, 0.1, &mut rng));
         check_routed(&csr, &RoutedBackend::new(csr.nnz(), 2), "sharded(k=");
         check_routed(&csr, &RoutedBackend::new(csr.nnz() + 1, 2), "native/");
+    }
+
+    #[test]
+    fn online_composition_shares_the_selector_metrics() {
+        use crate::coordinator::metrics::Metrics;
+        use crate::selector::{OnlineConfig, OnlineSelector};
+        use std::sync::Arc;
+        let metrics = Arc::new(Metrics::default());
+        let online = Arc::new(OnlineSelector::new(
+            AdaptiveSelector::default(),
+            metrics.clone(),
+            OnlineConfig {
+                explore_every: 0,
+                refit_every: 0,
+                min_observations: 1,
+            },
+        ));
+        let mut rng = Xoshiro256::seeded(905);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(80, 60, 0.1, &mut rng));
+        let backend = RoutedBackend::online(1, 2, online.clone());
+        check_routed(&csr, &backend, "sharded(k=");
+        // shard telemetry and the selector's observations land in the
+        // one Metrics instance the selector was built over
+        assert!(metrics.shard_executions() >= 2);
+        assert_eq!(online.observations(), metrics.shard_executions());
+        assert!(metrics.total_cost_observations() >= 2);
+        // the small side stays unsharded and records nothing here
+        let small = RoutedBackend::online(usize::MAX, 2, online.clone());
+        check_routed(&csr, &small, "native/");
     }
 
     #[test]

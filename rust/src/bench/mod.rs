@@ -4,7 +4,9 @@
 
 pub mod figures;
 pub mod harness;
+pub mod record;
 pub mod table;
 
 pub use harness::{bench_fn, BenchStats};
+pub use record::BenchRecord;
 pub use table::Table;

@@ -1,0 +1,190 @@
+//! `BENCH_*.json` record emission — the machine side of the recording
+//! convention documented in `BENCHMARKS.md`.
+//!
+//! Wallclock benches accept `--json <path>` (after `cargo bench --bench
+//! <target> --`) and write their results through [`BenchRecord`] instead
+//! of asking the operator to transcribe stdout by hand. Records are
+//! committed at the repository root as `BENCH_<target>_<YYYYMMDD>.json`.
+
+use super::harness::BenchStats;
+use crate::util::json::{num, obj, s, Json};
+use std::path::Path;
+
+/// Builder for one bench-run record.
+pub struct BenchRecord {
+    bench: String,
+    config: Json,
+    results: Vec<Json>,
+    notes: String,
+}
+
+impl BenchRecord {
+    /// Start a record for bench target `bench`.
+    pub fn new(bench: &str) -> Self {
+        Self {
+            bench: bench.to_string(),
+            config: Json::Obj(Default::default()),
+            results: Vec::new(),
+            notes: String::new(),
+        }
+    }
+
+    /// Attach the bench's configuration object.
+    pub fn with_config(mut self, config: Json) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Free-text notes (thermal state, anomalies, …).
+    pub fn set_notes(&mut self, notes: &str) {
+        self.notes = notes.to_string();
+    }
+
+    /// Record a latency-style case from harness stats (unit `"s"`).
+    pub fn push_latency(&mut self, stats: &BenchStats) {
+        self.results.push(obj(vec![
+            ("name", s(&stats.name)),
+            ("median_s", num(stats.median.as_secs_f64())),
+            ("p10_s", num(stats.p10.as_secs_f64())),
+            ("p90_s", num(stats.p90.as_secs_f64())),
+            ("unit", s("s")),
+        ]));
+    }
+
+    /// Record a headline-number case (throughput, ratios, losses).
+    pub fn push_value(&mut self, name: &str, value: f64, unit: &str) {
+        self.results.push(obj(vec![
+            ("name", s(name)),
+            ("value", num(value)),
+            ("unit", s(unit)),
+        ]));
+    }
+
+    /// Assemble the record document (commit/date/host are best-effort).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("bench", s(&self.bench)),
+            ("commit", s(&git_short_head())),
+            ("date", s(&utc_date())),
+            ("host", s(&host_label())),
+            ("config", self.config.clone()),
+            ("results", Json::Arr(self.results.clone())),
+            ("notes", s(&self.notes)),
+        ])
+    }
+
+    /// Write the record to `path` (pretty-printed, trailing newline).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+    }
+}
+
+/// `git rev-parse --short HEAD`, or `"unknown"` outside a repo.
+fn git_short_head() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|x| x.trim().to_string())
+        .filter(|x| !x.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Best-effort machine hostname: `$HOSTNAME` (interactive shells export
+/// it rarely), then `/etc/hostname`, then `"unknown"`. Shared with
+/// [`crate::selector::profile::HardwareProfile`] provenance stamping.
+pub fn hostname() -> String {
+    std::env::var("HOSTNAME")
+        .ok()
+        .filter(|h| !h.trim().is_empty())
+        .or_else(|| {
+            std::fs::read_to_string("/etc/hostname")
+                .ok()
+                .map(|s| s.trim().to_string())
+                .filter(|h| !h.is_empty())
+        })
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Hostname plus core count, e.g. `"buildbox (16 cores)"`.
+fn host_label() -> String {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    format!("{} ({cores} cores)", hostname())
+}
+
+/// Today's UTC date as `YYYY-MM-DD` (civil-from-days, no chrono).
+fn utc_date() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days((secs / 86_400) as i64);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Days-since-epoch → (year, month, day); Howard Hinnant's algorithm.
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097); // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365; // [0, 399]
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // [0, 11]
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32; // [1, 31]
+    let m = (if mp < 10 { mp + 3 } else { mp - 9 }) as u32; // [1, 12]
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+/// Parse `--json <path>` from a bench binary's argument list (cargo
+/// passes everything after `--` through). Returns `None` when absent.
+pub fn json_path_arg() -> Option<std::path::PathBuf> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(std::path::PathBuf::from)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn record_round_trips_through_the_parser() {
+        let mut rec = BenchRecord::new("native_kernels")
+            .with_config(obj(vec![("n", Json::Arr(vec![num(1.0), num(32.0)]))]));
+        rec.push_value("uniform n=32 sr_rs", 12.5, "GFLOP/s");
+        rec.push_latency(&BenchStats {
+            name: "case".into(),
+            iterations: 10,
+            median: Duration::from_micros(500),
+            p10: Duration::from_micros(400),
+            p90: Duration::from_micros(700),
+            mean: Duration::from_micros(520),
+        });
+        rec.set_notes("test");
+        let j = rec.to_json();
+        let back = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("native_kernels"));
+        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 2);
+        let lat = &back.get("results").unwrap().as_arr().unwrap()[1];
+        assert_eq!(lat.get("median_s").unwrap().as_f64(), Some(0.0005));
+        assert_eq!(back.get("notes").unwrap().as_str(), Some("test"));
+        assert!(back.get("date").unwrap().as_str().unwrap().len() == 10);
+    }
+
+    #[test]
+    fn civil_dates_are_correct() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1)); // 2024-01-01
+        assert_eq!(civil_from_days(20_663), (2026, 7, 29)); // leap-aware
+    }
+}

@@ -13,7 +13,7 @@ use super::metrics::Metrics;
 use crate::backend::{NativeBackend, PreparedOperand, SpmmBackend};
 use crate::features::MatrixFeatures;
 use crate::kernels::KernelKind;
-use crate::selector::AdaptiveSelector;
+use crate::selector::{AdaptiveSelector, OnlineConfig, OnlineSelector};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -52,6 +52,12 @@ pub struct SpmmEngine {
     /// Prepared-matrix cache keyed by content fingerprint; `None` keeps
     /// the pre-serving behavior (every registration pays `prepare`).
     cache: Option<PreparedCache<Registered>>,
+    /// Online-refined selector ([`SpmmEngine::serving_online`]): when
+    /// present it overrides `selector` for request-level choices, and
+    /// directly-executed (unsharded) requests report their latency back
+    /// to it. Shared with the sharded backend so both grains learn from
+    /// one cost table.
+    online: Option<Arc<OnlineSelector>>,
     next_id: AtomicUsize,
 }
 
@@ -131,8 +137,25 @@ impl SpmmEngine {
         shard_threshold_nnz: usize,
         shards: usize,
     ) -> SpmmEngine {
+        Self::serving_with_selector(
+            cache_budget_bytes,
+            shard_threshold_nnz,
+            shards,
+            AdaptiveSelector::default(),
+        )
+    }
+
+    /// [`SpmmEngine::serving`] with explicit selector thresholds —
+    /// typically a loaded [`crate::selector::HardwareProfile`] — installed
+    /// at both grains (request-level and per-shard), so a deployment
+    /// boots with thresholds fitted to its own machine.
+    pub fn serving_with_selector(
+        cache_budget_bytes: usize,
+        shard_threshold_nnz: usize,
+        shards: usize,
+        selector: AdaptiveSelector,
+    ) -> SpmmEngine {
         let metrics = Arc::new(Metrics::default());
-        let selector = AdaptiveSelector::default();
         let large = crate::shard::ShardedBackend::new(shards.max(1))
             .adaptive(selector)
             .with_metrics(metrics.clone());
@@ -144,6 +167,45 @@ impl SpmmEngine {
         let mut engine = Self::assemble(Box::new(backend), metrics);
         engine.selector = selector;
         engine.with_prepared_cache(cache_budget_bytes)
+    }
+
+    /// The serving shape with **online selector refinement**: one shared
+    /// [`OnlineSelector`] (seeded from `base` — paper defaults or a
+    /// loaded hardware profile) drives request-level choices on the
+    /// unsharded route and per-shard choices on the sharded route, every
+    /// execution's latency feeds its cost EWMAs, and its periodic refits
+    /// shift later choices. See `DESIGN.md` §Measured calibration.
+    ///
+    /// On the sharded route the request-level choice (exploration
+    /// included) is only the usual hint — each shard re-selects and
+    /// reports its own execution, so request-grain exploration slots
+    /// spent on large matrices buy no extra evidence. Size the admission
+    /// threshold (or the exploration cadence) accordingly if the traffic
+    /// mix is mostly large matrices.
+    pub fn serving_online(
+        cache_budget_bytes: usize,
+        shard_threshold_nnz: usize,
+        shards: usize,
+        base: AdaptiveSelector,
+        config: OnlineConfig,
+    ) -> SpmmEngine {
+        let metrics = Arc::new(Metrics::default());
+        let online = Arc::new(OnlineSelector::new(base, metrics.clone(), config));
+        // RoutedBackend::online records shard telemetry into the
+        // selector's metrics — the same instance as the engine's, so
+        // request-, shard- and EWMA-level observations all land together.
+        let backend =
+            crate::backend::RoutedBackend::online(shard_threshold_nnz, shards, online.clone());
+        let mut engine = Self::assemble(Box::new(backend), metrics);
+        engine.selector = base;
+        engine.online = Some(online);
+        engine.with_prepared_cache(cache_budget_bytes)
+    }
+
+    /// The shared online selector, when this engine was built with
+    /// [`SpmmEngine::serving_online`].
+    pub fn online(&self) -> Option<Arc<OnlineSelector>> {
+        self.online.clone()
     }
 
     /// Enable the prepared-matrix cache: registrations of
@@ -165,6 +227,7 @@ impl SpmmEngine {
             metrics,
             matrices: Mutex::new(HashMap::new()),
             cache: None,
+            online: None,
             next_id: AtomicUsize::new(0),
         }
     }
@@ -282,10 +345,15 @@ impl SpmmEngine {
         self.backend.available_n()
     }
 
-    /// Execute `Y = A · X` with adaptive kernel selection.
+    /// Execute `Y = A · X` with adaptive kernel selection (the online
+    /// selector's choice — exploration included — when this engine was
+    /// built with [`SpmmEngine::serving_online`]).
     pub fn spmm(&self, h: MatrixHandle, x: &DenseMatrix) -> Result<SpmmResponse> {
         let reg = self.get(h)?;
-        let kernel = self.selector.select(&reg.features, x.cols);
+        let kernel = match &self.online {
+            Some(online) => online.select(&reg.features, x.cols),
+            None => self.selector.select(&reg.features, x.cols),
+        };
         self.spmm_with(h, x, kernel)
     }
 
@@ -316,6 +384,17 @@ impl SpmmEngine {
         };
         let latency = start.elapsed();
         self.metrics.record(kernel, latency);
+        // Close the online loop for directly-executed requests. Sharded
+        // executions already observed per shard (with per-shard features
+        // and actual per-shard choices), so only the unsharded route —
+        // recognizable by its `native/<kernel>` artifact label — reports
+        // here; a whole-request observation of a fan-out would attribute
+        // gather overhead to whichever kernel the hint named.
+        if let Some(online) = &self.online {
+            if exec.artifact.starts_with("native/") {
+                online.observe(&reg.features, x.cols, kernel, latency);
+            }
+        }
         Ok(SpmmResponse {
             y: exec.y,
             kernel,
@@ -503,6 +582,69 @@ mod tests {
             assert_close(&resp.y.data, &want.data, 1e-4, 1e-4).unwrap();
         }
         assert_eq!(engine.metrics.cache_misses(), 2);
+    }
+
+    #[test]
+    fn serving_with_selector_installs_thresholds_at_both_grains() {
+        let custom = AdaptiveSelector {
+            n_threshold: 4,
+            t_avg: 48.0,
+            t_cv: 0.25,
+        };
+        // threshold 1 => everything routes through the sharded side
+        let engine = SpmmEngine::serving_with_selector(16 << 20, 1, 2, custom);
+        assert_eq!(engine.selector, custom);
+        assert!(engine.online().is_none());
+        let a = matrix(401);
+        let f = MatrixFeatures::of(&a);
+        assert!(f.cv_row > 0.25 && f.cv_row < 1.5, "cv {}", f.cv_row);
+        let h = engine.register(a).unwrap();
+        let mut rng = Xoshiro256::seeded(402);
+        let x = DenseMatrix::random(60, 8, 1.0, &mut rng);
+        let resp = engine.spmm(h, &x).unwrap();
+        // default T_cv = 1.5 would pick SR-RS here; the custom 0.25
+        // flips both the request-level choice and every shard's
+        assert_eq!(resp.kernel, KernelKind::SrWb);
+        let counts = engine.metrics.shard_kernel_counts();
+        assert!(counts[1] >= 2, "shards use the custom thresholds: {counts:?}");
+        assert_eq!(counts[0] + counts[2] + counts[3], 0, "{counts:?}");
+    }
+
+    #[test]
+    fn serving_online_engine_learns_on_the_unsharded_route() {
+        use std::time::Duration;
+        let engine = SpmmEngine::serving_online(
+            16 << 20,
+            usize::MAX, // everything stays on the unsharded route
+            2,
+            AdaptiveSelector::default(),
+            OnlineConfig {
+                explore_every: 0,
+                refit_every: 0,
+                min_observations: 1,
+            },
+        );
+        let online = engine.online().expect("online engine exposes its selector");
+        let a = matrix(403);
+        let f = MatrixFeatures::of(&a);
+        assert!(f.cv_row > 0.3 && f.cv_row < 1.5, "cv {}", f.cv_row);
+        let h = engine.register(a).unwrap();
+        let mut rng = Xoshiro256::seeded(404);
+        let x = DenseMatrix::random(60, 8, 1.0, &mut rng);
+        let resp = engine.spmm(h, &x).unwrap();
+        assert!(resp.artifact.starts_with("native/"), "{}", resp.artifact);
+        assert_eq!(resp.kernel, KernelKind::SrRs, "default rule choice");
+        assert_eq!(online.observations(), 1, "direct execution observed");
+        // teach it SR-WB is cheaper on this bucket, refit, and the
+        // request-level choice shifts — visible in the kernel counters
+        for _ in 0..4 {
+            online.observe(&f, 8, KernelKind::SrRs, Duration::from_millis(4));
+            online.observe(&f, 8, KernelKind::SrWb, Duration::from_micros(40));
+        }
+        assert!(online.refit());
+        let resp2 = engine.spmm(h, &x).unwrap();
+        assert_eq!(resp2.kernel, KernelKind::SrWb, "{}", online.summary());
+        assert_eq!(engine.metrics.kernel_counts()[1], 1);
     }
 
     #[test]

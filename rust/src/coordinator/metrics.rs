@@ -6,11 +6,27 @@
 //! out into K shard executions, each with its own kernel choice and
 //! wallclock. The `shard_*` counters are how per-shard adaptivity is
 //! observed from outside (`crate::shard::ShardedBackend` records them).
+//!
+//! The per-`(feature bucket, kernel)` cost EWMAs ([`Metrics::observe_cost`]
+//! / [`Metrics::cost`]) are the substrate of online selector refinement:
+//! executions report normalized latencies here, and
+//! [`crate::selector::OnlineSelector`] refits its thresholds against the
+//! table (`DESIGN.md` §Measured calibration).
 
 use crate::kernels::KernelKind;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Number of feature buckets the per-kernel cost EWMAs are keyed by.
+/// The bucketing function lives in [`crate::selector::online`]
+/// (`feature_bucket`); `Metrics` only stores the table.
+pub const COST_BUCKETS: usize = 12;
+
+/// EWMA smoothing factor for the cost table: each observation moves the
+/// estimate 25% toward itself — reactive enough for online refinement,
+/// damped enough to ride out scheduler noise.
+pub const COST_EWMA_ALPHA: f64 = 0.25;
 
 /// Aggregate metrics for an engine instance.
 #[derive(Debug, Default)]
@@ -36,6 +52,12 @@ pub struct Metrics {
     rejected: AtomicU64,
     /// high-water mark of in-flight requests observed at admission
     queue_depth_max: AtomicU64,
+    /// per-(feature-bucket, kernel) EWMA of normalized execution cost
+    /// (seconds per flop), stored as f64 bits; what the online selector
+    /// refits thresholds against
+    cost_ewma: [[AtomicU64; 4]; COST_BUCKETS],
+    /// observation counts behind each EWMA cell (0 = cell is empty)
+    cost_obs: [[AtomicU64; 4]; COST_BUCKETS],
 }
 
 const RESERVOIR: usize = 4096;
@@ -187,6 +209,65 @@ impl Metrics {
         self.queue_depth_max.load(Ordering::Relaxed)
     }
 
+    /// Record one normalized execution-cost observation (seconds per
+    /// flop) for a `(feature bucket, kernel)` cell; updates the cell's
+    /// EWMA and observation count. Non-finite or non-positive costs are
+    /// ignored. Two racing first observations may briefly under-seed the
+    /// EWMA; it converges with the next few observations, which is all an
+    /// exponentially-weighted estimate promises anyway.
+    pub fn observe_cost(&self, bucket: usize, kernel: KernelKind, cost: f64) {
+        assert!(bucket < COST_BUCKETS, "bucket {bucket} out of range");
+        if !cost.is_finite() || cost <= 0.0 {
+            return;
+        }
+        let k = KernelKind::ALL.iter().position(|x| *x == kernel).unwrap();
+        let seen = self.cost_obs[bucket][k].fetch_add(1, Ordering::Relaxed);
+        let cell = &self.cost_ewma[bucket][k];
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let old = f64::from_bits(cur);
+            let next = if seen == 0 {
+                cost
+            } else {
+                old + COST_EWMA_ALPHA * (cost - old)
+            };
+            match cell.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(observed) => cur = observed,
+            }
+        }
+    }
+
+    /// Current EWMA cost (seconds per flop) of a `(bucket, kernel)` cell,
+    /// or `None` if nothing was observed there yet.
+    pub fn cost(&self, bucket: usize, kernel: KernelKind) -> Option<f64> {
+        let k = KernelKind::ALL.iter().position(|x| *x == kernel).unwrap();
+        if self.cost_obs[bucket][k].load(Ordering::Relaxed) == 0 {
+            return None;
+        }
+        Some(f64::from_bits(self.cost_ewma[bucket][k].load(Ordering::Relaxed)))
+    }
+
+    /// Observation count behind one `(bucket, kernel)` EWMA cell.
+    pub fn cost_observations(&self, bucket: usize, kernel: KernelKind) -> u64 {
+        let k = KernelKind::ALL.iter().position(|x| *x == kernel).unwrap();
+        self.cost_obs[bucket][k].load(Ordering::Relaxed)
+    }
+
+    /// Total cost observations across all cells.
+    pub fn total_cost_observations(&self) -> u64 {
+        self.cost_obs
+            .iter()
+            .flat_map(|row| row.iter())
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum()
+    }
+
     /// Latency quantile from the reservoir.
     pub fn latency_quantile(&self, q: f64) -> Duration {
         let res = self.latencies.lock().unwrap();
@@ -304,6 +385,46 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("cache[hits=2 misses=1 evictions=3]"), "{s}");
         assert!(s.contains("queue[max_depth=9 rejected=1]"), "{s}");
+    }
+
+    #[test]
+    fn cost_ewma_tracks_observations() {
+        let m = Metrics::default();
+        assert_eq!(m.cost(0, KernelKind::SrRs), None);
+        assert_eq!(m.total_cost_observations(), 0);
+        m.observe_cost(0, KernelKind::SrRs, 1.0);
+        assert_eq!(m.cost(0, KernelKind::SrRs), Some(1.0), "first seeds");
+        m.observe_cost(0, KernelKind::SrRs, 2.0);
+        let blended = m.cost(0, KernelKind::SrRs).unwrap();
+        assert!((blended - (1.0 + COST_EWMA_ALPHA)).abs() < 1e-12, "{blended}");
+        assert_eq!(m.cost_observations(0, KernelKind::SrRs), 2);
+        // cells are independent
+        assert_eq!(m.cost(0, KernelKind::PrWb), None);
+        assert_eq!(m.cost(COST_BUCKETS - 1, KernelKind::SrRs), None);
+        // garbage observations are dropped
+        m.observe_cost(1, KernelKind::PrRs, f64::NAN);
+        m.observe_cost(1, KernelKind::PrRs, 0.0);
+        m.observe_cost(1, KernelKind::PrRs, -1.0);
+        assert_eq!(m.cost(1, KernelKind::PrRs), None);
+        assert_eq!(m.total_cost_observations(), 2);
+    }
+
+    #[test]
+    fn cost_ewma_concurrent_observers_converge() {
+        let m = std::sync::Arc::new(Metrics::default());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..500 {
+                        m.observe_cost(3, KernelKind::SrWb, 2.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.cost_observations(3, KernelKind::SrWb), 2000);
+        let c = m.cost(3, KernelKind::SrWb).unwrap();
+        assert!((c - 2.0).abs() < 1e-6, "constant stream converges: {c}");
     }
 
     #[test]

@@ -22,6 +22,12 @@
 //! engine pinned to its thread by a `!Send` PJRT client. Uses std mpsc —
 //! the offline registry has no tokio; the loop is the same structure a
 //! tokio runtime would drive. See `DESIGN.md` §Serving layer.
+//!
+//! The server is selector-agnostic: over an engine built with
+//! [`SpmmEngine::serving_online`], the traffic these workers drive is
+//! exactly what feeds the online selector's cost EWMAs and threshold
+//! refits (`DESIGN.md` §Measured calibration) — no server-side wiring
+//! is needed.
 
 use super::batcher::{BatchedResult, Batcher, FlushOutcome};
 use super::engine::{MatrixHandle, SpmmEngine};

@@ -116,9 +116,14 @@ fn vsr_worker(
         for l in 0..WARP {
             let i = win + l;
             lane_rows[l] = a.row_idx[i];
-            let v = a.values[i];
             let lane = &mut lane_vals[l * n..(l + 1) * n];
-            if v != 0.0 {
+            // Bound the gather by the true nnz: padding lanes must never
+            // touch X (their 0.0 value would still turn a non-finite
+            // dense entry into NaN, poisoning the run they merge into).
+            // Real entries always gather, so explicit stored zeros
+            // propagate NaN/Inf exactly like the dense reference.
+            if i < a.nnz {
+                let v = a.values[i];
                 let xrow = x.row(a.col_idx[i] as usize);
                 for j in 0..n {
                     lane[j] = v * xrow[j];

@@ -130,8 +130,12 @@ fn worker_pass(
             flush(cur_row, &mut acc, &mut flushed_first, &mut carries);
             cur_row = r;
         }
-        let v = a.values[i];
-        if v != 0.0 || i < a.nnz {
+        // Bound the gather by the true nnz: padding slots must never
+        // touch X. Their value is 0.0, but `0.0 * NaN = NaN`, so a
+        // non-finite dense entry reachable only through a padded slot's
+        // (repeated) column index would otherwise poison the carry row.
+        if i < a.nnz {
+            let v = a.values[i];
             let xrow = x.row(a.col_idx[i] as usize);
             for j in 0..n {
                 acc[j] += v * xrow[j];

@@ -236,6 +236,26 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
         Some("250000"),
     )
     .opt("shards", "row-shard fan-out for large matrices", Some("4"))
+    .opt(
+        "profile",
+        "hardware-profile JSON with calibrated selector thresholds (default: \
+         $GE_SPMM_PROFILE if set; see `calibrate --measured --profile`)",
+        None,
+    )
+    .flag(
+        "online",
+        "refine selector thresholds online from live request latencies",
+    )
+    .opt(
+        "refit-every",
+        "online mode: observations between threshold refits",
+        Some("256"),
+    )
+    .opt(
+        "explore-every",
+        "online mode: run the sibling kernel every Nth decision (0 = off)",
+        Some("16"),
+    )
     .opt("seed", "workload seed", Some("42"));
     let args = cmd.parse(&rest)?;
 
@@ -247,11 +267,45 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
     let n = args.parse_positive("n", 8);
     let seed: u64 = args.parse_or("seed", 42);
 
-    let engine = Arc::new(SpmmEngine::serving(
-        args.parse_positive("cache-mb", 64) << 20,
-        args.parse_positive("shard-threshold", 250_000),
-        args.parse_positive("shards", 4),
-    ));
+    // Selector thresholds: explicit --profile beats $GE_SPMM_PROFILE
+    // beats the paper defaults.
+    use ge_spmm::selector::{HardwareProfile, OnlineConfig};
+    let base_selector = match args.get("profile") {
+        Some(path) => {
+            let p = HardwareProfile::load(Path::new(path))?;
+            println!("loaded hardware profile {path}: {}", p.summary());
+            p.selector
+        }
+        None => match HardwareProfile::autoload()? {
+            Some((path, p)) => {
+                println!(
+                    "loaded hardware profile {} (via $GE_SPMM_PROFILE): {}",
+                    path.display(),
+                    p.summary()
+                );
+                p.selector
+            }
+            None => AdaptiveSelector::default(),
+        },
+    };
+    let cache_bytes = args.parse_positive("cache-mb", 64) << 20;
+    let threshold = args.parse_positive("shard-threshold", 250_000);
+    let shards = args.parse_positive("shards", 4);
+    let engine = Arc::new(if args.flag("online") {
+        SpmmEngine::serving_online(
+            cache_bytes,
+            threshold,
+            shards,
+            base_selector,
+            OnlineConfig {
+                explore_every: args.parse_or("explore-every", 16),
+                refit_every: args.parse_or("refit-every", 256),
+                ..OnlineConfig::default()
+            },
+        )
+    } else {
+        SpmmEngine::serving_with_selector(cache_bytes, threshold, shards, base_selector)
+    });
     let config = ServerConfig {
         max_width: args.parse_positive("max-width", 128),
         max_delay: Duration::from_millis(args.parse_or("max-delay-ms", 2)),
@@ -321,6 +375,9 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
         ok as f64 / elapsed.as_secs_f64().max(1e-9)
     );
     println!("{}", engine.metrics.summary());
+    if let Some(online) = engine.online() {
+        println!("{}", online.summary());
+    }
     if let Some((entries, bytes)) = engine.cache_usage() {
         println!("cache: {entries} prepared matrices resident, {bytes} bytes");
     }
@@ -360,28 +417,84 @@ fn cmd_simulate(rest: Vec<String>) -> Result<()> {
 }
 
 fn cmd_calibrate(rest: Vec<String>) -> Result<()> {
+    use ge_spmm::backend::{NativeBackend, SpmmBackend};
+    use ge_spmm::selector::measured::{self, MeasureConfig};
+    use ge_spmm::selector::HardwareProfile;
+
     let cmd = Command::new("calibrate", "fit selector thresholds on the collection")
-        .opt("gpu", "v100 | rtx2080 | rtx3090", Some("rtx3090"))
+        .opt("gpu", "v100 | rtx2080 | rtx3090 (simulator mode)", Some("rtx3090"))
         .opt("n-values", "dense widths", Some("1,4,32,128"))
-        .flag("mini", "use the mini collection (fast)");
+        .flag("mini", "use the mini collection (fast)")
+        .flag(
+            "measured",
+            "fit against wallclock timings of the native kernels on this machine \
+             instead of the GPU simulator",
+        )
+        .opt(
+            "profile",
+            "write the fitted thresholds as a hardware-profile JSON (loaded by \
+             `serve --profile` / $GE_SPMM_PROFILE)",
+            None,
+        )
+        .opt(
+            "limit",
+            "cap the number of suite matrices (0 = all; measured mode smoke-tests \
+             with small caps)",
+            Some("0"),
+        )
+        .opt(
+            "budget-ms",
+            "per-(matrix, N, kernel) measurement budget in measured mode (ms)",
+            Some("40"),
+        );
     let args = cmd.parse(&rest)?;
-    let gpu = GpuConfig::by_name(args.get_or("gpu", "rtx3090"))
-        .ok_or_else(|| anyhow!("unknown gpu"))?;
     let n_values = args.parse_list("n-values", &[1usize, 4, 32, 128]);
-    let specs = if args.flag("mini") {
+    let mut specs = if args.flag("mini") {
         Collection::mini_suite()
     } else {
         Collection::suite()
     };
+    let limit: usize = args.parse_or("limit", 0);
+    if limit > 0 && specs.len() > limit {
+        specs.truncate(limit);
+    }
     eprintln!("building {} matrices …", specs.len());
     let matrices: Vec<CsrMatrix> = specs.iter().map(|s| s.build()).collect();
-    eprintln!("profiling …");
-    let samples = calibrate::collect_samples(&matrices, &n_values, &gpu);
+
+    let (samples, source, backend_name) = if args.flag("measured") {
+        let backend = NativeBackend::default();
+        let cfg = MeasureConfig::default().with_budget_ms(args.parse_or("budget-ms", 40));
+        eprintln!(
+            "profiling {} (matrix × N) cells on the {} backend (wallclock) …",
+            matrices.len() * n_values.len(),
+            backend.name()
+        );
+        let samples = measured::collect_samples(&matrices, &n_values, &backend, &cfg)?;
+        (samples, "measured", backend.name())
+    } else {
+        let gpu = GpuConfig::by_name(args.get_or("gpu", "rtx3090"))
+            .ok_or_else(|| anyhow!("unknown gpu"))?;
+        eprintln!("profiling on the {} simulator …", gpu.name);
+        (
+            calibrate::collect_samples(&matrices, &n_values, &gpu),
+            "simulated",
+            "sim",
+        )
+    };
+    if samples.is_empty() {
+        bail!("no calibration samples (all suite matrices empty?)");
+    }
     let cal = calibrate::calibrate(&samples);
+    let default_loss = calibrate::selector_loss(&AdaptiveSelector::default(), &samples);
     println!(
-        "calibrated: T_avg={} T_cv={} (geomean loss vs oracle: {:.3})",
-        cal.selector.t_avg, cal.selector.t_cv, cal.mean_loss
+        "calibrated: T_avg={} T_cv={} (geomean loss vs oracle: {:.3}; paper defaults: {:.3})",
+        cal.selector.t_avg, cal.selector.t_cv, cal.mean_loss, default_loss
     );
+    if let Some(path) = args.get("profile") {
+        let profile = HardwareProfile::new(&cal, source, backend_name, samples.len(), &n_values);
+        profile.save(Path::new(path))?;
+        println!("wrote hardware profile {path}: {}", profile.summary());
+    }
     Ok(())
 }
 

@@ -141,6 +141,71 @@ mod tests {
     }
 
     #[test]
+    fn calibrated_loss_is_the_grid_minimum_on_measured_shaped_samples() {
+        // Measured profiles are arbitrary positive timings (no simulator
+        // structure), so pin the invariant on random ones: `calibrate`
+        // never returns thresholds whose loss exceeds any grid point's.
+        use crate::kernels::KernelKind;
+        use crate::util::proptest::run_prop;
+        run_prop("calibrate picks the grid argmin", 40, |g| {
+            let nsamples = g.usize_in(1, 10);
+            let samples: Vec<Sample> = (0..nsamples)
+                .map(|_| {
+                    let avg_row = g.f64_in(0.5, 80.0);
+                    let cv_row = g.f64_in(0.0, 4.0);
+                    let mut seconds = [(KernelKind::SrRs, 0.0f64); 4];
+                    for (i, k) in KernelKind::ALL.iter().enumerate() {
+                        seconds[i] = (*k, g.f64_in(1e-6, 1e-3));
+                    }
+                    let best = seconds
+                        .iter()
+                        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    Sample {
+                        features: MatrixFeatures {
+                            rows: 1000,
+                            cols: 1000,
+                            nnz: (avg_row * 1000.0) as usize,
+                            avg_row,
+                            stdv_row: avg_row * cv_row,
+                            cv_row,
+                            max_row: 500,
+                            empty_frac: 0.0,
+                            gini_row: 0.0,
+                        },
+                        n: *g.choose(&[1usize, 2, 4, 8, 32, 128]),
+                        profile: OracleProfile { best, seconds },
+                    }
+                })
+                .collect();
+            let cal = calibrate(&samples);
+            let grid_min = cal
+                .grid
+                .iter()
+                .map(|&(_, _, loss)| loss)
+                .fold(f64::INFINITY, f64::min);
+            if (cal.mean_loss - grid_min).abs() > 1e-9 {
+                return Err(format!(
+                    "returned loss {} but grid minimum is {grid_min}",
+                    cal.mean_loss
+                ));
+            }
+            let direct = selector_loss(&cal.selector, &samples);
+            if (direct - cal.mean_loss).abs() > 1e-9 {
+                return Err(format!(
+                    "reported loss {} but selector evaluates to {direct}",
+                    cal.mean_loss
+                ));
+            }
+            if cal.mean_loss < 1.0 - 1e-12 {
+                return Err(format!("loss {} below the oracle bound", cal.mean_loss));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn selector_loss_of_oracle_picks_is_one() {
         // a selector that always matched the oracle would have loss 1;
         // sanity-check the bound with per-sample inspection

@@ -1,0 +1,218 @@
+//! Wallclock profiling of the four kernel designs through a
+//! [`SpmmBackend`] — measured counterpart of the simulator-backed
+//! [`super::oracle::profile`].
+//!
+//! The paper "empirically decides the threshold" from profiles taken on
+//! real hardware; [`super::calibrate`] reproduces the fitting procedure
+//! but was previously only ever fed analytical `sim::GpuConfig` profiles.
+//! This module closes that gap: [`profile_measured`] times all four
+//! kernels on an actual backend and packages the medians as an
+//! [`OracleProfile`], and [`collect_samples`] builds the same
+//! `(matrix × N)` sample set [`super::calibrate::calibrate`] consumes —
+//! so the grid search runs unchanged on real timings. The fitted
+//! thresholds can be persisted as a [`super::profile::HardwareProfile`]
+//! (`ge-spmm calibrate --measured --profile <path>`) and loaded at
+//! deployment startup.
+
+use super::calibrate::Sample;
+use super::oracle::OracleProfile;
+use crate::backend::SpmmBackend;
+use crate::bench::harness::{bench_fn_with, BenchConfig};
+use crate::features::MatrixFeatures;
+use crate::kernels::KernelKind;
+use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::util::prng::Xoshiro256;
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+/// Measurement budget for one (matrix, N, kernel) cell.
+///
+/// The defaults are sized for calibration (many cells, each needing only
+/// a stable median), not for publication-grade benchmarking — tighten
+/// via [`MeasureConfig::with_budget_ms`] for CI smokes or loosen for a
+/// quiet dedicated machine.
+#[derive(Clone, Copy, Debug)]
+pub struct MeasureConfig {
+    /// Warmup budget before the timed iterations.
+    pub warmup: Duration,
+    /// Timed-measurement budget.
+    pub measure: Duration,
+    /// Iteration floor (median needs a few samples even for slow cells).
+    pub min_iters: usize,
+    /// Iteration ceiling (bounds tiny-matrix cells).
+    pub max_iters: usize,
+    /// Seed for the dense operand.
+    pub seed: u64,
+}
+
+impl Default for MeasureConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(10),
+            measure: Duration::from_millis(40),
+            min_iters: 3,
+            max_iters: 200,
+            seed: 0x6e5f,
+        }
+    }
+}
+
+impl MeasureConfig {
+    /// Scale the per-cell budget: `ms` of measurement with a quarter of
+    /// it as warmup. `ms = 0` is clamped to 1.
+    pub fn with_budget_ms(mut self, ms: u64) -> Self {
+        let ms = ms.max(1);
+        self.measure = Duration::from_millis(ms);
+        self.warmup = Duration::from_millis(ms.div_ceil(4));
+        self
+    }
+
+    fn bench_config(&self) -> BenchConfig {
+        BenchConfig {
+            warmup: self.warmup,
+            measure: self.measure,
+            min_iters: self.min_iters,
+            max_iters: self.max_iters,
+        }
+    }
+}
+
+/// Time all four kernels on `backend` for one `(matrix, N)` cell and
+/// return the winner plus every candidate's median seconds — the same
+/// shape the simulator oracle produces, so downstream calibration cannot
+/// tell measured and simulated profiles apart.
+///
+/// The backend must honor the explicit `KernelKind` (true of
+/// `NativeBackend` and fixed-mode `ShardedBackend`). Do not profile
+/// through a per-shard-adaptive backend: it re-selects internally and
+/// would attribute one kernel's time to another.
+pub fn profile_measured(
+    backend: &dyn SpmmBackend,
+    csr: &CsrMatrix,
+    n: usize,
+    cfg: &MeasureConfig,
+) -> Result<OracleProfile> {
+    if csr.nnz() == 0 || csr.rows == 0 {
+        bail!("cannot profile an empty matrix ({}x{})", csr.rows, csr.cols);
+    }
+    let operand = backend.prepare(csr)?;
+    let mut rng = Xoshiro256::seeded(cfg.seed);
+    let x = DenseMatrix::random(csr.cols, n.max(1), 1.0, &mut rng);
+    let bench_cfg = cfg.bench_config();
+    let mut seconds = [(KernelKind::SrRs, 0.0f64); 4];
+    for (i, k) in KernelKind::ALL.iter().enumerate() {
+        // fail fast (and don't time error paths) if the backend cannot
+        // run this cell at all
+        backend.execute(&operand, &x, *k)?;
+        let stats = bench_fn_with(k.label(), bench_cfg, || {
+            let exec = backend.execute(&operand, &x, *k).expect("profiled execute");
+            std::hint::black_box(&exec.y.data);
+        });
+        // Instant is monotonic but coarse clocks can report 0 for a tiny
+        // cell; clamp so OracleProfile ratios stay finite.
+        seconds[i] = (*k, stats.median_s().max(1e-9));
+    }
+    let best = seconds
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+        .0;
+    Ok(OracleProfile { best, seconds })
+}
+
+/// Build measured calibration samples over `matrices × n_values` —
+/// drop-in replacement for [`super::calibrate::collect_samples`] with
+/// wallclock in place of the simulator. Empty matrices are skipped (they
+/// have no kernel-choice consequence and cannot be timed meaningfully).
+pub fn collect_samples(
+    matrices: &[CsrMatrix],
+    n_values: &[usize],
+    backend: &dyn SpmmBackend,
+    cfg: &MeasureConfig,
+) -> Result<Vec<Sample>> {
+    let mut out = Vec::with_capacity(matrices.len() * n_values.len());
+    for a in matrices {
+        if a.nnz() == 0 || a.rows == 0 {
+            continue;
+        }
+        let features = MatrixFeatures::of(a);
+        for &n in n_values {
+            out.push(Sample {
+                features,
+                n,
+                profile: profile_measured(backend, a, n, cfg)?,
+            });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::selector::calibrate;
+    use crate::sparse::CooMatrix;
+
+    fn tiny_cfg() -> MeasureConfig {
+        MeasureConfig {
+            warmup: Duration::from_micros(200),
+            measure: Duration::from_millis(2),
+            min_iters: 2,
+            max_iters: 20,
+            seed: 11,
+        }
+    }
+
+    fn small(seed: u64) -> CsrMatrix {
+        let mut rng = Xoshiro256::seeded(seed);
+        CsrMatrix::from_coo(&CooMatrix::random_uniform(120, 100, 0.05, &mut rng))
+    }
+
+    #[test]
+    fn measured_profile_is_positive_and_consistent() {
+        let backend = NativeBackend::serial();
+        let p = profile_measured(&backend, &small(21), 4, &tiny_cfg()).unwrap();
+        for k in KernelKind::ALL {
+            assert!(p.time_of(k) > 0.0, "{k:?}");
+            assert!(p.loss_of(k) >= 0.0, "{k:?}");
+        }
+        assert_eq!(p.loss_of(p.best), 0.0);
+    }
+
+    #[test]
+    fn empty_matrices_are_rejected_or_skipped() {
+        let backend = NativeBackend::serial();
+        let empty = CsrMatrix::from_coo(&CooMatrix::new(4, 4));
+        assert!(profile_measured(&backend, &empty, 1, &tiny_cfg()).is_err());
+        let matrices = [empty, small(22)];
+        let samples = collect_samples(&matrices, &[1, 8], &backend, &tiny_cfg()).unwrap();
+        assert_eq!(samples.len(), 2, "only the non-empty matrix is sampled");
+    }
+
+    #[test]
+    fn calibrate_runs_unchanged_on_measured_samples() {
+        let backend = NativeBackend::serial();
+        let samples = collect_samples(&[small(23)], &[1, 32], &backend, &tiny_cfg()).unwrap();
+        let cal = calibrate::calibrate(&samples);
+        assert!(cal.mean_loss >= 1.0);
+        assert_eq!(
+            cal.grid.len(),
+            calibrate::T_AVG_GRID.len() * calibrate::T_CV_GRID.len()
+        );
+        // the returned thresholds are no worse than any grid point
+        for &(_, _, loss) in &cal.grid {
+            assert!(cal.mean_loss <= loss + 1e-12);
+        }
+    }
+
+    #[test]
+    fn budget_scaling() {
+        let cfg = MeasureConfig::default().with_budget_ms(8);
+        assert_eq!(cfg.measure, Duration::from_millis(8));
+        assert_eq!(cfg.warmup, Duration::from_millis(2));
+        let floor = MeasureConfig::default().with_budget_ms(0);
+        assert_eq!(cfg.min_iters, MeasureConfig::default().min_iters);
+        assert!(floor.measure >= Duration::from_millis(1));
+    }
+}

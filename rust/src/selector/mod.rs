@@ -1,18 +1,29 @@
 //! Adaptive kernel selection — the paper's second contribution (§2.2).
 //!
 //! [`rules`] implements the Fig. 4 decision tree over low-cost row-length
-//! statistics; [`calibrate`] fits its two thresholds against simulator
-//! profiles of the benchmark collection (the paper "empirically decides
-//! the threshold"); [`oracle`] is the profile-everything upper bound the
-//! paper calls "select the best implementation off-line".
+//! statistics; [`calibrate`] fits its two thresholds against profiles of
+//! the benchmark collection (the paper "empirically decides the
+//! threshold") — fed either by the analytical simulator
+//! ([`calibrate::collect_samples`]) or by wallclock timings of the real
+//! kernels ([`measured::collect_samples`]); [`oracle`] is the
+//! profile-everything upper bound the paper calls "select the best
+//! implementation off-line". [`profile`] persists a fit as a JSON
+//! [`HardwareProfile`] deployments load at startup, and [`online`] keeps
+//! refining the thresholds against live-traffic latency EWMAs.
 //!
 //! The rules run at two grains: per request in
 //! [`crate::coordinator::SpmmEngine`], and per row shard inside
-//! [`crate::shard::ShardedBackend`] (`DESIGN.md` §Sharded execution).
+//! [`crate::shard::ShardedBackend`] (`DESIGN.md` §Sharded execution and
+//! §Measured calibration).
 
 pub mod calibrate;
+pub mod measured;
+pub mod online;
 pub mod oracle;
+pub mod profile;
 pub mod rules;
 
 pub use crate::kernels::KernelKind;
+pub use online::{OnlineConfig, OnlineSelector};
+pub use profile::HardwareProfile;
 pub use rules::AdaptiveSelector;

@@ -1,0 +1,486 @@
+//! Online selector refinement: learn kernel-choice thresholds from the
+//! latencies live traffic is already producing.
+//!
+//! [`super::measured`] calibrates off-line against a benchmark suite;
+//! this module keeps calibrating *on-line*. [`OnlineSelector`] wraps an
+//! [`AdaptiveSelector`] and
+//!
+//! 1. **observes**: every execution reports `(features, N, kernel,
+//!    latency)`; the normalized cost (seconds per flop) lands in the
+//!    per-`(feature bucket, kernel)` EWMA table in
+//!    [`Metrics`](crate::coordinator::metrics::Metrics);
+//! 2. **explores**: every `explore_every`-th decision runs the sibling
+//!    kernel of the rule's choice (same reduction family, opposite
+//!    workload-balancing), so the EWMA table also has data for the road
+//!    not taken — without exploration the refit could never contradict
+//!    the current thresholds;
+//! 3. **refits**: every `refit_every`-th observation re-runs the
+//!    calibration grid search against the EWMA table. The Fig.-4 rule
+//!    tree is separable — `T_avg` only affects small-N (parallel
+//!    reduction) decisions and `T_cv` only large-N (sequential
+//!    reduction) ones — so each threshold is refit independently, and
+//!    only when its own family has measured evidence.
+//!
+//! Wired into [`crate::shard::ShardedBackend`] (per-shard decisions) and
+//! [`crate::coordinator::SpmmEngine`] (request-level decisions on the
+//! unsharded path) via `ShardedBackend::online` /
+//! `SpmmEngine::serving_online`. See `DESIGN.md` §Measured calibration.
+
+use super::calibrate::{T_AVG_GRID, T_CV_GRID};
+use super::rules::AdaptiveSelector;
+use crate::coordinator::metrics::{Metrics, COST_BUCKETS};
+use crate::features::MatrixFeatures;
+use crate::kernels::KernelKind;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Map `(features, N)` to a cost-table bucket: reduction family from N
+/// (the paper's structural `n_threshold = 4`), three `avg_row` bins and
+/// two `cv_row` bins. Coarse on purpose — the bucket count bounds how
+/// much per-cell traffic the EWMAs need before they mean anything.
+pub fn feature_bucket(f: &MatrixFeatures, n: usize) -> usize {
+    let fam = usize::from(n.max(1) > 4);
+    let avg = if f.avg_row < 8.0 {
+        0
+    } else if f.avg_row < 32.0 {
+        1
+    } else {
+        2
+    };
+    let cv = usize::from(f.cv_row > 1.0);
+    fam * 6 + avg * 2 + cv
+}
+
+/// The sibling design of `k`: same reduction family, opposite
+/// workload-balancing — the exploration alternative whose cost a refit
+/// needs to compare against.
+pub fn sibling_kernel(k: KernelKind) -> KernelKind {
+    match k {
+        KernelKind::SrRs => KernelKind::SrWb,
+        KernelKind::SrWb => KernelKind::SrRs,
+        KernelKind::PrRs => KernelKind::PrWb,
+        KernelKind::PrWb => KernelKind::PrRs,
+    }
+}
+
+/// Exploration and refit cadence.
+#[derive(Clone, Copy, Debug)]
+pub struct OnlineConfig {
+    /// Every `explore_every`-th decision runs the sibling kernel instead
+    /// of the rule choice (0 disables exploration). The default spends
+    /// ~6% of traffic on exploration.
+    pub explore_every: u64,
+    /// Re-fit thresholds every `refit_every` observations (0 disables
+    /// refitting — the selector still observes, useful for warm-up).
+    pub refit_every: u64,
+    /// Minimum observations an EWMA cell needs before a refit trusts it.
+    pub min_observations: u64,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        Self {
+            explore_every: 16,
+            refit_every: 256,
+            min_observations: 3,
+        }
+    }
+}
+
+/// Running per-bucket feature centroid, so a refit evaluates candidate
+/// thresholds against the features traffic actually has (bucket-midpoint
+/// representatives would mis-place workloads near a bin edge).
+#[derive(Clone, Copy, Debug, Default)]
+struct Centroid {
+    count: f64,
+    sum_avg: f64,
+    sum_cv: f64,
+    sum_n: f64,
+    sum_nnz: f64,
+}
+
+/// One refit-ready bucket: centroid features plus its traffic weight.
+struct BucketView {
+    bucket: usize,
+    features: MatrixFeatures,
+    n: usize,
+    weight: f64,
+}
+
+/// Thread-safe online-refined selector. Share one instance (via `Arc`)
+/// between every decision point that should learn jointly — the serving
+/// engine installs the same instance at the request grain and inside the
+/// sharded backend.
+pub struct OnlineSelector {
+    metrics: Arc<Metrics>,
+    config: OnlineConfig,
+    state: Mutex<AdaptiveSelector>,
+    centroids: Mutex<[Centroid; COST_BUCKETS]>,
+    decisions: AtomicU64,
+    observations: AtomicU64,
+    explorations: AtomicU64,
+    refits: AtomicU64,
+}
+
+impl OnlineSelector {
+    /// Start from `base` thresholds (paper defaults, or a loaded
+    /// [`super::profile::HardwareProfile`]), recording into `metrics`.
+    pub fn new(base: AdaptiveSelector, metrics: Arc<Metrics>, config: OnlineConfig) -> Self {
+        Self {
+            metrics,
+            config,
+            state: Mutex::new(base),
+            centroids: Mutex::new([Centroid::default(); COST_BUCKETS]),
+            decisions: AtomicU64::new(0),
+            observations: AtomicU64::new(0),
+            explorations: AtomicU64::new(0),
+            refits: AtomicU64::new(0),
+        }
+    }
+
+    /// Snapshot of the current thresholds.
+    pub fn current(&self) -> AdaptiveSelector {
+        *self.state.lock().unwrap()
+    }
+
+    /// The metrics instance the EWMA observations land in.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Pick a kernel: the current rule choice, except that every
+    /// `explore_every`-th decision runs the sibling design instead.
+    pub fn select(&self, f: &MatrixFeatures, n: usize) -> KernelKind {
+        let rule = self.current().select(f, n);
+        let every = self.config.explore_every;
+        let d = self.decisions.fetch_add(1, Ordering::Relaxed);
+        if every > 0 && (d + 1) % every == 0 {
+            self.explorations.fetch_add(1, Ordering::Relaxed);
+            sibling_kernel(rule)
+        } else {
+            rule
+        }
+    }
+
+    /// Report one finished execution. Normalizes the latency by the
+    /// cell's flop count, feeds the EWMA table and the bucket centroid,
+    /// and triggers a refit on cadence.
+    pub fn observe(&self, f: &MatrixFeatures, n: usize, kernel: KernelKind, latency: Duration) {
+        let flops = (2.0 * f.nnz as f64 * n.max(1) as f64).max(1.0);
+        let cost = latency.as_secs_f64().max(1e-9) / flops;
+        let bucket = feature_bucket(f, n);
+        self.metrics.observe_cost(bucket, kernel, cost);
+        {
+            let mut cents = self.centroids.lock().unwrap();
+            let c = &mut cents[bucket];
+            c.count += 1.0;
+            c.sum_avg += f.avg_row;
+            c.sum_cv += f.cv_row;
+            c.sum_n += n.max(1) as f64;
+            c.sum_nnz += f.nnz as f64;
+        }
+        let o = self.observations.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.config.refit_every > 0 && o % self.config.refit_every == 0 {
+            self.refit();
+        }
+    }
+
+    /// Decisions taken so far (exploration included).
+    pub fn decisions(&self) -> u64 {
+        self.decisions.load(Ordering::Relaxed)
+    }
+
+    /// Observations consumed so far.
+    pub fn observations(&self) -> u64 {
+        self.observations.load(Ordering::Relaxed)
+    }
+
+    /// Decisions that ran the exploration sibling.
+    pub fn explorations(&self) -> u64 {
+        self.explorations.load(Ordering::Relaxed)
+    }
+
+    /// Refits performed (on cadence or explicit).
+    pub fn refits(&self) -> u64 {
+        self.refits.load(Ordering::Relaxed)
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let cur = self.current();
+        format!(
+            "online[T_avg={} T_cv={} decisions={} explored={} observations={} refits={}]",
+            cur.t_avg,
+            cur.t_cv,
+            self.decisions(),
+            self.explorations(),
+            self.observations(),
+            self.refits()
+        )
+    }
+
+    /// Re-fit both thresholds against the EWMA table now. Each threshold
+    /// moves only if its own reduction family has refit-ready buckets
+    /// (at least two measured kernels) and a grid candidate strictly
+    /// beats the current value's predicted loss. Returns whether any
+    /// threshold changed.
+    pub fn refit(&self) -> bool {
+        self.refits.fetch_add(1, Ordering::Relaxed);
+        let current = self.current();
+        let views = self.bucket_views();
+        let pr: Vec<&BucketView> = views.iter().filter(|b| b.bucket < 6).collect();
+        let sr: Vec<&BucketView> = views.iter().filter(|b| b.bucket >= 6).collect();
+        let mut next = current;
+        next.t_avg = self.fit_threshold(current, current.t_avg, &pr, &T_AVG_GRID, |sel, v| {
+            AdaptiveSelector { t_avg: v, ..sel }
+        });
+        next.t_cv = self.fit_threshold(current, current.t_cv, &sr, &T_CV_GRID, |sel, v| {
+            AdaptiveSelector { t_cv: v, ..sel }
+        });
+        if next != current {
+            *self.state.lock().unwrap() = next;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// 1-D threshold search: evaluate the current value and every grid
+    /// candidate over the family's refit-ready buckets; keep the current
+    /// value unless a candidate is strictly better.
+    fn fit_threshold(
+        &self,
+        current: AdaptiveSelector,
+        current_value: f64,
+        buckets: &[&BucketView],
+        grid: &[f64],
+        apply: impl Fn(AdaptiveSelector, f64) -> AdaptiveSelector,
+    ) -> f64 {
+        let Some(mut best_loss) = self.candidate_loss(&current, buckets) else {
+            // no ready buckets in this family: leave the threshold alone
+            return current_value;
+        };
+        let mut best_value = current_value;
+        for &cand in grid {
+            let sel = apply(current, cand);
+            if let Some(loss) = self.candidate_loss(&sel, buckets) {
+                if loss < best_loss - 1e-12 {
+                    best_loss = loss;
+                    best_value = cand;
+                }
+            }
+        }
+        best_value
+    }
+
+    /// Weighted geometric-mean slowdown of `sel`'s choices vs the best
+    /// measured kernel, over `buckets`. `None` if no bucket is ready.
+    fn candidate_loss(&self, sel: &AdaptiveSelector, buckets: &[&BucketView]) -> Option<f64> {
+        let mut log_sum = 0.0;
+        let mut weight = 0.0;
+        for b in buckets {
+            let measured: Vec<(KernelKind, f64)> = KernelKind::ALL
+                .iter()
+                .filter(|&&k| {
+                    self.metrics.cost_observations(b.bucket, k) >= self.config.min_observations
+                })
+                .filter_map(|&k| self.metrics.cost(b.bucket, k).map(|c| (k, c)))
+                .collect();
+            if measured.len() < 2 {
+                continue; // nothing to trade off yet
+            }
+            let best = measured.iter().map(|&(_, c)| c).fold(f64::INFINITY, f64::min);
+            let worst = measured.iter().map(|&(_, c)| c).fold(0.0, f64::max);
+            let chosen = sel.select(&b.features, b.n);
+            // an unmeasured choice is scored at the worst measured cost —
+            // pessimistic, so refits never chase kernels they know
+            // nothing about
+            let cost = measured
+                .iter()
+                .find(|&&(k, _)| k == chosen)
+                .map(|&(_, c)| c)
+                .unwrap_or(worst);
+            log_sum += b.weight * (cost / best).ln();
+            weight += b.weight;
+        }
+        if weight == 0.0 {
+            None
+        } else {
+            Some((log_sum / weight).exp())
+        }
+    }
+
+    /// Snapshot the bucket centroids as refit inputs.
+    fn bucket_views(&self) -> Vec<BucketView> {
+        let cents = self.centroids.lock().unwrap();
+        (0..COST_BUCKETS)
+            .filter(|&b| cents[b].count > 0.0)
+            .map(|b| {
+                let c = cents[b];
+                let avg = c.sum_avg / c.count;
+                let cv = c.sum_cv / c.count;
+                let nnz = (c.sum_nnz / c.count).round().max(0.0) as usize;
+                BucketView {
+                    bucket: b,
+                    features: MatrixFeatures {
+                        rows: 0,
+                        cols: 0,
+                        nnz,
+                        avg_row: avg,
+                        stdv_row: avg * cv,
+                        cv_row: cv,
+                        max_row: 0,
+                        empty_frac: 0.0,
+                        gini_row: 0.0,
+                    },
+                    n: (c.sum_n / c.count).round().max(1.0) as usize,
+                    weight: c.count,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn features(avg_row: f64, cv_row: f64, nnz: usize) -> MatrixFeatures {
+        MatrixFeatures {
+            rows: 1000,
+            cols: 1000,
+            nnz,
+            avg_row,
+            stdv_row: avg_row * cv_row,
+            cv_row,
+            max_row: 100,
+            empty_frac: 0.0,
+            gini_row: 0.0,
+        }
+    }
+
+    fn selector(config: OnlineConfig) -> OnlineSelector {
+        OnlineSelector::new(
+            AdaptiveSelector::default(),
+            Arc::new(Metrics::default()),
+            config,
+        )
+    }
+
+    #[test]
+    fn buckets_cover_the_index_space() {
+        let mut seen = [false; COST_BUCKETS];
+        for n in [1usize, 32] {
+            for avg in [2.0, 16.0, 64.0] {
+                for cv in [0.2, 2.0] {
+                    let b = feature_bucket(&features(avg, cv, 4000), n);
+                    assert!(b < COST_BUCKETS);
+                    seen[b] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn sibling_flips_balancing_only() {
+        for k in KernelKind::ALL {
+            let s = sibling_kernel(k);
+            assert_ne!(s, k);
+            assert_eq!(s.is_parallel_reduction(), k.is_parallel_reduction());
+            assert_ne!(s.is_balanced(), k.is_balanced());
+            assert_eq!(sibling_kernel(s), k);
+        }
+    }
+
+    #[test]
+    fn exploration_runs_on_cadence() {
+        let sel = selector(OnlineConfig {
+            explore_every: 4,
+            refit_every: 0,
+            min_observations: 1,
+        });
+        let f = features(16.0, 0.3, 16000);
+        let rule = AdaptiveSelector::default().select(&f, 32);
+        let picks: Vec<KernelKind> = (0..8).map(|_| sel.select(&f, 32)).collect();
+        for (i, &p) in picks.iter().enumerate() {
+            if (i + 1) % 4 == 0 {
+                assert_eq!(p, sibling_kernel(rule), "decision {i} explores");
+            } else {
+                assert_eq!(p, rule, "decision {i} exploits");
+            }
+        }
+        assert_eq!(sel.explorations(), 2);
+        assert_eq!(sel.decisions(), 8);
+
+        let off = selector(OnlineConfig {
+            explore_every: 0,
+            refit_every: 0,
+            min_observations: 1,
+        });
+        assert!((0..32).all(|_| off.select(&f, 32) == rule));
+        assert_eq!(off.explorations(), 0);
+    }
+
+    #[test]
+    fn converges_to_the_measured_winner_on_a_skewed_workload() {
+        // Workload: cv = 1.2 sits below the default T_cv = 1.5, so the
+        // rule picks SR-RS — but the measured costs say SR-WB is 5x
+        // faster (a skew the default threshold underestimates).
+        let sel = selector(OnlineConfig {
+            explore_every: 4,
+            refit_every: 32,
+            min_observations: 2,
+        });
+        let f = features(16.0, 1.2, 16000);
+        assert_eq!(sel.current().select(&f, 32), KernelKind::SrRs);
+        for _ in 0..32 {
+            sel.observe(&f, 32, KernelKind::SrRs, Duration::from_micros(500));
+            sel.observe(&f, 32, KernelKind::SrWb, Duration::from_micros(100));
+        }
+        assert!(sel.refits() >= 1, "refit cadence fired");
+        let cur = sel.current();
+        assert!(cur.t_cv <= 1.0, "T_cv dropped below the workload's cv: {cur:?}");
+        assert_eq!(cur.select(&f, 32), KernelKind::SrWb, "choice shifted");
+        // ... and T_avg did not move: no small-N traffic was observed
+        assert_eq!(cur.t_avg, AdaptiveSelector::default().t_avg);
+        assert_eq!(cur.n_threshold, 4, "structural threshold untouched");
+    }
+
+    #[test]
+    fn refit_without_evidence_changes_nothing() {
+        let sel = selector(OnlineConfig::default());
+        assert!(!sel.refit(), "no observations, no movement");
+        assert_eq!(sel.current(), AdaptiveSelector::default());
+        // one kernel alone is not evidence of a trade-off
+        let f = features(4.0, 0.5, 8000);
+        for _ in 0..8 {
+            sel.observe(&f, 1, KernelKind::PrWb, Duration::from_micros(50));
+        }
+        assert!(!sel.refit());
+        assert_eq!(sel.current(), AdaptiveSelector::default());
+        assert!(sel.summary().contains("refits=2"));
+    }
+
+    #[test]
+    fn refit_moves_t_avg_on_small_n_evidence() {
+        // avg_row = 4 < default T_avg = 12 → rule picks PR-WB, but PR-RS
+        // measures 4x faster; T_avg must drop to at most 4.
+        let sel = selector(OnlineConfig {
+            explore_every: 2,
+            refit_every: 0,
+            min_observations: 2,
+        });
+        let f = features(4.0, 0.5, 4000);
+        assert_eq!(sel.current().select(&f, 1), KernelKind::PrWb);
+        for _ in 0..8 {
+            sel.observe(&f, 1, KernelKind::PrWb, Duration::from_micros(400));
+            sel.observe(&f, 1, KernelKind::PrRs, Duration::from_micros(100));
+        }
+        assert!(sel.refit());
+        let cur = sel.current();
+        assert_eq!(cur.select(&f, 1), KernelKind::PrRs, "{cur:?}");
+        assert_eq!(cur.t_cv, AdaptiveSelector::default().t_cv, "SR untouched");
+    }
+}

@@ -1,0 +1,284 @@
+//! Persisted hardware profiles: calibrated selector thresholds as a JSON
+//! artifact a deployment writes once and loads at every startup.
+//!
+//! `ge-spmm calibrate --measured --profile <path>` fits `T_avg`/`T_cv`
+//! against wallclock kernel timings ([`super::measured`]) and writes the
+//! result here; `ge-spmm serve --profile <path>` (or the
+//! `GE_SPMM_PROFILE` environment variable) loads it so the serving
+//! engine boots with thresholds fitted to its own machine instead of the
+//! paper's GPU defaults. See `DESIGN.md` §Measured calibration.
+
+use super::rules::AdaptiveSelector;
+use crate::util::json::{num, obj, s, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Environment variable consulted by [`HardwareProfile::autoload`].
+pub const PROFILE_ENV: &str = "GE_SPMM_PROFILE";
+
+/// Format version written into every profile (bump on breaking changes).
+pub const PROFILE_VERSION: u64 = 1;
+
+/// A calibration outcome persisted for reuse: the fitted thresholds plus
+/// enough provenance to judge whether the fit still applies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HardwareProfile {
+    /// The fitted selector thresholds.
+    pub selector: AdaptiveSelector,
+    /// Geometric-mean slowdown vs the profile-everything oracle at the
+    /// fitted thresholds (1.0 = matches the oracle everywhere).
+    pub mean_loss: f64,
+    /// Where the profile came from: `"measured"` (wallclock) or
+    /// `"simulated"` (`sim::GpuConfig`).
+    pub source: String,
+    /// Name of the backend the timings were taken on (e.g. `"native"`).
+    pub backend: String,
+    /// Number of `(matrix × N)` samples the fit saw.
+    pub samples: usize,
+    /// Dense widths profiled.
+    pub n_values: Vec<usize>,
+    /// Best-effort host label (hostname or `"unknown"`); informational.
+    pub host: String,
+    /// Seconds since the Unix epoch at fit time; informational.
+    pub created_unix: u64,
+}
+
+impl HardwareProfile {
+    /// Assemble a profile from a calibration outcome, stamping host and
+    /// creation time.
+    pub fn new(
+        cal: &super::calibrate::Calibration,
+        source: &str,
+        backend: &str,
+        samples: usize,
+        n_values: &[usize],
+    ) -> Self {
+        Self {
+            selector: cal.selector,
+            mean_loss: cal.mean_loss,
+            source: source.to_string(),
+            backend: backend.to_string(),
+            samples,
+            n_values: n_values.to_vec(),
+            host: crate::bench::record::hostname(),
+            created_unix: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+        }
+    }
+
+    /// Serialize as the on-disk JSON document.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("version", num(PROFILE_VERSION as f64)),
+            (
+                "selector",
+                obj(vec![
+                    ("n_threshold", num(self.selector.n_threshold as f64)),
+                    ("t_avg", num(self.selector.t_avg)),
+                    ("t_cv", num(self.selector.t_cv)),
+                ]),
+            ),
+            ("mean_loss", num(self.mean_loss)),
+            ("source", s(&self.source)),
+            ("backend", s(&self.backend)),
+            ("samples", num(self.samples as f64)),
+            ("n_values", Json::Arr(self.n_values.iter().map(|&n| num(n as f64)).collect())),
+            ("host", s(&self.host)),
+            ("created_unix", num(self.created_unix as f64)),
+        ])
+    }
+
+    /// Parse and validate the on-disk JSON document.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let version = json
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("profile missing 'version'"))?;
+        if version as u64 > PROFILE_VERSION {
+            return Err(anyhow!(
+                "profile version {version} is newer than supported {PROFILE_VERSION}"
+            ));
+        }
+        let sel = json
+            .get("selector")
+            .ok_or_else(|| anyhow!("profile missing 'selector'"))?;
+        let field = |name: &str| -> Result<f64> {
+            sel.get(name)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("profile selector missing '{name}'"))
+        };
+        let selector = AdaptiveSelector {
+            n_threshold: sel
+                .get("n_threshold")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("profile selector missing 'n_threshold'"))?,
+            t_avg: field("t_avg")?,
+            t_cv: field("t_cv")?,
+        };
+        if !(selector.t_avg.is_finite() && selector.t_avg > 0.0)
+            || !(selector.t_cv.is_finite() && selector.t_cv > 0.0)
+        {
+            return Err(anyhow!(
+                "profile thresholds out of range: t_avg={} t_cv={}",
+                selector.t_avg,
+                selector.t_cv
+            ));
+        }
+        // n_threshold is structural (the paper's 4: where VDL's sector
+        // economy runs out) and the online machinery's feature buckets
+        // split at it; a wild value would silently degrade refinement,
+        // so reject anything outside a plausible band instead.
+        if !(1..=64).contains(&selector.n_threshold) {
+            return Err(anyhow!(
+                "profile n_threshold {} out of range (expected 1..=64, structurally 4)",
+                selector.n_threshold
+            ));
+        }
+        Ok(Self {
+            selector,
+            mean_loss: json.get("mean_loss").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            source: json
+                .get("source")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            backend: json
+                .get("backend")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            samples: json.get("samples").and_then(Json::as_usize).unwrap_or(0),
+            n_values: json
+                .get("n_values")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            host: json
+                .get("host")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            created_unix: json.get("created_unix").and_then(Json::as_usize).unwrap_or(0) as u64,
+        })
+    }
+
+    /// Write the profile to `path` (pretty-printed, trailing newline).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+            .with_context(|| format!("writing hardware profile {}", path.display()))
+    }
+
+    /// Load and validate a profile from `path`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading hardware profile {}", path.display()))?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing hardware profile {}: {e}", path.display()))?;
+        Self::from_json(&json).with_context(|| format!("validating {}", path.display()))
+    }
+
+    /// Load the profile named by the `GE_SPMM_PROFILE` environment
+    /// variable, if set. Returns the path alongside the profile for
+    /// logging; a set-but-unloadable path is an error (a deployment that
+    /// points at a profile wants to know it did not take effect).
+    pub fn autoload() -> Result<Option<(std::path::PathBuf, Self)>> {
+        match std::env::var(PROFILE_ENV) {
+            Ok(p) if !p.is_empty() => {
+                let path = std::path::PathBuf::from(p);
+                let profile = Self::load(&path)?;
+                Ok(Some((path, profile)))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// One-line summary for startup logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "thresholds T_avg={} T_cv={} (n_threshold={}, source={}, backend={}, \
+             {} samples, loss {:.3})",
+            self.selector.t_avg,
+            self.selector.t_cv,
+            self.selector.n_threshold,
+            self.source,
+            self.backend,
+            self.samples,
+            self.mean_loss
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selector::calibrate::Calibration;
+
+    fn cal() -> Calibration {
+        Calibration {
+            selector: AdaptiveSelector {
+                n_threshold: 4,
+                t_avg: 16.0,
+                t_cv: 0.5,
+            },
+            mean_loss: 1.07,
+            grid: vec![(16.0, 0.5, 1.07)],
+        }
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let p = HardwareProfile::new(&cal(), "measured", "native", 24, &[1, 4, 32]);
+        let back = HardwareProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("ge_spmm_profile_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.json");
+        let p = HardwareProfile::new(&cal(), "measured", "native", 3, &[1]);
+        p.save(&path).unwrap();
+        let loaded = HardwareProfile::load(&path).unwrap();
+        assert_eq!(loaded, p);
+        assert!(loaded.summary().contains("T_avg=16"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(HardwareProfile::from_json(&Json::parse("{}").unwrap()).is_err());
+        // future version
+        let newer = r#"{"version": 999, "selector": {"n_threshold": 4, "t_avg": 1, "t_cv": 1}}"#;
+        assert!(HardwareProfile::from_json(&Json::parse(newer).unwrap()).is_err());
+        // non-positive / non-finite thresholds
+        for bad in [
+            r#"{"version": 1, "selector": {"n_threshold": 4, "t_avg": 0, "t_cv": 1}}"#,
+            r#"{"version": 1, "selector": {"n_threshold": 4, "t_avg": 12, "t_cv": -1}}"#,
+            r#"{"version": 1, "selector": {"n_threshold": 4, "t_avg": 12}}"#,
+            r#"{"version": 1, "selector": {"n_threshold": 0, "t_avg": 12, "t_cv": 1}}"#,
+            r#"{"version": 1, "selector": {"n_threshold": 4096, "t_avg": 12, "t_cv": 1}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(HardwareProfile::from_json(&j).is_err(), "{bad}");
+        }
+        assert!(HardwareProfile::load(Path::new("/nonexistent/p.json")).is_err());
+    }
+
+    #[test]
+    fn minimal_valid_document_fills_defaults() {
+        let j = Json::parse(
+            r#"{"version": 1, "selector": {"n_threshold": 4, "t_avg": 8.0, "t_cv": 1.5}}"#,
+        )
+        .unwrap();
+        let p = HardwareProfile::from_json(&j).unwrap();
+        assert_eq!(p.selector.t_avg, 8.0);
+        assert_eq!(p.source, "unknown");
+        assert_eq!(p.samples, 0);
+        assert!(p.n_values.is_empty());
+    }
+}

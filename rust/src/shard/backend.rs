@@ -8,7 +8,7 @@
 //! which are disjoint contiguous row blocks of `Y`, so the gather is a
 //! copy with no reduction step.
 //!
-//! Kernel choice has two modes:
+//! Kernel choice has three modes:
 //!
 //! - **fixed** (default): every shard runs the caller's `KernelKind` —
 //!   what ablations and cross-backend agreement tests need;
@@ -17,7 +17,12 @@
 //!   uniform tail shard of one matrix execute different kernels in the
 //!   same request. The caller's kernel becomes a hint that per-shard
 //!   dynamics override; the actual choices are observable through the
-//!   [`Metrics`] shard counters.
+//!   [`Metrics`] shard counters;
+//! - **online** ([`ShardedBackend::online`]): like adaptive, but the
+//!   thresholds come from a shared
+//!   [`OnlineSelector`](crate::selector::OnlineSelector), every shard's
+//!   wallclock is reported back to it, and its periodic refits shift
+//!   later per-shard choices (`DESIGN.md` §Measured calibration).
 
 use super::features::{self, ShardFeatures};
 use super::partition::{PartitionConfig, RowPartition};
@@ -43,11 +48,22 @@ struct ShardedPrepared {
     shards: Vec<PreparedShard>,
 }
 
+/// Per-shard kernel-choice policy (see the module docs).
+enum ShardSelection {
+    /// Every shard runs the caller's kernel.
+    Fixed,
+    /// Per-shard Fig.-4 rules with fixed thresholds.
+    Static(AdaptiveSelector),
+    /// Per-shard rules from a shared online-refined selector; shard
+    /// wallclocks feed back into it.
+    Online(Arc<crate::selector::OnlineSelector>),
+}
+
 /// Row-sharded execution backend over any inner [`SpmmBackend`].
 pub struct ShardedBackend {
     inner: Box<dyn SpmmBackend>,
     config: PartitionConfig,
-    selector: Option<AdaptiveSelector>,
+    selection: ShardSelection,
     metrics: Arc<Metrics>,
 }
 
@@ -73,14 +89,24 @@ impl ShardedBackend {
         Self {
             inner,
             config: PartitionConfig::new(shards),
-            selector: None,
+            selection: ShardSelection::Fixed,
             metrics: Arc::new(Metrics::default()),
         }
     }
 
     /// Enable per-shard adaptive selection with the given rule thresholds.
     pub fn adaptive(mut self, selector: AdaptiveSelector) -> Self {
-        self.selector = Some(selector);
+        self.selection = ShardSelection::Static(selector);
+        self
+    }
+
+    /// Enable per-shard adaptive selection driven by a shared
+    /// [`OnlineSelector`](crate::selector::OnlineSelector): each shard's
+    /// choice comes from the selector's current thresholds (plus its
+    /// exploration budget), and each shard's wallclock is reported back,
+    /// so refits shift later choices under live traffic.
+    pub fn online(mut self, selector: Arc<crate::selector::OnlineSelector>) -> Self {
+        self.selection = ShardSelection::Online(selector);
         self
     }
 
@@ -108,9 +134,14 @@ impl ShardedBackend {
         self.config
     }
 
-    /// The per-shard selector, if adaptive mode is on.
+    /// The per-shard selector thresholds, if adaptive or online mode is
+    /// on (online mode reports its current snapshot).
     pub fn selector(&self) -> Option<AdaptiveSelector> {
-        self.selector
+        match &self.selection {
+            ShardSelection::Fixed => None,
+            ShardSelection::Static(s) => Some(*s),
+            ShardSelection::Online(o) => Some(o.current()),
+        }
     }
 }
 
@@ -150,13 +181,18 @@ impl SpmmBackend for ShardedBackend {
         let prep: &ShardedPrepared = operand.state()?;
         operand.check_operand(x)?;
         let n = x.cols;
-        let kernels: Vec<KernelKind> = match &self.selector {
-            Some(sel) => {
+        let kernels: Vec<KernelKind> = match &self.selection {
+            ShardSelection::Static(sel) => {
                 let feats: Vec<MatrixFeatures> =
                     prep.shards.iter().map(|s| s.features.features).collect();
                 sel.select_shards(&feats, n)
             }
-            None => vec![kernel; prep.shards.len()],
+            ShardSelection::Online(sel) => prep
+                .shards
+                .iter()
+                .map(|s| sel.select(&s.features.features, n))
+                .collect(),
+            ShardSelection::Fixed => vec![kernel; prep.shards.len()],
         };
         // Fan out: one scoped thread per shard (K is small), all sharing
         // the inner backend; each reports its own wallclock so stragglers
@@ -191,6 +227,9 @@ impl SpmmBackend for ShardedBackend {
             let lo = shard.features.span.rows.start * n;
             y.data[lo..lo + exec.y.data.len()].copy_from_slice(&exec.y.data);
             self.metrics.record_shard(k, took);
+            if let ShardSelection::Online(sel) = &self.selection {
+                sel.observe(&shard.features.features, n, k, took);
+            }
             labels.push(exec.artifact);
         }
         Ok(Execution {
@@ -248,6 +287,95 @@ mod tests {
         let counts = backend.metrics().shard_kernel_counts();
         assert_eq!(counts, [0, 0, 1, 1], "sr_rs/sr_wb/pr_rs/pr_wb: {counts:?}");
         assert!(exec.artifact.contains("pr_rs") && exec.artifact.contains("pr_wb"));
+    }
+
+    /// Interleaved moderate skew: every 12th row is long, so a 2-way
+    /// nnz-balanced cut gives both shards cv_row ≈ 1.4 — below the
+    /// default `T_cv = 1.5` (rule says SR-RS at N = 32) but above the
+    /// refit grid's smaller candidates, i.e. a workload whose choice a
+    /// threshold refit *can* flip.
+    fn moderately_skewed_matrix() -> CsrMatrix {
+        let mut coo = CooMatrix::new(96, 256);
+        for r in 0..96 {
+            if r % 12 == 0 {
+                for c in 0..20 {
+                    coo.push(r, (r + 7 * c) % 256, 1.0);
+                }
+            } else {
+                coo.push(r, r % 256, 1.0);
+                coo.push(r, (r + 101) % 256, 1.0);
+            }
+        }
+        CsrMatrix::from_coo(&coo)
+    }
+
+    #[test]
+    fn online_mode_selects_observes_and_shifts() {
+        use crate::selector::{OnlineConfig, OnlineSelector};
+        use std::time::Duration;
+        let metrics = Arc::new(Metrics::default());
+        let online = Arc::new(OnlineSelector::new(
+            AdaptiveSelector::default(),
+            metrics.clone(),
+            OnlineConfig {
+                explore_every: 0, // deterministic choices for this test
+                refit_every: 0,   // refit explicitly below
+                min_observations: 2,
+            },
+        ));
+        let backend = ShardedBackend::new(2).online(online.clone()).with_metrics(metrics.clone());
+        assert_eq!(backend.selector(), Some(AdaptiveSelector::default()));
+
+        let csr = moderately_skewed_matrix();
+        // pin the fixture's premise: both shards sit in the flippable
+        // cv band, and the default rule picks SR-RS for them at N=32
+        let partition = RowPartition::balanced(&csr, &backend.config());
+        let shard_feats = features::extract(&csr, &partition);
+        assert_eq!(shard_feats.len(), 2);
+        for sf in &shard_feats {
+            assert!(
+                sf.features.cv_row > 1.05 && sf.features.cv_row < 1.5,
+                "shard cv {}",
+                sf.features.cv_row
+            );
+            assert_eq!(
+                AdaptiveSelector::default().select(&sf.features, 32),
+                KernelKind::SrRs
+            );
+        }
+
+        let op = backend.prepare(&csr).unwrap();
+        let mut rng = Xoshiro256::seeded(405);
+        let x = DenseMatrix::random(256, 32, 1.0, &mut rng);
+        let mut want = DenseMatrix::zeros(csr.rows, 32);
+        spmm_reference(&csr, &x, &mut want);
+
+        // Baseline request: both shards run the rule choice SR-RS, and
+        // each shard execution also lands in the online selector.
+        let exec = backend.execute(&op, &x, KernelKind::PrRs).unwrap();
+        assert_close(&exec.y.data, &want.data, 1e-4, 1e-4).unwrap();
+        assert_eq!(metrics.shard_kernel_counts(), [2, 0, 0, 0]);
+        assert_eq!(online.observations(), 2);
+        assert!(metrics.total_cost_observations() >= 2);
+
+        // Teach the selector that SR-WB is far cheaper on this bucket
+        // (as it would be on hardware where this much skew already
+        // starves row-split), then refit: T_cv drops and the per-shard
+        // choices flip to SR-WB on the very next request.
+        let sf = shard_feats[0].features;
+        for _ in 0..6 {
+            online.observe(&sf, 32, KernelKind::SrRs, Duration::from_millis(5));
+            online.observe(&sf, 32, KernelKind::SrWb, Duration::from_micros(50));
+        }
+        assert!(online.refit(), "evidence moves T_cv");
+        assert!(online.current().t_cv <= 1.0, "{:?}", online.current());
+        let exec = backend.execute(&op, &x, KernelKind::PrRs).unwrap();
+        assert_close(&exec.y.data, &want.data, 1e-4, 1e-4).unwrap();
+        assert_eq!(
+            metrics.shard_kernel_counts(),
+            [2, 2, 0, 0],
+            "both shards now pick SR-WB"
+        );
     }
 
     #[test]

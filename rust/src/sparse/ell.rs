@@ -6,6 +6,7 @@
 //! `(rows_padded, width)` pair of value/index planes.
 
 use super::csr::CsrMatrix;
+use super::DenseMatrix;
 
 /// Padded ELLPACK layout.
 ///
@@ -75,6 +76,31 @@ impl EllMatrix {
             self.padded_len() as f64
         } else {
             self.padded_len() as f64 / nnz as f64
+        }
+    }
+
+    /// Row-split SpMM over the padded planes, gathering only the
+    /// `row_nnz[r]` real slots of each row.
+    ///
+    /// This is the bounding convention every ELL consumer must follow: a
+    /// full-width multiply relies on padded slots (value 0, sentinel
+    /// column 0) being harmless, but `0.0 * NaN = NaN`, so one non-finite
+    /// entry in dense row 0 would corrupt every output row with padding.
+    pub fn spmm_bounded(&self, x: &DenseMatrix, y: &mut DenseMatrix) {
+        assert_eq!(self.cols, x.rows, "inner dimension mismatch");
+        assert_eq!((y.rows, y.cols), (self.rows, x.cols), "output shape mismatch");
+        let n = x.cols;
+        y.data.fill(0.0);
+        for r in 0..self.rows {
+            let base = r * self.width;
+            let out = &mut y.data[r * n..(r + 1) * n];
+            for k in 0..self.row_nnz[r] as usize {
+                let v = self.values[base + k];
+                let xrow = x.row(self.col_idx[base + k] as usize);
+                for j in 0..n {
+                    out[j] += v * xrow[j];
+                }
+            }
         }
     }
 
@@ -155,6 +181,55 @@ mod tests {
         coo.push(1, 0, 1.0);
         let e = EllMatrix::from_csr(&CsrMatrix::from_coo(&coo), 1, 1);
         assert!(e.padding_ratio() > 10.0, "ratio {}", e.padding_ratio());
+    }
+
+    #[test]
+    fn spmm_bounded_matches_dense_reference() {
+        run_prop("ell spmm_bounded vs reference", 30, |g| {
+            let rows = g.dim();
+            let cols = g.dim();
+            let n = *g.choose(&[1usize, 3, 8]);
+            let coo = CooMatrix::random_uniform(rows, cols, 0.3, g.rng());
+            let csr = CsrMatrix::from_coo(&coo);
+            let ell = EllMatrix::from_csr(&csr, 4, 8);
+            let x = DenseMatrix::from_vec(cols, n, g.vec_f32(cols * n));
+            let mut want = DenseMatrix::zeros(rows, n);
+            crate::kernels::dense::spmm_reference(&csr, &x, &mut want);
+            let mut got = DenseMatrix::zeros(rows, n);
+            ell.spmm_bounded(&x, &mut got);
+            crate::util::proptest::assert_close(&got.data, &want.data, 1e-5, 1e-5)
+        });
+    }
+
+    #[test]
+    fn padding_never_gathers_nan() {
+        // Row 1 is empty and row 2 is shorter than the padded width, so
+        // both have padded slots pointing at sentinel column 0. A NaN in
+        // dense row 0 must only reach output rows that really reference
+        // column 0 (here: none).
+        let mut coo = CooMatrix::new(3, 4);
+        coo.push(0, 1, 1.0);
+        coo.push(0, 3, 2.0);
+        coo.push(2, 2, 3.0);
+        let ell = EllMatrix::from_csr(&CsrMatrix::from_coo(&coo), 4, 1);
+        assert!(ell.width > 1, "fixture needs padded slots");
+        let mut x = DenseMatrix::from_vec(
+            4,
+            2,
+            vec![f32::NAN, f32::INFINITY, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        );
+        let mut y = DenseMatrix::zeros(3, 2);
+        ell.spmm_bounded(&x, &mut y);
+        assert!(y.data.iter().all(|v| v.is_finite()), "{:?}", y.data);
+        assert_eq!(y.row(1), &[0.0, 0.0], "empty row stays zero");
+        // ... and a row that does reference column 0 still propagates it
+        x.data[0] = f32::NAN;
+        let mut coo2 = CooMatrix::new(1, 4);
+        coo2.push(0, 0, 1.0);
+        let ell2 = EllMatrix::from_csr(&CsrMatrix::from_coo(&coo2), 4, 1);
+        let mut y2 = DenseMatrix::zeros(1, 2);
+        ell2.spmm_bounded(&x, &mut y2);
+        assert!(y2.at(0, 0).is_nan());
     }
 
     #[test]

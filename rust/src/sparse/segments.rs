@@ -30,10 +30,15 @@ pub struct SegmentedMatrix {
 
 impl SegmentedMatrix {
     /// Cut the CSR non-zero stream into segments of `seg_len` elements.
+    ///
+    /// An empty stream (`nnz == 0`) yields zero segments: fabricating an
+    /// all-padding segment would point its row indices at row 0, and the
+    /// workload-balanced kernels would then carry a (zero) partial into
+    /// `y[0]` — out of bounds when the matrix also has zero rows.
     pub fn from_csr(csr: &CsrMatrix, seg_len: usize) -> Self {
         assert!(seg_len > 0, "segment length must be positive");
         let nnz = csr.nnz();
-        let num_segments = nnz.div_ceil(seg_len).max(1);
+        let num_segments = nnz.div_ceil(seg_len);
         let padded = num_segments * seg_len;
         let mut values = Vec::with_capacity(padded);
         let mut col_idx = Vec::with_capacity(padded);
@@ -46,6 +51,8 @@ impl SegmentedMatrix {
                 row_idx.push(r as u32);
             }
         }
+        // `padded == 0` when the stream is empty, so the fallback pad
+        // indices are never materialized.
         let (pad_row, pad_col) = if nnz > 0 {
             (row_idx[nnz - 1], col_idx[nnz - 1])
         } else {
@@ -175,12 +182,37 @@ mod tests {
     }
 
     #[test]
-    fn empty_matrix_one_padded_segment() {
-        let csr = CsrMatrix::from_coo(&CooMatrix::new(3, 3));
-        let m = SegmentedMatrix::from_csr(&csr, 8);
-        assert_eq!(m.num_segments, 1);
-        assert_eq!(m.nnz, 0);
-        assert_eq!(m.to_dense(), vec![0.0; 9]);
+    fn empty_matrix_has_no_segments() {
+        // Regression: a fabricated all-padding segment used to point at
+        // row 0, making the WB kernels carry a partial into y[0].
+        for (rows, cols) in [(3usize, 3usize), (0, 7), (0, 0)] {
+            let csr = CsrMatrix::from_coo(&CooMatrix::new(rows, cols));
+            let m = SegmentedMatrix::from_csr(&csr, 8);
+            assert_eq!(m.num_segments, 0, "{rows}x{cols}");
+            assert_eq!(m.nnz, 0);
+            assert!(m.values.is_empty() && m.row_idx.is_empty() && m.col_idx.is_empty());
+            assert_eq!(m.to_dense(), vec![0.0; rows * cols]);
+        }
+    }
+
+    #[test]
+    fn every_segment_contains_a_real_element() {
+        // num_segments = ceil(nnz / seg_len) means s * seg_len < nnz for
+        // every segment s — the invariant the WB kernels' first-row carry
+        // logic relies on (a worker's first row index is always real).
+        run_prop("segments all real", 30, |g| {
+            let rows = g.dim();
+            let coo = CooMatrix::random_uniform(rows, 16, 0.15, g.rng());
+            let csr = CsrMatrix::from_coo(&coo);
+            let seg_len = *g.choose(&[1usize, 4, 32]);
+            let seg = SegmentedMatrix::from_csr(&csr, seg_len);
+            for s in 0..seg.num_segments {
+                if s * seg_len >= seg.nnz {
+                    return Err(format!("segment {s} is all padding"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

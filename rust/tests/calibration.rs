@@ -1,0 +1,191 @@
+//! End-to-end measured calibration (ISSUE 4 tentpole): wallclock
+//! profiling → threshold fit → persisted `HardwareProfile` → a serving
+//! engine booted from it — plus the online selector demonstrably
+//! shifting kernel choice under a skewed synthetic workload, observed
+//! through the `Metrics` kernel/shard counters.
+
+use ge_spmm::backend::NativeBackend;
+use ge_spmm::coordinator::SpmmEngine;
+use ge_spmm::features::MatrixFeatures;
+use ge_spmm::kernels::dense::spmm_reference;
+use ge_spmm::kernels::KernelKind;
+use ge_spmm::selector::measured::{collect_samples, MeasureConfig};
+use ge_spmm::selector::{calibrate, AdaptiveSelector, HardwareProfile, OnlineConfig};
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix};
+use ge_spmm::util::prng::Xoshiro256;
+use std::time::Duration;
+
+fn tiny_cfg() -> MeasureConfig {
+    MeasureConfig {
+        warmup: Duration::from_micros(200),
+        measure: Duration::from_millis(2),
+        min_iters: 2,
+        max_iters: 16,
+        seed: 5,
+    }
+}
+
+fn suite() -> Vec<CsrMatrix> {
+    let mut rng = Xoshiro256::seeded(61);
+    vec![
+        CsrMatrix::from_coo(&CooMatrix::random_uniform(200, 160, 0.05, &mut rng)),
+        CsrMatrix::from_coo(&CooMatrix::random_uniform(120, 120, 0.15, &mut rng)),
+    ]
+}
+
+#[test]
+fn measured_calibration_to_profile_to_serving_engine() {
+    // 1. wallclock profiles through the real backend
+    let backend = NativeBackend::serial();
+    let samples = collect_samples(&suite(), &[1, 16], &backend, &tiny_cfg()).unwrap();
+    assert_eq!(samples.len(), 4);
+    for s in &samples {
+        for k in KernelKind::ALL {
+            assert!(s.profile.time_of(k) > 0.0);
+        }
+    }
+    // 2. the unchanged grid search fits thresholds on them
+    let cal = calibrate::calibrate(&samples);
+    assert!(cal.mean_loss >= 1.0);
+    assert!(
+        cal.mean_loss <= calibrate::selector_loss(&AdaptiveSelector::default(), &samples) + 1e-12
+    );
+    // 3. persist and reload as a hardware profile
+    let dir = std::env::temp_dir().join("ge_spmm_calibration_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("profile.json");
+    HardwareProfile::new(&cal, "measured", "native", samples.len(), &[1, 16])
+        .save(&path)
+        .unwrap();
+    let loaded = HardwareProfile::load(&path).unwrap();
+    assert_eq!(loaded.selector, cal.selector);
+    assert_eq!(loaded.source, "measured");
+    assert_eq!(loaded.samples, 4);
+    std::fs::remove_file(&path).unwrap();
+    // 4. a serving engine boots with the fitted thresholds at both grains
+    let engine = SpmmEngine::serving_with_selector(16 << 20, 1_000_000, 2, loaded.selector);
+    assert_eq!(engine.selector, loaded.selector);
+    let a = suite().remove(0);
+    let h = engine.register(a.clone()).unwrap();
+    let mut rng = Xoshiro256::seeded(62);
+    let x = DenseMatrix::random(a.cols, 16, 1.0, &mut rng);
+    let resp = engine.spmm(h, &x).unwrap();
+    assert_eq!(
+        resp.kernel,
+        loaded.selector.select(&engine.features(h).unwrap(), 16)
+    );
+    let mut want = DenseMatrix::zeros(a.rows, 16);
+    spmm_reference(&a, &x, &mut want);
+    for (got, exp) in resp.y.data.iter().zip(&want.data) {
+        assert!((got - exp).abs() <= 1e-4 + 1e-4 * exp.abs());
+    }
+}
+
+/// Moderately skewed synthetic workload (cv_row ≈ 1.4, between the
+/// refit grid's 1.0 candidate and the default T_cv = 1.5): the default
+/// rule picks SR-RS at N = 32, and only an online refit can flip it.
+fn skewed_matrix(rows: usize) -> CsrMatrix {
+    let mut coo = CooMatrix::new(rows, 256);
+    for r in 0..rows {
+        if r % 12 == 0 {
+            for c in 0..20 {
+                coo.push(r, (r + 7 * c) % 256, 1.0);
+            }
+        } else {
+            coo.push(r, r % 256, 1.0);
+            coo.push(r, (r + 101) % 256, 1.0);
+        }
+    }
+    CsrMatrix::from_coo(&coo)
+}
+
+#[test]
+fn online_selector_shifts_kernel_choice_under_skewed_traffic() {
+    let a = skewed_matrix(96);
+    let f = MatrixFeatures::of(&a);
+    assert!(f.cv_row > 1.05 && f.cv_row < 1.5, "cv {}", f.cv_row);
+
+    // threshold 1 => requests take the sharded route; per-shard choices
+    // land in the shard kernel counters
+    let engine = SpmmEngine::serving_online(
+        16 << 20,
+        1,
+        2,
+        AdaptiveSelector::default(),
+        OnlineConfig {
+            explore_every: 0, // keep the baseline phase deterministic
+            refit_every: 8,   // refit quickly under the injected stream
+            min_observations: 2,
+        },
+    );
+    let online = engine.online().unwrap();
+    let h = engine.register(a.clone()).unwrap();
+    let mut rng = Xoshiro256::seeded(63);
+    let x = DenseMatrix::random(256, 32, 1.0, &mut rng);
+
+    // Phase 1: default thresholds — every shard runs SR-RS.
+    for _ in 0..3 {
+        engine.spmm(h, &x).unwrap();
+    }
+    let baseline = engine.metrics.shard_kernel_counts();
+    assert_eq!(baseline[0], 6, "3 requests x 2 shards, all SR-RS: {baseline:?}");
+    assert_eq!(baseline[1], 0);
+
+    // Phase 2: the live stream reveals SR-WB is much cheaper for this
+    // bucket (injected observations stand in for hardware where that is
+    // true); the refit cadence fires within the stream.
+    for _ in 0..8 {
+        online.observe(&f, 32, KernelKind::SrRs, Duration::from_millis(6));
+        online.observe(&f, 32, KernelKind::SrWb, Duration::from_micros(60));
+    }
+    assert!(online.refits() >= 1, "{}", online.summary());
+    assert!(online.current().t_cv <= 1.0, "{}", online.summary());
+
+    // Phase 3: the same traffic now runs SR-WB on every shard.
+    for _ in 0..3 {
+        let resp = engine.spmm(h, &x).unwrap();
+        // results stay correct across the switch
+        let mut want = DenseMatrix::zeros(a.rows, 32);
+        spmm_reference(&a, &x, &mut want);
+        for (got, exp) in resp.y.data.iter().zip(&want.data) {
+            assert!((got - exp).abs() <= 1e-4 + 1e-4 * exp.abs());
+        }
+    }
+    let shifted = engine.metrics.shard_kernel_counts();
+    assert_eq!(shifted[0], baseline[0], "no further SR-RS shards: {shifted:?}");
+    assert_eq!(shifted[1], 6, "all post-refit shards run SR-WB: {shifted:?}");
+}
+
+#[test]
+fn exploration_feeds_both_siblings_through_live_traffic() {
+    // With aggressive exploration every other request runs the sibling
+    // kernel, so the cost table fills for both designs with no injected
+    // observations at all — the precondition for honest refits.
+    let a = skewed_matrix(48);
+    let engine = SpmmEngine::serving_online(
+        16 << 20,
+        usize::MAX, // unsharded route: request-level decisions
+        1,
+        AdaptiveSelector::default(),
+        OnlineConfig {
+            explore_every: 2,
+            refit_every: 0,
+            min_observations: 1,
+        },
+    );
+    let online = engine.online().unwrap();
+    let h = engine.register(a).unwrap();
+    let mut rng = Xoshiro256::seeded(64);
+    let x = DenseMatrix::random(256, 32, 1.0, &mut rng);
+    for _ in 0..6 {
+        engine.spmm(h, &x).unwrap();
+    }
+    let counts = engine.metrics.kernel_counts();
+    assert_eq!(counts[0], 3, "rule choice SR-RS: {counts:?}");
+    assert_eq!(counts[1], 3, "explored sibling SR-WB: {counts:?}");
+    assert_eq!(online.explorations(), 3);
+    let metrics = online.metrics();
+    let bucket = ge_spmm::selector::online::feature_bucket(&engine.features(h).unwrap(), 32);
+    assert!(metrics.cost_observations(bucket, KernelKind::SrRs) >= 3);
+    assert!(metrics.cost_observations(bucket, KernelKind::SrWb) >= 3);
+}

@@ -1,0 +1,202 @@
+//! Degenerate-input and padding-poisoning regressions across all four
+//! kernel designs (ISSUE 4 satellites):
+//!
+//! - `nnz == 0` matrices used to fabricate an all-padding segment whose
+//!   row indices pointed at row 0, making the workload-balanced kernels
+//!   carry a partial into `y[0]` — an out-of-bounds panic when
+//!   `rows == 0` as well;
+//! - format padding (ELL sentinel column 0, segment trailing-index
+//!   repeats) must never be multiplied against X: the padded value is
+//!   0.0, but `0.0 * NaN = NaN`, so a single non-finite dense entry
+//!   would otherwise corrupt unrelated output rows.
+
+use ge_spmm::backend::{NativeBackend, SpmmBackend};
+use ge_spmm::kernels::dense::spmm_reference;
+use ge_spmm::kernels::{pr_rs, pr_wb, sr_rs, sr_wb, KernelKind, WARP};
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix, EllMatrix, SegmentedMatrix};
+use ge_spmm::util::threadpool::ThreadPool;
+
+/// Run one kernel directly (the code path `NativeBackend` guards with a
+/// rows/cols check — direct callers get no such guard).
+fn run_kernel(
+    kind: KernelKind,
+    a: &CsrMatrix,
+    x: &DenseMatrix,
+    y: &mut DenseMatrix,
+    workers: usize,
+) {
+    let pool = ThreadPool::new(workers);
+    let seg = SegmentedMatrix::from_csr(a, WARP);
+    match kind {
+        KernelKind::SrRs => sr_rs::spmm(a, x, y, &pool),
+        KernelKind::SrWb => sr_wb::spmm(&seg, x, y, &pool),
+        KernelKind::PrRs => pr_rs::spmm(a, x, y, &pool),
+        KernelKind::PrWb => pr_wb::spmm(&seg, x, y, &pool),
+    }
+}
+
+#[test]
+fn nnz_zero_yields_zero_output_on_all_kernels() {
+    // rows > 0, nnz == 0: every kernel must produce zeros (and not panic
+    // on the previously-fabricated padding segment)
+    let a = CsrMatrix::from_coo(&CooMatrix::new(5, 7));
+    let x = DenseMatrix::from_vec(7, 3, vec![1.5; 21]);
+    for kind in KernelKind::ALL {
+        for workers in [1usize, 4] {
+            let mut y = DenseMatrix::from_vec(5, 3, vec![9.0; 15]);
+            run_kernel(kind, &a, &x, &mut y, workers);
+            assert_eq!(y.data, vec![0.0; 15], "{kind:?} workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn rows_zero_is_a_no_op_on_all_kernels() {
+    // rows == 0 (so nnz == 0 too): regression for the WB kernels' carry
+    // into y[0..n], which is out of bounds here
+    let a = CsrMatrix::from_coo(&CooMatrix::new(0, 7));
+    let x = DenseMatrix::from_vec(7, 4, vec![2.0; 28]);
+    for kind in KernelKind::ALL {
+        for workers in [1usize, 3] {
+            let mut y = DenseMatrix::zeros(0, 4);
+            run_kernel(kind, &a, &x, &mut y, workers);
+            assert!(y.data.is_empty(), "{kind:?} workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn degenerate_shapes_through_the_backend() {
+    let backend = NativeBackend::default();
+    for (rows, cols) in [(0usize, 4usize), (4, 0), (0, 0), (3, 3)] {
+        let a = CsrMatrix::from_coo(&CooMatrix::new(rows, cols));
+        let op = backend.prepare(&a).unwrap();
+        let x = DenseMatrix::zeros(cols, 2);
+        for kind in KernelKind::ALL {
+            let exec = backend.execute(&op, &x, kind).unwrap();
+            assert_eq!((exec.y.rows, exec.y.cols), (rows, 2), "{rows}x{cols} {kind:?}");
+            assert!(exec.y.data.iter().all(|&v| v == 0.0));
+        }
+    }
+}
+
+/// Fixture: rows of very different lengths so the segmented layout has
+/// trailing padding and the ELL layout pads every short row; no entry
+/// references column 0, where X carries a NaN and an Inf.
+fn nan_fixture() -> (CsrMatrix, DenseMatrix) {
+    let mut coo = CooMatrix::new(40, 50);
+    // one long row (crosses segment boundaries), many short ones
+    for c in 1..45 {
+        coo.push(7, c, 0.25 * c as f32);
+    }
+    for r in 0..40 {
+        if r != 7 {
+            coo.push(r, 1 + (r * 3) % 49, 1.0 + r as f32);
+        }
+    }
+    let a = CsrMatrix::from_coo(&coo);
+    let mut x = DenseMatrix::from_vec(50, 3, (0..150).map(|i| (i % 11) as f32 * 0.5).collect());
+    // poison dense row 0 — reachable only through padding indices
+    x.data[0] = f32::NAN;
+    x.data[1] = f32::INFINITY;
+    x.data[2] = f32::NEG_INFINITY;
+    (a, x)
+}
+
+#[test]
+fn padding_cannot_poison_outputs_on_any_kernel() {
+    let (a, x) = nan_fixture();
+    // the true product is finite everywhere: no real entry touches col 0
+    let mut want = DenseMatrix::zeros(40, 3);
+    spmm_reference(&a, &x, &mut want);
+    assert!(want.data.iter().all(|v| v.is_finite()), "fixture broken");
+    for kind in KernelKind::ALL {
+        for workers in [1usize, 4] {
+            let mut y = DenseMatrix::zeros(40, 3);
+            run_kernel(kind, &a, &x, &mut y, workers);
+            assert!(
+                y.data.iter().all(|v| v.is_finite()),
+                "{kind:?} workers={workers} leaked non-finite padding: {:?}",
+                y.data.iter().take(6).collect::<Vec<_>>()
+            );
+            for (i, (got, exp)) in y.data.iter().zip(&want.data).enumerate() {
+                assert!(
+                    (got - exp).abs() <= 1e-4 + 1e-4 * exp.abs(),
+                    "{kind:?} workers={workers} [{i}]: {got} vs {exp}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn trailing_pad_column_poison_stays_local() {
+    // Segment padding repeats the *last* real (row, col); poison that
+    // column's dense row. Rows that genuinely reference the column go
+    // NaN (reference agrees); every other row must stay finite — i.e.
+    // padded slots contribute nothing, not even 0.0 * NaN.
+    let (a, mut x) = nan_fixture();
+    let seg = SegmentedMatrix::from_csr(&a, WARP);
+    let pad_col = seg.col_idx[seg.nnz - 1] as usize;
+    x.data[pad_col * 3..pad_col * 3 + 3].fill(f32::NAN);
+    let mut want = DenseMatrix::zeros(40, 3);
+    spmm_reference(&a, &x, &mut want);
+    assert!(want.data.iter().any(|v| v.is_nan()), "fixture refs pad col");
+    assert!(want.data.iter().any(|v| v.is_finite()), "fixture has clean rows");
+    for kind in KernelKind::ALL {
+        let mut y = DenseMatrix::zeros(40, 3);
+        run_kernel(kind, &a, &x, &mut y, 4);
+        for (i, (got, exp)) in y.data.iter().zip(&want.data).enumerate() {
+            if exp.is_nan() {
+                assert!(got.is_nan(), "{kind:?} [{i}]: dropped a real NaN");
+            } else {
+                assert!(
+                    (got - exp).abs() <= 1e-4 + 1e-4 * exp.abs(),
+                    "{kind:?} [{i}]: {got} vs {exp}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn real_nan_entries_still_propagate() {
+    // A matrix that *does* reference the poisoned column must propagate
+    // the NaN — bounding by nnz must not silently drop real work.
+    let mut coo = CooMatrix::new(3, 4);
+    coo.push(1, 0, 1.0); // touches poisoned column 0
+    coo.push(2, 3, 2.0);
+    let a = CsrMatrix::from_coo(&coo);
+    let mut x = DenseMatrix::from_vec(4, 2, vec![1.0; 8]);
+    x.data[0] = f32::NAN;
+    for kind in KernelKind::ALL {
+        let mut y = DenseMatrix::zeros(3, 2);
+        run_kernel(kind, &a, &x, &mut y, 2);
+        assert!(y.at(1, 0).is_nan(), "{kind:?} dropped a real NaN");
+        assert_eq!(y.at(2, 0), 2.0, "{kind:?}");
+        assert_eq!(y.row(0), &[0.0, 0.0], "{kind:?}");
+    }
+}
+
+#[test]
+fn segment_and_ell_padding_layouts_are_inert() {
+    let (a, x) = nan_fixture();
+    // segments: padded slots exist and repeat the last real (row, col)
+    let seg = SegmentedMatrix::from_csr(&a, WARP);
+    assert!(seg.num_segments * seg.seg_len > seg.nnz, "fixture has padding");
+    for i in seg.nnz..seg.num_segments * seg.seg_len {
+        assert_eq!(seg.values[i], 0.0);
+        assert_eq!(seg.row_idx[i], seg.row_idx[seg.nnz - 1]);
+    }
+    // ELL: bounded gather stays finite despite sentinel column 0
+    let ell = EllMatrix::from_csr(&a, 1, 1);
+    assert!(ell.padding_ratio() > 1.0, "fixture has padding");
+    let mut y = DenseMatrix::zeros(40, 3);
+    ell.spmm_bounded(&x, &mut y);
+    assert!(y.data.iter().all(|v| v.is_finite()));
+    let mut want = DenseMatrix::zeros(40, 3);
+    spmm_reference(&a, &x, &mut want);
+    for (got, exp) in y.data.iter().zip(&want.data) {
+        assert!((got - exp).abs() <= 1e-4 + 1e-4 * exp.abs());
+    }
+}
