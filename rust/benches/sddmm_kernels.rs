@@ -1,0 +1,75 @@
+//! Wallclock benchmark of the native SDDMM kernels — the second sparse
+//! op's 2×2 design space measured on this machine, the SDDMM companion
+//! of `native_kernels`. Feeds DESIGN.md §SDDMM (recording convention in
+//! BENCHMARKS.md; supports `--json <path>` self-recording).
+
+use ge_spmm::bench::harness::bench_fn;
+use ge_spmm::bench::record::{json_path_arg, BenchRecord};
+use ge_spmm::gen::Collection;
+use ge_spmm::kernels::{KernelKind, WARP};
+use ge_spmm::sddmm;
+use ge_spmm::sparse::{DenseMatrix, SegmentedMatrix};
+use ge_spmm::util::json::{num, obj, Json};
+use ge_spmm::util::prng::Xoshiro256;
+use ge_spmm::util::threadpool::ThreadPool;
+
+fn main() {
+    println!("== native SDDMM kernel wallclock (this machine) ==");
+    let pool = ThreadPool::default_parallel();
+    println!("threads: {}", pool.workers());
+    let d_values = [4usize, 16, 32, 128];
+    let mut record = json_path_arg().map(|path| {
+        (
+            path,
+            BenchRecord::new("sddmm_kernels").with_config(obj(vec![
+                ("threads", num(pool.workers() as f64)),
+                (
+                    "d_values",
+                    Json::Arr(d_values.iter().map(|&d| num(d as f64)).collect()),
+                ),
+            ])),
+        )
+    });
+    let specs: Vec<_> = ["uniform_s12_e8", "rmat_s12_e8_g500", "band_n16384_b8"]
+        .iter()
+        .filter_map(|n| Collection::suite().into_iter().find(|s| &s.name == n))
+        .collect();
+    for spec in specs {
+        let csr = spec.build();
+        // Same prepared layouts NativeBackend builds, hand-held so the
+        // timed region is the kernel alone (no output allocation).
+        let segments = SegmentedMatrix::from_csr(&csr, WARP);
+        println!(
+            "\n--- {} ({}x{}, nnz {}) ---",
+            spec.name,
+            csr.rows,
+            csr.cols,
+            csr.nnz()
+        );
+        for d in d_values {
+            let mut rng = Xoshiro256::seeded(7);
+            let u = DenseMatrix::random(csr.rows, d, 1.0, &mut rng);
+            let v = DenseMatrix::random(csr.cols, d, 1.0, &mut rng);
+            let mut out = vec![0f32; csr.nnz()];
+            let flops = 2.0 * csr.nnz() as f64 * d as f64;
+            for kind in KernelKind::ALL {
+                let s = bench_fn(&format!("{} d={d} {}", spec.name, kind.label()), || {
+                    sddmm::run(kind, &csr, &segments, &u, &v, &mut out, &pool);
+                });
+                println!("{}  ({:.2} GFLOP/s)", s.line(), flops / s.median_s() / 1e9);
+                if let Some((_, rec)) = record.as_mut() {
+                    rec.push_latency(&s);
+                    rec.push_value(
+                        &format!("{} throughput", s.name),
+                        flops / s.median_s() / 1e9,
+                        "GFLOP/s",
+                    );
+                }
+            }
+        }
+    }
+    if let Some((path, rec)) = record {
+        rec.save(&path).expect("writing bench record");
+        println!("wrote {}", path.display());
+    }
+}

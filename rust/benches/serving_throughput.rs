@@ -78,12 +78,12 @@ fn run_traffic(workers: usize) -> (u64, Duration) {
                     let mut replies = Vec::with_capacity(REQUESTS_PER_PRODUCER);
                     for r in 0..REQUESTS_PER_PRODUCER {
                         let (rtx, rrx) = mpsc::channel();
-                        server.submit(Request {
-                            matrix: handles[r % handles.len()],
-                            x: DenseMatrix::random(ROWS, WIDTH, 1.0, &mut rng),
-                            tag: (p * REQUESTS_PER_PRODUCER + r) as u64,
-                            reply: rtx,
-                        });
+                        server.submit(Request::spmm(
+                            handles[r % handles.len()],
+                            DenseMatrix::random(ROWS, WIDTH, 1.0, &mut rng),
+                            (p * REQUESTS_PER_PRODUCER + r) as u64,
+                            rtx,
+                        ));
                         replies.push(rrx);
                     }
                     replies

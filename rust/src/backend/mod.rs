@@ -109,6 +109,25 @@ impl PreparedOperand {
         }
         Ok(())
     }
+
+    /// Validate SDDMM dense operands against this matrix: `U` row-aligns
+    /// with `A`'s rows, `V` with `A`'s columns, and both share one dot
+    /// width. The SDDMM counterpart of [`PreparedOperand::check_operand`].
+    pub fn check_sddmm_operands(&self, u: &DenseMatrix, v: &DenseMatrix) -> Result<()> {
+        if u.rows != self.rows || v.rows != self.cols || u.cols != v.cols {
+            return Err(anyhow!(
+                "sddmm operand mismatch: A is {}x{}, U is {}x{}, V is {}x{} \
+                 (need U rows = A rows, V rows = A cols, U cols = V cols)",
+                self.rows,
+                self.cols,
+                u.rows,
+                u.cols,
+                v.rows,
+                v.cols
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// Result of one backend execution.
@@ -121,7 +140,27 @@ pub struct Execution {
     pub artifact: String,
 }
 
-/// An SpMM execution backend: prepare once, execute many.
+/// Result of one backend SDDMM execution: one sampled value per non-zero
+/// of `A`, in CSR stream order (the pattern itself lives with the caller,
+/// who registered the matrix).
+#[derive(Clone, Debug)]
+pub struct SddmmExecution {
+    /// `values[k] = A.values[k] * (U[r_k] · V[c_k])`.
+    pub values: Vec<f32>,
+    /// The executed unit, `native/sddmm/<kernel>`-style.
+    pub artifact: String,
+}
+
+/// A sparse-op execution backend: prepare once, execute many.
+///
+/// One prepared operand serves **both ops** — SpMM (`Y = A·X`, the
+/// paper's op) via [`SpmmBackend::execute`], and SDDMM
+/// (`S = sample(A, U·Vᵀ)`, its FusedMM companion) via
+/// [`SpmmBackend::execute_sddmm`] — so the serving layer's
+/// prepared-matrix cache amortizes preparation across op-mixed traffic
+/// on the same graph. SDDMM has a default error implementation because
+/// not every backend grows the second op at once (the PJRT artifact
+/// library is SpMM-only); the native compositions all override it.
 ///
 /// `Send + Sync` so one engine can be shared across a server thread and
 /// request producers (the deployment topology in `coordinator::server`).
@@ -142,6 +181,22 @@ pub trait SpmmBackend: Send + Sync {
         x: &DenseMatrix,
         kernel: KernelKind,
     ) -> Result<Execution>;
+
+    /// Execute `S = sample(A, U·Vᵀ)` with the given kernel design.
+    /// Operand shapes have been validated via
+    /// [`PreparedOperand::check_sddmm_operands`] by the caller, but a
+    /// backend is free to re-check. Backends without an SDDMM path keep
+    /// this default and report themselves unsupported.
+    fn execute_sddmm(
+        &self,
+        operand: &PreparedOperand,
+        u: &DenseMatrix,
+        v: &DenseMatrix,
+        kernel: KernelKind,
+    ) -> Result<SddmmExecution> {
+        let _ = (operand, u, v, kernel);
+        Err(anyhow!("backend '{}' does not implement SDDMM", self.name()))
+    }
 
     /// Dense widths this backend routes natively, ascending, or `None` if
     /// any width is accepted (no fixed-shape artifact library).
@@ -170,5 +225,54 @@ mod tests {
         assert!(op.check_operand(&DenseMatrix::zeros(3, 5)).is_ok());
         let err = op.check_operand(&DenseMatrix::zeros(2, 5)).unwrap_err();
         assert!(err.to_string().contains("dimension mismatch"));
+    }
+
+    #[test]
+    fn check_sddmm_operands_validates_all_three_constraints() {
+        let op = PreparedOperand::new(2, 3, 1, Box::new(()));
+        let ok_u = DenseMatrix::zeros(2, 4);
+        let ok_v = DenseMatrix::zeros(3, 4);
+        assert!(op.check_sddmm_operands(&ok_u, &ok_v).is_ok());
+        // U rows must match A rows
+        assert!(op
+            .check_sddmm_operands(&DenseMatrix::zeros(3, 4), &ok_v)
+            .is_err());
+        // V rows must match A cols
+        assert!(op
+            .check_sddmm_operands(&ok_u, &DenseMatrix::zeros(2, 4))
+            .is_err());
+        // U and V must share the dot width
+        assert!(op
+            .check_sddmm_operands(&ok_u, &DenseMatrix::zeros(3, 5))
+            .is_err());
+    }
+
+    #[test]
+    fn sddmm_default_implementation_reports_unsupported() {
+        struct NoSddmm;
+        impl SpmmBackend for NoSddmm {
+            fn name(&self) -> &'static str {
+                "nosddmm"
+            }
+            fn prepare(&self, csr: &CsrMatrix) -> Result<PreparedOperand> {
+                Ok(PreparedOperand::new(csr.rows, csr.cols, csr.nnz(), Box::new(())))
+            }
+            fn execute(
+                &self,
+                _operand: &PreparedOperand,
+                _x: &DenseMatrix,
+                _kernel: KernelKind,
+            ) -> Result<Execution> {
+                unreachable!()
+            }
+        }
+        let backend = NoSddmm;
+        let op = PreparedOperand::new(0, 0, 0, Box::new(()));
+        let u = DenseMatrix::zeros(0, 1);
+        let v = DenseMatrix::zeros(0, 1);
+        let err = backend
+            .execute_sddmm(&op, &u, &v, KernelKind::SrRs)
+            .unwrap_err();
+        assert!(err.to_string().contains("does not implement SDDMM"), "{err}");
     }
 }

@@ -7,7 +7,7 @@
 //! free-function `kernels::run_kernel` / `PreparedMatrix` dispatch path so
 //! the crate has exactly one prepare-once/execute-many pipeline.
 
-use super::{Execution, PreparedOperand, SpmmBackend};
+use super::{Execution, PreparedOperand, SddmmExecution, SpmmBackend};
 use crate::kernels::{pr_rs, pr_wb, sr_rs, sr_wb, KernelKind, WARP};
 use crate::sparse::{CsrMatrix, DenseMatrix, SegmentedMatrix};
 use crate::util::threadpool::ThreadPool;
@@ -94,6 +94,25 @@ impl SpmmBackend for NativeBackend {
             artifact: format!("native/{}", kernel.label()),
         })
     }
+
+    fn execute_sddmm(
+        &self,
+        operand: &PreparedOperand,
+        u: &DenseMatrix,
+        v: &DenseMatrix,
+        kernel: KernelKind,
+    ) -> Result<SddmmExecution> {
+        let prep: &NativePrepared = operand.state()?;
+        operand.check_sddmm_operands(u, v)?;
+        let mut values = vec![0f32; prep.csr.nnz()];
+        // The same prepared state serves both ops: CSR feeds the
+        // row-split designs, the segment layout the nnz-split ones.
+        crate::sddmm::run(kernel, &prep.csr, &prep.segments, u, v, &mut values, &self.pool);
+        Ok(SddmmExecution {
+            values,
+            artifact: format!("native/sddmm/{}", kernel.label()),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -140,6 +159,30 @@ mod tests {
             let exec = backend.execute(&op, &x, kind).unwrap();
             assert_eq!(exec.y.data, vec![0.0; 15]);
         }
+    }
+
+    #[test]
+    fn sddmm_through_the_trait_is_bit_identical_to_reference() {
+        use crate::kernels::dense::sddmm_reference;
+        let mut rng = Xoshiro256::seeded(37);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(70, 50, 0.1, &mut rng));
+        let backend = NativeBackend::new(ThreadPool::new(3));
+        let op = backend.prepare(&csr).unwrap();
+        for d in [1usize, 8, 33] {
+            let u = DenseMatrix::random(70, d, 1.0, &mut rng);
+            let v = DenseMatrix::random(50, d, 1.0, &mut rng);
+            let mut want = vec![0f32; csr.nnz()];
+            sddmm_reference(&csr, &u, &v, &mut want);
+            for kind in KernelKind::ALL {
+                let exec = backend.execute_sddmm(&op, &u, &v, kind).unwrap();
+                assert_eq!(exec.artifact, format!("native/sddmm/{}", kind.label()));
+                assert_eq!(exec.values, want, "{kind:?} d={d}");
+            }
+        }
+        // shape mismatches are rejected
+        let bad_u = DenseMatrix::zeros(69, 4);
+        let v = DenseMatrix::zeros(50, 4);
+        assert!(backend.execute_sddmm(&op, &bad_u, &v, KernelKind::SrRs).is_err());
     }
 
     #[test]

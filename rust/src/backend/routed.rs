@@ -11,7 +11,7 @@
 //! request path pays nothing for the routing. This is the serving
 //! layer's large-matrix routing policy (see `DESIGN.md` §Serving layer).
 
-use super::{Execution, NativeBackend, PreparedOperand, SpmmBackend};
+use super::{Execution, NativeBackend, PreparedOperand, SddmmExecution, SpmmBackend};
 use crate::kernels::KernelKind;
 use crate::selector::AdaptiveSelector;
 use crate::shard::ShardedBackend;
@@ -125,6 +125,21 @@ impl SpmmBackend for RoutedBackend {
         }
     }
 
+    fn execute_sddmm(
+        &self,
+        operand: &PreparedOperand,
+        u: &DenseMatrix,
+        v: &DenseMatrix,
+        kernel: KernelKind,
+    ) -> Result<SddmmExecution> {
+        let prep: &RoutedPrepared = operand.state()?;
+        if prep.large {
+            self.large.execute_sddmm(&prep.operand, u, v, kernel)
+        } else {
+            self.small.execute_sddmm(&prep.operand, u, v, kernel)
+        }
+    }
+
     fn available_n(&self) -> Option<Vec<usize>> {
         // Diagnostic only: the default serving composition is
         // width-agnostic on both sides. With a fixed-width inner, the
@@ -205,6 +220,27 @@ mod tests {
         // the small side stays unsharded and records nothing here
         let small = RoutedBackend::online(usize::MAX, 2, online.clone());
         check_routed(&csr, &small, "native/");
+    }
+
+    #[test]
+    fn sddmm_follows_the_recorded_route() {
+        use crate::kernels::dense::sddmm_reference;
+        let mut rng = Xoshiro256::seeded(906);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(60, 40, 0.1, &mut rng));
+        let d = 6;
+        let u = DenseMatrix::random(60, d, 1.0, &mut rng);
+        let v = DenseMatrix::random(40, d, 1.0, &mut rng);
+        let mut want = vec![0f32; csr.nnz()];
+        sddmm_reference(&csr, &u, &v, &mut want);
+        for (backend, prefix) in [
+            (RoutedBackend::new(usize::MAX, 2), "native/sddmm/"),
+            (RoutedBackend::new(1, 2), "sharded(k="),
+        ] {
+            let op = backend.prepare(&csr).unwrap();
+            let exec = backend.execute_sddmm(&op, &u, &v, KernelKind::SrRs).unwrap();
+            assert!(exec.artifact.starts_with(prefix), "{}", exec.artifact);
+            assert_eq!(exec.values, want, "{prefix}");
+        }
     }
 
     #[test]

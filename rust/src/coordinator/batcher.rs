@@ -7,8 +7,14 @@
 //! bucket each, so the batcher packs pending columns side-by-side until a
 //! bucket width (or the flush deadline) is reached, runs one SpMM, and
 //! splits the result columns back per request.
+//!
+//! SDDMM requests ([`Batcher::submit_sddmm`]) ride the same outcome
+//! plumbing but execute immediately: each carries its own `(U, V)` pair,
+//! so there is no width axis to coalesce along. Results are op-tagged
+//! via [`BatchedResult::op`].
 
 use super::engine::{MatrixHandle, SpmmEngine};
+use crate::kernels::SparseOp;
 use crate::sparse::DenseMatrix;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -24,7 +30,12 @@ struct Pending {
 pub struct BatchedResult {
     /// The caller's correlation id from the submitted request.
     pub tag: u64,
-    /// This request's columns of the batched execution result.
+    /// Which sparse op produced this result.
+    pub op: SparseOp,
+    /// This request's columns of the batched execution result. For
+    /// [`SparseOp::Sddmm`] requests this is the sampled value vector as
+    /// an `nnz × 1` column (the pattern lives with the registered
+    /// matrix).
     pub y: DenseMatrix,
     /// how many requests shared the executed artifact call
     pub batch_size: usize,
@@ -107,6 +118,42 @@ impl<'e> Batcher<'e> {
         }
     }
 
+    /// Submit an SDDMM request; executes immediately and returns its
+    /// outcome. SDDMM has no width-coalescing axis — each request carries
+    /// its own `(U, V)` pair, and concatenating dot products along `d`
+    /// would change every result — so there is no queue to protect with a
+    /// pre-check: operand validation is the engine's
+    /// (`PreparedOperand::check_sddmm_operands`, one validation site),
+    /// and any failure — unknown handle, shape mismatch, execution
+    /// error — is reported as an op-tagged [`FlushError`] carrying this
+    /// request's tag, so no replier leaks. The `Result` wrapper mirrors
+    /// [`Batcher::submit`]'s signature; this path itself never errors.
+    pub fn submit_sddmm(
+        &mut self,
+        h: MatrixHandle,
+        u: DenseMatrix,
+        v: DenseMatrix,
+        tag: u64,
+    ) -> Result<FlushOutcome> {
+        let mut outcome = FlushOutcome::default();
+        match self.engine.sddmm(h, &u, &v) {
+            Ok(resp) => {
+                let nnz = resp.values.len();
+                outcome.results.push(BatchedResult {
+                    tag,
+                    op: SparseOp::Sddmm,
+                    y: DenseMatrix::from_vec(nnz, 1, resp.values),
+                    batch_size: 1,
+                });
+            }
+            Err(error) => outcome.failures.push(FlushError {
+                tags: vec![tag],
+                error,
+            }),
+        }
+        Ok(outcome)
+    }
+
     /// Pending request count across all queues.
     pub fn pending(&self) -> usize {
         self.queues.values().map(|(_, q)| q.len()).sum()
@@ -157,6 +204,7 @@ impl<'e> Batcher<'e> {
             off += p.x.cols;
             outcome.results.push(BatchedResult {
                 tag: p.tag,
+                op: SparseOp::Spmm,
                 y,
                 batch_size: q.len(),
             });

@@ -13,7 +13,7 @@ use super::metrics::Metrics;
 use crate::backend::{NativeBackend, PreparedOperand, SpmmBackend};
 use crate::features::MatrixFeatures;
 use crate::kernels::KernelKind;
-use crate::selector::{AdaptiveSelector, OnlineConfig, OnlineSelector};
+use crate::selector::{AdaptiveSelector, OnlineConfig, OnlineSelector, SddmmSelector};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -46,6 +46,9 @@ pub struct SpmmEngine {
     backend: Box<dyn SpmmBackend>,
     /// Request-level kernel selector (the paper's Fig.-4 rules).
     pub selector: AdaptiveSelector,
+    /// Request-level SDDMM kernel selector (the second-op rules —
+    /// `crate::selector::sddmm`).
+    pub sddmm_selector: SddmmSelector,
     /// Shared telemetry: request, shard, cache and admission counters.
     pub metrics: Arc<Metrics>,
     matrices: Mutex<HashMap<usize, Arc<Registered>>>,
@@ -70,6 +73,21 @@ pub struct SpmmResponse {
     /// per-shard-adaptive backends).
     pub kernel: KernelKind,
     /// Executed unit: artifact name (pjrt) or `native/<kernel>` label.
+    pub artifact: String,
+    /// Wallclock of the backend execution.
+    pub latency: std::time::Duration,
+}
+
+/// Outcome of one SDDMM request.
+#[derive(Debug)]
+pub struct SddmmResponse {
+    /// One sampled value per non-zero of the registered matrix, in CSR
+    /// stream order: `values[k] = A.values[k] * (U[r_k] · V[c_k])`.
+    pub values: Vec<f32>,
+    /// The request-level kernel choice that was executed (or hinted, on
+    /// per-shard-adaptive backends).
+    pub kernel: KernelKind,
+    /// Executed unit, `native/sddmm/<kernel>`-style.
     pub artifact: String,
     /// Wallclock of the backend execution.
     pub latency: std::time::Duration,
@@ -224,6 +242,7 @@ impl SpmmEngine {
         SpmmEngine {
             backend,
             selector: AdaptiveSelector::default(),
+            sddmm_selector: SddmmSelector::default(),
             metrics,
             matrices: Mutex::new(HashMap::new()),
             cache: None,
@@ -247,6 +266,16 @@ impl SpmmEngine {
     /// sharded engines with [`SpmmEngine::sharded_with_selector`] instead.
     pub fn with_selector(mut self, selector: AdaptiveSelector) -> Self {
         self.selector = selector;
+        self
+    }
+
+    /// With custom (e.g. [`crate::selector::sddmm::calibrate_sddmm`]-fit)
+    /// request-level SDDMM thresholds. As with
+    /// [`SpmmEngine::with_selector`], a sharded backend's per-shard SDDMM
+    /// selector is fixed at construction
+    /// (`ShardedBackend::with_sddmm_selector`).
+    pub fn with_sddmm_selector(mut self, selector: SddmmSelector) -> Self {
+        self.sddmm_selector = selector;
         self
     }
 
@@ -402,6 +431,67 @@ impl SpmmEngine {
             latency,
         })
     }
+
+    /// Execute `S = sample(A, U·Vᵀ)` with adaptive kernel selection (the
+    /// online selector's choice — exploration included — on engines built
+    /// with [`SpmmEngine::serving_online`]). The registered matrix's
+    /// prepared state is shared with SpMM traffic: op-mixed workloads on
+    /// one graph pay `prepare` once.
+    pub fn sddmm(
+        &self,
+        h: MatrixHandle,
+        u: &DenseMatrix,
+        v: &DenseMatrix,
+    ) -> Result<SddmmResponse> {
+        let reg = self.get(h)?;
+        let d = u.cols;
+        let kernel = match &self.online {
+            Some(online) => online.select_sddmm(&reg.features, d),
+            None => self.sddmm_selector.select(&reg.features, d),
+        };
+        self.sddmm_with(h, u, v, kernel)
+    }
+
+    /// Execute SDDMM with an explicit kernel choice (oracle / ablation
+    /// paths). As with [`SpmmEngine::spmm_with`], per-shard-adaptive
+    /// backends treat `kernel` as a hint — the actual per-shard choices
+    /// land in the [`Metrics`] SDDMM shard counters.
+    pub fn sddmm_with(
+        &self,
+        h: MatrixHandle,
+        u: &DenseMatrix,
+        v: &DenseMatrix,
+        kernel: KernelKind,
+    ) -> Result<SddmmResponse> {
+        let reg = self.get(h)?;
+        if let Err(e) = reg.prepared.check_sddmm_operands(u, v) {
+            self.metrics.record_error();
+            return Err(e);
+        }
+        let start = Instant::now();
+        let exec = match self.backend.execute_sddmm(&reg.prepared, u, v, kernel) {
+            Ok(exec) => exec,
+            Err(e) => {
+                self.metrics.record_error();
+                return Err(e);
+            }
+        };
+        let latency = start.elapsed();
+        self.metrics.record_sddmm(kernel, latency);
+        // Close the online loop for directly-executed requests, mirroring
+        // `spmm_with`: sharded fan-outs already observed per shard.
+        if let Some(online) = &self.online {
+            if exec.artifact.starts_with("native/sddmm/") {
+                online.observe_sddmm(&reg.features, u.cols, kernel, latency);
+            }
+        }
+        Ok(SddmmResponse {
+            values: exec.values,
+            kernel,
+            artifact: exec.artifact,
+            latency,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -515,6 +605,63 @@ mod tests {
         let x = DenseMatrix::random(2048, 1, 1.0, &mut rng);
         engine.spmm(h, &x).unwrap();
         assert_eq!(engine.metrics.shard_kernel_counts(), [0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn sddmm_round_trip_with_per_op_counters() {
+        use crate::kernels::dense::sddmm_reference;
+        let engine = SpmmEngine::native();
+        let a = matrix(318); // 80x60
+        let h = engine.register(a.clone()).unwrap();
+        let mut rng = Xoshiro256::seeded(319);
+        let d = 8;
+        let u = DenseMatrix::random(80, d, 1.0, &mut rng);
+        let v = DenseMatrix::random(60, d, 1.0, &mut rng);
+        let mut want = vec![0f32; a.nnz()];
+        sddmm_reference(&a, &u, &v, &mut want);
+        let resp = engine.sddmm(h, &u, &v).unwrap();
+        let expect = engine
+            .sddmm_selector
+            .select(&engine.features(h).unwrap(), d);
+        assert_eq!(resp.kernel, expect);
+        assert!(resp.artifact.starts_with("native/sddmm/"), "{}", resp.artifact);
+        assert_eq!(resp.values, want, "bit-for-bit vs the dense reference");
+        // op-tagged counters: the SDDMM request is not an SpMM request
+        assert_eq!(engine.metrics.requests(), 0);
+        assert_eq!(engine.metrics.sddmm_requests(), 1);
+        assert_eq!(engine.metrics.sddmm_kernel_counts().iter().sum::<u64>(), 1);
+        // explicit-kernel path covers all four designs
+        for kind in KernelKind::ALL {
+            let resp = engine.sddmm_with(h, &u, &v, kind).unwrap();
+            assert_eq!(resp.values, want, "{kind:?}");
+        }
+        assert_eq!(engine.metrics.sddmm_requests(), 5);
+        // shape mismatch is rejected and counted
+        assert!(engine.sddmm(h, &DenseMatrix::zeros(80, 3), &v).is_err());
+        assert_eq!(engine.metrics.errors(), 1);
+    }
+
+    #[test]
+    fn sddmm_routes_and_fans_out_on_the_serving_shape() {
+        use crate::kernels::dense::sddmm_reference;
+        let a = {
+            let mut rng = Xoshiro256::seeded(320);
+            CsrMatrix::from_coo(&CooMatrix::random_uniform(300, 80, 0.1, &mut rng))
+        };
+        // threshold 1 => the matrix routes through the sharded side
+        let engine = SpmmEngine::serving(16 << 20, 1, 2);
+        let h = engine.register(a.clone()).unwrap();
+        let mut rng = Xoshiro256::seeded(321);
+        let d = 8;
+        let u = DenseMatrix::random(300, d, 1.0, &mut rng);
+        let v = DenseMatrix::random(80, d, 1.0, &mut rng);
+        let mut want = vec![0f32; a.nnz()];
+        sddmm_reference(&a, &u, &v, &mut want);
+        let resp = engine.sddmm(h, &u, &v).unwrap();
+        assert!(resp.artifact.starts_with("sharded(k="), "{}", resp.artifact);
+        assert_eq!(resp.values, want);
+        assert!(engine.metrics.sddmm_shard_executions() >= 2, "fan-out recorded");
+        assert_eq!(engine.metrics.shard_executions(), 0, "SpMM shard counters untouched");
     }
 
     #[test]

@@ -7,6 +7,11 @@
 //! wallclock. The `shard_*` counters are how per-shard adaptivity is
 //! observed from outside (`crate::shard::ShardedBackend` records them).
 //!
+//! The two sparse ops are **tagged apart**: `record`/`record_shard`
+//! count SpMM, `record_sddmm`/`record_sddmm_shard` count SDDMM, so
+//! per-op kernel selection stays observable when traffic mixes the
+//! FusedMM pair (attention workloads — `DESIGN.md` §SDDMM).
+//!
 //! The per-`(feature bucket, kernel)` cost EWMAs ([`Metrics::observe_cost`]
 //! / [`Metrics::cost`]) are the substrate of online selector refinement:
 //! executions report normalized latencies here, and
@@ -44,6 +49,15 @@ pub struct Metrics {
     shard_ns: AtomicU64,
     /// slowest single shard execution seen — the fan-out straggler bound
     shard_max_ns: AtomicU64,
+    /// SDDMM request-level counters — the second sparse op is tagged
+    /// apart from SpMM so per-op kernel selection stays observable
+    sddmm_requests: AtomicU64,
+    sddmm_by_kernel: [AtomicU64; 4],
+    sddmm_ns: AtomicU64,
+    /// SDDMM shard-level counters (sharded backends only)
+    sddmm_shard_execs: AtomicU64,
+    sddmm_shard_by_kernel: [AtomicU64; 4],
+    sddmm_shard_ns: AtomicU64,
     /// prepared-matrix cache counters (engines with a cache only)
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
@@ -154,6 +168,77 @@ impl Metrics {
     /// wallclock.
     pub fn shard_max_latency(&self) -> Duration {
         Duration::from_nanos(self.shard_max_ns.load(Ordering::Relaxed))
+    }
+
+    /// Record one completed SDDMM request. Op-tagged apart from
+    /// [`Metrics::record`] so SpMM and SDDMM kernel selection are
+    /// observable per op.
+    pub fn record_sddmm(&self, kernel: KernelKind, latency: Duration) {
+        self.sddmm_requests.fetch_add(1, Ordering::Relaxed);
+        let idx = KernelKind::ALL.iter().position(|k| *k == kernel).unwrap();
+        self.sddmm_by_kernel[idx].fetch_add(1, Ordering::Relaxed);
+        self.sddmm_ns
+            .fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Record one SDDMM shard execution inside a sharded request.
+    pub fn record_sddmm_shard(&self, kernel: KernelKind, latency: Duration) {
+        self.sddmm_shard_execs.fetch_add(1, Ordering::Relaxed);
+        let idx = KernelKind::ALL.iter().position(|k| *k == kernel).unwrap();
+        self.sddmm_shard_by_kernel[idx].fetch_add(1, Ordering::Relaxed);
+        self.sddmm_shard_ns
+            .fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Completed SDDMM request count.
+    pub fn sddmm_requests(&self) -> u64 {
+        self.sddmm_requests.load(Ordering::Relaxed)
+    }
+
+    /// SDDMM requests per kernel, in [`KernelKind::ALL`] order — the
+    /// per-op selection counter the serving layer exposes.
+    pub fn sddmm_kernel_counts(&self) -> [u64; 4] {
+        [
+            self.sddmm_by_kernel[0].load(Ordering::Relaxed),
+            self.sddmm_by_kernel[1].load(Ordering::Relaxed),
+            self.sddmm_by_kernel[2].load(Ordering::Relaxed),
+            self.sddmm_by_kernel[3].load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Mean SDDMM execution latency.
+    pub fn sddmm_mean_latency(&self) -> Duration {
+        let n = self.sddmm_requests();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sddmm_ns.load(Ordering::Relaxed) / n)
+    }
+
+    /// SDDMM shard executions recorded (0 unless a sharded backend ran
+    /// the op).
+    pub fn sddmm_shard_executions(&self) -> u64 {
+        self.sddmm_shard_execs.load(Ordering::Relaxed)
+    }
+
+    /// SDDMM shard executions per kernel, in [`KernelKind::ALL`] order —
+    /// the observable trace of per-shard adaptive SDDMM choices.
+    pub fn sddmm_shard_kernel_counts(&self) -> [u64; 4] {
+        [
+            self.sddmm_shard_by_kernel[0].load(Ordering::Relaxed),
+            self.sddmm_shard_by_kernel[1].load(Ordering::Relaxed),
+            self.sddmm_shard_by_kernel[2].load(Ordering::Relaxed),
+            self.sddmm_shard_by_kernel[3].load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Mean single-shard SDDMM execution latency.
+    pub fn sddmm_shard_mean_latency(&self) -> Duration {
+        let n = self.sddmm_shard_executions();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sddmm_shard_ns.load(Ordering::Relaxed) / n)
     }
 
     /// Record a prepared-matrix cache hit (registration skipped prepare).
@@ -307,6 +392,25 @@ impl Metrics {
                 sc[3],
             ));
         }
+        if self.sddmm_requests() > 0 || self.sddmm_shard_executions() > 0 {
+            let sc = self.sddmm_kernel_counts();
+            let ssc = self.sddmm_shard_kernel_counts();
+            out.push_str(&format!(
+                " sddmm[requests={} mean={:?} sr_rs={} sr_wb={} pr_rs={} pr_wb={} \
+                 shard_execs={} shard_sr_rs={} shard_sr_wb={} shard_pr_rs={} shard_pr_wb={}]",
+                self.sddmm_requests(),
+                self.sddmm_mean_latency(),
+                sc[0],
+                sc[1],
+                sc[2],
+                sc[3],
+                self.sddmm_shard_executions(),
+                ssc[0],
+                ssc[1],
+                ssc[2],
+                ssc[3],
+            ));
+        }
         if self.cache_hits() + self.cache_misses() > 0 {
             out.push_str(&format!(
                 " cache[hits={} misses={} evictions={}]",
@@ -360,6 +464,31 @@ mod tests {
         assert_eq!(m.shard_max_latency(), Duration::from_micros(300));
         let s = m.summary();
         assert!(s.contains("shards[execs=2"), "{s}");
+    }
+
+    #[test]
+    fn sddmm_counters_are_tagged_apart_from_spmm() {
+        let m = Metrics::default();
+        assert_eq!(m.sddmm_requests(), 0);
+        assert!(!m.summary().contains("sddmm["));
+        m.record(KernelKind::SrRs, Duration::from_micros(100));
+        m.record_sddmm(KernelKind::PrWb, Duration::from_micros(200));
+        m.record_sddmm(KernelKind::PrWb, Duration::from_micros(400));
+        m.record_sddmm_shard(KernelKind::SrWb, Duration::from_micros(50));
+        m.record_sddmm_shard(KernelKind::PrRs, Duration::from_micros(150));
+        // per-op request counters stay separate
+        assert_eq!(m.requests(), 1);
+        assert_eq!(m.sddmm_requests(), 2);
+        assert_eq!(m.kernel_counts(), [1, 0, 0, 0]);
+        assert_eq!(m.sddmm_kernel_counts(), [0, 0, 0, 2]);
+        assert_eq!(m.sddmm_mean_latency(), Duration::from_micros(300));
+        // shard grain too
+        assert_eq!(m.shard_executions(), 0);
+        assert_eq!(m.sddmm_shard_executions(), 2);
+        assert_eq!(m.sddmm_shard_kernel_counts(), [0, 1, 1, 0]);
+        assert_eq!(m.sddmm_shard_mean_latency(), Duration::from_micros(100));
+        let s = m.summary();
+        assert!(s.contains("sddmm[requests=2"), "{s}");
     }
 
     #[test]

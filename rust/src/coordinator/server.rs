@@ -3,6 +3,10 @@
 //!
 //! [`Server::start`] spawns `N` worker threads, each running the
 //! select-batch-execute loop over its own [`Batcher`]. Requests are
+//! **op-tagged** ([`RequestOp`]): SpMM requests batch along the
+//! dense-width axis, SDDMM requests execute unbatched through the same
+//! admission/reply/failure-isolation path, and both share the engine's
+//! prepared-matrix state per registered graph. Requests are
 //! routed to workers **by registration identity**
 //! ([`SpmmEngine::batch_key`]: content fingerprint on a cached engine),
 //! so one matrix's stream — even across clients holding distinct handles
@@ -38,12 +42,30 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+/// The op-tagged payload of one request: which sparse op to run and its
+/// dense operands.
+pub enum RequestOp {
+    /// `Y = A · X` — batched along the dense-width axis.
+    Spmm {
+        /// The dense operand `X`.
+        x: DenseMatrix,
+    },
+    /// `S = sample(A, U·Vᵀ)` — executed unbatched (each request carries
+    /// its own `(U, V)` pair; there is no width axis to coalesce).
+    Sddmm {
+        /// The left dense operand `U` (rows × d).
+        u: DenseMatrix,
+        /// The right dense operand `V` (cols × d).
+        v: DenseMatrix,
+    },
+}
+
 /// A request into the server.
 pub struct Request {
     /// Handle of a matrix registered on the serving engine.
     pub matrix: MatrixHandle,
-    /// The dense operand `X`.
-    pub x: DenseMatrix,
+    /// The sparse op to run and its dense operands.
+    pub op: RequestOp,
     /// Caller-chosen correlation id; it keys the reply routing, so it
     /// must be unique among in-flight requests — a duplicate is rejected
     /// with a [`ServerReply::Err`] rather than silently orphaning the
@@ -51,6 +73,41 @@ pub struct Request {
     pub tag: u64,
     /// Where the result is delivered.
     pub reply: mpsc::Sender<ServerReply>,
+}
+
+impl Request {
+    /// An SpMM request (`Y = A · X`).
+    pub fn spmm(
+        matrix: MatrixHandle,
+        x: DenseMatrix,
+        tag: u64,
+        reply: mpsc::Sender<ServerReply>,
+    ) -> Request {
+        Request {
+            matrix,
+            op: RequestOp::Spmm { x },
+            tag,
+            reply,
+        }
+    }
+
+    /// An SDDMM request (`S = sample(A, U·Vᵀ)`). The reply's
+    /// [`BatchedResult::y`] carries the sampled values as an `nnz × 1`
+    /// column.
+    pub fn sddmm(
+        matrix: MatrixHandle,
+        u: DenseMatrix,
+        v: DenseMatrix,
+        tag: u64,
+        reply: mpsc::Sender<ServerReply>,
+    ) -> Request {
+        Request {
+            matrix,
+            op: RequestOp::Sddmm { u, v },
+            tag,
+            reply,
+        }
+    }
 }
 
 /// Result delivered to the requester.
@@ -152,13 +209,23 @@ fn worker_loop(
                         req.tag
                     )));
                 } else {
-                    repliers.insert(req.tag, req.reply.clone());
-                    match batcher.submit(req.matrix, req.x, req.tag) {
+                    let Request {
+                        matrix,
+                        op,
+                        tag,
+                        reply,
+                    } = req;
+                    repliers.insert(tag, reply);
+                    let submitted = match op {
+                        RequestOp::Spmm { x } => batcher.submit(matrix, x, tag),
+                        RequestOp::Sddmm { u, v } => batcher.submit_sddmm(matrix, u, v, tag),
+                    };
+                    match submitted {
                         Ok(outcome) => deliver(outcome, &mut repliers),
                         Err(e) => {
                             // pre-queue validation failure: this request
                             // alone was rejected, nothing else was touched
-                            if let Some(tx) = repliers.remove(&req.tag) {
+                            if let Some(tx) = repliers.remove(&tag) {
                                 release(depth);
                                 let _ = tx.send(ServerReply::Err(e.to_string()));
                             }

@@ -1,4 +1,4 @@
-//! GNN training driver — the end-to-end workload (paper's headline
+//! GNN workloads — the end-to-end applications (paper's headline
 //! application: GNN training through these kernels).
 //!
 //! [`graph`] synthesizes a Cora-scale citation-style graph with a planted
@@ -7,11 +7,26 @@
 //! live in Rust between steps, Python never runs. The trainer needs the
 //! PJRT runtime and is gated on the `pjrt` feature; the graph synthesis
 //! is backend-independent and always available.
+//!
+//! The native (default-build) counterparts run entirely through the
+//! [`crate::coordinator::SpmmEngine`]:
+//!
+//! - [`native_trainer`] — 2-layer GCN training with manual backprop;
+//!   forward and backward aggregations are engine SpMMs (the backward
+//!   through a registered `Âᵀ`), so `cargo test -q` exercises end-to-end
+//!   training by default;
+//! - [`attention`] — GAT-style dot-product attention as the fused
+//!   SDDMM→softmax→SpMM dataflow (`DESIGN.md` §SDDMM), driven by
+//!   `examples/gat_train.rs` and the `ge-spmm sddmm` CLI.
 
+pub mod attention;
 pub mod graph;
+pub mod native_trainer;
 #[cfg(feature = "pjrt")]
 pub mod trainer;
 
+pub use attention::{AttentionForward, AttentionLayer};
 pub use graph::{GraphConfig, SyntheticGraph};
+pub use native_trainer::{NativeGcnTrainer, NativeTrainReport};
 #[cfg(feature = "pjrt")]
 pub use trainer::{GcnTrainer, TrainReport};

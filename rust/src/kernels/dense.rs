@@ -23,6 +23,34 @@ pub fn spmm_reference(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix) {
     }
 }
 
+/// Dense reference SDDMM — the correctness oracle for `crate::sddmm`.
+///
+/// `out[k] = a.values[k] * Σ_j u[r_k][j] · v[c_k][j]` for the `k`-th
+/// non-zero `(r_k, c_k)` of `A`, in CSR stream order. The inner dot is
+/// accumulated in ascending-`j` order; every SDDMM kernel reproduces this
+/// exact summation order, so agreement tests can pin **bit-for-bit**
+/// equality (see `crate::sddmm` module docs).
+pub fn sddmm_reference(a: &CsrMatrix, u: &DenseMatrix, v: &DenseMatrix, out: &mut [f32]) {
+    assert_eq!(u.rows, a.rows, "U rows mismatch");
+    assert_eq!(v.rows, a.cols, "V rows mismatch");
+    assert_eq!(u.cols, v.cols, "U/V width mismatch");
+    assert_eq!(out.len(), a.nnz(), "output length mismatch");
+    let d = u.cols;
+    for r in 0..a.rows {
+        let (cols, vals) = a.row(r);
+        let base = a.indptr[r] as usize;
+        let urow = u.row(r);
+        for k in 0..cols.len() {
+            let vrow = v.row(cols[k] as usize);
+            let mut acc = 0.0f32;
+            for j in 0..d {
+                acc += urow[j] * vrow[j];
+            }
+            out[base + k] = vals[k] * acc;
+        }
+    }
+}
+
 /// SpMV convenience wrapper over the reference (N = 1).
 pub fn spmv_reference(a: &CsrMatrix, x: &[f32], y: &mut [f32]) {
     assert_eq!(a.cols, x.len());
@@ -63,6 +91,33 @@ mod tests {
         let mut y = [0.0; 3];
         spmv_reference(&a, &x, &mut y);
         assert_eq!(y, [4.5, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn sddmm_known_product() {
+        // A = [[2, 0], [0, 3]], U = [[1, 2], [3, 4]], V = [[5, 6], [7, 8]]
+        // S[0,0] = 2 * (1*5 + 2*6) = 34; S[1,1] = 3 * (3*7 + 4*8) = 159
+        let mut coo = CooMatrix::new(2, 2);
+        coo.push(0, 0, 2.0);
+        coo.push(1, 1, 3.0);
+        let a = CsrMatrix::from_coo(&coo);
+        let u = DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let v = DenseMatrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let mut out = vec![0.0; 2];
+        sddmm_reference(&a, &u, &v, &mut out);
+        assert_eq!(out, vec![34.0, 159.0]);
+    }
+
+    #[test]
+    fn sddmm_zero_width_dot_is_zero() {
+        let mut coo = CooMatrix::new(2, 3);
+        coo.push(0, 1, 4.0);
+        let a = CsrMatrix::from_coo(&coo);
+        let u = DenseMatrix::zeros(2, 0);
+        let v = DenseMatrix::zeros(3, 0);
+        let mut out = vec![9.0; 1];
+        sddmm_reference(&a, &u, &v, &mut out);
+        assert_eq!(out, vec![0.0]);
     }
 
     #[test]

@@ -35,6 +35,30 @@ pub mod sr_wb;
 /// sublane group on TPU). The paper's kernels are written against 32.
 pub const WARP: usize = 32;
 
+/// The sparse operations the execution stack routes. The paper's design
+/// space was built for SpMM/SpMV; `crate::sddmm` instantiates the same
+/// 2×2 space for SDDMM (`S = sample(A, U·Vᵀ)`), SpMM's companion op in
+/// attention-style GNN workloads, and the serving layer tags requests and
+/// metrics with this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SparseOp {
+    /// Dense-output sparse-dense matmul `Y = A · X`.
+    Spmm,
+    /// Sampled dense-dense matmul `S = sample(A, U·Vᵀ)` (sparse output on
+    /// A's pattern).
+    Sddmm,
+}
+
+impl SparseOp {
+    /// Short label used in logs and artifact names.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SparseOp::Spmm => "spmm",
+            SparseOp::Sddmm => "sddmm",
+        }
+    }
+}
+
 /// The four kernel designs of the paper's 2×2 space.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum KernelKind {

@@ -23,6 +23,12 @@
 //! needs libxla). The `runtime` module and the artifact packing/training
 //! paths are gated with it.
 //!
+//! The engine executes **two sparse ops** over one prepared-matrix state:
+//! SpMM (`Y = A·X`) and, since the [`sddmm`] subsystem, SDDMM
+//! (`S = sample(A, U·Vᵀ)`) — the FusedMM pair behind attention-style
+//! GNNs. [`gnn::attention`] runs the fused SDDMM→softmax→SpMM dataflow
+//! end to end through the engine on the default native build.
+//!
 //! On top sits the [`coordinator`] serving layer: a prepared-matrix cache
 //! (content-fingerprinted, byte-budgeted LRU) and a multi-worker server
 //! with per-matrix request routing, width batching, an admission bound
@@ -58,6 +64,7 @@ pub mod gnn;
 pub mod kernels;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod sddmm;
 pub mod selector;
 pub mod shard;
 pub mod sim;

@@ -6,6 +6,9 @@
 //!   select      show the adaptive kernel decision for a matrix and N
 //!   spmm        run one SpMM through the coordinator with adaptive routing
 //!               (--backend native|pjrt; native is the default)
+//!   sddmm       run one SDDMM (S = sample(A, U·Vᵀ)) through the coordinator
+//!               with the second-op adaptive rules (native backend;
+//!               --shards N for per-shard selection)
 //!   serve       drive a synthetic workload through the concurrent serving
 //!               layer (worker threads + prepared-matrix cache + size
 //!               routing) and report throughput and metrics
@@ -56,16 +59,17 @@ fn run(sub: Option<&str>, rest: Vec<String>) -> Result<()> {
         Some("features") => cmd_features(rest),
         Some("select") => cmd_select(rest),
         Some("spmm") => cmd_spmm(rest),
+        Some("sddmm") => cmd_sddmm(rest),
         Some("serve") => cmd_serve(rest),
         Some("simulate") => cmd_simulate(rest),
         Some("calibrate") => cmd_calibrate(rest),
         Some("train-gcn") => cmd_train_gcn(rest),
         Some("suite") => cmd_suite(rest),
-        Some(other) => bail!("unknown subcommand '{other}' (try: info, features, select, spmm, serve, simulate, calibrate, train-gcn, suite)"),
+        Some(other) => bail!("unknown subcommand '{other}' (try: info, features, select, spmm, sddmm, serve, simulate, calibrate, train-gcn, suite)"),
         None => {
             println!(
                 "ge-spmm {} — adaptive workload-balanced/parallel-reduction sparse kernels\n\
-                 subcommands: info, features, select, spmm, serve, simulate, calibrate, train-gcn, suite\n\
+                 subcommands: info, features, select, spmm, sddmm, serve, simulate, calibrate, train-gcn, suite\n\
                  use `ge-spmm <subcommand> --help` for options",
                 ge_spmm::version()
             );
@@ -209,6 +213,64 @@ fn cmd_spmm(rest: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_sddmm(rest: Vec<String>) -> Result<()> {
+    use ge_spmm::selector::SddmmSelector;
+
+    let cmd = Command::new(
+        "sddmm",
+        "run one SDDMM (S = sample(A, U·Vᵀ)) through the coordinator",
+    )
+    .opt("d", "dot-product (embedding) width", Some("32"))
+    .opt(
+        "shards",
+        "nnz-balanced row shards with per-shard adaptive selection (1 = unsharded)",
+        Some("1"),
+    )
+    .opt("seed", "dense operand seed", Some("42"));
+    let args = cmd.parse(&rest)?;
+    let m = load_matrix(&matrix_arg(&args)?)?;
+    let d: usize = args.parse_or("d", 32);
+    let shards = args.parse_positive("shards", 1);
+    let engine = if shards > 1 {
+        SpmmEngine::sharded(shards)
+    } else {
+        SpmmEngine::native()
+    };
+    let h = engine.register(m.clone())?;
+    let mut rng = Xoshiro256::seeded(args.parse_or("seed", 42));
+    let u = DenseMatrix::random(m.rows, d, 1.0, &mut rng);
+    let v = DenseMatrix::random(m.cols, d, 1.0, &mut rng);
+    let f = MatrixFeatures::of(&m);
+    println!("{}", f.summary());
+    println!("{}", SddmmSelector::default().explain(&f, d));
+    let resp = engine.sddmm(h, &u, &v)?;
+    println!(
+        "backend={} kernel={} artifact={} latency={:?}",
+        engine.backend_name(),
+        resp.kernel.label(),
+        resp.artifact,
+        resp.latency
+    );
+    // cross-check vs the dense reference — and actually fail on mismatch:
+    // the SDDMM designs are bit-for-bit equal to the reference by
+    // construction, so this command doubles as a CI smoke that bites.
+    let mut want = vec![0f32; m.nnz()];
+    ge_spmm::kernels::dense::sddmm_reference(&m, &u, &v, &mut want);
+    let max_err = resp
+        .values
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("max |err| vs dense reference: {max_err:.2e}");
+    anyhow::ensure!(
+        max_err == 0.0,
+        "SDDMM output diverged from the dense reference (max |err| = {max_err:.2e})"
+    );
+    println!("{}", engine.metrics.summary());
+    Ok(())
+}
+
 fn cmd_serve(rest: Vec<String>) -> Result<()> {
     use ge_spmm::coordinator::server::{Request, Server, ServerConfig, ServerReply};
     use ge_spmm::sparse::CooMatrix;
@@ -342,12 +404,12 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
                     let mut replies = Vec::with_capacity(requests);
                     for r in 0..requests {
                         let (rtx, rrx) = mpsc::channel();
-                        server.submit(Request {
-                            matrix: handles[r % handles.len()],
-                            x: DenseMatrix::random(rows, n, 1.0, &mut rng),
-                            tag: (p * requests + r) as u64,
-                            reply: rtx,
-                        });
+                        server.submit(Request::spmm(
+                            handles[r % handles.len()],
+                            DenseMatrix::random(rows, n, 1.0, &mut rng),
+                            (p * requests + r) as u64,
+                            rtx,
+                        ));
                         replies.push(rrx);
                     }
                     let (mut ok, mut failed) = (0u64, 0u64);

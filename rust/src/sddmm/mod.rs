@@ -1,0 +1,214 @@
+//! Native SDDMM kernels — the paper's 2×2 design space instantiated for
+//! the **sampled dense-dense matmul** `S = sample(A, U·Vᵀ)`.
+//!
+//! SDDMM is SpMM's companion op in attention-style GNN workloads (the
+//! FusedMM pair of Bharadwaj et al., "Distributed-Memory Sparse Kernels
+//! for Machine Learning"): graph attention computes edge scores with an
+//! SDDMM, row-softmaxes them on the sparsity pattern, and aggregates with
+//! an SpMM. For `A: M×K` sparse, `U: M×d` and `V: K×d` dense row-major,
+//! the output is one value per non-zero, in CSR stream order:
+//!
+//! ```text
+//! out[k] = A.values[k] * Σ_j U[r_k][j] · V[c_k][j]
+//! ```
+//!
+//! The design axes map onto SDDMM as follows (see `DESIGN.md` §SDDMM):
+//!
+//! |                    | row-split (RS)   | workload-balanced (WB) |
+//! |--------------------|------------------|-------------------------|
+//! | sequential dot (SR)| [`sr_rs`]        | [`sr_wb`]               |
+//! | lane-parallel (PR) | [`pr_rs`]        | [`pr_wb`]               |
+//!
+//! - **RS vs WB** is the same partitioning question as in SpMM: RS hands
+//!   each worker a block of rows (cost per row ∝ row nnz, so skew
+//!   imbalances workers), WB hands each worker fixed-nnz segments of the
+//!   stream ([`crate::sparse::SegmentedMatrix`] — per-nnz cost is uniform
+//!   in SDDMM, so nnz-splitting balances it *exactly*). Unlike SpMM, WB
+//!   needs no carries: every non-zero owns its own output slot.
+//! - **SR vs PR** picks the *dot-product* structure — the reduction axis
+//!   of SDDMM is `d`, not the dense width N. SR marches a scalar
+//!   accumulator over `d`; PR stages `WARP`-wide windows of products into
+//!   a lane array first (the CUDA kernels' vectorized load + multiply)
+//!   and then merges. The merge is performed **in lane order** rather
+//!   than as a `__shfl` log-tree: a tree regroups float summation, and
+//!   this module's acceptance bar is *bit-for-bit* equality of all four
+//!   designs against [`crate::kernels::dense::sddmm_reference`] (the
+//!   property fuzzer in `tests/sddmm_agreement.rs` pins exact equality,
+//!   not tolerance). The lane structure, windowing and load pattern are
+//!   preserved; only the merge order is canonicalized.
+//!
+//! Callers never dispatch these directly: execution goes through
+//! [`crate::backend::SpmmBackend::execute_sddmm`], with kernel choice
+//! from [`crate::selector::SddmmSelector`].
+
+pub mod pr_rs;
+pub mod pr_wb;
+pub mod sr_rs;
+pub mod sr_wb;
+
+use crate::kernels::{KernelKind, WARP};
+use crate::sparse::{CsrMatrix, DenseMatrix, SegmentedMatrix};
+use crate::util::threadpool::ThreadPool;
+use std::cell::UnsafeCell;
+
+/// Rows per parallel work item on the row-split kernels.
+const ROW_CHUNK: usize = 64;
+
+/// Shared mutable output values. SAFETY contract: concurrent writers must
+/// touch disjoint index ranges — guaranteed by construction here: the
+/// row-split kernels hand each worker the nnz range of its own rows
+/// (CSR `indptr` is monotone, so row blocks have disjoint nnz spans) and
+/// the workload-balanced kernels hand each worker its own segment range.
+pub(crate) struct SharedValues<'a> {
+    data: &'a UnsafeCell<[f32]>,
+}
+
+unsafe impl Sync for SharedValues<'_> {}
+
+impl<'a> SharedValues<'a> {
+    pub fn new(data: &'a mut [f32]) -> Self {
+        // SAFETY: &mut guarantees exclusivity; UnsafeCell re-shares it
+        // under the disjoint-ranges contract documented above.
+        let cell = unsafe { &*(data as *mut [f32] as *const UnsafeCell<[f32]>) };
+        Self { data: cell }
+    }
+
+    /// Mutable view of `lo..hi`. SAFETY: caller must ensure no other
+    /// thread accesses any index in `lo..hi` concurrently.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [f32] {
+        let base = (*self.data.get()).as_mut_ptr();
+        std::slice::from_raw_parts_mut(base.add(lo), hi - lo)
+    }
+}
+
+/// Sequential dot product in ascending-`j` order — the canonical
+/// summation order every SDDMM kernel (and the dense reference) uses.
+#[inline]
+pub(crate) fn dot_sequential(u: &[f32], v: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for j in 0..u.len() {
+        acc += u[j] * v[j];
+    }
+    acc
+}
+
+/// Lane-parallel dot product: `WARP`-wide windows of products are staged
+/// into a lane array (one multiply per lane — where the CUDA kernels
+/// issue their vectorized loads), then merged in lane order. The merge
+/// order makes the result bit-identical to [`dot_sequential`]; see the
+/// module docs for why the `__shfl` tree is not reproduced here.
+#[inline]
+pub(crate) fn dot_lanes(u: &[f32], v: &[f32]) -> f32 {
+    let d = u.len();
+    let mut lanes = [0f32; WARP];
+    let mut acc = 0.0f32;
+    let mut j = 0;
+    while j < d {
+        let w = (d - j).min(WARP);
+        // parallel elementwise multiply (lanes beyond w idle)
+        for l in 0..w {
+            lanes[l] = u[j + l] * v[j + l];
+        }
+        // ordered merge of the window
+        for &p in &lanes[..w] {
+            acc += p;
+        }
+        j += w;
+    }
+    acc
+}
+
+/// Run one SDDMM design against the prepared layouts. `out.len()` must be
+/// `csr.nnz()` (== `seg.nnz`); degenerate shapes (`nnz == 0`) are a no-op.
+/// The shared prepare-once dispatcher used by the native backend, the
+/// bench harness and the agreement tests.
+pub fn run(
+    kind: KernelKind,
+    csr: &CsrMatrix,
+    seg: &SegmentedMatrix,
+    u: &DenseMatrix,
+    v: &DenseMatrix,
+    out: &mut [f32],
+    pool: &ThreadPool,
+) {
+    match kind {
+        KernelKind::SrRs => sr_rs::sddmm(csr, u, v, out, pool),
+        KernelKind::SrWb => sr_wb::sddmm(seg, u, v, out, pool),
+        KernelKind::PrRs => pr_rs::sddmm(csr, u, v, out, pool),
+        KernelKind::PrWb => pr_wb::sddmm(seg, u, v, out, pool),
+    }
+}
+
+/// One-call convenience for direct library use: run one design end to
+/// end (building the prepared layouts itself) and return the sampled
+/// output as a [`CsrMatrix`] sharing `a`'s pattern. The engine path
+/// ([`crate::coordinator::SpmmEngine::sddmm`]) returns raw values
+/// instead, so callers that post-process per-nnz (e.g. the softmax in
+/// [`crate::gnn::attention`]) avoid an intermediate matrix.
+pub fn sddmm_csr(
+    kind: KernelKind,
+    a: &CsrMatrix,
+    u: &DenseMatrix,
+    v: &DenseMatrix,
+    pool: &ThreadPool,
+) -> CsrMatrix {
+    let seg = SegmentedMatrix::from_csr(a, WARP);
+    let mut values = vec![0f32; a.nnz()];
+    run(kind, a, &seg, u, v, &mut values, pool);
+    a.with_values(values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense::sddmm_reference;
+    use crate::sparse::CooMatrix;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn dot_orders_agree_bitwise() {
+        let mut rng = Xoshiro256::seeded(77);
+        for d in [0usize, 1, 5, 31, 32, 33, 64, 100] {
+            let mut u = vec![0f32; d];
+            let mut v = vec![0f32; d];
+            rng.fill_uniform_f32(&mut u, 1.0);
+            rng.fill_uniform_f32(&mut v, 1.0);
+            let a = dot_sequential(&u, &v);
+            let b = dot_lanes(&u, &v);
+            assert_eq!(a.to_bits(), b.to_bits(), "d={d}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn all_designs_match_reference_bitwise() {
+        let mut rng = Xoshiro256::seeded(78);
+        let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(60, 45, 0.12, &mut rng));
+        let seg = SegmentedMatrix::from_csr(&a, WARP);
+        for d in [1usize, 4, 33, 64] {
+            let u = DenseMatrix::random(60, d, 1.0, &mut rng);
+            let v = DenseMatrix::random(45, d, 1.0, &mut rng);
+            let mut want = vec![0f32; a.nnz()];
+            sddmm_reference(&a, &u, &v, &mut want);
+            for kind in KernelKind::ALL {
+                let mut got = vec![0f32; a.nnz()];
+                run(kind, &a, &seg, &u, &v, &mut got, &ThreadPool::new(3));
+                assert_eq!(got, want, "{kind:?} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn sddmm_csr_shares_the_pattern() {
+        let mut rng = Xoshiro256::seeded(79);
+        let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(20, 20, 0.2, &mut rng));
+        let u = DenseMatrix::random(20, 8, 1.0, &mut rng);
+        let v = DenseMatrix::random(20, 8, 1.0, &mut rng);
+        let s = sddmm_csr(KernelKind::SrRs, &a, &u, &v, &ThreadPool::serial());
+        assert_eq!(s.indptr, a.indptr);
+        assert_eq!(s.indices, a.indices);
+        let mut want = vec![0f32; a.nnz()];
+        sddmm_reference(&a, &u, &v, &mut want);
+        assert_eq!(s.values, want);
+    }
+}

@@ -1,0 +1,92 @@
+//! PR-WB SDDMM — lane-parallel dot products over fixed-nnz segments.
+//!
+//! The full combination: nnz-split segments balance workers exactly
+//! (as in [`super::sr_wb`]) *and* each sampled dot runs lane-parallel
+//! over `d`-windows (as in [`super::pr_rs`]). This is the SDDMM analogue
+//! of the paper's VSR: since SDDMM's reduction axis is the dot length
+//! `d` — shared by every non-zero — no segmented-scan network is needed;
+//! the segment structure only carries the balanced work assignment.
+
+use super::{dot_lanes, SharedValues};
+use crate::sparse::{DenseMatrix, SegmentedMatrix};
+use crate::util::threadpool::ThreadPool;
+
+/// PR-WB SDDMM over the segmented layout. `out.len()` must equal `a.nnz`.
+pub fn sddmm(
+    a: &SegmentedMatrix,
+    u: &DenseMatrix,
+    v: &DenseMatrix,
+    out: &mut [f32],
+    pool: &ThreadPool,
+) {
+    assert_eq!(u.rows, a.rows, "U rows mismatch");
+    assert_eq!(v.rows, a.cols, "V rows mismatch");
+    assert_eq!(u.cols, v.cols, "U/V width mismatch");
+    assert_eq!(out.len(), a.nnz, "output length mismatch");
+    if a.nnz == 0 {
+        return;
+    }
+    let d = u.cols;
+    let pool = &pool.for_work(a.nnz * d.max(1));
+    let workers = pool.workers().min(a.num_segments).max(1);
+    let per = a.num_segments.div_ceil(workers);
+    let shared = SharedValues::new(out);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let shared = &shared;
+            let seg_lo = w * per;
+            let seg_hi = ((w + 1) * per).min(a.num_segments);
+            scope.spawn(move || {
+                if seg_lo >= seg_hi {
+                    return;
+                }
+                let lo = seg_lo * a.seg_len;
+                let hi = (seg_hi * a.seg_len).min(a.nnz);
+                if lo >= hi {
+                    return;
+                }
+                // SAFETY: workers own disjoint segment (hence nnz) ranges.
+                let out = unsafe { shared.slice_mut(lo, hi) };
+                for i in lo..hi {
+                    let r = a.row_idx[i] as usize;
+                    let c = a.col_idx[i] as usize;
+                    out[i - lo] = a.values[i] * dot_lanes(u.row(r), v.row(c));
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense::sddmm_reference;
+    use crate::kernels::WARP;
+    use crate::sparse::{CooMatrix, CsrMatrix};
+    use crate::util::proptest::run_prop;
+
+    #[test]
+    fn matches_reference_bitwise_property() {
+        run_prop("sddmm pr_wb vs reference", 25, |g| {
+            let rows = g.dim();
+            let cols = g.dim();
+            let d = *g.choose(&[1usize, 8, 32, 50]);
+            let seg_len = *g.choose(&[2usize, 8, WARP]);
+            let coo = CooMatrix::random_uniform(rows, cols, 0.25, g.rng());
+            let a = CsrMatrix::from_coo(&coo);
+            let seg = SegmentedMatrix::from_csr(&a, seg_len);
+            let u = DenseMatrix::from_vec(rows, d, g.vec_f32(rows * d));
+            let v = DenseMatrix::from_vec(cols, d, g.vec_f32(cols * d));
+            let mut want = vec![0f32; a.nnz()];
+            sddmm_reference(&a, &u, &v, &mut want);
+            let workers = *g.choose(&[1usize, 4, 7]);
+            let mut got = vec![0f32; a.nnz()];
+            sddmm(&seg, &u, &v, &mut got, &ThreadPool::new(workers));
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("{rows}x{cols} d={d} seg_len={seg_len}"))
+            }
+        });
+    }
+}

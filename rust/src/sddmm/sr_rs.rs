@@ -1,0 +1,85 @@
+//! SR-RS SDDMM — sequential dot products, row split.
+//!
+//! Each pool worker owns a block of rows and computes its rows' sampled
+//! dot products with a scalar accumulator marching over `d` — the
+//! CSR-scalar shape. Cost per row is `row_nnz · d`, so a skewed
+//! row-length distribution imbalances workers: exactly the regime the
+//! workload-balanced [`super::sr_wb`] exists for.
+
+use super::{dot_sequential, SharedValues, ROW_CHUNK};
+use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::util::threadpool::ThreadPool;
+
+/// SR-RS SDDMM: `out[k] = a.values[k] * (U[r_k] · V[c_k])` in CSR stream
+/// order. `out.len()` must equal `a.nnz()`.
+pub fn sddmm(a: &CsrMatrix, u: &DenseMatrix, v: &DenseMatrix, out: &mut [f32], pool: &ThreadPool) {
+    assert_eq!(u.rows, a.rows, "U rows mismatch");
+    assert_eq!(v.rows, a.cols, "V rows mismatch");
+    assert_eq!(u.cols, v.cols, "U/V width mismatch");
+    assert_eq!(out.len(), a.nnz(), "output length mismatch");
+    if a.nnz() == 0 {
+        return;
+    }
+    let d = u.cols;
+    let pool = &pool.for_work(a.nnz() * d.max(1));
+    let shared = SharedValues::new(out);
+    pool.scope_chunks(a.rows, ROW_CHUNK, |rows| {
+        let lo = a.indptr[rows.start] as usize;
+        let hi = a.indptr[rows.end] as usize;
+        if lo == hi {
+            return;
+        }
+        // SAFETY: row blocks have disjoint nnz spans (indptr is monotone).
+        let out = unsafe { shared.slice_mut(lo, hi) };
+        for r in rows {
+            let (cols, vals) = a.row(r);
+            let base = a.indptr[r] as usize - lo;
+            let urow = u.row(r);
+            for k in 0..cols.len() {
+                let vrow = v.row(cols[k] as usize);
+                out[base + k] = vals[k] * dot_sequential(urow, vrow);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense::sddmm_reference;
+    use crate::sparse::CooMatrix;
+    use crate::util::proptest::run_prop;
+
+    #[test]
+    fn matches_reference_bitwise_property() {
+        run_prop("sddmm sr_rs vs reference", 25, |g| {
+            let rows = g.dim();
+            let cols = g.dim();
+            let d = *g.choose(&[0usize, 1, 3, 8, 33]);
+            let coo = CooMatrix::random_uniform(rows, cols, 0.25, g.rng());
+            let a = CsrMatrix::from_coo(&coo);
+            let u = DenseMatrix::from_vec(rows, d, g.vec_f32(rows * d));
+            let v = DenseMatrix::from_vec(cols, d, g.vec_f32(cols * d));
+            let mut want = vec![0f32; a.nnz()];
+            sddmm_reference(&a, &u, &v, &mut want);
+            let workers = *g.choose(&[1usize, 2, 5]);
+            let mut got = vec![0f32; a.nnz()];
+            sddmm(&a, &u, &v, &mut got, &ThreadPool::new(workers));
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("{rows}x{cols} d={d} workers={workers}"))
+            }
+        });
+    }
+
+    #[test]
+    fn empty_matrix_is_a_noop() {
+        let a = CsrMatrix::from_coo(&CooMatrix::new(4, 4));
+        let u = DenseMatrix::zeros(4, 3);
+        let v = DenseMatrix::zeros(4, 3);
+        let mut out: Vec<f32> = Vec::new();
+        sddmm(&a, &u, &v, &mut out, &ThreadPool::new(2));
+        assert!(out.is_empty());
+    }
+}

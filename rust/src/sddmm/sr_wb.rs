@@ -1,0 +1,113 @@
+//! SR-WB SDDMM — sequential dot products over fixed-nnz segments.
+//!
+//! Workers own equal contiguous segment ranges of the non-zero stream
+//! ([`crate::sparse::SegmentedMatrix`]), so every worker handles the same
+//! number of sampled dot products regardless of row skew. SDDMM's
+//! per-nnz cost is uniform (`d` multiply-adds each), so nnz-splitting
+//! balances the op *exactly* — and since each non-zero owns its own
+//! output slot, no cross-worker carries are needed (unlike SpMM's SR-WB).
+
+use super::{dot_sequential, SharedValues};
+use crate::sparse::{DenseMatrix, SegmentedMatrix};
+use crate::util::threadpool::ThreadPool;
+
+/// SR-WB SDDMM over the segmented layout. `out.len()` must equal `a.nnz`
+/// (padding slots past the true nnz are never touched).
+pub fn sddmm(
+    a: &SegmentedMatrix,
+    u: &DenseMatrix,
+    v: &DenseMatrix,
+    out: &mut [f32],
+    pool: &ThreadPool,
+) {
+    assert_eq!(u.rows, a.rows, "U rows mismatch");
+    assert_eq!(v.rows, a.cols, "V rows mismatch");
+    assert_eq!(u.cols, v.cols, "U/V width mismatch");
+    assert_eq!(out.len(), a.nnz, "output length mismatch");
+    if a.nnz == 0 {
+        return;
+    }
+    let d = u.cols;
+    let pool = &pool.for_work(a.nnz * d.max(1));
+    let workers = pool.workers().min(a.num_segments).max(1);
+    let per = a.num_segments.div_ceil(workers);
+    let shared = SharedValues::new(out);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let shared = &shared;
+            let seg_lo = w * per;
+            let seg_hi = ((w + 1) * per).min(a.num_segments);
+            scope.spawn(move || {
+                if seg_lo >= seg_hi {
+                    return;
+                }
+                let lo = seg_lo * a.seg_len;
+                // bound by the true nnz: padding slots have no output
+                let hi = (seg_hi * a.seg_len).min(a.nnz);
+                if lo >= hi {
+                    return;
+                }
+                // SAFETY: workers own disjoint segment (hence nnz) ranges.
+                let out = unsafe { shared.slice_mut(lo, hi) };
+                for i in lo..hi {
+                    let r = a.row_idx[i] as usize;
+                    let c = a.col_idx[i] as usize;
+                    out[i - lo] = a.values[i] * dot_sequential(u.row(r), v.row(c));
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense::sddmm_reference;
+    use crate::kernels::WARP;
+    use crate::sparse::{CooMatrix, CsrMatrix};
+    use crate::util::proptest::run_prop;
+
+    #[test]
+    fn matches_reference_bitwise_property() {
+        run_prop("sddmm sr_wb vs reference", 25, |g| {
+            let rows = g.dim();
+            let cols = g.dim();
+            let d = *g.choose(&[0usize, 1, 4, 17, 32]);
+            let seg_len = *g.choose(&[1usize, 4, WARP]);
+            let coo = CooMatrix::random_uniform(rows, cols, 0.25, g.rng());
+            let a = CsrMatrix::from_coo(&coo);
+            let seg = SegmentedMatrix::from_csr(&a, seg_len);
+            let u = DenseMatrix::from_vec(rows, d, g.vec_f32(rows * d));
+            let v = DenseMatrix::from_vec(cols, d, g.vec_f32(cols * d));
+            let mut want = vec![0f32; a.nnz()];
+            sddmm_reference(&a, &u, &v, &mut want);
+            let workers = *g.choose(&[1usize, 3, 6]);
+            let mut got = vec![0f32; a.nnz()];
+            sddmm(&seg, &u, &v, &mut got, &ThreadPool::new(workers));
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("{rows}x{cols} d={d} seg_len={seg_len}"))
+            }
+        });
+    }
+
+    #[test]
+    fn skewed_stream_is_balanced_across_workers() {
+        // one huge row: RS would serialize it, WB splits it mid-row
+        let mut coo = CooMatrix::new(10, 64);
+        for c in 0..64 {
+            coo.push(3, c, 0.5 + c as f32);
+        }
+        let a = CsrMatrix::from_coo(&coo);
+        let seg = SegmentedMatrix::from_csr(&a, 8);
+        let mut rng = crate::util::prng::Xoshiro256::seeded(31);
+        let u = DenseMatrix::random(10, 6, 1.0, &mut rng);
+        let v = DenseMatrix::random(64, 6, 1.0, &mut rng);
+        let mut want = vec![0f32; a.nnz()];
+        sddmm_reference(&a, &u, &v, &mut want);
+        let mut got = vec![0f32; a.nnz()];
+        sddmm(&seg, &u, &v, &mut got, &ThreadPool::new(4));
+        assert_eq!(got, want);
+    }
+}

@@ -120,6 +120,69 @@ pub fn profile_measured(
     Ok(OracleProfile { best, seconds })
 }
 
+/// Time all four SDDMM designs on `backend` for one `(matrix, d)` cell —
+/// the SDDMM counterpart of [`profile_measured`], feeding
+/// [`super::sddmm::calibrate_sddmm`]. Same backend constraint: profile
+/// only through backends that honor the explicit `KernelKind`.
+pub fn profile_measured_sddmm(
+    backend: &dyn SpmmBackend,
+    csr: &CsrMatrix,
+    d: usize,
+    cfg: &MeasureConfig,
+) -> Result<OracleProfile> {
+    if csr.nnz() == 0 || csr.rows == 0 {
+        bail!("cannot profile an empty matrix ({}x{})", csr.rows, csr.cols);
+    }
+    let operand = backend.prepare(csr)?;
+    let mut rng = Xoshiro256::seeded(cfg.seed);
+    let u = DenseMatrix::random(csr.rows, d.max(1), 1.0, &mut rng);
+    let v = DenseMatrix::random(csr.cols, d.max(1), 1.0, &mut rng);
+    let bench_cfg = cfg.bench_config();
+    let mut seconds = [(KernelKind::SrRs, 0.0f64); 4];
+    for (i, k) in KernelKind::ALL.iter().enumerate() {
+        backend.execute_sddmm(&operand, &u, &v, *k)?;
+        let stats = bench_fn_with(k.label(), bench_cfg, || {
+            let exec = backend
+                .execute_sddmm(&operand, &u, &v, *k)
+                .expect("profiled sddmm execute");
+            std::hint::black_box(&exec.values);
+        });
+        seconds[i] = (*k, stats.median_s().max(1e-9));
+    }
+    let best = seconds
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+        .0;
+    Ok(OracleProfile { best, seconds })
+}
+
+/// Build measured SDDMM calibration samples over `matrices × d_values`
+/// (the sample's `n` field carries `d`); consumed by
+/// [`super::sddmm::calibrate_sddmm`]. Empty matrices are skipped.
+pub fn collect_sddmm_samples(
+    matrices: &[CsrMatrix],
+    d_values: &[usize],
+    backend: &dyn SpmmBackend,
+    cfg: &MeasureConfig,
+) -> Result<Vec<Sample>> {
+    let mut out = Vec::with_capacity(matrices.len() * d_values.len());
+    for a in matrices {
+        if a.nnz() == 0 || a.rows == 0 {
+            continue;
+        }
+        let features = MatrixFeatures::of(a);
+        for &d in d_values {
+            out.push(Sample {
+                features,
+                n: d,
+                profile: profile_measured_sddmm(backend, a, d, cfg)?,
+            });
+        }
+    }
+    Ok(out)
+}
+
 /// Build measured calibration samples over `matrices × n_values` —
 /// drop-in replacement for [`super::calibrate::collect_samples`] with
 /// wallclock in place of the simulator. Empty matrices are skipped (they
@@ -204,6 +267,27 @@ mod tests {
         for &(_, _, loss) in &cal.grid {
             assert!(cal.mean_loss <= loss + 1e-12);
         }
+    }
+
+    #[test]
+    fn measured_sddmm_profile_feeds_the_sddmm_fit() {
+        use crate::selector::sddmm::{calibrate_sddmm, sddmm_selector_loss, SddmmSelector};
+        let backend = NativeBackend::serial();
+        let empty = CsrMatrix::from_coo(&CooMatrix::new(4, 4));
+        assert!(profile_measured_sddmm(&backend, &empty, 8, &tiny_cfg()).is_err());
+        let p = profile_measured_sddmm(&backend, &small(24), 8, &tiny_cfg()).unwrap();
+        for k in KernelKind::ALL {
+            assert!(p.time_of(k) > 0.0, "{k:?}");
+        }
+        assert_eq!(p.loss_of(p.best), 0.0);
+        let samples =
+            collect_sddmm_samples(&[empty, small(25)], &[4, 32], &backend, &tiny_cfg()).unwrap();
+        assert_eq!(samples.len(), 2, "only the non-empty matrix is sampled");
+        let cal = calibrate_sddmm(&samples);
+        assert!(cal.mean_loss >= 1.0);
+        assert!(
+            cal.mean_loss <= sddmm_selector_loss(&SddmmSelector::default(), &samples) + 1e-12
+        );
     }
 
     #[test]

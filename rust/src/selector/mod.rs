@@ -15,6 +15,12 @@
 //! [`crate::coordinator::SpmmEngine`], and per row shard inside
 //! [`crate::shard::ShardedBackend`] (`DESIGN.md` §Sharded execution and
 //! §Measured calibration).
+//!
+//! [`sddmm`] applies the same methodology to the second sparse op: the
+//! dot length `d` takes the dense width's place as the family switch and
+//! the balance threshold tightens (SDDMM has no dense-row reuse to hide
+//! imbalance behind) — mirroring the paper's SpMV-vs-SpMM feature split.
+//! See `DESIGN.md` §SDDMM.
 
 pub mod calibrate;
 pub mod measured;
@@ -22,8 +28,10 @@ pub mod online;
 pub mod oracle;
 pub mod profile;
 pub mod rules;
+pub mod sddmm;
 
 pub use crate::kernels::KernelKind;
 pub use online::{OnlineConfig, OnlineSelector};
 pub use profile::HardwareProfile;
 pub use rules::AdaptiveSelector;
+pub use sddmm::SddmmSelector;

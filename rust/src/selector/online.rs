@@ -28,7 +28,8 @@
 
 use super::calibrate::{T_AVG_GRID, T_CV_GRID};
 use super::rules::AdaptiveSelector;
-use crate::coordinator::metrics::{Metrics, COST_BUCKETS};
+use super::sddmm::{SddmmSelector, SDDMM_T_CV_GRID};
+use crate::coordinator::metrics::{Metrics, COST_BUCKETS, COST_EWMA_ALPHA};
 use crate::features::MatrixFeatures;
 use crate::kernels::KernelKind;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -50,6 +51,36 @@ pub fn feature_bucket(f: &MatrixFeatures, n: usize) -> usize {
     };
     let cv = usize::from(f.cv_row > 1.0);
     fam * 6 + avg * 2 + cv
+}
+
+/// Number of SDDMM cost buckets: 3 `avg_row` bins × 2 `cv_row` bins. No
+/// family split — SDDMM's family switch (`d_threshold`) is structural
+/// (where a dot window fills the lanes), so the refit only learns the
+/// balance threshold. The table lives inside [`OnlineSelector`] rather
+/// than [`Metrics`]: mixing the two ops' costs in one table would
+/// corrupt both refits.
+pub const SDDMM_BUCKETS: usize = 6;
+
+/// Map SDDMM observation features to a cost bucket (same `avg_row` bins
+/// as [`feature_bucket`], same `cv` split).
+pub fn sddmm_bucket(f: &MatrixFeatures) -> usize {
+    let avg = if f.avg_row < 8.0 {
+        0
+    } else if f.avg_row < 32.0 {
+        1
+    } else {
+        2
+    };
+    let cv = usize::from(f.cv_row > 1.0);
+    avg * 2 + cv
+}
+
+/// One SDDMM cost cell: EWMA of normalized cost plus its observation
+/// count (0 = empty).
+#[derive(Clone, Copy, Debug, Default)]
+struct SddmmCostCell {
+    ewma: f64,
+    obs: u64,
 }
 
 /// The sibling design of `k`: same reduction family, opposite
@@ -117,31 +148,57 @@ pub struct OnlineSelector {
     config: OnlineConfig,
     state: Mutex<AdaptiveSelector>,
     centroids: Mutex<[Centroid; COST_BUCKETS]>,
+    /// SDDMM refinement state: thresholds, private cost table (per-op —
+    /// see [`SDDMM_BUCKETS`]) and its bucket centroids.
+    sddmm_state: Mutex<SddmmSelector>,
+    sddmm_costs: Mutex<[[SddmmCostCell; 4]; SDDMM_BUCKETS]>,
+    sddmm_centroids: Mutex<[Centroid; SDDMM_BUCKETS]>,
     decisions: AtomicU64,
     observations: AtomicU64,
+    sddmm_observations: AtomicU64,
     explorations: AtomicU64,
     refits: AtomicU64,
+    sddmm_refits: AtomicU64,
 }
 
 impl OnlineSelector {
     /// Start from `base` thresholds (paper defaults, or a loaded
     /// [`super::profile::HardwareProfile`]), recording into `metrics`.
+    /// The SDDMM thresholds start at their defaults; override with
+    /// [`OnlineSelector::with_sddmm_base`].
     pub fn new(base: AdaptiveSelector, metrics: Arc<Metrics>, config: OnlineConfig) -> Self {
         Self {
             metrics,
             config,
             state: Mutex::new(base),
             centroids: Mutex::new([Centroid::default(); COST_BUCKETS]),
+            sddmm_state: Mutex::new(SddmmSelector::default()),
+            sddmm_costs: Mutex::new([[SddmmCostCell::default(); 4]; SDDMM_BUCKETS]),
+            sddmm_centroids: Mutex::new([Centroid::default(); SDDMM_BUCKETS]),
             decisions: AtomicU64::new(0),
             observations: AtomicU64::new(0),
+            sddmm_observations: AtomicU64::new(0),
             explorations: AtomicU64::new(0),
             refits: AtomicU64::new(0),
+            sddmm_refits: AtomicU64::new(0),
         }
+    }
+
+    /// Seed the SDDMM thresholds (e.g. from an off-line
+    /// [`super::sddmm::calibrate_sddmm`] fit).
+    pub fn with_sddmm_base(self, base: SddmmSelector) -> Self {
+        *self.sddmm_state.lock().unwrap() = base;
+        self
     }
 
     /// Snapshot of the current thresholds.
     pub fn current(&self) -> AdaptiveSelector {
         *self.state.lock().unwrap()
+    }
+
+    /// Snapshot of the current SDDMM thresholds.
+    pub fn current_sddmm(&self) -> SddmmSelector {
+        *self.sddmm_state.lock().unwrap()
     }
 
     /// The metrics instance the EWMA observations land in.
@@ -186,6 +243,160 @@ impl OnlineSelector {
         }
     }
 
+    /// Pick an SDDMM kernel: the current rule choice, with the same
+    /// sibling-exploration cadence as [`OnlineSelector::select`] (the
+    /// decision counter is shared across ops, so a mixed traffic stream
+    /// spends one exploration budget, not two).
+    pub fn select_sddmm(&self, f: &MatrixFeatures, d: usize) -> KernelKind {
+        let rule = self.current_sddmm().select(f, d);
+        let every = self.config.explore_every;
+        let dec = self.decisions.fetch_add(1, Ordering::Relaxed);
+        if every > 0 && (dec + 1) % every == 0 {
+            self.explorations.fetch_add(1, Ordering::Relaxed);
+            sibling_kernel(rule)
+        } else {
+            rule
+        }
+    }
+
+    /// Report one finished SDDMM execution: normalized cost
+    /// (seconds per flop, `2·nnz·d` flops) into the op's private EWMA
+    /// table, centroid upkeep, and a refit on the same cadence as SpMM.
+    pub fn observe_sddmm(
+        &self,
+        f: &MatrixFeatures,
+        d: usize,
+        kernel: KernelKind,
+        latency: Duration,
+    ) {
+        let flops = (2.0 * f.nnz as f64 * d.max(1) as f64).max(1.0);
+        let cost = latency.as_secs_f64().max(1e-9) / flops;
+        if !cost.is_finite() || cost <= 0.0 {
+            return;
+        }
+        let bucket = sddmm_bucket(f);
+        let idx = KernelKind::ALL.iter().position(|k| *k == kernel).unwrap();
+        {
+            let mut costs = self.sddmm_costs.lock().unwrap();
+            let cell = &mut costs[bucket][idx];
+            cell.ewma = if cell.obs == 0 {
+                cost
+            } else {
+                cell.ewma + COST_EWMA_ALPHA * (cost - cell.ewma)
+            };
+            cell.obs += 1;
+        }
+        {
+            let mut cents = self.sddmm_centroids.lock().unwrap();
+            let c = &mut cents[bucket];
+            c.count += 1.0;
+            c.sum_avg += f.avg_row;
+            c.sum_cv += f.cv_row;
+            c.sum_n += d.max(1) as f64;
+            c.sum_nnz += f.nnz as f64;
+        }
+        let o = self.sddmm_observations.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.config.refit_every > 0 && o % self.config.refit_every == 0 {
+            self.refit_sddmm();
+        }
+    }
+
+    /// Re-fit the SDDMM balance threshold against the op's cost table
+    /// now. `d_threshold` never moves (structural — see
+    /// [`super::sddmm`]); `t_cv` moves only when some bucket has at
+    /// least two measured kernels and a grid candidate strictly beats
+    /// the current value. Returns whether the threshold changed.
+    pub fn refit_sddmm(&self) -> bool {
+        self.sddmm_refits.fetch_add(1, Ordering::Relaxed);
+        let current = self.current_sddmm();
+        let costs = *self.sddmm_costs.lock().unwrap();
+        let cents = *self.sddmm_centroids.lock().unwrap();
+        // refit-ready bucket views: centroid features + traffic weight
+        let views: Vec<(usize, MatrixFeatures, usize, f64)> = (0..SDDMM_BUCKETS)
+            .filter(|&b| cents[b].count > 0.0)
+            .map(|b| {
+                let c = cents[b];
+                let avg = c.sum_avg / c.count;
+                let cv = c.sum_cv / c.count;
+                let features = MatrixFeatures {
+                    rows: 0,
+                    cols: 0,
+                    nnz: (c.sum_nnz / c.count).round().max(0.0) as usize,
+                    avg_row: avg,
+                    stdv_row: avg * cv,
+                    cv_row: cv,
+                    max_row: 0,
+                    empty_frac: 0.0,
+                    gini_row: 0.0,
+                };
+                let d = (c.sum_n / c.count).round().max(1.0) as usize;
+                (b, features, d, c.count)
+            })
+            .collect();
+        let loss = |sel: &SddmmSelector| -> Option<f64> {
+            let mut log_sum = 0.0;
+            let mut weight = 0.0;
+            for (b, f, d, w) in &views {
+                let mut measured: Vec<(KernelKind, f64)> = Vec::new();
+                for (i, &k) in KernelKind::ALL.iter().enumerate() {
+                    let cell = costs[*b][i];
+                    if cell.obs >= self.config.min_observations {
+                        measured.push((k, cell.ewma));
+                    }
+                }
+                if measured.len() < 2 {
+                    continue; // nothing to trade off yet
+                }
+                let best = measured.iter().map(|&(_, c)| c).fold(f64::INFINITY, f64::min);
+                let worst = measured.iter().map(|&(_, c)| c).fold(0.0, f64::max);
+                let chosen = sel.select(f, *d);
+                // unmeasured choices score at the worst measured cost —
+                // same pessimism as the SpMM refit
+                let cost = measured
+                    .iter()
+                    .find(|&&(k, _)| k == chosen)
+                    .map(|&(_, c)| c)
+                    .unwrap_or(worst);
+                log_sum += *w * (cost / best).ln();
+                weight += *w;
+            }
+            if weight == 0.0 {
+                None
+            } else {
+                Some((log_sum / weight).exp())
+            }
+        };
+        let Some(mut best_loss) = loss(&current) else {
+            return false;
+        };
+        let mut best = current;
+        for &cand in &SDDMM_T_CV_GRID {
+            let sel = SddmmSelector { t_cv: cand, ..current };
+            if let Some(l) = loss(&sel) {
+                if l < best_loss - 1e-12 {
+                    best_loss = l;
+                    best = sel;
+                }
+            }
+        }
+        if best != current {
+            *self.sddmm_state.lock().unwrap() = best;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// SDDMM observations consumed so far.
+    pub fn sddmm_observations(&self) -> u64 {
+        self.sddmm_observations.load(Ordering::Relaxed)
+    }
+
+    /// SDDMM refits performed (on cadence or explicit).
+    pub fn sddmm_refits(&self) -> u64 {
+        self.sddmm_refits.load(Ordering::Relaxed)
+    }
+
     /// Decisions taken so far (exploration included).
     pub fn decisions(&self) -> u64 {
         self.decisions.load(Ordering::Relaxed)
@@ -209,14 +420,19 @@ impl OnlineSelector {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         let cur = self.current();
+        let sd = self.current_sddmm();
         format!(
-            "online[T_avg={} T_cv={} decisions={} explored={} observations={} refits={}]",
+            "online[T_avg={} T_cv={} decisions={} explored={} observations={} refits={} \
+             sddmm_T_cv={} sddmm_observations={} sddmm_refits={}]",
             cur.t_avg,
             cur.t_cv,
             self.decisions(),
             self.explorations(),
             self.observations(),
-            self.refits()
+            self.refits(),
+            sd.t_cv,
+            self.sddmm_observations(),
+            self.sddmm_refits()
         )
     }
 
@@ -461,6 +677,82 @@ mod tests {
         assert!(!sel.refit());
         assert_eq!(sel.current(), AdaptiveSelector::default());
         assert!(sel.summary().contains("refits=2"));
+    }
+
+    #[test]
+    fn sddmm_buckets_cover_the_index_space() {
+        let mut seen = [false; SDDMM_BUCKETS];
+        for avg in [2.0, 16.0, 64.0] {
+            for cv in [0.2, 2.0] {
+                let b = sddmm_bucket(&features(avg, cv, 4000));
+                assert!(b < SDDMM_BUCKETS);
+                seen[b] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn sddmm_selection_explores_on_the_shared_cadence() {
+        let sel = selector(OnlineConfig {
+            explore_every: 4,
+            refit_every: 0,
+            min_observations: 1,
+        });
+        let f = features(16.0, 0.3, 16000);
+        let rule = SddmmSelector::default().select(&f, 8);
+        let picks: Vec<KernelKind> = (0..8).map(|_| sel.select_sddmm(&f, 8)).collect();
+        for (i, &p) in picks.iter().enumerate() {
+            if (i + 1) % 4 == 0 {
+                assert_eq!(p, sibling_kernel(rule), "decision {i} explores");
+            } else {
+                assert_eq!(p, rule, "decision {i} exploits");
+            }
+        }
+        assert_eq!(sel.decisions(), 8, "ops share one decision counter");
+    }
+
+    #[test]
+    fn sddmm_refit_tightens_the_balance_threshold_on_evidence() {
+        // cv = 0.3 sits below the SDDMM default t_cv = 0.5, so the rule
+        // picks SR-RS — but measured costs say SR-WB is 5x faster.
+        let sel = selector(OnlineConfig {
+            explore_every: 0,
+            refit_every: 0,
+            min_observations: 2,
+        });
+        let f = features(16.0, 0.3, 16000);
+        assert_eq!(sel.current_sddmm().select(&f, 8), KernelKind::SrRs);
+        assert!(!sel.refit_sddmm(), "no evidence, no movement");
+        for _ in 0..6 {
+            sel.observe_sddmm(&f, 8, KernelKind::SrRs, Duration::from_micros(500));
+            sel.observe_sddmm(&f, 8, KernelKind::SrWb, Duration::from_micros(100));
+        }
+        assert_eq!(sel.sddmm_observations(), 12);
+        assert!(sel.refit_sddmm(), "evidence moves t_cv");
+        let cur = sel.current_sddmm();
+        assert!(cur.t_cv < 0.3, "{cur:?}");
+        assert_eq!(cur.select(&f, 8), KernelKind::SrWb, "choice shifted");
+        assert_eq!(cur.d_threshold, SddmmSelector::default().d_threshold);
+        // ...and the SpMM thresholds were untouched: per-op tables
+        assert_eq!(sel.current(), AdaptiveSelector::default());
+        assert!(sel.summary().contains("sddmm_T_cv=0.25"), "{}", sel.summary());
+    }
+
+    #[test]
+    fn sddmm_refit_fires_on_the_observation_cadence() {
+        let sel = selector(OnlineConfig {
+            explore_every: 0,
+            refit_every: 8,
+            min_observations: 2,
+        });
+        let f = features(16.0, 0.3, 16000);
+        for _ in 0..4 {
+            sel.observe_sddmm(&f, 8, KernelKind::SrRs, Duration::from_micros(500));
+            sel.observe_sddmm(&f, 8, KernelKind::SrWb, Duration::from_micros(100));
+        }
+        assert!(sel.sddmm_refits() >= 1, "cadence fired");
+        assert_eq!(sel.current_sddmm().select(&f, 8), KernelKind::SrWb);
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! SDDMM kernel selection — the Fig.-4 methodology applied to the second
+//! sparse op.
+//!
+//! The SpMM rules don't transfer unchanged, because SDDMM's structure
+//! differs on both axes (the same reasoning that makes the paper split
+//! its features between SpMV and SpMM):
+//!
+//! - **Reduction family.** SpMM's reduction axis is the row's non-zero
+//!   stream, so the dense width N decides between PR and SR (Insight 1).
+//!   SDDMM's reduction axis is the *dot length* `d`, shared by every
+//!   non-zero — so `d` takes N's place: lane-parallel dots
+//!   ([`crate::sddmm::pr_rs`]/[`pr_wb`](crate::sddmm::pr_wb)) only pay
+//!   when `d` fills the lanes ([`SddmmSelector::d_threshold`],
+//!   structurally `WARP` — below it, lanes idle exactly like PR lanes on
+//!   short SpMM rows).
+//! - **Balance sensitivity.** In SpMM, a large per-row workload partially
+//!   hides imbalance behind dense-row reuse (Insight 3), which is why the
+//!   SpMM threshold on `stdv/avg` is a lenient 1.5. SDDMM has no such
+//!   cushion: per-nnz cost is exactly `d` multiply-adds, so row-split
+//!   runtime is *proportional* to the worker's nnz share and nnz-split
+//!   balances it exactly. The default [`SddmmSelector::t_cv`] is
+//!   therefore much tighter (0.5).
+//!
+//! [`calibrate_sddmm`] reproduces the paper's empirical-threshold fit for
+//! the new op over measured profiles
+//! ([`super::measured::collect_sddmm_samples`]), and
+//! [`super::online::OnlineSelector`] keeps refining `t_cv` under live
+//! traffic.
+
+use super::calibrate::Sample;
+use crate::features::MatrixFeatures;
+use crate::kernels::{KernelKind, WARP};
+use crate::util::stats;
+
+/// Rule-based SDDMM selector: `d` picks the dot family, row-length skew
+/// picks the partitioning.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SddmmSelector {
+    /// Dot length at or above which lane-parallel dots are used
+    /// (structurally `WARP`: where a window first fills the lanes).
+    pub d_threshold: usize,
+    /// Use nnz-balanced partitioning when `stdv_row/avg_row` exceeds
+    /// this. Tighter than SpMM's `T_cv` — see the module docs.
+    pub t_cv: f64,
+}
+
+impl Default for SddmmSelector {
+    fn default() -> Self {
+        Self {
+            d_threshold: WARP,
+            t_cv: 0.5,
+        }
+    }
+}
+
+/// Candidate grid for the balance threshold (same span as the SpMM grid —
+/// the metric is the same `stdv/avg` statistic).
+pub const SDDMM_T_CV_GRID: [f64; 6] = [0.25, 0.5, 1.0, 1.5, 2.5, 4.0];
+
+impl SddmmSelector {
+    /// Pick a kernel for a matrix with features `f` at dot length `d`.
+    pub fn select(&self, f: &MatrixFeatures, d: usize) -> KernelKind {
+        let balanced = f.cv_row > self.t_cv;
+        if d.max(1) >= self.d_threshold {
+            if balanced {
+                KernelKind::PrWb
+            } else {
+                KernelKind::PrRs
+            }
+        } else if balanced {
+            KernelKind::SrWb
+        } else {
+            KernelKind::SrRs
+        }
+    }
+
+    /// One decision per shard feature set — the per-shard grain of
+    /// `crate::shard::ShardedBackend::execute_sddmm`.
+    pub fn select_shards(&self, shards: &[MatrixFeatures], d: usize) -> Vec<KernelKind> {
+        shards.iter().map(|f| self.select(f, d)).collect()
+    }
+
+    /// Human-readable explanation of a decision (used by the CLI).
+    pub fn explain(&self, f: &MatrixFeatures, d: usize) -> String {
+        let k = self.select(f, d);
+        let family = if d.max(1) >= self.d_threshold {
+            format!("d={d} ≥ {} → lane-parallel dots", self.d_threshold)
+        } else {
+            format!("d={d} < {} → sequential dots", self.d_threshold)
+        };
+        format!(
+            "{family}; stdv/avg={:.2} {} T_cv={:.2} ⇒ {}",
+            f.cv_row,
+            if f.cv_row > self.t_cv { ">" } else { "≤" },
+            self.t_cv,
+            k.label()
+        )
+    }
+}
+
+/// SDDMM calibration outcome.
+#[derive(Clone, Debug)]
+pub struct SddmmCalibration {
+    /// The fitted selector.
+    pub selector: SddmmSelector,
+    /// Geometric-mean slowdown vs the oracle at the fitted threshold.
+    pub mean_loss: f64,
+}
+
+/// Geometric-mean slowdown of `sel` over SDDMM samples (each sample's
+/// `n` field carries the dot length `d`).
+pub fn sddmm_selector_loss(sel: &SddmmSelector, samples: &[Sample]) -> f64 {
+    let ratios: Vec<f64> = samples
+        .iter()
+        .map(|s| {
+            let k = sel.select(&s.features, s.n);
+            s.profile.time_of(k) / s.profile.best_time()
+        })
+        .collect();
+    stats::geomean(&ratios)
+}
+
+/// Grid-search `t_cv` against measured SDDMM profiles; `d_threshold`
+/// stays at the structural `WARP` (it marks where a dot window first
+/// fills the lanes, not an empirical trade-off — the SDDMM analogue of
+/// keeping `n_threshold` at the paper's 4).
+pub fn calibrate_sddmm(samples: &[Sample]) -> SddmmCalibration {
+    let mut best = SddmmSelector::default();
+    let mut best_loss = sddmm_selector_loss(&best, samples);
+    for &t_cv in &SDDMM_T_CV_GRID {
+        let cand = SddmmSelector {
+            t_cv,
+            ..SddmmSelector::default()
+        };
+        let loss = sddmm_selector_loss(&cand, samples);
+        if loss < best_loss {
+            best_loss = loss;
+            best = cand;
+        }
+    }
+    SddmmCalibration {
+        selector: best,
+        mean_loss: best_loss,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selector::oracle::OracleProfile;
+
+    fn features(avg_row: f64, cv_row: f64) -> MatrixFeatures {
+        MatrixFeatures {
+            rows: 1000,
+            cols: 1000,
+            nnz: (avg_row * 1000.0) as usize,
+            avg_row,
+            stdv_row: avg_row * cv_row,
+            cv_row,
+            max_row: 100,
+            empty_frac: 0.0,
+            gini_row: 0.0,
+        }
+    }
+
+    #[test]
+    fn d_picks_the_dot_family() {
+        let sel = SddmmSelector::default();
+        let flat = features(16.0, 0.2);
+        for d in [0usize, 1, 4, 31] {
+            assert!(!sel.select(&flat, d).is_parallel_reduction(), "d={d}");
+        }
+        for d in [32usize, 64, 256] {
+            assert!(sel.select(&flat, d).is_parallel_reduction(), "d={d}");
+        }
+    }
+
+    #[test]
+    fn skew_picks_balancing_at_a_tighter_threshold() {
+        let sel = SddmmSelector::default();
+        // cv = 0.8 balances here but would NOT under SpMM's default 1.5
+        let skewed = features(8.0, 0.8);
+        assert_eq!(sel.select(&skewed, 8), KernelKind::SrWb);
+        assert_eq!(sel.select(&skewed, 64), KernelKind::PrWb);
+        let flat = features(8.0, 0.3);
+        assert_eq!(sel.select(&flat, 8), KernelKind::SrRs);
+        assert_eq!(sel.select(&flat, 64), KernelKind::PrRs);
+    }
+
+    #[test]
+    fn shard_selection_diverges() {
+        let sel = SddmmSelector::default();
+        assert_eq!(
+            sel.select_shards(&[features(8.0, 2.0), features(8.0, 0.1)], 64),
+            vec![KernelKind::PrWb, KernelKind::PrRs]
+        );
+        assert!(sel.select_shards(&[], 1).is_empty());
+    }
+
+    #[test]
+    fn explain_names_both_axes() {
+        let sel = SddmmSelector::default();
+        let e = sel.explain(&features(8.0, 2.0), 4);
+        assert!(e.contains("sequential"), "{e}");
+        assert!(e.contains("sr_wb"), "{e}");
+    }
+
+    #[test]
+    fn calibration_fits_the_grid_argmin() {
+        // synthetic profiles where WB is 4x faster on the skewed half
+        // even at cv = 0.3: the fit must tighten t_cv to the grid minimum
+        let mk = |cv: f64, wb_fast: bool| {
+            let slow = 4e-4;
+            let fast = 1e-4;
+            let t = |balanced: bool| if balanced == wb_fast { fast } else { slow };
+            Sample {
+                features: features(8.0, cv),
+                n: 8,
+                profile: OracleProfile {
+                    best: if wb_fast {
+                        KernelKind::SrWb
+                    } else {
+                        KernelKind::SrRs
+                    },
+                    seconds: [
+                        (KernelKind::SrRs, t(false)),
+                        (KernelKind::SrWb, t(true)),
+                        (KernelKind::PrRs, t(false)),
+                        (KernelKind::PrWb, t(true)),
+                    ],
+                },
+            }
+        };
+        let samples = vec![mk(0.3, true), mk(0.4, true), mk(0.1, false)];
+        let cal = calibrate_sddmm(&samples);
+        assert_eq!(cal.selector.t_cv, 0.25, "{:?}", cal.selector);
+        assert!(cal.mean_loss < sddmm_selector_loss(&SddmmSelector::default(), &samples));
+        assert_eq!(cal.selector.d_threshold, WARP, "structural axis untouched");
+    }
+}

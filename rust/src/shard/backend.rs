@@ -26,11 +26,11 @@
 
 use super::features::{self, ShardFeatures};
 use super::partition::{PartitionConfig, RowPartition};
-use crate::backend::{Execution, NativeBackend, PreparedOperand, SpmmBackend};
+use crate::backend::{Execution, NativeBackend, PreparedOperand, SddmmExecution, SpmmBackend};
 use crate::coordinator::metrics::Metrics;
 use crate::features::MatrixFeatures;
 use crate::kernels::KernelKind;
-use crate::selector::AdaptiveSelector;
+use crate::selector::{AdaptiveSelector, SddmmSelector};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -64,6 +64,9 @@ pub struct ShardedBackend {
     inner: Box<dyn SpmmBackend>,
     config: PartitionConfig,
     selection: ShardSelection,
+    /// Per-shard SDDMM rules, consulted in `Static` selection mode (the
+    /// `Online` mode asks the shared selector, `Fixed` the caller).
+    sddmm_selector: SddmmSelector,
     metrics: Arc<Metrics>,
 }
 
@@ -90,6 +93,7 @@ impl ShardedBackend {
             inner,
             config: PartitionConfig::new(shards),
             selection: ShardSelection::Fixed,
+            sddmm_selector: SddmmSelector::default(),
             metrics: Arc::new(Metrics::default()),
         }
     }
@@ -142,6 +146,19 @@ impl ShardedBackend {
             ShardSelection::Static(s) => Some(*s),
             ShardSelection::Online(o) => Some(o.current()),
         }
+    }
+
+    /// Override the per-shard SDDMM rule thresholds (used in `Static`
+    /// selection mode; `Fixed` mode follows the caller's kernel and
+    /// `Online` mode asks the shared selector).
+    pub fn with_sddmm_selector(mut self, selector: SddmmSelector) -> Self {
+        self.sddmm_selector = selector;
+        self
+    }
+
+    /// The per-shard SDDMM rule thresholds in effect for `Static` mode.
+    pub fn sddmm_selector(&self) -> SddmmSelector {
+        self.sddmm_selector
     }
 }
 
@@ -235,6 +252,83 @@ impl SpmmBackend for ShardedBackend {
         Ok(Execution {
             y,
             artifact: format!("sharded(k={})[{}]", prep.shards.len(), labels.join("+")),
+        })
+    }
+
+    fn execute_sddmm(
+        &self,
+        operand: &PreparedOperand,
+        u: &DenseMatrix,
+        v: &DenseMatrix,
+        kernel: KernelKind,
+    ) -> Result<SddmmExecution> {
+        let prep: &ShardedPrepared = operand.state()?;
+        operand.check_sddmm_operands(u, v)?;
+        let d = u.cols;
+        let kernels: Vec<KernelKind> = match &self.selection {
+            ShardSelection::Static(_) => {
+                let feats: Vec<MatrixFeatures> =
+                    prep.shards.iter().map(|s| s.features.features).collect();
+                self.sddmm_selector.select_shards(&feats, d)
+            }
+            ShardSelection::Online(sel) => prep
+                .shards
+                .iter()
+                .map(|s| sel.select_sddmm(&s.features.features, d))
+                .collect(),
+            ShardSelection::Fixed => vec![kernel; prep.shards.len()],
+        };
+        // Fan out: shard i owns the rows of its span, whose U block is the
+        // matching contiguous row slice; V is shared whole. Shard outputs
+        // are disjoint contiguous nnz ranges of the stream (row slices
+        // preserve stream order), so the gather is a straight copy.
+        let inner = self.inner.as_ref();
+        let results: Vec<Result<(SddmmExecution, Duration)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = prep
+                .shards
+                .iter()
+                .zip(&kernels)
+                .map(|(shard, &k)| {
+                    let rows = shard.features.span.rows.clone();
+                    let usub = DenseMatrix::from_vec(
+                        rows.end - rows.start,
+                        d,
+                        u.data[rows.start * d..rows.end * d].to_vec(),
+                    );
+                    scope.spawn(move || -> Result<(SddmmExecution, Duration)> {
+                        let t0 = Instant::now();
+                        let exec = inner.execute_sddmm(&shard.operand, &usub, v, k)?;
+                        Ok((exec, t0.elapsed()))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("sddmm shard thread panicked"))
+                .collect()
+        });
+        let mut values = vec![0f32; operand.nnz()];
+        let mut labels = Vec::with_capacity(prep.shards.len());
+        let mut off = 0usize;
+        for (i, ((shard, &k), res)) in prep.shards.iter().zip(&kernels).zip(results).enumerate() {
+            let (exec, took) = res.with_context(|| {
+                format!("sddmm shard {i} (rows {:?})", shard.features.span.rows)
+            })?;
+            values[off..off + exec.values.len()].copy_from_slice(&exec.values);
+            off += exec.values.len();
+            self.metrics.record_sddmm_shard(k, took);
+            if let ShardSelection::Online(sel) = &self.selection {
+                sel.observe_sddmm(&shard.features.features, d, k, took);
+            }
+            labels.push(exec.artifact);
+        }
+        Ok(SddmmExecution {
+            values,
+            artifact: format!(
+                "sharded(k={})/sddmm[{}]",
+                prep.shards.len(),
+                labels.join("+")
+            ),
         })
     }
 
@@ -376,6 +470,96 @@ mod tests {
             [2, 2, 0, 0],
             "both shards now pick SR-WB"
         );
+    }
+
+    #[test]
+    fn sddmm_fixed_mode_is_bit_identical_to_reference() {
+        use crate::kernels::dense::sddmm_reference;
+        let mut rng = Xoshiro256::seeded(407);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(110, 80, 0.07, &mut rng));
+        let backend = ShardedBackend::new(3);
+        let op = backend.prepare(&csr).unwrap();
+        let d = 9;
+        let u = DenseMatrix::random(110, d, 1.0, &mut rng);
+        let v = DenseMatrix::random(80, d, 1.0, &mut rng);
+        let mut want = vec![0f32; csr.nnz()];
+        sddmm_reference(&csr, &u, &v, &mut want);
+        for kind in KernelKind::ALL {
+            let exec = backend.execute_sddmm(&op, &u, &v, kind).unwrap();
+            assert!(
+                exec.artifact.starts_with("sharded(k=3)/sddmm["),
+                "{}",
+                exec.artifact
+            );
+            assert!(exec.artifact.contains(kind.label()), "{}", exec.artifact);
+            assert_eq!(exec.values, want, "{kind:?}");
+        }
+        assert_eq!(backend.metrics().sddmm_shard_executions(), 4 * 3);
+        // SpMM shard counters stay untouched: the ops are tagged apart
+        assert_eq!(backend.metrics().shard_executions(), 0);
+    }
+
+    #[test]
+    fn sddmm_adaptive_mode_selects_per_shard_by_d_and_skew() {
+        use crate::kernels::dense::sddmm_reference;
+        let csr = moderately_skewed_matrix();
+        let backend = ShardedBackend::new(2).adaptive(AdaptiveSelector::default());
+        // pin the premise: both shards sit above the SDDMM balance
+        // threshold (0.5) — their per-nnz cost is uniform, so skew alone
+        // decides WB
+        let partition = RowPartition::balanced(&csr, &backend.config());
+        for sf in features::extract(&csr, &partition) {
+            assert!(sf.features.cv_row > 0.5, "shard cv {}", sf.features.cv_row);
+        }
+        let op = backend.prepare(&csr).unwrap();
+        let mut rng = Xoshiro256::seeded(408);
+        // d below the lane threshold → sequential dots, balanced: SR-WB
+        let d_small = 8;
+        let u = DenseMatrix::random(csr.rows, d_small, 1.0, &mut rng);
+        let v = DenseMatrix::random(csr.cols, d_small, 1.0, &mut rng);
+        let mut want = vec![0f32; csr.nnz()];
+        sddmm_reference(&csr, &u, &v, &mut want);
+        let exec = backend.execute_sddmm(&op, &u, &v, KernelKind::PrRs).unwrap();
+        assert_eq!(exec.values, want);
+        assert_eq!(backend.metrics().sddmm_shard_kernel_counts(), [0, 2, 0, 0]);
+        // d at the lane threshold → lane-parallel dots, balanced: PR-WB
+        let d_large = 32;
+        let u = DenseMatrix::random(csr.rows, d_large, 1.0, &mut rng);
+        let v = DenseMatrix::random(csr.cols, d_large, 1.0, &mut rng);
+        let mut want = vec![0f32; csr.nnz()];
+        sddmm_reference(&csr, &u, &v, &mut want);
+        let exec = backend.execute_sddmm(&op, &u, &v, KernelKind::SrRs).unwrap();
+        assert_eq!(exec.values, want);
+        assert_eq!(backend.metrics().sddmm_shard_kernel_counts(), [0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn sddmm_degenerate_and_mismatched_operands() {
+        let backend = ShardedBackend::new(4);
+        // empty matrix: one empty shard, empty output
+        let empty = CsrMatrix::from_coo(&CooMatrix::new(0, 5));
+        let op = backend.prepare(&empty).unwrap();
+        let exec = backend
+            .execute_sddmm(
+                &op,
+                &DenseMatrix::zeros(0, 3),
+                &DenseMatrix::zeros(5, 3),
+                KernelKind::PrWb,
+            )
+            .unwrap();
+        assert!(exec.values.is_empty());
+        // operand shape mismatches are rejected
+        let mut rng = Xoshiro256::seeded(409);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(30, 20, 0.2, &mut rng));
+        let op = backend.prepare(&csr).unwrap();
+        assert!(backend
+            .execute_sddmm(
+                &op,
+                &DenseMatrix::zeros(30, 3),
+                &DenseMatrix::zeros(20, 4),
+                KernelKind::SrRs
+            )
+            .is_err());
     }
 
     #[test]

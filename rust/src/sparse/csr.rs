@@ -145,6 +145,22 @@ impl CsrMatrix {
         }
     }
 
+    /// Same sparsity pattern, new values (`values.len()` must equal
+    /// `nnz`). The SDDMM output constructor: `sample(A, U·Vᵀ)` produces
+    /// one value per non-zero of `A` in stream order, and attention-style
+    /// workloads feed that straight back into SpMM as a matrix sharing
+    /// `A`'s pattern (`crate::gnn::attention`).
+    pub fn with_values(&self, values: Vec<f32>) -> CsrMatrix {
+        assert_eq!(values.len(), self.nnz(), "value count must match nnz");
+        CsrMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            indptr: self.indptr.clone(),
+            indices: self.indices.clone(),
+            values,
+        }
+    }
+
     /// Transposed copy (CSC of self, re-expressed as CSR of Aᵀ) via
     /// counting sort — O(nnz + rows + cols).
     pub fn transposed(&self) -> CsrMatrix {
@@ -278,6 +294,50 @@ mod tests {
                 assert_eq!(d[r * 3 + c], td[c * 3 + r]);
             }
         }
+    }
+
+    #[test]
+    fn transpose_matches_dense_property() {
+        // CSC-view round trip: Aᵀ's dense form is the element-wise
+        // transpose of A's, across shapes and densities (not just the
+        // fixed `small()` fixture).
+        run_prop("csr transpose vs dense", 40, |g| {
+            let rows = g.dim();
+            let cols = g.dim();
+            let density = g.f64_in(0.01, 0.5);
+            let coo = CooMatrix::random_uniform(rows, cols, density, g.rng());
+            let m = CsrMatrix::from_coo(&coo);
+            let t = m.transposed();
+            if (t.rows, t.cols) != (cols, rows) {
+                return Err(format!("shape {}x{}", t.rows, t.cols));
+            }
+            let d = m.to_dense();
+            let td = t.to_dense();
+            for r in 0..rows {
+                for c in 0..cols {
+                    if d[r * cols + c] != td[c * rows + r] {
+                        return Err(format!("[{r},{c}] {rows}x{cols}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn with_values_swaps_values_only() {
+        let m = small();
+        let s = m.with_values(vec![9.0, 8.0, 7.0, 6.0]);
+        assert_eq!(s.indptr, m.indptr);
+        assert_eq!(s.indices, m.indices);
+        assert_eq!(s.values, vec![9.0, 8.0, 7.0, 6.0]);
+        assert_eq!((s.rows, s.cols), (m.rows, m.cols));
+    }
+
+    #[test]
+    #[should_panic(expected = "value count")]
+    fn with_values_checks_length() {
+        small().with_values(vec![1.0]);
     }
 
     #[test]

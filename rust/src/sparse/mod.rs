@@ -73,6 +73,37 @@ impl DenseMatrix {
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
+
+    /// Dense product `self · rhs` (`r×c · c×k → r×k`). Plain triple loop —
+    /// the projection matmuls in the GNN layers are tiny next to the
+    /// sparse kernels they feed; this is not a BLAS.
+    pub fn matmul(&self, rhs: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.cols, rhs.rows, "inner dimension mismatch");
+        let mut out = DenseMatrix::zeros(self.rows, rhs.cols);
+        for r in 0..self.rows {
+            let lhs_row = self.row(r);
+            let out_row = &mut out.data[r * rhs.cols..(r + 1) * rhs.cols];
+            for (k, &a) in lhs_row.iter().enumerate() {
+                let rhs_row = rhs.row(k);
+                for j in 0..rhs.cols {
+                    out_row[j] += a * rhs_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Transposed copy (`r×c → c×r`). Used for the `Xᵀ·G` weight-gradient
+    /// products in the native GNN trainer.
+    pub fn transposed(&self) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -91,5 +122,26 @@ mod tests {
     #[should_panic(expected = "mismatch")]
     fn from_vec_checks_shape() {
         DenseMatrix::from_vec(2, 2, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn matmul_known_product() {
+        // [[1, 2], [3, 4]] · [[5, 6], [7, 8]] = [[19, 22], [43, 50]]
+        let a = DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = DenseMatrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.matmul(&b).data, vec![19.0, 22.0, 43.0, 50.0]);
+        // rectangular: (1×2) · (2×3)
+        let c = DenseMatrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let d = DenseMatrix::from_vec(2, 3, vec![1.0, 0.0, 1.0, 0.0, 1.0, 1.0]);
+        assert_eq!(c.matmul(&d).data, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn transposed_round_trips() {
+        let a = DenseMatrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let t = a.transposed();
+        assert_eq!((t.rows, t.cols), (3, 2));
+        assert_eq!(t.data, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        assert_eq!(t.transposed(), a);
     }
 }

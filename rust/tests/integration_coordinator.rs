@@ -101,13 +101,7 @@ fn server_loop_round_trips_requests() {
         for tag in 0..5u64 {
             let (rtx, rrx) = mpsc::channel();
             let x = DenseMatrix::random(120, 1, 1.0, &mut rng);
-            tx.send(Request {
-                matrix: h,
-                x,
-                tag,
-                reply: rtx,
-            })
-            .unwrap();
+            tx.send(Request::spmm(h, x, tag, rtx)).unwrap();
             replies.push(rrx);
         }
         drop(tx); // close the channel so the server loop exits when done

@@ -111,13 +111,7 @@ fn server_loop_with_concurrent_producers_matches_unbatched() {
                 let mut want = DenseMatrix::zeros(120, n);
                 spmm_reference(m, &x, &mut want);
                 let (rtx, rrx) = mpsc::channel();
-                tx.send(Request {
-                    matrix: h,
-                    x,
-                    tag,
-                    reply: rtx,
-                })
-                .unwrap();
+                tx.send(Request::spmm(h, x, tag, rtx)).unwrap();
                 pending.push((tag, want, rrx));
             }
             drop(tx);
@@ -159,15 +153,10 @@ fn server_reports_errors_and_metrics_count_them() {
 
     let (tx, rx) = mpsc::channel::<Request>();
     let (rtx, rrx) = mpsc::channel();
-    tx.send(Request {
-        matrix: h,
-        // wrong inner dimension (119 rows, should be 120) at full batch
-        // width so the flush — and the failure — happens immediately
-        x: DenseMatrix::zeros(119, 4),
-        tag: 9,
-        reply: rtx,
-    })
-    .unwrap();
+    // wrong inner dimension (119 rows, should be 120) at full batch
+    // width so the flush — and the failure — happens immediately
+    tx.send(Request::spmm(h, DenseMatrix::zeros(119, 4), 9, rtx))
+        .unwrap();
     drop(tx);
 
     serve(

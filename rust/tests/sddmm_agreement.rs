@@ -1,0 +1,303 @@
+//! SDDMM agreement and robustness surface (ISSUE 5):
+//!
+//! - all four SDDMM designs, directly and through `NativeBackend` /
+//!   `ShardedBackend` / the engine, are **bit-for-bit** equal to the
+//!   dense reference across generator families (the kernels share one
+//!   canonical dot-product summation order — see `sddmm` module docs);
+//! - degenerate inputs (`nnz == 0`, `rows == 0`, `d == 0`) are no-ops;
+//! - non-finite entries in dense rows no non-zero references can never
+//!   leak into outputs, while genuinely referenced NaNs propagate;
+//! - the op-tagged server path round-trips SDDMM requests next to SpMM
+//!   traffic;
+//! - the fused SDDMM→softmax→SpMM attention forward runs through the
+//!   serving engine (sharded + cached) with per-op kernel-selection
+//!   counters visible in `Metrics` — the acceptance bar of ISSUE 5.
+
+use ge_spmm::backend::{NativeBackend, SpmmBackend};
+use ge_spmm::coordinator::server::{Request, Server, ServerConfig, ServerReply};
+use ge_spmm::coordinator::SpmmEngine;
+use ge_spmm::gen::powerlaw::PowerLawConfig;
+use ge_spmm::gen::rmat::RmatConfig;
+use ge_spmm::gnn::AttentionLayer;
+use ge_spmm::kernels::dense::sddmm_reference;
+use ge_spmm::kernels::{KernelKind, SparseOp, WARP};
+use ge_spmm::sddmm;
+use ge_spmm::shard::ShardedBackend;
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix, SegmentedMatrix};
+use ge_spmm::util::prng::Xoshiro256;
+use ge_spmm::util::proptest::{assert_close, run_prop};
+use ge_spmm::util::threadpool::ThreadPool;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+#[test]
+fn all_designs_bit_identical_across_generator_families() {
+    run_prop("sddmm 2x2 space vs reference", 24, |g| {
+        let family = *g.choose(&[0usize, 1, 2, 3]);
+        let coo = match family {
+            0 => {
+                let rows = g.dim() * 3 + 2;
+                let cols = g.dim() * 3 + 2;
+                CooMatrix::random_uniform(rows, cols, 0.2, g.rng())
+            }
+            1 => {
+                let rows = g.dim() * 4 + 8;
+                PowerLawConfig {
+                    rows,
+                    cols: rows,
+                    alpha: 1.7,
+                    min_row: 1,
+                    max_row: (rows / 2).max(2),
+                }
+                .generate(g.rng())
+            }
+            2 => ge_spmm::gen::banded::banded(g.dim() * 4 + 4, &[-1, 0, 1], g.rng()),
+            _ => RmatConfig::new(6, 4.0).generate(g.rng()),
+        };
+        let a = CsrMatrix::from_coo(&coo);
+        let seg = SegmentedMatrix::from_csr(&a, WARP);
+        let d = *g.choose(&[1usize, 7, 32, 64]);
+        let u = DenseMatrix::from_vec(a.rows, d, g.vec_f32(a.rows * d));
+        let v = DenseMatrix::from_vec(a.cols, d, g.vec_f32(a.cols * d));
+        let mut want = vec![0f32; a.nnz()];
+        sddmm_reference(&a, &u, &v, &mut want);
+        // the four designs, run directly
+        let workers = *g.choose(&[1usize, 3, 6]);
+        for kind in KernelKind::ALL {
+            let mut got = vec![0f32; a.nnz()];
+            sddmm::run(kind, &a, &seg, &u, &v, &mut got, &ThreadPool::new(workers));
+            if got != want {
+                return Err(format!("{kind:?} family={family} d={d}"));
+            }
+        }
+        // ... and through the backends (fixed-kernel sharded included)
+        let native = NativeBackend::new(ThreadPool::new(workers));
+        let op = native.prepare(&a).map_err(|e| e.to_string())?;
+        let sharded = ShardedBackend::new(*g.choose(&[2usize, 4]));
+        let sop = sharded.prepare(&a).map_err(|e| e.to_string())?;
+        for kind in KernelKind::ALL {
+            let e1 = native
+                .execute_sddmm(&op, &u, &v, kind)
+                .map_err(|e| e.to_string())?;
+            let e2 = sharded
+                .execute_sddmm(&sop, &u, &v, kind)
+                .map_err(|e| e.to_string())?;
+            if e1.values != want || e2.values != want {
+                return Err(format!("backend {kind:?} family={family} d={d}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn degenerate_shapes_are_noops() {
+    let backend = NativeBackend::default();
+    // nnz == 0 (rows > 0), rows == 0, and d == 0
+    for (rows, cols) in [(5usize, 7usize), (0, 7), (0, 0)] {
+        let a = CsrMatrix::from_coo(&CooMatrix::new(rows, cols));
+        let op = backend.prepare(&a).unwrap();
+        for d in [0usize, 3] {
+            let u = DenseMatrix::zeros(rows, d);
+            let v = DenseMatrix::zeros(cols, d);
+            for kind in KernelKind::ALL {
+                let exec = backend.execute_sddmm(&op, &u, &v, kind).unwrap();
+                assert!(exec.values.is_empty(), "{rows}x{cols} d={d} {kind:?}");
+            }
+        }
+    }
+    // d == 0 on a non-empty matrix: every sampled dot is the empty sum
+    let mut coo = CooMatrix::new(3, 4);
+    coo.push(0, 1, 2.0);
+    coo.push(2, 3, -1.0);
+    let a = CsrMatrix::from_coo(&coo);
+    let op = backend.prepare(&a).unwrap();
+    for kind in KernelKind::ALL {
+        let exec = backend
+            .execute_sddmm(&op, &DenseMatrix::zeros(3, 0), &DenseMatrix::zeros(4, 0), kind)
+            .unwrap();
+        assert_eq!(exec.values, vec![0.0; 2], "{kind:?}");
+    }
+}
+
+/// Fixture mirroring `tests/robustness.rs`: a skewed pattern where
+/// column 0 of the dense operands is never referenced and carries
+/// non-finite values.
+fn nan_fixture() -> (CsrMatrix, DenseMatrix, DenseMatrix) {
+    let mut coo = CooMatrix::new(40, 50);
+    for c in 1..45 {
+        coo.push(7, c, 0.25 * c as f32);
+    }
+    for r in 0..40 {
+        if r != 7 {
+            coo.push(r, 1 + (r * 3) % 49, 1.0 + r as f32);
+        }
+    }
+    let a = CsrMatrix::from_coo(&coo);
+    let d = 3;
+    let mut rng = Xoshiro256::seeded(61);
+    let u = DenseMatrix::random(40, d, 1.0, &mut rng);
+    let mut v = DenseMatrix::random(50, d, 1.0, &mut rng);
+    // poison V's row 0: no non-zero sits in column 0
+    v.data[0] = f32::NAN;
+    v.data[1] = f32::INFINITY;
+    v.data[2] = f32::NEG_INFINITY;
+    (a, u, v)
+}
+
+#[test]
+fn unreferenced_poison_cannot_leak_and_real_nan_propagates() {
+    let (a, u, v) = nan_fixture();
+    let seg = SegmentedMatrix::from_csr(&a, WARP);
+    let mut want = vec![0f32; a.nnz()];
+    sddmm_reference(&a, &u, &v, &mut want);
+    assert!(want.iter().all(|x| x.is_finite()), "fixture broken");
+    for kind in KernelKind::ALL {
+        for workers in [1usize, 4] {
+            let mut got = vec![0f32; a.nnz()];
+            sddmm::run(kind, &a, &seg, &u, &v, &mut got, &ThreadPool::new(workers));
+            assert_eq!(got, want, "{kind:?} workers={workers}");
+        }
+    }
+    // now reference the poisoned column: its sampled values must go NaN,
+    // everything else must stay bit-identical
+    let mut coo = CooMatrix::new(40, 50);
+    for r in 0..40 {
+        if r != 7 {
+            coo.push(r, 1 + (r * 3) % 49, 1.0 + r as f32);
+        }
+    }
+    coo.push(7, 0, 1.0); // touches poisoned column 0
+    let a2 = CsrMatrix::from_coo(&coo);
+    let seg2 = SegmentedMatrix::from_csr(&a2, WARP);
+    let mut want2 = vec![0f32; a2.nnz()];
+    sddmm_reference(&a2, &u, &v, &mut want2);
+    assert!(want2.iter().any(|x| x.is_nan()), "fixture refs poison");
+    for kind in KernelKind::ALL {
+        let mut got = vec![0f32; a2.nnz()];
+        sddmm::run(kind, &a2, &seg2, &u, &v, &mut got, &ThreadPool::new(3));
+        for (i, (g, w)) in got.iter().zip(&want2).enumerate() {
+            if w.is_nan() {
+                assert!(g.is_nan(), "{kind:?} [{i}] dropped a real NaN");
+            } else {
+                assert_eq!(g.to_bits(), w.to_bits(), "{kind:?} [{i}]");
+            }
+        }
+    }
+}
+
+#[test]
+fn server_round_trips_op_tagged_requests() {
+    let mut rng = Xoshiro256::seeded(71);
+    let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(60, 60, 0.1, &mut rng));
+    let engine = Arc::new(SpmmEngine::native().with_prepared_cache(16 << 20));
+    let h = engine.register(a.clone()).unwrap();
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig {
+            max_width: 4,
+            max_delay: Duration::from_millis(2),
+            workers: 2,
+            max_queue: 64,
+        },
+    );
+    let d = 6;
+    let u = DenseMatrix::random(60, d, 1.0, &mut rng);
+    let v = DenseMatrix::random(60, d, 1.0, &mut rng);
+    let mut want_vals = vec![0f32; a.nnz()];
+    sddmm_reference(&a, &u, &v, &mut want_vals);
+    let x = DenseMatrix::random(60, 4, 1.0, &mut rng);
+    let mut want_y = DenseMatrix::zeros(60, 4);
+    ge_spmm::kernels::dense::spmm_reference(&a, &x, &mut want_y);
+
+    let (stx, srx) = mpsc::channel();
+    assert!(server.submit(Request::sddmm(h, u, v, 1, stx)));
+    let (mtx, mrx) = mpsc::channel();
+    assert!(server.submit(Request::spmm(h, x, 2, mtx)));
+
+    match srx.recv_timeout(Duration::from_secs(60)).unwrap() {
+        ServerReply::Ok(r) => {
+            assert_eq!(r.tag, 1);
+            assert_eq!(r.op, SparseOp::Sddmm);
+            assert_eq!((r.y.rows, r.y.cols), (a.nnz(), 1));
+            assert_eq!(r.y.data, want_vals, "sampled values round-trip");
+        }
+        ServerReply::Err(e) => panic!("sddmm request failed: {e}"),
+    }
+    match mrx.recv_timeout(Duration::from_secs(60)).unwrap() {
+        ServerReply::Ok(r) => {
+            assert_eq!(r.tag, 2);
+            assert_eq!(r.op, SparseOp::Spmm);
+            assert_close(&r.y.data, &want_y.data, 1e-4, 1e-4).unwrap();
+        }
+        ServerReply::Err(e) => panic!("spmm request failed: {e}"),
+    }
+    // bad sddmm operands are rejected without touching other requests
+    let (btx, brx) = mpsc::channel();
+    assert!(server.submit(Request::sddmm(
+        h,
+        DenseMatrix::zeros(60, 3),
+        DenseMatrix::zeros(60, 4),
+        3,
+        btx
+    )));
+    match brx.recv_timeout(Duration::from_secs(60)).unwrap() {
+        ServerReply::Err(e) => assert!(e.contains("sddmm operand"), "{e}"),
+        ServerReply::Ok(_) => panic!("operand mismatch must not succeed"),
+    }
+    server.shutdown();
+    // per-op accounting on the shared engine
+    assert_eq!(engine.metrics.sddmm_requests(), 1);
+    assert_eq!(engine.metrics.requests(), 1);
+    assert_eq!(engine.metrics.errors(), 1);
+    assert_eq!(engine.metrics.sddmm_kernel_counts().iter().sum::<u64>(), 1);
+}
+
+#[test]
+fn fused_attention_runs_through_the_serving_engine() {
+    // The ISSUE-5 acceptance bar: SDDMM→softmax→SpMM end to end on the
+    // serving shape (prepared-matrix cache + size routing with the
+    // threshold forced low, so both sparse stages take the sharded
+    // per-shard-adaptive path), per-op counters visible.
+    let mut rng = Xoshiro256::seeded(81);
+    let n = 200;
+    let adj = {
+        let coo = CooMatrix::random_uniform(n, n, 0.04, &mut rng);
+        let csr = CsrMatrix::from_coo(&coo);
+        csr.with_values(vec![1.0; csr.nnz()])
+    };
+    let x = DenseMatrix::random(n, 12, 1.0, &mut rng);
+    let layer = AttentionLayer::new(12, 8, 82);
+
+    // ground truth from the plain native engine (itself pinned against a
+    // dense attention reference in the attention unit tests)
+    let native = SpmmEngine::native();
+    let hn = native.register(adj.clone()).unwrap();
+    let want = layer.forward(&native, &adj, hn, &x).unwrap();
+
+    let serving = SpmmEngine::serving(64 << 20, 1, 2);
+    let hs = serving.register(adj.clone()).unwrap();
+    let got = layer.forward(&serving, &adj, hs, &x).unwrap();
+    assert_close(&got.y.data, &want.y.data, 1e-4, 1e-4).unwrap();
+    assert_eq!(
+        got.attention.values, want.attention.values,
+        "SDDMM + softmax are bit-identical across engine shapes"
+    );
+
+    // per-op kernel-selection counters, both grains
+    assert_eq!(serving.metrics.sddmm_requests(), 1);
+    assert_eq!(serving.metrics.requests(), 1);
+    assert_eq!(serving.metrics.sddmm_kernel_counts().iter().sum::<u64>(), 1);
+    assert_eq!(serving.metrics.kernel_counts().iter().sum::<u64>(), 1);
+    assert!(
+        serving.metrics.sddmm_shard_executions() >= 2,
+        "score stage fanned out"
+    );
+    assert!(
+        serving.metrics.shard_executions() >= 2,
+        "aggregation stage fanned out"
+    );
+    // both registrations (adjacency + intermediate attention) went
+    // through the prepared-matrix cache
+    assert_eq!(serving.metrics.cache_misses(), 2);
+}

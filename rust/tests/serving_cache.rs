@@ -157,12 +157,7 @@ fn duplicate_in_flight_tags_are_rejected() {
     let (tx1, rx1) = mpsc::channel();
     let (tx2, rx2) = mpsc::channel();
     for reply in [tx1, tx2] {
-        assert!(server.submit(Request {
-            matrix: h,
-            x: int_dense(20, 1, &mut rng),
-            tag: 7,
-            reply,
-        }));
+        assert!(server.submit(Request::spmm(h, int_dense(20, 1, &mut rng), 7, reply)));
     }
     match rx2.recv_timeout(Duration::from_secs(30)).unwrap() {
         ServerReply::Err(e) => assert!(e.contains("duplicate"), "{e}"),
@@ -197,12 +192,7 @@ fn admission_bound_rejects_and_recovers() {
     let mut accepted = 0;
     for tag in 0..4u64 {
         let (rtx, rrx) = mpsc::channel();
-        if server.submit(Request {
-            matrix: h,
-            x: int_dense(36, 1, &mut rng),
-            tag,
-            reply: rtx,
-        }) {
+        if server.submit(Request::spmm(h, int_dense(36, 1, &mut rng), tag, rtx)) {
             accepted += 1;
         }
         replies.push(rrx);
@@ -278,12 +268,7 @@ fn concurrent_server_matches_serial_bit_for_bit() {
                     spmm_reference(&mats[i], &x, &mut want);
                     let tag = (p * REQUESTS + r) as u64;
                     let (rtx, rrx) = mpsc::channel();
-                    assert!(server.submit(Request {
-                        matrix: handles[i],
-                        x,
-                        tag,
-                        reply: rtx,
-                    }));
+                    assert!(server.submit(Request::spmm(handles[i], x, tag, rtx)));
                     pending.push((tag, want, rrx));
                 }
                 for (tag, want, rrx) in pending {
