@@ -1,0 +1,176 @@
+//! SIMD speedup measurement (ISSUE 6): scalar vs vectorized inner loops,
+//! at the microkernel grain and the kernel grain.
+//!
+//! Both `vec8` backends (scalar and 8-lane tiled) are always compiled, so
+//! one binary measures the microkernel speedup regardless of features.
+//! The kernel-grain rows compare the *configured* kernels against a local
+//! always-scalar baseline: in a default build they should be ≈1.0× (same
+//! code), under `--features simd` they show what the tiling buys end to
+//! end. Kernel rows run on a serial pool so the ratio isolates
+//! vectorization from threading. `--json <path>` records everything via
+//! `BenchRecord` (convention in BENCHMARKS.md).
+//!
+//! Run: `cargo bench --bench simd_speedup [--features simd] -- --json
+//! BENCH_simd_speedup_<date>.json`
+
+use ge_spmm::bench::harness::bench_fn;
+use ge_spmm::bench::record::{json_path_arg, BenchRecord};
+use ge_spmm::gen::powerlaw::PowerLawConfig;
+use ge_spmm::kernels::{merge_path, sr_rs, vec8};
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix};
+use ge_spmm::util::json::{obj, s, Json};
+use ge_spmm::util::prng::Xoshiro256;
+use ge_spmm::util::threadpool::ThreadPool;
+use std::hint::black_box;
+
+fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Pinned scalar SpMM — same reduction order as `sr_rs`, never tiled, so
+/// the kernel-grain ratio measures exactly what the `simd` feature buys.
+fn spmm_scalar(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix) {
+    let n = x.cols;
+    y.data.fill(0.0);
+    for r in 0..a.rows {
+        let (cols, vals) = a.row(r);
+        let out = &mut y.data[r * n..(r + 1) * n];
+        for (&c, &v) in cols.iter().zip(vals) {
+            let xrow = x.row(c as usize);
+            for j in 0..n {
+                out[j] += v * xrow[j];
+            }
+        }
+    }
+}
+
+fn main() {
+    let simd = cfg!(feature = "simd");
+    let portable = cfg!(feature = "portable_simd");
+    println!("== SIMD speedup (this machine) ==");
+    println!("features: simd={simd} portable_simd={portable}");
+    let mut record = json_path_arg().map(|path| {
+        (
+            path,
+            BenchRecord::new("simd_speedup").with_config(obj(vec![
+                ("simd", Json::Bool(simd)),
+                ("portable_simd", Json::Bool(portable)),
+                ("note", s("speedups are scalar_median / vectorized_median (>1 = faster)")),
+            ])),
+        )
+    });
+    let push = |rec: &mut Option<(std::path::PathBuf, BenchRecord)>, name: &str, v: f64| {
+        println!("  {name}: {v:.3}x");
+        if let Some((_, r)) = rec.as_mut() {
+            r.push_value(name, v, "x speedup");
+        }
+    };
+
+    // --- microkernel grain: tiled vs scalar, amortized over many rows ---
+    let mut rng = Xoshiro256::seeded(11);
+    const ROWS: usize = 2048;
+    let mut axpy_speedups = Vec::new();
+    let mut dot_speedups = Vec::new();
+    for len in [32usize, 64, 128, 256] {
+        let x = DenseMatrix::random(1, len, 1.0, &mut rng).data;
+        let mut buf = DenseMatrix::random(ROWS, len, 1.0, &mut rng).data;
+        let sc = bench_fn(&format!("axpy_scalar len={len}"), || {
+            for chunk in buf.chunks_exact_mut(len) {
+                vec8::axpy_scalar(chunk, 1.000001, &x);
+            }
+            black_box(&buf);
+        });
+        let ti = bench_fn(&format!("axpy_tiled len={len}"), || {
+            for chunk in buf.chunks_exact_mut(len) {
+                vec8::axpy_tiled(chunk, 1.000001, &x);
+            }
+            black_box(&buf);
+        });
+        axpy_speedups.push(sc.median_s() / ti.median_s());
+        push(&mut record, &format!("axpy len={len}"), sc.median_s() / ti.median_s());
+
+        let a = DenseMatrix::random(ROWS, len, 1.0, &mut rng);
+        let sc = bench_fn(&format!("dot_scalar d={len}"), || {
+            let mut acc = 0f32;
+            for r in 0..ROWS {
+                acc += vec8::dot_scalar(a.row(r), &x);
+            }
+            black_box(acc);
+        });
+        let bl = bench_fn(&format!("dot_blocked d={len}"), || {
+            let mut acc = 0f32;
+            for r in 0..ROWS {
+                acc += vec8::dot_blocked(a.row(r), &x);
+            }
+            black_box(acc);
+        });
+        dot_speedups.push(sc.median_s() / bl.median_s());
+        push(&mut record, &format!("dot d={len}"), sc.median_s() / bl.median_s());
+    }
+    push(&mut record, "axpy geomean", geomean(&axpy_speedups));
+    push(&mut record, "dot geomean", geomean(&dot_speedups));
+
+    // --- kernel grain: configured sr_rs vs pinned scalar, serial pool ---
+    let serial = ThreadPool::serial();
+    let mut rng = Xoshiro256::seeded(13);
+    let uniform = CsrMatrix::from_coo(&CooMatrix::random_uniform(4096, 4096, 0.002, &mut rng));
+    let plaw = CsrMatrix::from_coo(
+        &PowerLawConfig { rows: 4096, cols: 4096, alpha: 1.6, min_row: 1, max_row: 512 }
+            .generate(&mut rng),
+    );
+    let mut kernel_speedups = Vec::new();
+    for (mname, a) in [("uniform", &uniform), ("plaw", &plaw)] {
+        for n in [32usize, 128] {
+            let x = DenseMatrix::random(a.cols, n, 1.0, &mut rng);
+            let mut y = DenseMatrix::zeros(a.rows, n);
+            let sc = bench_fn(&format!("{mname} n={n} scalar"), || {
+                spmm_scalar(a, &x, &mut y);
+            });
+            let ke = bench_fn(&format!("{mname} n={n} sr_rs"), || {
+                sr_rs::spmm(a, &x, &mut y, &serial);
+            });
+            kernel_speedups.push(sc.median_s() / ke.median_s());
+            push(
+                &mut record,
+                &format!("sr_rs {mname} n={n}"),
+                sc.median_s() / ke.median_s(),
+            );
+            let al = x.to_aligned();
+            let ka = bench_fn(&format!("{mname} n={n} sr_rs aligned"), || {
+                sr_rs::spmm_aligned(a, &al, &mut y, &serial);
+            });
+            push(
+                &mut record,
+                &format!("sr_rs+aligned {mname} n={n}"),
+                sc.median_s() / ka.median_s(),
+            );
+        }
+    }
+    push(&mut record, "sr_rs geomean", geomean(&kernel_speedups));
+
+    // --- traversal: merge-path vs blocked on the heavy tail (parallel) ---
+    let pool = ThreadPool::default_parallel();
+    let n = 32;
+    let x = DenseMatrix::random(plaw.cols, n, 1.0, &mut rng);
+    let mut y = DenseMatrix::zeros(plaw.rows, n);
+    let blocked = bench_fn("plaw n=32 sr_rs blocked", || {
+        sr_rs::spmm(&plaw, &x, &mut y, &pool);
+    });
+    let mp = bench_fn("plaw n=32 sr_rs merge-path", || {
+        merge_path::spmm(&plaw, &x, &mut y, &pool);
+    });
+    push(&mut record, "merge_path vs blocked (plaw n=32)", blocked.median_s() / mp.median_s());
+
+    if let Some((path, mut rec)) = record {
+        rec.set_notes(&format!(
+            "scalar/vectorized latency ratios, features simd={simd} portable_simd={portable}; \
+             kernel rows use a serial pool to isolate vectorization from threading; \
+             values ≈1.0 are expected in a default (scalar) build"
+        ));
+        rec.save(&path).expect("writing bench record");
+        println!("wrote {}", path.display());
+    }
+}

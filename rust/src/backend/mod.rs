@@ -39,7 +39,7 @@ pub mod pjrt;
 pub mod routed;
 
 pub use crate::shard::ShardedBackend;
-pub use native::NativeBackend;
+pub use native::{NativeBackend, TraversalMode};
 pub use routed::RoutedBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;

@@ -6,37 +6,89 @@
 //! machine with no artifacts and no libxla. It absorbs the former
 //! free-function `kernels::run_kernel` / `PreparedMatrix` dispatch path so
 //! the crate has exactly one prepare-once/execute-many pipeline.
+//!
+//! [`TraversalMode`] adds an orthogonal policy axis for the SR kernels:
+//! blocked rows (default), merge-path, or per-operand adaptive on the
+//! features computed at prepare time (`DESIGN.md` §Vectorization).
 
 use super::{Execution, PreparedOperand, SddmmExecution, SpmmBackend};
-use crate::kernels::{pr_rs, pr_wb, sr_rs, sr_wb, KernelKind, WARP};
+use crate::features::MatrixFeatures;
+use crate::kernels::{merge_path, pr_rs, pr_wb, sr_rs, sr_wb, KernelKind, Traversal, WARP};
+use crate::selector::AdaptiveSelector;
 use crate::sparse::{CsrMatrix, DenseMatrix, SegmentedMatrix};
 use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
 
+/// How the backend walks rows for the sequential-reduction kernels
+/// (`DESIGN.md` §Vectorization). Orthogonal to [`KernelKind`]: results
+/// are numerically interchangeable, only worker partitioning differs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraversalMode {
+    /// Always the kernels' native blocked traversal (the default —
+    /// matches pre-traversal behavior exactly).
+    Blocked,
+    /// Always merge-path ([`crate::kernels::merge_path`]) for SR kernels.
+    MergePath,
+    /// Decide per operand from its features via
+    /// [`AdaptiveSelector::sr_traversal`]. Because sharded execution
+    /// prepares each shard through its own inner backend, this yields
+    /// per-shard traversal decisions for free.
+    Adaptive(AdaptiveSelector),
+}
+
+impl TraversalMode {
+    /// Resolve the mode against a prepared operand's features.
+    fn resolve(&self, f: &MatrixFeatures) -> Traversal {
+        match self {
+            TraversalMode::Blocked => Traversal::Blocked,
+            TraversalMode::MergePath => Traversal::MergePath,
+            TraversalMode::Adaptive(sel) => sel.sr_traversal(f),
+        }
+    }
+}
+
 /// Native prepared operand: CSR for the row-split kernels plus the
 /// `WARP`-length segmented layout for the workload-balanced kernels, both
 /// built once at registration (mirrors how the GPU kernels take
-/// preprocessed buffers).
+/// preprocessed buffers). Features are computed here too, so adaptive
+/// traversal costs nothing at execute time.
 struct NativePrepared {
     csr: CsrMatrix,
     segments: SegmentedMatrix,
+    features: MatrixFeatures,
 }
 
 /// CPU execution backend over [`crate::kernels`].
 #[derive(Clone, Copy, Debug)]
 pub struct NativeBackend {
     pool: ThreadPool,
+    traversal: TraversalMode,
 }
 
 impl NativeBackend {
-    /// Backend over an explicit pool (worker-count policy).
+    /// Backend over an explicit pool (worker-count policy). Traversal
+    /// defaults to [`TraversalMode::Blocked`].
     pub fn new(pool: ThreadPool) -> Self {
-        Self { pool }
+        Self {
+            pool,
+            traversal: TraversalMode::Blocked,
+        }
     }
 
     /// Single-worker backend (deterministic scheduling; A/B baseline).
     pub fn serial() -> Self {
         Self::new(ThreadPool::serial())
+    }
+
+    /// Same backend with an explicit SR row-traversal policy.
+    pub fn with_traversal(mut self, traversal: TraversalMode) -> Self {
+        self.traversal = traversal;
+        self
+    }
+
+    /// The SR row-traversal policy in effect.
+    pub fn traversal(&self) -> TraversalMode {
+        self.traversal
     }
 
     /// The pool kernels execute on.
@@ -59,6 +111,7 @@ impl SpmmBackend for NativeBackend {
 
     fn prepare(&self, csr: &CsrMatrix) -> Result<PreparedOperand> {
         let segments = SegmentedMatrix::from_csr(csr, WARP);
+        let features = MatrixFeatures::of(csr);
         Ok(PreparedOperand::new(
             csr.rows,
             csr.cols,
@@ -66,6 +119,7 @@ impl SpmmBackend for NativeBackend {
             Box::new(NativePrepared {
                 csr: csr.clone(),
                 segments,
+                features,
             }),
         ))
     }
@@ -81,8 +135,18 @@ impl SpmmBackend for NativeBackend {
         let mut y = DenseMatrix::zeros(prep.csr.rows, x.cols);
         // Degenerate shapes (no output rows / zero-width X) have nothing to
         // compute; skip the kernels, which assume at least one output row.
+        let mut merge_pathed = false;
         if prep.csr.rows > 0 && x.cols > 0 {
+            // The traversal policy only applies to sequential reduction:
+            // merge-path preserves per-row ascending-k order, which is the
+            // SR contract; the PR designs reduce within lane bundles.
+            let sr_mp = !kernel.is_parallel_reduction()
+                && self.traversal.resolve(&prep.features) == Traversal::MergePath;
             match kernel {
+                _ if sr_mp => {
+                    merge_path::spmm(&prep.csr, x, &mut y, &self.pool);
+                    merge_pathed = true;
+                }
                 KernelKind::SrRs => sr_rs::spmm(&prep.csr, x, &mut y, &self.pool),
                 KernelKind::SrWb => sr_wb::spmm(&prep.segments, x, &mut y, &self.pool),
                 KernelKind::PrRs => pr_rs::spmm(&prep.csr, x, &mut y, &self.pool),
@@ -91,7 +155,11 @@ impl SpmmBackend for NativeBackend {
         }
         Ok(Execution {
             y,
-            artifact: format!("native/{}", kernel.label()),
+            artifact: if merge_pathed {
+                format!("native/{}+mp", kernel.label())
+            } else {
+                format!("native/{}", kernel.label())
+            },
         })
     }
 
@@ -183,6 +251,51 @@ mod tests {
         let bad_u = DenseMatrix::zeros(69, 4);
         let v = DenseMatrix::zeros(50, 4);
         assert!(backend.execute_sddmm(&op, &bad_u, &v, KernelKind::SrRs).is_err());
+    }
+
+    #[test]
+    fn merge_path_traversal_matches_blocked_and_tags_the_artifact() {
+        let mut rng = Xoshiro256::seeded(41);
+        // heavy-tailed: one row dominates, so adaptive mode flips too
+        let mut coo = CooMatrix::new(400, 200);
+        for c in 0..200 {
+            coo.push(3, c, 0.01 * c as f32);
+        }
+        for r in 0..60 {
+            coo.push(r + 100, r, 1.0);
+        }
+        let csr = CsrMatrix::from_coo(&coo);
+        let x = DenseMatrix::random(200, 9, 1.0, &mut rng);
+        let pool = ThreadPool::new(3);
+
+        let blocked = NativeBackend::new(pool);
+        let op = blocked.prepare(&csr).unwrap();
+        let base = blocked.execute(&op, &x, KernelKind::SrRs).unwrap();
+        assert_eq!(base.artifact, "native/sr_rs");
+
+        let mp = NativeBackend::new(pool).with_traversal(TraversalMode::MergePath);
+        for kind in [KernelKind::SrRs, KernelKind::SrWb] {
+            let exec = mp.execute(&op, &x, kind).unwrap();
+            assert_eq!(exec.artifact, format!("native/{}+mp", kind.label()));
+            assert_close(&exec.y.data, &base.y.data, 1e-4, 1e-4).unwrap();
+        }
+        // PR kernels are untouched by the policy
+        let pr = mp.execute(&op, &x, KernelKind::PrRs).unwrap();
+        assert_eq!(pr.artifact, "native/pr_rs");
+
+        // adaptive: this operand's cv_row exceeds the default t_mp
+        let adaptive = NativeBackend::new(pool)
+            .with_traversal(TraversalMode::Adaptive(AdaptiveSelector::default()));
+        let exec = adaptive.execute(&op, &x, KernelKind::SrRs).unwrap();
+        assert_eq!(exec.artifact, "native/sr_rs+mp");
+        assert_close(&exec.y.data, &base.y.data, 1e-4, 1e-4).unwrap();
+
+        // ... but a flat matrix stays blocked under the same backend
+        let flat = CsrMatrix::from_coo(&CooMatrix::random_uniform(80, 80, 0.1, &mut rng));
+        let flat_op = adaptive.prepare(&flat).unwrap();
+        let xf = DenseMatrix::random(80, 4, 1.0, &mut rng);
+        let exec = adaptive.execute(&flat_op, &xf, KernelKind::SrRs).unwrap();
+        assert_eq!(exec.artifact, "native/sr_rs");
     }
 
     #[test]

@@ -579,6 +579,7 @@ mod tests {
             n_threshold: 2,
             t_avg: 5.0,
             t_cv: 0.5,
+            ..AdaptiveSelector::default()
         };
         let engine = SpmmEngine::sharded_with_selector(2, custom);
         assert_eq!(engine.selector, custom);
@@ -737,6 +738,7 @@ mod tests {
             n_threshold: 4,
             t_avg: 48.0,
             t_cv: 0.25,
+            ..AdaptiveSelector::default()
         };
         // threshold 1 => everything routes through the sharded side
         let engine = SpmmEngine::serving_with_selector(16 << 20, 1, 2, custom);

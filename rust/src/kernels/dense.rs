@@ -27,26 +27,23 @@ pub fn spmm_reference(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix) {
 ///
 /// `out[k] = a.values[k] * Σ_j u[r_k][j] · v[c_k][j]` for the `k`-th
 /// non-zero `(r_k, c_k)` of `A`, in CSR stream order. The inner dot is
-/// accumulated in ascending-`j` order; every SDDMM kernel reproduces this
-/// exact summation order, so agreement tests can pin **bit-for-bit**
-/// equality (see `crate::sddmm` module docs).
+/// [`crate::kernels::vec8::dot`] — ascending-`j` order by default, the
+/// 8-accumulator blocked order under the `simd` feature. Every SDDMM
+/// kernel uses the same canonical order in the same configuration, so
+/// agreement tests can pin **bit-for-bit** equality either way (see
+/// `crate::sddmm` module docs, "Canonical dot under `simd`").
 pub fn sddmm_reference(a: &CsrMatrix, u: &DenseMatrix, v: &DenseMatrix, out: &mut [f32]) {
     assert_eq!(u.rows, a.rows, "U rows mismatch");
     assert_eq!(v.rows, a.cols, "V rows mismatch");
     assert_eq!(u.cols, v.cols, "U/V width mismatch");
     assert_eq!(out.len(), a.nnz(), "output length mismatch");
-    let d = u.cols;
     for r in 0..a.rows {
         let (cols, vals) = a.row(r);
         let base = a.indptr[r] as usize;
         let urow = u.row(r);
         for k in 0..cols.len() {
             let vrow = v.row(cols[k] as usize);
-            let mut acc = 0.0f32;
-            for j in 0..d {
-                acc += urow[j] * vrow[j];
-            }
-            out[base + k] = vals[k] * acc;
+            out[base + k] = vals[k] * crate::kernels::vec8::dot(urow, vrow);
         }
     }
 }

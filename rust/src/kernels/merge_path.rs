@@ -1,0 +1,271 @@
+//! Merge-path row traversal for the SR family (Merrill & Garland's
+//! merge-based SpMV, the CPU analogue per Bergmans et al., "Algorithms
+//! for Parallel Shared-Memory SpMV on Unstructured Matrices").
+//!
+//! Row-split SR hands each worker whole rows, so one pathological row
+//! serializes a worker; segment-split SR-WB balances non-zeros but pays
+//! for the segmented layout. Merge-path splits the *merged decision
+//! path* of length `rows + nnz` — the interleaving of "advance to the
+//! next row" and "consume one non-zero" events — into equal spans with a
+//! diagonal binary search over CSR `indptr`. Each worker gets the same
+//! event count regardless of skew, lands mid-row when it must, and works
+//! straight off CSR (no auxiliary layout, cache-friendly sequential
+//! `indices`/`values` streams).
+//!
+//! Cross-worker row sharing reuses the carry scheme of
+//! [`crate::kernels::sr_wb`]: a worker's first row may be shared with its
+//! predecessor and is carried to a sequential fix-up; rows that *end*
+//! strictly inside a worker's span are written directly (exclusive by
+//! construction). Reduction per row stays sequential in ascending-`k`
+//! order, so a single-worker run is bit-for-bit the dense reference.
+
+use crate::kernels::sr_wb::SharedRows;
+use crate::kernels::vec8;
+use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::util::threadpool::ThreadPool;
+
+/// One split point on the merge path: `(row, nnz_offset)`. The worker
+/// starting here resumes row `row` at its `nnz_offset`-th stored element
+/// (global index into `values`).
+pub type Split = (usize, usize);
+
+/// Diagonal binary search: the split `(i, d - i)` of diagonal `d` on the
+/// merge of row-end events (`indptr[1..]`) with the non-zero stream.
+/// Returns the smallest `i` such that `indptr[i + 1] > d - i - 1`, i.e.
+/// all row-end events before `i` precede all non-zeros from `d - i` on
+/// (ties consume the row-end first, so empty trailing rows close on the
+/// earlier worker).
+fn diagonal_search(indptr: &[u32], rows: usize, nnz: usize, d: usize) -> Split {
+    let mut lo = d.saturating_sub(nnz);
+    let mut hi = d.min(rows);
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if (indptr[mid + 1] as usize) <= d - mid - 1 {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    (lo, d - lo)
+}
+
+/// Equal-length merge-path partition into `parts` spans: `parts + 1`
+/// split points, first `(0, 0)`, last `(rows, nnz)`.
+pub fn partition(a: &CsrMatrix, parts: usize) -> Vec<Split> {
+    let parts = parts.max(1);
+    let nnz = a.nnz();
+    let total = a.rows + nnz;
+    let per = total.div_ceil(parts.max(1)).max(1);
+    let mut splits = Vec::with_capacity(parts + 1);
+    for w in 0..=parts {
+        let d = (w * per).min(total);
+        splits.push(diagonal_search(&a.indptr, a.rows, nnz, d));
+    }
+    splits
+}
+
+/// Merge-path SR SpMM: sequential per-row reduction under an nnz+rows
+/// balanced traversal. Same signature and result as
+/// [`crate::kernels::sr_rs::spmm`]; selected by the backend when the
+/// traversal rules call for it (`DESIGN.md` §Vectorization).
+pub fn spmm(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &ThreadPool) {
+    assert_eq!(a.cols, x.rows, "inner dimension mismatch");
+    assert_eq!((y.rows, y.cols), (a.rows, x.cols), "output shape mismatch");
+    let n = x.cols;
+    y.data.fill(0.0);
+    if a.rows == 0 || n == 0 || a.nnz() == 0 {
+        return;
+    }
+
+    let pool = &pool.for_work(a.nnz() * n);
+    let workers = pool.workers().min(a.rows + a.nnz()).max(1);
+    let splits = partition(a, workers);
+    let shared = SharedRows::new(&mut y.data, n);
+
+    let carries: Vec<(usize, Vec<f32>)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let shared = &shared;
+            let start = splits[w];
+            let end = splits[w + 1];
+            handles.push(scope.spawn(move || worker_span(a, x, shared, start, end)));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+
+    // sequential fix-up: add boundary partials (ascending worker order)
+    for (row, partial) in carries {
+        let out = &mut y.data[row * n..(row + 1) * n];
+        vec8::add_assign(out, &partial);
+    }
+}
+
+/// Consume the merge-path span `[start, end)`: rows `start.0 .. end.0`
+/// close inside the span (direct write except the possibly-shared first
+/// row), plus a trailing partial of row `end.0` when `end.1` lands
+/// mid-row.
+fn worker_span(
+    a: &CsrMatrix,
+    x: &DenseMatrix,
+    y: &SharedRows,
+    (r0, k0): Split,
+    (r1, k1): Split,
+) -> Vec<(usize, Vec<f32>)> {
+    let n = x.cols;
+    if r0 == r1 && k0 == k1 {
+        return Vec::new();
+    }
+    let mut carries: Vec<(usize, Vec<f32>)> = Vec::new();
+    let mut acc = vec![0f32; n];
+    let mut k = k0;
+
+    let gather = |acc: &mut [f32], lo: usize, hi: usize| {
+        for i in lo..hi {
+            let v = a.values[i];
+            let xrow = x.row(a.indices[i] as usize);
+            vec8::axpy(acc, v, xrow);
+        }
+    };
+
+    // rows whose end event lies in this span
+    for r in r0..r1 {
+        let end = (a.indptr[r + 1] as usize).min(k1);
+        if end > k {
+            gather(&mut acc, k, end);
+            k = end;
+        }
+        if r == r0 {
+            // may be shared with the previous worker → fix-up adds it
+            carries.push((r, std::mem::replace(&mut acc, vec![0f32; n])));
+        } else {
+            // this span owns the row's end (and, since r > r0, its whole
+            // remaining nnz range) — exclusive direct write.
+            // SAFETY: per the SharedRows ownership contract; row ranges
+            // (r0, r1) of distinct workers are disjoint.
+            let out = unsafe { y.row_mut(r) };
+            vec8::add_assign(out, &acc);
+            acc.fill(0.0);
+        }
+    }
+    // trailing partial row: continues into the next span → carry
+    if k < k1 {
+        gather(&mut acc, k, k1);
+        carries.push((r1, acc));
+    }
+    carries
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense::spmm_reference;
+    use crate::kernels::sr_rs;
+    use crate::sparse::CooMatrix;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest::{assert_close, run_prop};
+
+    #[test]
+    fn partition_covers_the_path_monotonically() {
+        let mut rng = Xoshiro256::seeded(601);
+        let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(100, 80, 0.1, &mut rng));
+        for parts in [1usize, 2, 3, 7, 16] {
+            let splits = partition(&a, parts);
+            assert_eq!(splits.len(), parts + 1);
+            assert_eq!(splits[0], (0, 0));
+            assert_eq!(splits[parts], (a.rows, a.nnz()));
+            for w in 0..parts {
+                let (r0, k0) = splits[w];
+                let (r1, k1) = splits[w + 1];
+                assert!(r0 <= r1 && k0 <= k1, "non-monotone split at {w}");
+                // split lands inside the row it names
+                assert!(k0 >= a.indptr[r0] as usize, "k below row start at {w}");
+                if r0 < a.rows {
+                    assert!(k0 <= a.indptr[r0 + 1] as usize, "k past row end at {w}");
+                }
+                // equal spans (±1 from div_ceil rounding at the tail)
+                let span = (r1 - r0) + (k1 - k0);
+                let per = (a.rows + a.nnz()).div_ceil(parts);
+                assert!(span <= per, "span {span} > per {per} at {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_is_bitwise_the_reference() {
+        let mut rng = Xoshiro256::seeded(602);
+        let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(60, 50, 0.15, &mut rng));
+        let x = DenseMatrix::random(50, 9, 1.0, &mut rng);
+        let mut want = DenseMatrix::zeros(60, 9);
+        spmm_reference(&a, &x, &mut want);
+        let mut got = DenseMatrix::zeros(60, 9);
+        spmm(&a, &x, &mut got, &ThreadPool::serial());
+        // identical gather order → identical bits (axpy is elementwise)
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn skewed_row_spanning_all_workers() {
+        // one row holds nearly all nnz — the case row-split serializes
+        let mut coo = CooMatrix::new(50, 300);
+        for c in 0..300 {
+            coo.push(7, c, 0.01 * c as f32);
+        }
+        for r in 0..50 {
+            coo.push(r, r % 300, 1.0);
+        }
+        let a = CsrMatrix::from_coo(&coo);
+        let mut rng = Xoshiro256::seeded(603);
+        for n in [1usize, 4, 33] {
+            let x = DenseMatrix::random(300, n, 1.0, &mut rng);
+            let mut want = DenseMatrix::zeros(50, n);
+            spmm_reference(&a, &x, &mut want);
+            let mut got = DenseMatrix::zeros(50, n);
+            spmm(&a, &x, &mut got, &ThreadPool::new(6));
+            assert_close(&got.data, &want.data, 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let a = CsrMatrix::from_coo(&CooMatrix::new(5, 5));
+        let x = DenseMatrix::zeros(5, 4);
+        let mut y = DenseMatrix::from_vec(5, 4, vec![9.0; 20]);
+        spmm(&a, &x, &mut y, &ThreadPool::new(2));
+        assert_eq!(y.data, vec![0.0; 20]);
+
+        // rows with no nnz interleaved with populated rows
+        let mut coo = CooMatrix::new(6, 6);
+        coo.push(1, 1, 2.0);
+        coo.push(4, 0, -1.0);
+        let a = CsrMatrix::from_coo(&coo);
+        let x = DenseMatrix::from_vec(6, 2, (0..12).map(|i| i as f32).collect());
+        let mut want = DenseMatrix::zeros(6, 2);
+        spmm_reference(&a, &x, &mut want);
+        let mut got = DenseMatrix::zeros(6, 2);
+        spmm(&a, &x, &mut got, &ThreadPool::new(3));
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn property_vs_reference_and_sr_rs() {
+        run_prop("merge_path spmm vs reference", 25, |g| {
+            let rows = g.dim() * 2;
+            let cols = g.dim() * 2;
+            let n = *g.choose(&[1usize, 3, 8, 32]);
+            let workers = *g.choose(&[1usize, 2, 5, 9]);
+            let coo = CooMatrix::random_uniform(rows, cols, 0.2, g.rng());
+            let a = CsrMatrix::from_coo(&coo);
+            let x = DenseMatrix::from_vec(cols, n, g.vec_f32(cols * n));
+            let mut want = DenseMatrix::zeros(rows, n);
+            spmm_reference(&a, &x, &mut want);
+            let mut got = DenseMatrix::zeros(rows, n);
+            spmm(&a, &x, &mut got, &ThreadPool::new(workers));
+            assert_close(&got.data, &want.data, 1e-4, 1e-4)?;
+            let mut via_rs = DenseMatrix::zeros(rows, n);
+            sr_rs::spmm(&a, &x, &mut via_rs, &ThreadPool::new(workers));
+            assert_close(&got.data, &via_rs.data, 1e-4, 1e-4)
+        });
+    }
+}

@@ -23,13 +23,23 @@
 //! [`crate::backend::SpmmBackend`] (`DESIGN.md` §Execution backends);
 //! the warp-to-VPU mapping behind the ports is described in `DESIGN.md`
 //! §Hardware-Adaptation.
+//!
+//! Two cross-cutting modules support the designs rather than add new
+//! ones: [`vec8`] holds the 8-lane dense-width microkernels every inner
+//! loop routes through (scalar / hand-tiled / `std::simd`, selected by
+//! the `simd` and `portable_simd` cargo features — `DESIGN.md`
+//! §Vectorization), and [`merge_path`] is an alternative row traversal
+//! for the SR family ([`Traversal::MergePath`]) that splits the merged
+//! `rows + nnz` decision path evenly across workers.
 
 pub mod baseline;
 pub mod dense;
+pub mod merge_path;
 pub mod pr_rs;
 pub mod pr_wb;
 pub mod sr_rs;
 pub mod sr_wb;
+pub mod vec8;
 
 /// Lane count of the simulated SIMD bundle (a CUDA warp; maps to a VPU
 /// sublane group on TPU). The paper's kernels are written against 32.
@@ -104,6 +114,28 @@ impl KernelKind {
     /// Whether this design uses parallel reduction.
     pub fn is_parallel_reduction(&self) -> bool {
         matches!(self, KernelKind::PrRs | KernelKind::PrWb)
+    }
+}
+
+/// Row-traversal strategy for the sequential-reduction (SR) designs.
+/// Orthogonal to [`KernelKind`]: the reduction order per row is unchanged,
+/// only how rows/non-zeros are walked and divided among workers differs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Traversal {
+    /// Contiguous row blocks (the kernels' native chunking).
+    Blocked,
+    /// Equal spans of the merged `rows + nnz` path ([`merge_path`]) —
+    /// robust to row-length skew.
+    MergePath,
+}
+
+impl Traversal {
+    /// Short label used in artifacts and logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Traversal::Blocked => "blocked",
+            Traversal::MergePath => "merge_path",
+        }
     }
 }
 

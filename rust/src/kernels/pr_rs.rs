@@ -12,8 +12,12 @@
 //! load the `(1, N)` dense-row fragment for its non-zero — one float2/4
 //! vector load in CUDA — and keep N partial sums ([`spmm`]); the paper
 //! applies it for N ≤ 4.
+//!
+//! Lane accumulation and the merge tree are elementwise over N and run
+//! through [`crate::kernels::vec8`] — bit-identical with and without the
+//! `simd` feature.
 
-use super::WARP;
+use super::{vec8, WARP};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use crate::util::threadpool::ThreadPool;
 
@@ -109,9 +113,7 @@ pub fn spmm(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &ThreadPo
                     let xrow = x.row(cols[k + l] as usize);
                     let v = vals[k + l];
                     let lane = &mut lanes[l * n..(l + 1) * n];
-                    for j in 0..n {
-                        lane[j] += v * xrow[j];
-                    }
+                    vec8::axpy(lane, v, xrow);
                 }
                 k += w;
             }
@@ -122,9 +124,7 @@ pub fn spmm(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &ThreadPo
                     let (dst, src) = lanes.split_at_mut((l + d) * n);
                     let dst = &mut dst[l * n..l * n + n];
                     let src = &src[..n];
-                    for j in 0..n {
-                        dst[j] += src[j];
-                    }
+                    vec8::add_assign(dst, src);
                 }
                 d /= 2;
             }

@@ -11,9 +11,12 @@
 //! log-step shifted adds over 32-lane arrays with a double buffer
 //! (simultaneous shuffle semantics), and the dump rule is the paper's
 //! neighbor comparison. Tests pin the network against a scalar
-//! segmented-sum oracle, independent of the SpMM result tests.
+//! segmented-sum oracle, independent of the SpMM result tests. The
+//! per-lane N-wide loads/adds are elementwise and run through
+//! [`crate::kernels::vec8`] — bit-identical with and without the `simd`
+//! feature.
 
-use super::WARP;
+use super::{vec8, WARP};
 use crate::kernels::sr_wb::SharedRows;
 use crate::sparse::{DenseMatrix, SegmentedMatrix};
 use crate::util::threadpool::ThreadPool;
@@ -33,9 +36,7 @@ fn segmented_scan(vals: &mut [f32], rows: &[u32; WARP], n: usize, scratch: &mut 
             if rows[l] == rows[l + d] {
                 let src = &scratch[(l + d) * n..(l + d + 1) * n];
                 let dst = &mut vals[l * n..(l + 1) * n];
-                for j in 0..n {
-                    dst[j] += src[j];
-                }
+                vec8::add_assign(dst, src);
             }
         }
         d <<= 1;
@@ -83,9 +84,7 @@ pub fn spmm(a: &SegmentedMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &Th
 
     for (row, partial) in carries {
         let out = &mut y.data[row * n..(row + 1) * n];
-        for j in 0..n {
-            out[j] += partial[j];
-        }
+        vec8::add_assign(out, &partial);
     }
 }
 
@@ -125,9 +124,7 @@ fn vsr_worker(
             if i < a.nnz {
                 let v = a.values[i];
                 let xrow = x.row(a.col_idx[i] as usize);
-                for j in 0..n {
-                    lane[j] = v * xrow[j];
-                }
+                vec8::mul_store(lane, v, xrow);
             } else {
                 lane.fill(0.0);
             }
@@ -140,16 +137,12 @@ fn vsr_worker(
             let lane = &lane_vals[l * n..(l + 1) * n];
             if row == first_row {
                 // possibly shared with the previous worker → carry
-                for j in 0..n {
-                    first_carry[j] += lane[j];
-                }
+                vec8::add_assign(&mut first_carry, lane);
             } else {
                 // first nnz of `row` lies in this worker's range → exclusive
                 // SAFETY: see SharedRows contract.
                 let out = unsafe { y.row_mut(row) };
-                for j in 0..n {
-                    out[j] += lane[j];
-                }
+                vec8::add_assign(out, lane);
             }
         }
         win += WARP;

@@ -8,23 +8,32 @@
 //! with one coalesced load), then streams the dense rows — the structure
 //! the paper uses to keep vectorized sparse loads under sequential
 //! reduction.
+//!
+//! The dense-width inner loop is the [`crate::kernels::vec8`] `axpy`
+//! microkernel: the per-nnz `n.max(1)` and bounds checks the original
+//! scalar loop paid are hoisted out (iterator zips over `cols`/`vals`,
+//! 8-lane tiles over the dense row), and with the `simd` feature the
+//! tiles run vectorized. Elementwise over the dense width, so every
+//! configuration is bit-for-bit identical.
 
-use super::WARP;
-use crate::sparse::{CsrMatrix, DenseMatrix};
+use super::{vec8, WARP};
+use crate::sparse::{AlignedDense, CsrMatrix, DenseMatrix, DenseX};
 use crate::util::threadpool::ThreadPool;
 
 /// Rows per parallel work item.
 const ROW_CHUNK: usize = 64;
 
-/// Plain SR-RS SpMM: each worker scans its rows sequentially.
-pub fn spmm(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &ThreadPool) {
-    assert_eq!(a.cols, x.rows, "inner dimension mismatch");
-    assert_eq!((y.rows, y.cols), (a.rows, x.cols), "output shape mismatch");
-    let n = x.cols;
-    let pool = &pool.for_work(a.nnz() * n.max(1));
-    pool.for_each_row_chunk(&mut y.data, n.max(1), ROW_CHUNK, |first_row, rows| {
+/// Generic-over-`X` body shared by [`spmm`] (packed rows) and
+/// [`spmm_aligned`] (padded aligned rows).
+fn spmm_impl<X: DenseX>(a: &CsrMatrix, x: &X, y: &mut DenseMatrix, pool: &ThreadPool) {
+    assert_eq!(a.cols, x.xrows(), "inner dimension mismatch");
+    assert_eq!((y.rows, y.cols), (a.rows, x.xcols()), "output shape mismatch");
+    let n = x.xcols();
+    let w = n.max(1); // hoisted: the row-chunk width never changes per nnz
+    let pool = &pool.for_work(a.nnz() * w);
+    pool.for_each_row_chunk(&mut y.data, w, ROW_CHUNK, |first_row, rows| {
         rows.fill(0.0);
-        let nrows = rows.len() / n.max(1);
+        let nrows = rows.len() / w;
         for i in 0..nrows {
             let r = first_row + i;
             if r >= a.rows {
@@ -32,15 +41,23 @@ pub fn spmm(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &ThreadPo
             }
             let (cols, vals) = a.row(r);
             let out = &mut rows[i * n..(i + 1) * n];
-            for k in 0..cols.len() {
-                let v = vals[k];
-                let xrow = x.row(cols[k] as usize);
-                for j in 0..n {
-                    out[j] += v * xrow[j];
-                }
+            for (&c, &v) in cols.iter().zip(vals) {
+                vec8::axpy(out, v, x.xrow(c as usize));
             }
         }
     });
+}
+
+/// Plain SR-RS SpMM: each worker scans its rows sequentially.
+pub fn spmm(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &ThreadPool) {
+    spmm_impl(a, x, y, pool);
+}
+
+/// SR-RS SpMM gathering from the aligned padded-stride dense layout
+/// ([`AlignedDense`]) — vector loads never straddle a row boundary.
+/// Bit-identical results to [`spmm`] on the same logical `X`.
+pub fn spmm_aligned(a: &CsrMatrix, x: &AlignedDense, y: &mut DenseMatrix, pool: &ThreadPool) {
+    spmm_impl(a, x, y, pool);
 }
 
 /// SR-RS SpMM with **CSC** (coalesced sparse-row caching): row chunks of
@@ -52,10 +69,11 @@ pub fn spmm_csc(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &Thre
     assert_eq!(a.cols, x.rows, "inner dimension mismatch");
     assert_eq!((y.rows, y.cols), (a.rows, x.cols), "output shape mismatch");
     let n = x.cols;
-    let pool = &pool.for_work(a.nnz() * n.max(1));
-    pool.for_each_row_chunk(&mut y.data, n.max(1), ROW_CHUNK, |first_row, rows| {
+    let w = n.max(1);
+    let pool = &pool.for_work(a.nnz() * w);
+    pool.for_each_row_chunk(&mut y.data, w, ROW_CHUNK, |first_row, rows| {
         rows.fill(0.0);
-        let nrows = rows.len() / n.max(1);
+        let nrows = rows.len() / w;
         // "shared memory" tiles: one coalesced load of WARP (value, col)
         // pairs, then sequential iteration over the cached entries.
         let mut val_tile = [0f32; WARP];
@@ -76,11 +94,7 @@ pub fn spmm_csc(a: &CsrMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &Thre
                 col_tile[..tile].copy_from_slice(&cols[k..k + tile]);
                 // sequential reduction over the cached tile
                 for t in 0..tile {
-                    let v = val_tile[t];
-                    let xrow = x.row(col_tile[t] as usize);
-                    for j in 0..n {
-                        out[j] += v * xrow[j];
-                    }
+                    vec8::axpy(out, val_tile[t], x.row(col_tile[t] as usize));
                 }
                 k += tile;
             }
@@ -101,8 +115,8 @@ pub fn spmv(a: &CsrMatrix, x: &[f32], y: &mut [f32], pool: &ThreadPool) {
             }
             let (cols, vals) = a.row(r);
             let mut acc = 0.0f32;
-            for k in 0..cols.len() {
-                acc += vals[k] * x[cols[k] as usize];
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v * x[c as usize];
             }
             *o = acc;
         }
@@ -153,6 +167,24 @@ mod tests {
         let mut got = DenseMatrix::zeros(4, 16);
         spmm_csc(&a, &x, &mut got, &ThreadPool::serial());
         assert_close(&got.data, &want.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn aligned_gather_is_bit_identical() {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(106);
+        // widths around the lane boundary exercise padded strides
+        for n in [1usize, 7, 8, 9, 32, 33] {
+            let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(40, 30, 0.2, &mut rng));
+            let x = DenseMatrix::random(30, n, 1.0, &mut rng);
+            let xa = x.to_aligned();
+            let mut packed = DenseMatrix::zeros(40, n);
+            spmm(&a, &x, &mut packed, &ThreadPool::new(3));
+            let mut aligned = DenseMatrix::zeros(40, n);
+            spmm_aligned(&a, &xa, &mut aligned, &ThreadPool::new(3));
+            for (p, q) in packed.data.iter().zip(&aligned.data) {
+                assert_eq!(p.to_bits(), q.to_bits(), "n={n}");
+            }
+        }
     }
 
     #[test]

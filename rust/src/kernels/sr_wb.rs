@@ -7,7 +7,12 @@
 //! its neighbors; the carries are merged in a short sequential fix-up pass
 //! (the GPU kernels do the same with atomics or a spine pass — merge-path /
 //! CSR-stream style).
+//!
+//! Dense-width loops (gather, flush, fix-up) run through the
+//! [`crate::kernels::vec8`] elementwise microkernels — bit-identical
+//! with and without the `simd` feature.
 
+use crate::kernels::vec8;
 use crate::sparse::{DenseMatrix, SegmentedMatrix};
 use crate::util::threadpool::ThreadPool;
 use std::cell::UnsafeCell;
@@ -72,9 +77,7 @@ pub fn spmm(a: &SegmentedMatrix, x: &DenseMatrix, y: &mut DenseMatrix, pool: &Th
     // sequential fix-up: add boundary partials
     for (row, partial) in carries {
         let out = &mut y.data[row * n..(row + 1) * n];
-        for j in 0..n {
-            out[j] += partial[j];
-        }
+        vec8::add_assign(out, &partial);
     }
 }
 
@@ -117,9 +120,7 @@ fn worker_pass(
             // their first nnz, nobody else writes them directly.
             // SAFETY: per the ownership argument above.
             let out = unsafe { y.row_mut(row) };
-            for j in 0..n {
-                out[j] += acc[j];
-            }
+            vec8::add_assign(out, acc.as_slice());
             acc.fill(0.0);
         }
     };
@@ -137,9 +138,7 @@ fn worker_pass(
         if i < a.nnz {
             let v = a.values[i];
             let xrow = x.row(a.col_idx[i] as usize);
-            for j in 0..n {
-                acc[j] += v * xrow[j];
-            }
+            vec8::axpy(&mut acc, v, xrow);
         }
     }
     // the trailing row may continue into the next worker: carry it too

@@ -1,0 +1,387 @@
+//! f32×8 microkernels — the vectorized inner loops behind every kernel.
+//!
+//! The paper's kernels lean on SIMD-shuffle primitives; on CPU the same
+//! hot loops are 8-lane (`f32x8`-shaped, one AVX2 register / two NEON
+//! registers) elementwise tiles with a scalar tail. Three backends share
+//! one contract:
+//!
+//! - **scalar** (`*_scalar`): the plain loops the kernels shipped with —
+//!   always compiled, the baseline `benches/simd_speedup` measures against;
+//! - **tiled** (`*_tiled`): hand-tiled fixed-width loops over
+//!   `chunks_exact(LANES)` that every autovectorizer turns into vector
+//!   code on stable Rust;
+//! - **portable** (`portable_simd` cargo feature, nightly): the tiled
+//!   bodies re-expressed over `std::simd::Simd<f32, LANES>` so the lanes
+//!   are explicit rather than inferred.
+//!
+//! Dispatch: the public entry points ([`axpy`], [`add_assign`],
+//! [`mul_store`], [`dot`]) pick the tiled path iff the `simd` cargo
+//! feature is on, the scalar path otherwise — so a default build's
+//! floating-point behavior is byte-for-byte what it was before this
+//! module existed.
+//!
+//! ## Numerics contract
+//!
+//! The elementwise kernels (`axpy`, `add_assign`, `mul_store`) perform
+//! exactly one multiply and/or add per output element: every backend is
+//! **bit-for-bit identical** (SpMM's reduction axis is nnz, never the
+//! dense width these loops run over, so tiling the width regroups
+//! nothing). The reduction kernel `dot_blocked` keeps `LANES` parallel
+//! partial sums and merges them in a fixed sequential order — the same
+//! order in the tiled and portable backends (the portable body reduces
+//! via `to_array`, not a hardware tree), so the two vector backends agree
+//! bitwise with *each other*, but both reassociate the sum relative to
+//! [`dot_scalar`]. Agreement across that boundary is a ≤ 4-ULP property
+//! (`tests/simd_agreement.rs`); no path uses FMA.
+
+/// Vector width of the microkernels (f32 lanes per tile).
+pub const LANES: usize = 8;
+
+/// `acc[j] += a * x[j]` — plain scalar loop (always compiled; the
+/// baseline the speedup bench measures against).
+#[inline]
+pub fn axpy_scalar(acc: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (o, &v) in acc.iter_mut().zip(x) {
+        *o += a * v;
+    }
+}
+
+/// `acc[j] += a * x[j]` — 8-lane tiles with a scalar tail. Bit-identical
+/// to [`axpy_scalar`] (elementwise; no reassociation).
+#[cfg(not(feature = "portable_simd"))]
+#[inline]
+pub fn axpy_tiled(acc: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (ta, tx) in (&mut ac).zip(&mut xc) {
+        for l in 0..LANES {
+            ta[l] += a * tx[l];
+        }
+    }
+    for (o, &v) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o += a * v;
+    }
+}
+
+/// `acc[j] += a * x[j]` — `std::simd` lanes (nightly `portable_simd`).
+#[cfg(feature = "portable_simd")]
+#[inline]
+pub fn axpy_tiled(acc: &mut [f32], a: f32, x: &[f32]) {
+    use std::simd::Simd;
+    debug_assert_eq!(acc.len(), x.len());
+    let av = Simd::<f32, LANES>::splat(a);
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (ta, tx) in (&mut ac).zip(&mut xc) {
+        let out = Simd::<f32, LANES>::from_slice(ta) + av * Simd::<f32, LANES>::from_slice(tx);
+        ta.copy_from_slice(&out.to_array());
+    }
+    for (o, &v) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o += a * v;
+    }
+}
+
+/// `acc[j] += a * x[j]` with the build's configured backend: tiled when
+/// the `simd` feature is on, scalar otherwise.
+#[inline]
+pub fn axpy(acc: &mut [f32], a: f32, x: &[f32]) {
+    if cfg!(feature = "simd") {
+        axpy_tiled(acc, a, x);
+    } else {
+        axpy_scalar(acc, a, x);
+    }
+}
+
+/// `acc[j] += src[j]` — scalar loop.
+#[inline]
+pub fn add_assign_scalar(acc: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    for (o, &v) in acc.iter_mut().zip(src) {
+        *o += v;
+    }
+}
+
+/// `acc[j] += src[j]` — 8-lane tiles, scalar tail.
+#[cfg(not(feature = "portable_simd"))]
+#[inline]
+pub fn add_assign_tiled(acc: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut sc = src.chunks_exact(LANES);
+    for (ta, ts) in (&mut ac).zip(&mut sc) {
+        for l in 0..LANES {
+            ta[l] += ts[l];
+        }
+    }
+    for (o, &v) in ac.into_remainder().iter_mut().zip(sc.remainder()) {
+        *o += v;
+    }
+}
+
+/// `acc[j] += src[j]` — `std::simd` lanes (nightly `portable_simd`).
+#[cfg(feature = "portable_simd")]
+#[inline]
+pub fn add_assign_tiled(acc: &mut [f32], src: &[f32]) {
+    use std::simd::Simd;
+    debug_assert_eq!(acc.len(), src.len());
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut sc = src.chunks_exact(LANES);
+    for (ta, ts) in (&mut ac).zip(&mut sc) {
+        let out = Simd::<f32, LANES>::from_slice(ta) + Simd::<f32, LANES>::from_slice(ts);
+        ta.copy_from_slice(&out.to_array());
+    }
+    for (o, &v) in ac.into_remainder().iter_mut().zip(sc.remainder()) {
+        *o += v;
+    }
+}
+
+/// `acc[j] += src[j]` with the build's configured backend.
+#[inline]
+pub fn add_assign(acc: &mut [f32], src: &[f32]) {
+    if cfg!(feature = "simd") {
+        add_assign_tiled(acc, src);
+    } else {
+        add_assign_scalar(acc, src);
+    }
+}
+
+/// `out[j] = a * x[j]` — scalar loop.
+#[inline]
+pub fn mul_store_scalar(out: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = a * v;
+    }
+}
+
+/// `out[j] = a * x[j]` — 8-lane tiles, scalar tail.
+#[cfg(not(feature = "portable_simd"))]
+#[inline]
+pub fn mul_store_tiled(out: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (to, tx) in (&mut oc).zip(&mut xc) {
+        for l in 0..LANES {
+            to[l] = a * tx[l];
+        }
+    }
+    for (o, &v) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o = a * v;
+    }
+}
+
+/// `out[j] = a * x[j]` — `std::simd` lanes (nightly `portable_simd`).
+#[cfg(feature = "portable_simd")]
+#[inline]
+pub fn mul_store_tiled(out: &mut [f32], a: f32, x: &[f32]) {
+    use std::simd::Simd;
+    debug_assert_eq!(out.len(), x.len());
+    let av = Simd::<f32, LANES>::splat(a);
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (to, tx) in (&mut oc).zip(&mut xc) {
+        let prod = av * Simd::<f32, LANES>::from_slice(tx);
+        to.copy_from_slice(&prod.to_array());
+    }
+    for (o, &v) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o = a * v;
+    }
+}
+
+/// `out[j] = a * x[j]` with the build's configured backend.
+#[inline]
+pub fn mul_store(out: &mut [f32], a: f32, x: &[f32]) {
+    if cfg!(feature = "simd") {
+        mul_store_tiled(out, a, x);
+    } else {
+        mul_store_scalar(out, a, x);
+    }
+}
+
+/// `Σ_j a[j]·b[j]` — plain sequential ascending-`j` accumulation (the
+/// order `kernels::dense::sddmm_reference` historically used).
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// `Σ_j a[j]·b[j]` — `LANES` parallel partial sums over 8-wide tiles,
+/// tail folded lane-wise, then a fixed sequential lane merge
+/// (`acc[0] + acc[1] + … + acc[7]`). Deterministic, but the blocking
+/// reassociates the sum relative to [`dot_scalar`].
+#[cfg(not(feature = "portable_simd"))]
+#[inline]
+pub fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let ac = a.chunks_exact(LANES);
+    let bc = b.chunks_exact(LANES);
+    let ar = ac.remainder();
+    let br = bc.remainder();
+    for (ta, tb) in ac.zip(bc) {
+        for l in 0..LANES {
+            acc[l] += ta[l] * tb[l];
+        }
+    }
+    for (l, (&x, &y)) in ar.iter().zip(br).enumerate() {
+        acc[l] += x * y;
+    }
+    let mut total = 0.0f32;
+    for &p in &acc {
+        total += p;
+    }
+    total
+}
+
+/// `Σ_j a[j]·b[j]` — `std::simd` accumulator with the same tail and lane
+/// merge order as the tiled backend (reduced via `to_array`, not a
+/// hardware tree), so the two vector backends agree bit-for-bit.
+#[cfg(feature = "portable_simd")]
+#[inline]
+pub fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
+    use std::simd::Simd;
+    debug_assert_eq!(a.len(), b.len());
+    let mut accv = Simd::<f32, LANES>::splat(0.0);
+    let ac = a.chunks_exact(LANES);
+    let bc = b.chunks_exact(LANES);
+    let ar = ac.remainder();
+    let br = bc.remainder();
+    for (ta, tb) in ac.zip(bc) {
+        accv = accv + Simd::<f32, LANES>::from_slice(ta) * Simd::<f32, LANES>::from_slice(tb);
+    }
+    let mut acc = accv.to_array();
+    for (l, (&x, &y)) in ar.iter().zip(br).enumerate() {
+        acc[l] += x * y;
+    }
+    let mut total = 0.0f32;
+    for &p in &acc {
+        total += p;
+    }
+    total
+}
+
+/// Canonical dot product with the build's configured backend: blocked
+/// when the `simd` feature is on, sequential otherwise. The SDDMM
+/// kernels **and** the dense SDDMM reference both route through this, so
+/// within any one build configuration they remain bit-for-bit equal
+/// (see `crate::sddmm` module docs).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    if cfg!(feature = "simd") {
+        dot_blocked(a, b)
+    } else {
+        dot_scalar(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn vecs(len: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut a = vec![0f32; len];
+        let mut b = vec![0f32; len];
+        rng.fill_uniform_f32(&mut a, 1.0);
+        rng.fill_uniform_f32(&mut b, 1.0);
+        (a, b)
+    }
+
+    /// Map f32 bit patterns onto a monotone integer line (negative values
+    /// mirror below zero), so ULP distance is plain integer subtraction.
+    fn monotone(x: f32) -> i64 {
+        let b = x.to_bits();
+        if b & 0x8000_0000 != 0 {
+            -((b & 0x7fff_ffff) as i64)
+        } else {
+            b as i64
+        }
+    }
+
+    /// ULP distance between two finite f32 values.
+    fn ulp_diff(a: f32, b: f32) -> u64 {
+        (monotone(a) - monotone(b)).unsigned_abs()
+    }
+
+    #[test]
+    fn elementwise_backends_are_bit_identical() {
+        // tail lengths 0..LANES and multi-tile bodies
+        for len in [0usize, 1, 7, 8, 9, 16, 23, 64, 100] {
+            let (x, src) = vecs(len, 9000 + len as u64);
+            let a = 0.37f32;
+
+            let mut s = vec![0.25f32; len];
+            let mut t = s.clone();
+            axpy_scalar(&mut s, a, &x);
+            axpy_tiled(&mut t, a, &x);
+            assert_eq!(s, t, "axpy len={len}");
+
+            let mut s2 = x.clone();
+            let mut t2 = x.clone();
+            add_assign_scalar(&mut s2, &src);
+            add_assign_tiled(&mut t2, &src);
+            assert_eq!(s2, t2, "add_assign len={len}");
+
+            let mut s3 = vec![9.0f32; len];
+            let mut t3 = vec![-9.0f32; len];
+            mul_store_scalar(&mut s3, a, &x);
+            mul_store_tiled(&mut t3, a, &x);
+            assert_eq!(s3, t3, "mul_store len={len}");
+        }
+    }
+
+    #[test]
+    fn dot_backends_agree_within_ulps() {
+        for len in [0usize, 1, 7, 8, 9, 31, 32, 33, 64, 257] {
+            let (a, b) = vecs(len, 9100 + len as u64);
+            let seq = dot_scalar(&a, &b);
+            let blk = dot_blocked(&a, &b);
+            assert!(
+                ulp_diff(seq, blk) <= 4,
+                "len={len}: {seq} vs {blk} ({} ulps)",
+                ulp_diff(seq, blk)
+            );
+        }
+    }
+
+    #[test]
+    fn dot_blocked_is_deterministic_and_exact_on_integers() {
+        // integer-valued inputs: both orders are exact, so they must agree
+        let a: Vec<f32> = (0..37).map(|i| (i % 5) as f32).collect();
+        let b: Vec<f32> = (0..37).map(|i| ((i % 3) as f32) - 1.0).collect();
+        assert_eq!(dot_scalar(&a, &b), dot_blocked(&a, &b));
+        assert_eq!(dot_blocked(&a, &b), dot_blocked(&a, &b));
+    }
+
+    #[test]
+    fn empty_and_zero_inputs() {
+        assert_eq!(dot_scalar(&[], &[]), 0.0);
+        assert_eq!(dot_blocked(&[], &[]), 0.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+        let mut acc: Vec<f32> = Vec::new();
+        axpy(&mut acc, 2.0, &[]);
+        add_assign(&mut acc, &[]);
+        mul_store(&mut acc, 2.0, &[]);
+        assert!(acc.is_empty());
+    }
+
+    #[test]
+    fn dispatch_matches_feature_config() {
+        let (a, b) = vecs(50, 9200);
+        let want = if cfg!(feature = "simd") {
+            dot_blocked(&a, &b)
+        } else {
+            dot_scalar(&a, &b)
+        };
+        assert_eq!(dot(&a, &b).to_bits(), want.to_bits());
+    }
+}

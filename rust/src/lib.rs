@@ -1,3 +1,7 @@
+// `std::simd` backends for kernels::vec8 — nightly-only, advisory CI
+// job; the stable `simd` feature uses hand-tiled blocks instead.
+#![cfg_attr(feature = "portable_simd", feature(portable_simd))]
+
 //! # ge-spmm — adaptive workload-balanced / parallel-reduction sparse kernels
 //!
 //! Reproduction of *"Efficient Sparse Matrix Kernels based on Adaptive
@@ -33,6 +37,14 @@
 //! (content-fingerprinted, byte-budgeted LRU) and a multi-worker server
 //! with per-matrix request routing, width batching, an admission bound
 //! and graceful shutdown — `ge-spmm serve` drives it from the CLI.
+//!
+//! The native kernels' inner loops run through the [`kernels::vec8`]
+//! microkernel layer: scalar by default, explicitly 8-lane tiled under
+//! the `simd` cargo feature (stable), or `std::simd` under
+//! `portable_simd` (nightly). The SR kernels additionally support a
+//! merge-path row traversal for extreme skew, selected per matrix (or
+//! per shard) by [`backend::TraversalMode`]. See `DESIGN.md`
+//! §Vectorization.
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment
 //! index, and `BENCHMARKS.md` for the bench harness and the recording

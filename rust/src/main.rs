@@ -14,6 +14,8 @@
 //!               routing) and report throughput and metrics
 //!   simulate    run the GPU cost model for all kernels on a matrix
 //!   calibrate   fit selector thresholds against simulator profiles
+//!   perfgate    measure normalized kernel/reference latency ratios on a
+//!               pinned workload and fail on regression vs a baseline JSON
 //!   train-gcn   end-to-end GCN training (needs the `pjrt` feature)
 //!   suite       list the synthetic benchmark collection
 //!
@@ -63,13 +65,14 @@ fn run(sub: Option<&str>, rest: Vec<String>) -> Result<()> {
         Some("serve") => cmd_serve(rest),
         Some("simulate") => cmd_simulate(rest),
         Some("calibrate") => cmd_calibrate(rest),
+        Some("perfgate") => cmd_perfgate(rest),
         Some("train-gcn") => cmd_train_gcn(rest),
         Some("suite") => cmd_suite(rest),
-        Some(other) => bail!("unknown subcommand '{other}' (try: info, features, select, spmm, sddmm, serve, simulate, calibrate, train-gcn, suite)"),
+        Some(other) => bail!("unknown subcommand '{other}' (try: info, features, select, spmm, sddmm, serve, simulate, calibrate, perfgate, train-gcn, suite)"),
         None => {
             println!(
                 "ge-spmm {} — adaptive workload-balanced/parallel-reduction sparse kernels\n\
-                 subcommands: info, features, select, spmm, sddmm, serve, simulate, calibrate, train-gcn, suite\n\
+                 subcommands: info, features, select, spmm, sddmm, serve, simulate, calibrate, perfgate, train-gcn, suite\n\
                  use `ge-spmm <subcommand> --help` for options",
                 ge_spmm::version()
             );
@@ -556,6 +559,199 @@ fn cmd_calibrate(rest: Vec<String>) -> Result<()> {
         let profile = HardwareProfile::new(&cal, source, backend_name, samples.len(), &n_values);
         profile.save(Path::new(path))?;
         println!("wrote hardware profile {path}: {}", profile.summary());
+    }
+    Ok(())
+}
+
+/// The CI perf-regression gate (`DESIGN.md` §Vectorization, "Perf gate").
+///
+/// Measures every kernel on a pinned synthetic workload and normalizes
+/// each median by the *same-run* dense-reference median, so the recorded
+/// numbers are machine-portable ratios (kernel/reference), not raw
+/// wallclock. `--record` writes the ratios as a baseline JSON; with
+/// `--baseline` the command re-measures and fails when any kernel's
+/// ratio grew by more than `--threshold` (default 1.3×, deliberately
+/// generous: shared CI runners are noisy and this gate is after 10×
+/// regressions, not 10%). A baseline with an empty `results` object (the
+/// checked-in bootstrap from a machine that could not measure) passes
+/// vacuously with a notice.
+fn cmd_perfgate(rest: Vec<String>) -> Result<()> {
+    use ge_spmm::bench::harness::{bench_fn_with, BenchConfig};
+    use ge_spmm::kernels::{dense, merge_path, pr_rs, pr_wb, sr_rs, sr_wb, WARP};
+    use ge_spmm::sparse::{CooMatrix, SegmentedMatrix};
+    use ge_spmm::util::json::{num, obj, s, Json};
+    use ge_spmm::util::threadpool::ThreadPool;
+    use std::time::Duration;
+
+    let cmd = Command::new(
+        "perfgate",
+        "perf-regression gate: normalized kernel/reference latency ratios",
+    )
+    .opt(
+        "baseline",
+        "baseline JSON to compare against (fail on >threshold regression)",
+        None,
+    )
+    .opt("record", "write this run's ratios as a baseline JSON", None)
+    .opt(
+        "threshold",
+        "max allowed ratio growth vs baseline (1.3 = 30% slower)",
+        Some("1.3"),
+    )
+    .opt("budget-ms", "per-case measurement budget (ms)", Some("40"))
+    .opt("n", "dense width for the SpMM cases", Some("32"))
+    .opt("seed", "workload seed", Some("42"));
+    let args = cmd.parse(&rest)?;
+    let threshold: f64 = args.parse_or("threshold", 1.3);
+    anyhow::ensure!(
+        threshold.is_finite() && threshold > 1.0,
+        "--threshold must be a finite value > 1.0"
+    );
+    let budget_ms: u64 = args.parse_or("budget-ms", 40);
+    let n: usize = args.parse_positive("n", 32);
+    let cfg = BenchConfig {
+        warmup: Duration::from_millis(budget_ms / 4),
+        measure: Duration::from_millis(budget_ms),
+        ..BenchConfig::default()
+    };
+    let pool = ThreadPool::default_parallel();
+    let mut rng = Xoshiro256::seeded(args.parse_or("seed", 42));
+
+    // Pinned workload: one flat and one heavy-tailed matrix, small enough
+    // for a CI smoke yet large enough that per-call overhead is noise.
+    let uniform = CsrMatrix::from_coo(&CooMatrix::random_uniform(2048, 2048, 0.004, &mut rng));
+    let plaw_cfg = ge_spmm::gen::powerlaw::PowerLawConfig {
+        rows: 2048,
+        cols: 2048,
+        alpha: 1.6,
+        min_row: 1,
+        max_row: 256,
+    };
+    let plaw = CsrMatrix::from_coo(&plaw_cfg.generate(&mut rng));
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    for (mname, a) in [("uniform", &uniform), ("plaw", &plaw)] {
+        let seg = SegmentedMatrix::from_csr(a, WARP);
+        let x = DenseMatrix::random(a.cols, n, 1.0, &mut rng);
+        let mut y = DenseMatrix::zeros(a.rows, n);
+        let reference = bench_fn_with(&format!("{mname}/reference"), cfg, || {
+            dense::spmm_reference(a, &x, &mut y);
+            std::hint::black_box(&y);
+        });
+        let ref_s = reference.median_s().max(1e-12);
+        // each case reuses its own preallocated output, exactly like the
+        // reference above — no per-iteration allocation in the timed loop
+        let mut y1 = DenseMatrix::zeros(a.rows, n);
+        let mut y2 = DenseMatrix::zeros(a.rows, n);
+        let mut y3 = DenseMatrix::zeros(a.rows, n);
+        let mut y4 = DenseMatrix::zeros(a.rows, n);
+        let mut y5 = DenseMatrix::zeros(a.rows, n);
+        type Case<'k> = (&'static str, Box<dyn FnMut() + 'k>);
+        let cases: Vec<Case> = vec![
+            ("sr_rs", Box::new(|| sr_rs::spmm(a, &x, &mut y1, &pool))),
+            ("sr_wb", Box::new(|| sr_wb::spmm(&seg, &x, &mut y2, &pool))),
+            ("pr_rs", Box::new(|| pr_rs::spmm(a, &x, &mut y3, &pool))),
+            ("pr_wb", Box::new(|| pr_wb::spmm(&seg, &x, &mut y4, &pool))),
+            ("sr_mp", Box::new(|| merge_path::spmm(a, &x, &mut y5, &pool))),
+        ];
+        for (kname, mut case) in cases {
+            let stats = bench_fn_with(&format!("{mname}/{kname}"), cfg, &mut case);
+            results.push((format!("{mname}/{kname}"), stats.median_s() / ref_s));
+        }
+    }
+    // one SDDMM pair on the skewed matrix (reduction axis d = n)
+    {
+        let a = &plaw;
+        let seg = SegmentedMatrix::from_csr(a, WARP);
+        let u = DenseMatrix::random(a.rows, n, 1.0, &mut rng);
+        let v = DenseMatrix::random(a.cols, n, 1.0, &mut rng);
+        let mut out = vec![0f32; a.nnz()];
+        let reference = bench_fn_with("sddmm/reference", cfg, || {
+            dense::sddmm_reference(a, &u, &v, &mut out);
+            std::hint::black_box(&out);
+        });
+        let ref_s = reference.median_s().max(1e-12);
+        for kind in [ge_spmm::kernels::KernelKind::SrRs, ge_spmm::kernels::KernelKind::PrWb] {
+            let name = format!("sddmm/{}", kind.label());
+            let stats = bench_fn_with(&name, cfg, || {
+                ge_spmm::sddmm::run(kind, a, &seg, &u, &v, &mut out, &pool);
+                std::hint::black_box(&out);
+            });
+            results.push((name, stats.median_s() / ref_s));
+        }
+    }
+
+    let mut table = ge_spmm::bench::Table::new(&["case", "kernel/reference"]);
+    for (name, ratio) in &results {
+        table.row(vec![name.clone(), format!("{ratio:.3}")]);
+    }
+    table.print();
+
+    if let Some(path) = args.get("record") {
+        let json = obj(vec![
+            ("version", num(1.0)),
+            ("bench", s("perfgate")),
+            ("host", s(&ge_spmm::bench::record::hostname())),
+            (
+                "note",
+                s("normalized medians: kernel latency / same-run dense-reference latency"),
+            ),
+            (
+                "results",
+                Json::Obj(
+                    results
+                        .iter()
+                        .map(|(k, v)| (k.clone(), num(*v)))
+                        .collect(),
+                ),
+            ),
+        ]);
+        let mut text = json.to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+            .map_err(|e| anyhow!("writing perfgate record {path}: {e}"))?;
+        println!("recorded {} ratios to {path}", results.len());
+    }
+
+    if let Some(path) = args.get("baseline") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading perfgate baseline {path}: {e}"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        let base = json
+            .get("results")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("baseline {path} has no 'results' object"))?;
+        if base.is_empty() {
+            println!(
+                "baseline {path} has no recorded results (bootstrap from a machine \
+                 without measurement) — gate passes vacuously; regenerate with \
+                 `ge-spmm perfgate --record {path}` on a machine that can measure"
+            );
+            return Ok(());
+        }
+        let mut regressions = Vec::new();
+        let mut compared = 0usize;
+        for (name, now) in &results {
+            let Some(was) = base.get(name).and_then(Json::as_f64) else {
+                println!("  (no baseline entry for {name}; skipped)");
+                continue;
+            };
+            compared += 1;
+            let growth = now / was.max(1e-12);
+            if growth > threshold {
+                regressions.push(format!(
+                    "{name}: ratio {was:.3} -> {now:.3} ({growth:.2}x growth)"
+                ));
+            }
+        }
+        if !regressions.is_empty() {
+            bail!(
+                "perf gate failed ({} of {compared} cases regressed past {threshold}x):\n  {}",
+                regressions.len(),
+                regressions.join("\n  ")
+            );
+        }
+        println!("perf gate passed: {compared} cases within {threshold}x of {path}");
     }
     Ok(())
 }

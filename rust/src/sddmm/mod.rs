@@ -37,6 +37,16 @@
 //!   not tolerance). The lane structure, windowing and load pattern are
 //!   preserved; only the merge order is canonicalized.
 //!
+//! **Canonical dot under `simd`**: the reduction axis `d` is where SDDMM
+//! vectorizes, and a blocked dot reassociates the float sum. To keep the
+//! bit-for-bit invariant, the `simd` feature switches the *canonical*
+//! summation order itself: all four kernels ([`dot_sr`]/[`dot_pr`]) and
+//! [`crate::kernels::dense::sddmm_reference`] move together to the same
+//! 8-accumulator blocked order ([`crate::kernels::vec8::dot_blocked`]).
+//! Within either feature configuration all five implementations remain
+//! bit-identical; *across* configurations results differ by ordinary
+//! rounding (≤ 4 ULPs for the sizes tested).
+//!
 //! Callers never dispatch these directly: execution goes through
 //! [`crate::backend::SpmmBackend::execute_sddmm`], with kernel choice
 //! from [`crate::selector::SddmmSelector`].
@@ -119,6 +129,32 @@ pub(crate) fn dot_lanes(u: &[f32], v: &[f32]) -> f32 {
     acc
 }
 
+/// Canonical dot for the sequential-reduction (SR) SDDMM kernels: plain
+/// ascending-`j` order, or the blocked order when the `simd` feature
+/// changes the canonical summation (module docs, "Canonical dot under
+/// `simd`").
+#[inline]
+pub(crate) fn dot_sr(u: &[f32], v: &[f32]) -> f32 {
+    if cfg!(feature = "simd") {
+        crate::kernels::vec8::dot_blocked(u, v)
+    } else {
+        dot_sequential(u, v)
+    }
+}
+
+/// Canonical dot for the lane-parallel (PR) SDDMM kernels: the
+/// lane-staged [`dot_lanes`] (bit-identical to [`dot_sequential`]), or
+/// the blocked order under `simd` — same value as [`dot_sr`] in every
+/// configuration.
+#[inline]
+pub(crate) fn dot_pr(u: &[f32], v: &[f32]) -> f32 {
+    if cfg!(feature = "simd") {
+        crate::kernels::vec8::dot_blocked(u, v)
+    } else {
+        dot_lanes(u, v)
+    }
+}
+
 /// Run one SDDMM design against the prepared layouts. `out.len()` must be
 /// `csr.nnz()` (== `seg.nnz`); degenerate shapes (`nnz == 0`) are a no-op.
 /// The shared prepare-once dispatcher used by the native backend, the
@@ -176,6 +212,23 @@ mod tests {
             rng.fill_uniform_f32(&mut v, 1.0);
             let a = dot_sequential(&u, &v);
             let b = dot_lanes(&u, &v);
+            assert_eq!(a.to_bits(), b.to_bits(), "d={d}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn canonical_dots_agree_bitwise_in_every_config() {
+        // dot_sr == dot_pr whatever features are on: both resolve to the
+        // same canonical summation order, so SR and PR designs can never
+        // drift apart.
+        let mut rng = Xoshiro256::seeded(80);
+        for d in [0usize, 1, 7, 8, 9, 32, 33, 100] {
+            let mut u = vec![0f32; d];
+            let mut v = vec![0f32; d];
+            rng.fill_uniform_f32(&mut u, 1.0);
+            rng.fill_uniform_f32(&mut v, 1.0);
+            let a = dot_sr(&u, &v);
+            let b = dot_pr(&u, &v);
             assert_eq!(a.to_bits(), b.to_bits(), "d={d}: {a} vs {b}");
         }
     }

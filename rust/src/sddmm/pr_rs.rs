@@ -2,13 +2,14 @@
 //!
 //! Same row partitioning as [`super::sr_rs`], but each sampled dot is
 //! computed by a `WARP`-lane bundle: lanes multiply `U[r][j] · V[c][j]`
-//! in parallel over `d`-windows ([`super::dot_lanes`] — the CUDA kernel's
-//! vectorized load + multiply stage), then merge. Pays off when `d` is
+//! in parallel over `d`-windows ([`super::dot_lanes`], via the canonical
+//! [`super::dot_pr`] — the CUDA kernel's vectorized load + multiply
+//! stage), then merge. Pays off when `d` is
 //! large enough to fill the lanes; short dots idle them — the SDDMM
 //! analogue of the paper's short-row insight, with `d` in the role of
 //! the reduction-axis length.
 
-use super::{dot_lanes, SharedValues, ROW_CHUNK};
+use super::{dot_pr, SharedValues, ROW_CHUNK};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use crate::util::threadpool::ThreadPool;
 
@@ -39,7 +40,7 @@ pub fn sddmm(a: &CsrMatrix, u: &DenseMatrix, v: &DenseMatrix, out: &mut [f32], p
             let urow = u.row(r);
             for k in 0..cols.len() {
                 let vrow = v.row(cols[k] as usize);
-                out[base + k] = vals[k] * dot_lanes(urow, vrow);
+                out[base + k] = vals[k] * dot_pr(urow, vrow);
             }
         }
     });

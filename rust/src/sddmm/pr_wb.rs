@@ -7,7 +7,7 @@
 //! `d` — shared by every non-zero — no segmented-scan network is needed;
 //! the segment structure only carries the balanced work assignment.
 
-use super::{dot_lanes, SharedValues};
+use super::{dot_pr, SharedValues};
 use crate::sparse::{DenseMatrix, SegmentedMatrix};
 use crate::util::threadpool::ThreadPool;
 
@@ -50,7 +50,7 @@ pub fn sddmm(
                 for i in lo..hi {
                     let r = a.row_idx[i] as usize;
                     let c = a.col_idx[i] as usize;
-                    out[i - lo] = a.values[i] * dot_lanes(u.row(r), v.row(c));
+                    out[i - lo] = a.values[i] * dot_pr(u.row(r), v.row(c));
                 }
             });
         }

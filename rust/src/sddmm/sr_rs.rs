@@ -6,7 +6,7 @@
 //! row-length distribution imbalances workers: exactly the regime the
 //! workload-balanced [`super::sr_wb`] exists for.
 
-use super::{dot_sequential, SharedValues, ROW_CHUNK};
+use super::{dot_sr, SharedValues, ROW_CHUNK};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use crate::util::threadpool::ThreadPool;
 
@@ -37,7 +37,7 @@ pub fn sddmm(a: &CsrMatrix, u: &DenseMatrix, v: &DenseMatrix, out: &mut [f32], p
             let urow = u.row(r);
             for k in 0..cols.len() {
                 let vrow = v.row(cols[k] as usize);
-                out[base + k] = vals[k] * dot_sequential(urow, vrow);
+                out[base + k] = vals[k] * dot_sr(urow, vrow);
             }
         }
     });

@@ -7,7 +7,7 @@
 //! balances the op *exactly* — and since each non-zero owns its own
 //! output slot, no cross-worker carries are needed (unlike SpMM's SR-WB).
 
-use super::{dot_sequential, SharedValues};
+use super::{dot_sr, SharedValues};
 use crate::sparse::{DenseMatrix, SegmentedMatrix};
 use crate::util::threadpool::ThreadPool;
 
@@ -52,7 +52,7 @@ pub fn sddmm(
                 for i in lo..hi {
                     let r = a.row_idx[i] as usize;
                     let c = a.col_idx[i] as usize;
-                    out[i - lo] = a.values[i] * dot_sequential(u.row(r), v.row(c));
+                    out[i - lo] = a.values[i] * dot_sr(u.row(r), v.row(c));
                 }
             });
         }

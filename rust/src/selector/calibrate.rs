@@ -59,6 +59,7 @@ pub fn calibrate(samples: &[Sample]) -> Calibration {
                 n_threshold: 4,
                 t_avg,
                 t_cv,
+                ..AdaptiveSelector::default()
             };
             let loss = selector_loss(&sel, samples);
             grid.push((t_avg, t_cv, loss));

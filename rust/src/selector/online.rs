@@ -201,6 +201,14 @@ impl OnlineSelector {
         *self.sddmm_state.lock().unwrap()
     }
 
+    /// Row-traversal decision for SR kernels under the current
+    /// thresholds (delegates to [`AdaptiveSelector::sr_traversal`];
+    /// `t_mp` is not refit online — it gates the traversal, not the
+    /// kernel design the EWMA table scores).
+    pub fn traversal(&self, f: &MatrixFeatures) -> crate::kernels::Traversal {
+        self.current().sr_traversal(f)
+    }
+
     /// The metrics instance the EWMA observations land in.
     pub fn metrics(&self) -> Arc<Metrics> {
         self.metrics.clone()

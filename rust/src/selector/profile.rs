@@ -78,6 +78,7 @@ impl HardwareProfile {
                     ("n_threshold", num(self.selector.n_threshold as f64)),
                     ("t_avg", num(self.selector.t_avg)),
                     ("t_cv", num(self.selector.t_cv)),
+                    ("t_mp", num(self.selector.t_mp)),
                 ]),
             ),
             ("mean_loss", num(self.mean_loss)),
@@ -116,14 +117,22 @@ impl HardwareProfile {
                 .ok_or_else(|| anyhow!("profile selector missing 'n_threshold'"))?,
             t_avg: field("t_avg")?,
             t_cv: field("t_cv")?,
+            // added after version 1 profiles shipped: absent in older
+            // documents, so default rather than reject
+            t_mp: sel
+                .get("t_mp")
+                .and_then(Json::as_f64)
+                .unwrap_or(AdaptiveSelector::default().t_mp),
         };
         if !(selector.t_avg.is_finite() && selector.t_avg > 0.0)
             || !(selector.t_cv.is_finite() && selector.t_cv > 0.0)
+            || !(selector.t_mp.is_finite() && selector.t_mp > 0.0)
         {
             return Err(anyhow!(
-                "profile thresholds out of range: t_avg={} t_cv={}",
+                "profile thresholds out of range: t_avg={} t_cv={} t_mp={}",
                 selector.t_avg,
-                selector.t_cv
+                selector.t_cv,
+                selector.t_mp
             ));
         }
         // n_threshold is structural (the paper's 4: where VDL's sector
@@ -223,6 +232,7 @@ mod tests {
                 n_threshold: 4,
                 t_avg: 16.0,
                 t_cv: 0.5,
+                ..AdaptiveSelector::default()
             },
             mean_loss: 1.07,
             grid: vec![(16.0, 0.5, 1.07)],
@@ -262,6 +272,7 @@ mod tests {
             r#"{"version": 1, "selector": {"n_threshold": 4, "t_avg": 12}}"#,
             r#"{"version": 1, "selector": {"n_threshold": 0, "t_avg": 12, "t_cv": 1}}"#,
             r#"{"version": 1, "selector": {"n_threshold": 4096, "t_avg": 12, "t_cv": 1}}"#,
+            r#"{"version": 1, "selector": {"n_threshold": 4, "t_avg": 12, "t_cv": 1, "t_mp": 0}}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(HardwareProfile::from_json(&j).is_err(), "{bad}");
@@ -277,6 +288,8 @@ mod tests {
         .unwrap();
         let p = HardwareProfile::from_json(&j).unwrap();
         assert_eq!(p.selector.t_avg, 8.0);
+        // t_mp absent in pre-traversal documents → default, not an error
+        assert_eq!(p.selector.t_mp, AdaptiveSelector::default().t_mp);
         assert_eq!(p.source, "unknown");
         assert_eq!(p.samples, 0);
         assert!(p.n_values.is_empty());

@@ -15,9 +15,11 @@
 //! which is why the *ratio* (not raw stdv) is the metric.
 
 use crate::features::MatrixFeatures;
-use crate::kernels::KernelKind;
+use crate::kernels::{KernelKind, Traversal};
 
-/// Rule-based selector with the paper's two empirical thresholds.
+/// Rule-based selector with the paper's two empirical thresholds, plus
+/// the orthogonal row-traversal threshold for the SR family (`DESIGN.md`
+/// §Vectorization).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct AdaptiveSelector {
     /// N at or below which parallel reduction is used (paper: 4).
@@ -26,16 +28,23 @@ pub struct AdaptiveSelector {
     pub t_avg: f64,
     /// SR balancing: use SR-WB when `stdv_row/avg_row` exceeds this.
     pub t_cv: f64,
+    /// SR traversal: walk rows merge-path style when `stdv_row/avg_row`
+    /// exceeds this (extreme skew, where even blocked row chunks
+    /// serialize a worker). Deliberately above `t_cv`: moderate skew is
+    /// answered by the WB layout first, merge-path only by heavy tails.
+    pub t_mp: f64,
 }
 
 impl Default for AdaptiveSelector {
     /// Paper defaults; [`super::calibrate`] refines `t_avg`/`t_cv` against
-    /// simulator profiles.
+    /// simulator profiles (`t_mp` is not calibrated — it only gates the
+    /// traversal, not the kernel design).
     fn default() -> Self {
         Self {
             n_threshold: 4,
             t_avg: 12.0,
             t_cv: 1.5,
+            t_mp: 4.0,
         }
     }
 }
@@ -53,6 +62,18 @@ impl AdaptiveSelector {
             KernelKind::SrWb
         } else {
             KernelKind::SrRs
+        }
+    }
+
+    /// Row-traversal decision for the SR kernels: merge-path when the
+    /// row-length skew is extreme (`cv_row > t_mp`), blocked otherwise.
+    /// Orthogonal to [`AdaptiveSelector::select`] — the reduction order
+    /// per row is unchanged, only the worker partitioning differs.
+    pub fn sr_traversal(&self, f: &MatrixFeatures) -> Traversal {
+        if f.cv_row > self.t_mp {
+            Traversal::MergePath
+        } else {
+            Traversal::Blocked
         }
     }
 
@@ -155,6 +176,24 @@ mod tests {
             vec![KernelKind::PrWb, KernelKind::PrRs]
         );
         assert!(sel.select_shards(&[], 1).is_empty());
+    }
+
+    #[test]
+    fn extreme_skew_flips_the_traversal() {
+        let sel = AdaptiveSelector::default();
+        let flat = features(500, 16, false, 10);
+        assert_eq!(sel.sr_traversal(&flat), Traversal::Blocked);
+        // one row holding most of the nnz drives cv_row far past t_mp
+        let mut coo = CooMatrix::new(4000, 4000);
+        for c in 0..3000 {
+            coo.push(0, c, 1.0);
+        }
+        for r in 0..200 {
+            coo.push(r + 1, r, 1.0);
+        }
+        let spiked = MatrixFeatures::of(&CsrMatrix::from_coo(&coo));
+        assert!(spiked.cv_row > sel.t_mp, "cv {}", spiked.cv_row);
+        assert_eq!(sel.sr_traversal(&spiked), Traversal::MergePath);
     }
 
     #[test]

@@ -13,6 +13,11 @@
 //!
 //! [`mmio`] reads/writes MatrixMarket files so external matrices (e.g.
 //! downloaded SuiteSparse entries) can be used when available.
+//!
+//! Dense operands are [`DenseMatrix`] (packed row-major) or
+//! [`AlignedDense`] (64-byte aligned allocation, row stride padded to the
+//! SIMD lane width); the [`DenseX`] trait lets the kernels gather from
+//! either without caring which.
 
 pub mod coo;
 pub mod csr;
@@ -104,11 +109,146 @@ impl DenseMatrix {
         }
         out
     }
+
+    /// Copy into the vector-aligned, padded-stride layout
+    /// ([`AlignedDense`]) consumed by the SIMD kernel entry points.
+    pub fn to_aligned(&self) -> AlignedDense {
+        AlignedDense::from_dense(self)
+    }
+}
+
+/// Read-only dense operand abstraction: what the kernels' gather loops
+/// need from an `X`. Implemented by [`DenseMatrix`] (packed rows) and
+/// [`AlignedDense`] (aligned, padded rows); the kernels' private generic
+/// implementations are instantiated for both, so `row()` semantics are
+/// identical for callers regardless of layout.
+pub trait DenseX: Sync {
+    /// Number of rows.
+    fn xrows(&self) -> usize;
+    /// Logical row width (excluding any padding).
+    fn xcols(&self) -> usize;
+    /// Row `r` as a `xcols()`-length slice.
+    fn xrow(&self, r: usize) -> &[f32];
+}
+
+impl DenseX for DenseMatrix {
+    #[inline]
+    fn xrows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    fn xcols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    fn xrow(&self, r: usize) -> &[f32] {
+        self.row(r)
+    }
+}
+
+/// Dense row-major matrix over a 64-byte aligned allocation with the row
+/// stride rounded up to the SIMD lane width
+/// ([`crate::kernels::vec8::LANES`]), so an 8-lane vector load issued at
+/// any in-row tile offset never straddles a row boundary and row starts
+/// never straddle a cache line. The padding tail of each row is
+/// zero-filled and excluded from [`AlignedDense::row`] — callers see
+/// exactly [`DenseMatrix::row`] semantics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AlignedDense {
+    /// Number of rows.
+    pub rows: usize,
+    /// Logical row width.
+    pub cols: usize,
+    /// Physical row stride in floats (`cols` rounded up to the lane
+    /// width; 0 when `cols == 0`).
+    pub stride: usize,
+    buf: crate::util::aligned::AlignedBuf,
+}
+
+impl AlignedDense {
+    /// Zero-filled aligned matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let lanes = crate::kernels::vec8::LANES;
+        let stride = if cols == 0 { 0 } else { cols.div_ceil(lanes) * lanes };
+        Self {
+            rows,
+            cols,
+            stride,
+            buf: crate::util::aligned::AlignedBuf::zeros(rows * stride),
+        }
+    }
+
+    /// Copy a packed [`DenseMatrix`] into the aligned layout.
+    pub fn from_dense(src: &DenseMatrix) -> Self {
+        let mut out = Self::zeros(src.rows, src.cols);
+        for r in 0..src.rows {
+            let dst = &mut out.buf[r * out.stride..r * out.stride + out.cols];
+            dst.copy_from_slice(src.row(r));
+        }
+        out
+    }
+
+    /// Row slice — same semantics as [`DenseMatrix::row`] (padding
+    /// excluded).
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.buf[r * self.stride..r * self.stride + self.cols]
+    }
+
+    /// Copy back to the packed layout.
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            out.data[r * self.cols..(r + 1) * self.cols].copy_from_slice(self.row(r));
+        }
+        out
+    }
+}
+
+impl DenseX for AlignedDense {
+    #[inline]
+    fn xrows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    fn xcols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    fn xrow(&self, r: usize) -> &[f32] {
+        self.row(r)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn aligned_round_trip_preserves_rows() {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(88);
+        for (rows, cols) in [(3usize, 5usize), (4, 8), (2, 9), (1, 1), (6, 0), (0, 4)] {
+            let d = DenseMatrix::random(rows, cols, 1.0, &mut rng);
+            let a = d.to_aligned();
+            assert_eq!((a.rows, a.cols), (rows, cols));
+            assert_eq!(a.stride % crate::kernels::vec8::LANES.max(1), 0);
+            assert!(a.stride >= cols);
+            for r in 0..rows {
+                assert_eq!(a.row(r), d.row(r), "row {r} ({rows}x{cols})");
+            }
+            assert_eq!(a.to_dense(), d);
+        }
+    }
+
+    #[test]
+    fn aligned_rows_start_on_lane_boundaries() {
+        let d = DenseMatrix::zeros(4, 5);
+        let a = d.to_aligned();
+        assert_eq!(a.stride, 8);
+        // every physical row start is stride-aligned within the buffer,
+        // and the buffer base itself is 64-byte aligned
+        assert_eq!(a.row(0).as_ptr() as usize % crate::util::aligned::ALIGN, 0);
+    }
 
     #[test]
     fn dense_accessors() {

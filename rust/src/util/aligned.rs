@@ -1,0 +1,146 @@
+//! Cache-line/vector aligned f32 buffers.
+//!
+//! `Vec<f32>` guarantees only 4-byte alignment, so an 8-lane f32 tile
+//! load can straddle a cache line (and, without padding, a dense-matrix
+//! row boundary). [`AlignedBuf`] allocates at [`ALIGN`]-byte alignment —
+//! enough for any current vector ISA — and `sparse::AlignedDense` builds
+//! the padded-stride dense layout on top of it.
+
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+/// Allocation alignment in bytes (one x86 cache line; covers AVX-512's
+/// 64-byte vectors and everything smaller).
+pub const ALIGN: usize = 64;
+
+/// A heap `[f32]` aligned to [`ALIGN`] bytes, zero-initialized.
+pub struct AlignedBuf {
+    ptr: NonNull<f32>,
+    len: usize,
+}
+
+// SAFETY: AlignedBuf uniquely owns its allocation; f32 is Send + Sync.
+unsafe impl Send for AlignedBuf {}
+unsafe impl Sync for AlignedBuf {}
+
+impl AlignedBuf {
+    /// Zero-filled buffer of `len` floats. `len == 0` allocates nothing.
+    pub fn zeros(len: usize) -> Self {
+        if len == 0 {
+            return Self {
+                ptr: NonNull::dangling(),
+                len: 0,
+            };
+        }
+        let layout = Self::layout(len);
+        // SAFETY: layout has non-zero size (len > 0).
+        let raw = unsafe { alloc_zeroed(layout) } as *mut f32;
+        let ptr = NonNull::new(raw).unwrap_or_else(|| handle_alloc_error(layout));
+        Self { ptr, len }
+    }
+
+    /// Number of floats.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the buffer is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn layout(len: usize) -> Layout {
+        Layout::from_size_align(len * std::mem::size_of::<f32>(), ALIGN)
+            .expect("aligned buffer layout overflow")
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: allocated in `zeros` with the identical layout.
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.len)) };
+        }
+    }
+}
+
+impl Deref for AlignedBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        // SAFETY: ptr/len describe one live, properly aligned allocation
+        // (or a dangling ptr with len 0, which is a valid empty slice).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl DerefMut for AlignedBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        // SAFETY: as above, plus &mut self guarantees exclusivity.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Clone for AlignedBuf {
+    fn clone(&self) -> Self {
+        let mut out = Self::zeros(self.len);
+        out.copy_from_slice(self);
+        out
+    }
+}
+
+impl std::fmt::Debug for AlignedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AlignedBuf(len={}, align={})", self.len, ALIGN)
+    }
+}
+
+impl PartialEq for AlignedBuf {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_and_zero_init() {
+        for len in [1usize, 7, 8, 63, 64, 1000] {
+            let b = AlignedBuf::zeros(len);
+            assert_eq!(b.len(), len);
+            assert_eq!(b.as_ptr() as usize % ALIGN, 0, "len={len}");
+            assert!(b.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn empty_buffer_is_a_valid_slice() {
+        let b = AlignedBuf::zeros(0);
+        assert!(b.is_empty());
+        assert_eq!(&b[..], &[] as &[f32]);
+        let c = b.clone();
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn write_read_clone() {
+        let mut b = AlignedBuf::zeros(10);
+        for (i, v) in b.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let c = b.clone();
+        assert_eq!(b, c);
+        assert_eq!(c[9], 9.0);
+    }
+
+    #[test]
+    fn threads_can_share_it() {
+        let b = AlignedBuf::zeros(128);
+        std::thread::scope(|s| {
+            s.spawn(|| assert_eq!(b[0], 0.0));
+            s.spawn(|| assert_eq!(b[127], 0.0));
+        });
+    }
+}

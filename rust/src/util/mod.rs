@@ -1,11 +1,12 @@
 //! Shared substrates: PRNG, statistics, JSON, CLI parsing, thread pool,
-//! timers, and the property-test harness.
+//! timers, aligned buffers, and the property-test harness.
 //!
 //! The offline build environment vendors only `xla` and `anyhow`, so the
 //! conveniences a production crate would pull from crates.io (rayon, clap,
 //! criterion, proptest, serde_json) are implemented here from scratch, each
 //! scoped to exactly what this project needs.
 
+pub mod aligned;
 pub mod cli;
 pub mod json;
 pub mod prng;

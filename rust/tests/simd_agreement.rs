@@ -1,0 +1,268 @@
+//! SIMD agreement surface (ISSUE 6): the vectorized inner loops must not
+//! change results.
+//!
+//! The invariants pinned here hold **in every feature configuration** —
+//! default scalar build, `--features simd` (stable 8-lane tiles), and
+//! `--features portable_simd` (nightly `std::simd`) — because CI runs
+//! this binary under each one:
+//!
+//! - SpMM's inner `j` loop is elementwise (the reduction axis is `nnz`,
+//!   not `j`), so tiling it reassociates nothing: the fixed-reduction-
+//!   order kernels (`sr_rs`, serial merge-path) are **bit-for-bit** equal
+//!   to the dense reference on arbitrary float data, vectorized or not.
+//! - All four SpMM designs plus merge-path agree with the reference
+//!   within float tolerance under parallel pools, and exactly on
+//!   integer-valued operands (every partial sum exactly representable).
+//! - All four SDDMM designs are **bit-for-bit** equal to
+//!   `sddmm_reference` in every configuration, because kernels and
+//!   reference share one canonical dot order per configuration (see
+//!   `sddmm` module docs, "Canonical dot under `simd`").
+//! - The `vec8` tiled backends match the scalar backends bitwise for the
+//!   elementwise primitives and within 4 ULP for the blocked dot.
+//! - The aligned-operand entry point (`sr_rs::spmm_aligned` over
+//!   `AlignedDense`) is bit-for-bit equal to the packed path.
+
+use ge_spmm::gen::banded::banded;
+use ge_spmm::gen::powerlaw::PowerLawConfig;
+use ge_spmm::gen::rmat::RmatConfig;
+use ge_spmm::kernels::dense::{sddmm_reference, spmm_reference};
+use ge_spmm::kernels::{merge_path, pr_rs, pr_wb, sr_rs, sr_wb, vec8, KernelKind, WARP};
+use ge_spmm::sddmm;
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix, SegmentedMatrix};
+use ge_spmm::util::proptest::{assert_close, run_prop, Gen};
+use ge_spmm::util::threadpool::ThreadPool;
+
+mod common;
+use common::int_dense;
+
+/// One matrix from each generator family the selector is tested over:
+/// uniform, power-law (heavy tail), banded, R-MAT.
+fn gen_matrix(g: &mut Gen) -> CsrMatrix {
+    let family = *g.choose(&[0usize, 1, 2, 3]);
+    let coo = match family {
+        0 => {
+            let rows = g.dim() * 2 + 1;
+            let cols = g.dim() * 2 + 1;
+            let density = g.f64_in(0.02, 0.3);
+            CooMatrix::random_uniform(rows, cols, density, g.rng())
+        }
+        1 => {
+            let rows = g.dim() * 4 + 8;
+            PowerLawConfig {
+                rows,
+                cols: rows,
+                alpha: 1.7,
+                min_row: 1,
+                max_row: (rows / 2).max(2),
+            }
+            .generate(g.rng())
+        }
+        2 => {
+            let n = g.dim() * 2 + 2;
+            banded(n, &[-3, -1, 0, 1, 5], g.rng())
+        }
+        _ => RmatConfig::new(5, 4.0).generate(g.rng()),
+    };
+    CsrMatrix::from_coo(&coo)
+}
+
+/// Assert bit-for-bit equality with a labelled first-divergence message.
+fn assert_bits(actual: &[f32], expect: &[f32], what: &str) -> Result<(), String> {
+    if actual.len() != expect.len() {
+        return Err(format!("{what}: length {} vs {}", actual.len(), expect.len()));
+    }
+    for (i, (a, e)) in actual.iter().zip(expect).enumerate() {
+        if a.to_bits() != e.to_bits() {
+            return Err(format!("{what}: first divergence at {i}: {a:e} vs {e:e}"));
+        }
+    }
+    Ok(())
+}
+
+/// See `vec8` unit tests: f32 bits on a monotone integer line.
+fn ulp_diff(a: f32, b: f32) -> u64 {
+    fn monotone(x: f32) -> i64 {
+        let b = x.to_bits();
+        if b & 0x8000_0000 != 0 {
+            -((b & 0x7fff_ffff) as i64)
+        } else {
+            b as i64
+        }
+    }
+    (monotone(a) - monotone(b)).unsigned_abs()
+}
+
+#[test]
+fn fixed_order_kernels_bitwise_vs_reference() {
+    run_prop("simd: fixed-order bitwise", 32, |g| {
+        let a = gen_matrix(g);
+        let n = *g.choose(&[1usize, 4, 7, 8, 9, 32, 33]);
+        let x = DenseMatrix::from_vec(a.cols, n, g.vec_f32(a.cols * n));
+        let mut want = DenseMatrix::zeros(a.rows, n);
+        spmm_reference(&a, &x, &mut want);
+        let serial = ThreadPool::serial();
+        let parallel = ThreadPool::new(*g.choose(&[2usize, 3, 4]));
+
+        // sr_rs keeps the reference's exact reduction order even when the
+        // row range is split across workers (rows are never split).
+        for (pool, tag) in [(&serial, "serial"), (&parallel, "parallel")] {
+            let mut y = DenseMatrix::zeros(a.rows, n);
+            sr_rs::spmm(&a, &x, &mut y, pool);
+            assert_bits(&y.data, &want.data, &format!("sr_rs/{tag}"))?;
+        }
+        // aligned operand: padded stride, identical row semantics
+        let xa = x.to_aligned();
+        let mut y = DenseMatrix::zeros(a.rows, n);
+        sr_rs::spmm_aligned(&a, &xa, &mut y, &parallel);
+        assert_bits(&y.data, &want.data, "spmm_aligned")?;
+        // merge-path with one worker is one span walked in CSR order
+        let mut y = DenseMatrix::zeros(a.rows, n);
+        merge_path::spmm(&a, &x, &mut y, &serial);
+        assert_bits(&y.data, &want.data, "merge_path/serial")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn all_spmm_designs_agree_across_generators() {
+    run_prop("simd: all designs vs reference", 32, |g| {
+        let a = gen_matrix(g);
+        let seg = SegmentedMatrix::from_csr(&a, WARP);
+        let n = *g.choose(&[1usize, 4, 8, 32, 33]);
+        let x = DenseMatrix::from_vec(a.cols, n, g.vec_f32(a.cols * n));
+        let mut want = DenseMatrix::zeros(a.rows, n);
+        spmm_reference(&a, &x, &mut want);
+        let pool = ThreadPool::new(*g.choose(&[1usize, 2, 4]));
+
+        let run = |name: &str, f: &mut dyn FnMut(&mut DenseMatrix)| {
+            let mut y = DenseMatrix::zeros(a.rows, n);
+            f(&mut y);
+            assert_close(&y.data, &want.data, 1e-4, 1e-4).map_err(|m| format!("{name}: {m}"))
+        };
+        run("sr_rs", &mut |y| sr_rs::spmm(&a, &x, y, &pool))?;
+        run("sr_wb", &mut |y| sr_wb::spmm(&seg, &x, y, &pool))?;
+        run("pr_rs", &mut |y| pr_rs::spmm(&a, &x, y, &pool))?;
+        run("pr_wb", &mut |y| pr_wb::spmm(&seg, &x, y, &pool))?;
+        run("merge_path", &mut |y| merge_path::spmm(&a, &x, y, &pool))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn integer_operands_make_every_design_exact() {
+    // On integer-valued A and X every partial sum is exactly
+    // representable, so even the reassociating designs (WB segments, PR
+    // lanes, multi-worker merge-path carries) must be bit-for-bit equal —
+    // any dropped or duplicated contribution changes the result exactly.
+    run_prop("simd: integer exactness", 24, |g| {
+        let mut a = gen_matrix(g);
+        for v in &mut a.values {
+            *v = (((v.to_bits() >> 9) % 9) as i64 - 4) as f32;
+        }
+        let seg = SegmentedMatrix::from_csr(&a, WARP);
+        let n = *g.choose(&[1usize, 4, 8, 32]);
+        let x = int_dense(a.cols, n, g.rng());
+        let mut want = DenseMatrix::zeros(a.rows, n);
+        spmm_reference(&a, &x, &mut want);
+        let pool = ThreadPool::new(*g.choose(&[2usize, 4]));
+
+        let mut y = DenseMatrix::zeros(a.rows, n);
+        sr_wb::spmm(&seg, &x, &mut y, &pool);
+        assert_bits(&y.data, &want.data, "sr_wb/int")?;
+        let mut y = DenseMatrix::zeros(a.rows, n);
+        pr_rs::spmm(&a, &x, &mut y, &pool);
+        assert_bits(&y.data, &want.data, "pr_rs/int")?;
+        let mut y = DenseMatrix::zeros(a.rows, n);
+        pr_wb::spmm(&seg, &x, &mut y, &pool);
+        assert_bits(&y.data, &want.data, "pr_wb/int")?;
+        let mut y = DenseMatrix::zeros(a.rows, n);
+        merge_path::spmm(&a, &x, &mut y, &pool);
+        assert_bits(&y.data, &want.data, "merge_path/int")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn sddmm_designs_bitwise_vs_reference_in_this_configuration() {
+    run_prop("simd: sddmm bitwise", 32, |g| {
+        let a = gen_matrix(g);
+        let seg = SegmentedMatrix::from_csr(&a, WARP);
+        let d = *g.choose(&[1usize, 7, 8, 9, 32, 33]);
+        let u = DenseMatrix::from_vec(a.rows, d, g.vec_f32(a.rows * d));
+        let v = DenseMatrix::from_vec(a.cols, d, g.vec_f32(a.cols * d));
+        let mut want = vec![0f32; a.nnz()];
+        sddmm_reference(&a, &u, &v, &mut want);
+        let pool = ThreadPool::new(*g.choose(&[1usize, 2, 4]));
+        for kind in KernelKind::ALL {
+            let mut out = vec![0f32; a.nnz()];
+            sddmm::run(kind, &a, &seg, &u, &v, &mut out, &pool);
+            assert_bits(&out, &want, &format!("sddmm/{}", kind.label()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn vec8_tiled_backends_match_scalar() {
+    run_prop("simd: vec8 tiled vs scalar", 48, |g| {
+        let len = g.usize_in(0, 100);
+        let x = g.vec_f32(len);
+        let base = g.vec_f32(len);
+        let a = g.value();
+
+        let (mut s, mut t) = (base.clone(), base.clone());
+        vec8::axpy_scalar(&mut s, a, &x);
+        vec8::axpy_tiled(&mut t, a, &x);
+        assert_bits(&t, &s, "axpy")?;
+
+        let (mut s, mut t) = (base.clone(), base.clone());
+        vec8::add_assign_scalar(&mut s, &x);
+        vec8::add_assign_tiled(&mut t, &x);
+        assert_bits(&t, &s, "add_assign")?;
+
+        let (mut s, mut t) = (vec![0f32; len], vec![0f32; len]);
+        vec8::mul_store_scalar(&mut s, a, &x);
+        vec8::mul_store_tiled(&mut t, a, &x);
+        assert_bits(&t, &s, "mul_store")?;
+
+        let seq = vec8::dot_scalar(&base, &x);
+        let blk = vec8::dot_blocked(&base, &x);
+        let d = ulp_diff(seq, blk);
+        if d > 4 {
+            return Err(format!("dot orders {d} ulps apart: {seq:e} vs {blk:e}"));
+        }
+        // the public entry points resolve to exactly one backend per
+        // feature configuration — pin which one
+        let want = if cfg!(feature = "simd") { blk } else { seq };
+        if vec8::dot(&base, &x).to_bits() != want.to_bits() {
+            return Err("public dot does not match its configured backend".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn merge_path_partition_covers_everything_once() {
+    run_prop("simd: merge-path partition", 32, |g| {
+        let a = gen_matrix(g);
+        let parts = g.usize_in(1, 9);
+        let splits = merge_path::partition(&a, parts);
+        if splits.first() != Some(&(0, 0)) {
+            return Err(format!("first split {:?}", splits.first()));
+        }
+        if splits.last() != Some(&(a.rows, a.nnz())) {
+            return Err(format!("last split {:?}", splits.last()));
+        }
+        for w in splits.windows(2) {
+            let ((r0, k0), (r1, k1)) = (w[0], w[1]);
+            if r1 < r0 || k1 < k0 {
+                return Err(format!("non-monotone splits {:?} -> {:?}", w[0], w[1]));
+            }
+            // a worker's span is its merge-path distance: rows + nnz
+            if (r1 - r0) + (k1 - k0) > a.rows + a.nnz() {
+                return Err("span exceeds total work".into());
+            }
+        }
+        Ok(())
+    });
+}
