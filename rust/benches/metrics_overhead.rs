@@ -1,0 +1,151 @@
+//! Observability record-path cost on this machine — the price of the
+//! instrumentation ISSUE 7 threads through the serving hot path: one
+//! lock-free histogram update per latency, one TLS read per span site
+//! when no trace is attached, span materialization when one is, one
+//! audit-log push per selector decision, and the exposition render that
+//! `--stats-every` pays once per interval. Feeds DESIGN.md
+//! §Observability (recording convention in BENCHMARKS.md; supports
+//! `--json <path>` self-recording).
+
+use ge_spmm::bench::harness::bench_fn;
+use ge_spmm::bench::record::{json_path_arg, BenchRecord};
+use ge_spmm::coordinator::metrics::Metrics;
+use ge_spmm::coordinator::SpmmEngine;
+use ge_spmm::features::MatrixFeatures;
+use ge_spmm::kernels::{KernelKind, SparseOp};
+use ge_spmm::obs::expo;
+use ge_spmm::obs::hist::AtomicHistogram;
+use ge_spmm::obs::trace::{self, Trace, TraceHandle};
+use ge_spmm::obs::{AuditEntry, AuditLog};
+use ge_spmm::selector::AdaptiveSelector;
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix};
+use ge_spmm::util::json::{num, obj};
+use ge_spmm::util::prng::Xoshiro256;
+use std::hint::black_box;
+use std::time::Duration;
+
+/// Record-path ops per timed closure call: single calls are too small
+/// for the wallclock harness, so every case batches and reports per-op.
+const BATCH: usize = 10_000;
+/// Spans per on-trace closure call (each call owns a fresh trace, so
+/// this also bounds the span vector the trace accumulates).
+const SPANS: usize = 1_000;
+
+fn per_op(median_s: f64, ops: usize) -> f64 {
+    median_s / ops as f64 * 1e9
+}
+
+fn main() {
+    println!("== observability record-path cost (this machine) ==");
+    let mut record = json_path_arg().map(|path| {
+        (
+            path,
+            BenchRecord::new("metrics_overhead").with_config(obj(vec![
+                ("batch", num(BATCH as f64)),
+                ("spans", num(SPANS as f64)),
+            ])),
+        )
+    });
+    // pseudo-latencies spanning the histogram's range, fixed across runs
+    let vals: Vec<u64> = (0..BATCH as u64).map(|i| 500 + (i * 7919) % 1_000_000).collect();
+    let mut cases: Vec<(String, f64)> = Vec::new();
+    let mut run = |name: &str, ops: usize, f: &mut dyn FnMut()| {
+        let s = bench_fn(name, f);
+        let ns = per_op(s.median_s(), ops);
+        println!("{}  ({ns:.1} ns/op)", s.line());
+        cases.push((name.to_string(), ns));
+        s
+    };
+
+    let hist = AtomicHistogram::new();
+    run("histogram record x10k", BATCH, &mut || {
+        for &v in &vals {
+            hist.record(v);
+        }
+    });
+    black_box(hist.snapshot());
+
+    let metrics = Metrics::default();
+    run("metrics record request x10k", BATCH, &mut || {
+        for &v in &vals {
+            metrics.record(KernelKind::SrRs, Duration::from_nanos(v));
+        }
+    });
+    run("metrics record shard x10k", BATCH, &mut || {
+        for &v in &vals {
+            metrics.record_shard(KernelKind::PrWb, Duration::from_nanos(v));
+        }
+    });
+
+    // span site with no trace attached: the cost every uninstrumented
+    // request pays at every span site — a thread-local read and an
+    // inert guard
+    run("span off-trace x10k", BATCH, &mut || {
+        for i in 0..BATCH {
+            let mut g = trace::span("bench");
+            g.set_attr("i", i);
+        }
+    });
+    // span site inside an attached trace: materializes the record
+    run("span on-trace x1k", SPANS, &mut || {
+        let t = Trace::begin("bench");
+        let scope = trace::attach(&TraceHandle::of(&t));
+        for i in 0..SPANS {
+            let mut g = trace::span("bench");
+            g.set_attr("i", i);
+        }
+        drop(scope);
+        black_box(t.span_count());
+    });
+
+    // one selector decision audited, ring at steady state
+    let mut rng = Xoshiro256::seeded(11);
+    let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(256, 256, 0.03, &mut rng));
+    let features = MatrixFeatures::of(&csr);
+    let decision = AdaptiveSelector::default().decide(&features, 8);
+    let proto = AuditEntry {
+        seq: 0,
+        op: SparseOp::Spmm,
+        grain: "request",
+        shard: None,
+        selector: "adaptive",
+        matrix: Some(0),
+        features,
+        n: 8,
+        thresholds: decision.thresholds,
+        rule: decision.rule,
+        kernel: decision.kernel,
+        explored: false,
+        realized_cost: None,
+    };
+    let log = AuditLog::default();
+    run("audit push x1k", SPANS, &mut || {
+        for _ in 0..SPANS {
+            log.push(proto.clone());
+        }
+    });
+
+    // denominator: a full instrumented request (trace committed to the
+    // ring, decision audited, latency recorded) on a small matrix
+    let engine = SpmmEngine::native();
+    let h = engine.register(csr).unwrap();
+    let x = DenseMatrix::random(256, 8, 1.0, &mut rng);
+    run("spmm end-to-end traced", 1, &mut || {
+        black_box(engine.spmm(h, &x).unwrap());
+    });
+
+    // what `serve --stats-every` pays per interval
+    run("prometheus render", 1, &mut || {
+        black_box(expo::prometheus_text(&engine.metrics).len());
+    });
+
+    if let Some((_, rec)) = record.as_mut() {
+        for (name, ns) in &cases {
+            rec.push_value(name, *ns, "ns/op");
+        }
+    }
+    if let Some((path, rec)) = record {
+        rec.save(&path).expect("writing bench record");
+        println!("wrote {}", path.display());
+    }
+}

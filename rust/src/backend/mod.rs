@@ -205,6 +205,52 @@ pub trait SpmmBackend: Send + Sync {
     }
 }
 
+/// Run [`SpmmBackend::execute`] inside a `kernel` trace span carrying
+/// the backend name, kernel label, dense width and executed artifact
+/// (inert when no trace is installed on this thread). Every dispatch
+/// path — engine, shard fan-out, router — funnels kernel calls through
+/// here so the span taxonomy stays uniform.
+pub fn execute_traced(
+    backend: &dyn SpmmBackend,
+    operand: &PreparedOperand,
+    x: &DenseMatrix,
+    kernel: KernelKind,
+) -> Result<Execution> {
+    let mut span = crate::obs::trace::span("kernel");
+    span.set_attr("backend", backend.name());
+    span.set_attr("kernel", kernel.label());
+    span.set_attr("n", x.cols);
+    let out = backend.execute(operand, x, kernel);
+    match &out {
+        Ok(ex) => span.set_attr("artifact", &ex.artifact),
+        Err(e) => span.set_attr("error", e),
+    }
+    out
+}
+
+/// SDDMM counterpart of [`execute_traced`]: wraps
+/// [`SpmmBackend::execute_sddmm`] in a `kernel` span with an `op=sddmm`
+/// attribute.
+pub fn execute_sddmm_traced(
+    backend: &dyn SpmmBackend,
+    operand: &PreparedOperand,
+    u: &DenseMatrix,
+    v: &DenseMatrix,
+    kernel: KernelKind,
+) -> Result<SddmmExecution> {
+    let mut span = crate::obs::trace::span("kernel");
+    span.set_attr("backend", backend.name());
+    span.set_attr("op", "sddmm");
+    span.set_attr("kernel", kernel.label());
+    span.set_attr("d", u.cols);
+    let out = backend.execute_sddmm(operand, u, v, kernel);
+    match &out {
+        Ok(ex) => span.set_attr("artifact", &ex.artifact),
+        Err(e) => span.set_attr("error", e),
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

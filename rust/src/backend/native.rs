@@ -142,6 +142,18 @@ impl SpmmBackend for NativeBackend {
             // SR contract; the PR designs reduce within lane bundles.
             let sr_mp = !kernel.is_parallel_reduction()
                 && self.traversal.resolve(&prep.features) == Traversal::MergePath;
+            if !kernel.is_parallel_reduction() {
+                let mut span = crate::obs::trace::span("traversal");
+                span.set_attr(
+                    "traversal",
+                    if sr_mp {
+                        Traversal::MergePath.label()
+                    } else {
+                        Traversal::Blocked.label()
+                    },
+                );
+                span.set_attr("cv_row", format!("{:.3}", prep.features.cv_row));
+            }
             match kernel {
                 _ if sr_mp => {
                     merge_path::spmm(&prep.csr, x, &mut y, &self.pool);

@@ -118,6 +118,8 @@ impl SpmmBackend for RoutedBackend {
         kernel: KernelKind,
     ) -> Result<Execution> {
         let prep: &RoutedPrepared = operand.state()?;
+        let mut span = crate::obs::trace::span("route");
+        span.set_attr("side", if prep.large { "large" } else { "small" });
         if prep.large {
             self.large.execute(&prep.operand, x, kernel)
         } else {
@@ -133,6 +135,8 @@ impl SpmmBackend for RoutedBackend {
         kernel: KernelKind,
     ) -> Result<SddmmExecution> {
         let prep: &RoutedPrepared = operand.state()?;
+        let mut span = crate::obs::trace::span("route");
+        span.set_attr("side", if prep.large { "large" } else { "small" });
         if prep.large {
             self.large.execute_sddmm(&prep.operand, u, v, kernel)
         } else {

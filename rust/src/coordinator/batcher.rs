@@ -15,14 +15,19 @@
 
 use super::engine::{MatrixHandle, SpmmEngine};
 use crate::kernels::SparseOp;
+use crate::obs::trace::{self, Trace, TraceHandle};
 use crate::sparse::DenseMatrix;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
 
-/// One pending request: a dense operand and where to deliver the result.
+/// One pending request: a dense operand, where to deliver the result,
+/// and the serving-layer trace riding the request (if admitted through
+/// [`Server::submit`](super::server::Server::submit)).
 struct Pending {
     x: DenseMatrix,
     tag: u64,
+    trace: Option<Arc<Trace>>,
 }
 
 /// Per-request result.
@@ -99,22 +104,59 @@ impl<'e> Batcher<'e> {
     /// dimension mismatch) and no pending request was touched — a bad
     /// operand must not poison the batch it would have been packed into.
     pub fn submit(&mut self, h: MatrixHandle, x: DenseMatrix, tag: u64) -> Result<FlushOutcome> {
-        let expected = self.engine.features(h)?.cols;
+        self.submit_traced(h, x, tag, None)
+    }
+
+    /// [`Batcher::submit`] with a serving-layer trace riding the request.
+    /// The trace follows the request through the queue: the batch it
+    /// flushes in executes under the first traced member's context (so
+    /// the engine's dispatch/kernel spans land there), every other traced
+    /// member records the shared execution as a raw `batch_join`
+    /// interval, and each member's trace is committed to the engine's
+    /// flight recorder when its batch settles — on success, batch
+    /// failure, or pre-queue rejection alike.
+    pub fn submit_traced(
+        &mut self,
+        h: MatrixHandle,
+        x: DenseMatrix,
+        tag: u64,
+        trace: Option<Arc<Trace>>,
+    ) -> Result<FlushOutcome> {
+        let expected = match self.engine.features(h) {
+            Ok(f) => f.cols,
+            Err(e) => {
+                self.commit_trace(&trace);
+                return Err(e);
+            }
+        };
         if x.rows != expected {
             self.engine.metrics.record_error();
+            self.commit_trace(&trace);
             return Err(anyhow!(
                 "inner dimension mismatch: matrix has {expected} cols, X has {} rows",
                 x.rows
             ));
         }
-        let key = self.engine.batch_key(h)?;
+        let key = match self.engine.batch_key(h) {
+            Ok(key) => key,
+            Err(e) => {
+                self.commit_trace(&trace);
+                return Err(e);
+            }
+        };
         let entry = self.queues.entry(key).or_insert_with(|| (h, Vec::new()));
-        entry.1.push(Pending { x, tag });
+        entry.1.push(Pending { x, tag, trace });
         let width: usize = entry.1.iter().map(|p| p.x.cols).sum();
         if width >= self.max_width {
             Ok(self.flush(key))
         } else {
             Ok(FlushOutcome::default())
+        }
+    }
+
+    fn commit_trace(&self, trace: &Option<Arc<Trace>>) {
+        if let Some(t) = trace {
+            self.engine.metrics.recorder().commit(t);
         }
     }
 
@@ -135,8 +177,27 @@ impl<'e> Batcher<'e> {
         v: DenseMatrix,
         tag: u64,
     ) -> Result<FlushOutcome> {
+        self.submit_sddmm_traced(h, u, v, tag, None)
+    }
+
+    /// [`Batcher::submit_sddmm`] with a serving-layer trace riding the
+    /// request: the engine's dispatch/kernel spans for the (unbatched)
+    /// execution land in it, and it is committed to the engine's flight
+    /// recorder before this returns.
+    pub fn submit_sddmm_traced(
+        &mut self,
+        h: MatrixHandle,
+        u: DenseMatrix,
+        v: DenseMatrix,
+        tag: u64,
+        trace: Option<Arc<Trace>>,
+    ) -> Result<FlushOutcome> {
         let mut outcome = FlushOutcome::default();
-        match self.engine.sddmm(h, &u, &v) {
+        let scope = trace.as_ref().map(|t| trace::attach(&TraceHandle::of(t)));
+        let result = self.engine.sddmm(h, &u, &v);
+        drop(scope);
+        self.commit_trace(&trace);
+        match result {
             Ok(resp) => {
                 let nnz = resp.values.len();
                 outcome.results.push(BatchedResult {
@@ -182,7 +243,43 @@ impl<'e> Batcher<'e> {
             }
             off += p.x.cols;
         }
-        let resp = match self.engine.spmm(h, &combined) {
+        // Execute under the first traced member's context, so the
+        // engine's dispatch/kernel spans for the shared execution land
+        // in exactly one trace; every other traced member records the
+        // same interval as a raw `batch_join` span. All member traces
+        // are committed here — the batch settles them, pass or fail.
+        let primary = q.iter().position(|p| p.trace.is_some());
+        let starts: Vec<u64> = q
+            .iter()
+            .map(|p| p.trace.as_ref().map_or(0, |t| t.elapsed_ns()))
+            .collect();
+        let scope = primary.map(|i| {
+            trace::attach(&TraceHandle::of(
+                q[i].trace.as_ref().expect("primary has a trace"),
+            ))
+        });
+        let mut batch_span = trace::span("batch");
+        batch_span.set_attr("batch_size", q.len());
+        batch_span.set_attr("width", total);
+        let executed = self.engine.spmm(h, &combined);
+        batch_span.end();
+        drop(scope);
+        for (i, p) in q.iter().enumerate() {
+            let Some(t) = &p.trace else { continue };
+            if primary != Some(i) {
+                t.record_raw(
+                    "batch_join",
+                    starts[i],
+                    t.elapsed_ns(),
+                    vec![
+                        ("batch_size", q.len().to_string()),
+                        ("width", total.to_string()),
+                    ],
+                );
+            }
+            self.engine.metrics.recorder().commit(t);
+        }
+        let resp = match executed {
             Ok(resp) => resp,
             Err(error) => {
                 outcome.failures.push(FlushError {

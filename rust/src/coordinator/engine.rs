@@ -10,10 +10,13 @@
 
 use super::cache::PreparedCache;
 use super::metrics::Metrics;
-use crate::backend::{NativeBackend, PreparedOperand, SpmmBackend};
+use crate::backend::{
+    execute_sddmm_traced, execute_traced, NativeBackend, PreparedOperand, SpmmBackend,
+};
 use crate::features::MatrixFeatures;
-use crate::kernels::KernelKind;
-use crate::selector::{AdaptiveSelector, OnlineConfig, OnlineSelector, SddmmSelector};
+use crate::kernels::{KernelKind, SparseOp};
+use crate::obs::{trace, AuditEntry};
+use crate::selector::{AdaptiveSelector, Decision, OnlineConfig, OnlineSelector, SddmmSelector};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -374,14 +377,76 @@ impl SpmmEngine {
         self.backend.available_n()
     }
 
+    /// Record one request-grain selector decision into the audit log and
+    /// return the chosen kernel.
+    fn audit_request(
+        &self,
+        op: SparseOp,
+        selector: &'static str,
+        h: MatrixHandle,
+        features: MatrixFeatures,
+        n: usize,
+        decision: Decision,
+        explored: bool,
+    ) -> KernelKind {
+        let kernel = decision.kernel;
+        self.metrics.audit().push(AuditEntry {
+            seq: 0,
+            op,
+            grain: "request",
+            shard: None,
+            selector,
+            matrix: Some(h.0),
+            features,
+            n,
+            thresholds: decision.thresholds,
+            rule: decision.rule,
+            kernel,
+            explored,
+            realized_cost: None,
+        });
+        kernel
+    }
+
+    /// The audit log's explain report restricted to one handle's
+    /// request-grain decisions: for each retained decision, the features
+    /// the selector saw, the thresholds it consulted (enough to replay
+    /// the rule), the kernel it chose, and the realized normalized cost
+    /// once the online path observed it.
+    pub fn explain(&self, h: MatrixHandle) -> String {
+        self.metrics.audit().explain(Some(h.0))
+    }
+
     /// Execute `Y = A · X` with adaptive kernel selection (the online
     /// selector's choice — exploration included — when this engine was
     /// built with [`SpmmEngine::serving_online`]).
     pub fn spmm(&self, h: MatrixHandle, x: &DenseMatrix) -> Result<SpmmResponse> {
         let reg = self.get(h)?;
         let kernel = match &self.online {
-            Some(online) => online.select(&reg.features, x.cols),
-            None => self.selector.select(&reg.features, x.cols),
+            Some(online) => {
+                let (decision, explored) = online.decide(&reg.features, x.cols);
+                self.audit_request(
+                    SparseOp::Spmm,
+                    "online",
+                    h,
+                    reg.features,
+                    x.cols,
+                    decision,
+                    explored,
+                )
+            }
+            None => {
+                let decision = self.selector.decide(&reg.features, x.cols);
+                self.audit_request(
+                    SparseOp::Spmm,
+                    "adaptive",
+                    h,
+                    reg.features,
+                    x.cols,
+                    decision,
+                    false,
+                )
+            }
         };
         self.spmm_with(h, x, kernel)
     }
@@ -399,18 +464,34 @@ impl SpmmEngine {
         kernel: KernelKind,
     ) -> Result<SpmmResponse> {
         let reg = self.get(h)?;
+        // One "dispatch" span per request: inside an admitted serving
+        // trace this nests under the installed context; on direct engine
+        // calls the guard owns a fresh trace and commits it to the flight
+        // recorder when dropped, so both paths are explorable.
+        let mut req = trace::request(
+            "dispatch",
+            &format!("spmm#{}", h.0),
+            self.metrics.recorder(),
+        );
+        req.set_attr("op", SparseOp::Spmm.label());
+        req.set_attr("kernel", kernel.label());
+        req.set_attr("n", x.cols);
+        req.set_attr("matrix", h.0);
         if let Err(e) = reg.prepared.check_operand(x) {
             self.metrics.record_error();
+            req.set_attr("error", &e);
             return Err(e);
         }
         let start = Instant::now();
-        let exec = match self.backend.execute(&reg.prepared, x, kernel) {
+        let exec = match execute_traced(self.backend.as_ref(), &reg.prepared, x, kernel) {
             Ok(exec) => exec,
             Err(e) => {
                 self.metrics.record_error();
+                req.set_attr("error", &e);
                 return Err(e);
             }
         };
+        req.set_attr("artifact", &exec.artifact);
         let latency = start.elapsed();
         self.metrics.record(kernel, latency);
         // Close the online loop for directly-executed requests. Sharded
@@ -446,8 +527,22 @@ impl SpmmEngine {
         let reg = self.get(h)?;
         let d = u.cols;
         let kernel = match &self.online {
-            Some(online) => online.select_sddmm(&reg.features, d),
-            None => self.sddmm_selector.select(&reg.features, d),
+            Some(online) => {
+                let (decision, explored) = online.decide_sddmm(&reg.features, d);
+                self.audit_request(
+                    SparseOp::Sddmm,
+                    "online-sddmm",
+                    h,
+                    reg.features,
+                    d,
+                    decision,
+                    explored,
+                )
+            }
+            None => {
+                let decision = self.sddmm_selector.decide(&reg.features, d);
+                self.audit_request(SparseOp::Sddmm, "sddmm", h, reg.features, d, decision, false)
+            }
         };
         self.sddmm_with(h, u, v, kernel)
     }
@@ -464,18 +559,30 @@ impl SpmmEngine {
         kernel: KernelKind,
     ) -> Result<SddmmResponse> {
         let reg = self.get(h)?;
+        let mut req = trace::request(
+            "dispatch",
+            &format!("sddmm#{}", h.0),
+            self.metrics.recorder(),
+        );
+        req.set_attr("op", SparseOp::Sddmm.label());
+        req.set_attr("kernel", kernel.label());
+        req.set_attr("d", u.cols);
+        req.set_attr("matrix", h.0);
         if let Err(e) = reg.prepared.check_sddmm_operands(u, v) {
             self.metrics.record_error();
+            req.set_attr("error", &e);
             return Err(e);
         }
         let start = Instant::now();
-        let exec = match self.backend.execute_sddmm(&reg.prepared, u, v, kernel) {
+        let exec = match execute_sddmm_traced(self.backend.as_ref(), &reg.prepared, u, v, kernel) {
             Ok(exec) => exec,
             Err(e) => {
                 self.metrics.record_error();
+                req.set_attr("error", &e);
                 return Err(e);
             }
         };
+        req.set_attr("artifact", &exec.artifact);
         let latency = start.elapsed();
         self.metrics.record_sddmm(kernel, latency);
         // Close the online loop for directly-executed requests, mirroring
@@ -542,6 +649,37 @@ mod tests {
         spmm_reference(&a, &x, &mut want);
         assert_close(&resp.y.data, &want.data, 1e-5, 1e-5).unwrap();
         assert_eq!(engine.metrics.kernel_counts().iter().sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn adaptive_requests_leave_an_audit_trail_and_a_trace() {
+        let engine = SpmmEngine::native();
+        let h = engine.register(matrix(330)).unwrap();
+        let mut rng = Xoshiro256::seeded(331);
+        let x = DenseMatrix::random(60, 32, 1.0, &mut rng);
+        let resp = engine.spmm(h, &x).unwrap();
+        // audit: the retained request-grain decision reproduces the choice
+        let entries = engine.metrics.audit().for_matrix(0);
+        assert_eq!(entries.len(), 1);
+        let e = &entries[0];
+        assert_eq!(e.kernel, resp.kernel);
+        assert_eq!(e.grain, "request");
+        assert_eq!(e.selector, "adaptive");
+        assert_eq!(e.n, 32);
+        let report = engine.explain(h);
+        assert!(report.contains(resp.kernel.label()), "{report}");
+        // trace: the direct call committed one trace to the recorder,
+        // with the kernel span nested under dispatch
+        let traces = engine.metrics.recorder().traces();
+        assert_eq!(traces.len(), 1);
+        let t = &traces[0];
+        assert_eq!(t.label, "spmm#0");
+        let dispatch = t.span("dispatch").unwrap();
+        assert_eq!(dispatch.attr("op"), Some("spmm"));
+        assert_eq!(dispatch.attr("artifact"), Some(resp.artifact.as_str()));
+        let kernel = t.span("kernel").unwrap();
+        assert_eq!(kernel.parent, dispatch.id);
+        assert!(kernel.duration_ns() > 0, "kernel span has a real duration");
     }
 
     #[test]

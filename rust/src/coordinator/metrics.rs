@@ -1,6 +1,10 @@
-//! Coordinator metrics: request counts, per-kernel selection counts, and
-//! latency aggregates. Lock-light (atomics + a mutex-guarded latency
-//! reservoir) so the hot path stays cheap.
+//! Coordinator metrics: request counts, per-kernel selection counts,
+//! latency histograms, and the observability hub. Lock-free on the hot
+//! path — every counter is a relaxed atomic and every latency
+//! distribution is a log-bucketed [`AtomicHistogram`]; the only mutexes
+//! are inside the bounded flight-recorder and audit rings (one short,
+//! poison-tolerant acquisition per request), so a panicking worker can
+//! never wedge stats for the whole server.
 //!
 //! Requests and shards are counted separately: one sharded request fans
 //! out into K shard executions, each with its own kernel choice and
@@ -10,7 +14,16 @@
 //! The two sparse ops are **tagged apart**: `record`/`record_shard`
 //! count SpMM, `record_sddmm`/`record_sddmm_shard` count SDDMM, so
 //! per-op kernel selection stays observable when traffic mixes the
-//! FusedMM pair (attention workloads — `DESIGN.md` §SDDMM).
+//! FusedMM pair (attention workloads — `DESIGN.md` §SDDMM). Latency
+//! quantiles come per **op × grain × kernel** from the histogram banks
+//! ([`Metrics::latency_histogram`]); the exposition surface
+//! (`crate::obs::expo`) renders them as Prometheus text and JSON.
+//!
+//! `Metrics` is also the hub the rest of the observability subsystem
+//! hangs off: the request-trace [`FlightRecorder`] and the selector
+//! decision [`AuditLog`] live here because every layer that needs them
+//! (engine, server, batcher, sharded backend) already shares one
+//! `Arc<Metrics>`.
 //!
 //! The per-`(feature bucket, kernel)` cost EWMAs ([`Metrics::observe_cost`]
 //! / [`Metrics::cost`]) are the substrate of online selector refinement:
@@ -18,9 +31,13 @@
 //! [`crate::selector::OnlineSelector`] refits its thresholds against the
 //! table (`DESIGN.md` §Measured calibration).
 
-use crate::kernels::KernelKind;
+use crate::kernels::{KernelKind, SparseOp};
+use crate::obs::audit::AuditLog;
+use crate::obs::hist::{AtomicHistogram, HistogramSnapshot};
+use crate::obs::trace::FlightRecorder;
+use crate::obs::Grain;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Number of feature buckets the per-kernel cost EWMAs are keyed by.
@@ -41,23 +58,26 @@ pub struct Metrics {
     by_kernel: [AtomicU64; 4],
     /// total execution nanoseconds
     exec_ns: AtomicU64,
-    /// bounded latency reservoir for quantiles (most recent 4096)
-    latencies: Mutex<Vec<u64>>,
+    /// per-kernel request-latency histograms, [`KernelKind::ALL`] order
+    request_hist: [AtomicHistogram; 4],
     /// shard-level counters (sharded backends only; zero otherwise)
     shard_execs: AtomicU64,
     shard_by_kernel: [AtomicU64; 4],
     shard_ns: AtomicU64,
     /// slowest single shard execution seen — the fan-out straggler bound
     shard_max_ns: AtomicU64,
+    shard_hist: [AtomicHistogram; 4],
     /// SDDMM request-level counters — the second sparse op is tagged
     /// apart from SpMM so per-op kernel selection stays observable
     sddmm_requests: AtomicU64,
     sddmm_by_kernel: [AtomicU64; 4],
     sddmm_ns: AtomicU64,
+    sddmm_request_hist: [AtomicHistogram; 4],
     /// SDDMM shard-level counters (sharded backends only)
     sddmm_shard_execs: AtomicU64,
     sddmm_shard_by_kernel: [AtomicU64; 4],
     sddmm_shard_ns: AtomicU64,
+    sddmm_shard_hist: [AtomicHistogram; 4],
     /// prepared-matrix cache counters (engines with a cache only)
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
@@ -72,25 +92,25 @@ pub struct Metrics {
     cost_ewma: [[AtomicU64; 4]; COST_BUCKETS],
     /// observation counts behind each EWMA cell (0 = cell is empty)
     cost_obs: [[AtomicU64; 4]; COST_BUCKETS],
+    /// ring of the last N request traces (committed at request end)
+    recorder: Arc<FlightRecorder>,
+    /// ring of recent selector decisions with features and thresholds
+    audit: Arc<AuditLog>,
 }
 
-const RESERVOIR: usize = 4096;
+fn kidx(kernel: KernelKind) -> usize {
+    KernelKind::ALL.iter().position(|k| *k == kernel).unwrap()
+}
 
 impl Metrics {
     /// Record one completed request.
     pub fn record(&self, kernel: KernelKind, latency: Duration) {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        let idx = KernelKind::ALL.iter().position(|k| *k == kernel).unwrap();
+        let idx = kidx(kernel);
         self.by_kernel[idx].fetch_add(1, Ordering::Relaxed);
-        let ns = latency.as_nanos() as u64;
-        self.exec_ns.fetch_add(ns, Ordering::Relaxed);
-        let mut res = self.latencies.lock().unwrap();
-        if res.len() >= RESERVOIR {
-            let idx = (self.requests.load(Ordering::Relaxed) as usize) % RESERVOIR;
-            res[idx] = ns;
-        } else {
-            res.push(ns);
-        }
+        self.exec_ns
+            .fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
+        self.request_hist[idx].record_duration(latency);
     }
 
     /// Record a failed request.
@@ -103,11 +123,12 @@ impl Metrics {
     /// request-level kernel recorded by [`Metrics::record`].
     pub fn record_shard(&self, kernel: KernelKind, latency: Duration) {
         self.shard_execs.fetch_add(1, Ordering::Relaxed);
-        let idx = KernelKind::ALL.iter().position(|k| *k == kernel).unwrap();
+        let idx = kidx(kernel);
         self.shard_by_kernel[idx].fetch_add(1, Ordering::Relaxed);
         let ns = latency.as_nanos() as u64;
         self.shard_ns.fetch_add(ns, Ordering::Relaxed);
         self.shard_max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.shard_hist[idx].record_duration(latency);
     }
 
     /// Completed request count.
@@ -175,19 +196,21 @@ impl Metrics {
     /// observable per op.
     pub fn record_sddmm(&self, kernel: KernelKind, latency: Duration) {
         self.sddmm_requests.fetch_add(1, Ordering::Relaxed);
-        let idx = KernelKind::ALL.iter().position(|k| *k == kernel).unwrap();
+        let idx = kidx(kernel);
         self.sddmm_by_kernel[idx].fetch_add(1, Ordering::Relaxed);
         self.sddmm_ns
             .fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
+        self.sddmm_request_hist[idx].record_duration(latency);
     }
 
     /// Record one SDDMM shard execution inside a sharded request.
     pub fn record_sddmm_shard(&self, kernel: KernelKind, latency: Duration) {
         self.sddmm_shard_execs.fetch_add(1, Ordering::Relaxed);
-        let idx = KernelKind::ALL.iter().position(|k| *k == kernel).unwrap();
+        let idx = kidx(kernel);
         self.sddmm_shard_by_kernel[idx].fetch_add(1, Ordering::Relaxed);
         self.sddmm_shard_ns
             .fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
+        self.sddmm_shard_hist[idx].record_duration(latency);
     }
 
     /// Completed SDDMM request count.
@@ -305,7 +328,7 @@ impl Metrics {
         if !cost.is_finite() || cost <= 0.0 {
             return;
         }
-        let k = KernelKind::ALL.iter().position(|x| *x == kernel).unwrap();
+        let k = kidx(kernel);
         let seen = self.cost_obs[bucket][k].fetch_add(1, Ordering::Relaxed);
         let cell = &self.cost_ewma[bucket][k];
         let mut cur = cell.load(Ordering::Relaxed);
@@ -331,7 +354,7 @@ impl Metrics {
     /// Current EWMA cost (seconds per flop) of a `(bucket, kernel)` cell,
     /// or `None` if nothing was observed there yet.
     pub fn cost(&self, bucket: usize, kernel: KernelKind) -> Option<f64> {
-        let k = KernelKind::ALL.iter().position(|x| *x == kernel).unwrap();
+        let k = kidx(kernel);
         if self.cost_obs[bucket][k].load(Ordering::Relaxed) == 0 {
             return None;
         }
@@ -340,8 +363,7 @@ impl Metrics {
 
     /// Observation count behind one `(bucket, kernel)` EWMA cell.
     pub fn cost_observations(&self, bucket: usize, kernel: KernelKind) -> u64 {
-        let k = KernelKind::ALL.iter().position(|x| *x == kernel).unwrap();
-        self.cost_obs[bucket][k].load(Ordering::Relaxed)
+        self.cost_obs[bucket][kidx(kernel)].load(Ordering::Relaxed)
     }
 
     /// Total cost observations across all cells.
@@ -353,14 +375,46 @@ impl Metrics {
             .sum()
     }
 
-    /// Latency quantile from the reservoir.
-    pub fn latency_quantile(&self, q: f64) -> Duration {
-        let res = self.latencies.lock().unwrap();
-        if res.is_empty() {
-            return Duration::ZERO;
+    fn hist_bank(&self, op: SparseOp, grain: Grain) -> &[AtomicHistogram; 4] {
+        match (op, grain) {
+            (SparseOp::Spmm, Grain::Request) => &self.request_hist,
+            (SparseOp::Spmm, Grain::Shard) => &self.shard_hist,
+            (SparseOp::Sddmm, Grain::Request) => &self.sddmm_request_hist,
+            (SparseOp::Sddmm, Grain::Shard) => &self.sddmm_shard_hist,
         }
-        let xs: Vec<f64> = res.iter().map(|&ns| ns as f64).collect();
-        Duration::from_nanos(crate::util::stats::quantile(&xs, q) as u64)
+    }
+
+    /// Snapshot one op × grain × kernel latency histogram.
+    pub fn latency_histogram(
+        &self,
+        op: SparseOp,
+        grain: Grain,
+        kernel: KernelKind,
+    ) -> HistogramSnapshot {
+        self.hist_bank(op, grain)[kidx(kernel)].snapshot()
+    }
+
+    /// Snapshot the latency distribution of one op × grain merged across
+    /// all four kernels.
+    pub fn latency_histogram_merged(&self, op: SparseOp, grain: Grain) -> HistogramSnapshot {
+        HistogramSnapshot::merged(self.hist_bank(op, grain).iter().map(|h| h.snapshot()))
+    }
+
+    /// SpMM request-latency quantile across all kernels, from the
+    /// lock-free histograms (bucket resolution: a √2 relative factor).
+    pub fn latency_quantile(&self, q: f64) -> Duration {
+        let snap = self.latency_histogram_merged(SparseOp::Spmm, Grain::Request);
+        Duration::from_nanos(snap.quantile(q) as u64)
+    }
+
+    /// The flight recorder holding the last N request traces.
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        &self.recorder
+    }
+
+    /// The selector decision audit log.
+    pub fn audit(&self) -> &Arc<AuditLog> {
+        &self.audit
     }
 
     /// One-line summary for logs. Shard, cache and admission counters are
@@ -492,6 +546,35 @@ mod tests {
     }
 
     #[test]
+    fn histograms_are_banked_per_op_grain_and_kernel() {
+        let m = Metrics::default();
+        m.record(KernelKind::SrRs, Duration::from_micros(100));
+        m.record_shard(KernelKind::SrWb, Duration::from_micros(20));
+        m.record_sddmm(KernelKind::PrRs, Duration::from_micros(400));
+        m.record_sddmm_shard(KernelKind::PrWb, Duration::from_micros(30));
+        let cases = [
+            (SparseOp::Spmm, Grain::Request, KernelKind::SrRs, 100_000u64),
+            (SparseOp::Spmm, Grain::Shard, KernelKind::SrWb, 20_000),
+            (SparseOp::Sddmm, Grain::Request, KernelKind::PrRs, 400_000),
+            (SparseOp::Sddmm, Grain::Shard, KernelKind::PrWb, 30_000),
+        ];
+        for (op, grain, kernel, ns) in cases {
+            let snap = m.latency_histogram(op, grain, kernel);
+            assert_eq!(snap.count, 1, "{op:?}/{grain:?}/{kernel:?}");
+            assert_eq!(snap.sum, ns);
+            // every other kernel's histogram in the same bank is empty
+            for other in KernelKind::ALL {
+                if other != kernel {
+                    assert!(m.latency_histogram(op, grain, other).is_empty());
+                }
+            }
+            let merged = m.latency_histogram_merged(op, grain);
+            assert_eq!(merged.count, 1);
+            assert_eq!(merged.max, ns);
+        }
+    }
+
+    #[test]
     fn cache_and_admission_counters_are_opt_in_sections() {
         let m = Metrics::default();
         let base = m.summary();
@@ -571,5 +654,9 @@ mod tests {
         });
         assert_eq!(m.requests(), 8000);
         assert_eq!(m.kernel_counts()[1], 8000);
+        let snap = m.latency_histogram(SparseOp::Spmm, Grain::Request, KernelKind::SrWb);
+        assert_eq!(snap.count, 8000);
+        assert_eq!(snap.sum, 80_000);
+        assert_eq!(snap.counts.iter().sum::<u64>(), 8000);
     }
 }

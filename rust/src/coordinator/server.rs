@@ -35,6 +35,7 @@
 
 use super::batcher::{BatchedResult, Batcher, FlushOutcome};
 use super::engine::{MatrixHandle, SpmmEngine};
+use crate::obs::trace::Trace;
 use crate::sparse::DenseMatrix;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -73,6 +74,12 @@ pub struct Request {
     pub tag: u64,
     /// Where the result is delivered.
     pub reply: mpsc::Sender<ServerReply>,
+    /// Request-lifecycle trace, created at admission by
+    /// [`Server::submit`] (its epoch marks the admission instant; the
+    /// queue wait surfaces as the `admission` span). `None` for requests
+    /// fed directly into [`serve`] — the engine still records
+    /// dispatch-level traces for those.
+    trace: Option<Arc<Trace>>,
 }
 
 impl Request {
@@ -88,6 +95,7 @@ impl Request {
             op: RequestOp::Spmm { x },
             tag,
             reply,
+            trace: None,
         }
     }
 
@@ -106,6 +114,7 @@ impl Request {
             op: RequestOp::Sddmm { u, v },
             tag,
             reply,
+            trace: None,
         }
     }
 }
@@ -214,11 +223,20 @@ fn worker_loop(
                         op,
                         tag,
                         reply,
+                        trace,
                     } = req;
                     repliers.insert(tag, reply);
+                    // Queue wait: the trace epoch is the admission
+                    // instant, so [0, now] is exactly how long the
+                    // request sat between submit and dequeue.
+                    if let Some(t) = &trace {
+                        t.record_raw("admission", 0, t.elapsed_ns(), vec![("tag", tag.to_string())]);
+                    }
                     let submitted = match op {
-                        RequestOp::Spmm { x } => batcher.submit(matrix, x, tag),
-                        RequestOp::Sddmm { u, v } => batcher.submit_sddmm(matrix, u, v, tag),
+                        RequestOp::Spmm { x } => batcher.submit_traced(matrix, x, tag, trace),
+                        RequestOp::Sddmm { u, v } => {
+                            batcher.submit_sddmm_traced(matrix, u, v, tag, trace)
+                        }
                     };
                     match submitted {
                         Ok(outcome) => deliver(outcome, &mut repliers),
@@ -318,6 +336,7 @@ impl Server {
     /// the refusal in the engine metrics — when the admission bound is
     /// hit or the target worker is gone.
     pub fn submit(&self, req: Request) -> bool {
+        let mut req = req;
         let admitted = self.depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
             if d < self.max_queue {
                 Some(d + 1)
@@ -337,6 +356,14 @@ impl Server {
             }
         };
         self.engine.metrics.record_queue_depth(previous + 1);
+        // Start the request-lifecycle trace at the admission instant:
+        // its epoch is t=0 for every span the request accrues downstream
+        // (queue wait, batch, dispatch, shard fan-out, kernels).
+        let label = match &req.op {
+            RequestOp::Spmm { .. } => format!("spmm#{}", req.tag),
+            RequestOp::Sddmm { .. } => format!("sddmm#{}", req.tag),
+        };
+        req.trace = Some(Trace::begin(label));
         // unknown handles route anywhere; the worker's batcher rejects
         // them individually at validation
         let key = self.engine.batch_key(req.matrix).unwrap_or(u64::MAX);

@@ -38,6 +38,13 @@
 //! with per-matrix request routing, width batching, an admission bound
 //! and graceful shutdown — `ge-spmm serve` drives it from the CLI.
 //!
+//! The whole request path is observable through the [`obs`] subsystem:
+//! per-request span traces into a flight-recorder ring, lock-free
+//! log-bucketed latency histograms behind every quantile in
+//! `coordinator::Metrics`, a replayable selector decision audit, and
+//! Prometheus/JSON exposition (`ge-spmm stats`,
+//! `ge-spmm serve --stats-file`). See `DESIGN.md` §Observability.
+//!
 //! The native kernels' inner loops run through the [`kernels::vec8`]
 //! microkernel layer: scalar by default, explicitly 8-lane tiled under
 //! the `simd` cargo feature (stable), or `std::simd` under
@@ -74,6 +81,7 @@ pub mod features;
 pub mod gen;
 pub mod gnn;
 pub mod kernels;
+pub mod obs;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sddmm;

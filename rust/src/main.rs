@@ -11,11 +11,15 @@
 //!               --shards N for per-shard selection)
 //!   serve       drive a synthetic workload through the concurrent serving
 //!               layer (worker threads + prepared-matrix cache + size
-//!               routing) and report throughput and metrics
+//!               routing) and report throughput and metrics; `--stats-every`
+//!               / `--stats-file` dump live metrics periodically
+//!   stats       render engine metrics (latency histograms, selector audit,
+//!               flight-recorder traces) as Prometheus text and JSON
 //!   simulate    run the GPU cost model for all kernels on a matrix
 //!   calibrate   fit selector thresholds against simulator profiles
 //!   perfgate    measure normalized kernel/reference latency ratios on a
 //!               pinned workload and fail on regression vs a baseline JSON
+//!               (exit 3 = VACUOUS: nothing was actually compared)
 //!   train-gcn   end-to-end GCN training (needs the `pjrt` feature)
 //!   suite       list the synthetic benchmark collection
 //!
@@ -63,16 +67,17 @@ fn run(sub: Option<&str>, rest: Vec<String>) -> Result<()> {
         Some("spmm") => cmd_spmm(rest),
         Some("sddmm") => cmd_sddmm(rest),
         Some("serve") => cmd_serve(rest),
+        Some("stats") => cmd_stats(rest),
         Some("simulate") => cmd_simulate(rest),
         Some("calibrate") => cmd_calibrate(rest),
         Some("perfgate") => cmd_perfgate(rest),
         Some("train-gcn") => cmd_train_gcn(rest),
         Some("suite") => cmd_suite(rest),
-        Some(other) => bail!("unknown subcommand '{other}' (try: info, features, select, spmm, sddmm, serve, simulate, calibrate, perfgate, train-gcn, suite)"),
+        Some(other) => bail!("unknown subcommand '{other}' (try: info, features, select, spmm, sddmm, serve, stats, simulate, calibrate, perfgate, train-gcn, suite)"),
         None => {
             println!(
                 "ge-spmm {} — adaptive workload-balanced/parallel-reduction sparse kernels\n\
-                 subcommands: info, features, select, spmm, sddmm, serve, simulate, calibrate, perfgate, train-gcn, suite\n\
+                 subcommands: info, features, select, spmm, sddmm, serve, stats, simulate, calibrate, perfgate, train-gcn, suite\n\
                  use `ge-spmm <subcommand> --help` for options",
                 ge_spmm::version()
             );
@@ -321,6 +326,18 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
         "online mode: run the sibling kernel every Nth decision (0 = off)",
         Some("16"),
     )
+    .opt(
+        "stats-file",
+        "dump engine metrics to this file (Prometheus text, or a JSON \
+         snapshot when the path ends in .json); written once at exit, and \
+         periodically with --stats-every",
+        None,
+    )
+    .opt(
+        "stats-every",
+        "seconds between periodic --stats-file dumps (0 = final dump only)",
+        Some("0"),
+    )
     .opt("seed", "workload seed", Some("42"));
     let args = cmd.parse(&rest)?;
 
@@ -384,6 +401,35 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
         server.workers()
     );
 
+    // Periodic stats exposition: overwrite --stats-file every
+    // --stats-every seconds while the workload runs (a scrape target),
+    // plus one final dump after shutdown either way.
+    let stats_file: Option<String> = args.get("stats-file").map(str::to_string);
+    let stats_every: u64 = args.parse_or("stats-every", 0);
+    let stop_stats = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stats_thread = match (&stats_file, stats_every) {
+        (Some(path), every) if every > 0 => {
+            let engine = engine.clone();
+            let stop = stop_stats.clone();
+            let path = path.clone();
+            Some(std::thread::spawn(move || {
+                use std::sync::atomic::Ordering;
+                let period = Duration::from_secs(every);
+                let mut last = Instant::now();
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(50));
+                    if last.elapsed() >= period {
+                        last = Instant::now();
+                        if let Err(e) = write_stats(&engine, &path) {
+                            eprintln!("stats dump failed: {e:#}");
+                        }
+                    }
+                }
+            }))
+        }
+        _ => None,
+    };
+
     let t0 = Instant::now();
     let (ok, failed) = std::thread::scope(|s| {
         let joins: Vec<_> = (0..producers)
@@ -433,6 +479,14 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
     });
     let elapsed = t0.elapsed();
     server.shutdown();
+    stop_stats.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(t) = stats_thread {
+        let _ = t.join();
+    }
+    if let Some(path) = &stats_file {
+        write_stats(&engine, path)?;
+        println!("stats written to {path}");
+    }
 
     println!(
         "served {ok} requests ({failed} rejected/failed) in {elapsed:?} \
@@ -445,6 +499,121 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
     }
     if let Some((entries, bytes)) = engine.cache_usage() {
         println!("cache: {entries} prepared matrices resident, {bytes} bytes");
+    }
+    Ok(())
+}
+
+/// Dump one exposition snapshot of an engine's metrics to `path`:
+/// a JSON snapshot when the path ends in `.json`, Prometheus text
+/// otherwise.
+fn write_stats(engine: &SpmmEngine, path: &str) -> Result<()> {
+    use ge_spmm::obs::expo;
+    let text = if path.ends_with(".json") {
+        let mut t = expo::snapshot(&engine.metrics).to_string_pretty();
+        t.push('\n');
+        t
+    } else {
+        expo::prometheus_text(&engine.metrics)
+    };
+    std::fs::write(path, text).map_err(|e| anyhow!("writing stats file {path}: {e}"))
+}
+
+fn cmd_stats(rest: Vec<String>) -> Result<()> {
+    use ge_spmm::obs::expo;
+    use ge_spmm::sparse::CooMatrix;
+    use ge_spmm::util::json::Json;
+
+    let cmd = Command::new(
+        "stats",
+        "render engine metrics as Prometheus text and JSON (drives a small \
+         synthetic workload through the serving engine so every surface has \
+         data, or re-renders a dumped JSON snapshot with --file)",
+    )
+    .opt(
+        "file",
+        "re-render a previously dumped JSON snapshot (e.g. from `serve \
+         --stats-file stats.json`) instead of running a workload",
+        None,
+    )
+    .opt("format", "output format: prom | json | both", Some("both"))
+    .opt("requests", "synthetic requests to drive (workload mode)", Some("32"))
+    .opt("rows", "rows = cols of the small synthetic matrix", Some("256"))
+    .opt("n", "dense width per request", Some("8"))
+    .flag("traces", "also dump the flight recorder's retained traces (JSON)")
+    .flag("explain", "also print the selector decision audit report")
+    .opt("seed", "workload seed", Some("42"));
+    let args = cmd.parse(&rest)?;
+    let format = args.get_or("format", "both");
+    anyhow::ensure!(
+        matches!(format, "prom" | "json" | "both"),
+        "unknown --format '{format}' (expected: prom, json, both)"
+    );
+
+    // File mode: parse the snapshot back and re-render through the same
+    // renderers the live path uses — the snapshot is the interchange.
+    if let Some(path) = args.get("file") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading stats snapshot {path}: {e}"))?;
+        let snap = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        if format != "prom" {
+            println!("{}", snap.to_string_pretty());
+        }
+        if format != "json" {
+            print!(
+                "{}",
+                expo::prometheus_of(&snap).map_err(|e| anyhow!("rendering {path}: {e}"))?
+            );
+        }
+        return Ok(());
+    }
+
+    // Workload mode: one small matrix on the unsharded route and one
+    // large on the sharded route, mixed SpMM/SDDMM traffic — so request
+    // and shard grains, both ops, the audit log and the flight recorder
+    // all have data to render.
+    let requests = args.parse_positive("requests", 32);
+    let rows = args.parse_positive("rows", 256);
+    let n = args.parse_positive("n", 8);
+    let mut rng = Xoshiro256::seeded(args.parse_or("seed", 42));
+    let small = CsrMatrix::from_coo(&CooMatrix::random_uniform(rows, rows, 0.01, &mut rng));
+    let large = CsrMatrix::from_coo(&CooMatrix::random_uniform(rows * 2, rows, 0.05, &mut rng));
+    let engine = SpmmEngine::serving(16 << 20, small.nnz() + 1, 2);
+    let hs = engine.register(small)?;
+    let hl = engine.register(large)?;
+    for r in 0..requests {
+        let h = if r % 2 == 0 { hs } else { hl };
+        let f = engine.features(h)?;
+        if r % 4 == 3 {
+            let u = DenseMatrix::random(f.rows, n, 1.0, &mut rng);
+            let v = DenseMatrix::random(f.cols, n, 1.0, &mut rng);
+            engine.sddmm(h, &u, &v)?;
+        } else {
+            let x = DenseMatrix::random(f.cols, n, 1.0, &mut rng);
+            engine.spmm(h, &x)?;
+        }
+    }
+    eprintln!(
+        "drove {requests} synthetic requests ({} spmm, {} sddmm; {} shard executions)",
+        engine.metrics.requests(),
+        engine.metrics.sddmm_requests(),
+        engine.metrics.shard_executions() + engine.metrics.sddmm_shard_executions(),
+    );
+
+    let snap = expo::snapshot(&engine.metrics);
+    if format != "prom" {
+        println!("{}", snap.to_string_pretty());
+    }
+    if format != "json" {
+        print!(
+            "{}",
+            expo::prometheus_of(&snap).map_err(|e| anyhow!("rendering snapshot: {e}"))?
+        );
+    }
+    if args.flag("traces") {
+        println!("{}", engine.metrics.recorder().dump_json().to_string_pretty());
+    }
+    if args.flag("explain") {
+        println!("{}", engine.metrics.audit().explain(None));
     }
     Ok(())
 }
@@ -572,9 +741,11 @@ fn cmd_calibrate(rest: Vec<String>) -> Result<()> {
 /// `--baseline` the command re-measures and fails when any kernel's
 /// ratio grew by more than `--threshold` (default 1.3×, deliberately
 /// generous: shared CI runners are noisy and this gate is after 10×
-/// regressions, not 10%). A baseline with an empty `results` object (the
-/// checked-in bootstrap from a machine that could not measure) passes
-/// vacuously with a notice.
+/// regressions, not 10%). A run that compares nothing — the baseline has
+/// an empty `results` object (the checked-in bootstrap from a machine
+/// that could not measure), or no measured case matched any baseline
+/// entry — prints a `VACUOUS:` status line and exits with code 3 so CI
+/// can surface "the gate did not actually gate" instead of a green pass.
 fn cmd_perfgate(rest: Vec<String>) -> Result<()> {
     use ge_spmm::bench::harness::{bench_fn_with, BenchConfig};
     use ge_spmm::kernels::{dense, merge_path, pr_rs, pr_wb, sr_rs, sr_wb, WARP};
@@ -723,11 +894,11 @@ fn cmd_perfgate(rest: Vec<String>) -> Result<()> {
             .ok_or_else(|| anyhow!("baseline {path} has no 'results' object"))?;
         if base.is_empty() {
             println!(
-                "baseline {path} has no recorded results (bootstrap from a machine \
-                 without measurement) — gate passes vacuously; regenerate with \
+                "VACUOUS: baseline {path} has no recorded results (bootstrap from a \
+                 machine without measurement) — nothing was compared; regenerate with \
                  `ge-spmm perfgate --record {path}` on a machine that can measure"
             );
-            return Ok(());
+            std::process::exit(3);
         }
         let mut regressions = Vec::new();
         let mut compared = 0usize;
@@ -750,6 +921,14 @@ fn cmd_perfgate(rest: Vec<String>) -> Result<()> {
                 regressions.len(),
                 regressions.join("\n  ")
             );
+        }
+        if compared == 0 {
+            println!(
+                "VACUOUS: no measured case matched any entry in {path} — the gate \
+                 compared nothing; re-record the baseline with \
+                 `ge-spmm perfgate --record {path}`"
+            );
+            std::process::exit(3);
         }
         println!("perf gate passed: {compared} cases within {threshold}x of {path}");
     }

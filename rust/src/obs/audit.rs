@@ -1,0 +1,366 @@
+//! Selector decision audit: why each kernel was chosen.
+//!
+//! Every adaptive decision in the stack — `AdaptiveSelector` /
+//! `SddmmSelector` rule firings at request grain, per-shard choices in
+//! the sharded backend, `OnlineSelector` picks including its exploration
+//! swaps — records an [`AuditEntry`]: the input features, the thresholds
+//! consulted (by name and value, enough to *reproduce* the decision),
+//! the chosen kernel, and, once the online path observes the request's
+//! cost, the realized normalized cost backfilled via
+//! [`AuditLog::note_cost`]. The log is a bounded ring under one
+//! poison-tolerant mutex (decisions are request-rate, not shard-op-rate
+//! hot), queryable as a per-matrix "explain" report through
+//! `SpmmEngine::explain` and summarized by the exposition surface.
+
+use crate::features::MatrixFeatures;
+use crate::kernels::{KernelKind, SparseOp};
+use crate::util::json::{num, obj, s, Json};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One recorded selector decision.
+#[derive(Clone, Debug)]
+pub struct AuditEntry {
+    /// Monotone sequence number, assigned by [`AuditLog::push`].
+    pub seq: u64,
+    /// Which sparse op the decision was for.
+    pub op: SparseOp,
+    /// Decision grain: `"request"` (engine selection) or `"shard"`.
+    pub grain: &'static str,
+    /// Shard index for shard-grain decisions.
+    pub shard: Option<usize>,
+    /// Deciding selector: `"adaptive"`, `"sddmm"`, `"online"`,
+    /// `"online-sddmm"`, or `"fixed"`.
+    pub selector: &'static str,
+    /// Registered matrix id for request-grain decisions (shard-grain
+    /// decisions happen below the handle layer).
+    pub matrix: Option<usize>,
+    /// The feature vector the selector saw.
+    pub features: MatrixFeatures,
+    /// Dense width `n` (SpMM) or dot width `d` (SDDMM).
+    pub n: usize,
+    /// Thresholds consulted, by name — replaying the selector's rule on
+    /// `features`/`n` against these must reproduce `kernel`.
+    pub thresholds: Vec<(&'static str, f64)>,
+    /// Human-readable statement of the rule that fired.
+    pub rule: String,
+    /// The chosen kernel design.
+    pub kernel: KernelKind,
+    /// Whether the online selector overrode the rule to explore.
+    pub explored: bool,
+    /// Normalized cost (`seconds / flops`) observed for this decision,
+    /// backfilled by the online path via [`AuditLog::note_cost`].
+    pub realized_cost: Option<f64>,
+}
+
+impl AuditEntry {
+    /// Look up a consulted threshold by name.
+    pub fn threshold(&self, name: &str) -> Option<f64> {
+        self.thresholds
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// One-line rendering for explain reports.
+    pub fn line(&self) -> String {
+        let mut out = format!(
+            "#{} [{} {}{}] n={} -> {} via {}{}: {}",
+            self.seq,
+            self.grain,
+            self.op.label(),
+            self.shard.map(|i| format!(" shard {i}")).unwrap_or_default(),
+            self.n,
+            self.kernel.label(),
+            self.selector,
+            if self.explored { " (explore)" } else { "" },
+            self.rule,
+        );
+        let thresholds = self
+            .thresholds
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        out.push_str(&format!(
+            "; features {}; thresholds {}",
+            self.features.summary(),
+            thresholds
+        ));
+        if let Some(c) = self.realized_cost {
+            out.push_str(&format!("; realized cost {c:.3e}"));
+        }
+        out
+    }
+
+    /// JSON form (used by the stats snapshot).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("seq", num(self.seq as f64)),
+            ("op", s(self.op.label())),
+            ("grain", s(self.grain)),
+            (
+                "shard",
+                self.shard.map(|i| num(i as f64)).unwrap_or(Json::Null),
+            ),
+            ("selector", s(self.selector)),
+            (
+                "matrix",
+                self.matrix.map(|i| num(i as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "features",
+                obj(vec![
+                    ("rows", num(self.features.rows as f64)),
+                    ("cols", num(self.features.cols as f64)),
+                    ("nnz", num(self.features.nnz as f64)),
+                    ("avg_row", num(self.features.avg_row)),
+                    ("cv_row", num(self.features.cv_row)),
+                    ("max_row", num(self.features.max_row as f64)),
+                ]),
+            ),
+            ("n", num(self.n as f64)),
+            (
+                "thresholds",
+                Json::Obj(
+                    self.thresholds
+                        .iter()
+                        .map(|(k, v)| (k.to_string(), num(*v)))
+                        .collect(),
+                ),
+            ),
+            ("rule", s(&self.rule)),
+            ("kernel", s(self.kernel.label())),
+            ("explored", Json::Bool(self.explored)),
+            (
+                "realized_cost",
+                self.realized_cost.map(num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// Bounded ring of recent [`AuditEntry`]s plus monotone totals.
+#[derive(Debug)]
+pub struct AuditLog {
+    capacity: usize,
+    next_seq: AtomicU64,
+    explored: AtomicU64,
+    realized: AtomicU64,
+    ring: Mutex<VecDeque<AuditEntry>>,
+}
+
+impl AuditLog {
+    /// Log keeping the last `capacity` decisions (min 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            next_seq: AtomicU64::new(0),
+            explored: AtomicU64::new(0),
+            realized: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total decisions ever recorded (monotone).
+    pub fn recorded(&self) -> u64 {
+        self.next_seq.load(Ordering::Relaxed)
+    }
+
+    /// Total decisions flagged as online exploration.
+    pub fn explored(&self) -> u64 {
+        self.explored.load(Ordering::Relaxed)
+    }
+
+    /// Total decisions whose realized cost was backfilled.
+    pub fn realized(&self) -> u64 {
+        self.realized.load(Ordering::Relaxed)
+    }
+
+    /// Record a decision; returns its assigned sequence number.
+    pub fn push(&self, mut entry: AuditEntry) -> u64 {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        entry.seq = seq;
+        if entry.explored {
+            self.explored.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.len() >= self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(entry);
+        seq
+    }
+
+    /// Backfill the realized normalized cost onto the newest matching
+    /// decision (same op, kernel and matrix nnz) that has none yet.
+    /// Returns whether a decision was found — misses are expected once
+    /// the ring has wrapped past the decision.
+    pub fn note_cost(&self, op: SparseOp, kernel: KernelKind, nnz: usize, cost: f64) -> bool {
+        let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        for entry in ring.iter_mut().rev() {
+            if entry.op == op
+                && entry.kernel == kernel
+                && entry.features.nnz == nnz
+                && entry.realized_cost.is_none()
+            {
+                entry.realized_cost = Some(cost);
+                self.realized.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Copy the retained decisions out, oldest first.
+    pub fn entries(&self) -> Vec<AuditEntry> {
+        self.ring
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .cloned()
+            .collect()
+    }
+
+    /// Decisions currently retained.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Whether no decision has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Retained request-grain decisions for one registered matrix.
+    pub fn for_matrix(&self, matrix: usize) -> Vec<AuditEntry> {
+        self.ring
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .filter(|e| e.matrix == Some(matrix))
+            .cloned()
+            .collect()
+    }
+
+    /// Multi-line explain report; restricted to one matrix's
+    /// request-grain decisions when `matrix` is given.
+    pub fn explain(&self, matrix: Option<usize>) -> String {
+        let entries = match matrix {
+            Some(id) => self.for_matrix(id),
+            None => self.entries(),
+        };
+        let mut out = format!(
+            "selector audit: {} decisions recorded ({} retained{}), {} explored, {} with realized cost\n",
+            self.recorded(),
+            entries.len(),
+            matrix.map(|id| format!(" for matrix {id}")).unwrap_or_default(),
+            self.explored(),
+            self.realized(),
+        );
+        for e in &entries {
+            out.push_str(&e.line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSON form: totals plus the retained entries.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("capacity", num(self.capacity as f64)),
+            ("recorded", num(self.recorded() as f64)),
+            ("explored", num(self.explored() as f64)),
+            ("realized", num(self.realized() as f64)),
+            (
+                "entries",
+                Json::Arr(self.entries().iter().map(|e| e.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+impl Default for AuditLog {
+    /// Log retaining the last 256 decisions.
+    fn default() -> Self {
+        Self::new(256)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{CooMatrix, CsrMatrix};
+    use crate::util::prng::Xoshiro256;
+
+    fn entry(kernel: KernelKind, nnz_seed: u64) -> AuditEntry {
+        let mut rng = Xoshiro256::seeded(nnz_seed);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(20, 20, 0.2, &mut rng));
+        AuditEntry {
+            seq: 0,
+            op: SparseOp::Spmm,
+            grain: "request",
+            shard: None,
+            selector: "adaptive",
+            matrix: Some(3),
+            features: MatrixFeatures::of(&csr),
+            n: 32,
+            thresholds: vec![("t_cv", 1.5)],
+            rule: "cv_row <= t_cv -> sr_rs".to_string(),
+            kernel,
+            explored: false,
+            realized_cost: None,
+        }
+    }
+
+    #[test]
+    fn push_assigns_sequence_and_wraps() {
+        let log = AuditLog::new(2);
+        for i in 0..5u64 {
+            assert_eq!(log.push(entry(KernelKind::SrRs, i)), i);
+        }
+        assert_eq!(log.recorded(), 5);
+        assert_eq!(log.len(), 2);
+        let seqs: Vec<u64> = log.entries().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, [3, 4]);
+    }
+
+    #[test]
+    fn note_cost_backfills_newest_matching_entry() {
+        let log = AuditLog::default();
+        let e = entry(KernelKind::SrRs, 7);
+        let nnz = e.features.nnz;
+        log.push(e.clone());
+        log.push(e);
+        assert!(log.note_cost(SparseOp::Spmm, KernelKind::SrRs, nnz, 1e-9));
+        let entries = log.entries();
+        assert_eq!(entries[0].realized_cost, None, "older entry untouched");
+        assert_eq!(entries[1].realized_cost, Some(1e-9), "newest matched first");
+        assert!(!log.note_cost(SparseOp::Sddmm, KernelKind::SrRs, nnz, 1.0));
+        assert_eq!(log.realized(), 1);
+        assert!(log.entries()[1].line().contains("realized cost"));
+    }
+
+    #[test]
+    fn explain_filters_by_matrix() {
+        let log = AuditLog::default();
+        let mut a = entry(KernelKind::SrWb, 1);
+        a.matrix = Some(1);
+        let mut b = entry(KernelKind::PrRs, 2);
+        b.matrix = Some(2);
+        log.push(a);
+        log.push(b);
+        let report = log.explain(Some(1));
+        assert!(report.contains("sr_wb"), "{report}");
+        assert!(!report.contains("pr_rs"), "{report}");
+        assert!(log.explain(None).contains("pr_rs"));
+        assert_eq!(log.to_json().get("recorded").and_then(|j| j.as_usize()), Some(2));
+        assert_eq!(log.entries()[0].threshold("t_cv"), Some(1.5));
+    }
+}

@@ -1,0 +1,396 @@
+//! Exposition: render `Metrics` (counters, histogram banks, audit,
+//! flight recorder) as a JSON snapshot or Prometheus text.
+//!
+//! Two entry points, one schema: [`snapshot`] turns a live
+//! [`Metrics`] into a [`Json`] document, and [`prometheus_of`] renders
+//! *any* such document — live or re-read from a `--stats-file` dump —
+//! as Prometheus exposition text. `ge-spmm stats` and
+//! `ge-spmm serve --stats-every/--stats-file` both go through here, so
+//! a snapshot written to disk re-renders identically to a live one.
+//!
+//! Metric names are prefixed `ge_spmm_`; per-kernel series carry
+//! `op`/`grain`/`kernel` labels (and `quantile` for latency), matching
+//! the op × grain × kernel histogram banks in
+//! [`Metrics::latency_histogram`].
+
+use crate::coordinator::metrics::Metrics;
+use crate::kernels::{KernelKind, SparseOp};
+use crate::obs::Grain;
+use crate::util::json::{num, obj, s, Json};
+
+/// Quantiles every latency series is rendered at.
+pub const QUANTILES: [f64; 3] = [0.5, 0.9, 0.99];
+
+/// Scalar counters: snapshot key, metric name, Prometheus type, help.
+const COUNTERS: [(&str, &str, &str, &str); 11] = [
+    (
+        "requests",
+        "ge_spmm_requests_total",
+        "counter",
+        "Completed SpMM requests.",
+    ),
+    (
+        "errors",
+        "ge_spmm_errors_total",
+        "counter",
+        "Failed requests.",
+    ),
+    (
+        "sddmm_requests",
+        "ge_spmm_sddmm_requests_total",
+        "counter",
+        "Completed SDDMM requests.",
+    ),
+    (
+        "shard_executions",
+        "ge_spmm_shard_executions_total",
+        "counter",
+        "SpMM shard executions inside sharded requests.",
+    ),
+    (
+        "sddmm_shard_executions",
+        "ge_spmm_sddmm_shard_executions_total",
+        "counter",
+        "SDDMM shard executions inside sharded requests.",
+    ),
+    (
+        "cache_hits",
+        "ge_spmm_cache_hits_total",
+        "counter",
+        "Prepared-matrix cache hits.",
+    ),
+    (
+        "cache_misses",
+        "ge_spmm_cache_misses_total",
+        "counter",
+        "Prepared-matrix cache misses.",
+    ),
+    (
+        "cache_evictions",
+        "ge_spmm_cache_evictions_total",
+        "counter",
+        "Prepared-matrix cache evictions.",
+    ),
+    (
+        "rejections",
+        "ge_spmm_rejections_total",
+        "counter",
+        "Requests refused at admission.",
+    ),
+    (
+        "max_queue_depth",
+        "ge_spmm_max_queue_depth",
+        "gauge",
+        "High-water mark of in-flight requests at admission.",
+    ),
+    (
+        "cost_observations",
+        "ge_spmm_cost_observations_total",
+        "counter",
+        "Normalized-cost observations feeding the online selector.",
+    ),
+];
+
+/// Snapshot the full observability state of a [`Metrics`] hub as JSON:
+/// scalar counters, one latency/selection row per op × grain × kernel,
+/// the selector audit log, and flight-recorder totals.
+pub fn snapshot(m: &Metrics) -> Json {
+    let counters = obj(vec![
+        ("requests", num(m.requests() as f64)),
+        ("errors", num(m.errors() as f64)),
+        ("sddmm_requests", num(m.sddmm_requests() as f64)),
+        ("shard_executions", num(m.shard_executions() as f64)),
+        (
+            "sddmm_shard_executions",
+            num(m.sddmm_shard_executions() as f64),
+        ),
+        ("cache_hits", num(m.cache_hits() as f64)),
+        ("cache_misses", num(m.cache_misses() as f64)),
+        ("cache_evictions", num(m.cache_evictions() as f64)),
+        ("rejections", num(m.rejections() as f64)),
+        ("max_queue_depth", num(m.max_queue_depth() as f64)),
+        (
+            "cost_observations",
+            num(m.total_cost_observations() as f64),
+        ),
+    ]);
+
+    let mut kernels = Vec::new();
+    for op in [SparseOp::Spmm, SparseOp::Sddmm] {
+        for grain in Grain::ALL {
+            let selected = match (op, grain) {
+                (SparseOp::Spmm, Grain::Request) => m.kernel_counts(),
+                (SparseOp::Spmm, Grain::Shard) => m.shard_kernel_counts(),
+                (SparseOp::Sddmm, Grain::Request) => m.sddmm_kernel_counts(),
+                (SparseOp::Sddmm, Grain::Shard) => m.sddmm_shard_kernel_counts(),
+            };
+            for (i, kernel) in KernelKind::ALL.iter().enumerate() {
+                let snap = m.latency_histogram(op, grain, *kernel);
+                kernels.push(obj(vec![
+                    ("op", s(op.label())),
+                    ("grain", s(grain.label())),
+                    ("kernel", s(kernel.label())),
+                    ("selected", num(selected[i] as f64)),
+                    ("count", num(snap.count as f64)),
+                    ("sum_ns", num(snap.sum as f64)),
+                    ("max_ns", num(snap.max as f64)),
+                    ("mean_ns", num(snap.mean_ns())),
+                    ("p50_ns", num(snap.quantile(0.5))),
+                    ("p90_ns", num(snap.quantile(0.9))),
+                    ("p99_ns", num(snap.quantile(0.99))),
+                ]));
+            }
+        }
+    }
+
+    let recorder = m.recorder();
+    obj(vec![
+        ("counters", counters),
+        ("kernels", Json::Arr(kernels)),
+        ("audit", m.audit().to_json()),
+        (
+            "traces",
+            obj(vec![
+                ("capacity", num(recorder.capacity() as f64)),
+                ("committed", num(recorder.committed() as f64)),
+                ("retained", num(recorder.len() as f64)),
+            ]),
+        ),
+        ("summary", s(&m.summary())),
+    ])
+}
+
+fn req_num(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("stats snapshot: missing numeric field '{key}'"))
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| format!("stats snapshot: missing string field '{key}'"))
+}
+
+/// Format a metric value the way Prometheus expects: integers without a
+/// fractional part.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn header(out: &mut String, name: &str, ty: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {ty}\n"));
+}
+
+/// Render a stats snapshot (as produced by [`snapshot`], possibly
+/// re-read from a `--stats-file` dump) as Prometheus exposition text.
+/// Fails with a description of the missing field if the document does
+/// not follow the snapshot schema.
+pub fn prometheus_of(snap: &Json) -> Result<String, String> {
+    let counters = snap
+        .get("counters")
+        .ok_or_else(|| "stats snapshot: missing 'counters' object".to_string())?;
+    let mut out = String::new();
+    for (key, name, ty, help) in COUNTERS {
+        let v = req_num(counters, key)?;
+        header(&mut out, name, ty, help);
+        out.push_str(&format!("{name} {}\n", fmt_value(v)));
+    }
+
+    let kernels = snap
+        .get("kernels")
+        .and_then(|j| j.as_arr())
+        .ok_or_else(|| "stats snapshot: missing 'kernels' array".to_string())?;
+    header(
+        &mut out,
+        "ge_spmm_kernel_selected_total",
+        "counter",
+        "Kernel selections by op, grain and kernel.",
+    );
+    for row in kernels {
+        let (op, grain, kernel) = (
+            req_str(row, "op")?,
+            req_str(row, "grain")?,
+            req_str(row, "kernel")?,
+        );
+        let v = req_num(row, "selected")?;
+        out.push_str(&format!(
+            "ge_spmm_kernel_selected_total{{op=\"{op}\",grain=\"{grain}\",kernel=\"{kernel}\"}} {}\n",
+            fmt_value(v)
+        ));
+    }
+    header(
+        &mut out,
+        "ge_spmm_latency_ns",
+        "summary",
+        "Execution latency quantiles (ns) by op, grain and kernel.",
+    );
+    for row in kernels {
+        if req_num(row, "count")? == 0.0 {
+            continue;
+        }
+        let (op, grain, kernel) = (
+            req_str(row, "op")?,
+            req_str(row, "grain")?,
+            req_str(row, "kernel")?,
+        );
+        let labels = format!("op=\"{op}\",grain=\"{grain}\",kernel=\"{kernel}\"");
+        for q in QUANTILES {
+            let key = format!("p{:.0}_ns", q * 100.0);
+            let v = req_num(row, &key)?;
+            out.push_str(&format!(
+                "ge_spmm_latency_ns{{{labels},quantile=\"{q}\"}} {}\n",
+                fmt_value(v)
+            ));
+        }
+        out.push_str(&format!(
+            "ge_spmm_latency_ns_sum{{{labels}}} {}\n",
+            fmt_value(req_num(row, "sum_ns")?)
+        ));
+        out.push_str(&format!(
+            "ge_spmm_latency_ns_count{{{labels}}} {}\n",
+            fmt_value(req_num(row, "count")?)
+        ));
+        out.push_str(&format!(
+            "ge_spmm_latency_ns_max{{{labels}}} {}\n",
+            fmt_value(req_num(row, "max_ns")?)
+        ));
+    }
+
+    let audit = snap
+        .get("audit")
+        .ok_or_else(|| "stats snapshot: missing 'audit' object".to_string())?;
+    for (key, name, help) in [
+        (
+            "recorded",
+            "ge_spmm_audit_decisions_total",
+            "Selector decisions recorded in the audit log.",
+        ),
+        (
+            "explored",
+            "ge_spmm_audit_explored_total",
+            "Decisions where the online selector explored.",
+        ),
+        (
+            "realized",
+            "ge_spmm_audit_realized_total",
+            "Decisions with a backfilled realized cost.",
+        ),
+    ] {
+        let v = req_num(audit, key)?;
+        header(&mut out, name, "counter", help);
+        out.push_str(&format!("{name} {}\n", fmt_value(v)));
+    }
+
+    let traces = snap
+        .get("traces")
+        .ok_or_else(|| "stats snapshot: missing 'traces' object".to_string())?;
+    header(
+        &mut out,
+        "ge_spmm_traces_committed_total",
+        "counter",
+        "Request traces committed to the flight recorder.",
+    );
+    out.push_str(&format!(
+        "ge_spmm_traces_committed_total {}\n",
+        fmt_value(req_num(traces, "committed")?)
+    ));
+    header(
+        &mut out,
+        "ge_spmm_traces_retained",
+        "gauge",
+        "Request traces currently retained in the ring.",
+    );
+    out.push_str(&format!(
+        "ge_spmm_traces_retained {}\n",
+        fmt_value(req_num(traces, "retained")?)
+    ));
+    Ok(out)
+}
+
+/// Render a live [`Metrics`] hub directly as Prometheus text.
+pub fn prometheus_text(m: &Metrics) -> String {
+    prometheus_of(&snapshot(m)).expect("snapshot always matches its own schema")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn snapshot_reflects_counters_and_histograms() {
+        let m = Metrics::default();
+        m.record(KernelKind::SrRs, Duration::from_micros(100));
+        m.record(KernelKind::SrRs, Duration::from_micros(200));
+        m.record_sddmm_shard(KernelKind::PrWb, Duration::from_micros(50));
+        m.record_cache_miss();
+        let snap = snapshot(&m);
+        let counters = snap.get("counters").unwrap();
+        assert_eq!(counters.get("requests").unwrap().as_usize(), Some(2));
+        assert_eq!(counters.get("cache_misses").unwrap().as_usize(), Some(1));
+        let kernels = snap.get("kernels").unwrap().as_arr().unwrap();
+        assert_eq!(kernels.len(), 16, "2 ops x 2 grains x 4 kernels");
+        let sr_rs = kernels
+            .iter()
+            .find(|row| {
+                row.get("op").unwrap().as_str() == Some("spmm")
+                    && row.get("grain").unwrap().as_str() == Some("request")
+                    && row.get("kernel").unwrap().as_str() == Some("sr_rs")
+            })
+            .unwrap();
+        assert_eq!(sr_rs.get("count").unwrap().as_usize(), Some(2));
+        assert_eq!(sr_rs.get("selected").unwrap().as_usize(), Some(2));
+        assert!(sr_rs.get("p50_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(snap.get("traces").is_some() && snap.get("audit").is_some());
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_the_parser() {
+        let m = Metrics::default();
+        m.record(KernelKind::PrWb, Duration::from_micros(300));
+        let snap = snapshot(&m);
+        let reparsed = Json::parse(&snap.to_string_pretty()).unwrap();
+        assert_eq!(reparsed, snap);
+        // and the re-parsed document renders to the same Prometheus text
+        assert_eq!(
+            prometheus_of(&reparsed).unwrap(),
+            prometheus_text(&m)
+        );
+    }
+
+    #[test]
+    fn prometheus_text_has_expected_series() {
+        let m = Metrics::default();
+        m.record(KernelKind::SrWb, Duration::from_micros(150));
+        m.record_shard(KernelKind::PrRs, Duration::from_micros(40));
+        let text = prometheus_text(&m);
+        assert!(text.contains("# TYPE ge_spmm_requests_total counter"));
+        assert!(text.contains("ge_spmm_requests_total 1"), "{text}");
+        assert!(text.contains(
+            "ge_spmm_kernel_selected_total{op=\"spmm\",grain=\"request\",kernel=\"sr_wb\"} 1"
+        ));
+        assert!(text.contains(
+            "ge_spmm_kernel_selected_total{op=\"spmm\",grain=\"shard\",kernel=\"pr_rs\"} 1"
+        ));
+        assert!(
+            text.contains("op=\"spmm\",grain=\"shard\",kernel=\"pr_rs\",quantile=\"0.99\""),
+            "{text}"
+        );
+        // empty series emit no quantiles
+        assert!(!text.contains("op=\"sddmm\",grain=\"request\",kernel=\"sr_rs\",quantile"));
+        assert!(text.contains("ge_spmm_traces_committed_total 0"));
+    }
+
+    #[test]
+    fn prometheus_of_rejects_malformed_documents() {
+        assert!(prometheus_of(&Json::Null).is_err());
+        let partial = obj(vec![("counters", obj(vec![("requests", num(1.0))]))]);
+        let err = prometheus_of(&partial).unwrap_err();
+        assert!(err.contains("missing"), "{err}");
+    }
+}

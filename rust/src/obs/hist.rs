@@ -1,0 +1,278 @@
+//! Log-bucketed lock-free latency histograms.
+//!
+//! [`AtomicHistogram`] replaces the old mutex-guarded latency reservoir in
+//! `coordinator::Metrics`: recording a sample is three relaxed atomic
+//! RMWs (bucket count, total sum, running max) with **no lock on the hot
+//! path**, so request workers and shard threads never contend on a
+//! mutex just to be observable, and a panicking worker can never poison
+//! the stats.
+//!
+//! The bucket scheme is 64 power-of-√2 buckets over nanoseconds: bucket
+//! `i` covers `[√2^i, √2^(i+1))` ns, so the full range spans 1 ns to
+//! `√2^64 = 2^32` ns ≈ 4.3 s — more than any sane kernel latency — with
+//! a worst-case quantile error bounded by the bucket width, a factor of
+//! √2 (the estimator answers the bucket's geometric midpoint, so the
+//! bound is actually `2^(1/4)` each way). Values at or below 1 ns land
+//! in bucket 0; values past the top land in bucket 63.
+//!
+//! Quantiles are computed from a [`HistogramSnapshot`] — a plain copy of
+//! the counters taken with relaxed loads — via nearest-rank selection
+//! over the cumulative bucket counts and geometric interpolation within
+//! the selected bucket. See `DESIGN.md` §Observability.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of power-of-√2 buckets (covers 1 ns .. 2^32 ns ≈ 4.3 s).
+pub const BUCKETS: usize = 64;
+
+/// Bucket index for a nanosecond value: `floor(2·log2(v))`, clamped to
+/// the bucket range. Integer-only — the √2 boundary test `v < 2^(k+0.5)`
+/// is evaluated exactly as `v² < 2^(2k+1)` in 128-bit arithmetic.
+pub fn bucket_index(ns: u64) -> usize {
+    if ns <= 1 {
+        return 0;
+    }
+    let k = ns.ilog2() as u64;
+    let upper_half = (ns as u128) * (ns as u128) >= (1u128 << (2 * k + 1));
+    ((2 * k + u64::from(upper_half)) as usize).min(BUCKETS - 1)
+}
+
+/// Inclusive lower bound of bucket `i`, in ns.
+pub fn bucket_lower(i: usize) -> f64 {
+    2f64.powf(i as f64 / 2.0)
+}
+
+/// Geometric midpoint of bucket `i`, in ns — the quantile estimator's
+/// answer for ranks that land in the bucket.
+pub fn bucket_mid(i: usize) -> f64 {
+    2f64.powf((i as f64 + 0.5) / 2.0)
+}
+
+/// Lock-free log-bucketed histogram of nanosecond samples.
+///
+/// All updates are relaxed atomics; readers take a [`HistogramSnapshot`]
+/// and compute quantiles from the copy. A snapshot taken concurrently
+/// with writers may be mid-update (count and buckets read at slightly
+/// different instants) but is always a valid histogram; once writers
+/// quiesce the totals are exact.
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl AtomicHistogram {
+    /// An empty histogram. `const` so banks of histograms can be
+    /// initialized in statics and struct literals without iteration.
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Self {
+            counts: [ZERO; BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample, in nanoseconds. Lock-free: three relaxed RMWs.
+    pub fn record(&self, ns: u64) {
+        self.counts[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(ns, Ordering::Relaxed);
+        self.max.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Record one sample as a [`Duration`] (saturating past ~584 years).
+    pub fn record_duration(&self, d: Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Copy the counters out for quantile computation.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        for (dst, src) in counts.iter_mut().zip(self.counts.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot {
+            counts,
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A point-in-time copy of an [`AtomicHistogram`]'s counters.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    /// Per-bucket sample counts (see [`bucket_index`]).
+    pub counts: [u64; BUCKETS],
+    /// Total samples.
+    pub count: u64,
+    /// Sum of all recorded nanoseconds.
+    pub sum: u64,
+    /// Largest recorded sample, in ns.
+    pub max: u64,
+}
+
+impl HistogramSnapshot {
+    /// An empty snapshot.
+    pub fn empty() -> Self {
+        Self {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum: 0,
+            max: 0,
+        }
+    }
+
+    /// Merge several snapshots (e.g. the per-kernel histograms of one
+    /// op × grain) into one combined distribution.
+    pub fn merged(snaps: impl IntoIterator<Item = HistogramSnapshot>) -> Self {
+        let mut out = Self::empty();
+        for s in snaps {
+            for (dst, src) in out.counts.iter_mut().zip(s.counts.iter()) {
+                *dst += src;
+            }
+            out.count += s.count;
+            out.sum += s.sum;
+            out.max = out.max.max(s.max);
+        }
+        out
+    }
+
+    /// Whether no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean of the recorded samples, in ns (0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Estimated `q`-quantile in ns: nearest-rank selection over the
+    /// cumulative bucket counts, answering the selected bucket's
+    /// geometric midpoint (clamped by the exact running max). Relative
+    /// error vs. an exact sort is bounded by the √2 bucket width.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = (q * (self.count - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return bucket_mid(i).min(self.max as f64);
+            }
+        }
+        self.max as f64
+    }
+
+    /// Median estimate, ns.
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// 90th percentile estimate, ns.
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+
+    /// 99th percentile estimate, ns.
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_bounded() {
+        let mut prev = 0usize;
+        for exp in 0..64u32 {
+            let v = 1u64 << exp;
+            let i = bucket_index(v);
+            assert!(i >= prev, "bucket index must be monotone at {v}");
+            assert!(i < BUCKETS);
+            prev = i;
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 2); // log2 = 1 → floor(2·1) = 2
+        assert_eq!(bucket_index(3), 3); // 2·log2(3) ≈ 3.17
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_bounds_contain_their_values() {
+        for v in [1u64, 2, 3, 7, 100, 1_000, 123_456, 10_000_000_000] {
+            let i = bucket_index(v);
+            assert!(
+                (v as f64) >= bucket_lower(i) - 1e-9,
+                "{v} below lower bound of bucket {i}"
+            );
+            if i + 1 < BUCKETS {
+                assert!(
+                    (v as f64) < bucket_lower(i + 1) + 1e-9,
+                    "{v} past upper bound of bucket {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn records_and_summarizes() {
+        let h = AtomicHistogram::new();
+        for v in [100u64, 200, 300, 400, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 2000);
+        assert_eq!(s.max, 1000);
+        assert_eq!(s.counts.iter().sum::<u64>(), 5);
+        assert!((s.mean_ns() - 400.0).abs() < 1e-9);
+        // Quantiles are bucket-accurate: within a √2 factor of truth.
+        let p50 = s.p50();
+        assert!(p50 >= 300.0 / std::f64::consts::SQRT_2 && p50 <= 300.0 * std::f64::consts::SQRT_2);
+        assert!(s.p99() <= s.max as f64 + 1e-9);
+        assert_eq!(HistogramSnapshot::empty().quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn merged_combines_distributions() {
+        let a = AtomicHistogram::new();
+        let b = AtomicHistogram::new();
+        a.record(100);
+        b.record(10_000);
+        let m = HistogramSnapshot::merged([a.snapshot(), b.snapshot()]);
+        assert_eq!(m.count, 2);
+        assert_eq!(m.sum, 10_100);
+        assert_eq!(m.max, 10_000);
+        assert!(m.quantile(1.0) > m.quantile(0.0));
+    }
+}

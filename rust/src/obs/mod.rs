@@ -1,0 +1,58 @@
+//! Observability: request-lifecycle tracing, lock-free latency
+//! histograms, selector decision audit, and the exposition surface.
+//!
+//! The adaptive layers in this stack (per-shard kernel selection,
+//! measured calibration, online threshold refinement, adaptive SR
+//! traversal) all make runtime decisions; this subsystem makes them
+//! visible from outside the process:
+//!
+//! - [`trace`] — zero-dependency structured spans with parent links and
+//!   attributes, emitted at admission → batch flush → engine dispatch →
+//!   shard fan-out → kernel inner call, captured per request into a
+//!   [`trace::FlightRecorder`] ring of the last N traces.
+//! - [`hist`] — log-bucketed lock-free [`hist::AtomicHistogram`]s (64
+//!   power-of-√2 buckets over ns) behind every latency quantile in
+//!   `coordinator::Metrics`; no lock on the record path.
+//! - [`audit`] — the selector decision [`audit::AuditLog`]: features,
+//!   thresholds, chosen kernel, exploration flag, realized cost.
+//! - [`expo`] — Prometheus-text and JSON snapshot renderers over
+//!   `Metrics` + histograms + audit, behind `ge-spmm stats` and
+//!   `ge-spmm serve --stats-every/--stats-file`.
+//!
+//! Everything here is part of the serving hot path's contract: the
+//! uninstrumented cost is one thread-local read per span site and a few
+//! relaxed atomics per metric (`benches/metrics_overhead.rs` measures
+//! it). See `DESIGN.md` §Observability for the span taxonomy, the
+//! bucket scheme, the audit fields and the exposition formats.
+
+pub mod audit;
+pub mod expo;
+pub mod hist;
+pub mod trace;
+
+pub use audit::{AuditEntry, AuditLog};
+pub use hist::{AtomicHistogram, HistogramSnapshot};
+pub use trace::{FlightRecorder, SpanRecord, TraceHandle};
+
+/// Aggregation grain of a latency histogram: whole requests at the
+/// engine, or individual shard executions inside the sharded backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Grain {
+    /// Engine-level request latency.
+    Request,
+    /// Per-shard execution latency inside the fan-out.
+    Shard,
+}
+
+impl Grain {
+    /// Both grains, in exposition order.
+    pub const ALL: [Grain; 2] = [Grain::Request, Grain::Shard];
+
+    /// Label used in exposition output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Grain::Request => "request",
+            Grain::Shard => "shard",
+        }
+    }
+}

@@ -1,0 +1,589 @@
+//! Request-lifecycle tracing: structured spans and the flight recorder.
+//!
+//! A [`Trace`] is one request's span tree: cheap records with parent
+//! links, start/stop nanoseconds relative to the trace epoch, and
+//! key/value attributes. Spans are opened through an **implicit
+//! thread-local context** — [`span`] is a no-op returning an inert guard
+//! when no trace is installed, so instrumented code (engine dispatch,
+//! shard fan-out, kernel calls) pays almost nothing when nobody is
+//! looking. The context propagates across the sharded backend's scoped
+//! threads explicitly: capture a [`TraceHandle`] before the fan-out and
+//! [`attach`] it inside each worker closure.
+//!
+//! Finished traces are committed into a [`FlightRecorder`] — a ring
+//! buffer of the last N request traces, dumpable as JSON. The recorder
+//! is lock-light: the only mutex acquisitions are one per span *end*
+//! (on the trace's own span list) and one per request commit (on the
+//! ring); the request hot path between spans takes no locks, and every
+//! lock is poison-tolerant so a panicking worker cannot wedge tracing
+//! for the whole server. Span taxonomy and attribute conventions are
+//! documented in `DESIGN.md` §Observability.
+
+use crate::util::json::{num, obj, s, Json};
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One closed span: a named interval within a trace.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Span id, unique within the trace (ids start at 1).
+    pub id: u64,
+    /// Parent span id; 0 means a root span.
+    pub parent: u64,
+    /// Span name (static taxonomy: `admission`, `batch`, `dispatch`, ...).
+    pub name: &'static str,
+    /// Start offset from the trace epoch, ns.
+    pub start_ns: u64,
+    /// End offset from the trace epoch, ns.
+    pub end_ns: u64,
+    /// Key/value attributes set while the span was open.
+    pub attrs: Vec<(&'static str, String)>,
+}
+
+impl SpanRecord {
+    /// Span duration in ns.
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+
+    /// Look up an attribute by key.
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("id", num(self.id as f64)),
+            ("parent", num(self.parent as f64)),
+            ("name", s(self.name)),
+            ("start_ns", num(self.start_ns as f64)),
+            ("end_ns", num(self.end_ns as f64)),
+            (
+                "attrs",
+                Json::Obj(
+                    self.attrs
+                        .iter()
+                        .map(|(k, v)| (k.to_string(), s(v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// One in-flight request's span collection.
+///
+/// Created at admission (or lazily by the engine for direct calls),
+/// carried by [`TraceHandle`]s, finished by [`FlightRecorder::commit`].
+#[derive(Debug)]
+pub struct Trace {
+    label: String,
+    epoch: Instant,
+    next_id: AtomicU64,
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+impl Trace {
+    /// Start a new trace; the epoch (t=0 for all span offsets) is now.
+    pub fn begin(label: impl Into<String>) -> Arc<Trace> {
+        Arc::new(Trace {
+            label: label.into(),
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            spans: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The trace's request label (e.g. `spmm#42`).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Nanoseconds since the trace epoch.
+    pub fn elapsed_ns(&self) -> u64 {
+        u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+
+    fn alloc_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn push(&self, record: SpanRecord) {
+        self.spans
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(record);
+    }
+
+    /// Record an already-measured root-level interval (used for spans
+    /// whose start and end are observed on different threads, like the
+    /// admission queue wait).
+    pub fn record_raw(
+        &self,
+        name: &'static str,
+        start_ns: u64,
+        end_ns: u64,
+        attrs: Vec<(&'static str, String)>,
+    ) {
+        let id = self.alloc_id();
+        self.push(SpanRecord {
+            id,
+            parent: 0,
+            name,
+            start_ns,
+            end_ns,
+            attrs,
+        });
+    }
+
+    /// Spans recorded so far (closed spans only).
+    pub fn span_count(&self) -> usize {
+        self.spans.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+}
+
+struct Ctx {
+    trace: Arc<Trace>,
+    parent: u64,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+/// Whether a trace is installed on this thread.
+pub fn active() -> bool {
+    CURRENT.with(|c| c.borrow().is_some())
+}
+
+/// A portable reference to the current trace position: the trace plus
+/// the span that new child spans should parent to. Capture with
+/// [`handle`] before crossing a thread boundary, re-install on the other
+/// side with [`attach`].
+#[derive(Clone)]
+pub struct TraceHandle {
+    trace: Arc<Trace>,
+    parent: u64,
+}
+
+impl TraceHandle {
+    /// A handle at the root of `trace` (children become root-parented).
+    pub fn of(trace: &Arc<Trace>) -> Self {
+        Self {
+            trace: trace.clone(),
+            parent: 0,
+        }
+    }
+
+    /// The underlying trace.
+    pub fn trace(&self) -> &Arc<Trace> {
+        &self.trace
+    }
+}
+
+impl std::fmt::Debug for TraceHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TraceHandle({}@{})", self.trace.label(), self.parent)
+    }
+}
+
+/// Snapshot the current thread's trace position, if any.
+pub fn handle() -> Option<TraceHandle> {
+    CURRENT.with(|c| {
+        c.borrow().as_ref().map(|ctx| TraceHandle {
+            trace: ctx.trace.clone(),
+            parent: ctx.parent,
+        })
+    })
+}
+
+/// Install a trace position on this thread until the returned scope
+/// drops (the previous position, if any, is restored).
+pub fn attach(h: &TraceHandle) -> TraceScope {
+    let prev = CURRENT.with(|c| {
+        c.borrow_mut().replace(Ctx {
+            trace: h.trace.clone(),
+            parent: h.parent,
+        })
+    });
+    TraceScope { prev }
+}
+
+/// Guard restoring the previously-installed trace context on drop.
+pub struct TraceScope {
+    prev: Option<Ctx>,
+}
+
+impl Drop for TraceScope {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+struct ActiveSpan {
+    trace: Arc<Trace>,
+    id: u64,
+    parent: u64,
+    name: &'static str,
+    start_ns: u64,
+    attrs: Vec<(&'static str, String)>,
+}
+
+/// An open span; records itself into the trace when dropped (or ended).
+/// Inert — every method a no-op — when no trace was installed at
+/// creation, so instrumentation points cost one TLS read off-trace.
+pub struct SpanGuard {
+    active: Option<ActiveSpan>,
+}
+
+impl SpanGuard {
+    /// Whether this guard is actually recording into a trace.
+    pub fn is_recording(&self) -> bool {
+        self.active.is_some()
+    }
+
+    /// Attach a key/value attribute (no-op when not recording).
+    pub fn set_attr(&mut self, key: &'static str, value: impl std::fmt::Display) {
+        if let Some(a) = self.active.as_mut() {
+            a.attrs.push((key, value.to_string()));
+        }
+    }
+
+    /// Close the span now (idempotent; `Drop` calls this).
+    pub fn end(&mut self) {
+        if let Some(a) = self.active.take() {
+            let end_ns = a.trace.elapsed_ns();
+            // Restore the parent pointer if this span is still the
+            // innermost on this thread's context.
+            CURRENT.with(|c| {
+                if let Some(ctx) = c.borrow_mut().as_mut() {
+                    if Arc::ptr_eq(&ctx.trace, &a.trace) && ctx.parent == a.id {
+                        ctx.parent = a.parent;
+                    }
+                }
+            });
+            a.trace.push(SpanRecord {
+                id: a.id,
+                parent: a.parent,
+                name: a.name,
+                start_ns: a.start_ns,
+                end_ns,
+                attrs: a.attrs,
+            });
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        self.end();
+    }
+}
+
+/// Open a span under the current thread's trace context. Returns an
+/// inert guard when no trace is installed.
+pub fn span(name: &'static str) -> SpanGuard {
+    CURRENT.with(|c| {
+        let mut cur = c.borrow_mut();
+        match cur.as_mut() {
+            None => SpanGuard { active: None },
+            Some(ctx) => {
+                let trace = ctx.trace.clone();
+                let id = trace.alloc_id();
+                let parent = ctx.parent;
+                ctx.parent = id;
+                let start_ns = trace.elapsed_ns();
+                SpanGuard {
+                    active: Some(ActiveSpan {
+                        trace,
+                        id,
+                        parent,
+                        name,
+                        start_ns,
+                        attrs: Vec::new(),
+                    }),
+                }
+            }
+        }
+    })
+}
+
+/// Request-scope guard: if a trace is already installed (the serving
+/// path created one at admission), this just opens a child span named
+/// `name`; otherwise (direct engine calls) it begins an owned trace,
+/// installs it, opens the span, and commits the trace to `recorder`
+/// when dropped. Either way the instrumented region gets exactly one
+/// span and direct callers get full traces for free.
+pub struct RequestGuard {
+    span: SpanGuard,
+    owned: Option<(Arc<Trace>, Arc<FlightRecorder>, TraceScope)>,
+}
+
+impl RequestGuard {
+    /// Attach a key/value attribute to the request span.
+    pub fn set_attr(&mut self, key: &'static str, value: impl std::fmt::Display) {
+        self.span.set_attr(key, value);
+    }
+}
+
+impl Drop for RequestGuard {
+    fn drop(&mut self) {
+        self.span.end();
+        if let Some((trace, recorder, scope)) = self.owned.take() {
+            drop(scope); // uninstall before committing
+            recorder.commit(&trace);
+        }
+    }
+}
+
+/// Enter a request scope (see [`RequestGuard`]).
+pub fn request(name: &'static str, label: &str, recorder: &Arc<FlightRecorder>) -> RequestGuard {
+    let owned = if active() {
+        None
+    } else {
+        let trace = Trace::begin(label);
+        let scope = attach(&TraceHandle::of(&trace));
+        Some((trace, recorder.clone(), scope))
+    };
+    RequestGuard {
+        span: span(name),
+        owned,
+    }
+}
+
+/// A committed trace, as stored in the flight recorder.
+#[derive(Clone, Debug)]
+pub struct FinishedTrace {
+    /// The trace's request label.
+    pub label: String,
+    /// Nanoseconds from trace epoch to commit.
+    pub duration_ns: u64,
+    /// All closed spans, in completion order.
+    pub spans: Vec<SpanRecord>,
+}
+
+impl FinishedTrace {
+    /// First span with the given name, if any.
+    pub fn span(&self, name: &str) -> Option<&SpanRecord> {
+        self.spans.iter().find(|s| s.name == name)
+    }
+
+    /// All spans with the given name.
+    pub fn spans_named(&self, name: &str) -> Vec<&SpanRecord> {
+        self.spans.iter().filter(|s| s.name == name).collect()
+    }
+
+    /// JSON form (used by the recorder dump and `ge-spmm stats`).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("label", s(&self.label)),
+            ("duration_ns", num(self.duration_ns as f64)),
+            (
+                "spans",
+                Json::Arr(self.spans.iter().map(|sp| sp.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Ring buffer of the last N committed request traces.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    capacity: usize,
+    committed: AtomicU64,
+    ring: Mutex<VecDeque<FinishedTrace>>,
+}
+
+impl FlightRecorder {
+    /// Recorder keeping the last `capacity` traces (min 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            committed: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total traces ever committed (monotone; the ring keeps the tail).
+    pub fn committed(&self) -> u64 {
+        self.committed.load(Ordering::Relaxed)
+    }
+
+    /// Move a trace's spans into the ring, evicting the oldest entry
+    /// when full. One short lock per request.
+    pub fn commit(&self, trace: &Arc<Trace>) {
+        let duration_ns = trace.elapsed_ns();
+        let spans = std::mem::take(&mut *trace.spans.lock().unwrap_or_else(|e| e.into_inner()));
+        let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.len() >= self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(FinishedTrace {
+            label: trace.label().to_string(),
+            duration_ns,
+            spans,
+        });
+        drop(ring);
+        self.committed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Copy the recorded traces out, oldest first.
+    pub fn traces(&self) -> Vec<FinishedTrace> {
+        self.ring
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .cloned()
+            .collect()
+    }
+
+    /// Traces currently held.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Whether no trace has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Full JSON dump: capacity, total committed, and the retained
+    /// traces with their span trees.
+    pub fn dump_json(&self) -> Json {
+        obj(vec![
+            ("capacity", num(self.capacity as f64)),
+            ("committed", num(self.committed() as f64)),
+            (
+                "traces",
+                Json::Arr(self.traces().iter().map(|t| t.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+impl Default for FlightRecorder {
+    /// Recorder for the last 64 requests.
+    fn default() -> Self {
+        Self::new(64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_are_inert_without_a_trace() {
+        let mut sp = span("orphan");
+        assert!(!sp.is_recording());
+        sp.set_attr("k", "v");
+        sp.end(); // no panic, nothing recorded anywhere
+    }
+
+    #[test]
+    fn nesting_links_parents_and_restores_context() {
+        let recorder = Arc::new(FlightRecorder::new(4));
+        let trace = Trace::begin("t");
+        {
+            let _scope = attach(&TraceHandle::of(&trace));
+            let outer = span("outer");
+            {
+                let mut inner = span("inner");
+                inner.set_attr("k", 7);
+            }
+            drop(outer);
+            let sibling = span("sibling");
+            drop(sibling);
+        }
+        assert!(!active());
+        recorder.commit(&trace);
+        let traces = recorder.traces();
+        assert_eq!(traces.len(), 1);
+        let t = &traces[0];
+        let outer = t.span("outer").unwrap();
+        let inner = t.span("inner").unwrap();
+        let sibling = t.span("sibling").unwrap();
+        assert_eq!(outer.parent, 0);
+        assert_eq!(inner.parent, outer.id);
+        assert_eq!(sibling.parent, 0, "context restored after outer closed");
+        assert_eq!(inner.attr("k"), Some("7"));
+        assert!(inner.end_ns >= inner.start_ns);
+    }
+
+    #[test]
+    fn handle_attach_carries_context_across_threads() {
+        let recorder = Arc::new(FlightRecorder::new(4));
+        let trace = Trace::begin("xthread");
+        {
+            let _scope = attach(&TraceHandle::of(&trace));
+            let fan = span("fan");
+            let h = handle().unwrap();
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    let _scope = attach(&h);
+                    let _sp = span("worker");
+                });
+            });
+            drop(fan);
+        }
+        recorder.commit(&trace);
+        let t = &recorder.traces()[0];
+        let fan = t.span("fan").unwrap();
+        let worker = t.span("worker").unwrap();
+        assert_eq!(worker.parent, fan.id, "cross-thread span parents to fan");
+    }
+
+    #[test]
+    fn request_guard_owns_and_commits_when_no_trace_is_installed() {
+        let recorder = Arc::new(FlightRecorder::new(4));
+        {
+            let mut req = request("dispatch", "direct#1", &recorder);
+            req.set_attr("op", "spmm");
+            let _child = span("kernel");
+        }
+        assert_eq!(recorder.len(), 1);
+        let t = &recorder.traces()[0];
+        assert_eq!(t.label, "direct#1");
+        let dispatch = t.span("dispatch").unwrap();
+        assert_eq!(dispatch.attr("op"), Some("spmm"));
+        assert_eq!(t.span("kernel").unwrap().parent, dispatch.id);
+
+        // With a trace already installed, request() only adds a span.
+        let outer = Trace::begin("outer");
+        {
+            let _scope = attach(&TraceHandle::of(&outer));
+            let _req = request("dispatch", "ignored", &recorder);
+        }
+        assert_eq!(recorder.len(), 1, "no second commit for nested request");
+        assert_eq!(outer.span_count(), 1);
+    }
+
+    #[test]
+    fn ring_wraps_keeping_the_newest() {
+        let recorder = Arc::new(FlightRecorder::new(3));
+        for i in 0..7 {
+            let trace = Trace::begin(format!("t{i}"));
+            trace.record_raw("noop", 0, 1, vec![]);
+            recorder.commit(&trace);
+        }
+        assert_eq!(recorder.len(), 3);
+        assert_eq!(recorder.committed(), 7);
+        let labels: Vec<_> = recorder.traces().iter().map(|t| t.label.clone()).collect();
+        assert_eq!(labels, ["t4", "t5", "t6"]);
+        let dump = recorder.dump_json();
+        assert_eq!(dump.get("committed").and_then(|j| j.as_usize()), Some(7));
+        assert_eq!(dump.get("traces").and_then(|j| j.as_arr()).unwrap().len(), 3);
+    }
+}

@@ -33,5 +33,5 @@ pub mod sddmm;
 pub use crate::kernels::KernelKind;
 pub use online::{OnlineConfig, OnlineSelector};
 pub use profile::HardwareProfile;
-pub use rules::AdaptiveSelector;
+pub use rules::{AdaptiveSelector, Decision};
 pub use sddmm::SddmmSelector;

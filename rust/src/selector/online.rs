@@ -27,11 +27,11 @@
 //! `SpmmEngine::serving_online`. See `DESIGN.md` §Measured calibration.
 
 use super::calibrate::{T_AVG_GRID, T_CV_GRID};
-use super::rules::AdaptiveSelector;
+use super::rules::{AdaptiveSelector, Decision};
 use super::sddmm::{SddmmSelector, SDDMM_T_CV_GRID};
 use crate::coordinator::metrics::{Metrics, COST_BUCKETS, COST_EWMA_ALPHA};
 use crate::features::MatrixFeatures;
-use crate::kernels::KernelKind;
+use crate::kernels::{KernelKind, SparseOp};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -217,15 +217,32 @@ impl OnlineSelector {
     /// Pick a kernel: the current rule choice, except that every
     /// `explore_every`-th decision runs the sibling design instead.
     pub fn select(&self, f: &MatrixFeatures, n: usize) -> KernelKind {
-        let rule = self.current().select(f, n);
+        self.decide(f, n).0.kernel
+    }
+
+    /// [`OnlineSelector::select`] with the audit trail: the rule
+    /// decision under the *current* (refined) thresholds, the sibling
+    /// override noted in the rule text when this decision explores, and
+    /// the exploration flag. Carries the same side effects as `select`
+    /// (decision counter, exploration cadence) — call one or the other,
+    /// not both.
+    pub fn decide(&self, f: &MatrixFeatures, n: usize) -> (Decision, bool) {
+        let mut dec = self.current().decide(f, n);
         let every = self.config.explore_every;
         let d = self.decisions.fetch_add(1, Ordering::Relaxed);
-        if every > 0 && (d + 1) % every == 0 {
+        let explored = every > 0 && (d + 1) % every == 0;
+        if explored {
             self.explorations.fetch_add(1, Ordering::Relaxed);
-            sibling_kernel(rule)
-        } else {
-            rule
+            let sib = sibling_kernel(dec.kernel);
+            dec.rule = format!(
+                "{}; exploration overrides {} -> {}",
+                dec.rule,
+                dec.kernel.label(),
+                sib.label()
+            );
+            dec.kernel = sib;
         }
+        (dec, explored)
     }
 
     /// Report one finished execution. Normalizes the latency by the
@@ -236,6 +253,9 @@ impl OnlineSelector {
         let cost = latency.as_secs_f64().max(1e-9) / flops;
         let bucket = feature_bucket(f, n);
         self.metrics.observe_cost(bucket, kernel, cost);
+        // backfill the realized cost onto the matching audit entry (a
+        // miss just means the decision ring already wrapped past it)
+        self.metrics.audit().note_cost(SparseOp::Spmm, kernel, f.nnz, cost);
         {
             let mut cents = self.centroids.lock().unwrap();
             let c = &mut cents[bucket];
@@ -256,15 +276,29 @@ impl OnlineSelector {
     /// decision counter is shared across ops, so a mixed traffic stream
     /// spends one exploration budget, not two).
     pub fn select_sddmm(&self, f: &MatrixFeatures, d: usize) -> KernelKind {
-        let rule = self.current_sddmm().select(f, d);
+        self.decide_sddmm(f, d).0.kernel
+    }
+
+    /// [`OnlineSelector::select_sddmm`] with the audit trail — the SDDMM
+    /// analogue of [`OnlineSelector::decide`], sharing its decision
+    /// counter and exploration budget.
+    pub fn decide_sddmm(&self, f: &MatrixFeatures, d: usize) -> (Decision, bool) {
+        let mut dec = self.current_sddmm().decide(f, d);
         let every = self.config.explore_every;
-        let dec = self.decisions.fetch_add(1, Ordering::Relaxed);
-        if every > 0 && (dec + 1) % every == 0 {
+        let c = self.decisions.fetch_add(1, Ordering::Relaxed);
+        let explored = every > 0 && (c + 1) % every == 0;
+        if explored {
             self.explorations.fetch_add(1, Ordering::Relaxed);
-            sibling_kernel(rule)
-        } else {
-            rule
+            let sib = sibling_kernel(dec.kernel);
+            dec.rule = format!(
+                "{}; exploration overrides {} -> {}",
+                dec.rule,
+                dec.kernel.label(),
+                sib.label()
+            );
+            dec.kernel = sib;
         }
+        (dec, explored)
     }
 
     /// Report one finished SDDMM execution: normalized cost
@@ -282,6 +316,7 @@ impl OnlineSelector {
         if !cost.is_finite() || cost <= 0.0 {
             return;
         }
+        self.metrics.audit().note_cost(SparseOp::Sddmm, kernel, f.nnz, cost);
         let bucket = sddmm_bucket(f);
         let idx = KernelKind::ALL.iter().position(|k| *k == kernel).unwrap();
         {
@@ -761,6 +796,48 @@ mod tests {
         }
         assert!(sel.sddmm_refits() >= 1, "cadence fired");
         assert_eq!(sel.current_sddmm().select(&f, 8), KernelKind::SrWb);
+    }
+
+    #[test]
+    fn decide_flags_exploration_and_observe_backfills_the_audit() {
+        let sel = selector(OnlineConfig {
+            explore_every: 2,
+            refit_every: 0,
+            min_observations: 1,
+        });
+        let f = features(16.0, 0.3, 16000);
+        let rule = AdaptiveSelector::default().select(&f, 32);
+        let (first, explored1) = sel.decide(&f, 32);
+        assert!(!explored1);
+        assert_eq!(first.kernel, rule);
+        let (second, explored2) = sel.decide(&f, 32);
+        assert!(explored2, "second decision explores at cadence 2");
+        assert_eq!(second.kernel, sibling_kernel(rule));
+        assert!(second.rule.contains("exploration overrides"), "{}", second.rule);
+        // push the decision into the audit log the way the engine does,
+        // then observe: the realized cost must land on the entry
+        let metrics = sel.metrics();
+        metrics.audit().push(crate::obs::AuditEntry {
+            seq: 0,
+            op: SparseOp::Spmm,
+            grain: "request",
+            shard: None,
+            selector: "online",
+            matrix: Some(0),
+            features: f,
+            n: 32,
+            thresholds: first.thresholds.clone(),
+            rule: first.rule.clone(),
+            kernel: first.kernel,
+            explored: false,
+            realized_cost: None,
+        });
+        sel.observe(&f, 32, first.kernel, Duration::from_micros(200));
+        assert_eq!(metrics.audit().realized(), 1);
+        let entry = &metrics.audit().entries()[0];
+        assert!(entry.realized_cost.unwrap() > 0.0);
+        // replaying the recorded thresholds reproduces the decision
+        assert_eq!(entry.threshold("t_cv"), Some(AdaptiveSelector::default().t_cv));
     }
 
     #[test]

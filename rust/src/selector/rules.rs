@@ -17,6 +17,22 @@
 use crate::features::MatrixFeatures;
 use crate::kernels::{KernelKind, Traversal};
 
+/// One selector decision with everything needed to reproduce it: the
+/// chosen kernel, the thresholds consulted (by name and value), and a
+/// statement of the rule that fired. The engine and the sharded backend
+/// turn these into `crate::obs::AuditEntry`s; the selectors themselves
+/// stay observability-free.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    /// The chosen kernel design.
+    pub kernel: KernelKind,
+    /// Thresholds consulted, by name — replaying the rule on the same
+    /// features against these values must reproduce `kernel`.
+    pub thresholds: Vec<(&'static str, f64)>,
+    /// Human-readable statement of the rule that fired.
+    pub rule: String,
+}
+
 /// Rule-based selector with the paper's two empirical thresholds, plus
 /// the orthogonal row-traversal threshold for the SR family (`DESIGN.md`
 /// §Vectorization).
@@ -62,6 +78,49 @@ impl AdaptiveSelector {
             KernelKind::SrWb
         } else {
             KernelKind::SrRs
+        }
+    }
+
+    /// [`AdaptiveSelector::select`] plus the audit trail: which
+    /// thresholds were consulted and which rule fired, including the SR
+    /// traversal sub-decision (`t_mp`) for the sequential family, where
+    /// the backend will additionally resolve blocked vs. merge-path.
+    pub fn decide(&self, f: &MatrixFeatures, n: usize) -> Decision {
+        let kernel = self.select(f, n);
+        let rule = if n.max(1) <= self.n_threshold {
+            if f.avg_row < self.t_avg {
+                format!(
+                    "n={} <= t_n and avg_row={:.2} < t_avg -> pr_wb",
+                    n, f.avg_row
+                )
+            } else {
+                format!(
+                    "n={} <= t_n and avg_row={:.2} >= t_avg -> pr_rs",
+                    n, f.avg_row
+                )
+            }
+        } else {
+            let traversal = self.sr_traversal(f);
+            let branch = if f.cv_row > self.t_cv {
+                format!("n={} > t_n and cv_row={:.2} > t_cv -> sr_wb", n, f.cv_row)
+            } else {
+                format!("n={} > t_n and cv_row={:.2} <= t_cv -> sr_rs", n, f.cv_row)
+            };
+            format!(
+                "{branch}; sr traversal cv_row {} t_mp -> {}",
+                if f.cv_row > self.t_mp { ">" } else { "<=" },
+                traversal.label()
+            )
+        };
+        Decision {
+            kernel,
+            thresholds: vec![
+                ("t_n", self.n_threshold as f64),
+                ("t_avg", self.t_avg),
+                ("t_cv", self.t_cv),
+                ("t_mp", self.t_mp),
+            ],
+            rule,
         }
     }
 
@@ -194,6 +253,28 @@ mod tests {
         let spiked = MatrixFeatures::of(&CsrMatrix::from_coo(&coo));
         assert!(spiked.cv_row > sel.t_mp, "cv {}", spiked.cv_row);
         assert_eq!(sel.sr_traversal(&spiked), Traversal::MergePath);
+    }
+
+    #[test]
+    fn decide_reproduces_select_and_names_thresholds() {
+        let sel = AdaptiveSelector::default();
+        for (f, n) in [
+            (features(500, 16, false, 11), 32usize),
+            (features(500, 4, true, 12), 32),
+            (features(2000, 3, false, 13), 1),
+            (features(500, 64, false, 14), 2),
+        ] {
+            let d = sel.decide(&f, n);
+            assert_eq!(d.kernel, sel.select(&f, n));
+            assert!(d.rule.contains(d.kernel.label()), "{}", d.rule);
+            let names: Vec<&str> = d.thresholds.iter().map(|(k, _)| *k).collect();
+            assert_eq!(names, ["t_n", "t_avg", "t_cv", "t_mp"]);
+            // the recorded thresholds are the selector's live values
+            assert_eq!(d.thresholds[2].1, sel.t_cv);
+        }
+        // SR decisions carry the traversal sub-decision
+        let d = sel.decide(&features(500, 16, false, 15), 64);
+        assert!(d.rule.contains("sr traversal"), "{}", d.rule);
     }
 
     #[test]

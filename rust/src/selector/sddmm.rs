@@ -74,6 +74,29 @@ impl SddmmSelector {
         }
     }
 
+    /// [`SddmmSelector::select`] plus the audit trail: thresholds
+    /// consulted and the rule that fired (see
+    /// [`super::rules::Decision`]).
+    pub fn decide(&self, f: &MatrixFeatures, d: usize) -> super::rules::Decision {
+        let kernel = self.select(f, d);
+        let family = if d.max(1) >= self.d_threshold {
+            format!("d={d} >= t_d (lane-parallel dots)")
+        } else {
+            format!("d={d} < t_d (sequential dots)")
+        };
+        let rule = format!(
+            "{family} and cv_row={:.2} {} t_cv -> {}",
+            f.cv_row,
+            if f.cv_row > self.t_cv { ">" } else { "<=" },
+            kernel.label()
+        );
+        super::rules::Decision {
+            kernel,
+            thresholds: vec![("t_d", self.d_threshold as f64), ("t_cv", self.t_cv)],
+            rule,
+        }
+    }
+
     /// One decision per shard feature set — the per-shard grain of
     /// `crate::shard::ShardedBackend::execute_sddmm`.
     pub fn select_shards(&self, shards: &[MatrixFeatures], d: usize) -> Vec<KernelKind> {
@@ -195,6 +218,22 @@ mod tests {
             vec![KernelKind::PrWb, KernelKind::PrRs]
         );
         assert!(sel.select_shards(&[], 1).is_empty());
+    }
+
+    #[test]
+    fn decide_reproduces_select_and_names_thresholds() {
+        let sel = SddmmSelector::default();
+        for (f, d) in [
+            (features(8.0, 2.0), 4usize),
+            (features(8.0, 0.1), 64),
+            (features(16.0, 0.8), 32),
+        ] {
+            let dec = sel.decide(&f, d);
+            assert_eq!(dec.kernel, sel.select(&f, d));
+            assert!(dec.rule.contains(dec.kernel.label()), "{}", dec.rule);
+            assert_eq!(dec.thresholds[0], ("t_d", WARP as f64));
+            assert_eq!(dec.thresholds[1], ("t_cv", sel.t_cv));
+        }
     }
 
     #[test]

@@ -26,11 +26,14 @@
 
 use super::features::{self, ShardFeatures};
 use super::partition::{PartitionConfig, RowPartition};
-use crate::backend::{Execution, NativeBackend, PreparedOperand, SddmmExecution, SpmmBackend};
+use crate::backend::{
+    execute_sddmm_traced, execute_traced, Execution, NativeBackend, PreparedOperand,
+    SddmmExecution, SpmmBackend,
+};
 use crate::coordinator::metrics::Metrics;
-use crate::features::MatrixFeatures;
-use crate::kernels::KernelKind;
-use crate::selector::{AdaptiveSelector, SddmmSelector};
+use crate::kernels::{KernelKind, SparseOp};
+use crate::obs::{trace, AuditEntry};
+use crate::selector::{AdaptiveSelector, Decision, SddmmSelector};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -160,6 +163,39 @@ impl ShardedBackend {
     pub fn sddmm_selector(&self) -> SddmmSelector {
         self.sddmm_selector
     }
+
+    /// Record one shard-grain selector decision into the audit log and
+    /// return the chosen kernel (`Fixed` mode makes no decision and is
+    /// not audited here — the request grain already covers it).
+    #[allow(clippy::too_many_arguments)]
+    fn audit_shard(
+        &self,
+        op: SparseOp,
+        shard: usize,
+        selector: &'static str,
+        s: &PreparedShard,
+        n: usize,
+        decision: Decision,
+        explored: bool,
+    ) -> KernelKind {
+        let kernel = decision.kernel;
+        self.metrics.audit().push(AuditEntry {
+            seq: 0,
+            op,
+            grain: "shard",
+            shard: Some(shard),
+            selector,
+            matrix: None,
+            features: s.features.features,
+            n,
+            thresholds: decision.thresholds,
+            rule: decision.rule,
+            kernel,
+            explored,
+            realized_cost: None,
+        });
+        kernel
+    }
 }
 
 impl SpmmBackend for ShardedBackend {
@@ -199,15 +235,23 @@ impl SpmmBackend for ShardedBackend {
         operand.check_operand(x)?;
         let n = x.cols;
         let kernels: Vec<KernelKind> = match &self.selection {
-            ShardSelection::Static(sel) => {
-                let feats: Vec<MatrixFeatures> =
-                    prep.shards.iter().map(|s| s.features.features).collect();
-                sel.select_shards(&feats, n)
-            }
+            ShardSelection::Static(sel) => prep
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let decision = sel.decide(&s.features.features, n);
+                    self.audit_shard(SparseOp::Spmm, i, "adaptive", s, n, decision, false)
+                })
+                .collect(),
             ShardSelection::Online(sel) => prep
                 .shards
                 .iter()
-                .map(|s| sel.select(&s.features.features, n))
+                .enumerate()
+                .map(|(i, s)| {
+                    let (decision, explored) = sel.decide(&s.features.features, n);
+                    self.audit_shard(SparseOp::Spmm, i, "online", s, n, decision, explored)
+                })
                 .collect(),
             ShardSelection::Fixed => vec![kernel; prep.shards.len()],
         };
@@ -215,15 +259,25 @@ impl SpmmBackend for ShardedBackend {
         // the inner backend; each reports its own wallclock so stragglers
         // are visible in the shard metrics.
         let inner = self.inner.as_ref();
+        let mut fan = trace::span("fanout");
+        fan.set_attr("shards", prep.shards.len());
+        let handle = trace::handle();
         let results: Vec<Result<(Execution, Duration)>> = std::thread::scope(|scope| {
             let handles: Vec<_> = prep
                 .shards
                 .iter()
                 .zip(&kernels)
-                .map(|(shard, &k)| {
+                .enumerate()
+                .map(|(i, (shard, &k))| {
+                    let th = handle.clone();
                     scope.spawn(move || -> Result<(Execution, Duration)> {
+                        let _trace = th.as_ref().map(trace::attach);
+                        let mut sp = trace::span("shard");
+                        sp.set_attr("shard", i);
+                        sp.set_attr("kernel", k.label());
+                        sp.set_attr("rows", format!("{:?}", shard.features.span.rows));
                         let t0 = Instant::now();
-                        let exec = inner.execute(&shard.operand, x, k)?;
+                        let exec = execute_traced(inner, &shard.operand, x, k)?;
                         Ok((exec, t0.elapsed()))
                     })
                 })
@@ -233,6 +287,7 @@ impl SpmmBackend for ShardedBackend {
                 .map(|h| h.join().expect("shard thread panicked"))
                 .collect()
         });
+        fan.end();
         // Gather: shard i produced rows `span.rows` of Y, a contiguous
         // row-major block — reassembly is a straight copy.
         let mut y = DenseMatrix::zeros(operand.rows(), n);
@@ -266,15 +321,23 @@ impl SpmmBackend for ShardedBackend {
         operand.check_sddmm_operands(u, v)?;
         let d = u.cols;
         let kernels: Vec<KernelKind> = match &self.selection {
-            ShardSelection::Static(_) => {
-                let feats: Vec<MatrixFeatures> =
-                    prep.shards.iter().map(|s| s.features.features).collect();
-                self.sddmm_selector.select_shards(&feats, d)
-            }
+            ShardSelection::Static(_) => prep
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let decision = self.sddmm_selector.decide(&s.features.features, d);
+                    self.audit_shard(SparseOp::Sddmm, i, "sddmm", s, d, decision, false)
+                })
+                .collect(),
             ShardSelection::Online(sel) => prep
                 .shards
                 .iter()
-                .map(|s| sel.select_sddmm(&s.features.features, d))
+                .enumerate()
+                .map(|(i, s)| {
+                    let (decision, explored) = sel.decide_sddmm(&s.features.features, d);
+                    self.audit_shard(SparseOp::Sddmm, i, "online-sddmm", s, d, decision, explored)
+                })
                 .collect(),
             ShardSelection::Fixed => vec![kernel; prep.shards.len()],
         };
@@ -283,21 +346,32 @@ impl SpmmBackend for ShardedBackend {
         // are disjoint contiguous nnz ranges of the stream (row slices
         // preserve stream order), so the gather is a straight copy.
         let inner = self.inner.as_ref();
+        let mut fan = trace::span("fanout");
+        fan.set_attr("shards", prep.shards.len());
+        fan.set_attr("op", SparseOp::Sddmm.label());
+        let handle = trace::handle();
         let results: Vec<Result<(SddmmExecution, Duration)>> = std::thread::scope(|scope| {
             let handles: Vec<_> = prep
                 .shards
                 .iter()
                 .zip(&kernels)
-                .map(|(shard, &k)| {
+                .enumerate()
+                .map(|(i, (shard, &k))| {
                     let rows = shard.features.span.rows.clone();
                     let usub = DenseMatrix::from_vec(
                         rows.end - rows.start,
                         d,
                         u.data[rows.start * d..rows.end * d].to_vec(),
                     );
+                    let th = handle.clone();
                     scope.spawn(move || -> Result<(SddmmExecution, Duration)> {
+                        let _trace = th.as_ref().map(trace::attach);
+                        let mut sp = trace::span("shard");
+                        sp.set_attr("shard", i);
+                        sp.set_attr("kernel", k.label());
+                        sp.set_attr("rows", format!("{:?}", shard.features.span.rows));
                         let t0 = Instant::now();
-                        let exec = inner.execute_sddmm(&shard.operand, &usub, v, k)?;
+                        let exec = execute_sddmm_traced(inner, &shard.operand, &usub, v, k)?;
                         Ok((exec, t0.elapsed()))
                     })
                 })
@@ -307,6 +381,7 @@ impl SpmmBackend for ShardedBackend {
                 .map(|h| h.join().expect("sddmm shard thread panicked"))
                 .collect()
         });
+        fan.end();
         let mut values = vec![0f32; operand.nnz()];
         let mut labels = Vec::with_capacity(prep.shards.len());
         let mut off = 0usize;

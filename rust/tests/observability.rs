@@ -1,0 +1,429 @@
+//! Observability integration: the request-lifecycle trace a served
+//! request leaves behind (admission → batch → dispatch → shard fan-out →
+//! kernel), the selector decision audit whose recorded features and
+//! thresholds must *reproduce* the chosen kernel, the lock-free latency
+//! histograms' exactness under concurrency and their quantile accuracy
+//! against an exact sort, flight-recorder wraparound under engine
+//! traffic, and the exposition surface (JSON snapshot + Prometheus text)
+//! over a live serving engine.
+
+use ge_spmm::coordinator::metrics::Metrics;
+use ge_spmm::coordinator::server::{Request, Server, ServerConfig, ServerReply};
+use ge_spmm::coordinator::SpmmEngine;
+use ge_spmm::kernels::{KernelKind, SparseOp};
+use ge_spmm::obs::expo;
+use ge_spmm::obs::hist::AtomicHistogram;
+use ge_spmm::obs::Grain;
+use ge_spmm::selector::{AdaptiveSelector, SddmmSelector};
+use ge_spmm::sparse::{CooMatrix, CsrMatrix};
+use ge_spmm::util::json::Json;
+use ge_spmm::util::prng::Xoshiro256;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+mod common;
+use common::int_dense;
+
+fn uniform_csr(rows: usize, cols: usize, density: f64, seed: u64) -> CsrMatrix {
+    let mut rng = Xoshiro256::seeded(seed);
+    CsrMatrix::from_coo(&CooMatrix::random_uniform(rows, cols, density, &mut rng))
+}
+
+/// A serving engine sized so `small` stays on the unsharded route and
+/// `large` fans out over 2 shards, plus both registered handles.
+fn serving_pair() -> (
+    Arc<SpmmEngine>,
+    ge_spmm::coordinator::engine::MatrixHandle,
+    ge_spmm::coordinator::engine::MatrixHandle,
+) {
+    let small = uniform_csr(64, 48, 0.05, 71);
+    let large = uniform_csr(512, 48, 0.08, 72);
+    assert!(large.nnz() > small.nnz());
+    let engine = Arc::new(SpmmEngine::serving(64 << 20, small.nnz() + 1, 2));
+    let hs = engine.register(small).unwrap();
+    let hl = engine.register(large).unwrap();
+    (engine, hs, hl)
+}
+
+/// Rebuild the SpMM selector from an audit entry's recorded thresholds
+/// and replay it on the recorded features: the decision must reproduce.
+fn replay_adaptive(e: &ge_spmm::obs::AuditEntry) {
+    let sel = AdaptiveSelector {
+        n_threshold: e.threshold("t_n").unwrap() as usize,
+        t_avg: e.threshold("t_avg").unwrap(),
+        t_cv: e.threshold("t_cv").unwrap(),
+        t_mp: e.threshold("t_mp").unwrap(),
+    };
+    assert_eq!(
+        sel.select(&e.features, e.n),
+        e.kernel,
+        "audit entry must reproduce its decision: {}",
+        e.line()
+    );
+    assert!(e.rule.contains(e.kernel.label()), "{}", e.rule);
+}
+
+#[test]
+fn histograms_record_concurrently_without_loss() {
+    let m = Arc::new(Metrics::default());
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let m = m.clone();
+            s.spawn(move || {
+                for _ in 0..500 {
+                    m.record(KernelKind::SrRs, Duration::from_micros(1));
+                }
+                for _ in 0..250 {
+                    m.record_shard(KernelKind::PrWb, Duration::from_micros(2));
+                }
+                for _ in 0..125 {
+                    m.record_sddmm(KernelKind::SrWb, Duration::from_micros(3));
+                    m.record_sddmm_shard(KernelKind::PrRs, Duration::from_micros(4));
+                }
+            });
+        }
+    });
+    // exact totals: nothing dropped, nothing double-counted, no bank
+    // bleeding into another op × grain × kernel cell
+    let cases = [
+        (SparseOp::Spmm, Grain::Request, KernelKind::SrRs, 4000u64, 1_000u64),
+        (SparseOp::Spmm, Grain::Shard, KernelKind::PrWb, 2000, 2_000),
+        (SparseOp::Sddmm, Grain::Request, KernelKind::SrWb, 1000, 3_000),
+        (SparseOp::Sddmm, Grain::Shard, KernelKind::PrRs, 1000, 4_000),
+    ];
+    for (op, grain, kernel, count, each_ns) in cases {
+        let snap = m.latency_histogram(op, grain, kernel);
+        assert_eq!(snap.count, count, "{op:?}/{grain:?}/{kernel:?}");
+        assert_eq!(snap.sum, count * each_ns);
+        assert_eq!(snap.counts.iter().sum::<u64>(), count);
+        assert_eq!(snap.max, each_ns);
+        for other in KernelKind::ALL {
+            if other != kernel {
+                assert!(m.latency_histogram(op, grain, other).is_empty());
+            }
+        }
+    }
+    assert_eq!(m.requests(), 4000);
+    assert_eq!(m.shard_executions(), 2000);
+    assert_eq!(m.sddmm_requests(), 1000);
+    assert_eq!(m.sddmm_shard_executions(), 1000);
+}
+
+#[test]
+fn histogram_quantiles_match_an_exact_sort_within_bucket_bounds() {
+    let h = AtomicHistogram::new();
+    let mut rng = Xoshiro256::seeded(99);
+    let mut samples: Vec<u64> = Vec::with_capacity(10_000);
+    for _ in 0..10_000 {
+        let v = rng.below(1_000_000) + 1;
+        h.record(v);
+        samples.push(v);
+    }
+    samples.sort_unstable();
+    let snap = h.snapshot();
+    assert_eq!(snap.count, 10_000);
+    assert_eq!(snap.sum, samples.iter().sum::<u64>());
+    assert_eq!(snap.max, *samples.last().unwrap());
+    // the log-bucketed estimate answers the selected bucket's geometric
+    // midpoint, so it sits within the √2 bucket width of the exact
+    // nearest-rank value at every quantile
+    for q in [0.0, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+        let rank = (q * (snap.count - 1) as f64).round() as usize;
+        let exact = samples[rank] as f64;
+        let est = snap.quantile(q);
+        let ratio = est / exact;
+        assert!(
+            (1.0 / std::f64::consts::SQRT_2..=std::f64::consts::SQRT_2).contains(&ratio),
+            "q={q}: estimate {est} vs exact {exact} (ratio {ratio})"
+        );
+    }
+}
+
+#[test]
+fn flight_recorder_wraps_at_capacity_under_engine_traffic() {
+    let engine = SpmmEngine::native();
+    let h = engine.register(uniform_csr(48, 40, 0.1, 31)).unwrap();
+    let mut rng = Xoshiro256::seeded(32);
+    let x = int_dense(40, 4, &mut rng);
+    let capacity = engine.metrics.recorder().capacity();
+    let total = capacity as u64 + 6;
+    for _ in 0..total {
+        engine.spmm(h, &x).unwrap();
+    }
+    let recorder = engine.metrics.recorder();
+    assert_eq!(recorder.committed(), total, "every direct call commits a trace");
+    assert_eq!(recorder.len(), capacity, "ring keeps only the newest");
+    let traces = recorder.traces();
+    assert_eq!(traces.len(), capacity);
+    for t in &traces {
+        assert_eq!(t.label, "spmm#0");
+        let dispatch = t.span("dispatch").expect("dispatch span");
+        assert!(dispatch.duration_ns() > 0);
+        assert!(dispatch.attr("artifact").unwrap().starts_with("native/"));
+        let kernel = t.span("kernel").expect("kernel span");
+        assert_eq!(kernel.parent, dispatch.id);
+        assert!(kernel.duration_ns() > 0);
+    }
+    let dump = recorder.dump_json();
+    assert_eq!(
+        dump.get("committed").and_then(|j| j.as_usize()),
+        Some(total as usize)
+    );
+    assert_eq!(
+        dump.get("traces").and_then(|j| j.as_arr()).unwrap().len(),
+        capacity
+    );
+}
+
+#[test]
+fn served_spmm_requests_leave_full_traces_and_reproducible_audits() {
+    let (engine, hs, hl) = serving_pair();
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig {
+            max_width: 1000,
+            max_delay: Duration::from_millis(1),
+            workers: 2,
+            max_queue: 64,
+        },
+    );
+    let mut rng = Xoshiro256::seeded(73);
+    let mut replies = Vec::new();
+    for (tag, h) in [(1u64, hs), (2u64, hl)] {
+        let (rtx, rrx) = mpsc::channel();
+        assert!(server.submit(Request::spmm(h, int_dense(48, 3, &mut rng), tag, rtx)));
+        replies.push(rrx);
+    }
+    for rrx in replies {
+        match rrx.recv_timeout(Duration::from_secs(60)).unwrap() {
+            ServerReply::Ok(_) => {}
+            ServerReply::Err(e) => panic!("served request failed: {e}"),
+        }
+    }
+    server.shutdown();
+
+    let traces = engine.metrics.recorder().traces();
+    let find = |label: &str| {
+        traces
+            .iter()
+            .find(|t| t.label == label)
+            .unwrap_or_else(|| panic!("no trace labeled {label}"))
+    };
+    for (label, tag) in [("spmm#1", "1"), ("spmm#2", "2")] {
+        let t = find(label);
+        // admission: queue wait from submit (trace epoch) to dequeue
+        let admission = t.span("admission").expect("admission span");
+        assert_eq!(admission.attr("tag"), Some(tag));
+        assert_eq!(admission.start_ns, 0);
+        assert!(admission.end_ns > 0);
+        // batch: the sole member of its deadline flush is the primary
+        let batch = t.span("batch").expect("batch span");
+        assert_eq!(batch.attr("batch_size"), Some("1"));
+        // dispatch nests under the batch and carries the decision
+        let dispatch = t.span("dispatch").expect("dispatch span");
+        assert_eq!(dispatch.parent, batch.id);
+        assert_eq!(dispatch.attr("op"), Some("spmm"));
+        assert!(dispatch.attr("kernel").is_some());
+        assert!(dispatch.attr("artifact").is_some());
+        assert!(dispatch.duration_ns() > 0, "dispatch wraps real execution");
+        // at least one kernel span with real duration under the dispatch
+        let kernels = t.spans_named("kernel");
+        assert!(!kernels.is_empty());
+        assert!(kernels.iter().any(|k| k.duration_ns() > 0));
+        for sp in &t.spans {
+            assert!(sp.end_ns >= sp.start_ns, "{}: span {} runs backwards", label, sp.name);
+        }
+    }
+    // the large request fans out: fanout → per-shard spans → native kernels
+    let t2 = find("spmm#2");
+    let fanout = t2.span("fanout").expect("fanout span");
+    assert_eq!(fanout.attr("shards"), Some("2"));
+    let shards = t2.spans_named("shard");
+    assert_eq!(shards.len(), 2);
+    for sp in &shards {
+        assert_eq!(sp.parent, fanout.id, "shard spans parent to the fan-out");
+        assert!(sp.attr("kernel").is_some());
+    }
+    let shard_ids: Vec<u64> = shards.iter().map(|sp| sp.id).collect();
+    let native_kernels: Vec<_> = t2
+        .spans_named("kernel")
+        .into_iter()
+        .filter(|k| k.attr("backend") == Some("native"))
+        .collect();
+    assert_eq!(native_kernels.len(), 2, "one inner kernel call per shard");
+    for k in &native_kernels {
+        assert!(shard_ids.contains(&k.parent), "kernel nests in its shard span");
+        assert!(k.duration_ns() > 0);
+    }
+    let t1 = find("spmm#1");
+    assert!(t1.span("fanout").is_none(), "small request stays unsharded");
+
+    // every adaptive decision left an audit entry that reproduces it
+    let audit = engine.metrics.audit();
+    let entries = audit.entries();
+    let requests: Vec<_> = entries.iter().filter(|e| e.grain == "request").collect();
+    assert_eq!(requests.len(), 2);
+    for &e in &requests {
+        assert_eq!(e.op, SparseOp::Spmm);
+        assert_eq!(e.selector, "adaptive");
+        assert_eq!(e.n, 3);
+        assert!(e.matrix.is_some());
+        replay_adaptive(e);
+    }
+    assert_ne!(
+        requests[0].matrix, requests[1].matrix,
+        "one request-grain entry per registered matrix"
+    );
+    let shard_entries: Vec<_> = entries.iter().filter(|e| e.grain == "shard").collect();
+    assert_eq!(shard_entries.len(), 2, "one shard-grain entry per fan-out shard");
+    for &e in &shard_entries {
+        assert_eq!(e.selector, "adaptive");
+        assert!(e.shard.is_some());
+        assert!(e.matrix.is_none());
+        replay_adaptive(e);
+    }
+    assert_eq!(audit.recorded(), 4);
+    let report = engine.explain(hs);
+    assert!(report.contains("via adaptive"), "{report}");
+    assert!(report.contains("thresholds"), "{report}");
+
+    // serve-mode stats smoke: the same engine renders a full exposition
+    let text = expo::prometheus_text(&engine.metrics);
+    assert!(text.contains("ge_spmm_requests_total 2"), "{text}");
+    assert!(text.contains("ge_spmm_shard_executions_total 2"), "{text}");
+    assert!(text.contains("ge_spmm_audit_decisions_total 4"), "{text}");
+    let req_kernel = requests[0].kernel.label();
+    assert!(
+        text.contains(&format!(
+            "op=\"spmm\",grain=\"request\",kernel=\"{req_kernel}\",quantile=\"0.99\""
+        )),
+        "{text}"
+    );
+}
+
+#[test]
+fn served_sddmm_requests_trace_and_audit_the_second_op() {
+    let (engine, hs, _hl) = serving_pair();
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig {
+            max_width: 1000,
+            max_delay: Duration::from_millis(1),
+            workers: 1,
+            max_queue: 16,
+        },
+    );
+    let mut rng = Xoshiro256::seeded(74);
+    let u = int_dense(64, 8, &mut rng);
+    let v = int_dense(48, 8, &mut rng);
+    let (rtx, rrx) = mpsc::channel();
+    assert!(server.submit(Request::sddmm(hs, u, v, 9, rtx)));
+    match rrx.recv_timeout(Duration::from_secs(60)).unwrap() {
+        ServerReply::Ok(_) => {}
+        ServerReply::Err(e) => panic!("served sddmm failed: {e}"),
+    }
+    server.shutdown();
+
+    let traces = engine.metrics.recorder().traces();
+    let t = traces
+        .iter()
+        .find(|t| t.label == "sddmm#9")
+        .expect("sddmm trace");
+    let admission = t.span("admission").expect("admission span");
+    assert_eq!(admission.attr("tag"), Some("9"));
+    let dispatch = t.span("dispatch").expect("dispatch span");
+    assert_eq!(dispatch.attr("op"), Some("sddmm"));
+    assert_eq!(dispatch.attr("d"), Some("8"));
+    assert!(dispatch.duration_ns() > 0);
+    let kernel = t.span("kernel").expect("kernel span");
+    assert_eq!(kernel.attr("op"), Some("sddmm"));
+    assert!(kernel.duration_ns() > 0);
+    assert!(t.span("batch").is_none(), "sddmm executes unbatched");
+
+    let entries = engine.metrics.audit().entries();
+    let e = entries
+        .iter()
+        .find(|e| e.op == SparseOp::Sddmm)
+        .expect("sddmm audit entry");
+    assert_eq!(e.grain, "request");
+    assert_eq!(e.selector, "sddmm");
+    assert_eq!(e.n, 8);
+    let sel = SddmmSelector {
+        d_threshold: e.threshold("t_d").unwrap() as usize,
+        t_cv: e.threshold("t_cv").unwrap(),
+    };
+    assert_eq!(
+        sel.select(&e.features, e.n),
+        e.kernel,
+        "sddmm audit entry must reproduce its decision: {}",
+        e.line()
+    );
+}
+
+#[test]
+fn stats_snapshot_matches_live_counters_and_roundtrips() {
+    let (engine, hs, hl) = serving_pair();
+    let mut rng = Xoshiro256::seeded(75);
+    let x = int_dense(48, 6, &mut rng);
+    let spmm_kernel = engine.spmm(hs, &x).unwrap().kernel;
+    engine.spmm(hl, &x).unwrap();
+    let u = int_dense(64, 8, &mut rng);
+    let v = int_dense(48, 8, &mut rng);
+    let sddmm_kernel = engine.sddmm(hs, &u, &v).unwrap().kernel;
+
+    let snap = expo::snapshot(&engine.metrics);
+    let counters = snap.get("counters").unwrap();
+    let count_of = |key: &str| counters.get(key).unwrap().as_usize().unwrap() as u64;
+    assert_eq!(count_of("requests"), engine.metrics.requests());
+    assert_eq!(count_of("requests"), 2);
+    assert_eq!(count_of("sddmm_requests"), 1);
+    assert_eq!(count_of("shard_executions"), engine.metrics.shard_executions());
+    assert_eq!(count_of("shard_executions"), 2);
+    assert_eq!(count_of("errors"), 0);
+    assert_eq!(count_of("cache_misses"), 2);
+
+    // the per-op per-kernel latency rows carry live quantiles
+    let kernels = snap.get("kernels").unwrap().as_arr().unwrap();
+    assert_eq!(kernels.len(), 16, "2 ops x 2 grains x 4 kernels");
+    let row_of = |op: &str, grain: &str, kernel: KernelKind| {
+        kernels
+            .iter()
+            .find(|r| {
+                r.get("op").unwrap().as_str() == Some(op)
+                    && r.get("grain").unwrap().as_str() == Some(grain)
+                    && r.get("kernel").unwrap().as_str() == Some(kernel.label())
+            })
+            .unwrap()
+    };
+    for (op, kernel) in [("spmm", spmm_kernel), ("sddmm", sddmm_kernel)] {
+        let row = row_of(op, "request", kernel);
+        assert!(row.get("count").unwrap().as_usize().unwrap() >= 1);
+        assert!(row.get("p50_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(row.get("p99_ns").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    // Prometheus text includes per-op per-kernel p50/p99 series
+    let text = expo::prometheus_text(&engine.metrics);
+    for q in ["0.5", "0.99"] {
+        assert!(
+            text.contains(&format!(
+                "ge_spmm_latency_ns{{op=\"spmm\",grain=\"request\",kernel=\"{}\",quantile=\"{q}\"}}",
+                spmm_kernel.label()
+            )),
+            "{text}"
+        );
+        assert!(
+            text.contains(&format!(
+                "ge_spmm_latency_ns{{op=\"sddmm\",grain=\"request\",kernel=\"{}\",quantile=\"{q}\"}}",
+                sddmm_kernel.label()
+            )),
+            "{text}"
+        );
+    }
+    assert!(text.contains("ge_spmm_traces_committed_total 3"), "{text}");
+
+    // the JSON snapshot is parseable interchange: reparse and re-render
+    let reparsed = Json::parse(&snap.to_string_pretty()).unwrap();
+    assert_eq!(reparsed, snap);
+    assert_eq!(expo::prometheus_of(&reparsed).unwrap(), text);
+}
