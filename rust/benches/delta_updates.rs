@@ -1,0 +1,143 @@
+//! Dynamic-graph delta updates: in-place patch latency vs full
+//! re-preparation, across churn rates. Quantifies the payoff of
+//! `SpmmEngine::apply_delta`'s patch path (value-only batches routed
+//! through `SpmmBackend::prepare_delta`) against the structural path
+//! (snapshot + rebuild + full prepare) and a from-scratch
+//! `prepare` baseline. Feeds DESIGN.md §Dynamic updates (recording
+//! convention in BENCHMARKS.md; supports `--json <path>`
+//! self-recording).
+
+use ge_spmm::backend::{NativeBackend, SpmmBackend};
+use ge_spmm::bench::harness::bench_fn;
+use ge_spmm::bench::record::{json_path_arg, BenchRecord};
+use ge_spmm::coordinator::SpmmEngine;
+use ge_spmm::gen::rmat::RmatConfig;
+use ge_spmm::sparse::{CsrMatrix, EdgeDelta};
+use ge_spmm::util::json::{num, obj, Json};
+use ge_spmm::util::prng::Xoshiro256;
+
+/// Value-only batch touching `k` existing edges, strided across the
+/// stream order so updates spread over the whole matrix.
+fn value_delta(csr: &CsrMatrix, k: usize, rng: &mut Xoshiro256) -> EdgeDelta {
+    let nnz = csr.nnz();
+    let step = (nnz / k).max(1);
+    let mut delta = EdgeDelta::new();
+    let mut p = 0usize;
+    while p < nnz && delta.len() < k {
+        let r = csr.indptr.partition_point(|&e| (e as usize) <= p) - 1;
+        delta.insert(r, csr.indices[p] as usize, rng.next_f32());
+        p += step;
+    }
+    delta
+}
+
+fn main() {
+    println!("== dynamic-graph delta updates: patch vs re-prepare ==");
+    let scales = [10u32, 13];
+    let update_fracs = [0.001f64, 0.01, 0.1];
+    let mut record = json_path_arg().map(|path| {
+        (
+            path,
+            BenchRecord::new("delta_updates").with_config(obj(vec![
+                (
+                    "scales",
+                    Json::Arr(scales.iter().map(|&s| num(s as f64)).collect()),
+                ),
+                (
+                    "update_fracs",
+                    Json::Arr(update_fracs.iter().map(|&f| num(f)).collect()),
+                ),
+            ])),
+        )
+    });
+
+    for scale in scales {
+        let base = RmatConfig::new(scale, 8.0);
+        let mut rng = Xoshiro256::seeded(42);
+        let csr = CsrMatrix::from_coo(&base.generate(&mut rng));
+        let label = format!("rmat_s{scale}");
+        println!(
+            "\n--- {label} ({}x{}, nnz {}) ---",
+            csr.rows,
+            csr.cols,
+            csr.nnz()
+        );
+
+        // From-scratch preparation: the cost every batch would pay
+        // without delta support.
+        let backend = NativeBackend::default();
+        let prepare = bench_fn(&format!("{label} full prepare"), || {
+            backend.prepare(&csr).unwrap();
+        });
+        println!("{}", prepare.line());
+        if let Some((_, rec)) = record.as_mut() {
+            rec.push_latency(&prepare);
+        }
+
+        // Patch path: value-only churn at increasing update fractions.
+        let engine = SpmmEngine::native().with_prepared_cache(256 << 20);
+        let h = engine.register(csr.clone()).unwrap();
+        for frac in update_fracs {
+            let k = ((csr.nnz() as f64 * frac).ceil() as usize).max(1);
+            let delta = value_delta(&csr, k, &mut rng);
+            let s = bench_fn(&format!("{label} patch f={frac}"), || {
+                let out = engine.apply_delta(h, &delta).unwrap();
+                assert!(out.patched);
+            });
+            println!(
+                "{}  ({:.1}x vs prepare)",
+                s.line(),
+                prepare.median_s() / s.median_s()
+            );
+            if let Some((_, rec)) = record.as_mut() {
+                rec.push_latency(&s);
+                rec.push_value(
+                    &format!("{} speedup", s.name),
+                    prepare.median_s() / s.median_s(),
+                    "x vs full prepare",
+                );
+            }
+        }
+
+        // Structural path: alternate two batches that move one edge
+        // back and forth between a present and an absent coordinate, so
+        // every iteration changes the sparsity pattern (a delete + an
+        // insert at the SAME coordinate would compose to a value-only
+        // update) and takes the snapshot + rebuild + re-prepare route.
+        let (r1, c1) = {
+            let r = (0..csr.rows).find(|&r| csr.row_nnz(r) > 0).unwrap();
+            (r, csr.row(r).0[0] as usize)
+        };
+        let (r2, c2) = {
+            let r = (0..csr.rows).find(|&r| csr.row_nnz(r) < csr.cols).unwrap();
+            let row = csr.row(r).0;
+            let c = (0..csr.cols as u32).find(|c| row.binary_search(c).is_err());
+            (r, c.unwrap() as usize)
+        };
+        let mut fwd = EdgeDelta::new();
+        fwd.delete(r1, c1).insert(r2, c2, 0.5);
+        let mut bwd = EdgeDelta::new();
+        bwd.delete(r2, c2).insert(r1, c1, 0.25);
+        let mut flip = false;
+        let s = bench_fn(&format!("{label} structural re-prepare"), || {
+            let d = if flip { &bwd } else { &fwd };
+            flip = !flip;
+            let out = engine.apply_delta(h, d).unwrap();
+            assert!(out.report.structural);
+            assert!(!out.patched);
+        });
+        println!(
+            "{}  ({:.1}x vs prepare)",
+            s.line(),
+            prepare.median_s() / s.median_s()
+        );
+        if let Some((_, rec)) = record.as_mut() {
+            rec.push_latency(&s);
+        }
+    }
+
+    if let Some((path, rec)) = record {
+        rec.save(&path).expect("writing bench record");
+        println!("wrote {}", path.display());
+    }
+}

@@ -198,6 +198,28 @@ pub trait SpmmBackend: Send + Sync {
         Err(anyhow!("backend '{}' does not implement SDDMM", self.name()))
     }
 
+    /// Incrementally re-derive prepared state after an
+    /// [`crate::sparse::EdgeDelta`] batch landed on `csr`. `prev` is the
+    /// operand prepared from the pre-mutation content; `structural` says
+    /// whether the batch changed the sparsity pattern
+    /// ([`crate::sparse::DeltaReport::structural`]).
+    ///
+    /// `Some(Ok(op))` — the backend patched its layout in place (cheap:
+    /// value-only batches copy the new value stream into the existing
+    /// segment/ELL planes without re-cutting). `None` — the backend
+    /// declines and the caller must fall back to a full
+    /// [`SpmmBackend::prepare`]; the default declines everything, so
+    /// backends without a patch path stay correct for free.
+    fn prepare_delta(
+        &self,
+        prev: &PreparedOperand,
+        csr: &CsrMatrix,
+        structural: bool,
+    ) -> Option<Result<PreparedOperand>> {
+        let _ = (prev, csr, structural);
+        None
+    }
+
     /// Dense widths this backend routes natively, ascending, or `None` if
     /// any width is accepted (no fixed-shape artifact library).
     fn available_n(&self) -> Option<Vec<usize>> {
@@ -320,5 +342,8 @@ mod tests {
             .execute_sddmm(&op, &u, &v, KernelKind::SrRs)
             .unwrap_err();
         assert!(err.to_string().contains("does not implement SDDMM"), "{err}");
+        // ... and declines delta patching, forcing a full re-prepare
+        let csr = CsrMatrix::from_parts(0, 0, vec![0], vec![], vec![]);
+        assert!(backend.prepare_delta(&op, &csr, false).is_none());
     }
 }

@@ -124,6 +124,51 @@ impl SpmmBackend for NativeBackend {
         ))
     }
 
+    fn prepare_delta(
+        &self,
+        prev: &PreparedOperand,
+        csr: &CsrMatrix,
+        structural: bool,
+    ) -> Option<Result<PreparedOperand>> {
+        // Structural batches re-cut segments from scratch: a changed
+        // sparsity pattern moves segment boundaries, row indices and
+        // the padding tail, so there is nothing cheap to keep.
+        if structural {
+            return None;
+        }
+        let prep: &NativePrepared = match prev.state() {
+            Ok(p) => p,
+            Err(e) => return Some(Err(e)),
+        };
+        if prep.csr.rows != csr.rows || prep.csr.cols != csr.cols || prep.csr.nnz() != csr.nnz() {
+            return Some(Err(anyhow::anyhow!(
+                "value-only delta changed the matrix shape: prepared {}x{} nnz {}, got {}x{} nnz {}",
+                prep.csr.rows,
+                prep.csr.cols,
+                prep.csr.nnz(),
+                csr.rows,
+                csr.cols,
+                csr.nnz()
+            )));
+        }
+        // Value-only: the CSR value stream maps 1:1 onto the segment
+        // slots, so patch values into the existing cut instead of
+        // re-running O(nnz) preparation. Row-length features are a
+        // function of the unchanged pattern, so they carry over.
+        let mut segments = prep.segments.clone();
+        segments.patch_values(&csr.values);
+        Some(Ok(PreparedOperand::new(
+            csr.rows,
+            csr.cols,
+            csr.nnz(),
+            Box::new(NativePrepared {
+                csr: csr.clone(),
+                segments,
+                features: prep.features,
+            }),
+        )))
+    }
+
     fn execute(
         &self,
         operand: &PreparedOperand,
@@ -308,6 +353,49 @@ mod tests {
         let xf = DenseMatrix::random(80, 4, 1.0, &mut rng);
         let exec = adaptive.execute(&flat_op, &xf, KernelKind::SrRs).unwrap();
         assert_eq!(exec.artifact, "native/sr_rs");
+    }
+
+    #[test]
+    fn value_only_prepare_delta_matches_full_prepare_bit_for_bit() {
+        use crate::sparse::EdgeDelta;
+        let mut rng = Xoshiro256::seeded(53);
+        let mut csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(60, 40, 0.1, &mut rng));
+        let backend = NativeBackend::new(ThreadPool::new(2));
+        let prev = backend.prepare(&csr).unwrap();
+
+        // value-only batch: rewrite a handful of existing edges
+        let mut delta = EdgeDelta::new();
+        for r in 0..csr.rows {
+            let (cols, vals) = csr.row(r);
+            if let (Some(&c), Some(&v)) = (cols.first(), vals.first()) {
+                delta.insert(r, c as usize, v * 3.0 - 1.0);
+            }
+        }
+        let rep = delta.apply(&mut csr);
+        assert!(!rep.structural);
+        let patched = backend.prepare_delta(&prev, &csr, rep.structural).unwrap().unwrap();
+        let fresh = backend.prepare(&csr).unwrap();
+        let x = DenseMatrix::random(40, 7, 1.0, &mut rng);
+        for kind in KernelKind::ALL {
+            let a = backend.execute(&patched, &x, kind).unwrap();
+            let b = backend.execute(&fresh, &x, kind).unwrap();
+            assert_eq!(a.y.data, b.y.data, "{kind:?}");
+        }
+
+        // structural batches decline (the caller re-prepares)
+        let mut grow = EdgeDelta::new();
+        let r0 = (0..csr.rows).find(|&r| csr.row_nnz(r) < csr.cols).unwrap();
+        let c0 = (0..csr.cols as u32)
+            .find(|c| csr.row(r0).0.binary_search(c).is_err())
+            .unwrap();
+        grow.insert(r0, c0 as usize, 1.0);
+        let rep = grow.apply(&mut csr);
+        assert!(rep.structural);
+        assert!(backend.prepare_delta(&patched, &csr, rep.structural).is_none());
+
+        // a shape-inconsistent "value-only" claim is an error, not a
+        // silent mispatch
+        assert!(backend.prepare_delta(&prev, &csr, false).unwrap().is_err());
     }
 
     #[test]

@@ -111,6 +111,36 @@ impl SpmmBackend for RoutedBackend {
         ))
     }
 
+    fn prepare_delta(
+        &self,
+        prev: &PreparedOperand,
+        csr: &CsrMatrix,
+        structural: bool,
+    ) -> Option<Result<PreparedOperand>> {
+        let prep: &RoutedPrepared = match prev.state() {
+            Ok(p) => p,
+            Err(e) => return Some(Err(e)),
+        };
+        // Re-evaluate the routing decision against the mutated nnz: if
+        // the matrix crossed the threshold, the prepared side is the
+        // wrong backend entirely — decline so the caller re-prepares
+        // (and re-routes) from scratch.
+        let large = csr.nnz() >= self.threshold_nnz;
+        if large != prep.large {
+            return None;
+        }
+        let side = if large { &self.large } else { &self.small };
+        let inner = side.prepare_delta(&prep.operand, csr, structural)?;
+        Some(inner.map(|operand| {
+            PreparedOperand::new(
+                csr.rows,
+                csr.cols,
+                csr.nnz(),
+                Box::new(RoutedPrepared { large, operand }),
+            )
+        }))
+    }
+
     fn execute(
         &self,
         operand: &PreparedOperand,
@@ -245,6 +275,42 @@ mod tests {
             assert!(exec.artifact.starts_with(prefix), "{}", exec.artifact);
             assert_eq!(exec.values, want, "{prefix}");
         }
+    }
+
+    #[test]
+    fn prepare_delta_patches_on_the_recorded_side() {
+        use crate::sparse::EdgeDelta;
+        let mut rng = Xoshiro256::seeded(907);
+        let mut csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(80, 60, 0.1, &mut rng));
+        let x = DenseMatrix::random(60, 5, 1.0, &mut rng);
+        for (backend, prefix) in [
+            (RoutedBackend::new(usize::MAX, 2), "native/"),
+            (RoutedBackend::new(1, 2), "sharded(k="),
+        ] {
+            let prev = backend.prepare(&csr).unwrap();
+            let mut local = csr.clone();
+            let mut delta = EdgeDelta::new();
+            let r0 = (0..local.rows).find(|&r| local.row_nnz(r) > 0).unwrap();
+            let c0 = local.row(r0).0[0] as usize;
+            delta.insert(r0, c0, 42.0);
+            let rep = delta.apply(&mut local);
+            assert!(!rep.structural);
+            let patched = backend.prepare_delta(&prev, &local, false).unwrap().unwrap();
+            let fresh = backend.prepare(&local).unwrap();
+            let a = backend.execute(&patched, &x, KernelKind::SrWb).unwrap();
+            let b = backend.execute(&fresh, &x, KernelKind::SrWb).unwrap();
+            assert!(a.artifact.starts_with(prefix), "{}", a.artifact);
+            assert_eq!(a.y.data, b.y.data, "{prefix}");
+        }
+        // a mutation that flips the route declines the patch
+        let backend = RoutedBackend::new(csr.nnz(), 2);
+        let prev = backend.prepare(&csr).unwrap();
+        let mut delta = EdgeDelta::new();
+        let r0 = (0..csr.rows).find(|&r| csr.row_nnz(r) > 0).unwrap();
+        delta.delete(r0, csr.row(r0).0[0] as usize);
+        let rep = delta.apply(&mut csr);
+        assert!(rep.structural);
+        assert!(backend.prepare_delta(&prev, &csr, rep.structural).is_none());
     }
 
     #[test]

@@ -137,6 +137,22 @@ impl<T> PreparedCache<T> {
         }
         evicted
     }
+
+    /// Drop one fingerprint's entry, returning whether it was resident.
+    /// The engine calls this on `unregister` (dead prepared state must
+    /// not sit on the byte budget until LRU pressure) and on delta
+    /// application (the pre-mutation fingerprint can never be requested
+    /// again — registration re-fingerprints, and the epoch moved).
+    pub fn remove(&self, fingerprint: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entries.remove(&fingerprint) {
+            Some(old) => {
+                inner.bytes -= old.bytes;
+                true
+            }
+            None => false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -197,6 +213,21 @@ mod tests {
         // the resident entry was not disturbed
         assert!(cache.get(1).is_some());
         assert_eq!((cache.len(), cache.bytes()), (1, 60));
+    }
+
+    #[test]
+    fn remove_releases_bytes_and_reports_residency() {
+        let cache: PreparedCache<usize> = PreparedCache::new(100);
+        cache.insert(1, entry(1), 40);
+        cache.insert(2, entry(2), 30);
+        assert!(cache.remove(1));
+        assert_eq!((cache.len(), cache.bytes()), (1, 30));
+        assert!(cache.get(1).is_none());
+        assert!(!cache.remove(1), "second remove is a no-op");
+        assert!(!cache.remove(99), "absent fingerprint is a no-op");
+        // the freed budget is usable again without eviction
+        assert_eq!(cache.insert(3, entry(3), 70), 0);
+        assert_eq!((cache.len(), cache.bytes()), (2, 100));
     }
 
     #[test]

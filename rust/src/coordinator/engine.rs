@@ -14,15 +14,23 @@ use crate::backend::{
     execute_sddmm_traced, execute_traced, NativeBackend, PreparedOperand, SpmmBackend,
 };
 use crate::features::MatrixFeatures;
-use crate::kernels::{KernelKind, SparseOp};
+use crate::kernels::{KernelKind, SparseOp, WARP};
 use crate::obs::{trace, AuditEntry};
 use crate::selector::{AdaptiveSelector, Decision, OnlineConfig, OnlineSelector, SddmmSelector};
-use crate::sparse::{CsrMatrix, DenseMatrix};
+use crate::sparse::{CsrMatrix, DeltaOutcome, DenseMatrix, EdgeDelta};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Relative feature movement past which a delta batch triggers
+/// re-selection ([`SpmmEngine::apply_delta`]): when `avg_row`, `cv_row`
+/// or `nnz` moves by more than this fraction of its pre-batch value, the
+/// kernel choices made from the old features are considered stale — the
+/// static selectors re-decide into the audit log (grain `delta`) and the
+/// online selector's matching cost buckets are reset.
+pub const DRIFT_THRESHOLD: f64 = 0.25;
 
 /// Handle to a registered matrix.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -31,6 +39,11 @@ pub struct MatrixHandle(usize);
 struct Registered {
     features: MatrixFeatures,
     prepared: PreparedOperand,
+    /// The source CSR this registration was prepared from — the base a
+    /// delta batch ([`SpmmEngine::apply_delta`]) clones, mutates and
+    /// re-prepares against. Kept per registration (not per handle): on a
+    /// cached engine, content-identical handles share one copy.
+    csr: CsrMatrix,
     /// Stable identity of this registration's prepared state: the content
     /// fingerprint on cached engines (shared by every handle that hit the
     /// same cache entry), a unique id otherwise. The serving layer routes
@@ -310,12 +323,14 @@ impl SpmmEngine {
                     }
                     None => {
                         self.metrics.record_cache_miss();
+                        let bytes = csr.heap_bytes();
                         let fresh = Arc::new(Registered {
                             features: MatrixFeatures::of(&csr),
                             prepared: self.backend.prepare(&csr)?,
                             batch_key: fingerprint,
+                            csr,
                         });
-                        let evicted = cache.insert(fingerprint, fresh.clone(), csr.heap_bytes());
+                        let evicted = cache.insert(fingerprint, fresh.clone(), bytes);
                         self.metrics.record_cache_evictions(evicted);
                         fresh
                     }
@@ -325,6 +340,7 @@ impl SpmmEngine {
                 features: MatrixFeatures::of(&csr),
                 prepared: self.backend.prepare(&csr)?,
                 batch_key: id as u64,
+                csr,
             }),
         };
         self.matrices.lock().unwrap().insert(id, registered);
@@ -340,15 +356,200 @@ impl SpmmEngine {
         Ok(self.get(h)?.batch_key)
     }
 
+    /// Apply a dynamic-graph mutation batch to a registered matrix
+    /// without tearing the registration down.
+    ///
+    /// The batch is applied to a clone of the registration's source CSR
+    /// (requests in flight keep executing against the pre-batch snapshot
+    /// — they hold the old `Arc` — and never observe a half-patched
+    /// state), then the prepared state is refreshed the cheapest way the
+    /// backend supports: [`SpmmBackend::prepare_delta`] patches in place
+    /// for value-only batches, anything structural falls back to a full
+    /// `prepare`. The epoch bump moves the content fingerprint, so on a
+    /// cached engine the stale cache entry is evicted and the new state
+    /// inserted under the new key — a later registration of either the
+    /// pre-batch content or an epoch-0 rebuild of the post-batch content
+    /// is a miss, never a stale hit.
+    ///
+    /// If the post-batch features moved past [`DRIFT_THRESHOLD`] the
+    /// selector decisions made from the old features are stale: the
+    /// current thresholds re-decide both ops into the audit log (grain
+    /// `delta`, selectors `drift` / `drift-sddmm`) and the online
+    /// selector — when present — forgets the cost buckets the old and
+    /// new features map to.
+    ///
+    /// Concurrent `apply_delta` calls on one handle are last-writer-wins
+    /// (each clones the base it saw); serialize batches per handle for a
+    /// deterministic mutation sequence. A batch that touches nothing
+    /// (empty, or deletes of absent edges only) leaves the registration
+    /// — epoch, batch key, cache entry — untouched.
+    pub fn apply_delta(&self, h: MatrixHandle, delta: &EdgeDelta) -> Result<DeltaOutcome> {
+        let reg = self.get(h)?;
+        let mut req = trace::request(
+            "delta",
+            &format!("delta#{}", h.0),
+            self.metrics.recorder(),
+        );
+        req.set_attr("matrix", h.0);
+        let mut csr = reg.csr.clone();
+        let report = delta.apply(&mut csr);
+        req.set_attr("inserted", report.inserted);
+        req.set_attr("deleted", report.deleted);
+        req.set_attr("updated", report.updated);
+        req.set_attr("structural", report.structural);
+        if report.touched() == 0 {
+            req.set_attr("patched", true);
+            req.set_attr("drift", false);
+            return Ok(DeltaOutcome {
+                report,
+                patched: true,
+                epoch: csr.epoch,
+                drift: false,
+                reselected: false,
+            });
+        }
+        let features = MatrixFeatures::of(&csr);
+        let drift = Self::drifted(&reg.features, &features);
+        if drift {
+            self.audit_drift(h, &features);
+            if let Some(online) = &self.online {
+                online.reset_for_drift(&reg.features, &features);
+            }
+        }
+        req.set_attr("drift", drift);
+        let (prepared, patched) = match self
+            .backend
+            .prepare_delta(&reg.prepared, &csr, report.structural)
+        {
+            Some(result) => match result {
+                Ok(prepared) => (prepared, true),
+                Err(e) => {
+                    self.metrics.record_error();
+                    req.set_attr("error", &e);
+                    return Err(e);
+                }
+            },
+            None => match self.backend.prepare(&csr) {
+                Ok(prepared) => (prepared, false),
+                Err(e) => {
+                    self.metrics.record_error();
+                    req.set_attr("error", &e);
+                    return Err(e);
+                }
+            },
+        };
+        req.set_attr("patched", patched);
+        let epoch = csr.epoch;
+        let fingerprint = csr.fingerprint();
+        let bytes = csr.heap_bytes();
+        let batch_key = if self.cache.is_some() {
+            fingerprint
+        } else {
+            reg.batch_key
+        };
+        let fresh = Arc::new(Registered {
+            features,
+            prepared,
+            batch_key,
+            csr,
+        });
+        {
+            let mut map = self.matrices.lock().unwrap();
+            match map.get_mut(&h.0) {
+                Some(slot) => *slot = fresh.clone(),
+                // lost a race with unregister: don't resurrect the handle
+                None => return Err(anyhow!("matrix handle {:?} was unregistered mid-delta", h)),
+            }
+        }
+        if let Some(cache) = &self.cache {
+            cache.remove(reg.batch_key);
+            let evicted = cache.insert(fingerprint, fresh, bytes);
+            self.metrics.record_cache_evictions(evicted);
+        }
+        Ok(DeltaOutcome {
+            report,
+            patched,
+            epoch,
+            drift,
+            reselected: drift,
+        })
+    }
+
+    /// Relative feature movement check behind [`DRIFT_THRESHOLD`].
+    fn drifted(old: &MatrixFeatures, new: &MatrixFeatures) -> bool {
+        let rel = |new: f64, old: f64| (new - old).abs() / old.abs().max(1e-9);
+        rel(new.avg_row, old.avg_row) > DRIFT_THRESHOLD
+            || rel(new.cv_row, old.cv_row) > DRIFT_THRESHOLD
+            || rel(new.nnz as f64, old.nnz as f64) > DRIFT_THRESHOLD
+    }
+
+    /// Re-run both ops' selector decisions against post-drift features
+    /// and push them into the audit log at grain `delta`, so `explain`
+    /// shows *why* the next request's choice may differ from the last.
+    /// Uses the online selector's refined thresholds when present (they
+    /// survive the drift reset — still the best known rule), the static
+    /// ones otherwise. Decided at reference widths (`n = 32`, `d =`
+    /// [`WARP`]): the entries record the feature-side consequence of the
+    /// mutation; per-request widths still decide at dispatch time.
+    fn audit_drift(&self, h: MatrixHandle, features: &MatrixFeatures) {
+        const REF_N: usize = 32;
+        let spmm = self
+            .online
+            .as_ref()
+            .map(|o| o.current())
+            .unwrap_or(self.selector)
+            .decide(features, REF_N);
+        let sddmm = self
+            .online
+            .as_ref()
+            .map(|o| o.current_sddmm())
+            .unwrap_or(self.sddmm_selector)
+            .decide(features, WARP);
+        for (op, selector, n, decision) in [
+            (SparseOp::Spmm, "drift", REF_N, spmm),
+            (SparseOp::Sddmm, "drift-sddmm", WARP, sddmm),
+        ] {
+            self.metrics.audit().push(AuditEntry {
+                seq: 0,
+                op,
+                grain: "delta",
+                shard: None,
+                selector,
+                matrix: Some(h.0),
+                features: *features,
+                n,
+                thresholds: decision.thresholds,
+                rule: decision.rule,
+                kernel: decision.kernel,
+                explored: false,
+                realized_cost: None,
+            });
+        }
+    }
+
     /// Drop a handle's registration, releasing the engine's reference to
-    /// its prepared state (the prepared-matrix cache keeps its own
-    /// reference until LRU eviction, so a re-registration of the same
-    /// content can still hit). Returns whether the handle was registered.
-    /// Handles are never recycled; long-running serving deployments
-    /// should unregister handles they no longer route to, or the handle
-    /// map grows with every registration.
+    /// its prepared state *and* evicting the matching prepared-cache
+    /// entry — unregister means "this content is done", so the cache must
+    /// not keep billing its budget for state nothing routes to (a
+    /// re-registration of the same content is a deliberate miss). A
+    /// content-identical sibling handle keeps its own `Arc` and keeps
+    /// serving; only the shared cache entry is gone. Returns whether the
+    /// handle was registered. Handles are never recycled; long-running
+    /// serving deployments should unregister handles they no longer route
+    /// to, or the handle map grows with every registration.
     pub fn unregister(&self, h: MatrixHandle) -> bool {
-        self.matrices.lock().unwrap().remove(&h.0).is_some()
+        // bind before matching: drops the map guard before touching the
+        // cache, so the two locks are never held together
+        let removed = self.matrices.lock().unwrap().remove(&h.0);
+        match removed {
+            Some(reg) => {
+                if let Some(cache) = &self.cache {
+                    cache.remove(reg.batch_key);
+                }
+                true
+            }
+            None => false,
+        }
     }
 
     /// `(entries, resident bytes)` of the prepared-matrix cache, or
@@ -944,17 +1145,234 @@ mod tests {
     }
 
     #[test]
-    fn unregister_releases_the_handle_but_not_the_cache() {
+    fn unregister_evicts_the_prepared_cache_entry() {
         let engine = SpmmEngine::native().with_prepared_cache(64 << 20);
         let a = matrix(317);
+        let bytes = a.heap_bytes();
         let h = engine.register(a.clone()).unwrap();
+        assert_eq!(engine.cache_usage(), Some((1, bytes)));
         assert!(engine.unregister(h));
         assert!(!engine.unregister(h), "second unregister is a no-op");
         assert!(engine.spmm(h, &DenseMatrix::zeros(60, 1)).is_err());
-        // the cache still holds the prepared state: re-registering the
-        // same content is a hit under a fresh handle
+        // unregister means "this content is done": the cache entry is
+        // gone and its bytes stop counting against the budget
+        assert_eq!(engine.cache_usage(), Some((0, 0)));
+        // re-registering the same content is a deliberate miss
         let h2 = engine.register(a).unwrap();
         assert_ne!(h, h2);
-        assert_eq!(engine.metrics.cache_hits(), 1);
+        assert_eq!(engine.metrics.cache_hits(), 0);
+        assert_eq!(engine.metrics.cache_misses(), 2);
+        assert_eq!(engine.cache_usage(), Some((1, bytes)));
+    }
+
+    /// A batch of `extra` insertions at coordinates the matrix does not
+    /// populate — net growth, guaranteed structural.
+    fn growth_delta(a: &CsrMatrix, extra: usize) -> EdgeDelta {
+        let mut delta = EdgeDelta::new();
+        let mut added = 0;
+        'rows: for r in 0..a.rows {
+            let (cols, _) = a.row(r);
+            for c in 0..a.cols as u32 {
+                if cols.binary_search(&c).is_err() {
+                    delta.insert(r, c as usize, 1.0);
+                    added += 1;
+                    if added == extra {
+                        break 'rows;
+                    }
+                }
+            }
+        }
+        assert_eq!(added, extra, "matrix too dense for the requested growth");
+        delta
+    }
+
+    #[test]
+    fn apply_delta_patches_value_only_batches_in_place() {
+        let engine = SpmmEngine::native();
+        let a = matrix(501);
+        let h = engine.register(a.clone()).unwrap();
+        let r = (0..a.rows).find(|&r| a.row_nnz(r) > 0).unwrap();
+        let c = a.row(r).0[0] as usize;
+        let mut delta = EdgeDelta::new();
+        delta.insert(r, c, 9.5);
+        let out = engine.apply_delta(h, &delta).unwrap();
+        assert!(out.patched, "value-only batch patches the prepared state");
+        assert!(!out.report.structural);
+        assert_eq!(out.report.updated, 1);
+        assert_eq!((out.report.inserted, out.report.deleted), (0, 0));
+        assert_eq!(out.epoch, 1);
+        assert!(!out.drift && !out.reselected);
+        // the patched engine answers for the mutated content, bit-for-bit
+        // against a from-scratch registration
+        let mut m = a;
+        delta.apply(&mut m);
+        let fresh = SpmmEngine::native();
+        let hf = fresh.register(m).unwrap();
+        let mut rng = Xoshiro256::seeded(511);
+        let x = DenseMatrix::random(60, 8, 1.0, &mut rng);
+        for kind in KernelKind::ALL {
+            assert_eq!(
+                engine.spmm_with(h, &x, kind).unwrap().y.data,
+                fresh.spmm_with(hf, &x, kind).unwrap().y.data,
+                "{kind:?}"
+            );
+        }
+        // the delta trace landed in the flight recorder
+        let traces = engine.metrics.recorder().traces();
+        let t = traces.iter().find(|t| t.label == "delta#0").unwrap();
+        let span = t.span("delta").unwrap();
+        assert_eq!(span.attr("patched"), Some("true"));
+        assert_eq!(span.attr("updated"), Some("1"));
+    }
+
+    #[test]
+    fn apply_delta_re_prepares_on_structural_batches() {
+        let engine = SpmmEngine::native();
+        let a = matrix(505);
+        let h = engine.register(a.clone()).unwrap();
+        let mut delta = growth_delta(&a, 1);
+        let r = (0..a.rows).find(|&r| a.row_nnz(r) > 0).unwrap();
+        delta.delete(r, a.row(r).0[0] as usize);
+        let out = engine.apply_delta(h, &delta).unwrap();
+        assert!(!out.patched, "structural batch falls back to full prepare");
+        assert!(out.report.structural);
+        assert_eq!((out.report.inserted, out.report.deleted), (1, 1));
+        assert_eq!(out.epoch, 1);
+        let mut m = a;
+        delta.apply(&mut m);
+        assert_eq!(engine.features(h).unwrap().nnz, m.nnz(), "features refreshed");
+        let fresh = SpmmEngine::native();
+        let hf = fresh.register(m).unwrap();
+        let mut rng = Xoshiro256::seeded(512);
+        let x = DenseMatrix::random(60, 4, 1.0, &mut rng);
+        for kind in KernelKind::ALL {
+            assert_eq!(
+                engine.spmm_with(h, &x, kind).unwrap().y.data,
+                fresh.spmm_with(hf, &x, kind).unwrap().y.data,
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn absent_only_deltas_leave_the_registration_alone() {
+        let engine = SpmmEngine::native().with_prepared_cache(64 << 20);
+        let a = matrix(506);
+        let h = engine.register(a.clone()).unwrap();
+        let key = engine.batch_key(h).unwrap();
+        let r0 = (0..a.rows).find(|&r| a.row_nnz(r) < a.cols).unwrap();
+        let c0 = (0..a.cols as u32)
+            .find(|c| a.row(r0).0.binary_search(c).is_err())
+            .unwrap();
+        let mut delta = EdgeDelta::new();
+        delta.delete(r0, c0 as usize);
+        let out = engine.apply_delta(h, &delta).unwrap();
+        assert_eq!(out.report.touched(), 0);
+        assert_eq!(out.epoch, 0, "no-op batches do not bump the epoch");
+        assert!(out.patched && !out.drift && !out.reselected);
+        assert_eq!(engine.batch_key(h).unwrap(), key, "cache key unchanged");
+        assert_eq!(engine.cache_usage().unwrap().0, 1);
+    }
+
+    #[test]
+    fn apply_delta_rotates_the_cache_key_and_evicts_the_stale_entry() {
+        let engine = SpmmEngine::native().with_prepared_cache(64 << 20);
+        let a = matrix(502);
+        let h = engine.register(a.clone()).unwrap();
+        let key0 = engine.batch_key(h).unwrap();
+        let r = (0..a.rows).find(|&r| a.row_nnz(r) > 0).unwrap();
+        let mut delta = EdgeDelta::new();
+        delta.insert(r, a.row(r).0[0] as usize, -3.0);
+        engine.apply_delta(h, &delta).unwrap();
+        let key1 = engine.batch_key(h).unwrap();
+        assert_ne!(key0, key1, "batch key follows the (content, epoch) fingerprint");
+        assert_eq!(
+            engine.cache_usage().unwrap().0,
+            1,
+            "stale entry evicted, fresh one resident"
+        );
+        // the pre-mutation content no longer hits...
+        engine.register(a.clone()).unwrap();
+        assert_eq!(engine.metrics.cache_hits(), 0);
+        assert_eq!(engine.metrics.cache_misses(), 2);
+        // ...and neither does an epoch-0 rebuild of the post-mutation
+        // content: the fingerprint is (content, epoch)-aware
+        let mut m = a;
+        delta.apply(&mut m);
+        assert_eq!(m.epoch, 1);
+        let rebuilt = CsrMatrix::from_parts(
+            m.rows,
+            m.cols,
+            m.indptr.clone(),
+            m.indices.clone(),
+            m.values.clone(),
+        );
+        engine.register(rebuilt).unwrap();
+        assert_eq!(engine.metrics.cache_hits(), 0);
+        assert_eq!(engine.metrics.cache_misses(), 3);
+    }
+
+    #[test]
+    fn drift_triggers_reselection_and_a_delta_grain_audit_trail() {
+        let engine = SpmmEngine::native();
+        let a = matrix(503);
+        let h = engine.register(a.clone()).unwrap();
+        let f0 = engine.features(h).unwrap();
+        let delta = growth_delta(&a, a.nnz() / 3 + 2); // nnz grows >25%
+        let out = engine.apply_delta(h, &delta).unwrap();
+        assert!(out.drift, "nnz moved past DRIFT_THRESHOLD");
+        assert!(out.reselected);
+        let f1 = engine.features(h).unwrap();
+        assert!(f1.nnz as f64 > f0.nnz as f64 * (1.0 + DRIFT_THRESHOLD));
+        let entries = engine.metrics.audit().for_matrix(0);
+        let delta_entries: Vec<_> = entries.iter().filter(|e| e.grain == "delta").collect();
+        assert_eq!(delta_entries.len(), 2, "one SpMM + one SDDMM reselection");
+        assert!(delta_entries
+            .iter()
+            .any(|e| e.selector == "drift" && e.op == SparseOp::Spmm));
+        assert!(delta_entries
+            .iter()
+            .any(|e| e.selector == "drift-sddmm" && e.op == SparseOp::Sddmm));
+        for e in &delta_entries {
+            assert_eq!(e.features.nnz, f1.nnz, "audited against post-batch features");
+            assert!(!e.explored);
+        }
+        let traces = engine.metrics.recorder().traces();
+        let t = traces.iter().find(|t| t.label == "delta#0").unwrap();
+        assert_eq!(t.span("delta").unwrap().attr("drift"), Some("true"));
+    }
+
+    #[test]
+    fn drift_resets_the_online_cost_buckets() {
+        let engine = SpmmEngine::serving_online(
+            16 << 20,
+            usize::MAX, // everything stays on the unsharded route
+            2,
+            AdaptiveSelector::default(),
+            OnlineConfig {
+                explore_every: 0,
+                refit_every: 0,
+                min_observations: 1,
+            },
+        );
+        let online = engine.online().unwrap();
+        let a = matrix(504);
+        let h = engine.register(a.clone()).unwrap();
+        let f0 = engine.features(h).unwrap();
+        let mut rng = Xoshiro256::seeded(513);
+        let x = DenseMatrix::random(60, 8, 1.0, &mut rng);
+        let resp = engine.spmm(h, &x).unwrap();
+        let bucket = crate::selector::online::feature_bucket(&f0, 8);
+        assert!(
+            engine.metrics.cost(bucket, resp.kernel).is_some(),
+            "direct execution seeded the cost table"
+        );
+        let out = engine.apply_delta(h, &growth_delta(&a, a.nnz() / 3 + 2)).unwrap();
+        assert!(out.drift && out.reselected);
+        assert!(
+            engine.metrics.cost(bucket, resp.kernel).is_none(),
+            "drift cleared the stale bucket"
+        );
+        assert_eq!(online.observations(), 1, "counters are history, not live state");
     }
 }

@@ -366,6 +366,22 @@ impl Metrics {
         self.cost_obs[bucket][kidx(kernel)].load(Ordering::Relaxed)
     }
 
+    /// Forget every kernel's EWMA and observation count for one feature
+    /// bucket. Feature-drift handling calls this when a mutating matrix
+    /// migrates across buckets: evidence gathered on the pre-drift shape
+    /// would otherwise keep steering choices for content that no longer
+    /// exists (the cold cells re-seed from the next observations). A
+    /// racing `observe_cost` may land between the two stores; the cell
+    /// then re-seeds from that observation, which is the desired
+    /// post-reset behavior anyway.
+    pub fn reset_cost_bucket(&self, bucket: usize) {
+        assert!(bucket < COST_BUCKETS, "bucket {bucket} out of range");
+        for k in 0..4 {
+            self.cost_obs[bucket][k].store(0, Ordering::Relaxed);
+            self.cost_ewma[bucket][k].store(0, Ordering::Relaxed);
+        }
+    }
+
     /// Total cost observations across all cells.
     pub fn total_cost_observations(&self) -> u64 {
         self.cost_obs
@@ -619,6 +635,24 @@ mod tests {
         m.observe_cost(1, KernelKind::PrRs, -1.0);
         assert_eq!(m.cost(1, KernelKind::PrRs), None);
         assert_eq!(m.total_cost_observations(), 2);
+    }
+
+    #[test]
+    fn reset_cost_bucket_clears_one_bucket_only() {
+        let m = Metrics::default();
+        m.observe_cost(2, KernelKind::SrRs, 1.0);
+        m.observe_cost(2, KernelKind::PrWb, 3.0);
+        m.observe_cost(5, KernelKind::SrRs, 7.0);
+        m.reset_cost_bucket(2);
+        assert_eq!(m.cost(2, KernelKind::SrRs), None);
+        assert_eq!(m.cost(2, KernelKind::PrWb), None);
+        assert_eq!(m.cost_observations(2, KernelKind::SrRs), 0);
+        // other buckets keep their evidence
+        assert_eq!(m.cost(5, KernelKind::SrRs), Some(7.0));
+        assert_eq!(m.total_cost_observations(), 1);
+        // the cleared cell re-seeds from the next observation
+        m.observe_cost(2, KernelKind::SrRs, 4.0);
+        assert_eq!(m.cost(2, KernelKind::SrRs), Some(4.0));
     }
 
     #[test]

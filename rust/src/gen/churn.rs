@@ -1,0 +1,191 @@
+//! R-MAT edge-churn stream: the dynamic-graph workload generator.
+//!
+//! Dynamic GNN serving mutates its graphs between requests — edges
+//! appear, expire, and re-weight while inference traffic keeps flowing.
+//! [`ChurnStream`] models that: it seeds a base matrix from an
+//! [`RmatConfig`] and then yields an endless sequence of [`EdgeDelta`]
+//! batches. Inserts are drawn from the *same* R-MAT quadrant descent as
+//! the base (churn preserves the degree skew instead of flattening it);
+//! deletes and value updates are sampled uniformly from the edges
+//! currently present. The stream applies every batch to its own copy of
+//! the matrix, so [`ChurnStream::current`] is always the post-batch
+//! ground truth a differential harness (`tests/delta_agreement.rs`) can
+//! re-register from scratch and compare against a patched engine.
+
+use super::rmat::RmatConfig;
+use crate::sparse::{CsrMatrix, EdgeDelta};
+use crate::util::prng::Xoshiro256;
+
+/// Shape of one churn batch.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnConfig {
+    /// Base-matrix generator; inserts reuse its quadrant descent.
+    pub base: RmatConfig,
+    /// New edges sampled per batch. Sampling a coordinate that already
+    /// exists turns that insert into a value update — under heavy skew a
+    /// hub edge is re-sampled often, exactly like repeated interactions
+    /// on a social graph.
+    pub inserts: usize,
+    /// Existing edges deleted per batch (uniform over present edges).
+    pub deletes: usize,
+    /// Existing edges re-valued per batch (uniform over present edges).
+    pub updates: usize,
+}
+
+impl ChurnConfig {
+    /// Mixed-churn default: a few structural edges in and out plus twice
+    /// as many weight updates per batch.
+    pub fn new(base: RmatConfig) -> Self {
+        Self {
+            base,
+            inserts: 8,
+            deletes: 8,
+            updates: 16,
+        }
+    }
+
+    /// Value-only variant: weight updates without structural churn, the
+    /// regime `SpmmBackend::prepare_delta` patches in place.
+    pub fn value_only(mut self) -> Self {
+        self.inserts = 0;
+        self.deletes = 0;
+        self
+    }
+}
+
+/// Deterministic stream of churn batches over one evolving matrix.
+pub struct ChurnStream {
+    config: ChurnConfig,
+    rng: Xoshiro256,
+    current: CsrMatrix,
+    batches: u64,
+}
+
+impl ChurnStream {
+    /// Generate the base matrix and start the stream. Everything after
+    /// is a pure function of `(config, seed)`.
+    pub fn new(config: ChurnConfig, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seeded(seed);
+        let current = CsrMatrix::from_coo(&config.base.generate(&mut rng));
+        Self {
+            config,
+            rng,
+            current,
+            batches: 0,
+        }
+    }
+
+    /// Ground truth after every batch produced so far. Its `epoch`
+    /// counts the effective (touching) batches, so an engine that
+    /// registered a pre-stream clone and replayed every batch holds a
+    /// fingerprint-identical matrix.
+    pub fn current(&self) -> &CsrMatrix {
+        &self.current
+    }
+
+    /// Batches produced so far (effective or not).
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// One existing edge, uniform over the present non-zeros: a stream
+    /// position in `[0, nnz)`, its row recovered from `indptr`.
+    fn existing_edge(&mut self) -> (usize, usize) {
+        let nnz = self.current.nnz();
+        debug_assert!(nnz > 0);
+        let p = (self.rng.next_u64() % nnz as u64) as usize;
+        let r = self.current.indptr.partition_point(|&e| e as usize <= p) - 1;
+        (r, self.current.indices[p] as usize)
+    }
+
+    /// Produce the next batch and fold it into the stream's own matrix.
+    /// Samples refer to the *pre-batch* state; [`EdgeDelta::apply`]'s
+    /// delete-before-insert composition resolves collisions (a deleted
+    /// edge re-sampled by an update comes back with the new weight).
+    pub fn next_batch(&mut self) -> EdgeDelta {
+        let mut delta = EdgeDelta::new();
+        let present = self.current.nnz();
+        for _ in 0..self.config.deletes.min(present) {
+            let (r, c) = self.existing_edge();
+            delta.delete(r, c);
+        }
+        for _ in 0..self.config.updates.min(present) {
+            let (r, c) = self.existing_edge();
+            let v = self.rng.next_f32() * 2.0 - 1.0;
+            delta.insert(r, c, v);
+        }
+        for _ in 0..self.config.inserts {
+            let (r, c) = self.config.base.sample_edge(&mut self.rng);
+            let v = self.rng.next_f32() * 2.0 - 1.0;
+            delta.insert(r, c, v);
+        }
+        delta.apply(&mut self.current);
+        self.batches += 1;
+        delta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(seed: u64) -> ChurnStream {
+        ChurnStream::new(ChurnConfig::new(RmatConfig::new(6, 4.0)), seed)
+    }
+
+    #[test]
+    fn stream_is_deterministic() {
+        let mut a = stream(9);
+        let mut b = stream(9);
+        assert_eq!(a.current(), b.current());
+        for _ in 0..5 {
+            a.next_batch();
+            b.next_batch();
+            assert_eq!(a.current(), b.current());
+        }
+        assert_eq!(a.batches(), 5);
+        assert_ne!(a.current(), stream(9).current(), "batches moved the matrix");
+    }
+
+    #[test]
+    fn current_tracks_the_replayed_batches() {
+        let mut s = stream(10);
+        let mut replay = s.current().clone();
+        for _ in 0..8 {
+            let delta = s.next_batch();
+            delta.apply(&mut replay);
+            assert_eq!(&replay, s.current(), "stream state == replayed state");
+        }
+        assert_eq!(replay.epoch, s.current().epoch);
+        assert!(replay.epoch > 0, "churn batches touch the matrix");
+    }
+
+    #[test]
+    fn batches_stay_inside_the_base_dimensions() {
+        let mut s = stream(11);
+        let dim = s.current().rows;
+        for _ in 0..10 {
+            s.next_batch();
+            let m = s.current();
+            assert_eq!(m.rows, dim);
+            assert_eq!(m.cols, dim);
+            assert!(m.indices.iter().all(|&c| (c as usize) < dim));
+        }
+    }
+
+    #[test]
+    fn value_only_streams_never_churn_structure() {
+        let config = ChurnConfig::new(RmatConfig::uniform(6, 4.0)).value_only();
+        let mut s = ChurnStream::new(config, 12);
+        let indptr = s.current().indptr.clone();
+        let indices = s.current().indices.clone();
+        for _ in 0..6 {
+            let delta = s.next_batch();
+            let mut probe = s.current().clone();
+            let report = delta.apply(&mut probe);
+            assert!(!report.structural, "updates only");
+        }
+        assert_eq!(s.current().indptr, indptr, "structure untouched");
+        assert_eq!(s.current().indices, indices);
+    }
+}

@@ -9,8 +9,10 @@
 
 pub mod banded;
 pub mod blockdiag;
+pub mod churn;
 pub mod collection;
 pub mod powerlaw;
 pub mod rmat;
 
+pub use churn::{ChurnConfig, ChurnStream};
 pub use collection::{Collection, MatrixSpec};

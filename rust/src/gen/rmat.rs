@@ -78,6 +78,14 @@ impl RmatConfig {
         coo
     }
 
+    /// Sample one edge coordinate by the quadrant descent — the same
+    /// distribution [`generate`](RmatConfig::generate) draws from, exposed
+    /// so an edge-churn stream ([`super::churn`]) can insert new edges
+    /// that preserve the base matrix's degree skew.
+    pub fn sample_edge(&self, rng: &mut Xoshiro256) -> (usize, usize) {
+        self.one_edge(rng)
+    }
+
     fn one_edge(&self, rng: &mut Xoshiro256) -> (usize, usize) {
         let (mut a, mut b, mut c) = (self.a, self.b, self.c);
         let mut r = 0usize;

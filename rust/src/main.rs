@@ -9,6 +9,11 @@
 //!   sddmm       run one SDDMM (S = sample(A, U·Vᵀ)) through the coordinator
 //!               with the second-op adaptive rules (native backend;
 //!               --shards N for per-shard selection)
+//!   churn       replay an R-MAT edge-churn stream through the dynamic
+//!               delta path (`apply_delta`: in-place patch or re-prepare,
+//!               drift-triggered reselection), verifying every batch
+//!               against the serial reference (--shards N for the
+//!               sharded path)
 //!   serve       drive a synthetic workload through the concurrent serving
 //!               layer (worker threads + prepared-matrix cache + size
 //!               routing) and report throughput and metrics; `--stats-every`
@@ -66,6 +71,7 @@ fn run(sub: Option<&str>, rest: Vec<String>) -> Result<()> {
         Some("select") => cmd_select(rest),
         Some("spmm") => cmd_spmm(rest),
         Some("sddmm") => cmd_sddmm(rest),
+        Some("churn") => cmd_churn(rest),
         Some("serve") => cmd_serve(rest),
         Some("stats") => cmd_stats(rest),
         Some("simulate") => cmd_simulate(rest),
@@ -73,11 +79,11 @@ fn run(sub: Option<&str>, rest: Vec<String>) -> Result<()> {
         Some("perfgate") => cmd_perfgate(rest),
         Some("train-gcn") => cmd_train_gcn(rest),
         Some("suite") => cmd_suite(rest),
-        Some(other) => bail!("unknown subcommand '{other}' (try: info, features, select, spmm, sddmm, serve, stats, simulate, calibrate, perfgate, train-gcn, suite)"),
+        Some(other) => bail!("unknown subcommand '{other}' (try: info, features, select, spmm, sddmm, churn, serve, stats, simulate, calibrate, perfgate, train-gcn, suite)"),
         None => {
             println!(
                 "ge-spmm {} — adaptive workload-balanced/parallel-reduction sparse kernels\n\
-                 subcommands: info, features, select, spmm, sddmm, serve, stats, simulate, calibrate, perfgate, train-gcn, suite\n\
+                 subcommands: info, features, select, spmm, sddmm, churn, serve, stats, simulate, calibrate, perfgate, train-gcn, suite\n\
                  use `ge-spmm <subcommand> --help` for options",
                 ge_spmm::version()
             );
@@ -275,6 +281,105 @@ fn cmd_sddmm(rest: Vec<String>) -> Result<()> {
         max_err == 0.0,
         "SDDMM output diverged from the dense reference (max |err| = {max_err:.2e})"
     );
+    println!("{}", engine.metrics.summary());
+    Ok(())
+}
+
+fn cmd_churn(rest: Vec<String>) -> Result<()> {
+    use ge_spmm::gen::rmat::RmatConfig;
+    use ge_spmm::gen::{ChurnConfig, ChurnStream};
+    use ge_spmm::kernels::dense::spmm_reference;
+
+    let cmd = Command::new(
+        "churn",
+        "replay an R-MAT edge-churn stream through the dynamic delta path, \
+         verifying every batch against the serial reference",
+    )
+    .opt("batches", "churn batches to replay", Some("32"))
+    .opt("scale", "log2 dimension of the R-MAT base matrix", Some("8"))
+    .opt("edge-factor", "average nnz per row of the base", Some("8"))
+    .opt("inserts", "new edges per batch (R-MAT-skewed)", Some("8"))
+    .opt("deletes", "edge removals per batch (uniform over present)", Some("8"))
+    .opt("updates", "weight updates per batch (uniform over present)", Some("16"))
+    .opt(
+        "shards",
+        "nnz-balanced row shards (1 = unsharded native + prepared cache)",
+        Some("1"),
+    )
+    .opt("n", "dense width of the per-batch SpMM check", Some("8"))
+    .opt("seed", "stream + operand seed", Some("42"));
+    let args = cmd.parse(&rest)?;
+    let batches = args.parse_positive("batches", 32);
+    let shards = args.parse_positive("shards", 1);
+    let n = args.parse_positive("n", 8);
+    let seed: u64 = args.parse_or("seed", 42);
+
+    let config = ChurnConfig {
+        base: RmatConfig::new(args.parse_or("scale", 8), args.parse_or("edge-factor", 8.0)),
+        inserts: args.parse_or("inserts", 8),
+        deletes: args.parse_or("deletes", 8),
+        updates: args.parse_or("updates", 16),
+    };
+    let mut stream = ChurnStream::new(config, seed);
+    let engine = if shards > 1 {
+        SpmmEngine::sharded(shards)
+    } else {
+        SpmmEngine::native().with_prepared_cache(64 << 20)
+    };
+    let h = engine.register(stream.current().clone())?;
+    println!(
+        "base: {}x{}, nnz {}  engine: {}{}",
+        stream.current().rows,
+        stream.current().cols,
+        stream.current().nnz(),
+        engine.backend_name(),
+        if shards > 1 { "" } else { " + prepared cache" }
+    );
+
+    let mut rng = Xoshiro256::seeded(seed ^ 0x5bd1e995);
+    let (mut patched, mut reprepared, mut drifts) = (0usize, 0usize, 0usize);
+    for b in 0..batches {
+        let delta = stream.next_batch();
+        let out = engine.apply_delta(h, &delta)?;
+        if out.report.touched() > 0 {
+            if out.patched {
+                patched += 1;
+            } else {
+                reprepared += 1;
+            }
+        }
+        if out.drift {
+            drifts += 1;
+        }
+        // verify the patched engine against a from-scratch reference on
+        // the stream's ground-truth matrix
+        let truth = stream.current();
+        let x = DenseMatrix::random(truth.cols, n, 1.0, &mut rng);
+        let y = engine.spmm(h, &x)?.y;
+        let mut want = DenseMatrix::zeros(truth.rows, n);
+        spmm_reference(truth, &x, &mut want);
+        let bound = want.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let max_err = y
+            .data
+            .iter()
+            .zip(&want.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        anyhow::ensure!(
+            max_err <= 1e-4 * (1.0 + bound),
+            "batch {b}: patched SpMM diverged from the rebuilt reference \
+             (max |err| = {max_err:.2e})"
+        );
+    }
+    println!(
+        "replayed {batches} batches: {patched} patched in place, {reprepared} \
+         re-prepared, {drifts} drift-triggered reselections; final nnz {}, epoch {}",
+        stream.current().nnz(),
+        stream.current().epoch
+    );
+    if let Some((entries, bytes)) = engine.cache_usage() {
+        println!("cache: {entries} prepared matrices resident, {bytes} bytes");
+    }
     println!("{}", engine.metrics.summary());
     Ok(())
 }

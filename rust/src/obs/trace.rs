@@ -33,7 +33,8 @@ pub struct SpanRecord {
     pub id: u64,
     /// Parent span id; 0 means a root span.
     pub parent: u64,
-    /// Span name (static taxonomy: `admission`, `batch`, `dispatch`, ...).
+    /// Span name (static taxonomy: `admission`, `batch`, `dispatch`,
+    /// `delta`, ...).
     pub name: &'static str,
     /// Start offset from the trace epoch, ns.
     pub start_ns: u64,

@@ -479,6 +479,50 @@ impl OnlineSelector {
         )
     }
 
+    /// Forget the learned cost state a drifted matrix would consult.
+    ///
+    /// A dynamic-graph delta that moves a matrix's features across a
+    /// bucket boundary leaves the EWMA cells it used to feed describing
+    /// a workload that no longer exists; blending pre- and post-drift
+    /// costs in one cell would poison the next refit. The engine calls
+    /// this from `apply_delta` when drift is detected: every SpMM bucket
+    /// the old or new features map to (both reduction families, so
+    /// small-N and large-N traffic both restart) and both ops' centroids
+    /// are zeroed, and the SDDMM buckets likewise. Thresholds already
+    /// refit from the old evidence are *kept* — they are still the best
+    /// known rule until fresh observations argue otherwise.
+    ///
+    /// Returns the number of distinct cost buckets reset (SpMM + SDDMM).
+    pub fn reset_for_drift(&self, old: &MatrixFeatures, new: &MatrixFeatures) -> usize {
+        let mut buckets: Vec<usize> = Vec::new();
+        for f in [old, new] {
+            for n in [1usize, 32] {
+                buckets.push(feature_bucket(f, n));
+            }
+        }
+        buckets.sort_unstable();
+        buckets.dedup();
+        {
+            let mut cents = self.centroids.lock().unwrap();
+            for &b in &buckets {
+                self.metrics.reset_cost_bucket(b);
+                cents[b] = Centroid::default();
+            }
+        }
+        let mut sd = vec![sddmm_bucket(old), sddmm_bucket(new)];
+        sd.sort_unstable();
+        sd.dedup();
+        {
+            let mut costs = self.sddmm_costs.lock().unwrap();
+            let mut cents = self.sddmm_centroids.lock().unwrap();
+            for &b in &sd {
+                costs[b] = [SddmmCostCell::default(); 4];
+                cents[b] = Centroid::default();
+            }
+        }
+        buckets.len() + sd.len()
+    }
+
     /// Re-fit both thresholds against the EWMA table now. Each threshold
     /// moves only if its own reduction family has refit-ready buckets
     /// (at least two measured kernels) and a grid candidate strictly
@@ -838,6 +882,62 @@ mod tests {
         assert!(entry.realized_cost.unwrap() > 0.0);
         // replaying the recorded thresholds reproduces the decision
         assert_eq!(entry.threshold("t_cv"), Some(AdaptiveSelector::default().t_cv));
+    }
+
+    #[test]
+    fn reset_for_drift_clears_the_matrix_buckets_but_keeps_thresholds() {
+        let sel = selector(OnlineConfig {
+            explore_every: 0,
+            refit_every: 0,
+            min_observations: 2,
+        });
+        // learn a non-default SpMM threshold from skewed evidence first
+        let f_old = features(16.0, 1.2, 16000);
+        for _ in 0..8 {
+            sel.observe(&f_old, 32, KernelKind::SrRs, Duration::from_micros(500));
+            sel.observe(&f_old, 32, KernelKind::SrWb, Duration::from_micros(100));
+        }
+        assert!(sel.refit());
+        let refined = sel.current();
+        assert_ne!(refined, AdaptiveSelector::default());
+        // SDDMM evidence in the old bucket too
+        for _ in 0..4 {
+            sel.observe_sddmm(&f_old, 8, KernelKind::SrRs, Duration::from_micros(500));
+        }
+        // unrelated bucket: different avg bin, must survive the reset
+        let f_other = features(2.0, 0.2, 2000);
+        sel.observe(&f_other, 32, KernelKind::PrRs, Duration::from_micros(200));
+        let b_old = feature_bucket(&f_old, 32);
+        let b_other = feature_bucket(&f_other, 32);
+        assert_ne!(b_old, b_other);
+        let metrics = sel.metrics();
+        assert!(metrics.cost(b_old, KernelKind::SrRs).is_some());
+        assert!(metrics.cost(b_other, KernelKind::PrRs).is_some());
+
+        // drift: avg_row bin moves (16 -> 64)
+        let f_new = features(64.0, 1.2, 64000);
+        let cleared = sel.reset_for_drift(&f_old, &f_new);
+        assert!(cleared >= 3, "old+new spmm buckets plus sddmm: {cleared}");
+        for n in [1usize, 32] {
+            for f in [&f_old, &f_new] {
+                let b = feature_bucket(f, n);
+                for k in KernelKind::ALL {
+                    assert!(metrics.cost(b, k).is_none(), "bucket {b} kernel {k:?}");
+                    assert_eq!(metrics.cost_observations(b, k), 0);
+                }
+            }
+        }
+        assert!(metrics.cost(b_other, KernelKind::PrRs).is_some(), "bystander kept");
+        let costs = sel.sddmm_costs.lock().unwrap();
+        for cell in &costs[sddmm_bucket(&f_old)] {
+            assert_eq!(cell.obs, 0, "sddmm cells cleared");
+        }
+        drop(costs);
+        // thresholds survive: still the best known rule until re-learned
+        assert_eq!(sel.current(), refined);
+        // ...and the cleared bucket accepts fresh evidence
+        sel.observe(&f_new, 32, KernelKind::SrWb, Duration::from_micros(80));
+        assert!(metrics.cost(feature_bucket(&f_new, 32), KernelKind::SrWb).is_some());
     }
 
     #[test]

@@ -225,6 +225,58 @@ impl SpmmBackend for ShardedBackend {
         ))
     }
 
+    fn prepare_delta(
+        &self,
+        prev: &PreparedOperand,
+        csr: &CsrMatrix,
+        structural: bool,
+    ) -> Option<Result<PreparedOperand>> {
+        // Structural batches re-partition from scratch: moved non-zeros
+        // shift the nnz-balanced cuts (`RowPartition::recut_degraded`
+        // bounds that work at the partition level, but the prepared
+        // operands of moved spans must be rebuilt regardless).
+        if structural {
+            return None;
+        }
+        let prep: &ShardedPrepared = match prev.state() {
+            Ok(p) => p,
+            Err(e) => return Some(Err(e)),
+        };
+        if prev.rows() != csr.rows || prev.cols() != csr.cols || prev.nnz() != csr.nnz() {
+            return Some(Err(anyhow::anyhow!(
+                "value-only delta changed the matrix shape: prepared {}x{} nnz {}, got {}x{} nnz {}",
+                prev.rows(),
+                prev.cols(),
+                prev.nnz(),
+                csr.rows,
+                csr.cols,
+                csr.nnz()
+            )));
+        }
+        // Value-only: the partition depends only on the (unchanged) row
+        // lengths, so every span, every shard feature and every segment
+        // cut carries over — each shard just patches its value stream
+        // through the inner backend.
+        let mut shards = Vec::with_capacity(prep.shards.len());
+        for shard in &prep.shards {
+            let sub = csr.row_slice(shard.features.span.rows.clone());
+            let operand = match self.inner.prepare_delta(&shard.operand, &sub, false)? {
+                Ok(op) => op,
+                Err(e) => return Some(Err(e)),
+            };
+            shards.push(PreparedShard {
+                features: shard.features.clone(),
+                operand,
+            });
+        }
+        Some(Ok(PreparedOperand::new(
+            csr.rows,
+            csr.cols,
+            csr.nnz(),
+            Box::new(ShardedPrepared { shards }),
+        )))
+    }
+
     fn execute(
         &self,
         operand: &PreparedOperand,
@@ -665,6 +717,51 @@ mod tests {
             .execute(&op, &DenseMatrix::zeros(4, 0), KernelKind::SrWb)
             .unwrap();
         assert_eq!((exec.y.rows, exec.y.cols), (3, 0));
+    }
+
+    #[test]
+    fn value_only_prepare_delta_keeps_cuts_and_matches_full_prepare() {
+        use crate::sparse::EdgeDelta;
+        let mut rng = Xoshiro256::seeded(411);
+        let mut csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(120, 90, 0.08, &mut rng));
+        let backend = ShardedBackend::new(3);
+        let prev = backend.prepare(&csr).unwrap();
+
+        // rewrite every edge's value (pattern untouched)
+        let mut delta = EdgeDelta::new();
+        for r in 0..csr.rows {
+            let (cols, vals) = csr.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                delta.insert(r, *c as usize, v * 0.5 + 1.0);
+            }
+        }
+        let rep = delta.apply(&mut csr);
+        assert!(!rep.structural);
+        let patched = backend.prepare_delta(&prev, &csr, false).unwrap().unwrap();
+        let fresh = backend.prepare(&csr).unwrap();
+        let x = DenseMatrix::random(90, 6, 1.0, &mut rng);
+        let u = DenseMatrix::random(120, 8, 1.0, &mut rng);
+        let v = DenseMatrix::random(90, 8, 1.0, &mut rng);
+        for kind in KernelKind::ALL {
+            let a = backend.execute(&patched, &x, kind).unwrap();
+            let b = backend.execute(&fresh, &x, kind).unwrap();
+            assert_eq!(a.y.data, b.y.data, "{kind:?}");
+            assert_eq!(a.artifact, b.artifact, "same cuts, same labels");
+            let sa = backend.execute_sddmm(&patched, &u, &v, kind).unwrap();
+            let sb = backend.execute_sddmm(&fresh, &u, &v, kind).unwrap();
+            assert_eq!(sa.values, sb.values, "{kind:?}");
+        }
+
+        // structural batches decline: cuts may move
+        let mut grow = EdgeDelta::new();
+        let r0 = (0..csr.rows).find(|&r| csr.row_nnz(r) < csr.cols).unwrap();
+        let c0 = (0..csr.cols as u32)
+            .find(|c| csr.row(r0).0.binary_search(c).is_err())
+            .unwrap();
+        grow.insert(r0, c0 as usize, 9.0);
+        let rep = grow.apply(&mut csr);
+        assert!(rep.structural);
+        assert!(backend.prepare_delta(&patched, &csr, true).is_none());
     }
 
     #[test]

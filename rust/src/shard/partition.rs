@@ -156,6 +156,88 @@ impl RowPartition {
         self.max_shard_nnz() as f64 * self.len() as f64 / self.total_nnz as f64
     }
 
+    /// Re-measure this partition against (possibly delta-mutated) matrix
+    /// content and re-cut only the degraded neighborhoods.
+    ///
+    /// Each span's nnz is re-read from the mutated `indptr`. A shard is
+    /// **degraded** when its share exceeds `cfg.max_imbalance` times the
+    /// ideal `nnz/K`. Degraded runs are widened by one donor shard on
+    /// each side (an overloaded shard can only shed rows across its
+    /// boundaries) and each window is re-split locally with the same
+    /// shard count; every cut outside the windows is kept verbatim, so
+    /// prepared per-shard state for balanced regions stays addressable
+    /// by span. Cost is O(K) measurement plus O(window nnz) re-cutting —
+    /// a churn stream that degrades one shard of a large partition pays
+    /// for three shards, not the whole matrix.
+    ///
+    /// The matrix must keep the row count the partition was built for
+    /// (deltas mutate edges, not dimensions).
+    pub fn recut_degraded(&self, csr: &CsrMatrix, cfg: &PartitionConfig) -> RowPartition {
+        assert_eq!(
+            self.spans.last().map(|s| s.rows.end).unwrap_or(0),
+            csr.rows,
+            "partition row coverage must match the matrix"
+        );
+        let k = self.spans.len();
+        let total = csr.nnz();
+        let measured: Vec<ShardSpan> = self
+            .spans
+            .iter()
+            .map(|s| ShardSpan {
+                rows: s.rows.clone(),
+                nnz: (csr.indptr[s.rows.end] - csr.indptr[s.rows.start]) as usize,
+            })
+            .collect();
+        let bound = cfg.max_imbalance.max(1.0);
+        let degraded: Vec<bool> = measured
+            .iter()
+            .map(|s| total > 0 && s.nnz as f64 * k as f64 / total as f64 > bound)
+            .collect();
+        if k == 1 || !degraded.iter().any(|&d| d) {
+            return RowPartition {
+                spans: measured,
+                total_nnz: total,
+            };
+        }
+        let mut window = vec![false; k];
+        for i in 0..k {
+            if degraded[i] {
+                window[i] = true;
+                if i > 0 {
+                    window[i - 1] = true;
+                }
+                if i + 1 < k {
+                    window[i + 1] = true;
+                }
+            }
+        }
+        let mut spans = Vec::with_capacity(k);
+        let mut i = 0;
+        while i < k {
+            if !window[i] {
+                spans.push(measured[i].clone());
+                i += 1;
+                continue;
+            }
+            let start = i;
+            while i < k && window[i] {
+                i += 1;
+            }
+            let rows = measured[start].rows.start..measured[i - 1].rows.end;
+            let local = Self::split(&csr.row_slice(rows.clone()), i - start);
+            for s in local.spans() {
+                spans.push(ShardSpan {
+                    rows: rows.start + s.rows.start..rows.start + s.rows.end,
+                    nnz: s.nnz,
+                });
+            }
+        }
+        RowPartition {
+            spans,
+            total_nnz: total,
+        }
+    }
+
     /// One-line log summary.
     pub fn summary(&self) -> String {
         let nnzs: Vec<String> = self.spans.iter().map(|s| s.nnz.to_string()).collect();
@@ -269,6 +351,86 @@ mod tests {
         assert!(p.len() < 8, "k should shrink, got {}", p.len());
         assert!(p.imbalance() <= 2.0, "imbalance {}", p.imbalance());
         assert_covers(&p, &csr).unwrap();
+    }
+
+    #[test]
+    fn recut_degraded_moves_only_the_overloaded_neighborhood() {
+        // 16 uniform rows (4 nnz each): K=4 cuts every 4 rows.
+        let uniform = {
+            let mut coo = CooMatrix::new(16, 20);
+            for r in 0..16 {
+                for c in 0..4 {
+                    coo.push(r, c * 5, 1.0);
+                }
+            }
+            CsrMatrix::from_coo(&coo)
+        };
+        let cfg = PartitionConfig::new(4);
+        let p = RowPartition::balanced(&uniform, &cfg);
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.spans()[2].rows, 8..12);
+
+        // churn grows rows 8..12 to 16 nnz each: shard 2 now carries
+        // 64 of 112 nnz (local imbalance 2.29 > 2.0)
+        let mutated = {
+            let mut coo = CooMatrix::new(16, 20);
+            for r in 0..16 {
+                let nnz = if (8..12).contains(&r) { 16 } else { 4 };
+                for c in 0..nnz {
+                    coo.push(r, c, 1.0);
+                }
+            }
+            CsrMatrix::from_coo(&coo)
+        };
+        let recut = p.recut_degraded(&mutated, &cfg);
+        assert_eq!(recut.len(), 4);
+        assert_covers(&recut, &mutated).unwrap();
+        // the balanced shard far from the overload keeps its cut verbatim
+        assert_eq!(recut.spans()[0].rows, 0..4);
+        assert_eq!(recut.spans()[0].nnz, 16);
+        // the degraded neighborhood (shards 1..4) was re-split evenly
+        assert_eq!(recut.spans()[1].rows, 4..9);
+        assert_eq!(recut.spans()[2].rows, 9..11);
+        assert_eq!(recut.spans()[3].rows, 11..16);
+        assert!(recut.imbalance() <= cfg.max_imbalance, "{}", recut.summary());
+
+        // value-only mutation degrades nothing: cuts are kept verbatim,
+        // nnz re-measured (here: unchanged)
+        let same = p.recut_degraded(&uniform, &cfg);
+        assert_eq!(same.spans(), p.spans());
+    }
+
+    #[test]
+    fn recut_degraded_covers_any_same_row_content_property() {
+        run_prop("recut covers mutated content", 40, |g| {
+            let rows = g.dim() * 4;
+            let cols = g.dim() * 4;
+            let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(
+                rows,
+                cols,
+                g.f64_in(0.02, 0.3),
+                g.rng(),
+            ));
+            // arbitrary same-row-count mutation target (worst case: the
+            // content has nothing in common with what was partitioned)
+            let b = CsrMatrix::from_coo(&CooMatrix::random_uniform(
+                rows,
+                cols.max(1),
+                g.f64_in(0.02, 0.3),
+                g.rng(),
+            ));
+            let cfg = PartitionConfig {
+                shards: *g.choose(&[1usize, 2, 3, 5]),
+                max_imbalance: *g.choose(&[1.2f64, 2.0, 4.0]),
+            };
+            let p = RowPartition::balanced(&a, &cfg);
+            let recut = p.recut_degraded(&b, &cfg);
+            assert_covers(&recut, &b)?;
+            if recut.len() != p.len() {
+                return Err(format!("shard count moved {} -> {}", p.len(), recut.len()));
+            }
+            Ok(())
+        });
     }
 
     #[test]

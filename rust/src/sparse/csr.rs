@@ -11,6 +11,12 @@ pub struct CsrMatrix {
     pub indptr: Vec<u32>,
     pub indices: Vec<u32>,
     pub values: Vec<f32>,
+    /// Mutation epoch. Freshly built matrices start at 0; every applied
+    /// [`crate::sparse::delta::EdgeDelta`] batch bumps it. The epoch is
+    /// folded into [`CsrMatrix::fingerprint`], so a mutated matrix never
+    /// aliases its pre-mutation prepared state in the serving cache even
+    /// if a delta round-trips the content back to an earlier byte pattern.
+    pub epoch: u64,
 }
 
 impl CsrMatrix {
@@ -31,6 +37,7 @@ impl CsrMatrix {
             indptr,
             indices: c.col_idx,
             values: c.values,
+            epoch: 0,
         }
     }
 
@@ -58,6 +65,7 @@ impl CsrMatrix {
             indptr,
             indices,
             values,
+            epoch: 0,
         }
     }
 
@@ -66,14 +74,18 @@ impl CsrMatrix {
         self.values.len()
     }
 
-    /// 64-bit content fingerprint (FNV-1a over the dimensions, the CSR
-    /// layout arrays and the value bit patterns). Byte-identical matrices
-    /// always fingerprint equal, regardless of how they were built — the
-    /// cache key of the serving layer's prepared-matrix registry
-    /// (`coordinator::cache`). Distinct contents can collide in principle
-    /// (FNV-1a is a 64-bit non-cryptographic hash): vanishingly unlikely
-    /// for organic traffic, but do not key security decisions on it.
-    /// O(nnz), i.e. no more than one backend `prepare` pass.
+    /// 64-bit (content, epoch) fingerprint (FNV-1a over the dimensions,
+    /// the CSR layout arrays, the value bit patterns and the mutation
+    /// epoch). Byte-identical matrices at the same epoch always
+    /// fingerprint equal, regardless of how they were built — the cache
+    /// key of the serving layer's prepared-matrix registry
+    /// (`coordinator::cache`). A delta-mutated matrix (bumped epoch)
+    /// fingerprints differently from every earlier state of the same
+    /// handle, so stale prepared entries are invalidated rather than
+    /// served. Distinct contents can collide in principle (FNV-1a is a
+    /// 64-bit non-cryptographic hash): vanishingly unlikely for organic
+    /// traffic, but do not key security decisions on it. O(nnz), i.e. no
+    /// more than one backend `prepare` pass.
     pub fn fingerprint(&self) -> u64 {
         fn eat(h: u64, x: u64) -> u64 {
             (h ^ x).wrapping_mul(0x0000_0100_0000_01b3)
@@ -90,7 +102,15 @@ impl CsrMatrix {
         for &v in &self.values {
             h = eat(h, v.to_bits() as u64);
         }
-        h
+        eat(h, self.epoch)
+    }
+
+    /// Advance the mutation epoch (called by
+    /// [`crate::sparse::delta::EdgeDelta::apply`] after a batch lands).
+    /// Epoch-aware fingerprints keep the serving layer's cache honest
+    /// across in-place mutation.
+    pub fn bump_epoch(&mut self) {
+        self.epoch += 1;
     }
 
     /// Heap footprint of the CSR arrays in bytes. The serving layer's
@@ -142,6 +162,7 @@ impl CsrMatrix {
                 .collect(),
             indices: self.indices[lo..hi].to_vec(),
             values: self.values[lo..hi].to_vec(),
+            epoch: self.epoch,
         }
     }
 
@@ -158,6 +179,7 @@ impl CsrMatrix {
             indptr: self.indptr.clone(),
             indices: self.indices.clone(),
             values,
+            epoch: self.epoch,
         }
     }
 
@@ -190,6 +212,7 @@ impl CsrMatrix {
             indptr,
             indices,
             values,
+            epoch: self.epoch,
         }
     }
 
@@ -467,5 +490,39 @@ mod tests {
     fn heap_bytes_counts_the_three_arrays() {
         let m = small(); // indptr 4, indices 4, values 4
         assert_eq!(m.heap_bytes(), (4 + 4) * 4 + 4 * 4);
+    }
+
+    #[test]
+    fn epoch_moves_the_fingerprint_without_touching_content() {
+        let m = small();
+        let mut bumped = m.clone();
+        bumped.bump_epoch();
+        assert_eq!(bumped.epoch, 1);
+        // arrays are byte-identical, but the serving cache must not alias
+        // the mutated matrix with its pre-mutation prepared state
+        assert_eq!(bumped.indptr, m.indptr);
+        assert_eq!(bumped.indices, m.indices);
+        assert_eq!(bumped.values, m.values);
+        assert_ne!(m.fingerprint(), bumped.fingerprint());
+        // each further bump keeps moving it
+        let fp1 = bumped.fingerprint();
+        bumped.bump_epoch();
+        assert_ne!(fp1, bumped.fingerprint());
+    }
+
+    #[test]
+    fn epoch_propagates_through_derived_matrices() {
+        let mut m = small();
+        m.bump_epoch();
+        m.bump_epoch();
+        assert_eq!(m.row_slice(0..2).epoch, 2);
+        assert_eq!(m.with_values(vec![1.0; m.nnz()]).epoch, 2);
+        assert_eq!(m.transposed().epoch, 2);
+        // fresh constructions always start at 0
+        assert_eq!(small().epoch, 0);
+        assert_eq!(
+            CsrMatrix::from_parts(1, 1, vec![0, 1], vec![0], vec![1.0]).epoch,
+            0
+        );
     }
 }

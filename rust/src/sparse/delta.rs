@@ -1,0 +1,463 @@
+//! Edge-delta batches — dynamic-graph mutation of the sparse formats.
+//!
+//! Serving traffic rarely gets an immutable graph: edges arrive and
+//! disappear continuously, and the adaptive-selection rules of the
+//! source paper are only as good as the features they were computed
+//! from ("Heuristic Adaptability to Input Dynamics for SpMM on GPUs",
+//! Dai et al. — see PAPERS.md). [`EdgeDelta`] is the mutation unit: a
+//! batch of edge insertions and deletions applied atomically to a
+//! [`CsrMatrix`], classified as **value-only** (every insertion lands
+//! on an existing coordinate, every deletion is a no-op — the sparsity
+//! pattern is untouched and prepared layouts can be patched in place)
+//! or **structural** (the pattern changes — one O(nnz + batch)
+//! merge-rebuild pass, the batched generalization of shifting row
+//! slack). The distinction is what [`DeltaReport::structural`] carries
+//! upward: `backend::SpmmBackend::prepare_delta` patches prepared
+//! state for value-only batches and falls back to a full `prepare`
+//! for structural ones, and `coordinator::SpmmEngine::apply_delta`
+//! reports which path ran in a [`DeltaOutcome`].
+//!
+//! Batch semantics (the contract the differential replay harness in
+//! `tests/delta_agreement.rs` pins against a rebuild-from-COO oracle):
+//!
+//! - **Deletes apply first, then inserts.** A delete and an insert at
+//!   the same coordinate therefore compose to an update.
+//! - **Duplicate inserts are last-wins** per coordinate.
+//! - **Deleting an absent edge is a no-op**, not an error.
+//! - Inserted values are kept verbatim — an explicit `0.0` stays a
+//!   stored non-zero, matching `CooMatrix::canonicalize`.
+//!
+//! Every batch that changes anything bumps the matrix's mutation
+//! epoch, which [`CsrMatrix::fingerprint`] folds in so the serving
+//! cache can never alias a mutated matrix with stale prepared state.
+
+use super::csr::CsrMatrix;
+
+/// What one applied [`EdgeDelta`] batch did to the matrix content.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeltaReport {
+    /// Net new edges (insert at a previously absent coordinate).
+    pub inserted: usize,
+    /// Net removed edges (delete of a present coordinate with no
+    /// overriding insert in the same batch).
+    pub deleted: usize,
+    /// Value rewrites of surviving edges (insert onto a present
+    /// coordinate, including delete-then-insert in one batch).
+    pub updated: usize,
+    /// Whether the sparsity pattern changed (`inserted + deleted > 0`).
+    /// Value-only batches admit in-place patching of prepared layouts.
+    pub structural: bool,
+}
+
+impl DeltaReport {
+    /// Total edges the batch actually changed. Zero means the batch
+    /// was a no-op (empty, or only deletes of absent edges) and the
+    /// epoch was left alone.
+    pub fn touched(&self) -> usize {
+        self.inserted + self.deleted + self.updated
+    }
+}
+
+/// Outcome of routing one batch through the serving layer
+/// (`coordinator::SpmmEngine::apply_delta`): the content-level
+/// [`DeltaReport`] plus what the prepared state and the selectors did
+/// about it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeltaOutcome {
+    /// Content-level classification of the applied batch.
+    pub report: DeltaReport,
+    /// `true` — the backend patched the existing prepared state in
+    /// place (`prepare_delta`); `false` — it fell back to a full
+    /// re-prepare.
+    pub patched: bool,
+    /// Matrix mutation epoch after the batch.
+    pub epoch: u64,
+    /// Whether post-batch features drifted past the reselection
+    /// threshold relative to the features the current kernel choices
+    /// were made from.
+    pub drift: bool,
+    /// Whether drift re-ran the static selector decisions (visible as
+    /// `delta`-grain entries in the audit log) and reset the matching
+    /// online-selector cost buckets.
+    pub reselected: bool,
+}
+
+/// A batch of edge insertions and deletions against one sparse matrix.
+///
+/// Build with [`insert`](EdgeDelta::insert) / [`delete`](EdgeDelta::delete)
+/// in any order, then [`apply`](EdgeDelta::apply) to a [`CsrMatrix`].
+/// The batch itself is immutable under `apply` and can be replayed
+/// against multiple matrices (the differential harness applies each
+/// batch to both the patched engine and a from-scratch rebuild).
+#[derive(Clone, Debug, Default)]
+pub struct EdgeDelta {
+    ins: Vec<(u32, u32, f32)>,
+    dels: Vec<(u32, u32)>,
+}
+
+impl EdgeDelta {
+    /// Empty batch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queue `a[r, c] = v` (inserts the edge, or rewrites its value if
+    /// it already exists; last queued wins per coordinate).
+    pub fn insert(&mut self, r: usize, c: usize, v: f32) -> &mut Self {
+        self.ins.push((r as u32, c as u32, v));
+        self
+    }
+
+    /// Queue removal of `a[r, c]` (no-op at apply time if absent).
+    pub fn delete(&mut self, r: usize, c: usize) -> &mut Self {
+        self.dels.push((r as u32, c as u32));
+        self
+    }
+
+    /// Queued operation count (before per-coordinate normalization).
+    pub fn len(&self) -> usize {
+        self.ins.len() + self.dels.len()
+    }
+
+    /// `true` if no operations are queued.
+    pub fn is_empty(&self) -> bool {
+        self.ins.is_empty() && self.dels.is_empty()
+    }
+
+    /// Apply the batch to `csr` and report what changed. Bumps the
+    /// matrix epoch iff the batch touched at least one edge. Panics on
+    /// out-of-bounds coordinates (mutations must target the matrix's
+    /// existing shape — growing the dimensions is a re-registration,
+    /// not a delta).
+    ///
+    /// Value-only batches patch `csr.values` in place in
+    /// O(batch · log max_row); structural batches run one
+    /// O(nnz + batch) merge-rebuild of the three CSR arrays.
+    pub fn apply(&self, csr: &mut CsrMatrix) -> DeltaReport {
+        let (ins, dels) = self.normalized();
+        for &(r, c, _) in &ins {
+            assert!(
+                (r as usize) < csr.rows && (c as usize) < csr.cols,
+                "insert ({r}, {c}) out of bounds for {}x{}",
+                csr.rows,
+                csr.cols
+            );
+        }
+        for &(r, c) in &dels {
+            assert!(
+                (r as usize) < csr.rows && (c as usize) < csr.cols,
+                "delete ({r}, {c}) out of bounds for {}x{}",
+                csr.rows,
+                csr.cols
+            );
+        }
+
+        let ins_covers = |r: u32, c: u32| {
+            ins.binary_search_by_key(&(r, c), |&(ir, ic, _)| (ir, ic))
+                .is_ok()
+        };
+        let structural = ins
+            .iter()
+            .any(|&(r, c, _)| find(csr, r, c).is_none())
+            || dels
+                .iter()
+                .any(|&(r, c)| find(csr, r, c).is_some() && !ins_covers(r, c));
+
+        let report = if structural {
+            self.apply_structural(csr, &ins, &dels)
+        } else {
+            // Every insert lands on an existing coordinate and every
+            // delete is overridden or absent: rewrite values in place.
+            let mut updated = 0;
+            for &(r, c, v) in &ins {
+                let pos = find(csr, r, c).expect("value-only batch targets present edges");
+                csr.values[pos] = v;
+                updated += 1;
+            }
+            DeltaReport {
+                inserted: 0,
+                deleted: 0,
+                updated,
+                structural: false,
+            }
+        };
+        if report.touched() > 0 {
+            csr.bump_epoch();
+        }
+        report
+    }
+
+    /// Per-coordinate normal form: deletes sorted and deduplicated,
+    /// inserts sorted by coordinate with last-wins on duplicates.
+    fn normalized(&self) -> (Vec<(u32, u32, f32)>, Vec<(u32, u32)>) {
+        let mut ins = self.ins.clone();
+        // stable, so the latest queued insert is last within each run
+        ins.sort_by_key(|&(r, c, _)| (r, c));
+        let mut last_wins: Vec<(u32, u32, f32)> = Vec::with_capacity(ins.len());
+        for e in ins {
+            match last_wins.last_mut() {
+                Some(prev) if prev.0 == e.0 && prev.1 == e.1 => *prev = e,
+                _ => last_wins.push(e),
+            }
+        }
+        let mut dels = self.dels.clone();
+        dels.sort_unstable();
+        dels.dedup();
+        (last_wins, dels)
+    }
+
+    /// One merge pass over the whole matrix: for each row, merge the
+    /// surviving old entries with the row's inserts (both sorted by
+    /// column), skipping net-deleted columns. Column order within each
+    /// row is preserved by construction.
+    fn apply_structural(
+        &self,
+        csr: &mut CsrMatrix,
+        ins: &[(u32, u32, f32)],
+        dels: &[(u32, u32)],
+    ) -> DeltaReport {
+        let mut indptr = Vec::with_capacity(csr.rows + 1);
+        indptr.push(0u32);
+        let mut indices = Vec::with_capacity(csr.nnz() + ins.len());
+        let mut values = Vec::with_capacity(csr.nnz() + ins.len());
+        let (mut inserted, mut deleted, mut updated) = (0usize, 0usize, 0usize);
+        let (mut ic, mut dc) = (0usize, 0usize); // batch cursors
+        for r in 0..csr.rows as u32 {
+            let row_ins_start = ic;
+            while ic < ins.len() && ins[ic].0 == r {
+                ic += 1;
+            }
+            let row_ins = &ins[row_ins_start..ic];
+            let row_del_start = dc;
+            while dc < dels.len() && dels[dc].0 == r {
+                dc += 1;
+            }
+            let row_del = &dels[row_del_start..dc];
+            let del_covers = |c: u32| row_del.binary_search_by_key(&c, |d| d.1).is_ok();
+
+            let (cols, vals) = csr.row(r as usize);
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < cols.len() || j < row_ins.len() {
+                if j >= row_ins.len() || (i < cols.len() && cols[i] < row_ins[j].1) {
+                    // old-only column: survives unless net-deleted
+                    if del_covers(cols[i]) {
+                        deleted += 1;
+                    } else {
+                        indices.push(cols[i]);
+                        values.push(vals[i]);
+                    }
+                    i += 1;
+                } else if i >= cols.len() || cols[i] > row_ins[j].1 {
+                    // insert-only column: net new edge
+                    inserted += 1;
+                    indices.push(row_ins[j].1);
+                    values.push(row_ins[j].2);
+                    j += 1;
+                } else {
+                    // both: the insert rewrites the value (and wins
+                    // over any delete at the same coordinate)
+                    updated += 1;
+                    indices.push(row_ins[j].1);
+                    values.push(row_ins[j].2);
+                    i += 1;
+                    j += 1;
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        csr.indptr = indptr;
+        csr.indices = indices;
+        csr.values = values;
+        DeltaReport {
+            inserted,
+            deleted,
+            updated,
+            structural: true,
+        }
+    }
+}
+
+/// Stream position of `a[r, c]`, if present (binary search within the
+/// row — column indices are sorted per the CSR invariant).
+fn find(csr: &CsrMatrix, r: u32, c: u32) -> Option<usize> {
+    let lo = csr.indptr[r as usize] as usize;
+    let hi = csr.indptr[r as usize + 1] as usize;
+    csr.indices[lo..hi].binary_search(&c).ok().map(|k| lo + k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+
+    fn small() -> CsrMatrix {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        let mut coo = CooMatrix::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 2, 2.0);
+        coo.push(2, 0, 3.0);
+        coo.push(2, 1, 4.0);
+        CsrMatrix::from_coo(&coo)
+    }
+
+    #[test]
+    fn value_only_batch_patches_in_place() {
+        let mut m = small();
+        let mut d = EdgeDelta::new();
+        d.insert(0, 0, 9.0).insert(2, 1, -4.0);
+        let rep = d.apply(&mut m);
+        assert_eq!(
+            rep,
+            DeltaReport {
+                inserted: 0,
+                deleted: 0,
+                updated: 2,
+                structural: false
+            }
+        );
+        assert_eq!(m.indptr, vec![0, 2, 2, 4]);
+        assert_eq!(m.indices, vec![0, 2, 0, 1]);
+        assert_eq!(m.values, vec![9.0, 2.0, 3.0, -4.0]);
+        assert_eq!(m.epoch, 1);
+    }
+
+    #[test]
+    fn structural_batch_merges_inserts_and_deletes() {
+        let mut m = small();
+        let mut d = EdgeDelta::new();
+        d.insert(1, 1, 5.0) // net insert into the empty row
+            .delete(0, 2) // net delete
+            .insert(2, 2, 6.0); // net insert at the row tail
+        let rep = d.apply(&mut m);
+        assert_eq!(
+            rep,
+            DeltaReport {
+                inserted: 2,
+                deleted: 1,
+                updated: 0,
+                structural: true
+            }
+        );
+        // [[1, 0, 0], [0, 5, 0], [3, 4, 6]]
+        assert_eq!(m.indptr, vec![0, 1, 2, 5]);
+        assert_eq!(m.indices, vec![0, 1, 0, 1, 2]);
+        assert_eq!(m.values, vec![1.0, 5.0, 3.0, 4.0, 6.0]);
+        assert_eq!(m.epoch, 1);
+    }
+
+    #[test]
+    fn delete_of_absent_edge_is_a_noop() {
+        let mut m = small();
+        let before = m.clone();
+        let mut d = EdgeDelta::new();
+        d.delete(1, 1).delete(0, 1);
+        let rep = d.apply(&mut m);
+        assert_eq!(rep.touched(), 0);
+        assert!(!rep.structural);
+        assert_eq!(m, before, "no-op batch leaves matrix (and epoch) alone");
+        assert_eq!(m.epoch, 0);
+    }
+
+    #[test]
+    fn duplicate_inserts_are_last_wins() {
+        let mut m = small();
+        let mut d = EdgeDelta::new();
+        d.insert(1, 0, 1.0).insert(1, 0, 2.0).insert(1, 0, 3.0);
+        let rep = d.apply(&mut m);
+        assert_eq!(rep.inserted, 1);
+        let (cols, vals) = m.row(1);
+        assert_eq!(cols, &[0]);
+        assert_eq!(vals, &[3.0]);
+    }
+
+    #[test]
+    fn delete_then_insert_composes_to_an_update() {
+        let mut m = small();
+        let mut d = EdgeDelta::new();
+        d.delete(0, 0).insert(0, 0, 7.0);
+        let rep = d.apply(&mut m);
+        assert_eq!(
+            rep,
+            DeltaReport {
+                inserted: 0,
+                deleted: 0,
+                updated: 1,
+                structural: false
+            }
+        );
+        assert_eq!(m.row(0).1, &[7.0, 2.0]);
+    }
+
+    #[test]
+    fn row_can_shrink_to_empty() {
+        let mut m = small();
+        let mut d = EdgeDelta::new();
+        d.delete(2, 0).delete(2, 1);
+        let rep = d.apply(&mut m);
+        assert_eq!(rep.deleted, 2);
+        assert_eq!(m.row_nnz(2), 0);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.indptr, vec![0, 2, 2, 2]);
+    }
+
+    #[test]
+    fn explicit_zero_insert_is_a_stored_nonzero() {
+        let mut m = small();
+        let mut d = EdgeDelta::new();
+        d.insert(1, 2, 0.0);
+        let rep = d.apply(&mut m);
+        assert_eq!(rep.inserted, 1);
+        assert_eq!(m.row_nnz(1), 1);
+        assert_eq!(m.row(1).1, &[0.0]);
+    }
+
+    #[test]
+    fn epoch_bumps_once_per_effective_batch() {
+        let mut m = small();
+        let mut d = EdgeDelta::new();
+        d.insert(0, 0, 2.0).insert(1, 1, 1.0).delete(2, 0);
+        d.apply(&mut m);
+        assert_eq!(m.epoch, 1, "one batch, one bump");
+        let fp = m.fingerprint();
+        d.apply(&mut m);
+        assert_eq!(m.epoch, 2);
+        assert_ne!(fp, m.fingerprint());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_bounds_insert_panics() {
+        let mut m = small();
+        let mut d = EdgeDelta::new();
+        d.insert(0, 3, 1.0);
+        d.apply(&mut m);
+    }
+
+    #[test]
+    fn matches_coo_rebuild_on_a_mixed_batch() {
+        // the oracle the robustness property suite replays at scale:
+        // apply the batch to a coordinate map, rebuild via COO, compare
+        let mut m = small();
+        let mut d = EdgeDelta::new();
+        d.delete(0, 0) // net delete
+            .insert(0, 1, 8.0) // net insert
+            .insert(2, 1, -1.0) // update
+            .delete(1, 0); // absent: no-op
+        d.apply(&mut m);
+        let mut model = std::collections::BTreeMap::new();
+        model.insert((0u32, 2u32), 2.0f32);
+        model.insert((0, 1), 8.0);
+        model.insert((2, 0), 3.0);
+        model.insert((2, 1), -1.0);
+        let mut coo = CooMatrix::new(3, 3);
+        for (&(r, c), &v) in &model {
+            coo.push(r as usize, c as usize, v);
+        }
+        let oracle = CsrMatrix::from_coo(&coo);
+        assert_eq!(m.indptr, oracle.indptr);
+        assert_eq!(m.indices, oracle.indices);
+        assert_eq!(m.values, oracle.values);
+    }
+}

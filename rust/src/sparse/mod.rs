@@ -14,6 +14,12 @@
 //! [`mmio`] reads/writes MatrixMarket files so external matrices (e.g.
 //! downloaded SuiteSparse entries) can be used when available.
 //!
+//! [`delta`] mutates the formats in place: [`EdgeDelta`] batches of
+//! edge insertions/deletions applied to a [`CsrMatrix`] (value-only
+//! patch or structural merge-rebuild), with the mutation epoch folded
+//! into the content fingerprint so the serving cache invalidates stale
+//! prepared state.
+//!
 //! Dense operands are [`DenseMatrix`] (packed row-major) or
 //! [`AlignedDense`] (64-byte aligned allocation, row stride padded to the
 //! SIMD lane width); the [`DenseX`] trait lets the kernels gather from
@@ -21,12 +27,14 @@
 
 pub mod coo;
 pub mod csr;
+pub mod delta;
 pub mod ell;
 pub mod mmio;
 pub mod segments;
 
 pub use coo::CooMatrix;
 pub use csr::CsrMatrix;
+pub use delta::{DeltaOutcome, DeltaReport, EdgeDelta};
 pub use ell::EllMatrix;
 pub use segments::SegmentedMatrix;
 

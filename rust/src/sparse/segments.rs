@@ -102,6 +102,21 @@ impl SegmentedMatrix {
         distinct
     }
 
+    /// Overwrite the segment values from a new CSR value stream with the
+    /// same sparsity pattern (`values.len()` must equal the true `nnz`).
+    /// The CSR non-zero stream maps 1:1 onto the first `nnz` segment
+    /// slots, so a value-only [`crate::sparse::delta::EdgeDelta`] batch
+    /// patches this layout without re-cutting segments; the padding tail
+    /// keeps its benign zeros.
+    pub fn patch_values(&mut self, values: &[f32]) {
+        assert_eq!(
+            values.len(),
+            self.nnz,
+            "patched value stream must match nnz"
+        );
+        self.values[..self.nnz].copy_from_slice(values);
+    }
+
     /// Dense reconstruction (tests only).
     pub fn to_dense(&self) -> Vec<f32> {
         let mut out = vec![0f32; self.rows * self.cols];
@@ -179,6 +194,26 @@ mod tests {
                 Err(format!("{rows}x{cols} seg_len {seg_len}"))
             }
         });
+    }
+
+    #[test]
+    fn patch_values_equals_recut_for_value_only_mutation() {
+        let csr = skewed();
+        let mut seg = SegmentedMatrix::from_csr(&csr, 5);
+        // mutate values only (same pattern), as a value-only delta does
+        let new_values: Vec<f32> = csr.values.iter().map(|v| v * -2.0).collect();
+        let mutated = csr.with_values(new_values.clone());
+        seg.patch_values(&new_values);
+        assert_eq!(seg, SegmentedMatrix::from_csr(&mutated, 5));
+        // padding tail stayed zero
+        assert_eq!(seg.values[seg.nnz..], vec![0.0; seg.values.len() - seg.nnz]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must match nnz")]
+    fn patch_values_checks_length() {
+        let mut seg = SegmentedMatrix::from_csr(&skewed(), 4);
+        seg.patch_values(&[1.0]);
     }
 
     #[test]

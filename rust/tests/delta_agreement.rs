@@ -1,0 +1,232 @@
+//! Differential mutation-replay harness — the correctness anchor for
+//! dynamic-graph delta updates.
+//!
+//! A deterministic R-MAT churn stream (`gen::churn`) drives an engine
+//! through hundreds of [`EdgeDelta`] batches via
+//! `SpmmEngine::apply_delta`. After EVERY batch, a from-scratch engine
+//! of the same shape registers the stream's ground-truth matrix, and
+//! the patched engine's SpMM and SDDMM outputs must equal the fresh
+//! engine's bit for bit on all four kernels. Identical matrices, the
+//! same backend shape, and deterministic kernels mean the two engines
+//! execute the same instruction sequence, so exact `f32` equality is
+//! the correct bar even with real-valued weights.
+//!
+//! Coverage across the test functions: value-only churn (patched in
+//! place) and mixed structural churn (re-prepared), blocked and
+//! merge-path traversal, sharded (k=2 and k=3) and unsharded backends,
+//! the prepared cache rotating with the epoch, concurrent server
+//! traffic in flight while the mutation stream replays, and a
+//! heavy-growth phase that must trip the drift detector and leave
+//! delta-grain reselection entries in the audit log. The batch count
+//! across the suite is 245 — past the 200 the acceptance bar asks for.
+
+mod common;
+use common::int_dense;
+
+use ge_spmm::backend::{NativeBackend, TraversalMode};
+use ge_spmm::coordinator::server::{Request, Server, ServerConfig, ServerReply};
+use ge_spmm::coordinator::SpmmEngine;
+use ge_spmm::gen::rmat::RmatConfig;
+use ge_spmm::gen::{ChurnConfig, ChurnStream};
+use ge_spmm::kernels::dense::spmm_reference;
+use ge_spmm::kernels::KernelKind;
+use ge_spmm::sparse::{CsrMatrix, DenseMatrix};
+use ge_spmm::util::prng::Xoshiro256;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Dense width for the SpMM comparisons.
+const N: usize = 8;
+/// Dot width for the SDDMM comparisons.
+const D: usize = 8;
+
+/// Replay `batches` churn batches onto `engine` via `apply_delta`,
+/// comparing all four kernels' SpMM and SDDMM outputs bit-for-bit
+/// against a from-scratch engine built by `fresh` after every batch.
+/// Returns `(patched, reprepared)` counts over the effective batches.
+fn replay(
+    engine: &SpmmEngine,
+    fresh: impl Fn() -> SpmmEngine,
+    stream: &mut ChurnStream,
+    batches: usize,
+    seed: u64,
+) -> (usize, usize) {
+    let h = engine.register(stream.current().clone()).unwrap();
+    let mut rng = Xoshiro256::seeded(seed);
+    let (mut patched, mut reprepared) = (0, 0);
+    for b in 0..batches {
+        let delta = stream.next_batch();
+        let out = engine.apply_delta(h, &delta).unwrap();
+        if out.report.touched() > 0 {
+            if out.patched {
+                patched += 1;
+            } else {
+                reprepared += 1;
+            }
+        }
+        assert_eq!(
+            out.epoch,
+            stream.current().epoch,
+            "batch {b}: engine epoch tracks the stream"
+        );
+
+        let truth = fresh();
+        let ht = truth.register(stream.current().clone()).unwrap();
+        let dim = stream.current().rows;
+        let x = int_dense(dim, N, &mut rng);
+        let u = int_dense(dim, D, &mut rng);
+        let v = int_dense(dim, D, &mut rng);
+        for kind in KernelKind::ALL {
+            let got = engine.spmm_with(h, &x, kind).unwrap();
+            let want = truth.spmm_with(ht, &x, kind).unwrap();
+            assert_eq!(got.y.data, want.y.data, "batch {b} spmm {}", kind.label());
+            let got = engine.sddmm_with(h, &u, &v, kind).unwrap();
+            let want = truth.sddmm_with(ht, &u, &v, kind).unwrap();
+            assert_eq!(got.values, want.values, "batch {b} sddmm {}", kind.label());
+        }
+    }
+    (patched, reprepared)
+}
+
+#[test]
+fn value_only_churn_patches_in_place_on_the_cached_native_engine() {
+    let engine = SpmmEngine::with_backend(Box::new(
+        NativeBackend::default().with_traversal(TraversalMode::Blocked),
+    ))
+    .with_prepared_cache(64 << 20);
+    let config = ChurnConfig::new(RmatConfig::new(6, 4.0)).value_only();
+    let mut stream = ChurnStream::new(config, 101);
+    let fresh = || {
+        SpmmEngine::with_backend(Box::new(
+            NativeBackend::default().with_traversal(TraversalMode::Blocked),
+        ))
+    };
+    let (patched, reprepared) = replay(&engine, fresh, &mut stream, 60, 201);
+    assert_eq!(patched, 60, "weight updates never rebuild prepared state");
+    assert_eq!(reprepared, 0);
+    // the epoch-rotating cache key replaced (never accumulated) entries
+    assert_eq!(engine.cache_usage().unwrap().0, 1);
+}
+
+#[test]
+fn mixed_churn_agrees_under_merge_path_traversal() {
+    let make = || {
+        SpmmEngine::with_backend(Box::new(
+            NativeBackend::default().with_traversal(TraversalMode::MergePath),
+        ))
+    };
+    let engine = make();
+    let mut stream = ChurnStream::new(ChurnConfig::new(RmatConfig::new(6, 4.0)), 102);
+    let (patched, reprepared) = replay(&engine, make, &mut stream, 60, 202);
+    assert!(reprepared > 0, "structural churn forces re-preparation");
+    assert_eq!(patched + reprepared, 60, "every mixed batch touches");
+}
+
+#[test]
+fn value_only_churn_patches_shard_locally_on_the_sharded_engine() {
+    let engine = SpmmEngine::sharded(2);
+    let config = ChurnConfig::new(RmatConfig::new(6, 4.0)).value_only();
+    let mut stream = ChurnStream::new(config, 103);
+    let (patched, reprepared) = replay(&engine, || SpmmEngine::sharded(2), &mut stream, 60, 203);
+    assert_eq!(patched, 60, "sharded backends forward value patches per shard");
+    assert_eq!(reprepared, 0);
+}
+
+#[test]
+fn sharded_replay_agrees_while_server_requests_are_in_flight() {
+    let engine = Arc::new(SpmmEngine::sharded(3));
+    // A stable co-tenant matrix for the server traffic. Its values are
+    // quantized to integers so every f32 partial sum is exact and the
+    // replies can be checked against the serial reference regardless of
+    // which kernel the engine picks.
+    let mut stable = CsrMatrix::from_coo(&RmatConfig::uniform(6, 4.0).generate(
+        &mut Xoshiro256::seeded(7),
+    ));
+    for v in &mut stable.values {
+        *v = (*v * 8.0).round();
+    }
+    let hs = engine.register(stable.clone()).unwrap();
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig {
+            max_width: 8,
+            max_delay: Duration::from_millis(1),
+            workers: 2,
+            max_queue: 4096,
+        },
+    );
+
+    let stop = AtomicBool::new(false);
+    let mut stream = ChurnStream::new(ChurnConfig::new(RmatConfig::new(6, 4.0)), 104);
+    std::thread::scope(|s| {
+        let producer = s.spawn(|| {
+            let mut rng = Xoshiro256::seeded(77);
+            let mut served = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                let tag = served;
+                let x = int_dense(stable.cols, 1 + (tag % 3) as usize, &mut rng);
+                let mut want = DenseMatrix::zeros(stable.rows, x.cols);
+                spmm_reference(&stable, &x, &mut want);
+                let (rtx, rrx) = mpsc::channel();
+                assert!(server.submit(Request::spmm(hs, x, tag, rtx)));
+                match rrx.recv_timeout(Duration::from_secs(60)).unwrap() {
+                    ServerReply::Ok(r) => {
+                        assert_eq!(r.tag, tag);
+                        assert_eq!(r.y.data, want.data, "stable co-tenant reply, tag {tag}");
+                        served += 1;
+                    }
+                    ServerReply::Err(e) => panic!("stable request failed mid-replay: {e}"),
+                }
+            }
+            served
+        });
+
+        let (patched, reprepared) =
+            replay(&engine, || SpmmEngine::sharded(3), &mut stream, 60, 204);
+        assert_eq!(patched + reprepared, 60);
+        stop.store(true, Ordering::Release);
+        let served = producer.join().unwrap();
+        assert!(served > 0, "server answered traffic during the replay");
+    });
+    server.shutdown();
+    assert_eq!(engine.metrics.errors(), 0);
+}
+
+#[test]
+fn heavy_growth_trips_drift_reselection_into_the_audit_log() {
+    let engine = SpmmEngine::native();
+    // Insert-only churn: each batch lands ~160 skewed edges on a ~250-nnz
+    // base, pushing nnz (and avg_row) far past the 25% drift threshold.
+    let config = ChurnConfig {
+        base: RmatConfig::new(6, 4.0),
+        inserts: 160,
+        deletes: 0,
+        updates: 4,
+    };
+    let mut stream = ChurnStream::new(config, 105);
+    let before = stream.current().nnz();
+    let (patched, reprepared) = replay(&engine, SpmmEngine::native, &mut stream, 5, 205);
+    assert_eq!(patched, 0, "insert batches are structural");
+    assert_eq!(reprepared, 5);
+    assert!(
+        stream.current().nnz() as f64 > before as f64 * 1.25,
+        "growth phase moved nnz past the drift threshold: {} -> {}",
+        before,
+        stream.current().nnz()
+    );
+
+    let entries = engine.metrics.audit().entries();
+    let drift: Vec<_> = entries.iter().filter(|e| e.grain == "delta").collect();
+    assert!(
+        drift.len() >= 2,
+        "drift re-selection recorded for both ops, got {}",
+        drift.len()
+    );
+    assert!(drift.iter().any(|e| e.selector == "drift"));
+    assert!(drift.iter().any(|e| e.selector == "drift-sddmm"));
+    assert!(
+        drift.iter().all(|e| e.matrix == Some(0)),
+        "delta-grain entries name the mutated registration"
+    );
+}

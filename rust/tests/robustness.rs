@@ -13,8 +13,10 @@
 use ge_spmm::backend::{NativeBackend, SpmmBackend};
 use ge_spmm::kernels::dense::spmm_reference;
 use ge_spmm::kernels::{pr_rs, pr_wb, sr_rs, sr_wb, KernelKind, WARP};
-use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix, EllMatrix, SegmentedMatrix};
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix, EdgeDelta, EllMatrix, SegmentedMatrix};
+use ge_spmm::util::proptest::{run_prop, Gen};
 use ge_spmm::util::threadpool::ThreadPool;
+use std::collections::BTreeMap;
 
 /// Run one kernel directly (the code path `NativeBackend` guards with a
 /// rows/cols check — direct callers get no such guard).
@@ -176,6 +178,137 @@ fn real_nan_entries_still_propagate() {
         assert_eq!(y.at(2, 0), 2.0, "{kind:?}");
         assert_eq!(y.row(0), &[0.0, 0.0], "{kind:?}");
     }
+}
+
+/// Random base matrix plus its coordinate-map model (post-merge, so the
+/// model reflects exactly what `from_coo` built).
+fn random_base(g: &mut Gen) -> (CsrMatrix, BTreeMap<(usize, usize), f32>) {
+    let rows = g.usize_in(1, 24);
+    let cols = g.usize_in(1, 24);
+    let mut coo = CooMatrix::new(rows, cols);
+    for _ in 0..g.usize_in(0, 60) {
+        let r = g.usize_in(0, rows);
+        let c = g.usize_in(0, cols);
+        coo.push(r, c, g.i64_in(-8, 8) as f32);
+    }
+    let csr = CsrMatrix::from_coo(&coo);
+    let mut model = BTreeMap::new();
+    for r in 0..rows {
+        let (cs, vs) = csr.row(r);
+        for (c, v) in cs.iter().zip(vs) {
+            model.insert((r, *c as usize), *v);
+        }
+    }
+    (csr, model)
+}
+
+#[test]
+fn edge_delta_agrees_with_a_coo_rebuild_oracle() {
+    // ISSUE-8 satellite: property-test `EdgeDelta` against the simplest
+    // possible model — a coordinate map mutated by the pinned batch
+    // semantics (deletes first, then last-wins inserts), rebuilt through
+    // COO. Batches mix duplicate inserts, deletes of absent edges, and
+    // (with some luck plus a directed nudge) rows shrinking to nnz == 0.
+    run_prop("edge_delta_coo_oracle", 64, |g| {
+        let (mut csr, mut model) = random_base(g);
+        let (rows, cols) = (csr.rows, csr.cols);
+        for _ in 0..g.usize_in(1, 5) {
+            let mut delta = EdgeDelta::new();
+            let mut dels = Vec::new();
+            let mut ins = Vec::new();
+            if g.chance(0.3) {
+                // directed: drain one whole row so it shrinks to empty
+                let r = g.usize_in(0, rows);
+                for &c in csr.row(r).0 {
+                    dels.push((r, c as usize));
+                }
+            }
+            for _ in 0..g.usize_in(0, 12) {
+                let r = g.usize_in(0, rows);
+                let c = g.usize_in(0, cols);
+                if g.chance(0.4) {
+                    dels.push((r, c)); // often absent: must be a no-op
+                } else {
+                    ins.push(((r, c), g.i64_in(-8, 8) as f32)); // dups: last wins
+                }
+            }
+            for &(r, c) in &dels {
+                delta.delete(r, c);
+            }
+            for &((r, c), v) in &ins {
+                delta.insert(r, c, v);
+            }
+            let before: Vec<(usize, usize)> = model.keys().copied().collect();
+            let report = delta.apply(&mut csr);
+            // model: deletes apply first, then inserts in batch order
+            for (r, c) in &dels {
+                model.remove(&(*r, *c));
+            }
+            for ((r, c), v) in &ins {
+                model.insert((*r, *c), *v);
+            }
+            let after: Vec<(usize, usize)> = model.keys().copied().collect();
+            // report counts come straight from the support diff
+            let net_ins = after.iter().filter(|&k| !before.contains(k)).count();
+            let net_del = before.iter().filter(|&k| !after.contains(k)).count();
+            if report.inserted != net_ins || report.deleted != net_del {
+                return Err(format!(
+                    "report ({}, {}) vs support diff ({net_ins}, {net_del})",
+                    report.inserted, report.deleted
+                ));
+            }
+            if report.structural != (before != after) {
+                return Err(format!(
+                    "structural={} but support {}changed",
+                    report.structural,
+                    if before == after { "un" } else { "" }
+                ));
+            }
+            // rebuild the oracle from the model and compare arrays
+            // (epochs differ by construction: the oracle is epoch 0)
+            let mut oracle = CooMatrix::new(rows, cols);
+            for (&(r, c), &v) in &model {
+                oracle.push(r, c, v);
+            }
+            let want = CsrMatrix::from_coo(&oracle);
+            if csr.indptr != want.indptr || csr.indices != want.indices {
+                return Err("patched structure != rebuilt structure".to_string());
+            }
+            if csr.values != want.values {
+                return Err("patched values != rebuilt values".to_string());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn segmented_patch_values_agrees_with_a_rebuild() {
+    // Value-only churn must keep the segmented layout's patch path
+    // (`SegmentedMatrix::patch_values`, the `prepare_delta` fast path)
+    // identical to a from-scratch re-cut of the mutated CSR.
+    run_prop("segment_patch_oracle", 48, |g| {
+        let (mut csr, model) = random_base(g);
+        let mut seg = SegmentedMatrix::from_csr(&csr, WARP);
+        let mut delta = EdgeDelta::new();
+        let coords: Vec<(usize, usize)> = model.keys().copied().collect();
+        if coords.is_empty() {
+            return Ok(());
+        }
+        for _ in 0..g.usize_in(1, 10) {
+            let &(r, c) = g.choose(&coords);
+            delta.insert(r, c, g.i64_in(-8, 8) as f32);
+        }
+        let report = delta.apply(&mut csr);
+        if report.structural {
+            return Err("updates at existing coords must be value-only".into());
+        }
+        seg.patch_values(&csr.values);
+        if seg != SegmentedMatrix::from_csr(&csr, WARP) {
+            return Err("patched segments != re-cut segments".into());
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -219,6 +219,116 @@ fn admission_bound_rejects_and_recovers() {
 }
 
 #[test]
+fn mutated_matrix_misses_the_cache() {
+    use ge_spmm::sparse::EdgeDelta;
+    let engine = SpmmEngine::native().with_prepared_cache(64 << 20);
+    let a = fixed_size_matrix(48, 36, 71);
+    let h = engine.register(a.clone()).unwrap();
+    let key0 = engine.batch_key(h).unwrap();
+    let mut delta = EdgeDelta::new();
+    delta.insert(0, a.row(0).0[0] as usize, 17.0);
+    let out = engine.apply_delta(h, &delta).unwrap();
+    assert!(out.patched && !out.report.structural);
+    // the epoch bump rotates the batch key: the serving layer can no
+    // longer co-batch this handle with pre-mutation traffic, and the
+    // stale prepared-cache entry is gone (one fresh entry replaces it)
+    assert_ne!(engine.batch_key(h).unwrap(), key0);
+    assert_eq!(engine.cache_usage().unwrap().0, 1);
+    // the pre-mutation content misses
+    engine.register(a.clone()).unwrap();
+    assert_eq!(engine.metrics.cache_hits(), 0);
+    assert_eq!(engine.metrics.cache_misses(), 2);
+    // ...and so does an epoch-0 rebuild of the post-mutation content:
+    // the fingerprint folds the epoch, so only the mutated registration
+    // itself owns its cache identity
+    let mut m = a;
+    delta.apply(&mut m);
+    let rebuilt = CsrMatrix::from_parts(
+        m.rows,
+        m.cols,
+        m.indptr.clone(),
+        m.indices.clone(),
+        m.values.clone(),
+    );
+    assert_ne!(rebuilt.fingerprint(), engine.batch_key(h).unwrap());
+    engine.register(rebuilt).unwrap();
+    assert_eq!(engine.metrics.cache_hits(), 0);
+    assert_eq!(engine.metrics.cache_misses(), 3);
+}
+
+#[test]
+fn concurrent_reader_never_observes_half_patched_state() {
+    use ge_spmm::kernels::KernelKind;
+    use ge_spmm::sparse::EdgeDelta;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    const BATCHES: usize = 40;
+    const ROWS: usize = 96;
+    const COLS: usize = 64;
+
+    let engine = Arc::new(SpmmEngine::native().with_prepared_cache(64 << 20));
+    let a = fixed_size_matrix(ROWS, COLS, 81);
+    let h = engine.register(a.clone()).unwrap();
+    let mut rng = Xoshiro256::seeded(82);
+    let x = int_dense(COLS, 3, &mut rng);
+
+    // Value-only batches keep the structure fixed, so every epoch's
+    // ground truth is computable up front: truths[e] = A_e · X.
+    let mut m = a;
+    let mut deltas = Vec::new();
+    let mut truths = Vec::new();
+    let mut want = DenseMatrix::zeros(ROWS, 3);
+    spmm_reference(&m, &x, &mut want);
+    truths.push(want.data);
+    for _ in 0..BATCHES {
+        let mut d = EdgeDelta::new();
+        for _ in 0..6 {
+            let r = rng.below(ROWS as u64) as usize;
+            let (cols, _) = m.row(r);
+            if cols.is_empty() {
+                continue;
+            }
+            let c = cols[rng.below(cols.len() as u64) as usize] as usize;
+            d.insert(r, c, (rng.below(9) as i64 - 4) as f32);
+        }
+        d.apply(&mut m);
+        let mut want = DenseMatrix::zeros(ROWS, 3);
+        spmm_reference(&m, &x, &mut want);
+        truths.push(want.data);
+        deltas.push(d);
+    }
+
+    // Readers hammer the handle while the writer flushes batch after
+    // batch. The swap is one Arc replacement under the handle-map lock:
+    // every read must equal SOME epoch's truth exactly — a half-patched
+    // prepared state would produce a vector matching no epoch.
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            let engine = engine.clone();
+            let (x, truths, stop) = (&x, &truths, &stop);
+            s.spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    let y = engine.spmm_with(h, x, KernelKind::SrRs).unwrap().y;
+                    assert!(
+                        truths.iter().any(|t| *t == y.data),
+                        "mid-flush read matches no epoch's ground truth"
+                    );
+                }
+            });
+        }
+        for d in &deltas {
+            let out = engine.apply_delta(h, d).unwrap();
+            assert!(out.patched, "value-only churn patches in place");
+        }
+        stop.store(true, Ordering::Release);
+    });
+    // quiesced: the final state is exactly the last epoch
+    let y = engine.spmm_with(h, &x, KernelKind::SrRs).unwrap().y;
+    assert_eq!(y.data, *truths.last().unwrap());
+    assert_eq!(engine.metrics.errors(), 0);
+}
+
+#[test]
 fn concurrent_server_matches_serial_bit_for_bit() {
     const PRODUCERS: usize = 4;
     const MATRICES: usize = 3;
