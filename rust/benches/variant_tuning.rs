@@ -1,0 +1,181 @@
+//! Tuner economics (ISSUE 9): what the budgeted successive-halving
+//! search costs and what its winners buy back, on this machine.
+//!
+//! Two questions the variant registry raises that the canonical-four
+//! default never had to answer:
+//!
+//! 1. **Search cost** — wallclock of `tune_variants` as the per-cell
+//!    `--budget-ms` grows. Halving is sub-linear in the variant count
+//!    (losers get small slices), so doubling the budget should much less
+//!    than double the non-canonical discovery rate.
+//! 2. **Selection quality** — with the winners installed, the per-bucket
+//!    dispatch cost of the tuned policy vs always running each family's
+//!    canonical point, measured directly (geomean of tuned/canonical
+//!    medians over matrix × N cells; < 1.0 means tuning paid for itself).
+//!
+//! Supports `--json <path>` self-recording (see BENCHMARKS.md).
+
+use ge_spmm::backend::{NativeBackend, SpmmBackend};
+use ge_spmm::bench::harness::{bench_fn_with, BenchConfig};
+use ge_spmm::bench::record::{json_path_arg, BenchRecord};
+use ge_spmm::bench::Table;
+use ge_spmm::features::MatrixFeatures;
+use ge_spmm::gen::powerlaw::PowerLawConfig;
+use ge_spmm::gen::rmat::RmatConfig;
+use ge_spmm::kernels::{registry, SparseOp};
+use ge_spmm::selector::measured::{tune_variants, MeasureConfig};
+use ge_spmm::selector::online::feature_bucket;
+use ge_spmm::selector::profile::ProfileVariant;
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix};
+use ge_spmm::util::json::{num, obj};
+use ge_spmm::util::prng::Xoshiro256;
+use ge_spmm::util::stats;
+use std::time::Instant;
+
+const N_VALUES: [usize; 2] = [8, 32];
+const D_VALUES: [usize; 1] = [16];
+const BUDGETS_MS: [u64; 3] = [4, 12, 32];
+
+fn suite(rng: &mut Xoshiro256) -> Vec<(&'static str, CsrMatrix)> {
+    let uniform = CsrMatrix::from_coo(&CooMatrix::random_uniform(1024, 1024, 0.008, rng));
+    let plaw = CsrMatrix::from_coo(
+        &PowerLawConfig {
+            rows: 1024,
+            cols: 1024,
+            alpha: 1.6,
+            min_row: 1,
+            max_row: 192,
+        }
+        .generate(rng),
+    );
+    let rmat = CsrMatrix::from_coo(&RmatConfig::new(9, 8.0).generate(rng));
+    vec![("uniform", uniform), ("plaw", plaw), ("rmat", rmat)]
+}
+
+/// Median seconds of one variant (by label) on one prepared cell.
+fn time_label(
+    backend: &dyn SpmmBackend,
+    operand: &ge_spmm::backend::PreparedOperand,
+    x: &DenseMatrix,
+    label: &str,
+) -> f64 {
+    let entry = registry()
+        .by_label(SparseOp::Spmm, label)
+        .expect("winner label resolves");
+    let cfg = BenchConfig {
+        warmup: std::time::Duration::from_millis(2),
+        measure: std::time::Duration::from_millis(10),
+        ..BenchConfig::default()
+    };
+    let stats = bench_fn_with(label, cfg, || {
+        let exec = backend
+            .execute_variant(operand, x, entry)
+            .expect("quality-check execute");
+        std::hint::black_box(&exec.y.data);
+    });
+    stats.median_s().max(1e-9)
+}
+
+fn main() {
+    println!("== variant-tuning economics (this machine) ==");
+    let mut record = json_path_arg().map(|path| {
+        (
+            path,
+            BenchRecord::new("variant_tuning").with_config(obj(vec![
+                ("n_values", num(N_VALUES.len() as f64)),
+                ("d_values", num(D_VALUES.len() as f64)),
+                ("variants", num(registry().len() as f64)),
+            ])),
+        )
+    });
+    let mut rng = Xoshiro256::seeded(0x7e21);
+    let named = suite(&mut rng);
+    let matrices: Vec<CsrMatrix> = named.iter().map(|(_, m)| m.clone()).collect();
+    let backend = NativeBackend::default();
+
+    // 1. search cost vs budget
+    let mut t = Table::new(&["budget/cell", "search s", "cells", "winners", "non-canonical"]);
+    let mut last_winners: Vec<ProfileVariant> = Vec::new();
+    let mut cases: Vec<(String, f64)> = Vec::new();
+    for ms in BUDGETS_MS {
+        let cfg = MeasureConfig::default().with_budget_ms(ms);
+        let t0 = Instant::now();
+        let report = tune_variants(&backend, &matrices, &N_VALUES, &D_VALUES, &cfg)
+            .expect("tuning the bench suite");
+        let took = t0.elapsed().as_secs_f64();
+        t.row(vec![
+            format!("{ms} ms"),
+            format!("{took:.2}"),
+            report.cells_timed.to_string(),
+            report.winners.len().to_string(),
+            report.non_canonical().to_string(),
+        ]);
+        cases.push((format!("search_s/budget_{ms}ms"), took));
+        cases.push((
+            format!("non_canonical/budget_{ms}ms"),
+            report.non_canonical() as f64,
+        ));
+        last_winners = report.winners;
+    }
+    t.print();
+
+    // 2. selection quality of the largest-budget winners: for every
+    // (matrix, n) cell, the tuned winner of the cell's bucket vs the
+    // family's canonical point, same family both sides — isolating what
+    // the *generated* variants add over the four-kernel default.
+    let mut ratios = Vec::new();
+    let mut q = Table::new(&["cell", "family", "winner", "tuned/canonical"]);
+    for (name, a) in &named {
+        let operand = backend.prepare(a).expect("prepare");
+        let features = MatrixFeatures::of(a);
+        for &n in &N_VALUES {
+            let x = DenseMatrix::random(a.cols, n, 1.0, &mut rng);
+            let bucket = feature_bucket(&features, n);
+            for w in last_winners
+                .iter()
+                .filter(|w| w.op == SparseOp::Spmm && w.bucket == bucket)
+            {
+                let canonical = w.family.label();
+                if w.label == canonical {
+                    continue; // canonical won — nothing to compare
+                }
+                let tuned_s = time_label(&backend, &operand, &x, &w.label);
+                let canon_s = time_label(&backend, &operand, &x, canonical);
+                let ratio = tuned_s / canon_s;
+                ratios.push(ratio);
+                q.row(vec![
+                    format!("{name}/n{n}"),
+                    canonical.to_string(),
+                    w.label.clone(),
+                    format!("{ratio:.3}"),
+                ]);
+            }
+        }
+    }
+    if ratios.is_empty() {
+        println!(
+            "every winner was canonical at the largest budget — the generated \
+             variants bought nothing on this machine/suite (valid outcome; \
+             recorded as quality ratio 1.0)"
+        );
+        ratios.push(1.0);
+    } else {
+        q.print();
+    }
+    let quality = stats::geomean(&ratios);
+    println!(
+        "geomean tuned/canonical ratio: {quality:.3} ({} non-canonical cells; < 1.0 = tuning won)",
+        ratios.len()
+    );
+    cases.push(("geomean_tuned_over_canonical".to_string(), quality));
+
+    if let Some((_, rec)) = record.as_mut() {
+        for (name, v) in &cases {
+            rec.push_value(name, *v, "");
+        }
+    }
+    if let Some((path, rec)) = record {
+        rec.save(&path).expect("writing bench record");
+        println!("wrote {}", path.display());
+    }
+}

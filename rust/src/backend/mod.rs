@@ -44,7 +44,7 @@ pub use routed::RoutedBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
-use crate::kernels::KernelKind;
+use crate::kernels::{KernelKind, VariantEntry};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use anyhow::{anyhow, Result};
 use std::any::Any;
@@ -198,6 +198,34 @@ pub trait SpmmBackend: Send + Sync {
         Err(anyhow!("backend '{}' does not implement SDDMM", self.name()))
     }
 
+    /// Execute `Y = A · X` through one specific **registry variant**
+    /// ([`crate::kernels::generator::registry`]). The default collapses
+    /// to the variant's family via [`SpmmBackend::execute`], so backends
+    /// without per-variant dispatch stay correct automatically (they run
+    /// the family's canonical behavior); [`NativeBackend`] overrides this
+    /// with true variant dispatch, including non-canonical segment
+    /// layouts resolved from the prepared operand.
+    fn execute_variant(
+        &self,
+        operand: &PreparedOperand,
+        x: &DenseMatrix,
+        entry: &VariantEntry,
+    ) -> Result<Execution> {
+        self.execute(operand, x, entry.variant.family)
+    }
+
+    /// SDDMM counterpart of [`SpmmBackend::execute_variant`]; same
+    /// collapse-to-family default.
+    fn execute_sddmm_variant(
+        &self,
+        operand: &PreparedOperand,
+        u: &DenseMatrix,
+        v: &DenseMatrix,
+        entry: &VariantEntry,
+    ) -> Result<SddmmExecution> {
+        self.execute_sddmm(operand, u, v, entry.variant.family)
+    }
+
     /// Incrementally re-derive prepared state after an
     /// [`crate::sparse::EdgeDelta`] batch landed on `csr`. `prev` is the
     /// operand prepared from the pre-mutation content; `structural` says
@@ -266,6 +294,51 @@ pub fn execute_sddmm_traced(
     span.set_attr("kernel", kernel.label());
     span.set_attr("d", u.cols);
     let out = backend.execute_sddmm(operand, u, v, kernel);
+    match &out {
+        Ok(ex) => span.set_attr("artifact", &ex.artifact),
+        Err(e) => span.set_attr("error", e),
+    }
+    out
+}
+
+/// Variant-precise sibling of [`execute_traced`]: wraps
+/// [`SpmmBackend::execute_variant`] in the same `kernel` span taxonomy,
+/// with the family under `kernel` and the full variant label under
+/// `variant` so traces stay greppable by either.
+pub fn execute_variant_traced(
+    backend: &dyn SpmmBackend,
+    operand: &PreparedOperand,
+    x: &DenseMatrix,
+    entry: &VariantEntry,
+) -> Result<Execution> {
+    let mut span = crate::obs::trace::span("kernel");
+    span.set_attr("backend", backend.name());
+    span.set_attr("kernel", entry.variant.family.label());
+    span.set_attr("variant", entry.label);
+    span.set_attr("n", x.cols);
+    let out = backend.execute_variant(operand, x, entry);
+    match &out {
+        Ok(ex) => span.set_attr("artifact", &ex.artifact),
+        Err(e) => span.set_attr("error", e),
+    }
+    out
+}
+
+/// SDDMM counterpart of [`execute_variant_traced`].
+pub fn execute_sddmm_variant_traced(
+    backend: &dyn SpmmBackend,
+    operand: &PreparedOperand,
+    u: &DenseMatrix,
+    v: &DenseMatrix,
+    entry: &VariantEntry,
+) -> Result<SddmmExecution> {
+    let mut span = crate::obs::trace::span("kernel");
+    span.set_attr("backend", backend.name());
+    span.set_attr("op", "sddmm");
+    span.set_attr("kernel", entry.variant.family.label());
+    span.set_attr("variant", entry.label);
+    span.set_attr("d", u.cols);
+    let out = backend.execute_sddmm_variant(operand, u, v, entry);
     match &out {
         Ok(ex) => span.set_attr("artifact", &ex.artifact),
         Err(e) => span.set_attr("error", e),
@@ -345,5 +418,44 @@ mod tests {
         // ... and declines delta patching, forcing a full re-prepare
         let csr = CsrMatrix::from_parts(0, 0, vec![0], vec![], vec![]);
         assert!(backend.prepare_delta(&op, &csr, false).is_none());
+    }
+
+    #[test]
+    fn default_variant_dispatch_collapses_to_the_family() {
+        use crate::kernels::{registry, SparseOp};
+        // A backend that never overrides the variant methods executes the
+        // variant's family — the closed-enum behavior, preserved.
+        struct FamilyOnly;
+        impl SpmmBackend for FamilyOnly {
+            fn name(&self) -> &'static str {
+                "familyonly"
+            }
+            fn prepare(&self, csr: &CsrMatrix) -> Result<PreparedOperand> {
+                Ok(PreparedOperand::new(csr.rows, csr.cols, csr.nnz(), Box::new(())))
+            }
+            fn execute(
+                &self,
+                _operand: &PreparedOperand,
+                x: &DenseMatrix,
+                kernel: KernelKind,
+            ) -> Result<Execution> {
+                Ok(Execution {
+                    y: DenseMatrix::zeros(0, x.cols),
+                    artifact: format!("family/{}", kernel.label()),
+                })
+            }
+        }
+        let backend = FamilyOnly;
+        let op = PreparedOperand::new(0, 0, 0, Box::new(()));
+        let x = DenseMatrix::zeros(0, 2);
+        let entry = registry().by_label(SparseOp::Spmm, "sr_wb.s64").unwrap();
+        let exec = backend.execute_variant(&op, &x, entry).unwrap();
+        assert_eq!(exec.artifact, "family/sr_wb");
+        // ... and the SDDMM default inherits the unsupported report
+        let u = DenseMatrix::zeros(0, 1);
+        let v = DenseMatrix::zeros(0, 1);
+        let entry = registry().by_label(SparseOp::Sddmm, "pr_wb").unwrap();
+        let err = backend.execute_sddmm_variant(&op, &u, &v, entry).unwrap_err();
+        assert!(err.to_string().contains("does not implement SDDMM"));
     }
 }

@@ -13,11 +13,15 @@
 
 use super::{Execution, PreparedOperand, SddmmExecution, SpmmBackend};
 use crate::features::MatrixFeatures;
-use crate::kernels::{merge_path, pr_rs, pr_wb, sr_rs, sr_wb, KernelKind, Traversal, WARP};
+use crate::kernels::{
+    merge_path, pr_rs, pr_wb, sr_rs, sr_wb, KernelKind, Traversal, VariantEntry, WARP,
+};
 use crate::selector::AdaptiveSelector;
 use crate::sparse::{CsrMatrix, DenseMatrix, SegmentedMatrix};
 use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// How the backend walks rows for the sequential-reduction kernels
 /// (`DESIGN.md` §Vectorization). Orthogonal to [`KernelKind`]: results
@@ -56,6 +60,29 @@ struct NativePrepared {
     csr: CsrMatrix,
     segments: SegmentedMatrix,
     features: MatrixFeatures,
+    /// Non-canonical segment layouts (variant seg lengths ≠ `WARP`),
+    /// built lazily on first use and cached for the operand's lifetime —
+    /// a variant sweep pays each re-cut once, plain family traffic pays
+    /// nothing. The mutex guards only the map; kernels run on `Arc`
+    /// clones outside the lock.
+    alt_segments: Mutex<HashMap<usize, Arc<SegmentedMatrix>>>,
+}
+
+impl NativePrepared {
+    /// Run `f` against the segmented layout of the given length, using
+    /// the eagerly-prepared canonical layout when it matches.
+    fn with_segments<R>(&self, seg_len: usize, f: impl FnOnce(&SegmentedMatrix) -> R) -> R {
+        if seg_len == self.segments.seg_len {
+            return f(&self.segments);
+        }
+        let seg = {
+            let mut map = self.alt_segments.lock().unwrap_or_else(|e| e.into_inner());
+            map.entry(seg_len)
+                .or_insert_with(|| Arc::new(SegmentedMatrix::from_csr(&self.csr, seg_len)))
+                .clone()
+        };
+        f(&seg)
+    }
 }
 
 /// CPU execution backend over [`crate::kernels`].
@@ -120,6 +147,7 @@ impl SpmmBackend for NativeBackend {
                 csr: csr.clone(),
                 segments,
                 features,
+                alt_segments: Mutex::new(HashMap::new()),
             }),
         ))
     }
@@ -165,6 +193,7 @@ impl SpmmBackend for NativeBackend {
                 csr: csr.clone(),
                 segments,
                 features: prep.features,
+                alt_segments: Mutex::new(HashMap::new()),
             }),
         )))
     }
@@ -236,6 +265,52 @@ impl SpmmBackend for NativeBackend {
         Ok(SddmmExecution {
             values,
             artifact: format!("native/sddmm/{}", kernel.label()),
+        })
+    }
+
+    fn execute_variant(
+        &self,
+        operand: &PreparedOperand,
+        x: &DenseMatrix,
+        entry: &VariantEntry,
+    ) -> Result<Execution> {
+        let prep: &NativePrepared = operand.state()?;
+        operand.check_operand(x)?;
+        let mut y = DenseMatrix::zeros(prep.csr.rows, x.cols);
+        if prep.csr.rows > 0 && x.cols > 0 {
+            // A variant fixes its own traversal axis (`sr_rs.mp` *is* the
+            // merge-path entry), so the backend-level TraversalMode policy
+            // does not apply on this path — the selector that picked the
+            // variant already owns that decision.
+            prep.with_segments(entry.variant.seg_len, |seg| {
+                entry.run_spmm(&prep.csr, seg, x, &mut y, &self.pool)
+            })?;
+        }
+        // Canonical variants carry the family label, so this collapses to
+        // the classic `native/<kernel>` artifact for the four canonical
+        // points and extends it (`native/sr_wb.s64`, ...) for the rest.
+        Ok(Execution {
+            y,
+            artifact: format!("native/{}", entry.label),
+        })
+    }
+
+    fn execute_sddmm_variant(
+        &self,
+        operand: &PreparedOperand,
+        u: &DenseMatrix,
+        v: &DenseMatrix,
+        entry: &VariantEntry,
+    ) -> Result<SddmmExecution> {
+        let prep: &NativePrepared = operand.state()?;
+        operand.check_sddmm_operands(u, v)?;
+        let mut values = vec![0f32; prep.csr.nnz()];
+        prep.with_segments(entry.variant.seg_len, |seg| {
+            entry.run_sddmm(&prep.csr, seg, u, v, &mut values, &self.pool)
+        })?;
+        Ok(SddmmExecution {
+            values,
+            artifact: format!("native/sddmm/{}", entry.label),
         })
     }
 }
@@ -396,6 +471,40 @@ mod tests {
         // a shape-inconsistent "value-only" claim is an error, not a
         // silent mispatch
         assert!(backend.prepare_delta(&prev, &csr, false).unwrap().is_err());
+    }
+
+    #[test]
+    fn variant_dispatch_matches_reference_and_labels_artifacts() {
+        use crate::kernels::{registry, SparseOp};
+        let mut rng = Xoshiro256::seeded(61);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(85, 65, 0.09, &mut rng));
+        let backend = NativeBackend::new(ThreadPool::new(3));
+        let op = backend.prepare(&csr).unwrap();
+        let x = DenseMatrix::random(65, 6, 1.0, &mut rng);
+        let mut want = DenseMatrix::zeros(85, 6);
+        spmm_reference(&csr, &x, &mut want);
+        for e in registry().op_variants(SparseOp::Spmm) {
+            let exec = backend.execute_variant(&op, &x, e).unwrap();
+            assert_eq!(exec.artifact, format!("native/{}", e.label));
+            assert_close(&exec.y.data, &want.data, 1e-5, 1e-5)
+                .unwrap_or_else(|err| panic!("{}: {err}", e.label));
+        }
+        // canonical variants produce the classic family artifact strings
+        let canon = registry().canonical(SparseOp::Spmm, KernelKind::PrWb);
+        let exec = backend.execute_variant(&op, &x, canon).unwrap();
+        assert_eq!(exec.artifact, "native/pr_wb");
+
+        // SDDMM variants stay bit-identical to the reference
+        use crate::kernels::dense::sddmm_reference;
+        let u = DenseMatrix::random(85, 8, 1.0, &mut rng);
+        let v = DenseMatrix::random(65, 8, 1.0, &mut rng);
+        let mut svals = vec![0f32; csr.nnz()];
+        sddmm_reference(&csr, &u, &v, &mut svals);
+        for e in registry().op_variants(SparseOp::Sddmm) {
+            let exec = backend.execute_sddmm_variant(&op, &u, &v, e).unwrap();
+            assert_eq!(exec.artifact, format!("native/sddmm/{}", e.label));
+            assert_eq!(exec.values, svals, "{}", e.label);
+        }
     }
 
     #[test]

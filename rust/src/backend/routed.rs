@@ -12,7 +12,7 @@
 //! layer's large-matrix routing policy (see `DESIGN.md` §Serving layer).
 
 use super::{Execution, NativeBackend, PreparedOperand, SddmmExecution, SpmmBackend};
-use crate::kernels::KernelKind;
+use crate::kernels::{KernelKind, VariantEntry};
 use crate::selector::AdaptiveSelector;
 use crate::shard::ShardedBackend;
 use crate::sparse::{CsrMatrix, DenseMatrix};
@@ -174,6 +174,39 @@ impl SpmmBackend for RoutedBackend {
         }
     }
 
+    fn execute_variant(
+        &self,
+        operand: &PreparedOperand,
+        x: &DenseMatrix,
+        entry: &VariantEntry,
+    ) -> Result<Execution> {
+        let prep: &RoutedPrepared = operand.state()?;
+        let mut span = crate::obs::trace::span("route");
+        span.set_attr("side", if prep.large { "large" } else { "small" });
+        if prep.large {
+            self.large.execute_variant(&prep.operand, x, entry)
+        } else {
+            self.small.execute_variant(&prep.operand, x, entry)
+        }
+    }
+
+    fn execute_sddmm_variant(
+        &self,
+        operand: &PreparedOperand,
+        u: &DenseMatrix,
+        v: &DenseMatrix,
+        entry: &VariantEntry,
+    ) -> Result<SddmmExecution> {
+        let prep: &RoutedPrepared = operand.state()?;
+        let mut span = crate::obs::trace::span("route");
+        span.set_attr("side", if prep.large { "large" } else { "small" });
+        if prep.large {
+            self.large.execute_sddmm_variant(&prep.operand, u, v, entry)
+        } else {
+            self.small.execute_sddmm_variant(&prep.operand, u, v, entry)
+        }
+    }
+
     fn available_n(&self) -> Option<Vec<usize>> {
         // Diagnostic only: the default serving composition is
         // width-agnostic on both sides. With a fixed-width inner, the
@@ -311,6 +344,30 @@ mod tests {
         let rep = delta.apply(&mut csr);
         assert!(rep.structural);
         assert!(backend.prepare_delta(&prev, &csr, rep.structural).is_none());
+    }
+
+    #[test]
+    fn variant_execution_follows_the_recorded_route() {
+        use crate::kernels::{registry, SparseOp};
+        let mut rng = Xoshiro256::seeded(908);
+        let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(60, 40, 0.1, &mut rng));
+        let x = DenseMatrix::random(40, 5, 1.0, &mut rng);
+        let mut want = DenseMatrix::zeros(60, 5);
+        spmm_reference(&csr, &x, &mut want);
+        let entry = registry().by_label(SparseOp::Spmm, "sr_rs.t4").unwrap();
+        // small side: the native backend honors the exact variant
+        let backend = RoutedBackend::new(usize::MAX, 2);
+        let op = backend.prepare(&csr).unwrap();
+        let exec = backend.execute_variant(&op, &x, entry).unwrap();
+        assert_eq!(exec.artifact, "native/sr_rs.t4");
+        assert_close(&exec.y.data, &want.data, 1e-5, 1e-5).unwrap();
+        // large side: forwarded to the sharded backend (which may
+        // collapse to the family), still numerically right
+        let backend = RoutedBackend::new(1, 2);
+        let op = backend.prepare(&csr).unwrap();
+        let exec = backend.execute_variant(&op, &x, entry).unwrap();
+        assert!(exec.artifact.starts_with("sharded(k="), "{}", exec.artifact);
+        assert_close(&exec.y.data, &want.data, 1e-5, 1e-5).unwrap();
     }
 
     #[test]

@@ -11,10 +11,11 @@
 use super::cache::PreparedCache;
 use super::metrics::Metrics;
 use crate::backend::{
-    execute_sddmm_traced, execute_traced, NativeBackend, PreparedOperand, SpmmBackend,
+    execute_sddmm_traced, execute_sddmm_variant_traced, execute_traced, execute_variant_traced,
+    NativeBackend, PreparedOperand, SpmmBackend,
 };
 use crate::features::MatrixFeatures;
-use crate::kernels::{KernelKind, SparseOp, WARP};
+use crate::kernels::{registry, KernelKind, SparseOp, VariantEntry, WARP};
 use crate::obs::{trace, AuditEntry};
 use crate::selector::{AdaptiveSelector, Decision, OnlineConfig, OnlineSelector, SddmmSelector};
 use crate::sparse::{CsrMatrix, DeltaOutcome, DenseMatrix, EdgeDelta};
@@ -521,6 +522,7 @@ impl SpmmEngine {
                 thresholds: decision.thresholds,
                 rule: decision.rule,
                 kernel: decision.kernel,
+                variant: None,
                 explored: false,
                 realized_cost: None,
             });
@@ -580,6 +582,7 @@ impl SpmmEngine {
 
     /// Record one request-grain selector decision into the audit log and
     /// return the chosen kernel.
+    #[allow(clippy::too_many_arguments)]
     fn audit_request(
         &self,
         op: SparseOp,
@@ -588,6 +591,7 @@ impl SpmmEngine {
         features: MatrixFeatures,
         n: usize,
         decision: Decision,
+        variant: Option<&'static str>,
         explored: bool,
     ) -> KernelKind {
         let kernel = decision.kernel;
@@ -603,6 +607,7 @@ impl SpmmEngine {
             thresholds: decision.thresholds,
             rule: decision.rule,
             kernel,
+            variant,
             explored,
             realized_cost: None,
         });
@@ -612,10 +617,28 @@ impl SpmmEngine {
     /// The audit log's explain report restricted to one handle's
     /// request-grain decisions: for each retained decision, the features
     /// the selector saw, the thresholds it consulted (enough to replay
-    /// the rule), the kernel it chose, and the realized normalized cost
-    /// once the online path observed it.
+    /// the rule), the kernel it chose (plus the generated variant, when
+    /// one was dispatched), and the realized normalized cost once the
+    /// online path observed it. Footed with the variant-space shape the
+    /// selector chooses from, so a report is interpretable on its own.
     pub fn explain(&self, h: MatrixHandle) -> String {
-        self.metrics.audit().explain(Some(h.0))
+        let mut report = self.metrics.audit().explain(Some(h.0));
+        let reg = registry();
+        if !report.ends_with('\n') && !report.is_empty() {
+            report.push('\n');
+        }
+        report.push_str(&format!(
+            "variant space: {} generated ({} spmm, {} sddmm) across {} families\n",
+            reg.len(),
+            reg.op_variants(SparseOp::Spmm).len(),
+            reg.op_variants(SparseOp::Sddmm).len(),
+            KernelKind::ALL.len()
+        ));
+        if let Some(online) = &self.online {
+            report.push_str(&online.summary());
+            report.push('\n');
+        }
+        report
     }
 
     /// Execute `Y = A · X` with adaptive kernel selection (the online
@@ -623,33 +646,36 @@ impl SpmmEngine {
     /// built with [`SpmmEngine::serving_online`]).
     pub fn spmm(&self, h: MatrixHandle, x: &DenseMatrix) -> Result<SpmmResponse> {
         let reg = self.get(h)?;
-        let kernel = match &self.online {
+        match &self.online {
             Some(online) => {
-                let (decision, explored) = online.decide(&reg.features, x.cols);
-                self.audit_request(
+                let (decision, entry, explored) = online.decide_variant(&reg.features, x.cols);
+                let kernel = self.audit_request(
                     SparseOp::Spmm,
                     "online",
                     h,
                     reg.features,
                     x.cols,
                     decision,
+                    Some(entry.label),
                     explored,
-                )
+                );
+                self.spmm_dispatch(h, x, kernel, Some(entry))
             }
             None => {
                 let decision = self.selector.decide(&reg.features, x.cols);
-                self.audit_request(
+                let kernel = self.audit_request(
                     SparseOp::Spmm,
                     "adaptive",
                     h,
                     reg.features,
                     x.cols,
                     decision,
+                    None,
                     false,
-                )
+                );
+                self.spmm_dispatch(h, x, kernel, None)
             }
-        };
-        self.spmm_with(h, x, kernel)
+        }
     }
 
     /// Execute with an explicit kernel choice (oracle / ablation paths).
@@ -664,6 +690,20 @@ impl SpmmEngine {
         x: &DenseMatrix,
         kernel: KernelKind,
     ) -> Result<SpmmResponse> {
+        self.spmm_dispatch(h, x, kernel, None)
+    }
+
+    /// Shared execution tail of [`SpmmEngine::spmm`] /
+    /// [`SpmmEngine::spmm_with`]: with a resolved variant the backend runs
+    /// that exact generated kernel (and metrics index its registry slot);
+    /// without one the family-grain path is unchanged.
+    fn spmm_dispatch(
+        &self,
+        h: MatrixHandle,
+        x: &DenseMatrix,
+        kernel: KernelKind,
+        entry: Option<&'static VariantEntry>,
+    ) -> Result<SpmmResponse> {
         let reg = self.get(h)?;
         // One "dispatch" span per request: inside an admitted serving
         // trace this nests under the installed context; on direct engine
@@ -676,6 +716,9 @@ impl SpmmEngine {
         );
         req.set_attr("op", SparseOp::Spmm.label());
         req.set_attr("kernel", kernel.label());
+        if let Some(e) = entry {
+            req.set_attr("variant", e.label);
+        }
         req.set_attr("n", x.cols);
         req.set_attr("matrix", h.0);
         if let Err(e) = reg.prepared.check_operand(x) {
@@ -684,7 +727,11 @@ impl SpmmEngine {
             return Err(e);
         }
         let start = Instant::now();
-        let exec = match execute_traced(self.backend.as_ref(), &reg.prepared, x, kernel) {
+        let result = match entry {
+            Some(e) => execute_variant_traced(self.backend.as_ref(), &reg.prepared, x, e),
+            None => execute_traced(self.backend.as_ref(), &reg.prepared, x, kernel),
+        };
+        let exec = match result {
             Ok(exec) => exec,
             Err(e) => {
                 self.metrics.record_error();
@@ -694,7 +741,12 @@ impl SpmmEngine {
         };
         req.set_attr("artifact", &exec.artifact);
         let latency = start.elapsed();
-        self.metrics.record(kernel, latency);
+        match entry {
+            Some(e) => {
+                self.metrics.record_request_variant(e.id, latency);
+            }
+            None => self.metrics.record(kernel, latency),
+        }
         // Close the online loop for directly-executed requests. Sharded
         // executions already observed per shard (with per-shard features
         // and actual per-shard choices), so only the unsharded route —
@@ -703,7 +755,10 @@ impl SpmmEngine {
         // gather overhead to whichever kernel the hint named.
         if let Some(online) = &self.online {
             if exec.artifact.starts_with("native/") {
-                online.observe(&reg.features, x.cols, kernel, latency);
+                match entry {
+                    Some(e) => online.observe_variant(&reg.features, x.cols, e, latency),
+                    None => online.observe(&reg.features, x.cols, kernel, latency),
+                }
             }
         }
         Ok(SpmmResponse {
@@ -727,25 +782,36 @@ impl SpmmEngine {
     ) -> Result<SddmmResponse> {
         let reg = self.get(h)?;
         let d = u.cols;
-        let kernel = match &self.online {
+        match &self.online {
             Some(online) => {
-                let (decision, explored) = online.decide_sddmm(&reg.features, d);
-                self.audit_request(
+                let (decision, entry, explored) = online.decide_sddmm_variant(&reg.features, d);
+                let kernel = self.audit_request(
                     SparseOp::Sddmm,
                     "online-sddmm",
                     h,
                     reg.features,
                     d,
                     decision,
+                    Some(entry.label),
                     explored,
-                )
+                );
+                self.sddmm_dispatch(h, u, v, kernel, Some(entry))
             }
             None => {
                 let decision = self.sddmm_selector.decide(&reg.features, d);
-                self.audit_request(SparseOp::Sddmm, "sddmm", h, reg.features, d, decision, false)
+                let kernel = self.audit_request(
+                    SparseOp::Sddmm,
+                    "sddmm",
+                    h,
+                    reg.features,
+                    d,
+                    decision,
+                    None,
+                    false,
+                );
+                self.sddmm_dispatch(h, u, v, kernel, None)
             }
-        };
-        self.sddmm_with(h, u, v, kernel)
+        }
     }
 
     /// Execute SDDMM with an explicit kernel choice (oracle / ablation
@@ -759,6 +825,19 @@ impl SpmmEngine {
         v: &DenseMatrix,
         kernel: KernelKind,
     ) -> Result<SddmmResponse> {
+        self.sddmm_dispatch(h, u, v, kernel, None)
+    }
+
+    /// Shared execution tail of [`SpmmEngine::sddmm`] /
+    /// [`SpmmEngine::sddmm_with`], mirroring `spmm_dispatch`.
+    fn sddmm_dispatch(
+        &self,
+        h: MatrixHandle,
+        u: &DenseMatrix,
+        v: &DenseMatrix,
+        kernel: KernelKind,
+        entry: Option<&'static VariantEntry>,
+    ) -> Result<SddmmResponse> {
         let reg = self.get(h)?;
         let mut req = trace::request(
             "dispatch",
@@ -767,6 +846,9 @@ impl SpmmEngine {
         );
         req.set_attr("op", SparseOp::Sddmm.label());
         req.set_attr("kernel", kernel.label());
+        if let Some(e) = entry {
+            req.set_attr("variant", e.label);
+        }
         req.set_attr("d", u.cols);
         req.set_attr("matrix", h.0);
         if let Err(e) = reg.prepared.check_sddmm_operands(u, v) {
@@ -775,7 +857,13 @@ impl SpmmEngine {
             return Err(e);
         }
         let start = Instant::now();
-        let exec = match execute_sddmm_traced(self.backend.as_ref(), &reg.prepared, u, v, kernel) {
+        let result = match entry {
+            Some(e) => {
+                execute_sddmm_variant_traced(self.backend.as_ref(), &reg.prepared, u, v, e)
+            }
+            None => execute_sddmm_traced(self.backend.as_ref(), &reg.prepared, u, v, kernel),
+        };
+        let exec = match result {
             Ok(exec) => exec,
             Err(e) => {
                 self.metrics.record_error();
@@ -785,12 +873,20 @@ impl SpmmEngine {
         };
         req.set_attr("artifact", &exec.artifact);
         let latency = start.elapsed();
-        self.metrics.record_sddmm(kernel, latency);
+        match entry {
+            Some(e) => {
+                self.metrics.record_request_variant(e.id, latency);
+            }
+            None => self.metrics.record_sddmm(kernel, latency),
+        }
         // Close the online loop for directly-executed requests, mirroring
-        // `spmm_with`: sharded fan-outs already observed per shard.
+        // `spmm_dispatch`: sharded fan-outs already observed per shard.
         if let Some(online) = &self.online {
             if exec.artifact.starts_with("native/sddmm/") {
-                online.observe_sddmm(&reg.features, u.cols, kernel, latency);
+                match entry {
+                    Some(e) => online.observe_variant(&reg.features, u.cols, e, latency),
+                    None => online.observe_sddmm(&reg.features, u.cols, kernel, latency),
+                }
             }
         }
         Ok(SddmmResponse {

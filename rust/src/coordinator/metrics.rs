@@ -6,16 +6,30 @@
 //! poison-tolerant acquisition per request), so a panicking worker can
 //! never wedge stats for the whole server.
 //!
+//! Since the kernel layer became a generated variant space
+//! ([`crate::kernels::generator`]), every bank here is **registry-indexed
+//! and runtime-sized**: one slot per [`crate::kernels::VariantEntry`],
+//! `registry().len()` wide, indexed by dense variant id. The former
+//! `KernelKind::ALL`-ordered `[...; 4]` arrays (and their
+//! `position().unwrap()` index fn) are gone — family-level views
+//! ([`Metrics::kernel_counts`], [`Metrics::latency_histogram`], ...)
+//! survive as **aggregations** over a family's variants, so the paper's
+//! 2×2 observability surface is unchanged while per-variant resolution
+//! is available underneath ([`Metrics::variant_request_count`],
+//! [`Metrics::latency_histogram_variant`]). Variant ids are validated on
+//! every entry point: an unknown id is a `false`/`None` return, never a
+//! panic.
+//!
 //! Requests and shards are counted separately: one sharded request fans
 //! out into K shard executions, each with its own kernel choice and
 //! wallclock. The `shard_*` counters are how per-shard adaptivity is
 //! observed from outside (`crate::shard::ShardedBackend` records them).
-//!
-//! The two sparse ops are **tagged apart**: `record`/`record_shard`
-//! count SpMM, `record_sddmm`/`record_sddmm_shard` count SDDMM, so
-//! per-op kernel selection stays observable when traffic mixes the
-//! FusedMM pair (attention workloads — `DESIGN.md` §SDDMM). Latency
-//! quantiles come per **op × grain × kernel** from the histogram banks
+//! The two sparse ops stay **tagged apart**: SpMM and SDDMM variants
+//! occupy disjoint id ranges of the same registry, so one bank per grain
+//! serves both ops while per-op totals and the per-op family counters
+//! remain separately observable (attention workloads mix the FusedMM
+//! pair — `DESIGN.md` §SDDMM). Latency quantiles come per
+//! **op × grain × kernel** from the histogram banks
 //! ([`Metrics::latency_histogram`]); the exposition surface
 //! (`crate::obs::expo`) renders them as Prometheus text and JSON.
 //!
@@ -25,12 +39,15 @@
 //! (engine, server, batcher, sharded backend) already shares one
 //! `Arc<Metrics>`.
 //!
-//! The per-`(feature bucket, kernel)` cost EWMAs ([`Metrics::observe_cost`]
-//! / [`Metrics::cost`]) are the substrate of online selector refinement:
-//! executions report normalized latencies here, and
-//! [`crate::selector::OnlineSelector`] refits its thresholds against the
-//! table (`DESIGN.md` §Measured calibration).
+//! The per-`(feature bucket, variant)` cost EWMAs
+//! ([`Metrics::observe_cost_variant`] / [`Metrics::cost_variant`]) are
+//! the substrate of online selector refinement: executions report
+//! normalized latencies here, [`crate::selector::OnlineSelector`] refits
+//! its family thresholds against the family view ([`Metrics::cost`] =
+//! the family's best variant estimate) and picks within-family winners
+//! from the per-variant cells (`DESIGN.md` §Kernel generation).
 
+use crate::kernels::generator::registry;
 use crate::kernels::{KernelKind, SparseOp};
 use crate::obs::audit::AuditLog;
 use crate::obs::hist::{AtomicHistogram, HistogramSnapshot};
@@ -40,7 +57,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-/// Number of feature buckets the per-kernel cost EWMAs are keyed by.
+/// Number of feature buckets the per-variant cost EWMAs are keyed by.
 /// The bucketing function lives in [`crate::selector::online`]
 /// (`feature_bucket`); `Metrics` only stores the table.
 pub const COST_BUCKETS: usize = 12;
@@ -50,34 +67,37 @@ pub const COST_BUCKETS: usize = 12;
 /// damped enough to ride out scheduler noise.
 pub const COST_EWMA_ALPHA: f64 = 0.25;
 
-/// Aggregate metrics for an engine instance.
-#[derive(Debug, Default)]
+/// Aggregate metrics for an engine instance. Every per-kernel bank is
+/// registry-indexed (one slot per generated variant, sized at
+/// construction); build via `Default`.
+#[derive(Debug)]
 pub struct Metrics {
     requests: AtomicU64,
     errors: AtomicU64,
-    by_kernel: [AtomicU64; 4],
-    /// total execution nanoseconds
+    /// total SpMM execution nanoseconds
     exec_ns: AtomicU64,
-    /// per-kernel request-latency histograms, [`KernelKind::ALL`] order
-    request_hist: [AtomicHistogram; 4],
+    /// request-grain selections per variant id (both ops — ids are
+    /// op-disjoint by registry construction)
+    request_by_variant: Vec<AtomicU64>,
+    /// request-grain latency histograms, one per variant id
+    request_hist: Vec<AtomicHistogram>,
     /// shard-level counters (sharded backends only; zero otherwise)
     shard_execs: AtomicU64,
-    shard_by_kernel: [AtomicU64; 4],
     shard_ns: AtomicU64,
     /// slowest single shard execution seen — the fan-out straggler bound
     shard_max_ns: AtomicU64,
-    shard_hist: [AtomicHistogram; 4],
-    /// SDDMM request-level counters — the second sparse op is tagged
-    /// apart from SpMM so per-op kernel selection stays observable
+    shard_by_variant: Vec<AtomicU64>,
+    shard_hist: Vec<AtomicHistogram>,
+    /// SDDMM totals — kept apart from the SpMM totals so per-op latency
+    /// means stay meaningful when traffic mixes the ops
     sddmm_requests: AtomicU64,
-    sddmm_by_kernel: [AtomicU64; 4],
     sddmm_ns: AtomicU64,
-    sddmm_request_hist: [AtomicHistogram; 4],
-    /// SDDMM shard-level counters (sharded backends only)
     sddmm_shard_execs: AtomicU64,
-    sddmm_shard_by_kernel: [AtomicU64; 4],
     sddmm_shard_ns: AtomicU64,
-    sddmm_shard_hist: [AtomicHistogram; 4],
+    /// partial re-preparation outcomes for sharded structural deltas:
+    /// prepared shard operands carried over verbatim vs. rebuilt
+    shard_reused: AtomicU64,
+    shard_reprepared: AtomicU64,
     /// prepared-matrix cache counters (engines with a cache only)
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
@@ -86,31 +106,117 @@ pub struct Metrics {
     rejected: AtomicU64,
     /// high-water mark of in-flight requests observed at admission
     queue_depth_max: AtomicU64,
-    /// per-(feature-bucket, kernel) EWMA of normalized execution cost
-    /// (seconds per flop), stored as f64 bits; what the online selector
-    /// refits thresholds against
-    cost_ewma: [[AtomicU64; 4]; COST_BUCKETS],
+    /// per-(feature-bucket, variant) EWMA of normalized execution cost
+    /// (seconds per flop), stored as f64 bits; row-major,
+    /// `bucket * registry().len() + variant`
+    cost_ewma: Vec<AtomicU64>,
     /// observation counts behind each EWMA cell (0 = cell is empty)
-    cost_obs: [[AtomicU64; 4]; COST_BUCKETS],
+    cost_obs: Vec<AtomicU64>,
     /// ring of the last N request traces (committed at request end)
     recorder: Arc<FlightRecorder>,
     /// ring of recent selector decisions with features and thresholds
     audit: Arc<AuditLog>,
 }
 
-fn kidx(kernel: KernelKind) -> usize {
-    KernelKind::ALL.iter().position(|k| *k == kernel).unwrap()
+impl Default for Metrics {
+    fn default() -> Self {
+        let nv = registry().len();
+        let counters = |n: usize| (0..n).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        let hists = |n: usize| (0..n).map(|_| AtomicHistogram::new()).collect::<Vec<_>>();
+        Self {
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            exec_ns: AtomicU64::new(0),
+            request_by_variant: counters(nv),
+            request_hist: hists(nv),
+            shard_execs: AtomicU64::new(0),
+            shard_ns: AtomicU64::new(0),
+            shard_max_ns: AtomicU64::new(0),
+            shard_by_variant: counters(nv),
+            shard_hist: hists(nv),
+            sddmm_requests: AtomicU64::new(0),
+            sddmm_ns: AtomicU64::new(0),
+            sddmm_shard_execs: AtomicU64::new(0),
+            sddmm_shard_ns: AtomicU64::new(0),
+            shard_reused: AtomicU64::new(0),
+            shard_reprepared: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            cache_evictions: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            queue_depth_max: AtomicU64::new(0),
+            cost_ewma: counters(COST_BUCKETS * nv),
+            cost_obs: counters(COST_BUCKETS * nv),
+            recorder: Arc::default(),
+            audit: Arc::default(),
+        }
+    }
 }
 
 impl Metrics {
-    /// Record one completed request.
+    /// Sum one variant-indexed bank over a family's variants of one op.
+    fn family_sum(&self, bank: &[AtomicU64], op: SparseOp, family: KernelKind) -> u64 {
+        registry()
+            .family_variants(op, family)
+            .iter()
+            .map(|e| bank[e.id].load(Ordering::Relaxed))
+            .sum()
+    }
+
+    fn four_families(&self, bank: &[AtomicU64], op: SparseOp) -> [u64; 4] {
+        KernelKind::ALL.map(|k| self.family_sum(bank, op, k))
+    }
+
+    /// Record one completed request under a specific **variant id**.
+    /// Routes to the SpMM or SDDMM totals by the variant's op tag;
+    /// returns `false` (recording nothing) for an unknown id.
+    pub fn record_request_variant(&self, variant: usize, latency: Duration) -> bool {
+        let Some(entry) = registry().get(variant) else {
+            return false;
+        };
+        let ns = latency.as_nanos() as u64;
+        match entry.variant.op {
+            SparseOp::Spmm => {
+                self.requests.fetch_add(1, Ordering::Relaxed);
+                self.exec_ns.fetch_add(ns, Ordering::Relaxed);
+            }
+            SparseOp::Sddmm => {
+                self.sddmm_requests.fetch_add(1, Ordering::Relaxed);
+                self.sddmm_ns.fetch_add(ns, Ordering::Relaxed);
+            }
+        }
+        self.request_by_variant[variant].fetch_add(1, Ordering::Relaxed);
+        self.request_hist[variant].record_duration(latency);
+        true
+    }
+
+    /// Record one shard execution under a specific **variant id**.
+    /// Returns `false` (recording nothing) for an unknown id.
+    pub fn record_shard_variant(&self, variant: usize, latency: Duration) -> bool {
+        let Some(entry) = registry().get(variant) else {
+            return false;
+        };
+        let ns = latency.as_nanos() as u64;
+        match entry.variant.op {
+            SparseOp::Spmm => {
+                self.shard_execs.fetch_add(1, Ordering::Relaxed);
+                self.shard_ns.fetch_add(ns, Ordering::Relaxed);
+                self.shard_max_ns.fetch_max(ns, Ordering::Relaxed);
+            }
+            SparseOp::Sddmm => {
+                self.sddmm_shard_execs.fetch_add(1, Ordering::Relaxed);
+                self.sddmm_shard_ns.fetch_add(ns, Ordering::Relaxed);
+            }
+        }
+        self.shard_by_variant[variant].fetch_add(1, Ordering::Relaxed);
+        self.shard_hist[variant].record_duration(latency);
+        true
+    }
+
+    /// Record one completed SpMM request at family grain — lands on the
+    /// family's canonical variant slot.
     pub fn record(&self, kernel: KernelKind, latency: Duration) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
-        let idx = kidx(kernel);
-        self.by_kernel[idx].fetch_add(1, Ordering::Relaxed);
-        self.exec_ns
-            .fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
-        self.request_hist[idx].record_duration(latency);
+        self.record_request_variant(registry().canonical_id(SparseOp::Spmm, kernel), latency);
     }
 
     /// Record a failed request.
@@ -118,17 +224,11 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Record one shard execution inside a sharded request. `kernel` is
-    /// the shard's own choice, which in adaptive mode may differ from the
-    /// request-level kernel recorded by [`Metrics::record`].
+    /// Record one SpMM shard execution inside a sharded request. `kernel`
+    /// is the shard's own choice, which in adaptive mode may differ from
+    /// the request-level kernel recorded by [`Metrics::record`].
     pub fn record_shard(&self, kernel: KernelKind, latency: Duration) {
-        self.shard_execs.fetch_add(1, Ordering::Relaxed);
-        let idx = kidx(kernel);
-        self.shard_by_kernel[idx].fetch_add(1, Ordering::Relaxed);
-        let ns = latency.as_nanos() as u64;
-        self.shard_ns.fetch_add(ns, Ordering::Relaxed);
-        self.shard_max_ns.fetch_max(ns, Ordering::Relaxed);
-        self.shard_hist[idx].record_duration(latency);
+        self.record_shard_variant(registry().canonical_id(SparseOp::Spmm, kernel), latency);
     }
 
     /// Completed request count.
@@ -141,14 +241,26 @@ impl Metrics {
         self.errors.load(Ordering::Relaxed)
     }
 
-    /// Requests per kernel, in [`KernelKind::ALL`] order.
+    /// SpMM requests per family, in [`KernelKind::ALL`] order — each
+    /// entry sums the family's variants.
     pub fn kernel_counts(&self) -> [u64; 4] {
-        [
-            self.by_kernel[0].load(Ordering::Relaxed),
-            self.by_kernel[1].load(Ordering::Relaxed),
-            self.by_kernel[2].load(Ordering::Relaxed),
-            self.by_kernel[3].load(Ordering::Relaxed),
-        ]
+        self.four_families(&self.request_by_variant, SparseOp::Spmm)
+    }
+
+    /// Request-grain selections of one variant id (0 for unknown ids).
+    pub fn variant_request_count(&self, variant: usize) -> u64 {
+        self.request_by_variant
+            .get(variant)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Shard-grain selections of one variant id (0 for unknown ids).
+    pub fn variant_shard_count(&self, variant: usize) -> u64 {
+        self.shard_by_variant
+            .get(variant)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     /// Mean execution latency.
@@ -165,15 +277,10 @@ impl Metrics {
         self.shard_execs.load(Ordering::Relaxed)
     }
 
-    /// Shard executions per kernel, in [`KernelKind::ALL`] order — the
-    /// observable trace of per-shard adaptive choices.
+    /// SpMM shard executions per family, in [`KernelKind::ALL`] order —
+    /// the observable trace of per-shard adaptive choices.
     pub fn shard_kernel_counts(&self) -> [u64; 4] {
-        [
-            self.shard_by_kernel[0].load(Ordering::Relaxed),
-            self.shard_by_kernel[1].load(Ordering::Relaxed),
-            self.shard_by_kernel[2].load(Ordering::Relaxed),
-            self.shard_by_kernel[3].load(Ordering::Relaxed),
-        ]
+        self.four_families(&self.shard_by_variant, SparseOp::Spmm)
     }
 
     /// Mean single-shard execution latency.
@@ -191,26 +298,38 @@ impl Metrics {
         Duration::from_nanos(self.shard_max_ns.load(Ordering::Relaxed))
     }
 
-    /// Record one completed SDDMM request. Op-tagged apart from
-    /// [`Metrics::record`] so SpMM and SDDMM kernel selection are
-    /// observable per op.
+    /// Record the outcome of one sharded structural re-preparation:
+    /// `reused` prepared shard operands carried over verbatim and
+    /// `reprepared` rebuilt from their re-cut row slices.
+    pub fn record_shard_reuse(&self, reused: u64, reprepared: u64) {
+        if reused > 0 {
+            self.shard_reused.fetch_add(reused, Ordering::Relaxed);
+        }
+        if reprepared > 0 {
+            self.shard_reprepared.fetch_add(reprepared, Ordering::Relaxed);
+        }
+    }
+
+    /// Prepared shard operands reused verbatim across structural deltas.
+    pub fn shard_operands_reused(&self) -> u64 {
+        self.shard_reused.load(Ordering::Relaxed)
+    }
+
+    /// Prepared shard operands rebuilt across structural deltas.
+    pub fn shard_operands_reprepared(&self) -> u64 {
+        self.shard_reprepared.load(Ordering::Relaxed)
+    }
+
+    /// Record one completed SDDMM request at family grain. Op-tagged
+    /// apart from [`Metrics::record`] so SpMM and SDDMM kernel selection
+    /// are observable per op.
     pub fn record_sddmm(&self, kernel: KernelKind, latency: Duration) {
-        self.sddmm_requests.fetch_add(1, Ordering::Relaxed);
-        let idx = kidx(kernel);
-        self.sddmm_by_kernel[idx].fetch_add(1, Ordering::Relaxed);
-        self.sddmm_ns
-            .fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
-        self.sddmm_request_hist[idx].record_duration(latency);
+        self.record_request_variant(registry().canonical_id(SparseOp::Sddmm, kernel), latency);
     }
 
     /// Record one SDDMM shard execution inside a sharded request.
     pub fn record_sddmm_shard(&self, kernel: KernelKind, latency: Duration) {
-        self.sddmm_shard_execs.fetch_add(1, Ordering::Relaxed);
-        let idx = kidx(kernel);
-        self.sddmm_shard_by_kernel[idx].fetch_add(1, Ordering::Relaxed);
-        self.sddmm_shard_ns
-            .fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
-        self.sddmm_shard_hist[idx].record_duration(latency);
+        self.record_shard_variant(registry().canonical_id(SparseOp::Sddmm, kernel), latency);
     }
 
     /// Completed SDDMM request count.
@@ -218,15 +337,10 @@ impl Metrics {
         self.sddmm_requests.load(Ordering::Relaxed)
     }
 
-    /// SDDMM requests per kernel, in [`KernelKind::ALL`] order — the
+    /// SDDMM requests per family, in [`KernelKind::ALL`] order — the
     /// per-op selection counter the serving layer exposes.
     pub fn sddmm_kernel_counts(&self) -> [u64; 4] {
-        [
-            self.sddmm_by_kernel[0].load(Ordering::Relaxed),
-            self.sddmm_by_kernel[1].load(Ordering::Relaxed),
-            self.sddmm_by_kernel[2].load(Ordering::Relaxed),
-            self.sddmm_by_kernel[3].load(Ordering::Relaxed),
-        ]
+        self.four_families(&self.request_by_variant, SparseOp::Sddmm)
     }
 
     /// Mean SDDMM execution latency.
@@ -244,15 +358,10 @@ impl Metrics {
         self.sddmm_shard_execs.load(Ordering::Relaxed)
     }
 
-    /// SDDMM shard executions per kernel, in [`KernelKind::ALL`] order —
+    /// SDDMM shard executions per family, in [`KernelKind::ALL`] order —
     /// the observable trace of per-shard adaptive SDDMM choices.
     pub fn sddmm_shard_kernel_counts(&self) -> [u64; 4] {
-        [
-            self.sddmm_shard_by_kernel[0].load(Ordering::Relaxed),
-            self.sddmm_shard_by_kernel[1].load(Ordering::Relaxed),
-            self.sddmm_shard_by_kernel[2].load(Ordering::Relaxed),
-            self.sddmm_shard_by_kernel[3].load(Ordering::Relaxed),
-        ]
+        self.four_families(&self.shard_by_variant, SparseOp::Sddmm)
     }
 
     /// Mean single-shard SDDMM execution latency.
@@ -317,20 +426,32 @@ impl Metrics {
         self.queue_depth_max.load(Ordering::Relaxed)
     }
 
-    /// Record one normalized execution-cost observation (seconds per
-    /// flop) for a `(feature bucket, kernel)` cell; updates the cell's
-    /// EWMA and observation count. Non-finite or non-positive costs are
-    /// ignored. Two racing first observations may briefly under-seed the
-    /// EWMA; it converges with the next few observations, which is all an
-    /// exponentially-weighted estimate promises anyway.
-    pub fn observe_cost(&self, bucket: usize, kernel: KernelKind, cost: f64) {
-        assert!(bucket < COST_BUCKETS, "bucket {bucket} out of range");
-        if !cost.is_finite() || cost <= 0.0 {
-            return;
+    /// Flat index of one `(bucket, variant)` cost cell, or `None` when
+    /// either index is out of range.
+    fn cost_cell(&self, bucket: usize, variant: usize) -> Option<usize> {
+        let nv = registry().len();
+        if bucket >= COST_BUCKETS || variant >= nv {
+            return None;
         }
-        let k = kidx(kernel);
-        let seen = self.cost_obs[bucket][k].fetch_add(1, Ordering::Relaxed);
-        let cell = &self.cost_ewma[bucket][k];
+        Some(bucket * nv + variant)
+    }
+
+    /// Record one normalized execution-cost observation (seconds per
+    /// flop) for a `(feature bucket, variant)` cell; updates the cell's
+    /// EWMA and observation count. Non-finite or non-positive costs and
+    /// out-of-range indices are ignored (`false` return), never a panic.
+    /// Two racing first observations may briefly under-seed the EWMA; it
+    /// converges with the next few observations, which is all an
+    /// exponentially-weighted estimate promises anyway.
+    pub fn observe_cost_variant(&self, bucket: usize, variant: usize, cost: f64) -> bool {
+        let Some(idx) = self.cost_cell(bucket, variant) else {
+            return false;
+        };
+        if !cost.is_finite() || cost <= 0.0 {
+            return false;
+        }
+        let seen = self.cost_obs[idx].fetch_add(1, Ordering::Relaxed);
+        let cell = &self.cost_ewma[idx];
         let mut cur = cell.load(Ordering::Relaxed);
         loop {
             let old = f64::from_bits(cur);
@@ -349,71 +470,118 @@ impl Metrics {
                 Err(observed) => cur = observed,
             }
         }
+        true
     }
 
-    /// Current EWMA cost (seconds per flop) of a `(bucket, kernel)` cell,
-    /// or `None` if nothing was observed there yet.
-    pub fn cost(&self, bucket: usize, kernel: KernelKind) -> Option<f64> {
-        let k = kidx(kernel);
-        if self.cost_obs[bucket][k].load(Ordering::Relaxed) == 0 {
+    /// Family-grain cost observation — lands on the family's canonical
+    /// SpMM variant cell.
+    pub fn observe_cost(&self, bucket: usize, kernel: KernelKind, cost: f64) {
+        self.observe_cost_variant(bucket, registry().canonical_id(SparseOp::Spmm, kernel), cost);
+    }
+
+    /// Current EWMA cost (seconds per flop) of a `(bucket, variant)`
+    /// cell, or `None` if nothing was observed there yet (or either
+    /// index is out of range).
+    pub fn cost_variant(&self, bucket: usize, variant: usize) -> Option<f64> {
+        let idx = self.cost_cell(bucket, variant)?;
+        if self.cost_obs[idx].load(Ordering::Relaxed) == 0 {
             return None;
         }
-        Some(f64::from_bits(self.cost_ewma[bucket][k].load(Ordering::Relaxed)))
+        Some(f64::from_bits(self.cost_ewma[idx].load(Ordering::Relaxed)))
     }
 
-    /// Observation count behind one `(bucket, kernel)` EWMA cell.
+    /// Observation count behind one `(bucket, variant)` cell (0 when
+    /// either index is out of range).
+    pub fn cost_observations_variant(&self, bucket: usize, variant: usize) -> u64 {
+        self.cost_cell(bucket, variant)
+            .map(|idx| self.cost_obs[idx].load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Family-grain cost view: the **best** (lowest) estimate among the
+    /// family's SpMM variant cells with evidence — the number threshold
+    /// refitting compares, since dispatch would pick that variant.
+    pub fn cost(&self, bucket: usize, kernel: KernelKind) -> Option<f64> {
+        registry()
+            .family_variants(SparseOp::Spmm, kernel)
+            .iter()
+            .filter_map(|e| self.cost_variant(bucket, e.id))
+            .reduce(f64::min)
+    }
+
+    /// Family-grain observation count: the sum over the family's SpMM
+    /// variant cells.
     pub fn cost_observations(&self, bucket: usize, kernel: KernelKind) -> u64 {
-        self.cost_obs[bucket][kidx(kernel)].load(Ordering::Relaxed)
+        registry()
+            .family_variants(SparseOp::Spmm, kernel)
+            .iter()
+            .map(|e| self.cost_observations_variant(bucket, e.id))
+            .sum()
     }
 
-    /// Forget every kernel's EWMA and observation count for one feature
+    /// Forget every variant's EWMA and observation count for one feature
     /// bucket. Feature-drift handling calls this when a mutating matrix
     /// migrates across buckets: evidence gathered on the pre-drift shape
     /// would otherwise keep steering choices for content that no longer
     /// exists (the cold cells re-seed from the next observations). A
-    /// racing `observe_cost` may land between the two stores; the cell
-    /// then re-seeds from that observation, which is the desired
-    /// post-reset behavior anyway.
+    /// racing `observe_cost_variant` may land between the two stores; the
+    /// cell then re-seeds from that observation, which is the desired
+    /// post-reset behavior anyway. Out-of-range buckets are a no-op.
     pub fn reset_cost_bucket(&self, bucket: usize) {
-        assert!(bucket < COST_BUCKETS, "bucket {bucket} out of range");
-        for k in 0..4 {
-            self.cost_obs[bucket][k].store(0, Ordering::Relaxed);
-            self.cost_ewma[bucket][k].store(0, Ordering::Relaxed);
+        if bucket >= COST_BUCKETS {
+            return;
+        }
+        let nv = registry().len();
+        for v in 0..nv {
+            self.cost_obs[bucket * nv + v].store(0, Ordering::Relaxed);
+            self.cost_ewma[bucket * nv + v].store(0, Ordering::Relaxed);
         }
     }
 
     /// Total cost observations across all cells.
     pub fn total_cost_observations(&self) -> u64 {
-        self.cost_obs
-            .iter()
-            .flat_map(|row| row.iter())
-            .map(|c| c.load(Ordering::Relaxed))
-            .sum()
+        self.cost_obs.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
-    fn hist_bank(&self, op: SparseOp, grain: Grain) -> &[AtomicHistogram; 4] {
-        match (op, grain) {
-            (SparseOp::Spmm, Grain::Request) => &self.request_hist,
-            (SparseOp::Spmm, Grain::Shard) => &self.shard_hist,
-            (SparseOp::Sddmm, Grain::Request) => &self.sddmm_request_hist,
-            (SparseOp::Sddmm, Grain::Shard) => &self.sddmm_shard_hist,
+    fn grain_hists(&self, grain: Grain) -> &[AtomicHistogram] {
+        match grain {
+            Grain::Request => &self.request_hist,
+            Grain::Shard => &self.shard_hist,
         }
     }
 
-    /// Snapshot one op × grain × kernel latency histogram.
+    /// Snapshot one op × grain × family latency distribution, merged
+    /// across the family's variants.
     pub fn latency_histogram(
         &self,
         op: SparseOp,
         grain: Grain,
         kernel: KernelKind,
     ) -> HistogramSnapshot {
-        self.hist_bank(op, grain)[kidx(kernel)].snapshot()
+        let bank = self.grain_hists(grain);
+        HistogramSnapshot::merged(
+            registry()
+                .family_variants(op, kernel)
+                .iter()
+                .map(|e| bank[e.id].snapshot()),
+        )
+    }
+
+    /// Snapshot one grain × variant latency distribution (`None` for
+    /// unknown ids).
+    pub fn latency_histogram_variant(
+        &self,
+        grain: Grain,
+        variant: usize,
+    ) -> Option<HistogramSnapshot> {
+        self.grain_hists(grain).get(variant).map(|h| h.snapshot())
     }
 
     /// Snapshot the latency distribution of one op × grain merged across
-    /// all four kernels.
+    /// all the op's variants.
     pub fn latency_histogram_merged(&self, op: SparseOp, grain: Grain) -> HistogramSnapshot {
-        HistogramSnapshot::merged(self.hist_bank(op, grain).iter().map(|h| h.snapshot()))
+        let bank = self.grain_hists(grain);
+        HistogramSnapshot::merged(registry().op_variants(op).iter().map(|e| bank[e.id].snapshot()))
     }
 
     /// SpMM request-latency quantile across all kernels, from the
@@ -433,8 +601,9 @@ impl Metrics {
         &self.audit
     }
 
-    /// One-line summary for logs. Shard, cache and admission counters are
-    /// appended only when their subsystem actually recorded something.
+    /// One-line summary for logs. Shard, delta-reuse, cache and admission
+    /// counters are appended only when their subsystem actually recorded
+    /// something.
     pub fn summary(&self) -> String {
         let counts = self.kernel_counts();
         let mut out = format!(
@@ -460,6 +629,13 @@ impl Metrics {
                 sc[1],
                 sc[2],
                 sc[3],
+            ));
+        }
+        if self.shard_operands_reused() + self.shard_operands_reprepared() > 0 {
+            out.push_str(&format!(
+                " delta_shards[reused={} reprepared={}]",
+                self.shard_operands_reused(),
+                self.shard_operands_reprepared(),
             ));
         }
         if self.sddmm_requests() > 0 || self.sddmm_shard_executions() > 0 {
@@ -591,6 +767,35 @@ mod tests {
     }
 
     #[test]
+    fn variant_grain_banks_aggregate_into_family_views() {
+        let m = Metrics::default();
+        let reg = registry();
+        let canon = reg.canonical_id(SparseOp::Spmm, KernelKind::SrRs);
+        let tiled = reg.by_label(SparseOp::Spmm, "sr_rs.t4").unwrap().id;
+        assert!(m.record_request_variant(canon, Duration::from_micros(10)));
+        assert!(m.record_request_variant(tiled, Duration::from_micros(20)));
+        assert!(m.record_shard_variant(tiled, Duration::from_micros(5)));
+        // family views sum the variants
+        assert_eq!(m.requests(), 2);
+        assert_eq!(m.kernel_counts(), [2, 0, 0, 0]);
+        assert_eq!(m.shard_kernel_counts(), [1, 0, 0, 0]);
+        // variant resolution underneath
+        assert_eq!(m.variant_request_count(canon), 1);
+        assert_eq!(m.variant_request_count(tiled), 1);
+        assert_eq!(m.variant_shard_count(tiled), 1);
+        let snap = m.latency_histogram_variant(Grain::Request, tiled).unwrap();
+        assert_eq!(snap.count, 1);
+        let fam = m.latency_histogram(SparseOp::Spmm, Grain::Request, KernelKind::SrRs);
+        assert_eq!(fam.count, 2, "family histogram merges variants");
+        // unknown ids record nothing and read as empty
+        assert!(!m.record_request_variant(usize::MAX, Duration::from_micros(1)));
+        assert!(!m.record_shard_variant(usize::MAX, Duration::from_micros(1)));
+        assert_eq!(m.variant_request_count(usize::MAX), 0);
+        assert!(m.latency_histogram_variant(Grain::Request, usize::MAX).is_none());
+        assert_eq!(m.requests(), 2);
+    }
+
+    #[test]
     fn cache_and_admission_counters_are_opt_in_sections() {
         let m = Metrics::default();
         let base = m.summary();
@@ -638,6 +843,30 @@ mod tests {
     }
 
     #[test]
+    fn variant_cost_cells_feed_the_family_view() {
+        let m = Metrics::default();
+        let reg = registry();
+        let canon = reg.canonical_id(SparseOp::Spmm, KernelKind::SrRs);
+        let tiled = reg.by_label(SparseOp::Spmm, "sr_rs.t1").unwrap().id;
+        assert!(m.observe_cost_variant(2, canon, 4.0));
+        assert!(m.observe_cost_variant(2, tiled, 1.0));
+        assert_eq!(m.cost_variant(2, canon), Some(4.0));
+        assert_eq!(m.cost_variant(2, tiled), Some(1.0));
+        // the family view reports the best variant's estimate
+        assert_eq!(m.cost(2, KernelKind::SrRs), Some(1.0));
+        assert_eq!(m.cost_observations(2, KernelKind::SrRs), 2);
+        assert_eq!(m.cost_observations_variant(2, tiled), 1);
+        // out-of-range indices are rejected, not panics
+        assert!(!m.observe_cost_variant(COST_BUCKETS, canon, 1.0));
+        assert!(!m.observe_cost_variant(0, usize::MAX, 1.0));
+        assert_eq!(m.cost_variant(COST_BUCKETS, canon), None);
+        assert_eq!(m.cost_observations_variant(0, usize::MAX), 0);
+        m.reset_cost_bucket(COST_BUCKETS); // out of range: no-op, no panic
+        m.reset_cost_bucket(2);
+        assert_eq!(m.cost(2, KernelKind::SrRs), None);
+    }
+
+    #[test]
     fn reset_cost_bucket_clears_one_bucket_only() {
         let m = Metrics::default();
         m.observe_cost(2, KernelKind::SrRs, 1.0);
@@ -671,6 +900,19 @@ mod tests {
         assert_eq!(m.cost_observations(3, KernelKind::SrWb), 2000);
         let c = m.cost(3, KernelKind::SrWb).unwrap();
         assert!((c - 2.0).abs() < 1e-6, "constant stream converges: {c}");
+    }
+
+    #[test]
+    fn shard_reuse_counters_accumulate() {
+        let m = Metrics::default();
+        assert_eq!(m.shard_operands_reused(), 0);
+        assert!(!m.summary().contains("delta_shards["));
+        m.record_shard_reuse(3, 1);
+        m.record_shard_reuse(0, 0); // no-op
+        m.record_shard_reuse(1, 2);
+        assert_eq!(m.shard_operands_reused(), 4);
+        assert_eq!(m.shard_operands_reprepared(), 3);
+        assert!(m.summary().contains("delta_shards[reused=4 reprepared=3]"));
     }
 
     #[test]

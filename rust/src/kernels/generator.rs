@@ -1,0 +1,523 @@
+//! The **variant registry**: executable, monomorphized entries for every
+//! [`KernelVariant`] this build ships.
+//!
+//! `kernels/variant.rs` names the widened design space; this module makes
+//! it runnable. Macro invocations stamp out the SpMM and SDDMM inner
+//! loops over the non-family axes (lane tile, row-chunk scale) into plain
+//! `fn` items, the hand-written kernels supply the canonical points, and
+//! [`VariantRegistry`] collects everything into a dense, id-indexed table
+//! of fn-pointer entries. All entries share two uniform signatures —
+//!
+//! ```text
+//! SpMM:  fn(&CsrMatrix, &SegmentedMatrix, &DenseMatrix, &mut DenseMatrix, &ThreadPool)
+//! SDDMM: fn(&CsrMatrix, &SegmentedMatrix, &DenseMatrix, &DenseMatrix, &mut [f32], &ThreadPool)
+//! ```
+//!
+//! — the caller (the native backend) resolves the segmented layout for
+//! the variant's `seg_len`; row-split entries simply ignore it. Segment
+//! variants of one family therefore share a single fn pointer: the
+//! monomorphization axis is the *layout*, not the code.
+//!
+//! Registry ids are **dense and global across both ops** (SpMM and SDDMM
+//! variants occupy one id space), which is what lets
+//! [`crate::coordinator::Metrics`] size its counter/histogram/cost banks
+//! `registry().len()` wide and index them directly by variant id. Ids are
+//! a *build-local* ordering — anything persisted (profiles, baselines,
+//! audit lines) uses the stable labels, never ids.
+//!
+//! Everything here is panic-free by construction: lookups return
+//! `Option`, execution returns `Result`, and the canonical points are
+//! precomputed at build so family→variant resolution cannot fail.
+
+use super::variant::KernelVariant;
+use super::{merge_path, pr_rs, pr_wb, sr_rs, sr_wb, KernelKind, SparseOp, Traversal};
+use crate::sparse::{CsrMatrix, DenseMatrix, SegmentedMatrix};
+use crate::util::threadpool::ThreadPool;
+use anyhow::{anyhow, Result};
+use std::sync::OnceLock;
+
+/// Uniform SpMM entry signature (row-split entries ignore `seg`).
+pub type SpmmVariantFn =
+    fn(&CsrMatrix, &SegmentedMatrix, &DenseMatrix, &mut DenseMatrix, &ThreadPool);
+
+/// Uniform SDDMM entry signature (row-split entries ignore `seg`).
+pub type SddmmVariantFn =
+    fn(&CsrMatrix, &SegmentedMatrix, &DenseMatrix, &DenseMatrix, &mut [f32], &ThreadPool);
+
+/// The executable payload of one entry, tagged by op.
+enum VariantFn {
+    Spmm(SpmmVariantFn),
+    Sddmm(SddmmVariantFn),
+}
+
+/// One registry entry: descriptor, stable label, dense id, entry point.
+pub struct VariantEntry {
+    /// Dense registry id (index into every registry-sized metric bank).
+    pub id: usize,
+    /// The descriptor this entry monomorphizes.
+    pub variant: KernelVariant,
+    /// The descriptor's stable canonical label, leaked once at registry
+    /// build so the observability layer can use it as `&'static str`.
+    pub label: &'static str,
+    run: VariantFn,
+}
+
+impl VariantEntry {
+    /// Execute an SpMM entry. `seg` must carry the entry's `seg_len` when
+    /// the family is workload-balanced (row-split entries ignore it).
+    pub fn run_spmm(
+        &self,
+        csr: &CsrMatrix,
+        seg: &SegmentedMatrix,
+        x: &DenseMatrix,
+        y: &mut DenseMatrix,
+        pool: &ThreadPool,
+    ) -> Result<()> {
+        let VariantFn::Spmm(f) = self.run else {
+            return Err(anyhow!("variant '{}' is not an SpMM entry", self.label));
+        };
+        if self.variant.family.is_balanced() && seg.seg_len != self.variant.seg_len {
+            return Err(anyhow!(
+                "variant '{}' needs a segment length of {}, got a layout of {}",
+                self.label,
+                self.variant.seg_len,
+                seg.seg_len
+            ));
+        }
+        f(csr, seg, x, y, pool);
+        Ok(())
+    }
+
+    /// Execute an SDDMM entry. Same layout contract as
+    /// [`VariantEntry::run_spmm`].
+    pub fn run_sddmm(
+        &self,
+        csr: &CsrMatrix,
+        seg: &SegmentedMatrix,
+        u: &DenseMatrix,
+        v: &DenseMatrix,
+        out: &mut [f32],
+        pool: &ThreadPool,
+    ) -> Result<()> {
+        let VariantFn::Sddmm(f) = self.run else {
+            return Err(anyhow!("variant '{}' is not an SDDMM entry", self.label));
+        };
+        if self.variant.family.is_balanced() && seg.seg_len != self.variant.seg_len {
+            return Err(anyhow!(
+                "variant '{}' needs a segment length of {}, got a layout of {}",
+                self.label,
+                self.variant.seg_len,
+                seg.seg_len
+            ));
+        }
+        f(csr, seg, u, v, out, pool);
+        Ok(())
+    }
+}
+
+/// Stable dense index of a family within per-family tables — the
+/// registry-era replacement for `KernelKind::ALL.iter().position(..)
+/// .unwrap()` chains (total over the enum, so it cannot fail).
+pub fn family_index(kernel: KernelKind) -> usize {
+    match kernel {
+        KernelKind::SrRs => 0,
+        KernelKind::SrWb => 1,
+        KernelKind::PrRs => 2,
+        KernelKind::PrWb => 3,
+    }
+}
+
+fn op_index(op: SparseOp) -> usize {
+    match op {
+        SparseOp::Spmm => 0,
+        SparseOp::Sddmm => 1,
+    }
+}
+
+/// The dense table of all generated variants, plus precomputed canonical
+/// points per (op, family). Built once per process by [`registry`].
+pub struct VariantRegistry {
+    entries: Vec<VariantEntry>,
+    canonical: [[usize; 4]; 2],
+}
+
+impl VariantRegistry {
+    /// Number of variants (the width of every registry-indexed bank).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the registry is empty (never, but keeps clippy honest).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All entries, ordered by id.
+    pub fn entries(&self) -> &[VariantEntry] {
+        &self.entries
+    }
+
+    /// Entry by dense id.
+    pub fn get(&self, id: usize) -> Option<&VariantEntry> {
+        self.entries.get(id)
+    }
+
+    /// Entry by (op, stable label).
+    pub fn by_label(&self, op: SparseOp, label: &str) -> Option<&VariantEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.variant.op == op && e.label == label)
+    }
+
+    /// The canonical entry of a family — the hand-written kernel.
+    /// Infallible: the canonical table is verified at build.
+    pub fn canonical(&self, op: SparseOp, family: KernelKind) -> &VariantEntry {
+        &self.entries[self.canonical[op_index(op)][family_index(family)]]
+    }
+
+    /// Dense id of a family's canonical entry.
+    pub fn canonical_id(&self, op: SparseOp, family: KernelKind) -> usize {
+        self.canonical[op_index(op)][family_index(family)]
+    }
+
+    /// All variants of one (op, family), ordered by id (canonical first
+    /// by construction).
+    pub fn family_variants(&self, op: SparseOp, family: KernelKind) -> Vec<&VariantEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.variant.op == op && e.variant.family == family)
+            .collect()
+    }
+
+    /// All variants of one op, ordered by id.
+    pub fn op_variants(&self, op: SparseOp) -> Vec<&VariantEntry> {
+        self.entries.iter().filter(|e| e.variant.op == op).collect()
+    }
+
+    fn build() -> Self {
+        let mut entries: Vec<VariantEntry> = Vec::new();
+        let mut push = |variant: KernelVariant, run: VariantFn| {
+            let label: &'static str = Box::leak(variant.label().into_boxed_str());
+            entries.push(VariantEntry {
+                id: entries.len(),
+                variant,
+                label,
+                run,
+            });
+        };
+
+        use KernelKind::*;
+        use SparseOp::*;
+        let c = KernelVariant::canonical;
+
+        // --- SpMM -------------------------------------------------------
+        // Canonical entries first within each family, so family_variants()
+        // always leads with the hand-written kernel.
+        push(c(Spmm, SrRs), VariantFn::Spmm(spmm_sr_rs));
+        push(c(Spmm, SrRs).with_lane_tile(1), VariantFn::Spmm(spmm_sr_rs_t1));
+        push(c(Spmm, SrRs).with_lane_tile(4), VariantFn::Spmm(spmm_sr_rs_t4));
+        push(
+            c(Spmm, SrRs).with_traversal(Traversal::MergePath),
+            VariantFn::Spmm(spmm_sr_mp),
+        );
+        // The segment variants of one family share a single fn pointer:
+        // the monomorphization axis is the prepared layout, not the code.
+        push(c(Spmm, SrWb), VariantFn::Spmm(spmm_sr_wb));
+        push(c(Spmm, SrWb).with_seg_len(16), VariantFn::Spmm(spmm_sr_wb));
+        push(c(Spmm, SrWb).with_seg_len(64), VariantFn::Spmm(spmm_sr_wb));
+        push(c(Spmm, PrRs), VariantFn::Spmm(spmm_pr_rs));
+        // PR-WB's VSR scan network is written against whole WARP multiples
+        // (`pr_wb::spmm` rejects anything else), so the 16-nnz segment
+        // point exists only for SDDMM, whose WB kernels are seg-agnostic.
+        push(c(Spmm, PrWb), VariantFn::Spmm(spmm_pr_wb));
+        push(c(Spmm, PrWb).with_seg_len(64), VariantFn::Spmm(spmm_pr_wb));
+
+        // --- SDDMM ------------------------------------------------------
+        push(c(Sddmm, SrRs), VariantFn::Sddmm(sddmm_sr_rs));
+        push(c(Sddmm, SrRs).with_lane_tile(1), VariantFn::Sddmm(sddmm_sr_rs_c16));
+        push(c(Sddmm, SrWb), VariantFn::Sddmm(sddmm_sr_wb));
+        push(c(Sddmm, SrWb).with_seg_len(16), VariantFn::Sddmm(sddmm_sr_wb));
+        push(c(Sddmm, SrWb).with_seg_len(64), VariantFn::Sddmm(sddmm_sr_wb));
+        push(c(Sddmm, PrRs), VariantFn::Sddmm(sddmm_pr_rs));
+        push(c(Sddmm, PrWb), VariantFn::Sddmm(sddmm_pr_wb));
+        push(c(Sddmm, PrWb).with_seg_len(64), VariantFn::Sddmm(sddmm_pr_wb));
+
+        // Precompute the canonical table; a missing point is a registry
+        // construction bug, caught at first use in any test.
+        let mut canonical = [[usize::MAX; 4]; 2];
+        for e in &entries {
+            if e.variant.is_canonical() {
+                canonical[op_index(e.variant.op)][family_index(e.variant.family)] = e.id;
+            }
+        }
+        debug_assert!(
+            canonical.iter().flatten().all(|&id| id < entries.len()),
+            "registry is missing a canonical point"
+        );
+        Self { entries, canonical }
+    }
+}
+
+/// The process-wide registry (built on first use).
+pub fn registry() -> &'static VariantRegistry {
+    static REG: OnceLock<VariantRegistry> = OnceLock::new();
+    REG.get_or_init(VariantRegistry::build)
+}
+
+// ---------------------------------------------------------------------------
+// Entry points. The canonical points delegate to the hand-written kernels;
+// the generated points are stamped out by the macros below.
+
+fn spmm_sr_rs(a: &CsrMatrix, _s: &SegmentedMatrix, x: &DenseMatrix, y: &mut DenseMatrix, p: &ThreadPool) {
+    sr_rs::spmm(a, x, y, p);
+}
+
+fn spmm_sr_mp(a: &CsrMatrix, _s: &SegmentedMatrix, x: &DenseMatrix, y: &mut DenseMatrix, p: &ThreadPool) {
+    merge_path::spmm(a, x, y, p);
+}
+
+fn spmm_sr_wb(_a: &CsrMatrix, s: &SegmentedMatrix, x: &DenseMatrix, y: &mut DenseMatrix, p: &ThreadPool) {
+    sr_wb::spmm(s, x, y, p);
+}
+
+fn spmm_pr_rs(a: &CsrMatrix, _s: &SegmentedMatrix, x: &DenseMatrix, y: &mut DenseMatrix, p: &ThreadPool) {
+    pr_rs::spmm(a, x, y, p);
+}
+
+fn spmm_pr_wb(_a: &CsrMatrix, s: &SegmentedMatrix, x: &DenseMatrix, y: &mut DenseMatrix, p: &ThreadPool) {
+    pr_wb::spmm(s, x, y, p);
+}
+
+fn sddmm_sr_rs(a: &CsrMatrix, _s: &SegmentedMatrix, u: &DenseMatrix, v: &DenseMatrix, out: &mut [f32], p: &ThreadPool) {
+    crate::sddmm::sr_rs::sddmm(a, u, v, out, p);
+}
+
+fn sddmm_sr_wb(_a: &CsrMatrix, s: &SegmentedMatrix, u: &DenseMatrix, v: &DenseMatrix, out: &mut [f32], p: &ThreadPool) {
+    crate::sddmm::sr_wb::sddmm(s, u, v, out, p);
+}
+
+fn sddmm_pr_rs(a: &CsrMatrix, _s: &SegmentedMatrix, u: &DenseMatrix, v: &DenseMatrix, out: &mut [f32], p: &ThreadPool) {
+    crate::sddmm::pr_rs::sddmm(a, u, v, out, p);
+}
+
+fn sddmm_pr_wb(_a: &CsrMatrix, s: &SegmentedMatrix, u: &DenseMatrix, v: &DenseMatrix, out: &mut [f32], p: &ThreadPool) {
+    crate::sddmm::pr_wb::sddmm(s, u, v, out, p);
+}
+
+/// Stamp out an SR-RS SpMM whose dense-width inner loop is tiled at a
+/// fixed width instead of routing through the `vec8` microkernel. The
+/// tile loop is the *outer* j loop, so every output element still
+/// accumulates its non-zeros in ascending-`k` order — bit-for-bit the
+/// dense reference in every feature configuration, exactly like the
+/// canonical kernel.
+macro_rules! gen_spmm_sr_rs_tiled {
+    ($name:ident, $tile:literal) => {
+        fn $name(
+            a: &CsrMatrix,
+            _s: &SegmentedMatrix,
+            x: &DenseMatrix,
+            y: &mut DenseMatrix,
+            pool: &ThreadPool,
+        ) {
+            assert_eq!(a.cols, x.rows, "inner dimension mismatch");
+            assert_eq!((y.rows, y.cols), (a.rows, x.cols), "output shape mismatch");
+            const TILE: usize = $tile;
+            let n = x.cols;
+            let w = n.max(1);
+            let pool = &pool.for_work(a.nnz() * w);
+            pool.for_each_row_chunk(&mut y.data, w, 64, |first_row, rows| {
+                rows.fill(0.0);
+                let nrows = rows.len() / w;
+                for i in 0..nrows {
+                    let r = first_row + i;
+                    if r >= a.rows {
+                        break;
+                    }
+                    let (cols, vals) = a.row(r);
+                    let out = &mut rows[i * n..(i + 1) * n];
+                    let mut jt = 0;
+                    while jt < n {
+                        let hi = (jt + TILE).min(n);
+                        for (&c, &v) in cols.iter().zip(vals) {
+                            let xr = x.row(c as usize);
+                            for j in jt..hi {
+                                out[j] += v * xr[j];
+                            }
+                        }
+                        jt = hi;
+                    }
+                }
+            });
+        }
+    };
+}
+
+gen_spmm_sr_rs_tiled!(spmm_sr_rs_t1, 1);
+gen_spmm_sr_rs_tiled!(spmm_sr_rs_t4, 4);
+
+/// Stamp out an SR-RS SDDMM with a fixed row-chunk granularity (the
+/// canonical kernel uses 64-row chunks). Dot products go through the
+/// shared canonical [`crate::sddmm::dot_sr`], so results stay bit-for-bit
+/// across chunkings in every feature configuration.
+macro_rules! gen_sddmm_sr_rs_chunk {
+    ($name:ident, $chunk:literal) => {
+        fn $name(
+            a: &CsrMatrix,
+            _s: &SegmentedMatrix,
+            u: &DenseMatrix,
+            v: &DenseMatrix,
+            out: &mut [f32],
+            pool: &ThreadPool,
+        ) {
+            assert_eq!(u.rows, a.rows, "U rows mismatch");
+            assert_eq!(v.rows, a.cols, "V rows mismatch");
+            assert_eq!(u.cols, v.cols, "U/V width mismatch");
+            assert_eq!(out.len(), a.nnz(), "output length mismatch");
+            if a.nnz() == 0 {
+                return;
+            }
+            let d = u.cols;
+            let pool = &pool.for_work(a.nnz() * d.max(1));
+            let shared = crate::sddmm::SharedValues::new(out);
+            pool.scope_chunks(a.rows, $chunk, |rows| {
+                let lo = a.indptr[rows.start] as usize;
+                let hi = a.indptr[rows.end] as usize;
+                if lo == hi {
+                    return;
+                }
+                // SAFETY: row blocks have disjoint nnz spans (indptr is
+                // monotone), per the SharedValues contract.
+                let out = unsafe { shared.slice_mut(lo, hi) };
+                for r in rows {
+                    let (cols, vals) = a.row(r);
+                    let base = a.indptr[r] as usize - lo;
+                    let urow = u.row(r);
+                    for k in 0..cols.len() {
+                        let vrow = v.row(cols[k] as usize);
+                        out[base + k] = vals[k] * crate::sddmm::dot_sr(urow, vrow);
+                    }
+                }
+            });
+        }
+    };
+}
+
+gen_sddmm_sr_rs_chunk!(sddmm_sr_rs_c16, 16);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense::{sddmm_reference, spmm_reference};
+    use crate::kernels::WARP;
+    use crate::sparse::CooMatrix;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn registry_spans_both_ops_with_enough_variants() {
+        let reg = registry();
+        assert!(reg.len() >= 12, "only {} variants", reg.len());
+        assert!(reg.op_variants(SparseOp::Spmm).len() >= 6);
+        assert!(reg.op_variants(SparseOp::Sddmm).len() >= 6);
+        // dense ids, unique labels per op
+        for (i, e) in reg.entries().iter().enumerate() {
+            assert_eq!(e.id, i);
+            assert_eq!(e.label, e.variant.label());
+            assert_eq!(reg.by_label(e.variant.op, e.label).map(|x| x.id), Some(i));
+        }
+    }
+
+    #[test]
+    fn canonical_points_carry_the_family_labels() {
+        let reg = registry();
+        for op in [SparseOp::Spmm, SparseOp::Sddmm] {
+            for family in KernelKind::ALL {
+                let e = reg.canonical(op, family);
+                assert_eq!(e.label, family.label());
+                assert!(e.variant.is_canonical());
+                assert_eq!(reg.canonical_id(op, family), e.id);
+                // canonical leads its family's variant list
+                let fam = reg.family_variants(op, family);
+                assert!(!fam.is_empty());
+                assert_eq!(fam[0].id, e.id);
+            }
+        }
+    }
+
+    #[test]
+    fn every_spmm_variant_matches_the_reference() {
+        let mut rng = Xoshiro256::seeded(901);
+        let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(80, 60, 0.1, &mut rng));
+        let x = DenseMatrix::random(60, 9, 1.0, &mut rng);
+        let mut want = DenseMatrix::zeros(80, 9);
+        spmm_reference(&a, &x, &mut want);
+        let pool = ThreadPool::new(3);
+        for e in registry().op_variants(SparseOp::Spmm) {
+            let seg = SegmentedMatrix::from_csr(&a, e.variant.seg_len);
+            let mut got = DenseMatrix::zeros(80, 9);
+            e.run_spmm(&a, &seg, &x, &mut got, &pool).unwrap();
+            crate::util::proptest::assert_close(&got.data, &want.data, 1e-5, 1e-5)
+                .unwrap_or_else(|err| panic!("{}: {err}", e.label));
+        }
+    }
+
+    #[test]
+    fn tiled_spmm_variants_are_bit_identical_to_the_canonical_kernel() {
+        let mut rng = Xoshiro256::seeded(902);
+        let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(50, 50, 0.15, &mut rng));
+        let seg = SegmentedMatrix::from_csr(&a, WARP);
+        let pool = ThreadPool::new(2);
+        for n in [1usize, 7, 8, 33] {
+            let x = DenseMatrix::random(50, n, 1.0, &mut rng);
+            let reg = registry();
+            let canon = reg.canonical(SparseOp::Spmm, KernelKind::SrRs);
+            let mut base = DenseMatrix::zeros(50, n);
+            canon.run_spmm(&a, &seg, &x, &mut base, &pool).unwrap();
+            for label in ["sr_rs.t1", "sr_rs.t4"] {
+                let e = reg.by_label(SparseOp::Spmm, label).unwrap();
+                let mut got = DenseMatrix::zeros(50, n);
+                e.run_spmm(&a, &seg, &x, &mut got, &pool).unwrap();
+                for (g, b) in got.data.iter().zip(&base.data) {
+                    assert_eq!(g.to_bits(), b.to_bits(), "{label} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_sddmm_variant_is_bit_identical_to_the_reference() {
+        let mut rng = Xoshiro256::seeded(903);
+        let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(60, 45, 0.12, &mut rng));
+        let pool = ThreadPool::new(3);
+        for d in [1usize, 8, 33] {
+            let u = DenseMatrix::random(60, d, 1.0, &mut rng);
+            let v = DenseMatrix::random(45, d, 1.0, &mut rng);
+            let mut want = vec![0f32; a.nnz()];
+            sddmm_reference(&a, &u, &v, &mut want);
+            for e in registry().op_variants(SparseOp::Sddmm) {
+                let seg = SegmentedMatrix::from_csr(&a, e.variant.seg_len);
+                let mut got = vec![0f32; a.nnz()];
+                e.run_sddmm(&a, &seg, &u, &v, &mut got, &pool).unwrap();
+                assert_eq!(got, want, "{} d={d}", e.label);
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_usage_errors_instead_of_panicking() {
+        let reg = registry();
+        let a = CsrMatrix::from_parts(0, 0, vec![0], vec![], vec![]);
+        let seg = SegmentedMatrix::from_csr(&a, WARP);
+        let x = DenseMatrix::zeros(0, 0);
+        let mut y = DenseMatrix::zeros(0, 0);
+        let pool = ThreadPool::serial();
+        // op mismatch
+        let sddmm = reg.canonical(SparseOp::Sddmm, KernelKind::SrRs);
+        assert!(sddmm.run_spmm(&a, &seg, &x, &mut y, &pool).is_err());
+        // wrong segment layout for a balanced variant
+        let s64 = reg.by_label(SparseOp::Spmm, "sr_wb.s64").unwrap();
+        assert!(s64.run_spmm(&a, &seg, &x, &mut y, &pool).is_err());
+        // unknown ids and labels are None, not panics
+        assert!(reg.get(usize::MAX).is_none());
+        assert!(reg.by_label(SparseOp::Spmm, "sr_rs.t9").is_none());
+    }
+}

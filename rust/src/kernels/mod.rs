@@ -34,12 +34,17 @@
 
 pub mod baseline;
 pub mod dense;
+pub mod generator;
 pub mod merge_path;
 pub mod pr_rs;
 pub mod pr_wb;
 pub mod sr_rs;
 pub mod sr_wb;
+pub mod variant;
 pub mod vec8;
+
+pub use generator::{registry, VariantEntry, VariantRegistry};
+pub use variant::KernelVariant;
 
 /// Lane count of the simulated SIMD bundle (a CUDA warp; maps to a VPU
 /// sublane group on TPU). The paper's kernels are written against 32.

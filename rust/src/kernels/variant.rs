@@ -1,0 +1,202 @@
+//! Kernel **variant descriptors** — the widened, parameterized design
+//! space behind the paper's 2×2 grid.
+//!
+//! The paper fixes four kernels (sequential/parallel reduction ×
+//! row-split/workload-balanced). "Heuristic Adaptability to Input
+//! Dynamics for SpMM on GPUs" (Dai et al.) and "Design Principles for
+//! Sparse Matrix Multiplication on the GPU" (Yang et al.) both show the
+//! remaining headroom lives in *secondary* axes — tile/unroll width and
+//! segment granularity — searched per input and hardware. A
+//! [`KernelVariant`] names one point of that widened space:
+//!
+//! - **family** ([`KernelKind`]) — the paper's 2×2 cell. Survives as the
+//!   tag the Fig.-4 rule selector and every family-level metric keep
+//!   using; variants refine a family, they never cross one.
+//! - **lane tile** ∈ {1, 4, 8} — dense-width tile of the inner loop for
+//!   the row-split SpMM designs (8 = the `vec8` microkernel path), and
+//!   row-chunk granularity for the row-split SDDMM designs.
+//! - **segment length** ∈ {`WARP`/2, `WARP`, 2·`WARP`} — the fixed-nnz
+//!   segment size of the workload-balanced designs (`WARP` is the
+//!   canonical layout every backend already prepares).
+//! - **traversal** ([`Traversal`]) — blocked rows or merge-path, for the
+//!   sequential-reduction designs.
+//!
+//! Each variant has a **stable canonical label**: the family label alone
+//! for the canonical point (`sr_rs`, `pr_wb`, ...), suffixed with
+//! `.t<tile>`, `.s<seg>`, `.mp` — in that order — for every non-default
+//! axis (`sr_rs.t4`, `sr_wb.s64`, `sr_rs.mp`). Labels are what persists:
+//! hardware profiles, audit entries, perfgate baselines and the stats
+//! surface all refer to variants by label, so the scheme must never
+//! change for an existing point.
+//!
+//! The executable registry over these descriptors lives in
+//! [`crate::kernels::generator`].
+
+use super::{KernelKind, SparseOp, Traversal, WARP};
+
+/// Lane-tile axis values (dense-width tile for SpMM row-split, row-chunk
+/// scale for SDDMM row-split). 8 is canonical — the `vec8` path.
+pub const LANE_TILES: [usize; 3] = [1, 4, 8];
+
+/// Segment-length axis values for the workload-balanced designs.
+/// `WARP` (32) is canonical.
+pub const SEG_LENS: [usize; 3] = [WARP / 2, WARP, 2 * WARP];
+
+/// The canonical lane tile (the hand-written kernels' inner loop).
+pub const CANONICAL_LANE_TILE: usize = 8;
+
+/// The canonical segment length (the layout every backend prepares).
+pub const CANONICAL_SEG_LEN: usize = WARP;
+
+/// One point of the widened kernel design space. See the module docs for
+/// the axes; construct via [`KernelVariant::canonical`] plus the `with_*`
+/// builders so unconstrained fields keep their canonical values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct KernelVariant {
+    /// Which sparse op the variant computes.
+    pub op: SparseOp,
+    /// The paper-family tag (selection rules operate on this).
+    pub family: KernelKind,
+    /// Dense-width tile (SpMM RS) / row-chunk scale (SDDMM RS).
+    pub lane_tile: usize,
+    /// Fixed-nnz segment length (workload-balanced families).
+    pub seg_len: usize,
+    /// Row traversal (sequential-reduction families).
+    pub traversal: Traversal,
+}
+
+impl KernelVariant {
+    /// The canonical point of a family: the hand-written kernel the
+    /// registry keeps byte-compatible labels for.
+    pub fn canonical(op: SparseOp, family: KernelKind) -> Self {
+        Self {
+            op,
+            family,
+            lane_tile: CANONICAL_LANE_TILE,
+            seg_len: CANONICAL_SEG_LEN,
+            traversal: Traversal::Blocked,
+        }
+    }
+
+    /// Same variant with another lane tile.
+    pub fn with_lane_tile(mut self, lane_tile: usize) -> Self {
+        self.lane_tile = lane_tile;
+        self
+    }
+
+    /// Same variant with another segment length.
+    pub fn with_seg_len(mut self, seg_len: usize) -> Self {
+        self.seg_len = seg_len;
+        self
+    }
+
+    /// Same variant with another traversal.
+    pub fn with_traversal(mut self, traversal: Traversal) -> Self {
+        self.traversal = traversal;
+        self
+    }
+
+    /// Whether this is the family's canonical point (label == family
+    /// label; behavior == the pre-registry hand-written kernel).
+    pub fn is_canonical(&self) -> bool {
+        self.lane_tile == CANONICAL_LANE_TILE
+            && self.seg_len == CANONICAL_SEG_LEN
+            && self.traversal == Traversal::Blocked
+    }
+
+    /// The stable canonical label (module docs). Suffix order is fixed:
+    /// tile, segment, traversal.
+    pub fn label(&self) -> String {
+        let mut out = String::from(self.family.label());
+        if self.lane_tile != CANONICAL_LANE_TILE {
+            out.push_str(&format!(".t{}", self.lane_tile));
+        }
+        if self.seg_len != CANONICAL_SEG_LEN {
+            out.push_str(&format!(".s{}", self.seg_len));
+        }
+        if self.traversal == Traversal::MergePath {
+            out.push_str(".mp");
+        }
+        out
+    }
+
+    /// Parse a label back into a variant of the given op. Inverse of
+    /// [`KernelVariant::label`]; returns `None` for malformed labels or
+    /// axis values outside the declared grids (profile loads use this, so
+    /// unknown labels must degrade gracefully, never panic).
+    pub fn from_label(op: SparseOp, label: &str) -> Option<Self> {
+        let mut parts = label.split('.');
+        let family = KernelKind::from_label(parts.next()?)?;
+        let mut v = Self::canonical(op, family);
+        for part in parts {
+            if let Some(t) = part.strip_prefix('t') {
+                let t: usize = t.parse().ok()?;
+                if !LANE_TILES.contains(&t) {
+                    return None;
+                }
+                v.lane_tile = t;
+            } else if let Some(s) = part.strip_prefix('s') {
+                let s: usize = s.parse().ok()?;
+                if !SEG_LENS.contains(&s) {
+                    return None;
+                }
+                v.seg_len = s;
+            } else if part == "mp" {
+                v.traversal = Traversal::MergePath;
+            } else {
+                return None;
+            }
+        }
+        Some(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_labels_are_the_family_labels() {
+        for op in [SparseOp::Spmm, SparseOp::Sddmm] {
+            for family in KernelKind::ALL {
+                let v = KernelVariant::canonical(op, family);
+                assert!(v.is_canonical());
+                assert_eq!(v.label(), family.label());
+            }
+        }
+    }
+
+    #[test]
+    fn labels_encode_every_non_default_axis_in_fixed_order() {
+        let v = KernelVariant::canonical(SparseOp::Spmm, KernelKind::SrRs).with_lane_tile(4);
+        assert_eq!(v.label(), "sr_rs.t4");
+        let v = KernelVariant::canonical(SparseOp::Spmm, KernelKind::SrWb).with_seg_len(64);
+        assert_eq!(v.label(), "sr_wb.s64");
+        let v = KernelVariant::canonical(SparseOp::Spmm, KernelKind::SrRs)
+            .with_traversal(Traversal::MergePath);
+        assert_eq!(v.label(), "sr_rs.mp");
+        let v = KernelVariant::canonical(SparseOp::Spmm, KernelKind::SrWb)
+            .with_lane_tile(1)
+            .with_seg_len(16)
+            .with_traversal(Traversal::MergePath);
+        assert_eq!(v.label(), "sr_wb.t1.s16.mp");
+    }
+
+    #[test]
+    fn labels_roundtrip_through_from_label() {
+        let cases = [
+            KernelVariant::canonical(SparseOp::Spmm, KernelKind::PrWb),
+            KernelVariant::canonical(SparseOp::Spmm, KernelKind::SrRs).with_lane_tile(1),
+            KernelVariant::canonical(SparseOp::Sddmm, KernelKind::SrWb).with_seg_len(16),
+            KernelVariant::canonical(SparseOp::Spmm, KernelKind::SrRs)
+                .with_traversal(Traversal::MergePath),
+        ];
+        for v in cases {
+            assert_eq!(KernelVariant::from_label(v.op, &v.label()), Some(v));
+        }
+        assert_eq!(KernelVariant::from_label(SparseOp::Spmm, "nope"), None);
+        assert_eq!(KernelVariant::from_label(SparseOp::Spmm, "sr_rs.t3"), None);
+        assert_eq!(KernelVariant::from_label(SparseOp::Spmm, "sr_rs.s48"), None);
+        assert_eq!(KernelVariant::from_label(SparseOp::Spmm, "sr_rs.x"), None);
+    }
+}

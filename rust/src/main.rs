@@ -22,6 +22,9 @@
 //!               flight-recorder traces) as Prometheus text and JSON
 //!   simulate    run the GPU cost model for all kernels on a matrix
 //!   calibrate   fit selector thresholds against simulator profiles
+//!   tune        budgeted search over the generated variant registry
+//!               (successive halving under --budget-ms); winners land in a
+//!               hardware profile that `serve --profile` installs
 //!   perfgate    measure normalized kernel/reference latency ratios on a
 //!               pinned workload and fail on regression vs a baseline JSON
 //!               (exit 3 = VACUOUS: nothing was actually compared)
@@ -76,14 +79,15 @@ fn run(sub: Option<&str>, rest: Vec<String>) -> Result<()> {
         Some("stats") => cmd_stats(rest),
         Some("simulate") => cmd_simulate(rest),
         Some("calibrate") => cmd_calibrate(rest),
+        Some("tune") => cmd_tune(rest),
         Some("perfgate") => cmd_perfgate(rest),
         Some("train-gcn") => cmd_train_gcn(rest),
         Some("suite") => cmd_suite(rest),
-        Some(other) => bail!("unknown subcommand '{other}' (try: info, features, select, spmm, sddmm, churn, serve, stats, simulate, calibrate, perfgate, train-gcn, suite)"),
+        Some(other) => bail!("unknown subcommand '{other}' (try: info, features, select, spmm, sddmm, churn, serve, stats, simulate, calibrate, tune, perfgate, train-gcn, suite)"),
         None => {
             println!(
                 "ge-spmm {} — adaptive workload-balanced/parallel-reduction sparse kernels\n\
-                 subcommands: info, features, select, spmm, sddmm, churn, serve, stats, simulate, calibrate, perfgate, train-gcn, suite\n\
+                 subcommands: info, features, select, spmm, sddmm, churn, serve, stats, simulate, calibrate, tune, perfgate, train-gcn, suite\n\
                  use `ge-spmm <subcommand> --help` for options",
                 ge_spmm::version()
             );
@@ -338,12 +342,16 @@ fn cmd_churn(rest: Vec<String>) -> Result<()> {
 
     let mut rng = Xoshiro256::seeded(seed ^ 0x5bd1e995);
     let (mut patched, mut reprepared, mut drifts) = (0usize, 0usize, 0usize);
+    let mut structural_patched = 0usize;
     for b in 0..batches {
         let delta = stream.next_batch();
         let out = engine.apply_delta(h, &delta)?;
         if out.report.touched() > 0 {
             if out.patched {
                 patched += 1;
+                if out.report.structural {
+                    structural_patched += 1;
+                }
             } else {
                 reprepared += 1;
             }
@@ -377,6 +385,24 @@ fn cmd_churn(rest: Vec<String>) -> Result<()> {
         stream.current().nnz(),
         stream.current().epoch
     );
+    if shards > 1 {
+        let reused = engine.metrics.shard_operands_reused();
+        let redone = engine.metrics.shard_operands_reprepared();
+        println!(
+            "shard operands across structural batches: {reused} reused \
+             (fingerprint match), {redone} re-prepared"
+        );
+        // The whole point of the fingerprint-gated delta path: a structural
+        // batch that was patched in place must not have rebuilt every shard.
+        if structural_patched > 0 {
+            anyhow::ensure!(
+                reused > 0,
+                "structural batches were patched in place but every shard \
+                 operand was rebuilt every time — partial re-preparation is \
+                 not happening"
+            );
+        }
+    }
     if let Some((entries, bytes)) = engine.cache_usage() {
         println!("cache: {entries} prepared matrices resident, {bytes} bytes");
     }
@@ -457,11 +483,11 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
     // Selector thresholds: explicit --profile beats $GE_SPMM_PROFILE
     // beats the paper defaults.
     use ge_spmm::selector::{HardwareProfile, OnlineConfig};
-    let base_selector = match args.get("profile") {
+    let profile: Option<HardwareProfile> = match args.get("profile") {
         Some(path) => {
             let p = HardwareProfile::load(Path::new(path))?;
             println!("loaded hardware profile {path}: {}", p.summary());
-            p.selector
+            Some(p)
         }
         None => match HardwareProfile::autoload()? {
             Some((path, p)) => {
@@ -470,11 +496,15 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
                     path.display(),
                     p.summary()
                 );
-                p.selector
+                Some(p)
             }
-            None => AdaptiveSelector::default(),
+            None => None,
         },
     };
+    let base_selector = profile
+        .as_ref()
+        .map(|p| p.selector.clone())
+        .unwrap_or_default();
     let cache_bytes = args.parse_positive("cache-mb", 64) << 20;
     let threshold = args.parse_positive("shard-threshold", 250_000);
     let shards = args.parse_positive("shards", 4);
@@ -493,6 +523,20 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
     } else {
         SpmmEngine::serving_with_selector(cache_bytes, threshold, shards, base_selector)
     });
+    // Tuned variant winners (from `ge-spmm tune --profile`) seed the online
+    // selector's per-bucket preferences, so tuned variants are dispatched
+    // from the first request rather than rediscovered by exploration.
+    if let (Some(online), Some(p)) = (engine.online(), &profile) {
+        if !p.variants.is_empty() {
+            let installed = online.install_variant_winners(
+                p.variants.iter().map(|w| (w.op, w.bucket, w.label.as_str())),
+            );
+            println!(
+                "installed {installed} of {} tuned variant winners from the profile",
+                p.variants.len()
+            );
+        }
+    }
     let config = ServerConfig {
         max_width: args.parse_positive("max-width", 128),
         max_delay: Duration::from_millis(args.parse_or("max-delay-ms", 2)),
@@ -837,11 +881,122 @@ fn cmd_calibrate(rest: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// Budgeted search over the generated variant registry (`DESIGN.md`
+/// §Kernel generation). For every (op, feature-bucket, family) cell that
+/// the collection populates, the tuner races the family's generated
+/// variants by successive halving — everyone gets a slice of the
+/// `--budget-ms` budget, the slower half is dropped, the survivors get
+/// the rest — and the winner's label is recorded. With `--profile` the
+/// winners are written into a v2 hardware profile (together with freshly
+/// fitted selector thresholds) that `serve --profile --online` installs
+/// as per-bucket variant preferences.
+fn cmd_tune(rest: Vec<String>) -> Result<()> {
+    use ge_spmm::backend::{NativeBackend, SpmmBackend};
+    use ge_spmm::kernels::{registry, SparseOp};
+    use ge_spmm::selector::measured::{self, MeasureConfig};
+    use ge_spmm::selector::HardwareProfile;
+
+    let cmd = Command::new(
+        "tune",
+        "budgeted successive-halving search over the generated kernel-variant \
+         registry; winners land in a hardware profile",
+    )
+    .opt("n-values", "SpMM dense widths to tune over", Some("8,32"))
+    .opt("d-values", "SDDMM embedding widths to tune over", Some("8,32"))
+    .flag("mini", "use the mini collection (fast)")
+    .opt("limit", "cap the number of suite matrices (0 = all)", Some("0"))
+    .opt(
+        "budget-ms",
+        "total measurement budget per (matrix, width, family) cell (ms)",
+        Some("24"),
+    )
+    .opt(
+        "profile",
+        "write the winners (plus fitted selector thresholds) as a \
+         hardware-profile JSON for `serve --profile`",
+        None,
+    )
+    .opt("seed", "operand seed", Some("42"));
+    let args = cmd.parse(&rest)?;
+    let n_values = args.parse_list("n-values", &[8usize, 32]);
+    let d_values = args.parse_list("d-values", &[8usize, 32]);
+    let mut specs = if args.flag("mini") {
+        Collection::mini_suite()
+    } else {
+        Collection::suite()
+    };
+    let limit: usize = args.parse_or("limit", 0);
+    if limit > 0 && specs.len() > limit {
+        specs.truncate(limit);
+    }
+    eprintln!("building {} matrices …", specs.len());
+    let matrices: Vec<CsrMatrix> = specs.iter().map(|s| s.build()).collect();
+
+    let backend = NativeBackend::default();
+    let base = MeasureConfig::default().with_budget_ms(args.parse_or("budget-ms", 24));
+    let cfg = MeasureConfig {
+        seed: args.parse_or("seed", 42),
+        ..base
+    };
+    let reg = registry();
+    eprintln!(
+        "tuning {} generated variants ({} spmm, {} sddmm) on {} matrices \
+         (n={n_values:?}, d={d_values:?}) on the {} backend …",
+        reg.len(),
+        reg.op_variants(SparseOp::Spmm).len(),
+        reg.op_variants(SparseOp::Sddmm).len(),
+        matrices.len(),
+        backend.name()
+    );
+    let report = measured::tune_variants(&backend, &matrices, &n_values, &d_values, &cfg)?;
+    if report.winners.is_empty() {
+        bail!("no variant winners (all suite matrices empty?)");
+    }
+
+    let mut table = ge_spmm::bench::Table::new(&["op", "bucket", "family", "winner", "cost/flop"]);
+    for w in &report.winners {
+        table.row(vec![
+            w.op.label().to_string(),
+            w.bucket.to_string(),
+            w.family.label().to_string(),
+            w.label.clone(),
+            format!("{:.3e}", w.cost),
+        ]);
+    }
+    table.print();
+    println!(
+        "tuned {} (op, bucket, family) cells from {} timed candidates; \
+         {} non-canonical winners",
+        report.winners.len(),
+        report.cells_timed,
+        report.non_canonical()
+    );
+
+    if let Some(path) = args.get("profile") {
+        // A profile needs selector thresholds too — fit them on the same
+        // suite so one file carries the whole machine-tuned policy.
+        let samples = measured::collect_samples(&matrices, &n_values, &backend, &cfg)?;
+        anyhow::ensure!(
+            !samples.is_empty(),
+            "no calibration samples to fit thresholds for the profile"
+        );
+        let cal = calibrate::calibrate(&samples);
+        let profile =
+            HardwareProfile::new(&cal, "measured", backend.name(), samples.len(), &n_values)
+                .with_variants(report.winners.clone());
+        profile.save(Path::new(path))?;
+        println!("wrote hardware profile {path}: {}", profile.summary());
+    }
+    Ok(())
+}
+
 /// The CI perf-regression gate (`DESIGN.md` §Vectorization, "Perf gate").
 ///
-/// Measures every kernel on a pinned synthetic workload and normalizes
-/// each median by the *same-run* dense-reference median, so the recorded
-/// numbers are machine-portable ratios (kernel/reference), not raw
+/// Measures every variant in the generated registry on a pinned synthetic
+/// workload — new variants are gated the moment they are registered, with
+/// no case list to update — and normalizes each median by the *same-run*
+/// dense-reference median, so the recorded numbers are machine-portable
+/// ratios (kernel/reference), not raw
 /// wallclock. `--record` writes the ratios as a baseline JSON; with
 /// `--baseline` the command re-measures and fails when any kernel's
 /// ratio grew by more than `--threshold` (default 1.3×, deliberately
@@ -853,10 +1008,11 @@ fn cmd_calibrate(rest: Vec<String>) -> Result<()> {
 /// can surface "the gate did not actually gate" instead of a green pass.
 fn cmd_perfgate(rest: Vec<String>) -> Result<()> {
     use ge_spmm::bench::harness::{bench_fn_with, BenchConfig};
-    use ge_spmm::kernels::{dense, merge_path, pr_rs, pr_wb, sr_rs, sr_wb, WARP};
+    use ge_spmm::kernels::{dense, registry, SparseOp};
     use ge_spmm::sparse::{CooMatrix, SegmentedMatrix};
     use ge_spmm::util::json::{num, obj, s, Json};
     use ge_spmm::util::threadpool::ThreadPool;
+    use std::collections::HashMap;
     use std::time::Duration;
 
     let cmd = Command::new(
@@ -905,9 +1061,29 @@ fn cmd_perfgate(rest: Vec<String>) -> Result<()> {
     };
     let plaw = CsrMatrix::from_coo(&plaw_cfg.generate(&mut rng));
 
+    let reg = registry();
+    if reg.entries().is_empty() {
+        println!(
+            "VACUOUS: the generated variant registry is empty — there is \
+             nothing to measure and nothing to gate"
+        );
+        std::process::exit(3);
+    }
+
+    // One segmented layout per distinct segment length, shared across the
+    // variants that use it (the layout is the monomorphization axis).
+    let layouts_for = |a: &CsrMatrix| -> HashMap<usize, SegmentedMatrix> {
+        let mut lens: Vec<usize> = reg.entries().iter().map(|e| e.variant.seg_len).collect();
+        lens.sort_unstable();
+        lens.dedup();
+        lens.into_iter()
+            .map(|l| (l, SegmentedMatrix::from_csr(a, l)))
+            .collect()
+    };
+
     let mut results: Vec<(String, f64)> = Vec::new();
     for (mname, a) in [("uniform", &uniform), ("plaw", &plaw)] {
-        let seg = SegmentedMatrix::from_csr(a, WARP);
+        let layouts = layouts_for(a);
         let x = DenseMatrix::random(a.cols, n, 1.0, &mut rng);
         let mut y = DenseMatrix::zeros(a.rows, n);
         let reference = bench_fn_with(&format!("{mname}/reference"), cfg, || {
@@ -915,30 +1091,24 @@ fn cmd_perfgate(rest: Vec<String>) -> Result<()> {
             std::hint::black_box(&y);
         });
         let ref_s = reference.median_s().max(1e-12);
-        // each case reuses its own preallocated output, exactly like the
-        // reference above — no per-iteration allocation in the timed loop
-        let mut y1 = DenseMatrix::zeros(a.rows, n);
-        let mut y2 = DenseMatrix::zeros(a.rows, n);
-        let mut y3 = DenseMatrix::zeros(a.rows, n);
-        let mut y4 = DenseMatrix::zeros(a.rows, n);
-        let mut y5 = DenseMatrix::zeros(a.rows, n);
-        type Case<'k> = (&'static str, Box<dyn FnMut() + 'k>);
-        let cases: Vec<Case> = vec![
-            ("sr_rs", Box::new(|| sr_rs::spmm(a, &x, &mut y1, &pool))),
-            ("sr_wb", Box::new(|| sr_wb::spmm(&seg, &x, &mut y2, &pool))),
-            ("pr_rs", Box::new(|| pr_rs::spmm(a, &x, &mut y3, &pool))),
-            ("pr_wb", Box::new(|| pr_wb::spmm(&seg, &x, &mut y4, &pool))),
-            ("sr_mp", Box::new(|| merge_path::spmm(a, &x, &mut y5, &pool))),
-        ];
-        for (kname, mut case) in cases {
-            let stats = bench_fn_with(&format!("{mname}/{kname}"), cfg, &mut case);
-            results.push((format!("{mname}/{kname}"), stats.median_s() / ref_s));
+        for e in reg.op_variants(SparseOp::Spmm) {
+            let seg = &layouts[&e.variant.seg_len];
+            // preallocated output, exactly like the reference above — no
+            // per-iteration allocation in the timed loop
+            let mut out = DenseMatrix::zeros(a.rows, n);
+            let name = format!("{mname}/{}", e.label);
+            let stats = bench_fn_with(&name, cfg, || {
+                e.run_spmm(a, seg, &x, &mut out, &pool)
+                    .expect("registry entry rejected its own layout");
+                std::hint::black_box(&out);
+            });
+            results.push((name, stats.median_s() / ref_s));
         }
     }
-    // one SDDMM pair on the skewed matrix (reduction axis d = n)
+    // every SDDMM variant on the skewed matrix (reduction axis d = n)
     {
         let a = &plaw;
-        let seg = SegmentedMatrix::from_csr(a, WARP);
+        let layouts = layouts_for(a);
         let u = DenseMatrix::random(a.rows, n, 1.0, &mut rng);
         let v = DenseMatrix::random(a.cols, n, 1.0, &mut rng);
         let mut out = vec![0f32; a.nnz()];
@@ -947,11 +1117,14 @@ fn cmd_perfgate(rest: Vec<String>) -> Result<()> {
             std::hint::black_box(&out);
         });
         let ref_s = reference.median_s().max(1e-12);
-        for kind in [ge_spmm::kernels::KernelKind::SrRs, ge_spmm::kernels::KernelKind::PrWb] {
-            let name = format!("sddmm/{}", kind.label());
+        for e in reg.op_variants(SparseOp::Sddmm) {
+            let seg = &layouts[&e.variant.seg_len];
+            let mut vals = vec![0f32; a.nnz()];
+            let name = format!("sddmm/{}", e.label);
             let stats = bench_fn_with(&name, cfg, || {
-                ge_spmm::sddmm::run(kind, a, &seg, &u, &v, &mut out, &pool);
-                std::hint::black_box(&out);
+                e.run_sddmm(a, seg, &u, &v, &mut vals, &pool)
+                    .expect("registry entry rejected its own layout");
+                std::hint::black_box(&vals);
             });
             results.push((name, stats.median_s() / ref_s));
         }

@@ -45,8 +45,13 @@ pub struct AuditEntry {
     pub thresholds: Vec<(&'static str, f64)>,
     /// Human-readable statement of the rule that fired.
     pub rule: String,
-    /// The chosen kernel design.
+    /// The chosen kernel design (family grain — what the paper rules
+    /// decide).
     pub kernel: KernelKind,
+    /// The registry variant actually dispatched, by stable label, when
+    /// the deciding path is variant-precise (`None` on family-only paths,
+    /// which execute the canonical variant).
+    pub variant: Option<&'static str>,
     /// Whether the online selector overrode the rule to explore.
     pub explored: bool,
     /// Normalized cost (`seconds / flops`) observed for this decision,
@@ -65,14 +70,22 @@ impl AuditEntry {
 
     /// One-line rendering for explain reports.
     pub fn line(&self) -> String {
+        // Only surface the variant when it refines the family — canonical
+        // dispatch reads exactly as it did pre-registry.
+        let variant = self
+            .variant
+            .filter(|v| *v != self.kernel.label())
+            .map(|v| format!(" [{v}]"))
+            .unwrap_or_default();
         let mut out = format!(
-            "#{} [{} {}{}] n={} -> {} via {}{}: {}",
+            "#{} [{} {}{}] n={} -> {}{} via {}{}: {}",
             self.seq,
             self.grain,
             self.op.label(),
             self.shard.map(|i| format!(" shard {i}")).unwrap_or_default(),
             self.n,
             self.kernel.label(),
+            variant,
             self.selector,
             if self.explored { " (explore)" } else { "" },
             self.rule,
@@ -132,6 +145,7 @@ impl AuditEntry {
             ),
             ("rule", s(&self.rule)),
             ("kernel", s(self.kernel.label())),
+            ("variant", self.variant.map(s).unwrap_or(Json::Null)),
             ("explored", Json::Bool(self.explored)),
             (
                 "realized_cost",
@@ -314,6 +328,7 @@ mod tests {
             thresholds: vec![("t_cv", 1.5)],
             rule: "cv_row <= t_cv -> sr_rs".to_string(),
             kernel,
+            variant: None,
             explored: false,
             realized_cost: None,
         }
@@ -352,12 +367,14 @@ mod tests {
         let log = AuditLog::default();
         let mut a = entry(KernelKind::SrWb, 1);
         a.matrix = Some(1);
+        a.variant = Some("sr_wb.s64");
         let mut b = entry(KernelKind::PrRs, 2);
         b.matrix = Some(2);
         log.push(a);
         log.push(b);
         let report = log.explain(Some(1));
         assert!(report.contains("sr_wb"), "{report}");
+        assert!(report.contains("[sr_wb.s64]"), "{report}");
         assert!(!report.contains("pr_rs"), "{report}");
         assert!(log.explain(None).contains("pr_rs"));
         assert_eq!(log.to_json().get("recorded").and_then(|j| j.as_usize()), Some(2));

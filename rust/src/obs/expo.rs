@@ -14,7 +14,7 @@
 //! [`Metrics::latency_histogram`].
 
 use crate::coordinator::metrics::Metrics;
-use crate::kernels::{KernelKind, SparseOp};
+use crate::kernels::{registry, KernelKind, SparseOp};
 use crate::obs::Grain;
 use crate::util::json::{num, obj, s, Json};
 
@@ -143,10 +143,32 @@ pub fn snapshot(m: &Metrics) -> Json {
         }
     }
 
+    // One row per generated variant (additive next to the family-grain
+    // `kernels` rows): how often each concrete variant was dispatched at
+    // each grain. Families without non-canonical siblings still appear —
+    // the canonical variant carries the family's counts.
+    let variants = registry()
+        .entries()
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("op", s(e.variant.op.label())),
+                ("variant", s(e.label)),
+                ("family", s(e.variant.family.label())),
+                ("requests", num(m.variant_request_count(e.id) as f64)),
+                (
+                    "shard_executions",
+                    num(m.variant_shard_count(e.id) as f64),
+                ),
+            ])
+        })
+        .collect();
+
     let recorder = m.recorder();
     obj(vec![
         ("counters", counters),
         ("kernels", Json::Arr(kernels)),
+        ("variants", Json::Arr(variants)),
         ("audit", m.audit().to_json()),
         (
             "traces",
@@ -259,6 +281,31 @@ pub fn prometheus_of(snap: &Json) -> Result<String, String> {
             "ge_spmm_latency_ns_max{{{labels}}} {}\n",
             fmt_value(req_num(row, "max_ns")?)
         ));
+    }
+
+    // Optional (snapshots from before the variant registry lack it):
+    // per-variant dispatch counts at both grains.
+    if let Some(variants) = snap.get("variants").and_then(|j| j.as_arr()) {
+        header(
+            &mut out,
+            "ge_spmm_variant_selected_total",
+            "counter",
+            "Generated-variant dispatches by op, grain and variant.",
+        );
+        for row in variants {
+            let (op, variant, family) = (
+                req_str(row, "op")?,
+                req_str(row, "variant")?,
+                req_str(row, "family")?,
+            );
+            for (grain, key) in [("request", "requests"), ("shard", "shard_executions")] {
+                let v = req_num(row, key)?;
+                out.push_str(&format!(
+                    "ge_spmm_variant_selected_total{{op=\"{op}\",grain=\"{grain}\",family=\"{family}\",variant=\"{variant}\"}} {}\n",
+                    fmt_value(v)
+                ));
+            }
+        }
     }
 
     let audit = snap
@@ -384,6 +431,45 @@ mod tests {
         // empty series emit no quantiles
         assert!(!text.contains("op=\"sddmm\",grain=\"request\",kernel=\"sr_rs\",quantile"));
         assert!(text.contains("ge_spmm_traces_committed_total 0"));
+    }
+
+    #[test]
+    fn variant_rows_cover_the_registry_and_render_as_series() {
+        let m = Metrics::default();
+        let reg = registry();
+        let alt = reg.by_label(SparseOp::Spmm, "sr_rs.t4").unwrap();
+        assert!(m.record_request_variant(alt.id, Duration::from_micros(70)));
+        assert!(m.record_shard_variant(alt.id, Duration::from_micros(20)));
+        let snap = snapshot(&m);
+        let variants = snap.get("variants").unwrap().as_arr().unwrap();
+        assert_eq!(variants.len(), reg.len(), "one row per generated variant");
+        let row = variants
+            .iter()
+            .find(|r| {
+                r.get("op").unwrap().as_str() == Some("spmm")
+                    && r.get("variant").unwrap().as_str() == Some("sr_rs.t4")
+            })
+            .unwrap();
+        assert_eq!(row.get("family").unwrap().as_str(), Some("sr_rs"));
+        assert_eq!(row.get("requests").unwrap().as_usize(), Some(1));
+        assert_eq!(row.get("shard_executions").unwrap().as_usize(), Some(1));
+        let text = prometheus_text(&m);
+        assert!(
+            text.contains(
+                "ge_spmm_variant_selected_total{op=\"spmm\",grain=\"request\",family=\"sr_rs\",variant=\"sr_rs.t4\"} 1"
+            ),
+            "{text}"
+        );
+        // a pre-registry snapshot (no 'variants' key) still renders
+        let legacy = match snap {
+            Json::Obj(mut fields) => {
+                fields.remove("variants");
+                Json::Obj(fields)
+            }
+            _ => unreachable!("snapshot is an object"),
+        };
+        let rendered = prometheus_of(&legacy).unwrap();
+        assert!(!rendered.contains("ge_spmm_variant_selected_total"));
     }
 
     #[test]

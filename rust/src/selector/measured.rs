@@ -15,14 +15,18 @@
 //! deployment startup.
 
 use super::calibrate::Sample;
+use super::online::{feature_bucket, sddmm_bucket};
 use super::oracle::OracleProfile;
+use super::profile::ProfileVariant;
 use crate::backend::SpmmBackend;
 use crate::bench::harness::{bench_fn_with, BenchConfig};
 use crate::features::MatrixFeatures;
-use crate::kernels::KernelKind;
+use crate::kernels::generator::registry;
+use crate::kernels::{KernelKind, SparseOp, VariantEntry};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use crate::util::prng::Xoshiro256;
 use anyhow::{bail, Result};
+use std::collections::HashMap;
 use std::time::Duration;
 
 /// Measurement budget for one (matrix, N, kernel) cell.
@@ -210,6 +214,189 @@ pub fn collect_samples(
     Ok(out)
 }
 
+/// Outcome of a budgeted [`tune_variants`] run: the per-`(op, bucket,
+/// family)` winners plus how many `(variant × round)` cells were timed.
+#[derive(Debug)]
+pub struct TuneReport {
+    /// Cheapest measured variant per `(op, bucket, family)`, sorted for
+    /// stable output. Ready for
+    /// [`super::profile::HardwareProfile::with_variants`].
+    pub winners: Vec<ProfileVariant>,
+    /// Total timed measurement cells across every halving round.
+    pub cells_timed: usize,
+}
+
+impl TuneReport {
+    /// Winners that are *not* the family's canonical point — the count
+    /// that tells a tuning run whether it found anything the fixed
+    /// four-kernel default would miss.
+    pub fn non_canonical(&self) -> usize {
+        let reg = registry();
+        self.winners
+            .iter()
+            .filter(|w| {
+                reg.by_label(w.op, &w.label)
+                    .is_some_and(|e| !e.variant.is_canonical())
+            })
+            .count()
+    }
+}
+
+/// Successive halving over one family's variants: each round times every
+/// surviving candidate on a `budget / (2 · survivors)` slice and keeps
+/// the cheaper half, then the finalist gets a half-budget confirmation
+/// run. Total spend per family is roughly `(rounds + 1) / 2 ×
+/// cfg.measure` — sub-linear in the variant count, which is the point:
+/// the budget buys depth on the contenders instead of breadth on losers.
+fn halve_family(
+    cfg: &MeasureConfig,
+    mut candidates: Vec<&'static VariantEntry>,
+    mut time_cell: impl FnMut(&'static VariantEntry, BenchConfig) -> Result<f64>,
+    cells: &mut usize,
+) -> Result<Option<(&'static VariantEntry, f64)>> {
+    if candidates.is_empty() {
+        return Ok(None);
+    }
+    while candidates.len() > 1 {
+        let share = 2 * candidates.len() as u32;
+        let round_cfg = BenchConfig {
+            warmup: cfg.warmup / share,
+            measure: cfg.measure / share,
+            min_iters: cfg.min_iters,
+            max_iters: cfg.max_iters,
+        };
+        let mut scored: Vec<(&'static VariantEntry, f64)> = Vec::new();
+        for e in candidates {
+            let sec = time_cell(e, round_cfg)?;
+            *cells += 1;
+            scored.push((e, sec));
+        }
+        scored.sort_by(|a, b| a.1.total_cmp(&b.1));
+        scored.truncate(scored.len().div_ceil(2));
+        candidates = scored.into_iter().map(|(e, _)| e).collect();
+    }
+    let finalist = candidates[0];
+    let final_cfg = BenchConfig {
+        warmup: cfg.warmup / 2,
+        measure: cfg.measure / 2,
+        min_iters: cfg.min_iters,
+        max_iters: cfg.max_iters,
+    };
+    let sec = time_cell(finalist, final_cfg)?;
+    *cells += 1;
+    Ok(Some((finalist, sec)))
+}
+
+/// Budgeted variant search over `matrices × n_values` (SpMM) and
+/// `matrices × d_values` (SDDMM): for every cost bucket the workloads
+/// touch and every kernel family, run successive halving over the
+/// family's generated variants and keep the cheapest (normalized to
+/// seconds per flop, so workloads sharing a bucket merge by `min`).
+/// Backend constraint as for [`profile_measured`]: only profile through
+/// backends that honor the explicit variant. Empty matrices are skipped.
+pub fn tune_variants(
+    backend: &dyn SpmmBackend,
+    matrices: &[CsrMatrix],
+    n_values: &[usize],
+    d_values: &[usize],
+    cfg: &MeasureConfig,
+) -> Result<TuneReport> {
+    let reg = registry();
+    let mut best: HashMap<(SparseOp, usize, KernelKind), (String, f64)> = HashMap::new();
+    let mut cells = 0usize;
+    let mut rng = Xoshiro256::seeded(cfg.seed);
+    for a in matrices {
+        if a.nnz() == 0 || a.rows == 0 {
+            continue;
+        }
+        let features = MatrixFeatures::of(a);
+        let operand = backend.prepare(a)?;
+        for &n in n_values {
+            let n = n.max(1);
+            let x = DenseMatrix::random(a.cols, n, 1.0, &mut rng);
+            let bucket = feature_bucket(&features, n);
+            let flops = (2.0 * a.nnz() as f64 * n as f64).max(1.0);
+            for family in KernelKind::ALL {
+                let won = halve_family(
+                    cfg,
+                    reg.family_variants(SparseOp::Spmm, family),
+                    |entry, bc| {
+                        // fail fast (and untimed) if the cell cannot run
+                        backend.execute_variant(&operand, &x, entry)?;
+                        let stats = bench_fn_with(entry.label, bc, || {
+                            let exec = backend
+                                .execute_variant(&operand, &x, entry)
+                                .expect("tuned execute");
+                            std::hint::black_box(&exec.y.data);
+                        });
+                        Ok(stats.median_s().max(1e-9))
+                    },
+                    &mut cells,
+                )?;
+                if let Some((entry, sec)) = won {
+                    let cost = sec / flops;
+                    let slot = best
+                        .entry((SparseOp::Spmm, bucket, family))
+                        .or_insert_with(|| (entry.label.to_string(), cost));
+                    if cost < slot.1 {
+                        *slot = (entry.label.to_string(), cost);
+                    }
+                }
+            }
+        }
+        for &d in d_values {
+            let d = d.max(1);
+            let u = DenseMatrix::random(a.rows, d, 1.0, &mut rng);
+            let v = DenseMatrix::random(a.cols, d, 1.0, &mut rng);
+            let bucket = sddmm_bucket(&features);
+            let flops = (2.0 * a.nnz() as f64 * d as f64).max(1.0);
+            for family in KernelKind::ALL {
+                let won = halve_family(
+                    cfg,
+                    reg.family_variants(SparseOp::Sddmm, family),
+                    |entry, bc| {
+                        backend.execute_sddmm_variant(&operand, &u, &v, entry)?;
+                        let stats = bench_fn_with(entry.label, bc, || {
+                            let exec = backend
+                                .execute_sddmm_variant(&operand, &u, &v, entry)
+                                .expect("tuned sddmm execute");
+                            std::hint::black_box(&exec.values);
+                        });
+                        Ok(stats.median_s().max(1e-9))
+                    },
+                    &mut cells,
+                )?;
+                if let Some((entry, sec)) = won {
+                    let cost = sec / flops;
+                    let slot = best
+                        .entry((SparseOp::Sddmm, bucket, family))
+                        .or_insert_with(|| (entry.label.to_string(), cost));
+                    if cost < slot.1 {
+                        *slot = (entry.label.to_string(), cost);
+                    }
+                }
+            }
+        }
+    }
+    let mut winners: Vec<ProfileVariant> = best
+        .into_iter()
+        .map(|((op, bucket, family), (label, cost))| ProfileVariant {
+            op,
+            bucket,
+            family,
+            label,
+            cost,
+        })
+        .collect();
+    winners.sort_by(|a, b| {
+        (a.op.label(), a.bucket, a.family.label()).cmp(&(b.op.label(), b.bucket, b.family.label()))
+    });
+    Ok(TuneReport {
+        winners,
+        cells_timed: cells,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +475,46 @@ mod tests {
         assert!(
             cal.mean_loss <= sddmm_selector_loss(&SddmmSelector::default(), &samples) + 1e-12
         );
+    }
+
+    #[test]
+    fn tune_variants_covers_both_ops_with_resolvable_winners() {
+        let backend = NativeBackend::serial();
+        let report = tune_variants(&backend, &[small(31)], &[8], &[8], &tiny_cfg()).unwrap();
+        // one bucket per op × four families
+        assert_eq!(report.winners.len(), 8, "{:?}", report.winners);
+        let reg = registry();
+        for w in &report.winners {
+            let entry = reg.by_label(w.op, &w.label).expect("winner label resolves");
+            assert_eq!(entry.variant.family, w.family);
+            assert!(w.cost > 0.0 && w.cost.is_finite(), "{w:?}");
+            let limit = match w.op {
+                SparseOp::Spmm => crate::coordinator::metrics::COST_BUCKETS,
+                SparseOp::Sddmm => crate::selector::online::SDDMM_BUCKETS,
+            };
+            assert!(w.bucket < limit, "{w:?}");
+        }
+        // the halving ladder times losers on small slices before the
+        // finalist's confirmation run: more cells than winners
+        assert!(report.cells_timed > report.winners.len());
+        assert!(report.non_canonical() <= report.winners.len());
+        // winners are unique per (op, bucket, family) and sorted
+        let keys: Vec<_> = report
+            .winners
+            .iter()
+            .map(|w| (w.op.label(), w.bucket, w.family.label()))
+            .collect();
+        let mut deduped = keys.clone();
+        deduped.dedup();
+        assert_eq!(deduped, keys);
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(sorted, keys);
+        // empty matrices contribute nothing
+        let empty = CsrMatrix::from_coo(&CooMatrix::new(4, 4));
+        let none = tune_variants(&backend, &[empty], &[8], &[8], &tiny_cfg()).unwrap();
+        assert!(none.winners.is_empty());
+        assert_eq!(none.cells_timed, 0);
     }
 
     #[test]

@@ -31,7 +31,9 @@ use super::rules::{AdaptiveSelector, Decision};
 use super::sddmm::{SddmmSelector, SDDMM_T_CV_GRID};
 use crate::coordinator::metrics::{Metrics, COST_BUCKETS, COST_EWMA_ALPHA};
 use crate::features::MatrixFeatures;
-use crate::kernels::{KernelKind, SparseOp};
+use crate::kernels::generator::{family_index, registry};
+use crate::kernels::{KernelKind, SparseOp, VariantEntry};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -153,10 +155,17 @@ pub struct OnlineSelector {
     sddmm_state: Mutex<SddmmSelector>,
     sddmm_costs: Mutex<[[SddmmCostCell; 4]; SDDMM_BUCKETS]>,
     sddmm_centroids: Mutex<[Centroid; SDDMM_BUCKETS]>,
+    /// Learned per-`(bucket, family)` variant preference, keyed by the
+    /// family's canonical variant id (globally unique per `(op, family)`,
+    /// so SpMM and SDDMM buckets never collide) and holding the id of
+    /// the cheapest measured variant in that family.
+    variant_prefs: Mutex<HashMap<(usize, usize), usize>>,
     decisions: AtomicU64,
+    variant_decisions: AtomicU64,
     observations: AtomicU64,
     sddmm_observations: AtomicU64,
     explorations: AtomicU64,
+    variant_explorations: AtomicU64,
     refits: AtomicU64,
     sddmm_refits: AtomicU64,
 }
@@ -175,10 +184,13 @@ impl OnlineSelector {
             sddmm_state: Mutex::new(SddmmSelector::default()),
             sddmm_costs: Mutex::new([[SddmmCostCell::default(); 4]; SDDMM_BUCKETS]),
             sddmm_centroids: Mutex::new([Centroid::default(); SDDMM_BUCKETS]),
+            variant_prefs: Mutex::new(HashMap::new()),
             decisions: AtomicU64::new(0),
+            variant_decisions: AtomicU64::new(0),
             observations: AtomicU64::new(0),
             sddmm_observations: AtomicU64::new(0),
             explorations: AtomicU64::new(0),
+            variant_explorations: AtomicU64::new(0),
             refits: AtomicU64::new(0),
             sddmm_refits: AtomicU64::new(0),
         }
@@ -245,29 +257,195 @@ impl OnlineSelector {
         (dec, explored)
     }
 
+    /// [`OnlineSelector::decide`] resolved down to a concrete generated
+    /// variant: the family decision first (same counters, same sibling
+    /// exploration), then the bucket's learned within-family preference
+    /// — canonical when nothing is learned yet. A second, independent
+    /// cadence (same `explore_every` period) swaps in one of the
+    /// family's non-preferred variants so their cost cells accumulate
+    /// evidence; the returned flag covers both kinds of exploration.
+    pub fn decide_variant(
+        &self,
+        f: &MatrixFeatures,
+        n: usize,
+    ) -> (Decision, &'static VariantEntry, bool) {
+        let (dec, explored) = self.decide(f, n);
+        let bucket = feature_bucket(f, n);
+        self.resolve_variant(SparseOp::Spmm, bucket, dec, explored)
+    }
+
+    /// SDDMM analogue of [`OnlineSelector::decide_variant`], sharing the
+    /// family decision counter and the variant-exploration cadence.
+    pub fn decide_sddmm_variant(
+        &self,
+        f: &MatrixFeatures,
+        d: usize,
+    ) -> (Decision, &'static VariantEntry, bool) {
+        let (dec, explored) = self.decide_sddmm(f, d);
+        let bucket = sddmm_bucket(f);
+        self.resolve_variant(SparseOp::Sddmm, bucket, dec, explored)
+    }
+
+    /// Shared tail of the variant decisions: preference lookup plus the
+    /// sibling-variant exploration cadence. Family explorations return
+    /// the explored family's canonical point (its preference may be
+    /// unmeasured noise) and do not consume the variant cadence.
+    fn resolve_variant(
+        &self,
+        op: SparseOp,
+        bucket: usize,
+        mut dec: Decision,
+        explored: bool,
+    ) -> (Decision, &'static VariantEntry, bool) {
+        let reg = registry();
+        let canonical = reg.canonical(op, dec.kernel);
+        if explored {
+            return (dec, canonical, true);
+        }
+        let preferred = self
+            .variant_pref(op, bucket, dec.kernel)
+            .unwrap_or(canonical);
+        let every = self.config.explore_every;
+        let d = self.variant_decisions.fetch_add(1, Ordering::Relaxed);
+        if every > 0 && (d + 1) % every == 0 {
+            let alts: Vec<&'static VariantEntry> = reg
+                .family_variants(op, dec.kernel)
+                .into_iter()
+                .filter(|e| e.id != preferred.id)
+                .collect();
+            if !alts.is_empty() {
+                // cycle deterministically so every alternative gets a turn
+                let pick = alts[((d / every) as usize) % alts.len()];
+                self.variant_explorations.fetch_add(1, Ordering::Relaxed);
+                dec.rule = format!(
+                    "{}; variant exploration overrides {} -> {}",
+                    dec.rule, preferred.label, pick.label
+                );
+                return (dec, pick, true);
+            }
+        }
+        (dec, preferred, false)
+    }
+
+    /// The learned variant preference for `(op, bucket, family)`, if one
+    /// has been measured or installed. Stale or cross-family ids (e.g.
+    /// from a registry grown since a profile was written) resolve to
+    /// `None` rather than a wrong entry.
+    pub fn variant_pref(
+        &self,
+        op: SparseOp,
+        bucket: usize,
+        family: KernelKind,
+    ) -> Option<&'static VariantEntry> {
+        let reg = registry();
+        let vid = *self
+            .variant_prefs
+            .lock()
+            .unwrap()
+            .get(&(bucket, reg.canonical_id(op, family)))?;
+        reg.get(vid)
+            .filter(|e| e.variant.op == op && e.variant.family == family)
+    }
+
+    /// Re-derive the `(op, bucket, family)` preference from the measured
+    /// variant cells: the cheapest variant with at least
+    /// `min_observations` observations wins; ties and no-evidence leave
+    /// the preference alone (canonical by default).
+    fn update_variant_pref(&self, op: SparseOp, bucket: usize, family: KernelKind) {
+        let reg = registry();
+        let best = reg
+            .family_variants(op, family)
+            .into_iter()
+            .filter(|e| {
+                self.metrics.cost_observations_variant(bucket, e.id) >= self.config.min_observations
+            })
+            .filter_map(|e| self.metrics.cost_variant(bucket, e.id).map(|c| (e.id, c)))
+            .min_by(|a, b| a.1.total_cmp(&b.1));
+        if let Some((vid, _)) = best {
+            self.variant_prefs
+                .lock()
+                .unwrap()
+                .insert((bucket, reg.canonical_id(op, family)), vid);
+        }
+    }
+
+    /// Seed the per-bucket variant preferences from tuned winners (e.g.
+    /// a loaded [`super::profile::HardwareProfile`]): `(op, bucket,
+    /// variant label)` triples. Unknown labels and out-of-range buckets
+    /// are skipped; returns how many preferences were installed.
+    pub fn install_variant_winners<'a>(
+        &self,
+        winners: impl IntoIterator<Item = (SparseOp, usize, &'a str)>,
+    ) -> usize {
+        let reg = registry();
+        let mut installed = 0;
+        let mut prefs = self.variant_prefs.lock().unwrap();
+        for (op, bucket, label) in winners {
+            let limit = match op {
+                SparseOp::Spmm => COST_BUCKETS,
+                SparseOp::Sddmm => SDDMM_BUCKETS,
+            };
+            if bucket >= limit {
+                continue;
+            }
+            let Some(entry) = reg.by_label(op, label) else {
+                continue;
+            };
+            prefs.insert((bucket, reg.canonical_id(op, entry.variant.family)), entry.id);
+            installed += 1;
+        }
+        installed
+    }
+
     /// Report one finished execution. Normalizes the latency by the
     /// cell's flop count, feeds the EWMA table and the bucket centroid,
-    /// and triggers a refit on cadence.
+    /// and triggers a refit on cadence. Family-level reports land on the
+    /// family's canonical variant cell — the cell the family cost view
+    /// aggregates over — so pre-variant callers keep working unchanged.
     pub fn observe(&self, f: &MatrixFeatures, n: usize, kernel: KernelKind, latency: Duration) {
+        self.observe_variant(f, n, registry().canonical(SparseOp::Spmm, kernel), latency);
+    }
+
+    /// Variant-resolved [`OnlineSelector::observe`]: the cost lands on
+    /// the *variant's* EWMA cell (the family view sees it through
+    /// aggregation), and the family's per-bucket variant preference is
+    /// re-derived from the measured cells. Accepts entries of either op;
+    /// SDDMM entries take the SDDMM bookkeeping path (`n` is `d` there).
+    pub fn observe_variant(
+        &self,
+        f: &MatrixFeatures,
+        n: usize,
+        entry: &VariantEntry,
+        latency: Duration,
+    ) {
         let flops = (2.0 * f.nnz as f64 * n.max(1) as f64).max(1.0);
         let cost = latency.as_secs_f64().max(1e-9) / flops;
-        let bucket = feature_bucket(f, n);
-        self.metrics.observe_cost(bucket, kernel, cost);
-        // backfill the realized cost onto the matching audit entry (a
-        // miss just means the decision ring already wrapped past it)
-        self.metrics.audit().note_cost(SparseOp::Spmm, kernel, f.nnz, cost);
-        {
-            let mut cents = self.centroids.lock().unwrap();
-            let c = &mut cents[bucket];
-            c.count += 1.0;
-            c.sum_avg += f.avg_row;
-            c.sum_cv += f.cv_row;
-            c.sum_n += n.max(1) as f64;
-            c.sum_nnz += f.nnz as f64;
-        }
-        let o = self.observations.fetch_add(1, Ordering::Relaxed) + 1;
-        if self.config.refit_every > 0 && o % self.config.refit_every == 0 {
-            self.refit();
+        match entry.variant.op {
+            SparseOp::Spmm => {
+                let bucket = feature_bucket(f, n);
+                self.metrics.observe_cost_variant(bucket, entry.id, cost);
+                // backfill the realized cost onto the matching audit
+                // entry (a miss just means the decision ring already
+                // wrapped past it)
+                self.metrics
+                    .audit()
+                    .note_cost(SparseOp::Spmm, entry.variant.family, f.nnz, cost);
+                {
+                    let mut cents = self.centroids.lock().unwrap();
+                    let c = &mut cents[bucket];
+                    c.count += 1.0;
+                    c.sum_avg += f.avg_row;
+                    c.sum_cv += f.cv_row;
+                    c.sum_n += n.max(1) as f64;
+                    c.sum_nnz += f.nnz as f64;
+                }
+                self.update_variant_pref(SparseOp::Spmm, bucket, entry.variant.family);
+                let o = self.observations.fetch_add(1, Ordering::Relaxed) + 1;
+                if self.config.refit_every > 0 && o % self.config.refit_every == 0 {
+                    self.refit();
+                }
+            }
+            SparseOp::Sddmm => self.observe_sddmm_entry(f, n, entry, cost),
         }
     }
 
@@ -304,6 +482,7 @@ impl OnlineSelector {
     /// Report one finished SDDMM execution: normalized cost
     /// (seconds per flop, `2·nnz·d` flops) into the op's private EWMA
     /// table, centroid upkeep, and a refit on the same cadence as SpMM.
+    /// Family-level reports land on the canonical variant's cell.
     pub fn observe_sddmm(
         &self,
         f: &MatrixFeatures,
@@ -311,14 +490,20 @@ impl OnlineSelector {
         kernel: KernelKind,
         latency: Duration,
     ) {
-        let flops = (2.0 * f.nnz as f64 * d.max(1) as f64).max(1.0);
-        let cost = latency.as_secs_f64().max(1e-9) / flops;
+        self.observe_variant(f, d, registry().canonical(SparseOp::Sddmm, kernel), latency);
+    }
+
+    /// SDDMM half of [`OnlineSelector::observe_variant`]: the family
+    /// EWMA table drives the threshold refit as before, while the
+    /// variant cell in [`Metrics`] drives the within-family preference.
+    fn observe_sddmm_entry(&self, f: &MatrixFeatures, d: usize, entry: &VariantEntry, cost: f64) {
         if !cost.is_finite() || cost <= 0.0 {
             return;
         }
+        let kernel = entry.variant.family;
         self.metrics.audit().note_cost(SparseOp::Sddmm, kernel, f.nnz, cost);
         let bucket = sddmm_bucket(f);
-        let idx = KernelKind::ALL.iter().position(|k| *k == kernel).unwrap();
+        let idx = family_index(kernel);
         {
             let mut costs = self.sddmm_costs.lock().unwrap();
             let cell = &mut costs[bucket][idx];
@@ -329,6 +514,8 @@ impl OnlineSelector {
             };
             cell.obs += 1;
         }
+        self.metrics.observe_cost_variant(bucket, entry.id, cost);
+        self.update_variant_pref(SparseOp::Sddmm, bucket, kernel);
         {
             let mut cents = self.sddmm_centroids.lock().unwrap();
             let c = &mut cents[bucket];
@@ -455,6 +642,16 @@ impl OnlineSelector {
         self.explorations.load(Ordering::Relaxed)
     }
 
+    /// Variant decisions that ran a non-preferred sibling variant.
+    pub fn variant_explorations(&self) -> u64 {
+        self.variant_explorations.load(Ordering::Relaxed)
+    }
+
+    /// Learned (or installed) variant preferences currently held.
+    pub fn variant_prefs_len(&self) -> usize {
+        self.variant_prefs.lock().unwrap().len()
+    }
+
     /// Refits performed (on cadence or explicit).
     pub fn refits(&self) -> u64 {
         self.refits.load(Ordering::Relaxed)
@@ -466,7 +663,8 @@ impl OnlineSelector {
         let sd = self.current_sddmm();
         format!(
             "online[T_avg={} T_cv={} decisions={} explored={} observations={} refits={} \
-             sddmm_T_cv={} sddmm_observations={} sddmm_refits={}]",
+             sddmm_T_cv={} sddmm_observations={} sddmm_refits={}] \
+             variants[prefs={} explored={}]",
             cur.t_avg,
             cur.t_cv,
             self.decisions(),
@@ -475,7 +673,9 @@ impl OnlineSelector {
             self.refits(),
             sd.t_cv,
             self.sddmm_observations(),
-            self.sddmm_refits()
+            self.sddmm_refits(),
+            self.variant_prefs_len(),
+            self.variant_explorations()
         )
     }
 
@@ -519,6 +719,17 @@ impl OnlineSelector {
                 costs[b] = [SddmmCostCell::default(); 4];
                 cents[b] = Centroid::default();
             }
+        }
+        // drop the variant preferences the cleared buckets had learned —
+        // they summarize exactly the cells that were just zeroed
+        {
+            let reg = registry();
+            let mut prefs = self.variant_prefs.lock().unwrap();
+            prefs.retain(|&(b, canon), _| match reg.get(canon).map(|e| e.variant.op) {
+                Some(SparseOp::Spmm) => !buckets.contains(&b),
+                Some(SparseOp::Sddmm) => !sd.contains(&b),
+                None => false,
+            });
         }
         buckets.len() + sd.len()
     }
@@ -873,6 +1084,7 @@ mod tests {
             thresholds: first.thresholds.clone(),
             rule: first.rule.clone(),
             kernel: first.kernel,
+            variant: None,
             explored: false,
             realized_cost: None,
         });
@@ -959,5 +1171,105 @@ mod tests {
         let cur = sel.current();
         assert_eq!(cur.select(&f, 1), KernelKind::PrRs, "{cur:?}");
         assert_eq!(cur.t_cv, AdaptiveSelector::default().t_cv, "SR untouched");
+    }
+
+    #[test]
+    fn variant_observations_shift_the_within_family_preference() {
+        let sel = selector(OnlineConfig {
+            explore_every: 0,
+            refit_every: 0,
+            min_observations: 2,
+        });
+        let f = features(16.0, 0.3, 16000);
+        let reg = registry();
+        let (dec, entry, explored) = sel.decide_variant(&f, 32);
+        assert!(!explored);
+        assert_eq!(dec.kernel, KernelKind::SrRs);
+        assert_eq!(entry.id, reg.canonical_id(SparseOp::Spmm, dec.kernel), "no evidence -> canonical");
+        // measure the tiled variant 5x cheaper than the canonical point
+        let canon = reg.canonical(SparseOp::Spmm, KernelKind::SrRs);
+        let fast = reg.by_label(SparseOp::Spmm, "sr_rs.t4").unwrap();
+        for _ in 0..4 {
+            sel.observe_variant(&f, 32, canon, Duration::from_micros(500));
+            sel.observe_variant(&f, 32, fast, Duration::from_micros(100));
+        }
+        let (dec2, entry2, explored2) = sel.decide_variant(&f, 32);
+        assert!(!explored2);
+        assert_eq!(dec2.kernel, KernelKind::SrRs, "family decision unchanged");
+        assert_eq!(entry2.label, "sr_rs.t4", "preference follows the measured winner");
+        assert!(sel.summary().contains("variants[prefs=1"), "{}", sel.summary());
+    }
+
+    #[test]
+    fn variant_exploration_cycles_non_preferred_siblings() {
+        let sel = selector(OnlineConfig {
+            explore_every: 4,
+            refit_every: 0,
+            min_observations: 1,
+        });
+        let f = features(16.0, 0.3, 16000);
+        let mut picks = Vec::new();
+        for _ in 0..8 {
+            let (dec, entry, explored) = sel.decide_variant(&f, 32);
+            picks.push((dec, entry, explored));
+        }
+        // i = 0..2 exploit the canonical preference
+        for (dec, entry, explored) in &picks[0..3] {
+            assert!(!explored);
+            assert_eq!(dec.kernel, KernelKind::SrRs);
+            assert_eq!(entry.label, "sr_rs");
+        }
+        // i = 3: family exploration wins and lands on the sibling
+        // family's canonical point (variant cadence not consumed)
+        assert!(picks[3].2);
+        assert_eq!(picks[3].0.kernel, KernelKind::SrWb);
+        assert_eq!(picks[3].1.label, "sr_wb");
+        // i = 4 is the 4th non-family-explored decision: the variant
+        // cadence fires and cycles to the first non-preferred sibling
+        assert!(picks[4].2);
+        assert_eq!(picks[4].0.kernel, KernelKind::SrRs, "family stays put");
+        assert_eq!(picks[4].1.label, "sr_rs.t1");
+        assert!(
+            picks[4].0.rule.contains("variant exploration overrides"),
+            "{}",
+            picks[4].0.rule
+        );
+        assert_eq!(sel.variant_explorations(), 1);
+        assert_eq!(sel.explorations(), 2, "family cadence untouched");
+    }
+
+    #[test]
+    fn installed_winners_steer_variant_decisions_until_drift_resets_them() {
+        let sel = selector(OnlineConfig {
+            explore_every: 0,
+            refit_every: 0,
+            min_observations: 2,
+        });
+        let f = features(16.0, 0.3, 16000);
+        let b = feature_bucket(&f, 32);
+        let sb = sddmm_bucket(&f);
+        let installed = sel.install_variant_winners([
+            (SparseOp::Spmm, b, "sr_rs.mp"),
+            (SparseOp::Sddmm, sb, "sr_rs.t1"),
+            (SparseOp::Spmm, b, "no_such_variant"), // unknown label skipped
+            (SparseOp::Spmm, COST_BUCKETS, "sr_rs.t4"), // bucket out of range skipped
+        ]);
+        assert_eq!(installed, 2);
+        let (dec, entry, explored) = sel.decide_variant(&f, 32);
+        assert!(!explored);
+        assert_eq!(dec.kernel, KernelKind::SrRs);
+        assert_eq!(entry.label, "sr_rs.mp", "installed SpMM winner honored");
+        let (sdec, sentry, sexplored) = sel.decide_sddmm_variant(&f, 8);
+        assert!(!sexplored);
+        assert_eq!(sdec.kernel, KernelKind::SrRs);
+        assert_eq!(sentry.label, "sr_rs.t1", "installed SDDMM winner honored");
+        // drift through the bucket drops the installed preferences with
+        // the cost cells they summarize
+        let f_new = features(64.0, 0.3, 64000);
+        sel.reset_for_drift(&f, &f_new);
+        assert!(sel.variant_pref(SparseOp::Spmm, b, KernelKind::SrRs).is_none());
+        assert!(sel.variant_pref(SparseOp::Sddmm, sb, KernelKind::SrRs).is_none());
+        let (_, e2, _) = sel.decide_variant(&f, 32);
+        assert_eq!(e2.label, "sr_rs", "back to canonical after the reset");
     }
 }

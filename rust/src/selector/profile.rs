@@ -9,6 +9,7 @@
 //! paper's GPU defaults. See `DESIGN.md` §Measured calibration.
 
 use super::rules::AdaptiveSelector;
+use crate::kernels::{KernelKind, SparseOp};
 use crate::util::json::{num, obj, s, Json};
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
@@ -17,7 +18,27 @@ use std::path::Path;
 pub const PROFILE_ENV: &str = "GE_SPMM_PROFILE";
 
 /// Format version written into every profile (bump on breaking changes).
-pub const PROFILE_VERSION: u64 = 1;
+///
+/// Version history: v1 carried thresholds only; v2 adds the optional
+/// `variants` winner table from `ge-spmm tune`. v1 documents still load
+/// (an absent table simply means "canonical variants everywhere").
+pub const PROFILE_VERSION: u64 = 2;
+
+/// One tuned variant winner: for traffic in `bucket` whose family rule
+/// picks `family`, the measured-cheapest generated variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProfileVariant {
+    /// Which op the winner applies to.
+    pub op: SparseOp,
+    /// Cost bucket (SpMM: `feature_bucket`, SDDMM: `sddmm_bucket`).
+    pub bucket: usize,
+    /// Reduction/balancing family the rule layer picks.
+    pub family: KernelKind,
+    /// Canonical variant label within the family (e.g. `"sr_rs.t4"`).
+    pub label: String,
+    /// Measured cost (seconds per flop) of the winner; informational.
+    pub cost: f64,
+}
 
 /// A calibration outcome persisted for reuse: the fitted thresholds plus
 /// enough provenance to judge whether the fit still applies.
@@ -41,6 +62,9 @@ pub struct HardwareProfile {
     pub host: String,
     /// Seconds since the Unix epoch at fit time; informational.
     pub created_unix: u64,
+    /// Tuned per-bucket variant winners (`ge-spmm tune`); empty means
+    /// canonical variants everywhere — the pre-v2 behavior.
+    pub variants: Vec<ProfileVariant>,
 }
 
 impl HardwareProfile {
@@ -65,7 +89,14 @@ impl HardwareProfile {
                 .duration_since(std::time::UNIX_EPOCH)
                 .map(|d| d.as_secs())
                 .unwrap_or(0),
+            variants: Vec::new(),
         }
+    }
+
+    /// Attach tuned variant winners (builder-style, for `ge-spmm tune`).
+    pub fn with_variants(mut self, variants: Vec<ProfileVariant>) -> Self {
+        self.variants = variants;
+        self
     }
 
     /// Serialize as the on-disk JSON document.
@@ -88,6 +119,23 @@ impl HardwareProfile {
             ("n_values", Json::Arr(self.n_values.iter().map(|&n| num(n as f64)).collect())),
             ("host", s(&self.host)),
             ("created_unix", num(self.created_unix as f64)),
+            (
+                "variants",
+                Json::Arr(
+                    self.variants
+                        .iter()
+                        .map(|v| {
+                            obj(vec![
+                                ("op", s(v.op.label())),
+                                ("bucket", num(v.bucket as f64)),
+                                ("family", s(v.family.label())),
+                                ("variant", s(&v.label)),
+                                ("cost", num(v.cost)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -170,6 +218,33 @@ impl HardwareProfile {
                 .unwrap_or("unknown")
                 .to_string(),
             created_unix: json.get("created_unix").and_then(Json::as_usize).unwrap_or(0) as u64,
+            // absent in v1 documents (and tolerated if individually
+            // malformed): an unreadable winner degrades to "canonical",
+            // never to a load failure
+            variants: json
+                .get("variants")
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|v| {
+                            let op = match v.get("op").and_then(Json::as_str)? {
+                                "spmm" => SparseOp::Spmm,
+                                "sddmm" => SparseOp::Sddmm,
+                                _ => return None,
+                            };
+                            Some(ProfileVariant {
+                                op,
+                                bucket: v.get("bucket").and_then(Json::as_usize)?,
+                                family: KernelKind::from_label(
+                                    v.get("family").and_then(Json::as_str)?,
+                                )?,
+                                label: v.get("variant").and_then(Json::as_str)?.to_string(),
+                                cost: v.get("cost").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                            })
+                        })
+                        .collect()
+                })
+                .unwrap_or_default(),
         })
     }
 
@@ -209,14 +284,15 @@ impl HardwareProfile {
     pub fn summary(&self) -> String {
         format!(
             "thresholds T_avg={} T_cv={} (n_threshold={}, source={}, backend={}, \
-             {} samples, loss {:.3})",
+             {} samples, loss {:.3}, {} tuned variants)",
             self.selector.t_avg,
             self.selector.t_cv,
             self.selector.n_threshold,
             self.source,
             self.backend,
             self.samples,
-            self.mean_loss
+            self.mean_loss,
+            self.variants.len()
         )
     }
 }
@@ -293,5 +369,47 @@ mod tests {
         assert_eq!(p.source, "unknown");
         assert_eq!(p.samples, 0);
         assert!(p.n_values.is_empty());
+        // v1 documents have no variant table: canonical everywhere
+        assert!(p.variants.is_empty());
+    }
+
+    #[test]
+    fn variant_winners_round_trip_and_bad_entries_degrade() {
+        let p = HardwareProfile::new(&cal(), "measured", "native", 12, &[1, 32]).with_variants(
+            vec![
+                ProfileVariant {
+                    op: SparseOp::Spmm,
+                    bucket: 8,
+                    family: KernelKind::SrRs,
+                    label: "sr_rs.t4".to_string(),
+                    cost: 0.25,
+                },
+                ProfileVariant {
+                    op: SparseOp::Sddmm,
+                    bucket: 2,
+                    family: KernelKind::PrWb,
+                    label: "pr_wb.s64".to_string(),
+                    cost: 0.5,
+                },
+            ],
+        );
+        let back = HardwareProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        assert!(back.summary().contains("2 tuned variants"), "{}", back.summary());
+        // malformed winner entries are skipped, never a load failure
+        let j = Json::parse(
+            r#"{"version": 2,
+                "selector": {"n_threshold": 4, "t_avg": 8.0, "t_cv": 1.5},
+                "variants": [
+                  {"op": "spmm", "bucket": 3, "family": "sr_wb", "variant": "sr_wb.s64", "cost": 1.0},
+                  {"op": "conv", "bucket": 3, "family": "sr_wb", "variant": "x", "cost": 1.0},
+                  {"op": "spmm", "family": "sr_wb", "variant": "no_bucket"},
+                  {"op": "spmm", "bucket": 1, "family": "not_a_family", "variant": "x"}
+                ]}"#,
+        )
+        .unwrap();
+        let lenient = HardwareProfile::from_json(&j).unwrap();
+        assert_eq!(lenient.variants.len(), 1);
+        assert_eq!(lenient.variants[0].label, "sr_wb.s64");
     }
 }

@@ -27,28 +27,65 @@
 use super::features::{self, ShardFeatures};
 use super::partition::{PartitionConfig, RowPartition};
 use crate::backend::{
-    execute_sddmm_traced, execute_traced, Execution, NativeBackend, PreparedOperand,
-    SddmmExecution, SpmmBackend,
+    execute_sddmm_traced, execute_sddmm_variant_traced, execute_traced, execute_variant_traced,
+    Execution, NativeBackend, PreparedOperand, SddmmExecution, SpmmBackend,
 };
 use crate::coordinator::metrics::Metrics;
-use crate::kernels::{KernelKind, SparseOp};
+use crate::kernels::{KernelKind, SparseOp, VariantEntry};
 use crate::obs::{trace, AuditEntry};
 use crate::selector::{AdaptiveSelector, Decision, SddmmSelector};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// One prepared shard: its span + features and the inner backend's
-/// prepared operand for the row slice.
+/// One prepared shard: its span + features, a content fingerprint of the
+/// row slice (so structural deltas can prove a shard untouched), and the
+/// inner backend's prepared operand — `Arc`-shared so an untouched shard
+/// carries over to a re-cut partition without copying.
 struct PreparedShard {
     features: ShardFeatures,
-    operand: PreparedOperand,
+    fingerprint: u64,
+    operand: Arc<PreparedOperand>,
 }
 
-/// The sharded backend's prepared state for one registered matrix.
+/// The sharded backend's prepared state for one registered matrix: the
+/// shards plus the partition they were cut from (the input
+/// [`RowPartition::recut_degraded`] needs on a structural delta).
 struct ShardedPrepared {
     shards: Vec<PreparedShard>,
+    partition: RowPartition,
+}
+
+/// FNV-1a over a row slice's full content (shape, pattern, values).
+///
+/// [`CsrMatrix::fingerprint`] is deliberately epoch-rotated (two prepares
+/// of identical content must not alias in the engine's cache), so shard
+/// reuse needs its own *content* hash: equal slices hash equal, which is
+/// exactly what proves a prepared shard operand still valid after a
+/// structural delta elsewhere in the matrix.
+fn shard_fingerprint(sub: &CsrMatrix) -> u64 {
+    fn eat(h: &mut u64, word: u64) {
+        for byte in word.to_le_bytes() {
+            *h ^= u64::from(byte);
+            *h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    let mut h: u64 = 0xcbf29ce484222325;
+    eat(&mut h, sub.rows as u64);
+    eat(&mut h, sub.cols as u64);
+    for r in 0..sub.rows {
+        let (cols, vals) = sub.row(r);
+        eat(&mut h, cols.len() as u64);
+        for &c in cols {
+            eat(&mut h, u64::from(c));
+        }
+        for &v in vals {
+            eat(&mut h, u64::from(v.to_bits()));
+        }
+    }
+    h
 }
 
 /// Per-shard kernel-choice policy (see the module docs).
@@ -176,6 +213,7 @@ impl ShardedBackend {
         s: &PreparedShard,
         n: usize,
         decision: Decision,
+        variant: Option<&'static str>,
         explored: bool,
     ) -> KernelKind {
         let kernel = decision.kernel;
@@ -191,6 +229,7 @@ impl ShardedBackend {
             thresholds: decision.thresholds,
             rule: decision.rule,
             kernel,
+            variant,
             explored,
             realized_cost: None,
         });
@@ -208,20 +247,22 @@ impl SpmmBackend for ShardedBackend {
         let mut shards = Vec::with_capacity(partition.len());
         for sf in features::extract(csr, &partition) {
             let sub = csr.row_slice(sf.span.rows.clone());
+            let fingerprint = shard_fingerprint(&sub);
             let operand = self
                 .inner
                 .prepare(&sub)
                 .with_context(|| format!("preparing shard rows {:?}", sf.span.rows))?;
             shards.push(PreparedShard {
                 features: sf,
-                operand,
+                fingerprint,
+                operand: Arc::new(operand),
             });
         }
         Ok(PreparedOperand::new(
             csr.rows,
             csr.cols,
             csr.nnz(),
-            Box::new(ShardedPrepared { shards }),
+            Box::new(ShardedPrepared { shards, partition }),
         ))
     }
 
@@ -231,17 +272,64 @@ impl SpmmBackend for ShardedBackend {
         csr: &CsrMatrix,
         structural: bool,
     ) -> Option<Result<PreparedOperand>> {
-        // Structural batches re-partition from scratch: moved non-zeros
-        // shift the nnz-balanced cuts (`RowPartition::recut_degraded`
-        // bounds that work at the partition level, but the prepared
-        // operands of moved spans must be rebuilt regardless).
-        if structural {
-            return None;
-        }
         let prep: &ShardedPrepared = match prev.state() {
             Ok(p) => p,
             Err(e) => return Some(Err(e)),
         };
+        // Structural batches: moved non-zeros may shift the nnz-balanced
+        // cuts, but `RowPartition::recut_degraded` bounds the re-cut to
+        // the overloaded neighborhoods — every span whose rows *and*
+        // content survived verbatim keeps its prepared operand (the Arc
+        // carries over), and only touched or re-cut spans re-prepare.
+        if structural {
+            if prev.rows() != csr.rows || prev.cols() != csr.cols {
+                // deltas mutate edges, not dimensions: a shape change is
+                // a different matrix — decline so the caller re-prepares
+                return None;
+            }
+            let partition = prep.partition.recut_degraded(csr, &self.config);
+            let old: HashMap<(usize, usize), &PreparedShard> = prep
+                .shards
+                .iter()
+                .map(|s| ((s.features.span.rows.start, s.features.span.rows.end), s))
+                .collect();
+            let (mut reused, mut reprepared) = (0u64, 0u64);
+            let mut shards = Vec::with_capacity(partition.len());
+            for sf in features::extract(csr, &partition) {
+                let sub = csr.row_slice(sf.span.rows.clone());
+                let fingerprint = shard_fingerprint(&sub);
+                let prior = old
+                    .get(&(sf.span.rows.start, sf.span.rows.end))
+                    .filter(|s| s.fingerprint == fingerprint);
+                let operand = match prior {
+                    Some(s) => {
+                        reused += 1;
+                        s.operand.clone()
+                    }
+                    None => {
+                        reprepared += 1;
+                        match self.inner.prepare(&sub).with_context(|| {
+                            format!("re-preparing shard rows {:?}", sf.span.rows)
+                        }) {
+                            Ok(op) => Arc::new(op),
+                            Err(e) => return Some(Err(e)),
+                        }
+                    }
+                };
+                shards.push(PreparedShard {
+                    features: sf,
+                    fingerprint,
+                    operand,
+                });
+            }
+            self.metrics.record_shard_reuse(reused, reprepared);
+            return Some(Ok(PreparedOperand::new(
+                csr.rows,
+                csr.cols,
+                csr.nnz(),
+                Box::new(ShardedPrepared { shards, partition }),
+            )));
+        }
         if prev.rows() != csr.rows || prev.cols() != csr.cols || prev.nnz() != csr.nnz() {
             return Some(Err(anyhow::anyhow!(
                 "value-only delta changed the matrix shape: prepared {}x{} nnz {}, got {}x{} nnz {}",
@@ -266,14 +354,18 @@ impl SpmmBackend for ShardedBackend {
             };
             shards.push(PreparedShard {
                 features: shard.features.clone(),
-                operand,
+                fingerprint: shard_fingerprint(&sub),
+                operand: Arc::new(operand),
             });
         }
         Some(Ok(PreparedOperand::new(
             csr.rows,
             csr.cols,
             csr.nnz(),
-            Box::new(ShardedPrepared { shards }),
+            Box::new(ShardedPrepared {
+                shards,
+                partition: prep.partition.clone(),
+            }),
         )))
     }
 
@@ -286,14 +378,19 @@ impl SpmmBackend for ShardedBackend {
         let prep: &ShardedPrepared = operand.state()?;
         operand.check_operand(x)?;
         let n = x.cols;
-        let kernels: Vec<KernelKind> = match &self.selection {
+        // Per-shard choice: the family kernel plus, in online mode, the
+        // concrete generated variant (the selector's learned per-bucket
+        // preference, or an exploration sibling).
+        let choices: Vec<(KernelKind, Option<&'static VariantEntry>)> = match &self.selection {
             ShardSelection::Static(sel) => prep
                 .shards
                 .iter()
                 .enumerate()
                 .map(|(i, s)| {
                     let decision = sel.decide(&s.features.features, n);
-                    self.audit_shard(SparseOp::Spmm, i, "adaptive", s, n, decision, false)
+                    let k =
+                        self.audit_shard(SparseOp::Spmm, i, "adaptive", s, n, decision, None, false);
+                    (k, None)
                 })
                 .collect(),
             ShardSelection::Online(sel) => prep
@@ -301,11 +398,21 @@ impl SpmmBackend for ShardedBackend {
                 .iter()
                 .enumerate()
                 .map(|(i, s)| {
-                    let (decision, explored) = sel.decide(&s.features.features, n);
-                    self.audit_shard(SparseOp::Spmm, i, "online", s, n, decision, explored)
+                    let (decision, entry, explored) = sel.decide_variant(&s.features.features, n);
+                    let k = self.audit_shard(
+                        SparseOp::Spmm,
+                        i,
+                        "online",
+                        s,
+                        n,
+                        decision,
+                        Some(entry.label),
+                        explored,
+                    );
+                    (k, Some(entry))
                 })
                 .collect(),
-            ShardSelection::Fixed => vec![kernel; prep.shards.len()],
+            ShardSelection::Fixed => vec![(kernel, None); prep.shards.len()],
         };
         // Fan out: one scoped thread per shard (K is small), all sharing
         // the inner backend; each reports its own wallclock so stragglers
@@ -318,18 +425,24 @@ impl SpmmBackend for ShardedBackend {
             let handles: Vec<_> = prep
                 .shards
                 .iter()
-                .zip(&kernels)
+                .zip(&choices)
                 .enumerate()
-                .map(|(i, (shard, &k))| {
+                .map(|(i, (shard, &(k, entry)))| {
                     let th = handle.clone();
                     scope.spawn(move || -> Result<(Execution, Duration)> {
                         let _trace = th.as_ref().map(trace::attach);
                         let mut sp = trace::span("shard");
                         sp.set_attr("shard", i);
                         sp.set_attr("kernel", k.label());
+                        if let Some(e) = entry {
+                            sp.set_attr("variant", e.label);
+                        }
                         sp.set_attr("rows", format!("{:?}", shard.features.span.rows));
                         let t0 = Instant::now();
-                        let exec = execute_traced(inner, &shard.operand, x, k)?;
+                        let exec = match entry {
+                            Some(e) => execute_variant_traced(inner, &shard.operand, x, e)?,
+                            None => execute_traced(inner, &shard.operand, x, k)?,
+                        };
                         Ok((exec, t0.elapsed()))
                     })
                 })
@@ -344,15 +457,22 @@ impl SpmmBackend for ShardedBackend {
         // row-major block — reassembly is a straight copy.
         let mut y = DenseMatrix::zeros(operand.rows(), n);
         let mut labels = Vec::with_capacity(prep.shards.len());
-        for (i, ((shard, &k), res)) in prep.shards.iter().zip(&kernels).zip(results).enumerate() {
+        for (i, ((shard, &(k, entry)), res)) in
+            prep.shards.iter().zip(&choices).zip(results).enumerate()
+        {
             let (exec, took) = res.with_context(|| {
                 format!("shard {i} (rows {:?})", shard.features.span.rows)
             })?;
             let lo = shard.features.span.rows.start * n;
             y.data[lo..lo + exec.y.data.len()].copy_from_slice(&exec.y.data);
-            self.metrics.record_shard(k, took);
-            if let ShardSelection::Online(sel) = &self.selection {
-                sel.observe(&shard.features.features, n, k, took);
+            match entry {
+                Some(e) => {
+                    self.metrics.record_shard_variant(e.id, took);
+                }
+                None => self.metrics.record_shard(k, took),
+            }
+            if let (ShardSelection::Online(sel), Some(e)) = (&self.selection, entry) {
+                sel.observe_variant(&shard.features.features, n, e, took);
             }
             labels.push(exec.artifact);
         }
@@ -372,14 +492,16 @@ impl SpmmBackend for ShardedBackend {
         let prep: &ShardedPrepared = operand.state()?;
         operand.check_sddmm_operands(u, v)?;
         let d = u.cols;
-        let kernels: Vec<KernelKind> = match &self.selection {
+        let choices: Vec<(KernelKind, Option<&'static VariantEntry>)> = match &self.selection {
             ShardSelection::Static(_) => prep
                 .shards
                 .iter()
                 .enumerate()
                 .map(|(i, s)| {
                     let decision = self.sddmm_selector.decide(&s.features.features, d);
-                    self.audit_shard(SparseOp::Sddmm, i, "sddmm", s, d, decision, false)
+                    let k =
+                        self.audit_shard(SparseOp::Sddmm, i, "sddmm", s, d, decision, None, false);
+                    (k, None)
                 })
                 .collect(),
             ShardSelection::Online(sel) => prep
@@ -387,11 +509,22 @@ impl SpmmBackend for ShardedBackend {
                 .iter()
                 .enumerate()
                 .map(|(i, s)| {
-                    let (decision, explored) = sel.decide_sddmm(&s.features.features, d);
-                    self.audit_shard(SparseOp::Sddmm, i, "online-sddmm", s, d, decision, explored)
+                    let (decision, entry, explored) =
+                        sel.decide_sddmm_variant(&s.features.features, d);
+                    let k = self.audit_shard(
+                        SparseOp::Sddmm,
+                        i,
+                        "online-sddmm",
+                        s,
+                        d,
+                        decision,
+                        Some(entry.label),
+                        explored,
+                    );
+                    (k, Some(entry))
                 })
                 .collect(),
-            ShardSelection::Fixed => vec![kernel; prep.shards.len()],
+            ShardSelection::Fixed => vec![(kernel, None); prep.shards.len()],
         };
         // Fan out: shard i owns the rows of its span, whose U block is the
         // matching contiguous row slice; V is shared whole. Shard outputs
@@ -406,9 +539,9 @@ impl SpmmBackend for ShardedBackend {
             let handles: Vec<_> = prep
                 .shards
                 .iter()
-                .zip(&kernels)
+                .zip(&choices)
                 .enumerate()
-                .map(|(i, (shard, &k))| {
+                .map(|(i, (shard, &(k, entry)))| {
                     let rows = shard.features.span.rows.clone();
                     let usub = DenseMatrix::from_vec(
                         rows.end - rows.start,
@@ -421,9 +554,17 @@ impl SpmmBackend for ShardedBackend {
                         let mut sp = trace::span("shard");
                         sp.set_attr("shard", i);
                         sp.set_attr("kernel", k.label());
+                        if let Some(e) = entry {
+                            sp.set_attr("variant", e.label);
+                        }
                         sp.set_attr("rows", format!("{:?}", shard.features.span.rows));
                         let t0 = Instant::now();
-                        let exec = execute_sddmm_traced(inner, &shard.operand, &usub, v, k)?;
+                        let exec = match entry {
+                            Some(e) => {
+                                execute_sddmm_variant_traced(inner, &shard.operand, &usub, v, e)?
+                            }
+                            None => execute_sddmm_traced(inner, &shard.operand, &usub, v, k)?,
+                        };
                         Ok((exec, t0.elapsed()))
                     })
                 })
@@ -437,15 +578,22 @@ impl SpmmBackend for ShardedBackend {
         let mut values = vec![0f32; operand.nnz()];
         let mut labels = Vec::with_capacity(prep.shards.len());
         let mut off = 0usize;
-        for (i, ((shard, &k), res)) in prep.shards.iter().zip(&kernels).zip(results).enumerate() {
+        for (i, ((shard, &(k, entry)), res)) in
+            prep.shards.iter().zip(&choices).zip(results).enumerate()
+        {
             let (exec, took) = res.with_context(|| {
                 format!("sddmm shard {i} (rows {:?})", shard.features.span.rows)
             })?;
             values[off..off + exec.values.len()].copy_from_slice(&exec.values);
             off += exec.values.len();
-            self.metrics.record_sddmm_shard(k, took);
-            if let ShardSelection::Online(sel) = &self.selection {
-                sel.observe_sddmm(&shard.features.features, d, k, took);
+            match entry {
+                Some(e) => {
+                    self.metrics.record_shard_variant(e.id, took);
+                }
+                None => self.metrics.record_sddmm_shard(k, took),
+            }
+            if let (ShardSelection::Online(sel), Some(e)) = (&self.selection, entry) {
+                sel.observe_variant(&shard.features.features, d, e, took);
             }
             labels.push(exec.artifact);
         }
@@ -752,7 +900,9 @@ mod tests {
             assert_eq!(sa.values, sb.values, "{kind:?}");
         }
 
-        // structural batches decline: cuts may move
+        // structural batches no longer decline: one added edge re-cuts
+        // at most its own neighborhood, so the untouched shards keep
+        // their prepared operands and only the touched one re-prepares
         let mut grow = EdgeDelta::new();
         let r0 = (0..csr.rows).find(|&r| csr.row_nnz(r) < csr.cols).unwrap();
         let c0 = (0..csr.cols as u32)
@@ -761,7 +911,65 @@ mod tests {
         grow.insert(r0, c0 as usize, 9.0);
         let rep = grow.apply(&mut csr);
         assert!(rep.structural);
-        assert!(backend.prepare_delta(&patched, &csr, true).is_none());
+        let grown = backend.prepare_delta(&patched, &csr, true).unwrap().unwrap();
+        assert_eq!(grown.nnz(), csr.nnz());
+        let fresh = backend.prepare(&csr).unwrap();
+        let a = backend.execute(&grown, &x, KernelKind::SrRs).unwrap();
+        let b = backend.execute(&fresh, &x, KernelKind::SrRs).unwrap();
+        assert_eq!(a.y.data, b.y.data);
+        assert_eq!(
+            (
+                backend.metrics().shard_operands_reused(),
+                backend.metrics().shard_operands_reprepared()
+            ),
+            (2, 1),
+            "one edge touches one shard; the other two carry over"
+        );
+    }
+
+    #[test]
+    fn structural_prepare_delta_reprepares_only_touched_shards() {
+        use crate::sparse::EdgeDelta;
+        let mut rng = Xoshiro256::seeded(412);
+        let mut csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(160, 100, 0.06, &mut rng));
+        let backend = ShardedBackend::new(4);
+        let prev = backend.prepare(&csr).unwrap();
+
+        // drop one edge from the last shard's row range only
+        let prep_rows = csr.rows;
+        let r0 = (3 * prep_rows / 4..prep_rows)
+            .find(|&r| csr.row_nnz(r) > 0)
+            .unwrap();
+        let c0 = csr.row(r0).0[0] as usize;
+        let mut delta = EdgeDelta::new();
+        delta.delete(r0, c0);
+        let rep = delta.apply(&mut csr);
+        assert!(rep.structural);
+
+        let patched = backend.prepare_delta(&prev, &csr, true).unwrap().unwrap();
+        let reused = backend.metrics().shard_operands_reused();
+        let reprepared = backend.metrics().shard_operands_reprepared();
+        assert_eq!(reused + reprepared, 4, "every shard is accounted for");
+        assert!(reused >= 2, "untouched shards keep their operands: {reused}");
+        assert!(reprepared >= 1, "the touched shard re-prepares");
+
+        // the patched operand is execution-equivalent to a fresh prepare
+        let fresh = backend.prepare(&csr).unwrap();
+        let x = DenseMatrix::random(100, 5, 1.0, &mut rng);
+        let u = DenseMatrix::random(160, 6, 1.0, &mut rng);
+        let v = DenseMatrix::random(100, 6, 1.0, &mut rng);
+        for kind in KernelKind::ALL {
+            let a = backend.execute(&patched, &x, kind).unwrap();
+            let b = backend.execute(&fresh, &x, kind).unwrap();
+            assert_eq!(a.y.data, b.y.data, "{kind:?}");
+            let sa = backend.execute_sddmm(&patched, &u, &v, kind).unwrap();
+            let sb = backend.execute_sddmm(&fresh, &u, &v, kind).unwrap();
+            assert_eq!(sa.values, sb.values, "{kind:?}");
+        }
+
+        // a shape change is a different matrix: still declined
+        let wider = CsrMatrix::from_coo(&CooMatrix::new(160, 101));
+        assert!(backend.prepare_delta(&patched, &wider, true).is_none());
     }
 
     #[test]

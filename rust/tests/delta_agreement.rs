@@ -12,13 +12,15 @@
 //! the correct bar even with real-valued weights.
 //!
 //! Coverage across the test functions: value-only churn (patched in
-//! place) and mixed structural churn (re-prepared), blocked and
-//! merge-path traversal, sharded (k=2 and k=3) and unsharded backends,
-//! the prepared cache rotating with the epoch, concurrent server
-//! traffic in flight while the mutation stream replays, and a
-//! heavy-growth phase that must trip the drift detector and leave
-//! delta-grain reselection entries in the audit log. The batch count
-//! across the suite is 245 — past the 200 the acceptance bar asks for.
+//! place) and mixed structural churn (re-prepared on the unsharded
+//! backend, fingerprint-gated partial re-preparation on the sharded
+//! one), blocked and merge-path traversal, sharded (k=2, k=3 and k=4)
+//! and unsharded backends, the prepared cache rotating with the epoch,
+//! concurrent server traffic in flight while the mutation stream
+//! replays, and a heavy-growth phase that must trip the drift detector
+//! and leave delta-grain reselection entries in the audit log. The
+//! batch count across the suite is 275 — past the 200 the acceptance
+//! bar asks for.
 
 mod common;
 use common::int_dense;
@@ -131,6 +133,38 @@ fn value_only_churn_patches_shard_locally_on_the_sharded_engine() {
     let (patched, reprepared) = replay(&engine, || SpmmEngine::sharded(2), &mut stream, 60, 203);
     assert_eq!(patched, 60, "sharded backends forward value patches per shard");
     assert_eq!(reprepared, 0);
+}
+
+#[test]
+fn structural_churn_patches_partially_on_the_sharded_engine() {
+    let engine = SpmmEngine::sharded(4);
+    // Gentle structural churn — a few edges per batch on a 128-row base —
+    // so any given batch leaves most of the four shards untouched. The
+    // fingerprint gate must reuse those shards' operands and rebuild only
+    // the touched ones, while every output stays bit-for-bit equal to a
+    // from-scratch engine (checked by `replay` after every batch).
+    let config = ChurnConfig {
+        base: RmatConfig::new(7, 4.0),
+        inserts: 2,
+        deletes: 1,
+        updates: 2,
+    };
+    let mut stream = ChurnStream::new(config, 106);
+    let (patched, reprepared) = replay(&engine, || SpmmEngine::sharded(4), &mut stream, 30, 206);
+    assert_eq!(
+        patched, 30,
+        "structural deltas patch in place on the sharded backend (fingerprint-gated)"
+    );
+    assert_eq!(reprepared, 0);
+    let reused = engine.metrics.shard_operands_reused();
+    let redone = engine.metrics.shard_operands_reprepared();
+    assert_eq!(
+        reused + redone,
+        30 * 4,
+        "every structural batch accounts for all four shard operands"
+    );
+    assert!(redone >= 30, "each batch rebuilds at least the shard it touched");
+    assert!(reused > 0, "untouched shards are reused, not rebuilt");
 }
 
 #[test]

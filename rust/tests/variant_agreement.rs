@@ -1,0 +1,246 @@
+//! Generated-variant agreement (ISSUE 9): the variant registry replaces
+//! the closed four-kernel enum, so every entry it generates — tiled row
+//! traversals, merge-path spans, alternate segment lengths — must compute
+//! the same answer as the dense references. CI runs this binary with and
+//! without `--features simd`; the invariants below hold in both
+//! configurations because kernels and references share one canonical dot
+//! order per configuration.
+//!
+//! - Every SpMM variant agrees with `spmm_reference` within float
+//!   tolerance on arbitrary data, across all four generator families.
+//! - The serial-reduction (SR) row-traversal variants are **bit-for-bit**
+//!   equal to the reference on arbitrary floats under a serial pool:
+//!   tiling the elementwise `j` loop and re-chunking rows reassociate
+//!   nothing.
+//! - On integer-valued operands every partial sum is exactly
+//!   representable, so **all** variants — including the reassociating
+//!   workload-balanced and parallel-reduction families at every segment
+//!   length — must be bit-for-bit equal under parallel pools.
+//! - Every SDDMM variant is **bit-for-bit** equal to `sddmm_reference`
+//!   in every configuration (one canonical dot per configuration).
+//! - Misusing an entry (wrong op, mismatched segment layout) errors
+//!   instead of panicking or silently computing garbage.
+
+use std::collections::HashMap;
+
+use ge_spmm::gen::banded::banded;
+use ge_spmm::gen::powerlaw::PowerLawConfig;
+use ge_spmm::gen::rmat::RmatConfig;
+use ge_spmm::kernels::dense::{sddmm_reference, spmm_reference};
+use ge_spmm::kernels::{registry, KernelKind, SparseOp};
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix, SegmentedMatrix};
+use ge_spmm::util::proptest::{assert_close, run_prop, Gen};
+use ge_spmm::util::threadpool::ThreadPool;
+
+mod common;
+use common::int_dense;
+
+/// One matrix from each generator family the selector is tested over:
+/// uniform, power-law (heavy tail), banded, R-MAT.
+fn gen_matrix(g: &mut Gen) -> CsrMatrix {
+    let family = *g.choose(&[0usize, 1, 2, 3]);
+    let coo = match family {
+        0 => {
+            let rows = g.dim() * 2 + 1;
+            let cols = g.dim() * 2 + 1;
+            let density = g.f64_in(0.02, 0.3);
+            CooMatrix::random_uniform(rows, cols, density, g.rng())
+        }
+        1 => {
+            let rows = g.dim() * 4 + 8;
+            PowerLawConfig {
+                rows,
+                cols: rows,
+                alpha: 1.7,
+                min_row: 1,
+                max_row: (rows / 2).max(2),
+            }
+            .generate(g.rng())
+        }
+        2 => {
+            let n = g.dim() * 2 + 2;
+            banded(n, &[-3, -1, 0, 1, 5], g.rng())
+        }
+        _ => RmatConfig::new(5, 4.0).generate(g.rng()),
+    };
+    CsrMatrix::from_coo(&coo)
+}
+
+/// One segmented layout per distinct segment length in the registry —
+/// variants that share a length share the layout, exactly like the
+/// backends do.
+fn layouts(a: &CsrMatrix) -> HashMap<usize, SegmentedMatrix> {
+    let mut lens: Vec<usize> = registry()
+        .entries()
+        .iter()
+        .map(|e| e.variant.seg_len)
+        .collect();
+    lens.sort_unstable();
+    lens.dedup();
+    lens.into_iter()
+        .map(|l| (l, SegmentedMatrix::from_csr(a, l)))
+        .collect()
+}
+
+/// Assert bit-for-bit equality with a labelled first-divergence message.
+fn assert_bits(actual: &[f32], expect: &[f32], what: &str) -> Result<(), String> {
+    if actual.len() != expect.len() {
+        return Err(format!("{what}: length {} vs {}", actual.len(), expect.len()));
+    }
+    for (i, (a, e)) in actual.iter().zip(expect).enumerate() {
+        if a.to_bits() != e.to_bits() {
+            return Err(format!("{what}: first divergence at {i}: {a:e} vs {e:e}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn registry_spans_both_ops_and_all_families() {
+    let reg = registry();
+    assert!(
+        reg.len() >= 12,
+        "variant space collapsed: {} entries (want >= 12)",
+        reg.len()
+    );
+    for op in [SparseOp::Spmm, SparseOp::Sddmm] {
+        for family in KernelKind::ALL {
+            let variants = reg.family_variants(op, family);
+            assert!(
+                !variants.is_empty(),
+                "no generated variants for {}/{}",
+                op.label(),
+                family.label()
+            );
+            // the canonical point is always present and listed first
+            assert_eq!(variants[0].label, family.label());
+        }
+    }
+}
+
+#[test]
+fn every_spmm_variant_agrees_with_the_reference_across_generators() {
+    run_prop("variants: spmm vs reference", 32, |g| {
+        let a = gen_matrix(g);
+        let segs = layouts(&a);
+        let n = *g.choose(&[1usize, 4, 8, 32, 33]);
+        let x = DenseMatrix::from_vec(a.cols, n, g.vec_f32(a.cols * n));
+        let mut want = DenseMatrix::zeros(a.rows, n);
+        spmm_reference(&a, &x, &mut want);
+        let pool = ThreadPool::new(*g.choose(&[1usize, 2, 4]));
+        for e in registry().op_variants(SparseOp::Spmm) {
+            let mut y = DenseMatrix::zeros(a.rows, n);
+            e.run_spmm(&a, &segs[&e.variant.seg_len], &x, &mut y, &pool)
+                .map_err(|err| format!("{}: {err:#}", e.label))?;
+            assert_close(&y.data, &want.data, 1e-4, 1e-4)
+                .map_err(|m| format!("{}: {m}", e.label))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn serial_reduction_variants_are_bitwise_on_arbitrary_floats() {
+    // SR variants keep the reference's per-row reduction order: row
+    // tiling and merge-path span walking only re-chunk whole rows, so
+    // under a serial pool (one span, CSR order) the output bits are the
+    // reference's bits on arbitrary float data.
+    run_prop("variants: sr bitwise", 32, |g| {
+        let a = gen_matrix(g);
+        let segs = layouts(&a);
+        let n = *g.choose(&[1usize, 4, 7, 8, 32]);
+        let x = DenseMatrix::from_vec(a.cols, n, g.vec_f32(a.cols * n));
+        let mut want = DenseMatrix::zeros(a.rows, n);
+        spmm_reference(&a, &x, &mut want);
+        let serial = ThreadPool::serial();
+        for e in registry().family_variants(SparseOp::Spmm, KernelKind::SrRs) {
+            let mut y = DenseMatrix::zeros(a.rows, n);
+            e.run_spmm(&a, &segs[&e.variant.seg_len], &x, &mut y, &serial)
+                .map_err(|err| format!("{}: {err:#}", e.label))?;
+            assert_bits(&y.data, &want.data, e.label)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn integer_operands_make_every_spmm_variant_exact() {
+    // On integer-valued A and X every partial sum is exactly
+    // representable, so even the reassociating variants (WB segments at
+    // every generated length, PR lanes, multi-worker merge-path carries)
+    // must be bit-for-bit equal — any dropped or duplicated contribution
+    // changes the result exactly.
+    run_prop("variants: integer exactness", 24, |g| {
+        let mut a = gen_matrix(g);
+        for v in &mut a.values {
+            *v = (((v.to_bits() >> 9) % 9) as i64 - 4) as f32;
+        }
+        let segs = layouts(&a);
+        let n = *g.choose(&[1usize, 4, 8, 32]);
+        let x = int_dense(a.cols, n, g.rng());
+        let mut want = DenseMatrix::zeros(a.rows, n);
+        spmm_reference(&a, &x, &mut want);
+        let pool = ThreadPool::new(*g.choose(&[2usize, 4]));
+        for e in registry().op_variants(SparseOp::Spmm) {
+            let mut y = DenseMatrix::zeros(a.rows, n);
+            e.run_spmm(&a, &segs[&e.variant.seg_len], &x, &mut y, &pool)
+                .map_err(|err| format!("{}: {err:#}", e.label))?;
+            assert_bits(&y.data, &want.data, &format!("{}/int", e.label))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_sddmm_variant_is_bitwise_vs_the_reference() {
+    // Each SDDMM output element is one dot product; kernels and reference
+    // share a single canonical dot order per feature configuration, and
+    // no variant splits a dot across workers — so every entry is exact.
+    run_prop("variants: sddmm bitwise", 32, |g| {
+        let a = gen_matrix(g);
+        let segs = layouts(&a);
+        let d = *g.choose(&[1usize, 7, 8, 9, 32, 33]);
+        let u = DenseMatrix::from_vec(a.rows, d, g.vec_f32(a.rows * d));
+        let v = DenseMatrix::from_vec(a.cols, d, g.vec_f32(a.cols * d));
+        let mut want = vec![0f32; a.nnz()];
+        sddmm_reference(&a, &u, &v, &mut want);
+        let pool = ThreadPool::new(*g.choose(&[1usize, 2, 4]));
+        for e in registry().op_variants(SparseOp::Sddmm) {
+            let mut out = vec![0f32; a.nnz()];
+            e.run_sddmm(&a, &segs[&e.variant.seg_len], &u, &v, &mut out, &pool)
+                .map_err(|err| format!("{}: {err:#}", e.label))?;
+            assert_bits(&out, &want, e.label)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn misusing_an_entry_errors_instead_of_panicking() {
+    let mut rng = ge_spmm::util::prng::Xoshiro256::seeded(7);
+    let a = CsrMatrix::from_coo(&CooMatrix::random_uniform(40, 30, 0.1, &mut rng));
+    let pool = ThreadPool::serial();
+    let reg = registry();
+
+    // wrong op: an SDDMM entry refuses to run SpMM and vice versa
+    let spmm = reg.canonical(SparseOp::Spmm, KernelKind::SrRs);
+    let sddmm = reg.canonical(SparseOp::Sddmm, KernelKind::SrRs);
+    let seg = SegmentedMatrix::from_csr(&a, spmm.variant.seg_len);
+    let x = DenseMatrix::random(a.cols, 4, 1.0, &mut rng);
+    let mut y = DenseMatrix::zeros(a.rows, 4);
+    assert!(sddmm.run_spmm(&a, &seg, &x, &mut y, &pool).is_err());
+    let u = DenseMatrix::random(a.rows, 4, 1.0, &mut rng);
+    let v = DenseMatrix::random(a.cols, 4, 1.0, &mut rng);
+    let mut out = vec![0f32; a.nnz()];
+    assert!(spmm.run_sddmm(&a, &seg, &u, &v, &mut out, &pool).is_err());
+
+    // mismatched layout: a balanced-family entry checks the segment length
+    let wb = reg
+        .op_variants(SparseOp::Spmm)
+        .into_iter()
+        .find(|e| e.variant.family == KernelKind::SrWb && e.variant.seg_len != 32)
+        .expect("registry generates a non-default segment length");
+    let wrong = SegmentedMatrix::from_csr(&a, 32);
+    let mut y = DenseMatrix::zeros(a.rows, 4);
+    assert!(wb.run_spmm(&a, &wrong, &x, &mut y, &pool).is_err());
+}
