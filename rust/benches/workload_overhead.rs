@@ -1,0 +1,122 @@
+//! Second-layer observability record-path cost — the price ISSUE 10
+//! adds to the serving hot path: one analytic workload estimate plus
+//! eight counter adds per dispatch, one regret fold per online cost
+//! observation, one shard-imbalance update per fan-out batch, one SLO
+//! window update per delivered reply, and the exposition render that now
+//! carries the workload, regret and SLO sections. Feeds DESIGN.md
+//! §Observability (recording convention in BENCHMARKS.md; supports
+//! `--json <path>` self-recording).
+
+use ge_spmm::bench::harness::bench_fn;
+use ge_spmm::bench::record::{json_path_arg, BenchRecord};
+use ge_spmm::coordinator::metrics::Metrics;
+use ge_spmm::coordinator::SpmmEngine;
+use ge_spmm::kernels::{registry, KernelKind, SparseOp};
+use ge_spmm::obs::expo;
+use ge_spmm::obs::workload;
+use ge_spmm::obs::{SloMonitor, SloSpec};
+use ge_spmm::sparse::{CooMatrix, CsrMatrix, DenseMatrix};
+use ge_spmm::util::json::{num, obj};
+use ge_spmm::util::prng::Xoshiro256;
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Record-path ops per timed closure call: single calls are too small
+/// for the wallclock harness, so every case batches and reports per-op.
+const BATCH: usize = 10_000;
+
+fn per_op(median_s: f64, ops: usize) -> f64 {
+    median_s / ops as f64 * 1e9
+}
+
+fn main() {
+    println!("== workload-accounting record-path cost (this machine) ==");
+    let mut record = json_path_arg().map(|path| {
+        (
+            path,
+            BenchRecord::new("workload_overhead")
+                .with_config(obj(vec![("batch", num(BATCH as f64))])),
+        )
+    });
+    let mut cases: Vec<(String, f64)> = Vec::new();
+    let mut run = |name: &str, ops: usize, f: &mut dyn FnMut()| {
+        let s = bench_fn(name, f);
+        let ns = per_op(s.median_s(), ops);
+        println!("{}  ({ns:.1} ns/op)", s.line());
+        cases.push((name.to_string(), ns));
+        s
+    };
+
+    let entry = registry().canonical(SparseOp::Spmm, KernelKind::SrRs);
+
+    // the analytic model alone: what every dispatch computes
+    run("workload estimate x10k", BATCH, &mut || {
+        for i in 0..BATCH {
+            black_box(workload::estimate(&entry.variant, 4096, 65_536 + i, 32));
+        }
+    });
+
+    // estimate + the eight counter adds the metrics hub pays per dispatch
+    let metrics = Metrics::default();
+    let latency = Duration::from_micros(40);
+    run("workload record x10k", BATCH, &mut || {
+        for i in 0..BATCH {
+            let est = workload::estimate(&entry.variant, 4096, 65_536 + i, 32);
+            metrics.record_workload(entry.id, &est, latency);
+        }
+    });
+
+    // one regret fold per online cost observation
+    run("regret fold x10k", BATCH, &mut || {
+        for i in 0..BATCH {
+            let cost = 1e-11 + (i % 7) as f64 * 1e-12;
+            metrics.regret().fold(SparseOp::Spmm, i % 12, entry.id, cost, 1e-11);
+        }
+    });
+
+    // one shard-imbalance update per fan-out batch
+    run("shard imbalance record x10k", BATCH, &mut || {
+        for i in 0..BATCH as u64 {
+            metrics.record_shard_imbalance(600 + i % 64, 2000, 4);
+        }
+    });
+
+    // one SLO window update per delivered reply
+    let monitor = Arc::new(SloMonitor::new(SloSpec::parse("p99=2ms,queue=128").unwrap()));
+    metrics.install_slo(monitor.clone());
+    run("slo observe x10k", BATCH, &mut || {
+        for i in 0..BATCH {
+            monitor.observe(Duration::from_micros(50 + (i % 100) as u64), i % 32);
+        }
+    });
+    black_box(monitor.report().healthy());
+
+    // denominator: a full instrumented request with workload accounting
+    // live (trace, audit, latency histogram, workload banks)
+    let mut rng = Xoshiro256::seeded(11);
+    let csr = CsrMatrix::from_coo(&CooMatrix::random_uniform(256, 256, 0.03, &mut rng));
+    let engine = SpmmEngine::native();
+    let h = engine.register(csr).unwrap();
+    let x = DenseMatrix::random(256, 8, 1.0, &mut rng);
+    run("spmm end-to-end accounted", 1, &mut || {
+        black_box(engine.spmm(h, &x).unwrap());
+    });
+
+    // what `serve --stats-every` pays now that the snapshot carries the
+    // workload, regret and SLO sections
+    engine.metrics.install_slo(monitor.clone());
+    run("prometheus render (full)", 1, &mut || {
+        black_box(expo::prometheus_text(&engine.metrics).len());
+    });
+
+    if let Some((_, rec)) = record.as_mut() {
+        for (name, ns) in &cases {
+            rec.push_value(name, *ns, "ns/op");
+        }
+    }
+    if let Some((path, rec)) = record {
+        rec.save(&path).expect("writing bench record");
+        println!("wrote {}", path.display());
+    }
+}

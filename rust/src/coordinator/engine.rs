@@ -190,7 +190,26 @@ impl SpmmEngine {
         shards: usize,
         selector: AdaptiveSelector,
     ) -> SpmmEngine {
-        let metrics = Arc::new(Metrics::default());
+        Self::serving_with_selector_traced(
+            cache_budget_bytes,
+            shard_threshold_nnz,
+            shards,
+            selector,
+            crate::obs::trace::DEFAULT_TRACE_CAPACITY,
+        )
+    }
+
+    /// [`SpmmEngine::serving_with_selector`] with an explicit flight-
+    /// recorder ring capacity (`serve --trace-capacity`): the shared
+    /// [`Metrics`] hub keeps the last `trace_capacity` request traces.
+    pub fn serving_with_selector_traced(
+        cache_budget_bytes: usize,
+        shard_threshold_nnz: usize,
+        shards: usize,
+        selector: AdaptiveSelector,
+        trace_capacity: usize,
+    ) -> SpmmEngine {
+        let metrics = Arc::new(Metrics::with_trace_capacity(trace_capacity));
         let large = crate::shard::ShardedBackend::new(shards.max(1))
             .adaptive(selector)
             .with_metrics(metrics.clone());
@@ -224,7 +243,27 @@ impl SpmmEngine {
         base: AdaptiveSelector,
         config: OnlineConfig,
     ) -> SpmmEngine {
-        let metrics = Arc::new(Metrics::default());
+        Self::serving_online_traced(
+            cache_budget_bytes,
+            shard_threshold_nnz,
+            shards,
+            base,
+            config,
+            crate::obs::trace::DEFAULT_TRACE_CAPACITY,
+        )
+    }
+
+    /// [`SpmmEngine::serving_online`] with an explicit flight-recorder
+    /// ring capacity (`serve --trace-capacity`).
+    pub fn serving_online_traced(
+        cache_budget_bytes: usize,
+        shard_threshold_nnz: usize,
+        shards: usize,
+        base: AdaptiveSelector,
+        config: OnlineConfig,
+        trace_capacity: usize,
+    ) -> SpmmEngine {
+        let metrics = Arc::new(Metrics::with_trace_capacity(trace_capacity));
         let online = Arc::new(OnlineSelector::new(base, metrics.clone(), config));
         // RoutedBackend::online records shard telemetry into the
         // selector's metrics — the same instance as the engine's, so
@@ -747,6 +786,22 @@ impl SpmmEngine {
             }
             None => self.metrics.record(kernel, latency),
         }
+        // Roofline accounting for directly-executed native requests: the
+        // analytic workload of the exact variant that ran (the family
+        // hint's canonical variant when no generated entry was resolved).
+        // Sharded fan-outs account per shard inside the sharded backend,
+        // so gating on the `native/` artifact label prevents double
+        // counting.
+        if exec.artifact.starts_with("native/") {
+            let ran = entry.unwrap_or_else(|| registry().canonical(SparseOp::Spmm, kernel));
+            let est = crate::obs::workload::estimate(
+                &ran.variant,
+                reg.features.rows,
+                reg.features.nnz,
+                x.cols,
+            );
+            self.metrics.record_workload(ran.id, &est, latency);
+        }
         // Close the online loop for directly-executed requests. Sharded
         // executions already observed per shard (with per-shard features
         // and actual per-shard choices), so only the unsharded route —
@@ -878,6 +933,18 @@ impl SpmmEngine {
                 self.metrics.record_request_variant(e.id, latency);
             }
             None => self.metrics.record_sddmm(kernel, latency),
+        }
+        // Roofline accounting for directly-executed native SDDMM,
+        // mirroring `spmm_dispatch` (sharded fan-outs account per shard).
+        if exec.artifact.starts_with("native/sddmm/") {
+            let ran = entry.unwrap_or_else(|| registry().canonical(SparseOp::Sddmm, kernel));
+            let est = crate::obs::workload::estimate(
+                &ran.variant,
+                reg.features.rows,
+                reg.features.nnz,
+                u.cols,
+            );
+            self.metrics.record_workload(ran.id, &est, latency);
         }
         // Close the online loop for directly-executed requests, mirroring
         // `spmm_dispatch`: sharded fan-outs already observed per shard.

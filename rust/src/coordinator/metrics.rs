@@ -34,10 +34,21 @@
 //! (`crate::obs::expo`) renders them as Prometheus text and JSON.
 //!
 //! `Metrics` is also the hub the rest of the observability subsystem
-//! hangs off: the request-trace [`FlightRecorder`] and the selector
-//! decision [`AuditLog`] live here because every layer that needs them
-//! (engine, server, batcher, sharded backend) already shares one
-//! `Arc<Metrics>`.
+//! hangs off: the request-trace [`FlightRecorder`], the selector
+//! decision [`AuditLog`], the selector-regret [`RegretTracker`] and the
+//! optional serving [`SloMonitor`] live here because every layer that
+//! needs them (engine, server, batcher, sharded backend) already shares
+//! one `Arc<Metrics>`.
+//!
+//! The **workload banks** turn the same dispatch stream into roofline
+//! accounting: every native execution reports its analytic
+//! [`WorkloadEstimate`] (flops, bytes moved, segment padding — see
+//! [`crate::obs::workload`]) alongside its wallclock, accumulated per
+//! variant id, so `ge-spmm stats` can print achieved GFLOP/s, GB/s and
+//! arithmetic intensity per (op, variant) without any sampling. Shard
+//! fan-outs additionally record a per-batch **nnz imbalance** ratio
+//! (max/mean over the batch's shards, in integer milli-units) — the
+//! paper's workload-balancing claim as a measured distribution.
 //!
 //! The per-`(feature bucket, variant)` cost EWMAs
 //! ([`Metrics::observe_cost_variant`] / [`Metrics::cost_variant`]) are
@@ -51,10 +62,14 @@ use crate::kernels::generator::registry;
 use crate::kernels::{KernelKind, SparseOp};
 use crate::obs::audit::AuditLog;
 use crate::obs::hist::{AtomicHistogram, HistogramSnapshot};
+use crate::obs::regret::RegretTracker;
+use crate::obs::slo::SloMonitor;
 use crate::obs::trace::FlightRecorder;
+use crate::obs::workload::{WorkloadEstimate, WorkloadTotals};
 use crate::obs::Grain;
+use crate::selector::online::SDDMM_BUCKETS;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Number of feature buckets the per-variant cost EWMAs are keyed by.
@@ -112,14 +127,46 @@ pub struct Metrics {
     cost_ewma: Vec<AtomicU64>,
     /// observation counts behind each EWMA cell (0 = cell is empty)
     cost_obs: Vec<AtomicU64>,
+    /// per-variant workload accounting: executions, nanoseconds, flops,
+    /// bytes read/written, padding bytes, rows and nnz processed —
+    /// registry-indexed like every other bank
+    wl_execs: Vec<AtomicU64>,
+    wl_ns: Vec<AtomicU64>,
+    wl_flops: Vec<AtomicU64>,
+    wl_bytes_read: Vec<AtomicU64>,
+    wl_bytes_written: Vec<AtomicU64>,
+    wl_padding: Vec<AtomicU64>,
+    wl_rows: Vec<AtomicU64>,
+    wl_nnz: Vec<AtomicU64>,
+    /// per-batch shard nnz imbalance (max/mean, integer milli-ratio):
+    /// batch count, ratio sum, and the worst batch seen
+    imbalance_batches: AtomicU64,
+    imbalance_milli_sum: AtomicU64,
+    imbalance_milli_max: AtomicU64,
     /// ring of the last N request traces (committed at request end)
     recorder: Arc<FlightRecorder>,
     /// ring of recent selector decisions with features and thresholds
     audit: Arc<AuditLog>,
+    /// running selector-regret counters, folded by the online selector
+    regret: Arc<RegretTracker>,
+    /// serving SLO monitor, installed by `serve --slo` (absent
+    /// otherwise); behind a mutex because installation happens once at
+    /// startup while readers snapshot the `Arc`
+    slo: Mutex<Option<Arc<SloMonitor>>>,
 }
 
 impl Default for Metrics {
     fn default() -> Self {
+        Self::with_trace_capacity(crate::obs::trace::DEFAULT_TRACE_CAPACITY)
+    }
+}
+
+impl Metrics {
+    /// Build a metrics hub whose flight recorder keeps the last
+    /// `trace_capacity` request traces (the `Default` impl uses the
+    /// recorder's stock capacity). Every bank is sized off the live
+    /// variant registry.
+    pub fn with_trace_capacity(trace_capacity: usize) -> Self {
         let nv = registry().len();
         let counters = |n: usize| (0..n).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
         let hists = |n: usize| (0..n).map(|_| AtomicHistogram::new()).collect::<Vec<_>>();
@@ -147,13 +194,24 @@ impl Default for Metrics {
             queue_depth_max: AtomicU64::new(0),
             cost_ewma: counters(COST_BUCKETS * nv),
             cost_obs: counters(COST_BUCKETS * nv),
-            recorder: Arc::default(),
+            wl_execs: counters(nv),
+            wl_ns: counters(nv),
+            wl_flops: counters(nv),
+            wl_bytes_read: counters(nv),
+            wl_bytes_written: counters(nv),
+            wl_padding: counters(nv),
+            wl_rows: counters(nv),
+            wl_nnz: counters(nv),
+            imbalance_batches: AtomicU64::new(0),
+            imbalance_milli_sum: AtomicU64::new(0),
+            imbalance_milli_max: AtomicU64::new(0),
+            recorder: Arc::new(FlightRecorder::new(trace_capacity)),
             audit: Arc::default(),
+            regret: Arc::new(RegretTracker::new(COST_BUCKETS, SDDMM_BUCKETS, nv)),
+            slo: Mutex::new(None),
         }
     }
-}
 
-impl Metrics {
     /// Sum one variant-indexed bank over a family's variants of one op.
     fn family_sum(&self, bank: &[AtomicU64], op: SparseOp, family: KernelKind) -> u64 {
         registry()
@@ -591,6 +649,93 @@ impl Metrics {
         Duration::from_nanos(snap.quantile(q) as u64)
     }
 
+    /// Record one native execution's analytic workload alongside its
+    /// wallclock: the dispatch layer computes the
+    /// [`WorkloadEstimate`] for the variant it ran and reports it here.
+    /// Returns `false` (recording nothing) for an unknown variant id.
+    pub fn record_workload(
+        &self,
+        variant: usize,
+        est: &WorkloadEstimate,
+        latency: Duration,
+    ) -> bool {
+        if variant >= self.wl_execs.len() {
+            return false;
+        }
+        let ns = u64::try_from(latency.as_nanos()).unwrap_or(u64::MAX);
+        self.wl_execs[variant].fetch_add(1, Ordering::Relaxed);
+        self.wl_ns[variant].fetch_add(ns, Ordering::Relaxed);
+        self.wl_flops[variant].fetch_add(est.flops, Ordering::Relaxed);
+        self.wl_bytes_read[variant].fetch_add(est.bytes_read, Ordering::Relaxed);
+        self.wl_bytes_written[variant].fetch_add(est.bytes_written, Ordering::Relaxed);
+        self.wl_padding[variant].fetch_add(est.padding_bytes, Ordering::Relaxed);
+        self.wl_rows[variant].fetch_add(est.rows, Ordering::Relaxed);
+        self.wl_nnz[variant].fetch_add(est.nnz, Ordering::Relaxed);
+        true
+    }
+
+    /// Accumulated workload totals of one variant id, or `None` when the
+    /// id is unknown or the variant never executed — callers render only
+    /// the live rows.
+    pub fn workload_totals(&self, variant: usize) -> Option<WorkloadTotals> {
+        let execs = self.wl_execs.get(variant)?.load(Ordering::Relaxed);
+        if execs == 0 {
+            return None;
+        }
+        Some(WorkloadTotals {
+            execs,
+            ns: self.wl_ns[variant].load(Ordering::Relaxed),
+            flops: self.wl_flops[variant].load(Ordering::Relaxed),
+            bytes_read: self.wl_bytes_read[variant].load(Ordering::Relaxed),
+            bytes_written: self.wl_bytes_written[variant].load(Ordering::Relaxed),
+            padding_bytes: self.wl_padding[variant].load(Ordering::Relaxed),
+            rows: self.wl_rows[variant].load(Ordering::Relaxed),
+            nnz: self.wl_nnz[variant].load(Ordering::Relaxed),
+        })
+    }
+
+    /// Total flops accounted across every variant — the headline
+    /// `ge_spmm_flops_total` counter.
+    pub fn workload_flops_total(&self) -> u64 {
+        self.wl_flops.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Record one sharded batch's nnz imbalance: the heaviest shard's
+    /// nnz against the batch total over `shards` shards. Stored as an
+    /// integer **milli-ratio** of max/mean
+    /// (`max_nnz * 1000 * shards / total_nnz`, ≥ 1000 by construction —
+    /// exactly 1000 means a perfectly balanced cut). Degenerate batches
+    /// (no nnz, no shards) are ignored.
+    pub fn record_shard_imbalance(&self, max_nnz: u64, total_nnz: u64, shards: u64) {
+        if total_nnz == 0 || shards == 0 {
+            return;
+        }
+        let milli = max_nnz.saturating_mul(1000).saturating_mul(shards) / total_nnz;
+        self.imbalance_batches.fetch_add(1, Ordering::Relaxed);
+        self.imbalance_milli_sum.fetch_add(milli, Ordering::Relaxed);
+        self.imbalance_milli_max.fetch_max(milli, Ordering::Relaxed);
+    }
+
+    /// Sharded batches that reported an imbalance ratio.
+    pub fn shard_imbalance_batches(&self) -> u64 {
+        self.imbalance_batches.load(Ordering::Relaxed)
+    }
+
+    /// Mean per-batch max/mean nnz milli-ratio (0 when nothing was
+    /// recorded; 1000 = perfectly balanced).
+    pub fn shard_imbalance_mean_milli(&self) -> u64 {
+        let n = self.shard_imbalance_batches();
+        if n == 0 {
+            return 0;
+        }
+        self.imbalance_milli_sum.load(Ordering::Relaxed) / n
+    }
+
+    /// Worst per-batch max/mean nnz milli-ratio seen.
+    pub fn shard_imbalance_max_milli(&self) -> u64 {
+        self.imbalance_milli_max.load(Ordering::Relaxed)
+    }
+
     /// The flight recorder holding the last N request traces.
     pub fn recorder(&self) -> &Arc<FlightRecorder> {
         &self.recorder
@@ -599,6 +744,23 @@ impl Metrics {
     /// The selector decision audit log.
     pub fn audit(&self) -> &Arc<AuditLog> {
         &self.audit
+    }
+
+    /// The selector-regret tracker (folded into by the online selector).
+    pub fn regret(&self) -> &Arc<RegretTracker> {
+        &self.regret
+    }
+
+    /// Install the serving SLO monitor — called once by the serve path
+    /// when `--slo` objectives were declared.
+    pub fn install_slo(&self, monitor: Arc<SloMonitor>) {
+        let mut slot = self.slo.lock().unwrap_or_else(|e| e.into_inner());
+        *slot = Some(monitor);
+    }
+
+    /// The installed SLO monitor, if any.
+    pub fn slo(&self) -> Option<Arc<SloMonitor>> {
+        self.slo.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// One-line summary for logs. Shard, delta-reuse, cache and admission
@@ -913,6 +1075,73 @@ mod tests {
         assert_eq!(m.shard_operands_reused(), 4);
         assert_eq!(m.shard_operands_reprepared(), 3);
         assert!(m.summary().contains("delta_shards[reused=4 reprepared=3]"));
+    }
+
+    #[test]
+    fn workload_banks_accumulate_per_variant() {
+        let m = Metrics::default();
+        assert_eq!(m.workload_totals(0), None, "no executions yet");
+        assert_eq!(m.workload_totals(usize::MAX), None, "unknown id");
+        let est = WorkloadEstimate {
+            flops: 160,
+            bytes_read: 420,
+            bytes_written: 128,
+            padding_bytes: 0,
+            rows: 4,
+            nnz: 10,
+        };
+        assert!(m.record_workload(0, &est, Duration::from_nanos(80)));
+        assert!(m.record_workload(0, &est, Duration::from_nanos(80)));
+        assert!(!m.record_workload(usize::MAX, &est, Duration::from_nanos(1)));
+        let t = m.workload_totals(0).unwrap();
+        assert_eq!(t.execs, 2);
+        assert_eq!(t.ns, 160);
+        assert_eq!(t.flops, 320);
+        assert_eq!(t.bytes_read, 840);
+        assert_eq!(t.bytes_written, 256);
+        assert_eq!(t.rows, 8);
+        assert_eq!(t.nnz, 20);
+        assert_eq!(m.workload_flops_total(), 320);
+        // 320 flops over 160 ns = 2 GFLOP/s exactly
+        assert!((t.achieved_gflops() - 2.0).abs() < 1e-12);
+        assert_eq!(m.workload_totals(1), None, "other variants untouched");
+    }
+
+    #[test]
+    fn shard_imbalance_tracks_mean_and_max_milli_ratio() {
+        let m = Metrics::default();
+        assert_eq!(m.shard_imbalance_batches(), 0);
+        assert_eq!(m.shard_imbalance_mean_milli(), 0);
+        // perfectly balanced: 4 shards, max 25 of 100 → 1000
+        m.record_shard_imbalance(25, 100, 4);
+        // skewed: max 60 of 100 over 4 shards → 2400
+        m.record_shard_imbalance(60, 100, 4);
+        m.record_shard_imbalance(5, 0, 4); // degenerate: ignored
+        m.record_shard_imbalance(5, 10, 0); // degenerate: ignored
+        assert_eq!(m.shard_imbalance_batches(), 2);
+        assert_eq!(m.shard_imbalance_mean_milli(), 1700);
+        assert_eq!(m.shard_imbalance_max_milli(), 2400);
+    }
+
+    #[test]
+    fn regret_tracker_and_slo_monitor_hang_off_the_hub() {
+        let m = Metrics::default();
+        assert_eq!(m.regret().folds(), 0);
+        m.regret().fold(SparseOp::Spmm, 0, 0, 2.0e-12, 1.0e-12);
+        assert_eq!(m.regret().folds(), 1);
+        assert!(m.slo().is_none(), "no monitor until serve installs one");
+        let spec = crate::obs::slo::SloSpec::parse("p99=1ms").unwrap();
+        m.install_slo(std::sync::Arc::new(SloMonitor::new(spec)));
+        let slo = m.slo().expect("installed");
+        slo.observe(Duration::from_micros(10), 0);
+        assert_eq!(slo.observed(), 1);
+    }
+
+    #[test]
+    fn trace_capacity_is_configurable() {
+        let m = Metrics::with_trace_capacity(2);
+        assert_eq!(m.recorder().capacity(), 2);
+        assert_eq!(Metrics::default().recorder().capacity(), 64);
     }
 
     #[test]

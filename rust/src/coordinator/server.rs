@@ -80,6 +80,13 @@ pub struct Request {
     /// fed directly into [`serve`] — the engine still records
     /// dispatch-level traces for those.
     trace: Option<Arc<Trace>>,
+    /// Admission instant — the SLO monitor's latency clock runs from
+    /// here to reply delivery. Constructors seed it at creation;
+    /// [`Server::submit`] restamps it at admission.
+    admitted_at: Instant,
+    /// In-flight depth observed at admission (set by [`Server::submit`];
+    /// 0 for direct [`serve`] callers) — the SLO queue-objective input.
+    admitted_depth: usize,
 }
 
 impl Request {
@@ -96,6 +103,8 @@ impl Request {
             tag,
             reply,
             trace: None,
+            admitted_at: Instant::now(),
+            admitted_depth: 0,
         }
     }
 
@@ -115,6 +124,8 @@ impl Request {
             tag,
             reply,
             trace: None,
+            admitted_at: Instant::now(),
+            admitted_depth: 0,
         }
     }
 }
@@ -168,6 +179,14 @@ fn release(depth: &AtomicUsize) {
     let _ = depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| d.checked_sub(1));
 }
 
+/// Per-tag reply routing plus the admission context the SLO monitor
+/// needs when the reply finally goes out.
+struct Replier {
+    tx: mpsc::Sender<ServerReply>,
+    admitted_at: Instant,
+    admitted_depth: usize,
+}
+
 /// One worker's request loop: receive, batch per matrix, flush on width
 /// or deadline, deliver replies, and release admission slots as requests
 /// complete. Runs until the channel closes, then flushes what's pending.
@@ -178,25 +197,34 @@ fn worker_loop(
     depth: &AtomicUsize,
 ) {
     let mut batcher = Batcher::new(engine, config.max_width);
-    let mut repliers: HashMap<u64, mpsc::Sender<ServerReply>> = HashMap::new();
+    let mut repliers: HashMap<u64, Replier> = HashMap::new();
     let mut deadline: Option<Instant> = None;
+    // SLO monitors install at startup (before workers spawn), so one
+    // fetch per worker suffices.
+    let slo = engine.metrics.slo();
 
     // Answer every request a flush settled — successes and per-batch
     // failures alike — and release its admission slot. `FlushError`
     // carries the tags its batch consumed, so no replier can leak.
-    let deliver = |outcome: FlushOutcome, repliers: &mut HashMap<u64, mpsc::Sender<ServerReply>>| {
+    // Successful completions feed the SLO monitor (admission-to-reply
+    // wall latency plus admission-time queue depth); failures don't —
+    // an error reply is an availability event, not a latency sample.
+    let deliver = |outcome: FlushOutcome, repliers: &mut HashMap<u64, Replier>| {
         for r in outcome.results {
-            if let Some(tx) = repliers.remove(&r.tag) {
+            if let Some(rep) = repliers.remove(&r.tag) {
                 release(depth);
-                let _ = tx.send(ServerReply::Ok(r));
+                if let Some(m) = &slo {
+                    m.observe(rep.admitted_at.elapsed(), rep.admitted_depth);
+                }
+                let _ = rep.tx.send(ServerReply::Ok(r));
             }
         }
         for f in outcome.failures {
             let msg = f.error.to_string();
             for tag in f.tags {
-                if let Some(tx) = repliers.remove(&tag) {
+                if let Some(rep) = repliers.remove(&tag) {
                     release(depth);
-                    let _ = tx.send(ServerReply::Err(msg.clone()));
+                    let _ = rep.tx.send(ServerReply::Err(msg.clone()));
                 }
             }
         }
@@ -224,8 +252,17 @@ fn worker_loop(
                         tag,
                         reply,
                         trace,
+                        admitted_at,
+                        admitted_depth,
                     } = req;
-                    repliers.insert(tag, reply);
+                    repliers.insert(
+                        tag,
+                        Replier {
+                            tx: reply,
+                            admitted_at,
+                            admitted_depth,
+                        },
+                    );
                     // Queue wait: the trace epoch is the admission
                     // instant, so [0, now] is exactly how long the
                     // request sat between submit and dequeue.
@@ -243,9 +280,9 @@ fn worker_loop(
                         Err(e) => {
                             // pre-queue validation failure: this request
                             // alone was rejected, nothing else was touched
-                            if let Some(tx) = repliers.remove(&tag) {
+                            if let Some(rep) = repliers.remove(&tag) {
                                 release(depth);
-                                let _ = tx.send(ServerReply::Err(e.to_string()));
+                                let _ = rep.tx.send(ServerReply::Err(e.to_string()));
                             }
                         }
                     }
@@ -356,6 +393,8 @@ impl Server {
             }
         };
         self.engine.metrics.record_queue_depth(previous + 1);
+        req.admitted_at = Instant::now();
+        req.admitted_depth = previous + 1;
         // Start the request-lifecycle trace at the admission instant:
         // its epoch is t=0 for every span the request accrues downstream
         // (queue wait, batch, dispatch, shard fan-out, kernels).

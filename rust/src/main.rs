@@ -17,9 +17,13 @@
 //!   serve       drive a synthetic workload through the concurrent serving
 //!               layer (worker threads + prepared-matrix cache + size
 //!               routing) and report throughput and metrics; `--stats-every`
-//!               / `--stats-file` dump live metrics periodically
-//!   stats       render engine metrics (latency histograms, selector audit,
-//!               flight-recorder traces) as Prometheus text and JSON
+//!               / `--stats-file` dump live metrics periodically; `--slo`
+//!               installs burn-rate monitors on latency/queue objectives
+//!   stats       render engine metrics (latency histograms, roofline
+//!               workload accounting, selector audit, flight-recorder
+//!               traces) as Prometheus text and JSON; `--regret` prints the
+//!               selector-regret table, `--format chrome` exports traces as
+//!               Chrome trace-event JSON
 //!   simulate    run the GPU cost model for all kernels on a matrix
 //!   calibrate   fit selector thresholds against simulator profiles
 //!   tune        budgeted search over the generated variant registry
@@ -469,6 +473,18 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
         "seconds between periodic --stats-file dumps (0 = final dump only)",
         Some("0"),
     )
+    .opt(
+        "slo",
+        "serving objectives to monitor, e.g. p99=2ms,queue=128 \
+         (keys: p50/p90/p99 latency, queue depth, window; burn rates land \
+         in the stats snapshot and the final health line)",
+        None,
+    )
+    .opt(
+        "trace-capacity",
+        "flight-recorder ring size (last N request traces retained)",
+        Some("64"),
+    )
     .opt("seed", "workload seed", Some("42"));
     let args = cmd.parse(&rest)?;
 
@@ -508,8 +524,9 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
     let cache_bytes = args.parse_positive("cache-mb", 64) << 20;
     let threshold = args.parse_positive("shard-threshold", 250_000);
     let shards = args.parse_positive("shards", 4);
+    let trace_capacity = args.parse_positive("trace-capacity", 64);
     let engine = Arc::new(if args.flag("online") {
-        SpmmEngine::serving_online(
+        SpmmEngine::serving_online_traced(
             cache_bytes,
             threshold,
             shards,
@@ -519,10 +536,23 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
                 refit_every: args.parse_or("refit-every", 256),
                 ..OnlineConfig::default()
             },
+            trace_capacity,
         )
     } else {
-        SpmmEngine::serving_with_selector(cache_bytes, threshold, shards, base_selector)
+        SpmmEngine::serving_with_selector_traced(
+            cache_bytes,
+            threshold,
+            shards,
+            base_selector,
+            trace_capacity,
+        )
     });
+    if let Some(spec) = args.get("slo") {
+        let spec = ge_spmm::obs::SloSpec::parse(spec).map_err(|e| anyhow!("--slo: {e}"))?;
+        let monitor = Arc::new(ge_spmm::obs::SloMonitor::new(spec));
+        println!("slo objectives: {}", monitor.spec().summary());
+        engine.metrics.install_slo(monitor);
+    }
     // Tuned variant winners (from `ge-spmm tune --profile`) seed the online
     // selector's per-bucket preferences, so tuned variants are dispatched
     // from the first request rather than rediscovered by exploration.
@@ -643,6 +673,9 @@ fn cmd_serve(rest: Vec<String>) -> Result<()> {
         ok as f64 / elapsed.as_secs_f64().max(1e-9)
     );
     println!("{}", engine.metrics.summary());
+    if let Some(monitor) = engine.metrics.slo() {
+        println!("{}", monitor.report().health_line());
+    }
     if let Some(online) = engine.online() {
         println!("{}", online.summary());
     }
@@ -684,23 +717,35 @@ fn cmd_stats(rest: Vec<String>) -> Result<()> {
          --stats-file stats.json`) instead of running a workload",
         None,
     )
-    .opt("format", "output format: prom | json | both", Some("both"))
+    .opt(
+        "format",
+        "output format: prom | json | both | chrome (chrome emits only the \
+         flight recorder as Chrome trace-event JSON, for chrome://tracing \
+         or Perfetto)",
+        Some("both"),
+    )
     .opt("requests", "synthetic requests to drive (workload mode)", Some("32"))
     .opt("rows", "rows = cols of the small synthetic matrix", Some("256"))
     .opt("n", "dense width per request", Some("8"))
     .flag("traces", "also dump the flight recorder's retained traces (JSON)")
+    .flag("regret", "also print the selector-regret report (per-bucket table)")
     .flag("explain", "also print the selector decision audit report")
     .opt("seed", "workload seed", Some("42"));
     let args = cmd.parse(&rest)?;
     let format = args.get_or("format", "both");
     anyhow::ensure!(
-        matches!(format, "prom" | "json" | "both"),
-        "unknown --format '{format}' (expected: prom, json, both)"
+        matches!(format, "prom" | "json" | "both" | "chrome"),
+        "unknown --format '{format}' (expected: prom, json, both, chrome)"
     );
 
     // File mode: parse the snapshot back and re-render through the same
     // renderers the live path uses — the snapshot is the interchange.
     if let Some(path) = args.get("file") {
+        anyhow::ensure!(
+            format != "chrome",
+            "--format chrome renders the live flight recorder and cannot \
+             re-render a snapshot file"
+        );
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("reading stats snapshot {path}: {e}"))?;
         let snap = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
@@ -748,6 +793,14 @@ fn cmd_stats(rest: Vec<String>) -> Result<()> {
         engine.metrics.shard_executions() + engine.metrics.sddmm_shard_executions(),
     );
 
+    // Chrome mode: stdout is exactly one trace-event JSON document, so it
+    // pipes straight into a validator or chrome://tracing.
+    if format == "chrome" {
+        let json = engine.metrics.recorder().chrome_trace_json();
+        println!("{}", json.to_string_pretty());
+        return Ok(());
+    }
+
     let snap = expo::snapshot(&engine.metrics);
     if format != "prom" {
         println!("{}", snap.to_string_pretty());
@@ -758,13 +811,48 @@ fn cmd_stats(rest: Vec<String>) -> Result<()> {
             expo::prometheus_of(&snap).map_err(|e| anyhow!("rendering snapshot: {e}"))?
         );
     }
+    if format == "both" {
+        print_roofline(&engine);
+    }
     if args.flag("traces") {
         println!("{}", engine.metrics.recorder().dump_json().to_string_pretty());
+    }
+    if args.flag("regret") {
+        println!("{}", engine.metrics.regret().report().render());
     }
     if args.flag("explain") {
         println!("{}", engine.metrics.audit().explain(None));
     }
     Ok(())
+}
+
+/// Print the roofline workload table: achieved GFLOP/s, GB/s and
+/// arithmetic intensity per (op, variant) that actually executed, from
+/// the analytic flop/byte counters accumulated at dispatch.
+fn print_roofline(engine: &SpmmEngine) {
+    let mut table =
+        ge_spmm::bench::Table::new(&["op", "variant", "execs", "gflop/s", "gb/s", "flops/byte"]);
+    let mut rows = 0usize;
+    for e in ge_spmm::kernels::registry().entries() {
+        let Some(t) = engine.metrics.workload_totals(e.id) else {
+            continue;
+        };
+        rows += 1;
+        table.row(vec![
+            e.variant.op.label().to_string(),
+            e.label.to_string(),
+            t.execs.to_string(),
+            format!("{:.3}", t.achieved_gflops()),
+            format!("{:.3}", t.achieved_gbps()),
+            format!("{:.3}", t.arithmetic_intensity()),
+        ]);
+    }
+    println!("roofline workload accounting (analytic flops/bytes over measured ns):");
+    if rows == 0 {
+        println!("  (no executions recorded)");
+    } else {
+        table.print();
+    }
 }
 
 fn cmd_simulate(rest: Vec<String>) -> Result<()> {

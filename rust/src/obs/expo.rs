@@ -11,7 +11,13 @@
 //! Metric names are prefixed `ge_spmm_`; per-kernel series carry
 //! `op`/`grain`/`kernel` labels (and `quantile` for latency), matching
 //! the op × grain × kernel histogram banks in
-//! [`Metrics::latency_histogram`].
+//! [`Metrics::latency_histogram`]. Label values are escaped per the
+//! exposition-format rules (backslash, double quote, newline) at every
+//! interpolation site. Snapshots additionally carry the roofline
+//! workload banks (`workload`), the selector-regret report (`regret`)
+//! and, when a monitor is installed, the serving SLO report (`slo`);
+//! [`prometheus_of`] tolerates documents missing any of the optional
+//! sections so older `--stats-file` dumps still render.
 
 use crate::coordinator::metrics::Metrics;
 use crate::kernels::{registry, KernelKind, SparseOp};
@@ -164,11 +170,69 @@ pub fn snapshot(m: &Metrics) -> Json {
         })
         .collect();
 
+    // Roofline workload rows: one per variant that actually executed,
+    // with analytic flop/byte totals and the derived achieved rates.
+    let mut wl_rows = Vec::new();
+    for e in registry().entries() {
+        let Some(t) = m.workload_totals(e.id) else {
+            continue;
+        };
+        wl_rows.push(obj(vec![
+            ("op", s(e.variant.op.label())),
+            ("variant", s(e.label)),
+            ("execs", num(t.execs as f64)),
+            ("ns", num(t.ns as f64)),
+            ("flops", num(t.flops as f64)),
+            ("bytes_read", num(t.bytes_read as f64)),
+            ("bytes_written", num(t.bytes_written as f64)),
+            ("padding_bytes", num(t.padding_bytes as f64)),
+            ("rows", num(t.rows as f64)),
+            ("nnz", num(t.nnz as f64)),
+            ("gflops", num(t.achieved_gflops())),
+            ("gbps", num(t.achieved_gbps())),
+            ("intensity", num(t.arithmetic_intensity())),
+        ]));
+    }
+    let workload = obj(vec![
+        ("flops_total", num(m.workload_flops_total() as f64)),
+        (
+            "shard_imbalance",
+            obj(vec![
+                ("batches", num(m.shard_imbalance_batches() as f64)),
+                ("mean_milli", num(m.shard_imbalance_mean_milli() as f64)),
+                ("max_milli", num(m.shard_imbalance_max_milli() as f64)),
+            ]),
+        ),
+        ("variants", Json::Arr(wl_rows)),
+    ]);
+
+    // `null` when no monitor is installed: the key is always present so
+    // the document schema is stable, but renderers skip the section.
+    let slo = match m.slo() {
+        Some(monitor) => monitor.report().to_json(),
+        None => Json::Null,
+    };
+
     let recorder = m.recorder();
+    let exemplars = recorder
+        .exemplars()
+        .into_iter()
+        .map(|e| {
+            obj(vec![
+                ("bucket", num(e.bucket as f64)),
+                ("trace_id", num(e.trace_id as f64)),
+                ("label", s(&e.label)),
+                ("duration_ns", num(e.duration_ns as f64)),
+            ])
+        })
+        .collect();
     obj(vec![
         ("counters", counters),
         ("kernels", Json::Arr(kernels)),
         ("variants", Json::Arr(variants)),
+        ("workload", workload),
+        ("regret", m.regret().report().to_json()),
+        ("slo", slo),
         ("audit", m.audit().to_json()),
         (
             "traces",
@@ -176,6 +240,8 @@ pub fn snapshot(m: &Metrics) -> Json {
                 ("capacity", num(recorder.capacity() as f64)),
                 ("committed", num(recorder.committed() as f64)),
                 ("retained", num(recorder.len() as f64)),
+                ("dropped", num(recorder.dropped() as f64)),
+                ("exemplars", Json::Arr(exemplars)),
             ]),
         ),
         ("summary", s(&m.summary())),
@@ -208,6 +274,14 @@ fn header(out: &mut String, name: &str, ty: &str, help: &str) {
     out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {ty}\n"));
 }
 
+/// Escape a label value per the Prometheus exposition format: inside
+/// `label="..."`, backslash, double quote and newline must be escaped.
+fn esc(v: &str) -> String {
+    v.replace('\\', "\\\\")
+        .replace('"', "\\\"")
+        .replace('\n', "\\n")
+}
+
 /// Render a stats snapshot (as produced by [`snapshot`], possibly
 /// re-read from a `--stats-file` dump) as Prometheus exposition text.
 /// Fails with a description of the missing field if the document does
@@ -235,9 +309,9 @@ pub fn prometheus_of(snap: &Json) -> Result<String, String> {
     );
     for row in kernels {
         let (op, grain, kernel) = (
-            req_str(row, "op")?,
-            req_str(row, "grain")?,
-            req_str(row, "kernel")?,
+            esc(req_str(row, "op")?),
+            esc(req_str(row, "grain")?),
+            esc(req_str(row, "kernel")?),
         );
         let v = req_num(row, "selected")?;
         out.push_str(&format!(
@@ -256,9 +330,9 @@ pub fn prometheus_of(snap: &Json) -> Result<String, String> {
             continue;
         }
         let (op, grain, kernel) = (
-            req_str(row, "op")?,
-            req_str(row, "grain")?,
-            req_str(row, "kernel")?,
+            esc(req_str(row, "op")?),
+            esc(req_str(row, "grain")?),
+            esc(req_str(row, "kernel")?),
         );
         let labels = format!("op=\"{op}\",grain=\"{grain}\",kernel=\"{kernel}\"");
         for q in QUANTILES {
@@ -294,15 +368,168 @@ pub fn prometheus_of(snap: &Json) -> Result<String, String> {
         );
         for row in variants {
             let (op, variant, family) = (
-                req_str(row, "op")?,
-                req_str(row, "variant")?,
-                req_str(row, "family")?,
+                esc(req_str(row, "op")?),
+                esc(req_str(row, "variant")?),
+                esc(req_str(row, "family")?),
             );
             for (grain, key) in [("request", "requests"), ("shard", "shard_executions")] {
                 let v = req_num(row, key)?;
                 out.push_str(&format!(
                     "ge_spmm_variant_selected_total{{op=\"{op}\",grain=\"{grain}\",family=\"{family}\",variant=\"{variant}\"}} {}\n",
                     fmt_value(v)
+                ));
+            }
+        }
+    }
+
+    // Optional (older snapshots lack it): roofline workload accounting.
+    if let Some(wl) = snap.get("workload") {
+        header(
+            &mut out,
+            "ge_spmm_flops_total",
+            "counter",
+            "Analytic floating-point operations across all executions.",
+        );
+        out.push_str(&format!(
+            "ge_spmm_flops_total {}\n",
+            fmt_value(req_num(wl, "flops_total")?)
+        ));
+        if let Some(imb) = wl.get("shard_imbalance") {
+            header(
+                &mut out,
+                "ge_spmm_shard_imbalance_milli",
+                "gauge",
+                "Per-batch shard nnz imbalance (max_nnz*shards/total_nnz, milli; 1000 = balanced).",
+            );
+            for stat in ["mean", "max"] {
+                let v = req_num(imb, &format!("{stat}_milli"))?;
+                out.push_str(&format!(
+                    "ge_spmm_shard_imbalance_milli{{stat=\"{stat}\"}} {}\n",
+                    fmt_value(v)
+                ));
+            }
+        }
+        let rows = wl
+            .get("variants")
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| "stats snapshot: missing 'workload.variants' array".to_string())?;
+        header(
+            &mut out,
+            "ge_spmm_workload_bytes_total",
+            "counter",
+            "Analytic bytes moved by executed kernels, by direction.",
+        );
+        for row in rows {
+            let (op, variant) = (esc(req_str(row, "op")?), esc(req_str(row, "variant")?));
+            for (dir, key) in [("read", "bytes_read"), ("written", "bytes_written")] {
+                let v = req_num(row, key)?;
+                out.push_str(&format!(
+                    "ge_spmm_workload_bytes_total{{op=\"{op}\",variant=\"{variant}\",direction=\"{dir}\"}} {}\n",
+                    fmt_value(v)
+                ));
+            }
+        }
+        header(
+            &mut out,
+            "ge_spmm_achieved_gflops",
+            "gauge",
+            "Achieved GFLOP/s per variant (analytic flops over measured ns).",
+        );
+        for row in rows {
+            let (op, variant) = (esc(req_str(row, "op")?), esc(req_str(row, "variant")?));
+            out.push_str(&format!(
+                "ge_spmm_achieved_gflops{{op=\"{op}\",variant=\"{variant}\"}} {}\n",
+                fmt_value(req_num(row, "gflops")?)
+            ));
+        }
+        header(
+            &mut out,
+            "ge_spmm_arithmetic_intensity",
+            "gauge",
+            "Analytic flops per byte moved, per variant.",
+        );
+        for row in rows {
+            let (op, variant) = (esc(req_str(row, "op")?), esc(req_str(row, "variant")?));
+            out.push_str(&format!(
+                "ge_spmm_arithmetic_intensity{{op=\"{op}\",variant=\"{variant}\"}} {}\n",
+                fmt_value(req_num(row, "intensity")?)
+            ));
+        }
+    }
+
+    // Optional: selector-regret counters.
+    if let Some(r) = snap.get("regret") {
+        header(
+            &mut out,
+            "ge_spmm_regret_folds_total",
+            "counter",
+            "Realized costs folded into the selector-regret tracker.",
+        );
+        out.push_str(&format!(
+            "ge_spmm_regret_folds_total {}\n",
+            fmt_value(req_num(r, "folds")?)
+        ));
+        header(
+            &mut out,
+            "ge_spmm_regret_ratio",
+            "gauge",
+            "Aggregate selector regret: chosen cost over best-known cost, minus one.",
+        );
+        for (op, key) in [("spmm", "spmm_ratio"), ("sddmm", "sddmm_ratio")] {
+            out.push_str(&format!(
+                "ge_spmm_regret_ratio{{op=\"{op}\"}} {}\n",
+                fmt_value(req_num(r, key)?)
+            ));
+        }
+    }
+
+    // Optional, and `null` when no monitor is installed: serving SLOs.
+    if let Some(slo) = snap.get("slo") {
+        if *slo != Json::Null {
+            header(
+                &mut out,
+                "ge_spmm_slo_observed_total",
+                "counter",
+                "Requests observed by the SLO monitor.",
+            );
+            out.push_str(&format!(
+                "ge_spmm_slo_observed_total {}\n",
+                fmt_value(req_num(slo, "observed")?)
+            ));
+            let objectives = slo
+                .get("objectives")
+                .and_then(|j| j.as_arr())
+                .ok_or_else(|| "stats snapshot: missing 'slo.objectives' array".to_string())?;
+            header(
+                &mut out,
+                "ge_spmm_slo_burn_rate",
+                "gauge",
+                "Error-budget burn rate per SLO objective (1.0 = budget exhausted).",
+            );
+            for o in objectives {
+                let name = esc(req_str(o, "name")?);
+                out.push_str(&format!(
+                    "ge_spmm_slo_burn_rate{{objective=\"{name}\"}} {}\n",
+                    fmt_value(req_num(o, "burn_rate")?)
+                ));
+            }
+            header(
+                &mut out,
+                "ge_spmm_slo_breaching",
+                "gauge",
+                "Whether each SLO objective's burn rate exceeds 1.0.",
+            );
+            for o in objectives {
+                let name = esc(req_str(o, "name")?);
+                let breaching = o
+                    .get("breaching")
+                    .and_then(|j| j.as_bool())
+                    .ok_or_else(|| {
+                        "stats snapshot: missing boolean field 'breaching'".to_string()
+                    })?;
+                out.push_str(&format!(
+                    "ge_spmm_slo_breaching{{objective=\"{name}\"}} {}\n",
+                    if breaching { 1 } else { 0 }
                 ));
             }
         }
@@ -356,6 +583,16 @@ pub fn prometheus_of(snap: &Json) -> Result<String, String> {
         "ge_spmm_traces_retained {}\n",
         fmt_value(req_num(traces, "retained")?)
     ));
+    // Optional (older snapshots lack it): ring-eviction count.
+    if let Some(v) = traces.get("dropped").and_then(|j| j.as_f64()) {
+        header(
+            &mut out,
+            "ge_spmm_traces_dropped_total",
+            "counter",
+            "Request traces evicted from the flight-recorder ring.",
+        );
+        out.push_str(&format!("ge_spmm_traces_dropped_total {}\n", fmt_value(v)));
+    }
     Ok(out)
 }
 
@@ -478,5 +715,92 @@ mod tests {
         let partial = obj(vec![("counters", obj(vec![("requests", num(1.0))]))]);
         let err = prometheus_of(&partial).unwrap_err();
         assert!(err.contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn esc_escapes_prometheus_label_values() {
+        assert_eq!(esc(r#"a\b"c"#), r#"a\\b\"c"#);
+        assert_eq!(esc("line1\nline2"), "line1\\nline2");
+        assert_eq!(esc("plain"), "plain");
+    }
+
+    #[test]
+    fn label_values_are_escaped_in_exposition() {
+        let m = Metrics::default();
+        let mut snap = snapshot(&m);
+        // splice a hostile variant label into the document
+        if let Json::Obj(fields) = &mut snap {
+            fields.insert(
+                "variants".to_string(),
+                Json::Arr(vec![obj(vec![
+                    ("op", s("spmm")),
+                    ("variant", s("bad\"label\\with\nnoise")),
+                    ("family", s("sr_rs")),
+                    ("requests", num(1.0)),
+                    ("shard_executions", num(0.0)),
+                ])]),
+            );
+        }
+        let text = prometheus_of(&snap).unwrap();
+        assert!(
+            text.contains("variant=\"bad\\\"label\\\\with\\nnoise\""),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn workload_regret_and_trace_sections_render() {
+        let m = Metrics::default();
+        let e = registry().by_label(SparseOp::Spmm, "sr_rs").unwrap();
+        let est = crate::obs::workload::estimate(&e.variant, 4, 10, 8);
+        assert!(m.record_workload(e.id, &est, Duration::from_nanos(80)));
+        m.regret().fold(SparseOp::Spmm, 0, e.id, 2.0, 1.0);
+        let snap = snapshot(&m);
+        let wl = snap.get("workload").unwrap();
+        assert_eq!(wl.get("flops_total").unwrap().as_usize(), Some(160));
+        let rows = wl.get("variants").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1, "only executed variants get workload rows");
+        let text = prometheus_text(&m);
+        assert!(text.contains("ge_spmm_flops_total 160"), "{text}");
+        assert!(
+            text.contains(
+                "ge_spmm_workload_bytes_total{op=\"spmm\",variant=\"sr_rs\",direction=\"read\"} 420"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains("ge_spmm_achieved_gflops{op=\"spmm\",variant=\"sr_rs\"} 2"),
+            "{text}"
+        );
+        assert!(text.contains("ge_spmm_regret_folds_total 1"), "{text}");
+        assert!(text.contains("ge_spmm_regret_ratio{op=\"spmm\"} 1"), "{text}");
+        assert!(text.contains("ge_spmm_traces_dropped_total 0"), "{text}");
+        // no monitor installed: the slo key is null and emits nothing
+        assert_eq!(snap.get("slo"), Some(&Json::Null));
+        assert!(!text.contains("ge_spmm_slo_burn_rate"));
+    }
+
+    #[test]
+    fn slo_section_renders_when_a_monitor_is_installed() {
+        use crate::obs::slo::{SloMonitor, SloSpec};
+        use std::sync::Arc;
+        let m = Metrics::default();
+        let monitor = Arc::new(SloMonitor::new(SloSpec::parse("p99=1ms,queue=4").unwrap()));
+        monitor.observe(Duration::from_millis(5), 10);
+        m.install_slo(monitor);
+        let text = prometheus_text(&m);
+        assert!(text.contains("ge_spmm_slo_observed_total 1"), "{text}");
+        assert!(
+            text.contains("ge_spmm_slo_burn_rate{objective=\"p99\"}"),
+            "{text}"
+        );
+        assert!(
+            text.contains("ge_spmm_slo_breaching{objective=\"p99\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("ge_spmm_slo_breaching{objective=\"queue\"} 1"),
+            "{text}"
+        );
     }
 }

@@ -96,6 +96,24 @@ impl AtomicHistogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Accumulate `other`'s current contents into `self` without
+    /// re-recording samples — the rollup path that aggregates
+    /// per-variant banks into family/op views. Both histograms stay
+    /// live; the merge is a snapshot-then-add, so samples recorded into
+    /// `other` concurrently with the merge may or may not be included,
+    /// exactly like any other relaxed reader.
+    pub fn merge(&self, other: &AtomicHistogram) {
+        let s = other.snapshot();
+        for (dst, &src) in self.counts.iter().zip(s.counts.iter()) {
+            if src > 0 {
+                dst.fetch_add(src, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(s.count, Ordering::Relaxed);
+        self.sum.fetch_add(s.sum, Ordering::Relaxed);
+        self.max.fetch_max(s.max, Ordering::Relaxed);
+    }
+
     /// Copy the counters out for quantile computation.
     pub fn snapshot(&self) -> HistogramSnapshot {
         let mut counts = [0u64; BUCKETS];
@@ -261,6 +279,32 @@ mod tests {
         assert!(p50 >= 300.0 / std::f64::consts::SQRT_2 && p50 <= 300.0 * std::f64::consts::SQRT_2);
         assert!(s.p99() <= s.max as f64 + 1e-9);
         assert_eq!(HistogramSnapshot::empty().quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_recording_into_one_bank() {
+        // Quantile correctness on merged banks: merging per-variant
+        // histograms must yield exactly the distribution one combined
+        // histogram would have recorded.
+        let a = AtomicHistogram::new();
+        let b = AtomicHistogram::new();
+        let combined = AtomicHistogram::new();
+        for (i, v) in (0..200u64).map(|i| (i, 50 + i * 37)).collect::<Vec<_>>() {
+            if i % 2 == 0 { &a } else { &b }.record(v);
+            combined.record(v);
+        }
+        let rollup = AtomicHistogram::new();
+        rollup.merge(&a);
+        rollup.merge(&b);
+        let m = rollup.snapshot();
+        let c = combined.snapshot();
+        assert_eq!(m.counts, c.counts);
+        assert_eq!((m.count, m.sum, m.max), (c.count, c.sum, c.max));
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(m.quantile(q), c.quantile(q), "q={q}");
+        }
+        // merge is additive, not destructive: source banks unchanged
+        assert_eq!(a.count() + b.count(), 200);
     }
 
     #[test]

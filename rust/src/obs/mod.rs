@@ -18,6 +18,14 @@
 //! - [`expo`] — Prometheus-text and JSON snapshot renderers over
 //!   `Metrics` + histograms + audit, behind `ge-spmm stats` and
 //!   `ge-spmm serve --stats-every/--stats-file`.
+//! - [`workload`] — analytic roofline accounting: integer-exact flops /
+//!   bytes / padding per variant execution, rendered as achieved
+//!   GFLOP/s, GB/s and arithmetic intensity.
+//! - [`regret`] — selector-regret counters: realized cost vs the best
+//!   known competing variant per `(op, feature bucket)`, the paper's
+//!   5–12% adaptivity-loss claim as a live metric.
+//! - [`slo`] — rolling-window burn-rate monitors over latency-quantile
+//!   and queue-depth objectives on the serve path.
 //!
 //! Everything here is part of the serving hot path's contract: the
 //! uninstrumented cost is one thread-local read per span site and a few
@@ -28,11 +36,17 @@
 pub mod audit;
 pub mod expo;
 pub mod hist;
+pub mod regret;
+pub mod slo;
 pub mod trace;
+pub mod workload;
 
 pub use audit::{AuditEntry, AuditLog};
 pub use hist::{AtomicHistogram, HistogramSnapshot};
+pub use regret::{RegretReport, RegretTracker};
+pub use slo::{SloMonitor, SloReport, SloSpec};
 pub use trace::{FlightRecorder, SpanRecord, TraceHandle};
+pub use workload::{WorkloadEstimate, WorkloadTotals};
 
 /// Aggregation grain of a latency histogram: whole requests at the
 /// engine, or individual shard executions inside the sharded backend.

@@ -1,0 +1,415 @@
+//! Selector-regret accounting: how much latency the selector's choices
+//! actually left on the table.
+//!
+//! The paper's headline adaptivity claim is that its selection rules
+//! lose only 5–12% versus the optimal kernel choice. This module turns
+//! that figure into a live metric: every realized normalized cost (the
+//! seconds-per-flop number the online selector already backfills onto
+//! [`AuditEntry`](crate::obs::AuditEntry) records) is folded against the
+//! best known cost among the competing variants of the same
+//! `(op, feature bucket)` — the cheapest cell of the EWMA cost table at
+//! fold time. The running sums give a cumulative regret ratio
+//! (`chosen / best − 1`, 0 when the selector always picked the measured
+//! winner) per bucket and per op, plus per-variant excess so
+//! `ge-spmm stats --regret` can name the top mis-selected variants.
+//! "Heuristic Adaptability to Input Dynamics for SpMM on GPUs" (Dai et
+//! al.) motivates tracking this continuously: selection quality decays
+//! silently as inputs drift.
+//!
+//! The tracker lives on [`Metrics`](crate::coordinator::metrics::Metrics)
+//! (shared hub, like the audit log and flight recorder); the
+//! [`OnlineSelector`](crate::selector::online::OnlineSelector) folds
+//! into it from its observation path and re-exposes the report through
+//! its `regret_report()` seam. See DESIGN.md §Observability.
+
+use crate::kernels::generator::registry;
+use crate::kernels::SparseOp;
+use crate::util::json::{self, Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lock-free `f64` accumulator over bit-cast CAS — the same idiom as the
+/// cost EWMAs in `Metrics`.
+#[derive(Debug)]
+struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    fn new() -> Self {
+        Self(AtomicU64::new(0.0f64.to_bits()))
+    }
+
+    fn add(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .0
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// One `(op, bucket)` regret cell: folds plus the chosen/best cost sums.
+#[derive(Debug)]
+struct Cell {
+    folds: AtomicU64,
+    chosen: AtomicF64,
+    best: AtomicF64,
+}
+
+impl Cell {
+    fn new() -> Self {
+        Self {
+            folds: AtomicU64::new(0),
+            chosen: AtomicF64::new(),
+            best: AtomicF64::new(),
+        }
+    }
+}
+
+/// Running regret counters, per `(op, feature bucket)` and per variant.
+/// All operations are lock-free; sizing is fixed at construction (the
+/// SpMM/SDDMM bucket counts and the registry length).
+#[derive(Debug)]
+pub struct RegretTracker {
+    spmm: Vec<Cell>,
+    sddmm: Vec<Cell>,
+    variant_folds: Vec<AtomicU64>,
+    variant_excess: Vec<AtomicF64>,
+}
+
+/// One per-bucket row of a [`RegretReport`].
+#[derive(Clone, Copy, Debug)]
+pub struct BucketRegret {
+    /// Which op's bucket space this row indexes.
+    pub op: SparseOp,
+    /// Feature-bucket index (see `selector::online::feature_bucket`).
+    pub bucket: usize,
+    /// Realized costs folded into this cell.
+    pub folds: u64,
+    /// Sum of the realized (chosen) normalized costs.
+    pub chosen_cost: f64,
+    /// Sum of the best known competing costs at each fold.
+    pub best_cost: f64,
+    /// `chosen_cost / best_cost − 1` (0 for an always-optimal selector).
+    pub regret_ratio: f64,
+}
+
+/// Per-variant excess row of a [`RegretReport`] — how much a variant
+/// cost beyond the bucket's best when it was the one chosen.
+#[derive(Clone, Copy, Debug)]
+pub struct VariantRegret {
+    /// Registry id of the chosen variant.
+    pub id: usize,
+    /// Registry label of the chosen variant.
+    pub label: &'static str,
+    /// The variant's op.
+    pub op: SparseOp,
+    /// Folds attributed to this variant.
+    pub folds: u64,
+    /// Summed excess ratio (`chosen / best − 1` per fold).
+    pub excess: f64,
+}
+
+/// Snapshot of the regret counters, ready for rendering.
+#[derive(Clone, Debug, Default)]
+pub struct RegretReport {
+    /// Total folds across both ops.
+    pub folds: u64,
+    /// Cumulative SpMM regret ratio.
+    pub spmm_ratio: f64,
+    /// Cumulative SDDMM regret ratio.
+    pub sddmm_ratio: f64,
+    /// Non-empty per-bucket rows, SpMM first, bucket-ordered.
+    pub buckets: Vec<BucketRegret>,
+    /// Variants with nonzero excess, worst offender first.
+    pub variants: Vec<VariantRegret>,
+}
+
+impl RegretTracker {
+    /// Build a tracker sized for `spmm_buckets` / `sddmm_buckets`
+    /// feature buckets and `variants` registry entries.
+    pub fn new(spmm_buckets: usize, sddmm_buckets: usize, variants: usize) -> Self {
+        Self {
+            spmm: (0..spmm_buckets).map(|_| Cell::new()).collect(),
+            sddmm: (0..sddmm_buckets).map(|_| Cell::new()).collect(),
+            variant_folds: (0..variants).map(|_| AtomicU64::new(0)).collect(),
+            variant_excess: (0..variants).map(|_| AtomicF64::new()).collect(),
+        }
+    }
+
+    /// Fold one realized cost: the selector chose `variant` in `(op,
+    /// bucket)` and realized `chosen_cost`, while the cheapest competing
+    /// cell was `best_cost`. Non-finite or non-positive costs and
+    /// out-of-range indices are dropped (returns `false`). `best_cost`
+    /// is clamped to `chosen_cost` — the realized cost is itself a known
+    /// cost, so the best competitor can never be worse.
+    pub fn fold(
+        &self,
+        op: SparseOp,
+        bucket: usize,
+        variant: usize,
+        chosen_cost: f64,
+        best_cost: f64,
+    ) -> bool {
+        if !(chosen_cost.is_finite() && best_cost.is_finite())
+            || chosen_cost <= 0.0
+            || best_cost <= 0.0
+        {
+            return false;
+        }
+        let bank = match op {
+            SparseOp::Spmm => &self.spmm,
+            SparseOp::Sddmm => &self.sddmm,
+        };
+        let Some(cell) = bank.get(bucket) else {
+            return false;
+        };
+        let best = best_cost.min(chosen_cost);
+        cell.folds.fetch_add(1, Ordering::Relaxed);
+        cell.chosen.add(chosen_cost);
+        cell.best.add(best);
+        let slot = (self.variant_folds.get(variant), self.variant_excess.get(variant));
+        if let (Some(f), Some(e)) = slot {
+            f.fetch_add(1, Ordering::Relaxed);
+            e.add(chosen_cost / best - 1.0);
+        }
+        true
+    }
+
+    /// Total folds across both ops.
+    pub fn folds(&self) -> u64 {
+        self.spmm
+            .iter()
+            .chain(self.sddmm.iter())
+            .map(|c| c.folds.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Snapshot the counters into a rendering-ready report.
+    pub fn report(&self) -> RegretReport {
+        let reg = registry();
+        let mut buckets = Vec::new();
+        let mut totals = [(0u64, 0.0f64, 0.0f64); 2];
+        for (op, bank) in [(SparseOp::Spmm, &self.spmm), (SparseOp::Sddmm, &self.sddmm)] {
+            for (bucket, cell) in bank.iter().enumerate() {
+                let folds = cell.folds.load(Ordering::Relaxed);
+                if folds == 0 {
+                    continue;
+                }
+                let chosen = cell.chosen.get();
+                let best = cell.best.get();
+                let t = &mut totals[usize::from(op == SparseOp::Sddmm)];
+                t.0 += folds;
+                t.1 += chosen;
+                t.2 += best;
+                buckets.push(BucketRegret {
+                    op,
+                    bucket,
+                    folds,
+                    chosen_cost: chosen,
+                    best_cost: best,
+                    regret_ratio: ratio(chosen, best),
+                });
+            }
+        }
+        let mut variants: Vec<VariantRegret> = self
+            .variant_folds
+            .iter()
+            .zip(&self.variant_excess)
+            .enumerate()
+            .filter_map(|(id, (folds, excess))| {
+                let folds = folds.load(Ordering::Relaxed);
+                let excess = excess.get();
+                if folds == 0 || excess <= 0.0 {
+                    return None;
+                }
+                let entry = reg.get(id)?;
+                Some(VariantRegret {
+                    id,
+                    label: entry.label,
+                    op: entry.variant.op,
+                    folds,
+                    excess,
+                })
+            })
+            .collect();
+        variants.sort_by(|a, b| b.excess.total_cmp(&a.excess));
+        RegretReport {
+            folds: totals[0].0 + totals[1].0,
+            spmm_ratio: ratio(totals[0].1, totals[0].2),
+            sddmm_ratio: ratio(totals[1].1, totals[1].2),
+            buckets,
+            variants,
+        }
+    }
+}
+
+/// `chosen / best − 1`, guarded against empty cells.
+fn ratio(chosen: f64, best: f64) -> f64 {
+    if best > 0.0 {
+        (chosen / best - 1.0).max(0.0)
+    } else {
+        0.0
+    }
+}
+
+impl RegretReport {
+    /// JSON rendering used by the stats snapshot (and round-tripped by
+    /// the file-mode Prometheus renderer).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("folds", json::num(self.folds as f64)),
+            ("spmm_ratio", json::num(self.spmm_ratio)),
+            ("sddmm_ratio", json::num(self.sddmm_ratio)),
+            (
+                "buckets",
+                Json::Arr(
+                    self.buckets
+                        .iter()
+                        .map(|b| {
+                            json::obj(vec![
+                                ("op", json::s(b.op.label())),
+                                ("bucket", json::num(b.bucket as f64)),
+                                ("folds", json::num(b.folds as f64)),
+                                ("chosen_cost", json::num(b.chosen_cost)),
+                                ("best_cost", json::num(b.best_cost)),
+                                ("regret_ratio", json::num(b.regret_ratio)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "variants",
+                Json::Arr(
+                    self.variants
+                        .iter()
+                        .map(|v| {
+                            json::obj(vec![
+                                ("op", json::s(v.op.label())),
+                                ("variant", json::s(v.label)),
+                                ("folds", json::num(v.folds as f64)),
+                                ("excess", json::num(v.excess)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Multi-line table for `ge-spmm stats --regret`: one row per
+    /// non-empty bucket plus the top mis-selected variants.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "regret: folds={} spmm_ratio={:.4} sddmm_ratio={:.4}\n",
+            self.folds, self.spmm_ratio, self.sddmm_ratio
+        ));
+        if self.buckets.is_empty() {
+            out.push_str("  (no realized costs folded yet — run with --online traffic)\n");
+            return out;
+        }
+        out.push_str("  op     bucket  folds  regret\n");
+        for b in &self.buckets {
+            out.push_str(&format!(
+                "  {:<6} {:>6}  {:>5}  {:.4}\n",
+                b.op.label(),
+                b.bucket,
+                b.folds,
+                b.regret_ratio
+            ));
+        }
+        if !self.variants.is_empty() {
+            out.push_str("  top mis-selected variants:\n");
+            for v in self.variants.iter().take(5) {
+                out.push_str(&format!(
+                    "    {:<6} {:<10} folds={} excess={:.4}\n",
+                    v.op.label(),
+                    v.label,
+                    v.folds,
+                    v.excess
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimal_choices_accumulate_zero_regret() {
+        let t = RegretTracker::new(12, 6, registry().len());
+        for _ in 0..10 {
+            assert!(t.fold(SparseOp::Spmm, 3, 0, 2.0e-12, 2.0e-12));
+        }
+        let r = t.report();
+        assert_eq!(r.folds, 10);
+        assert_eq!(r.spmm_ratio, 0.0);
+        assert_eq!(r.buckets.len(), 1);
+        assert_eq!(r.buckets[0].regret_ratio, 0.0);
+        assert!(r.variants.is_empty(), "no excess, no offenders");
+    }
+
+    #[test]
+    fn mis_selection_shows_up_as_ratio_and_offender() {
+        let t = RegretTracker::new(12, 6, registry().len());
+        // chosen twice as expensive as the best competitor, 4 times
+        for _ in 0..4 {
+            t.fold(SparseOp::Spmm, 1, 2, 4.0e-12, 2.0e-12);
+        }
+        let r = t.report();
+        assert_eq!(r.folds, 4);
+        assert!((r.spmm_ratio - 1.0).abs() < 1e-9, "{}", r.spmm_ratio);
+        assert_eq!(r.variants.len(), 1);
+        assert_eq!(r.variants[0].id, 2);
+        assert!((r.variants[0].excess - 4.0).abs() < 1e-9);
+        assert!(r.render().contains("top mis-selected"));
+    }
+
+    #[test]
+    fn ops_accumulate_independently() {
+        let t = RegretTracker::new(12, 6, registry().len());
+        t.fold(SparseOp::Spmm, 0, 0, 3.0e-12, 1.0e-12);
+        t.fold(SparseOp::Sddmm, 0, 10, 1.0e-12, 1.0e-12);
+        let r = t.report();
+        assert!((r.spmm_ratio - 2.0).abs() < 1e-9);
+        assert_eq!(r.sddmm_ratio, 0.0);
+        assert_eq!(r.buckets.len(), 2);
+        assert_eq!(r.buckets[0].op, SparseOp::Spmm);
+        assert_eq!(r.buckets[1].op, SparseOp::Sddmm);
+    }
+
+    #[test]
+    fn degenerate_folds_are_dropped() {
+        let t = RegretTracker::new(12, 6, registry().len());
+        assert!(!t.fold(SparseOp::Spmm, 0, 0, f64::NAN, 1.0));
+        assert!(!t.fold(SparseOp::Spmm, 0, 0, 0.0, 1.0));
+        assert!(!t.fold(SparseOp::Spmm, 99, 0, 1.0, 1.0), "bucket range");
+        assert_eq!(t.folds(), 0);
+        // a best "worse" than chosen clamps to chosen: zero regret
+        assert!(t.fold(SparseOp::Spmm, 0, 0, 1.0e-12, 5.0e-12));
+        assert_eq!(t.report().spmm_ratio, 0.0);
+    }
+
+    #[test]
+    fn report_json_is_parseable_and_stable() {
+        let t = RegretTracker::new(12, 6, registry().len());
+        t.fold(SparseOp::Spmm, 2, 1, 2.0e-9, 1.0e-9);
+        let j = t.report().to_json();
+        let text = j.to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+        assert_eq!(j.get("folds").and_then(Json::as_f64), Some(1.0));
+    }
+}

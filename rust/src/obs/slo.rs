@@ -1,0 +1,513 @@
+//! Serving SLO monitors: rolling-window burn rates over latency and
+//! queue-depth objectives.
+//!
+//! `ge-spmm serve --slo p99=2ms,queue=128` declares objectives; the
+//! server reports every completed request's wall latency and the queue
+//! depth it was admitted at into an [`SloMonitor`], which maintains a
+//! rolling window (default 60 s, six 10 s slices) of breach counts per
+//! objective. A latency objective `pXX<t` grants an error budget of
+//! `1 − XX/100` — e.g. `p99=2ms` tolerates 1% of requests over 2 ms —
+//! and the **burn rate** is the observed breach fraction divided by
+//! that budget: burn 1.0 means the budget is being spent exactly as
+//! fast as it accrues, above 1.0 the objective is breaching. Queue
+//! objectives budget 1% of admissions above the target depth. The
+//! report surfaces in the stats snapshot, the Prometheus exposition
+//! (`ge_spmm_slo_*`), and a one-line health summary. See DESIGN.md
+//! §Observability.
+
+use crate::util::json::{self, Json};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Default rolling window the burn rates are evaluated over.
+pub const DEFAULT_WINDOW: Duration = Duration::from_secs(60);
+/// Slices the window is divided into (breach counts age out per slice).
+const SLICES: u32 = 6;
+
+/// Error budgets: the tolerated breach fraction per objective kind.
+const P50_BUDGET: f64 = 0.50;
+const P90_BUDGET: f64 = 0.10;
+const P99_BUDGET: f64 = 0.01;
+const QUEUE_BUDGET: f64 = 0.01;
+
+/// Parsed SLO objectives (from `serve --slo p99=2ms,queue=128`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SloSpec {
+    /// Median-latency target.
+    pub p50: Option<Duration>,
+    /// 90th-percentile latency target.
+    pub p90: Option<Duration>,
+    /// 99th-percentile latency target.
+    pub p99: Option<Duration>,
+    /// Queue-depth target (admission depth must stay at or below this).
+    pub queue: Option<u64>,
+    /// Rolling-window override (`window=30s`); [`DEFAULT_WINDOW`] when
+    /// absent.
+    pub window: Option<Duration>,
+}
+
+impl SloSpec {
+    /// Parse a comma-separated objective list: `p50`/`p90`/`p99` with a
+    /// duration value (`ns`/`us`/`ms`/`s` suffix), `queue` with a depth,
+    /// `window` with a duration. At least one objective is required.
+    pub fn parse(text: &str) -> Result<SloSpec, String> {
+        let mut spec = SloSpec::default();
+        for part in text.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("SLO term '{part}' is not key=value"))?;
+            match key.trim() {
+                "p50" => spec.p50 = Some(parse_duration(value)?),
+                "p90" => spec.p90 = Some(parse_duration(value)?),
+                "p99" => spec.p99 = Some(parse_duration(value)?),
+                "queue" => {
+                    spec.queue = Some(
+                        value
+                            .trim()
+                            .parse::<u64>()
+                            .map_err(|e| format!("SLO queue depth '{value}': {e}"))?,
+                    )
+                }
+                "window" => spec.window = Some(parse_duration(value)?),
+                other => return Err(format!("unknown SLO objective '{other}'")),
+            }
+        }
+        if spec.is_empty() {
+            return Err("SLO spec declares no objectives (try p99=2ms,queue=128)".to_string());
+        }
+        Ok(spec)
+    }
+
+    /// Whether no objective is set (`window` alone does not count).
+    pub fn is_empty(&self) -> bool {
+        self.p50.is_none() && self.p90.is_none() && self.p99.is_none() && self.queue.is_none()
+    }
+
+    /// Compact human rendering, e.g. `p99<2ms,queue<=128`.
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::new();
+        for (name, t) in [("p50", self.p50), ("p90", self.p90), ("p99", self.p99)] {
+            if let Some(t) = t {
+                parts.push(format!("{name}<{}", format_duration(t)));
+            }
+        }
+        if let Some(q) = self.queue {
+            parts.push(format!("queue<={q}"));
+        }
+        parts.join(",")
+    }
+}
+
+/// Parse a duration literal with an explicit unit suffix
+/// (`250ns`, `80us`, `1.5ms`, `2s`).
+pub fn parse_duration(text: &str) -> Result<Duration, String> {
+    let t = text.trim();
+    let (digits, factor) = if let Some(d) = t.strip_suffix("ns") {
+        (d, 1e-9)
+    } else if let Some(d) = t.strip_suffix("us") {
+        (d, 1e-6)
+    } else if let Some(d) = t.strip_suffix("ms") {
+        (d, 1e-3)
+    } else if let Some(d) = t.strip_suffix('s') {
+        (d, 1.0)
+    } else {
+        return Err(format!("duration '{t}' needs a ns/us/ms/s suffix"));
+    };
+    let value: f64 = digits
+        .trim()
+        .parse()
+        .map_err(|e| format!("duration '{t}': {e}"))?;
+    if !value.is_finite() || value <= 0.0 {
+        return Err(format!("duration '{t}' must be positive"));
+    }
+    Ok(Duration::from_secs_f64(value * factor))
+}
+
+/// Render a duration the way the parser accepts it.
+fn format_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns % 1_000_000_000 == 0 {
+        format!("{}s", ns / 1_000_000_000)
+    } else if ns % 1_000_000 == 0 {
+        format!("{}ms", ns / 1_000_000)
+    } else if ns % 1_000 == 0 {
+        format!("{}us", ns / 1_000)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// One window slice: breach counts since `started`.
+#[derive(Debug)]
+struct Slice {
+    started: Instant,
+    total: u64,
+    /// Latency breaches, indexed like the monitor's `latency_targets`.
+    over: [u64; 3],
+    queue_over: u64,
+}
+
+impl Slice {
+    fn new(started: Instant) -> Self {
+        Self {
+            started,
+            total: 0,
+            over: [0; 3],
+            queue_over: 0,
+        }
+    }
+}
+
+/// Rolling-window SLO evaluator. One instance per serving process,
+/// installed on [`Metrics`](crate::coordinator::metrics::Metrics) so
+/// the exposition layer can reach it.
+#[derive(Debug)]
+pub struct SloMonitor {
+    spec: SloSpec,
+    window: Duration,
+    slice_len: Duration,
+    slices: Mutex<VecDeque<Slice>>,
+    observed: AtomicU64,
+}
+
+/// One objective's view in an [`SloReport`].
+#[derive(Clone, Debug)]
+pub struct SloObjective {
+    /// Objective name: `p50`, `p90`, `p99`, or `queue`.
+    pub name: &'static str,
+    /// The target: latency nanoseconds, or queue depth.
+    pub target: u64,
+    /// Error budget (tolerated breach fraction).
+    pub budget: f64,
+    /// Requests that breached the target inside the window.
+    pub breaches: u64,
+    /// Burn rate: breach fraction / budget (1.0 = budget exhausted at
+    /// exactly its accrual rate).
+    pub burn_rate: f64,
+    /// Whether the burn rate exceeds 1.0.
+    pub breaching: bool,
+}
+
+/// Snapshot of the monitor over its live window.
+#[derive(Clone, Debug)]
+pub struct SloReport {
+    /// The window the counts cover.
+    pub window: Duration,
+    /// Requests observed inside the window.
+    pub total: u64,
+    /// Requests observed over the monitor's lifetime.
+    pub observed: u64,
+    /// Per-objective burn rates.
+    pub objectives: Vec<SloObjective>,
+}
+
+impl SloMonitor {
+    /// Build a monitor over the spec's window ([`DEFAULT_WINDOW`] when
+    /// unset).
+    pub fn new(spec: SloSpec) -> Self {
+        let window = spec.window.unwrap_or(DEFAULT_WINDOW).max(Duration::from_millis(6));
+        Self {
+            spec,
+            window,
+            slice_len: window / SLICES,
+            slices: Mutex::new(VecDeque::new()),
+            observed: AtomicU64::new(0),
+        }
+    }
+
+    /// The objectives this monitor evaluates.
+    pub fn spec(&self) -> &SloSpec {
+        &self.spec
+    }
+
+    /// Requests observed over the monitor's lifetime.
+    pub fn observed(&self) -> u64 {
+        self.observed.load(Ordering::Relaxed)
+    }
+
+    /// Report one completed request: its wall latency and the queue
+    /// depth it was admitted at.
+    pub fn observe(&self, latency: Duration, queue_depth: usize) {
+        self.observed.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        let mut slices = self.slices.lock().unwrap();
+        self.prune(&mut slices, now);
+        let open_new = match slices.back() {
+            Some(back) => now.duration_since(back.started) >= self.slice_len,
+            None => true,
+        };
+        if open_new {
+            slices.push_back(Slice::new(now));
+        }
+        let slice = slices.back_mut().expect("slice just ensured");
+        slice.total += 1;
+        let targets = [self.spec.p50, self.spec.p90, self.spec.p99];
+        for (i, t) in targets.iter().enumerate() {
+            if let Some(t) = t {
+                if latency > *t {
+                    slice.over[i] += 1;
+                }
+            }
+        }
+        if let Some(q) = self.spec.queue {
+            if queue_depth as u64 > q {
+                slice.queue_over += 1;
+            }
+        }
+    }
+
+    /// Drop slices that have aged out of the window.
+    fn prune(&self, slices: &mut VecDeque<Slice>, now: Instant) {
+        while let Some(front) = slices.front() {
+            if now.duration_since(front.started) > self.window {
+                slices.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Evaluate the burn rates over the live window.
+    pub fn report(&self) -> SloReport {
+        let now = Instant::now();
+        let mut slices = self.slices.lock().unwrap();
+        self.prune(&mut slices, now);
+        let mut total = 0u64;
+        let mut over = [0u64; 3];
+        let mut queue_over = 0u64;
+        for s in slices.iter() {
+            total += s.total;
+            for (acc, o) in over.iter_mut().zip(&s.over) {
+                *acc += o;
+            }
+            queue_over += s.queue_over;
+        }
+        drop(slices);
+        let mut objectives = Vec::new();
+        let latency = [
+            ("p50", self.spec.p50, P50_BUDGET, over[0]),
+            ("p90", self.spec.p90, P90_BUDGET, over[1]),
+            ("p99", self.spec.p99, P99_BUDGET, over[2]),
+        ];
+        for (name, target, budget, breaches) in latency {
+            if let Some(t) = target {
+                objectives.push(objective(name, t.as_nanos() as u64, budget, breaches, total));
+            }
+        }
+        if let Some(q) = self.spec.queue {
+            objectives.push(objective("queue", q, QUEUE_BUDGET, queue_over, total));
+        }
+        SloReport {
+            window: self.window,
+            total,
+            observed: self.observed(),
+            objectives,
+        }
+    }
+}
+
+/// Assemble one objective row from its window counts.
+fn objective(
+    name: &'static str,
+    target: u64,
+    budget: f64,
+    breaches: u64,
+    total: u64,
+) -> SloObjective {
+    let fraction = if total == 0 {
+        0.0
+    } else {
+        breaches as f64 / total as f64
+    };
+    let burn_rate = fraction / budget;
+    SloObjective {
+        name,
+        target,
+        budget,
+        breaches,
+        burn_rate,
+        breaching: burn_rate > 1.0,
+    }
+}
+
+impl SloReport {
+    /// Whether every objective is inside its budget.
+    pub fn healthy(&self) -> bool {
+        self.objectives.iter().all(|o| !o.breaching)
+    }
+
+    /// One-line health summary for logs and `ge-spmm stats`.
+    pub fn health_line(&self) -> String {
+        let state = if self.healthy() { "HEALTHY" } else { "BREACHING" };
+        let parts: Vec<String> = self
+            .objectives
+            .iter()
+            .map(|o| {
+                let target = if o.name == "queue" {
+                    format!("<={}", o.target)
+                } else {
+                    format!("<{}", format_duration(Duration::from_nanos(o.target)))
+                };
+                format!(
+                    "{}{} burn={:.2}{}",
+                    o.name,
+                    target,
+                    o.burn_rate,
+                    if o.breaching { "!" } else { "" }
+                )
+            })
+            .collect();
+        format!(
+            "slo {} (window {}, {} requests): {}",
+            state,
+            format_duration(self.window),
+            self.total,
+            parts.join("; ")
+        )
+    }
+
+    /// JSON rendering used by the stats snapshot.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("window_ms", json::num(self.window.as_secs_f64() * 1e3)),
+            ("total", json::num(self.total as f64)),
+            ("observed", json::num(self.observed as f64)),
+            ("healthy", Json::Bool(self.healthy())),
+            (
+                "objectives",
+                Json::Arr(
+                    self.objectives
+                        .iter()
+                        .map(|o| {
+                            json::obj(vec![
+                                ("name", json::s(o.name)),
+                                ("target", json::num(o.target as f64)),
+                                ("budget", json::num(o.budget)),
+                                ("breaches", json::num(o.breaches as f64)),
+                                ("burn_rate", json::num(o.burn_rate)),
+                                ("breaching", Json::Bool(o.breaching)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monitor(spec: &str) -> SloMonitor {
+        let mut spec = SloSpec::parse(spec).unwrap();
+        // a huge window so tests never race slice expiry
+        spec.window = Some(Duration::from_secs(3600));
+        SloMonitor::new(spec)
+    }
+
+    #[test]
+    fn parses_the_issue_example() {
+        let spec = SloSpec::parse("p99=2ms,queue=128").unwrap();
+        assert_eq!(spec.p99, Some(Duration::from_millis(2)));
+        assert_eq!(spec.queue, Some(128));
+        assert_eq!(spec.p50, None);
+        assert_eq!(spec.summary(), "p99<2ms,queue<=128");
+        assert_eq!(
+            SloSpec::parse("p50=500us,p90=1ms,window=30s").unwrap().window,
+            Some(Duration::from_secs(30))
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(SloSpec::parse("p99").is_err(), "no value");
+        assert!(SloSpec::parse("p42=1ms").is_err(), "unknown objective");
+        assert!(SloSpec::parse("p99=2").is_err(), "missing unit");
+        assert!(SloSpec::parse("p99=-1ms").is_err(), "negative");
+        assert!(SloSpec::parse("queue=many").is_err(), "non-numeric depth");
+        assert!(SloSpec::parse("window=60s").is_err(), "no objectives");
+    }
+
+    #[test]
+    fn healthy_traffic_stays_healthy() {
+        let m = monitor("p99=2ms,queue=128");
+        for _ in 0..100 {
+            m.observe(Duration::from_micros(100), 1);
+        }
+        let r = m.report();
+        assert_eq!(r.total, 100);
+        assert!(r.healthy());
+        assert_eq!(r.objectives.len(), 2);
+        assert_eq!(r.objectives[0].burn_rate, 0.0);
+        assert!(r.health_line().contains("HEALTHY"), "{}", r.health_line());
+    }
+
+    #[test]
+    fn burn_rate_state_flips_on_an_induced_latency_breach() {
+        let m = monitor("p99=1ms");
+        // 2% of traffic over a 1% budget: burn rate 2.0 -> breaching
+        for i in 0..100 {
+            let lat = if i % 50 == 0 {
+                Duration::from_millis(5)
+            } else {
+                Duration::from_micros(200)
+            };
+            m.observe(lat, 0);
+        }
+        let r = m.report();
+        assert_eq!(r.total, 100);
+        let p99 = &r.objectives[0];
+        assert_eq!(p99.breaches, 2);
+        assert!((p99.burn_rate - 2.0).abs() < 1e-9, "{}", p99.burn_rate);
+        assert!(p99.breaching);
+        assert!(!r.healthy());
+        assert!(r.health_line().contains("BREACHING"), "{}", r.health_line());
+    }
+
+    #[test]
+    fn queue_objective_counts_admission_depth() {
+        let m = monitor("queue=4");
+        for depth in 0..10 {
+            m.observe(Duration::from_micros(50), depth);
+        }
+        let r = m.report();
+        let q = &r.objectives[0];
+        assert_eq!(q.name, "queue");
+        assert_eq!(q.breaches, 5, "depths 5..=9 breach");
+        assert!(q.breaching, "50% over a 1% budget");
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let m = monitor("p99=1ms,queue=8");
+        m.observe(Duration::from_millis(5), 20);
+        let j = m.report().to_json();
+        let text = j.to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+        assert_eq!(j.get("healthy"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn slices_age_out_of_a_tiny_window() {
+        let spec = SloSpec {
+            p99: Some(Duration::from_millis(1)),
+            window: Some(Duration::from_millis(6)),
+            ..SloSpec::default()
+        };
+        let m = SloMonitor::new(spec);
+        m.observe(Duration::from_millis(5), 0);
+        assert_eq!(m.report().total, 1);
+        std::thread::sleep(Duration::from_millis(20));
+        let r = m.report();
+        assert_eq!(r.total, 0, "breach aged out");
+        assert!(r.healthy());
+        assert_eq!(r.observed, 1, "lifetime counter keeps it");
+    }
+}

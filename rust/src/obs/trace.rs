@@ -362,6 +362,9 @@ pub fn request(name: &'static str, label: &str, recorder: &Arc<FlightRecorder>) 
 /// A committed trace, as stored in the flight recorder.
 #[derive(Clone, Debug)]
 pub struct FinishedTrace {
+    /// Commit sequence number (1-based, process-wide per recorder) —
+    /// the id histogram exemplars and Chrome export refer to.
+    pub id: u64,
     /// The trace's request label.
     pub label: String,
     /// Nanoseconds from trace epoch to commit.
@@ -384,6 +387,7 @@ impl FinishedTrace {
     /// JSON form (used by the recorder dump and `ge-spmm stats`).
     pub fn to_json(&self) -> Json {
         obj(vec![
+            ("id", num(self.id as f64)),
             ("label", s(&self.label)),
             ("duration_ns", num(self.duration_ns as f64)),
             (
@@ -392,6 +396,81 @@ impl FinishedTrace {
             ),
         ])
     }
+
+    /// Append this trace's spans as Chrome trace-event begin/end pairs
+    /// (`ph: "B"` / `ph: "E"`, one virtual thread per trace). Events are
+    /// emitted by depth-first walk of the span tree — parents open
+    /// before their children and close after them — so the stream is
+    /// well-nested regardless of timestamp ties.
+    fn chrome_events(&self, events: &mut Vec<Json>) {
+        let tid = self.id as f64;
+        events.push(obj(vec![
+            ("name", s("thread_name")),
+            ("ph", s("M")),
+            ("pid", num(1.0)),
+            ("tid", num(tid)),
+            (
+                "args",
+                obj(vec![("name", s(&format!("{}#{}", self.label, self.id)))]),
+            ),
+        ]));
+        // span tree walk order: start time, then allocation order
+        let mut order: Vec<usize> = (0..self.spans.len()).collect();
+        order.sort_by_key(|&i| (self.spans[i].start_ns, self.spans[i].id));
+        // iterative DFS over roots, children resolved by parent link
+        let mut stack: Vec<(usize, bool)> = order
+            .iter()
+            .rev()
+            .filter(|&&i| self.spans[i].parent == 0)
+            .map(|&i| (i, false))
+            .collect();
+        while let Some((i, expanded)) = stack.pop() {
+            let sp = &self.spans[i];
+            if expanded {
+                events.push(obj(vec![
+                    ("name", s(sp.name)),
+                    ("ph", s("E")),
+                    ("pid", num(1.0)),
+                    ("tid", num(tid)),
+                    ("ts", num(sp.end_ns as f64 / 1000.0)),
+                ]));
+                continue;
+            }
+            let mut args: Vec<(&str, Json)> = sp.attrs.iter().map(|(k, v)| (*k, s(v))).collect();
+            args.push(("trace", s(&self.label)));
+            events.push(obj(vec![
+                ("name", s(sp.name)),
+                ("cat", s("ge-spmm")),
+                ("ph", s("B")),
+                ("pid", num(1.0)),
+                ("tid", num(tid)),
+                ("ts", num(sp.start_ns as f64 / 1000.0)),
+                ("args", obj(args)),
+            ]));
+            stack.push((i, true));
+            // children, latest-starting first so the earliest pops first
+            for &c in order.iter().rev() {
+                if self.spans[c].parent == sp.id {
+                    stack.push((c, false));
+                }
+            }
+        }
+    }
+}
+
+/// One histogram→trace exemplar: the slowest retained trace whose total
+/// duration landed in a given latency bucket, linking tail-latency
+/// buckets back to a concrete recorded request.
+#[derive(Clone, Debug)]
+pub struct TraceExemplar {
+    /// Latency bucket index (see [`super::hist::bucket_index`]).
+    pub bucket: usize,
+    /// Commit id of the exemplar trace.
+    pub trace_id: u64,
+    /// The exemplar trace's request label.
+    pub label: String,
+    /// The exemplar trace's total duration, ns.
+    pub duration_ns: u64,
 }
 
 /// Ring buffer of the last N committed request traces.
@@ -399,6 +478,7 @@ impl FinishedTrace {
 pub struct FlightRecorder {
     capacity: usize,
     committed: AtomicU64,
+    dropped: AtomicU64,
     ring: Mutex<VecDeque<FinishedTrace>>,
 }
 
@@ -408,6 +488,7 @@ impl FlightRecorder {
         Self {
             capacity: capacity.max(1),
             committed: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
             ring: Mutex::new(VecDeque::new()),
         }
     }
@@ -422,22 +503,28 @@ impl FlightRecorder {
         self.committed.load(Ordering::Relaxed)
     }
 
+    /// Traces evicted from the ring to make room for newer commits.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
     /// Move a trace's spans into the ring, evicting the oldest entry
     /// when full. One short lock per request.
     pub fn commit(&self, trace: &Arc<Trace>) {
         let duration_ns = trace.elapsed_ns();
         let spans = std::mem::take(&mut *trace.spans.lock().unwrap_or_else(|e| e.into_inner()));
+        let id = self.committed.fetch_add(1, Ordering::Relaxed) + 1;
         let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
         if ring.len() >= self.capacity {
             ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
         }
         ring.push_back(FinishedTrace {
+            id,
             label: trace.label().to_string(),
             duration_ns,
             spans,
         });
-        drop(ring);
-        self.committed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Copy the recorded traces out, oldest first.
@@ -460,24 +547,94 @@ impl FlightRecorder {
         self.len() == 0
     }
 
-    /// Full JSON dump: capacity, total committed, and the retained
-    /// traces with their span trees.
+    /// Full JSON dump: capacity, total committed, ring evictions, and
+    /// the retained traces with their span trees.
     pub fn dump_json(&self) -> Json {
         obj(vec![
             ("capacity", num(self.capacity as f64)),
             ("committed", num(self.committed() as f64)),
+            ("dropped", num(self.dropped() as f64)),
             (
                 "traces",
                 Json::Arr(self.traces().iter().map(|t| t.to_json()).collect()),
             ),
         ])
     }
+
+    /// Histogram→trace exemplars over the retained traces: for every
+    /// latency bucket some retained trace's total duration lands in,
+    /// the slowest such trace. Links the tail buckets of the request
+    /// histograms to a concrete span tree (`ge-spmm stats --traces`).
+    pub fn exemplars(&self) -> Vec<TraceExemplar> {
+        let mut best: std::collections::BTreeMap<usize, TraceExemplar> =
+            std::collections::BTreeMap::new();
+        for t in self.traces() {
+            let bucket = super::hist::bucket_index(t.duration_ns);
+            let replace = best
+                .get(&bucket)
+                .map(|e| t.duration_ns > e.duration_ns)
+                .unwrap_or(true);
+            if replace {
+                best.insert(
+                    bucket,
+                    TraceExemplar {
+                        bucket,
+                        trace_id: t.id,
+                        label: t.label.clone(),
+                        duration_ns: t.duration_ns,
+                    },
+                );
+            }
+        }
+        best.into_values().collect()
+    }
+
+    /// Render the retained traces as a Chrome trace-event document
+    /// (`chrome://tracing` / Perfetto): one virtual thread per trace,
+    /// well-nested `B`/`E` event pairs per span, and the exemplar links
+    /// under `otherData`. `ge-spmm stats --traces --format chrome`
+    /// prints exactly this document.
+    pub fn chrome_trace_json(&self) -> Json {
+        let mut events = Vec::new();
+        for t in self.traces() {
+            t.chrome_events(&mut events);
+        }
+        let exemplars = Json::Arr(
+            self.exemplars()
+                .iter()
+                .map(|e| {
+                    obj(vec![
+                        ("bucket", num(e.bucket as f64)),
+                        ("trace_id", num(e.trace_id as f64)),
+                        ("label", s(&e.label)),
+                        ("duration_ns", num(e.duration_ns as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("displayTimeUnit", s("ms")),
+            ("traceEvents", Json::Arr(events)),
+            (
+                "otherData",
+                obj(vec![
+                    ("committed", num(self.committed() as f64)),
+                    ("dropped", num(self.dropped() as f64)),
+                    ("exemplars", exemplars),
+                ]),
+            ),
+        ])
+    }
 }
 
+/// Default [`FlightRecorder`] ring capacity — the last N request traces
+/// kept for inspection (`serve --trace-capacity` overrides it).
+pub const DEFAULT_TRACE_CAPACITY: usize = 64;
+
 impl Default for FlightRecorder {
-    /// Recorder for the last 64 requests.
+    /// Recorder for the last [`DEFAULT_TRACE_CAPACITY`] requests.
     fn default() -> Self {
-        Self::new(64)
+        Self::new(DEFAULT_TRACE_CAPACITY)
     }
 }
 
@@ -581,10 +738,98 @@ mod tests {
         }
         assert_eq!(recorder.len(), 3);
         assert_eq!(recorder.committed(), 7);
+        assert_eq!(recorder.dropped(), 4, "evictions counted");
         let labels: Vec<_> = recorder.traces().iter().map(|t| t.label.clone()).collect();
         assert_eq!(labels, ["t4", "t5", "t6"]);
+        let ids: Vec<_> = recorder.traces().iter().map(|t| t.id).collect();
+        assert_eq!(ids, [5, 6, 7], "commit ids are 1-based and monotone");
         let dump = recorder.dump_json();
         assert_eq!(dump.get("committed").and_then(|j| j.as_usize()), Some(7));
+        assert_eq!(dump.get("dropped").and_then(|j| j.as_usize()), Some(4));
         assert_eq!(dump.get("traces").and_then(|j| j.as_arr()).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn exemplars_pick_the_slowest_trace_per_bucket() {
+        let recorder = Arc::new(FlightRecorder::new(8));
+        // record_raw keeps the span lists non-empty; duration comes from
+        // the trace epoch, so give the slow trace real elapsed time
+        for label in ["fast1", "fast2"] {
+            let t = Trace::begin(label);
+            t.record_raw("noop", 0, 1, vec![]);
+            recorder.commit(&t);
+        }
+        let slow = Trace::begin("slow");
+        slow.record_raw("noop", 0, 1, vec![]);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        recorder.commit(&slow);
+        let ex = recorder.exemplars();
+        assert!(!ex.is_empty());
+        // the slowest trace overall must be some bucket's exemplar
+        let slowest = ex.iter().max_by_key(|e| e.duration_ns).unwrap();
+        assert_eq!(slowest.label, "slow");
+        assert_eq!(slowest.trace_id, 3);
+        assert_eq!(slowest.bucket, super::super::hist::bucket_index(slowest.duration_ns));
+        // buckets are unique and ordered
+        let buckets: Vec<_> = ex.iter().map(|e| e.bucket).collect();
+        let mut sorted = buckets.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(buckets, sorted);
+    }
+
+    #[test]
+    fn chrome_export_is_well_nested() {
+        let recorder = Arc::new(FlightRecorder::new(4));
+        let trace = Trace::begin("chrome#1");
+        {
+            let _scope = attach(&TraceHandle::of(&trace));
+            let _outer = span("outer");
+            {
+                let mut inner = span("inner");
+                inner.set_attr("k", "v");
+            }
+            let _second = span("second");
+        }
+        recorder.commit(&trace);
+        let doc = recorder.chrome_trace_json();
+        // valid JSON that round-trips
+        let text = doc.to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+        let events = doc.get("traceEvents").and_then(|j| j.as_arr()).unwrap();
+        // per trace: 1 metadata + B/E per span
+        assert_eq!(events.len(), 1 + 2 * 3);
+        // begin/end events are stack-disciplined per tid
+        let mut depth = 0i64;
+        for ev in events {
+            match ev.get("ph").and_then(|p| p.as_str()) {
+                Some("B") => depth += 1,
+                Some("E") => {
+                    depth -= 1;
+                    assert!(depth >= 0, "E without matching B");
+                }
+                Some("M") => {}
+                other => panic!("unexpected ph {other:?}"),
+            }
+        }
+        assert_eq!(depth, 0, "every B closed");
+        // outer opens before its children, and closes after both
+        // (`second` opened while `outer` was still the innermost span)
+        let names: Vec<_> = events
+            .iter()
+            .filter_map(|e| {
+                let ph = e.get("ph")?.as_str()?;
+                let name = e.get("name")?.as_str()?;
+                (ph != "M").then(|| format!("{ph}:{name}"))
+            })
+            .collect();
+        assert_eq!(
+            names,
+            ["B:outer", "B:inner", "E:inner", "B:second", "E:second", "E:outer"]
+        );
+        // exemplars ride along under otherData
+        let other = doc.get("otherData").unwrap();
+        assert_eq!(other.get("committed").and_then(|j| j.as_usize()), Some(1));
+        assert!(other.get("exemplars").and_then(|j| j.as_arr()).is_some());
     }
 }

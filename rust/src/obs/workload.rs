@@ -1,0 +1,327 @@
+//! Analytic roofline workload accounting.
+//!
+//! Every kernel execution has a *knowable* work profile: the flop count
+//! is `2·nnz·width` multiply-adds regardless of variant, and the bytes a
+//! variant moves follow mechanically from its access pattern — CSR
+//! streams for the row-split families, padded segment streams for the
+//! workload-balanced ones, dense-row loads repeated per lane-tile pass,
+//! and the output writes of its reduction style. [`estimate`] derives
+//! that profile from a [`KernelVariant`] descriptor with pure integer
+//! arithmetic, so tests can assert the counters exactly and the stats
+//! renderer can report achieved GFLOP/s, GB/s and arithmetic intensity
+//! per `(op, variant)` without hardware counters ("Design Principles for
+//! Sparse Matrix Multiplication on the GPU", Yang et al., frames kernel
+//! choice in exactly these roofline terms: work, traffic, balance).
+//!
+//! The model, per execution of `variant` over `(rows, nnz)` at dense
+//! width `width` (`n` for SpMM, `d` for SDDMM):
+//!
+//! - **flops** = `2·nnz·width` (one multiply + one add per stored
+//!   nonzero per lane).
+//! - **sparse stream** (read once per lane-tile pass, i.e.
+//!   `ceil(width / lane_tile)` times — the tiled loops re-walk the
+//!   sparse structure for every tile of lanes):
+//!   - row-split families: `(rows + 1)·4` row-pointer bytes plus
+//!     `nnz·(4 + 4)` column-index and value bytes; the merge-path
+//!     traversal re-reads the row pointers once more per pass for its
+//!     path search;
+//!   - balanced families: the padded segment stream —
+//!     `ceil(nnz / seg_len)·seg_len` slots of 12 bytes each (value +
+//!     column + row); the slots past `nnz` are counted again as
+//!     [`WorkloadEstimate::padding_bytes`] waste.
+//! - **dense loads** = `nnz·width·4` for SpMM (one `x` row slice per
+//!   nonzero) and `2·nnz·width·4` for SDDMM (`u` and `v` slices).
+//!   Summed over lane-tile passes this is exact, not per-pass.
+//! - **output writes** = `rows·width·4` (SpMM) or `nnz·4` (SDDMM), plus
+//!   one partial-accumulator flush per segment for the balanced
+//!   families (`ceil(nnz / seg_len)·width·4` SpMM / `·4` SDDMM).
+//!
+//! Accumulated per registry variant in
+//! [`Metrics`](crate::coordinator::metrics::Metrics) banks at the grain
+//! that executed (request-level native dispatch, or per shard inside
+//! the sharded backend), and rendered by `ge-spmm stats`. See DESIGN.md
+//! §Observability.
+
+use crate::kernels::{KernelVariant, SparseOp, Traversal};
+
+/// Bytes per dense element / sparse value (`f32`).
+const VAL_BYTES: u64 = 4;
+/// Bytes per sparse index (`u32`).
+const IDX_BYTES: u64 = 4;
+/// Bytes per padded segment slot: value + column index + row index.
+const SEG_SLOT_BYTES: u64 = 12;
+
+/// Analytic per-execution workload profile. All fields are derived with
+/// integer arithmetic from the variant descriptor and the matrix shape,
+/// so equal inputs always produce equal counters (tests assert them
+/// exactly).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkloadEstimate {
+    /// Floating-point operations: `2·nnz·width` multiply-add pairs.
+    pub flops: u64,
+    /// Bytes read: sparse streams (once per lane-tile pass) plus dense
+    /// operand loads.
+    pub bytes_read: u64,
+    /// Bytes written: output rows/entries plus balanced-family partial
+    /// flushes.
+    pub bytes_written: u64,
+    /// The waste inside [`WorkloadEstimate::bytes_read`]: padded segment
+    /// slots the balanced families stream past without doing work.
+    pub padding_bytes: u64,
+    /// Rows covered by the execution.
+    pub rows: u64,
+    /// Stored nonzeros covered by the execution.
+    pub nnz: u64,
+}
+
+impl WorkloadEstimate {
+    /// Total bytes moved (reads plus writes).
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_read + self.bytes_written
+    }
+
+    /// Arithmetic intensity: flops per byte moved.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops as f64 / self.bytes_total().max(1) as f64
+    }
+
+    /// Element-wise accumulate, for rolling shard estimates up into a
+    /// request-level view.
+    pub fn accumulate(&mut self, other: &WorkloadEstimate) {
+        self.flops += other.flops;
+        self.bytes_read += other.bytes_read;
+        self.bytes_written += other.bytes_written;
+        self.padding_bytes += other.padding_bytes;
+        self.rows += other.rows;
+        self.nnz += other.nnz;
+    }
+}
+
+/// Derive the analytic workload profile of one execution of `variant`
+/// over a `(rows, nnz)` sparse operand at dense width `width` (`n` for
+/// SpMM, `d` for SDDMM). See the module docs for the exact model.
+pub fn estimate(variant: &KernelVariant, rows: usize, nnz: usize, width: usize) -> WorkloadEstimate {
+    let rows64 = rows as u64;
+    let nnz64 = nnz as u64;
+    let width64 = width.max(1) as u64;
+    let tile = variant.lane_tile.max(1) as u64;
+    let passes = width64.div_ceil(tile);
+    let (sparse_pass, padding_pass, segments) = if variant.family.is_balanced() {
+        let seg = variant.seg_len.max(1) as u64;
+        let segments = nnz64.div_ceil(seg);
+        let slots = segments * seg;
+        (
+            slots * SEG_SLOT_BYTES,
+            (slots - nnz64) * SEG_SLOT_BYTES,
+            segments,
+        )
+    } else {
+        let mut bytes = (rows64 + 1) * IDX_BYTES + nnz64 * (IDX_BYTES + VAL_BYTES);
+        if variant.traversal == Traversal::MergePath {
+            bytes += (rows64 + 1) * IDX_BYTES;
+        }
+        (bytes, 0, 0)
+    };
+    let (dense_operands, output, partial_unit) = match variant.op {
+        SparseOp::Spmm => (1, rows64 * width64 * VAL_BYTES, width64 * VAL_BYTES),
+        SparseOp::Sddmm => (2, nnz64 * VAL_BYTES, VAL_BYTES),
+    };
+    WorkloadEstimate {
+        flops: 2 * nnz64 * width64,
+        bytes_read: sparse_pass * passes + dense_operands * nnz64 * width64 * VAL_BYTES,
+        bytes_written: output + segments * partial_unit,
+        padding_bytes: padding_pass * passes,
+        rows: rows64,
+        nnz: nnz64,
+    }
+}
+
+/// Accumulated workload totals for one variant bank, paired with the
+/// wall time attributed to those executions so achieved rates fall out:
+/// `flops / ns` *is* GFLOP/s and `bytes / ns` *is* GB/s.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkloadTotals {
+    /// Executions accumulated into this bank.
+    pub execs: u64,
+    /// Wall nanoseconds attributed to those executions.
+    pub ns: u64,
+    /// Accumulated flops.
+    pub flops: u64,
+    /// Accumulated bytes read.
+    pub bytes_read: u64,
+    /// Accumulated bytes written.
+    pub bytes_written: u64,
+    /// Accumulated segment-padding waste bytes.
+    pub padding_bytes: u64,
+    /// Accumulated rows processed.
+    pub rows: u64,
+    /// Accumulated nonzeros processed.
+    pub nnz: u64,
+}
+
+impl WorkloadTotals {
+    /// Total bytes moved (reads plus writes).
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_read + self.bytes_written
+    }
+
+    /// Achieved GFLOP/s over the attributed wall time (0 when idle).
+    pub fn achieved_gflops(&self) -> f64 {
+        if self.ns == 0 {
+            0.0
+        } else {
+            self.flops as f64 / self.ns as f64
+        }
+    }
+
+    /// Achieved GB/s over the attributed wall time (0 when idle).
+    pub fn achieved_gbps(&self) -> f64 {
+        if self.ns == 0 {
+            0.0
+        } else {
+            self.bytes_total() as f64 / self.ns as f64
+        }
+    }
+
+    /// Arithmetic intensity of the accumulated work: flops per byte.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops as f64 / self.bytes_total().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelKind;
+
+    // Fixture shape shared by the hand computations below.
+    const ROWS: usize = 4;
+    const NNZ: usize = 10;
+    const N: usize = 8;
+
+    #[test]
+    fn spmm_row_split_canonical_matches_hand_computation() {
+        // sr_rs canonical: lane_tile = 8 -> one pass over n = 8.
+        let v = KernelVariant::canonical(SparseOp::Spmm, KernelKind::SrRs);
+        let w = estimate(&v, ROWS, NNZ, N);
+        assert_eq!(w.flops, 160); // 2 * 10 * 8
+        // sparse: (4+1)*4 indptr + 10*8 idx+val = 100; dense: 10*8*4 = 320
+        assert_eq!(w.bytes_read, 420);
+        assert_eq!(w.bytes_written, 128); // 4 * 8 * 4
+        assert_eq!(w.padding_bytes, 0);
+        assert_eq!((w.rows, w.nnz), (4, 10));
+        assert_eq!(w.bytes_total(), 548);
+        // pr_rs shares the layout, so it shares the byte model.
+        let pr = KernelVariant::canonical(SparseOp::Spmm, KernelKind::PrRs);
+        assert_eq!(estimate(&pr, ROWS, NNZ, N), w);
+    }
+
+    #[test]
+    fn lane_tiling_rereads_the_sparse_stream_per_pass() {
+        let base = KernelVariant::canonical(SparseOp::Spmm, KernelKind::SrRs);
+        // t1: 8 passes -> sparse stream read 8 times.
+        let w1 = estimate(&base.with_lane_tile(1), ROWS, NNZ, N);
+        assert_eq!(w1.bytes_read, 100 * 8 + 320);
+        // t4: 2 passes.
+        let w4 = estimate(&base.with_lane_tile(4), ROWS, NNZ, N);
+        assert_eq!(w4.bytes_read, 100 * 2 + 320);
+        // flops and writes are tiling-invariant.
+        assert_eq!(w1.flops, 160);
+        assert_eq!(w4.bytes_written, 128);
+    }
+
+    #[test]
+    fn merge_path_rereads_the_row_pointers() {
+        let v = KernelVariant::canonical(SparseOp::Spmm, KernelKind::SrRs)
+            .with_traversal(Traversal::MergePath);
+        let w = estimate(&v, ROWS, NNZ, N);
+        // one pass: 100 + extra (4+1)*4 = 120 sparse, + 320 dense
+        assert_eq!(w.bytes_read, 440);
+    }
+
+    #[test]
+    fn spmm_balanced_canonical_counts_segment_padding() {
+        // sr_wb canonical: seg_len = 32 -> one 32-slot segment for 10 nnz.
+        let v = KernelVariant::canonical(SparseOp::Spmm, KernelKind::SrWb);
+        let w = estimate(&v, ROWS, NNZ, N);
+        assert_eq!(w.flops, 160);
+        // sparse: 32 * 12 = 384 (one pass); dense 320
+        assert_eq!(w.bytes_read, 704);
+        assert_eq!(w.padding_bytes, 22 * 12);
+        // output 128 + one segment partial flush 8*4 = 32
+        assert_eq!(w.bytes_written, 160);
+        let pr = KernelVariant::canonical(SparseOp::Spmm, KernelKind::PrWb);
+        assert_eq!(estimate(&pr, ROWS, NNZ, N), w);
+    }
+
+    #[test]
+    fn short_segments_waste_less_but_flush_more() {
+        let v = KernelVariant::canonical(SparseOp::Spmm, KernelKind::SrWb).with_seg_len(16);
+        let w = estimate(&v, ROWS, NNZ, N);
+        // one 16-slot segment: 16*12 = 192 sparse, 6 padded slots
+        assert_eq!(w.bytes_read, 192 + 320);
+        assert_eq!(w.padding_bytes, 6 * 12);
+        assert_eq!(w.bytes_written, 128 + 32);
+        // seg_len = 64: more padding, same single flush
+        let w64 = estimate(&v.with_seg_len(64), ROWS, NNZ, N);
+        assert_eq!(w64.padding_bytes, 54 * 12);
+    }
+
+    #[test]
+    fn sddmm_canonicals_match_hand_computation() {
+        const D: usize = 8;
+        let rs = KernelVariant::canonical(SparseOp::Sddmm, KernelKind::SrRs);
+        let w = estimate(&rs, ROWS, NNZ, D);
+        assert_eq!(w.flops, 160);
+        // sparse 100 (one pass) + dense 2*10*8*4 = 640
+        assert_eq!(w.bytes_read, 740);
+        assert_eq!(w.bytes_written, 40); // one f32 per nonzero
+        let wb = KernelVariant::canonical(SparseOp::Sddmm, KernelKind::PrWb);
+        let ww = estimate(&wb, ROWS, NNZ, D);
+        assert_eq!(ww.bytes_read, 384 + 640);
+        assert_eq!(ww.bytes_written, 40 + 4); // + one scalar partial flush
+        assert_eq!(ww.padding_bytes, 22 * 12);
+    }
+
+    #[test]
+    fn degenerate_shapes_stay_finite() {
+        let v = KernelVariant::canonical(SparseOp::Spmm, KernelKind::SrWb);
+        let empty = estimate(&v, 0, 0, 0);
+        assert_eq!(empty.flops, 0);
+        assert_eq!(empty.padding_bytes, 0);
+        assert_eq!(empty.bytes_read, 0);
+        assert!(empty.arithmetic_intensity() == 0.0);
+        let zero_width = estimate(&v, ROWS, NNZ, 0);
+        // width clamps to 1 lane
+        assert_eq!(zero_width.flops, 20);
+    }
+
+    #[test]
+    fn totals_rates_fall_out_of_the_units() {
+        let t = WorkloadTotals {
+            execs: 2,
+            ns: 1_000,
+            flops: 4_000,
+            bytes_read: 1_500,
+            bytes_written: 500,
+            padding_bytes: 100,
+            rows: 8,
+            nnz: 20,
+        };
+        assert!((t.achieved_gflops() - 4.0).abs() < 1e-12);
+        assert!((t.achieved_gbps() - 2.0).abs() < 1e-12);
+        assert!((t.arithmetic_intensity() - 2.0).abs() < 1e-12);
+        assert_eq!(WorkloadTotals::default().achieved_gflops(), 0.0);
+    }
+
+    #[test]
+    fn accumulate_sums_every_counter() {
+        let v = KernelVariant::canonical(SparseOp::Spmm, KernelKind::SrRs);
+        let mut acc = estimate(&v, ROWS, NNZ, N);
+        let one = acc;
+        acc.accumulate(&one);
+        assert_eq!(acc.flops, 2 * one.flops);
+        assert_eq!(acc.bytes_total(), 2 * one.bytes_total());
+        assert_eq!(acc.nnz, 2 * one.nnz);
+    }
+}

@@ -226,6 +226,14 @@ impl OnlineSelector {
         self.metrics.clone()
     }
 
+    /// Snapshot the selector-regret counters this selector has been
+    /// folding into: how much realized cost its choices left on the
+    /// table versus the best measured competing variant, per
+    /// `(op, feature bucket)` (see [`crate::obs::regret`]).
+    pub fn regret_report(&self) -> crate::obs::RegretReport {
+        self.metrics.regret().report()
+    }
+
     /// Pick a kernel: the current rule choice, except that every
     /// `explore_every`-th decision runs the sibling design instead.
     pub fn select(&self, f: &MatrixFeatures, n: usize) -> KernelKind {
@@ -424,6 +432,16 @@ impl OnlineSelector {
             SparseOp::Spmm => {
                 let bucket = feature_bucket(f, n);
                 self.metrics.observe_cost_variant(bucket, entry.id, cost);
+                // fold selector regret: this realized cost against the
+                // cheapest known cell among the op's variants in the same
+                // bucket (the chosen variant's just-updated EWMA included,
+                // so an always-optimal selector folds exactly zero)
+                let best = registry()
+                    .op_variants(SparseOp::Spmm)
+                    .iter()
+                    .filter_map(|e| self.metrics.cost_variant(bucket, e.id))
+                    .fold(cost, f64::min);
+                self.metrics.regret().fold(SparseOp::Spmm, bucket, entry.id, cost, best);
                 // backfill the realized cost onto the matching audit
                 // entry (a miss just means the decision ring already
                 // wrapped past it)
@@ -515,6 +533,14 @@ impl OnlineSelector {
             cell.obs += 1;
         }
         self.metrics.observe_cost_variant(bucket, entry.id, cost);
+        // fold selector regret against the cheapest competing SDDMM cell
+        // (see the SpMM branch of `observe_variant`)
+        let best = registry()
+            .op_variants(SparseOp::Sddmm)
+            .iter()
+            .filter_map(|e| self.metrics.cost_variant(bucket, e.id))
+            .fold(cost, f64::min);
+        self.metrics.regret().fold(SparseOp::Sddmm, bucket, entry.id, cost, best);
         self.update_variant_pref(SparseOp::Sddmm, bucket, kernel);
         {
             let mut cents = self.sddmm_centroids.lock().unwrap();

@@ -31,8 +31,8 @@ use crate::backend::{
     Execution, NativeBackend, PreparedOperand, SddmmExecution, SpmmBackend,
 };
 use crate::coordinator::metrics::Metrics;
-use crate::kernels::{KernelKind, SparseOp, VariantEntry};
-use crate::obs::{trace, AuditEntry};
+use crate::kernels::{registry, KernelKind, SparseOp, VariantEntry};
+use crate::obs::{trace, workload, AuditEntry};
 use crate::selector::{AdaptiveSelector, Decision, SddmmSelector};
 use crate::sparse::{CsrMatrix, DenseMatrix};
 use anyhow::{Context, Result};
@@ -235,6 +235,33 @@ impl ShardedBackend {
         });
         kernel
     }
+
+    /// Record one batch's nnz imbalance (heaviest shard vs. the mean)
+    /// before a fan-out — the paper's workload-balancing quality as a
+    /// measured distribution.
+    fn record_imbalance(&self, shards: &[PreparedShard]) {
+        let max_nnz = shards.iter().map(|s| s.features.features.nnz as u64).max().unwrap_or(0);
+        let total: u64 = shards.iter().map(|s| s.features.features.nnz as u64).sum();
+        self.metrics.record_shard_imbalance(max_nnz, total, shards.len() as u64);
+    }
+
+    /// Record one shard execution's analytic workload under the variant
+    /// that actually ran (the family's canonical variant when no
+    /// generated entry was resolved), sized by the shard's own features.
+    fn record_shard_workload(
+        &self,
+        op: SparseOp,
+        kernel: KernelKind,
+        entry: Option<&'static VariantEntry>,
+        shard: &PreparedShard,
+        width: usize,
+        took: Duration,
+    ) {
+        let ran = entry.unwrap_or_else(|| registry().canonical(op, kernel));
+        let f = &shard.features.features;
+        let est = workload::estimate(&ran.variant, f.rows, f.nnz, width);
+        self.metrics.record_workload(ran.id, &est, took);
+    }
 }
 
 impl SpmmBackend for ShardedBackend {
@@ -418,6 +445,7 @@ impl SpmmBackend for ShardedBackend {
         // the inner backend; each reports its own wallclock so stragglers
         // are visible in the shard metrics.
         let inner = self.inner.as_ref();
+        self.record_imbalance(&prep.shards);
         let mut fan = trace::span("fanout");
         fan.set_attr("shards", prep.shards.len());
         let handle = trace::handle();
@@ -471,6 +499,7 @@ impl SpmmBackend for ShardedBackend {
                 }
                 None => self.metrics.record_shard(k, took),
             }
+            self.record_shard_workload(SparseOp::Spmm, k, entry, shard, n, took);
             if let (ShardSelection::Online(sel), Some(e)) = (&self.selection, entry) {
                 sel.observe_variant(&shard.features.features, n, e, took);
             }
@@ -531,6 +560,7 @@ impl SpmmBackend for ShardedBackend {
         // are disjoint contiguous nnz ranges of the stream (row slices
         // preserve stream order), so the gather is a straight copy.
         let inner = self.inner.as_ref();
+        self.record_imbalance(&prep.shards);
         let mut fan = trace::span("fanout");
         fan.set_attr("shards", prep.shards.len());
         fan.set_attr("op", SparseOp::Sddmm.label());
@@ -592,6 +622,7 @@ impl SpmmBackend for ShardedBackend {
                 }
                 None => self.metrics.record_sddmm_shard(k, took),
             }
+            self.record_shard_workload(SparseOp::Sddmm, k, entry, shard, d, took);
             if let (ShardSelection::Online(sel), Some(e)) = (&self.selection, entry) {
                 sel.observe_variant(&shard.features.features, d, e, took);
             }

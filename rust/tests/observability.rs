@@ -5,7 +5,13 @@
 //! histograms' exactness under concurrency and their quantile accuracy
 //! against an exact sort, flight-recorder wraparound under engine
 //! traffic, and the exposition surface (JSON snapshot + Prometheus text)
-//! over a live serving engine.
+//! over a live serving engine. Second-layer observability rides the same
+//! fixtures: roofline workload accounting must match the analytic
+//! flop/byte model exactly (unsharded and per-shard), selector regret
+//! must fold to zero under an always-optimal selector, the Chrome
+//! trace-event export must be valid well-nested JSON, and the SLO
+//! burn-rate state must flip on an induced latency breach on the served
+//! path.
 
 use ge_spmm::coordinator::metrics::Metrics;
 use ge_spmm::coordinator::server::{Request, Server, ServerConfig, ServerReply};
@@ -426,4 +432,282 @@ fn stats_snapshot_matches_live_counters_and_roundtrips() {
     let reparsed = Json::parse(&snap.to_string_pretty()).unwrap();
     assert_eq!(reparsed, snap);
     assert_eq!(expo::prometheus_of(&reparsed).unwrap(), text);
+}
+
+#[test]
+fn workload_accounting_matches_the_analytic_model_end_to_end() {
+    use ge_spmm::kernels::registry;
+    use ge_spmm::obs::workload;
+
+    // unsharded: every direct request books exactly one workload record
+    // under the canonical variant of the dispatched kernel
+    let a = uniform_csr(64, 48, 0.05, 81);
+    let (rows, nnz) = (a.rows, a.nnz());
+    let engine = SpmmEngine::native();
+    let h = engine.register(a).unwrap();
+    let mut rng = Xoshiro256::seeded(82);
+    let x = int_dense(48, 6, &mut rng);
+    let resp = engine.spmm(h, &x).unwrap();
+    let entry = registry().canonical(SparseOp::Spmm, resp.kernel);
+    let est = workload::estimate(&entry.variant, rows, nnz, 6);
+    assert_eq!(est.flops, 2 * nnz as u64 * 6, "SpMM flop model is 2·nnz·n");
+    let t = engine.metrics.workload_totals(entry.id).expect("workload recorded");
+    assert_eq!(t.execs, 1);
+    assert_eq!(t.flops, est.flops);
+    assert_eq!(t.bytes_read, est.bytes_read);
+    assert_eq!(t.bytes_written, est.bytes_written);
+    assert_eq!((t.rows, t.nnz), (rows as u64, nnz as u64));
+    assert!(t.ns > 0 && t.achieved_gflops() > 0.0);
+    assert_eq!(engine.metrics.workload_flops_total(), est.flops);
+
+    let u = int_dense(64, 8, &mut rng);
+    let v = int_dense(48, 8, &mut rng);
+    let resp = engine.sddmm(h, &u, &v).unwrap();
+    let entry = registry().canonical(SparseOp::Sddmm, resp.kernel);
+    let est_s = workload::estimate(&entry.variant, rows, nnz, 8);
+    assert_eq!(est_s.flops, 2 * nnz as u64 * 8, "SDDMM flop model is 2·nnz·d");
+    let t = engine.metrics.workload_totals(entry.id).expect("sddmm workload recorded");
+    assert_eq!((t.execs, t.flops), (1, est_s.flops));
+    assert_eq!(t.bytes_written, est_s.bytes_written);
+    assert_eq!(
+        engine.metrics.workload_flops_total(),
+        est.flops + est_s.flops,
+        "the global flop counter sums both ops"
+    );
+
+    // unsharded requests never touch the shard-imbalance counters
+    assert_eq!(engine.metrics.shard_imbalance_batches(), 0);
+}
+
+#[test]
+fn sharded_requests_account_workload_per_shard_with_imbalance() {
+    use ge_spmm::kernels::registry;
+
+    let a = uniform_csr(512, 48, 0.08, 83);
+    let (rows, nnz) = (a.rows, a.nnz());
+    let engine = SpmmEngine::sharded(2);
+    let h = engine.register(a).unwrap();
+    let mut rng = Xoshiro256::seeded(84);
+    let x = int_dense(48, 4, &mut rng);
+    engine.spmm(h, &x).unwrap();
+
+    // per-shard records partition the matrix exactly — and the request
+    // grain did NOT also book the whole matrix (no double counting)
+    let m = &engine.metrics;
+    let (mut execs, mut wrows, mut wnnz, mut flops) = (0u64, 0u64, 0u64, 0u64);
+    for e in registry().entries() {
+        if let Some(t) = m.workload_totals(e.id) {
+            assert_eq!(e.variant.op, SparseOp::Spmm);
+            execs += t.execs;
+            wrows += t.rows;
+            wnnz += t.nnz;
+            flops += t.flops;
+        }
+    }
+    assert_eq!(execs, 2, "one workload record per shard, nothing else");
+    assert_eq!(wrows, rows as u64, "shards partition the rows");
+    assert_eq!(wnnz, nnz as u64, "shards partition the nnz");
+    assert_eq!(flops, 2 * nnz as u64 * 4);
+
+    // the fan-out recorded one imbalance batch; a milli-ratio of 1000
+    // means perfectly nnz-balanced shards, and the partitioner balances
+    // by nnz, so the ratio stays close to that floor
+    assert_eq!(m.shard_imbalance_batches(), 1);
+    assert!(m.shard_imbalance_mean_milli() >= 1000);
+    assert!(m.shard_imbalance_max_milli() >= m.shard_imbalance_mean_milli());
+
+    // the exposition carries the same totals
+    let snap = expo::snapshot(m);
+    let wl = snap.get("workload").unwrap();
+    assert_eq!(wl.get("flops_total").unwrap().as_usize(), Some(flops as usize));
+    let imb = wl.get("shard_imbalance").unwrap();
+    assert_eq!(imb.get("batches").unwrap().as_usize(), Some(1));
+}
+
+#[test]
+fn regret_converges_to_zero_under_a_forced_optimal_selector() {
+    use ge_spmm::features::MatrixFeatures;
+    use ge_spmm::kernels::registry;
+    use ge_spmm::selector::{OnlineConfig, OnlineSelector};
+
+    let metrics = Arc::new(Metrics::default());
+    let online = OnlineSelector::new(
+        AdaptiveSelector::default(),
+        metrics.clone(),
+        OnlineConfig {
+            explore_every: 0,
+            refit_every: 0,
+            ..OnlineConfig::default()
+        },
+    );
+    let a = uniform_csr(64, 48, 0.05, 91);
+    let f = MatrixFeatures::of(&a);
+    let entry = registry().canonical(SparseOp::Spmm, online.select(&f, 8));
+    // constant latency: every realized cost equals the EWMA it updates,
+    // so the chosen variant is always the best-known cell in its bucket
+    for _ in 0..64 {
+        online.observe_variant(&f, 8, entry, Duration::from_micros(40));
+    }
+    let report = online.regret_report();
+    assert_eq!(report.folds, 64);
+    assert_eq!(report.spmm_ratio, 0.0, "optimal selection folds zero regret");
+    assert!(report.variants.is_empty(), "no mis-selected variants");
+
+    // a consistently 10x-worse sibling: positive regret, attributed to it
+    let worse = registry()
+        .op_variants(SparseOp::Spmm)
+        .iter()
+        .find(|e| e.id != entry.id)
+        .unwrap();
+    for _ in 0..8 {
+        online.observe_variant(&f, 8, worse, Duration::from_micros(400));
+    }
+    let report = online.regret_report();
+    assert_eq!(report.folds, 72);
+    assert!(report.spmm_ratio > 0.0, "mis-selection shows up in the ratio");
+    assert_eq!(
+        report.variants.first().map(|v| v.id),
+        Some(worse.id),
+        "the worst offender leads the mis-selected list"
+    );
+    // and the per-bucket table carries it too
+    assert!(report.buckets.iter().any(|b| b.regret_ratio > 0.0));
+    assert!(metrics.regret().report().render().contains("regret: folds=72"));
+}
+
+#[test]
+fn chrome_trace_export_is_valid_and_well_nested() {
+    use std::collections::HashMap;
+
+    let (engine, hs, hl) = serving_pair();
+    let mut rng = Xoshiro256::seeded(93);
+    let x = int_dense(48, 4, &mut rng);
+    engine.spmm(hs, &x).unwrap();
+    engine.spmm(hl, &x).unwrap();
+    let json = engine.metrics.recorder().chrome_trace_json();
+    let reparsed = Json::parse(&json.to_string_pretty()).unwrap();
+    assert_eq!(reparsed, json, "the export is valid, round-trippable JSON");
+    assert_eq!(json.get("displayTimeUnit").and_then(|j| j.as_str()), Some("ms"));
+
+    // per tid: B/E events obey stack discipline with matching names
+    let events = json.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let mut stacks: HashMap<usize, Vec<String>> = HashMap::new();
+    for ev in events {
+        let ph = ev.get("ph").unwrap().as_str().unwrap();
+        if ph == "M" {
+            continue; // thread-name metadata
+        }
+        let tid = ev.get("tid").unwrap().as_usize().unwrap();
+        let name = ev.get("name").unwrap().as_str().unwrap().to_string();
+        match ph {
+            "B" => stacks.entry(tid).or_default().push(name),
+            "E" => {
+                let top = stacks.get_mut(&tid).and_then(|s| s.pop());
+                assert_eq!(top.as_deref(), Some(name.as_str()), "E closes the open B");
+            }
+            other => panic!("unexpected phase {other}"),
+        }
+    }
+    for (tid, stack) in stacks {
+        assert!(stack.is_empty(), "tid {tid} left spans open: {stack:?}");
+    }
+
+    let other = json.get("otherData").unwrap();
+    assert_eq!(other.get("committed").unwrap().as_usize(), Some(2));
+    assert_eq!(other.get("dropped").unwrap().as_usize(), Some(0));
+    let exemplars = other.get("exemplars").unwrap().as_arr().unwrap();
+    assert!(!exemplars.is_empty(), "committed traces leave exemplars");
+    for e in exemplars {
+        assert!(e.get("trace_id").unwrap().as_usize().unwrap() >= 1);
+        assert!(e.get("duration_ns").unwrap().as_f64().unwrap() > 0.0);
+    }
+}
+
+#[test]
+fn slo_monitor_flips_to_breaching_on_served_latency() {
+    use ge_spmm::obs::{SloMonitor, SloSpec};
+
+    let (engine, hs, hl) = serving_pair();
+    // an impossible 1ns p99 target so real requests must breach it, and a
+    // huge queue target that must not; a huge window so slice expiry
+    // never races the test
+    let mut spec = SloSpec::parse("p99=1ns,queue=1000000").unwrap();
+    spec.window = Some(Duration::from_secs(3600));
+    let monitor = Arc::new(SloMonitor::new(spec));
+    engine.metrics.install_slo(monitor.clone());
+
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig {
+            max_width: 1000,
+            max_delay: Duration::from_millis(1),
+            workers: 2,
+            max_queue: 64,
+        },
+    );
+    let mut rng = Xoshiro256::seeded(94);
+    let mut replies = Vec::new();
+    for (tag, h) in [(1u64, hs), (2u64, hl), (3u64, hs)] {
+        let (rtx, rrx) = mpsc::channel();
+        assert!(server.submit(Request::spmm(h, int_dense(48, 3, &mut rng), tag, rtx)));
+        replies.push(rrx);
+    }
+    for rrx in replies {
+        match rrx.recv_timeout(Duration::from_secs(60)).unwrap() {
+            ServerReply::Ok(_) => {}
+            ServerReply::Err(e) => panic!("served request failed: {e}"),
+        }
+    }
+    server.shutdown();
+
+    assert_eq!(monitor.observed(), 3, "every delivered reply is observed");
+    let report = monitor.report();
+    let p99 = report.objectives.iter().find(|o| o.name == "p99").unwrap();
+    assert!(p99.breaching, "1ns target must be breached by real requests");
+    assert!(p99.burn_rate > 1.0);
+    let queue = report.objectives.iter().find(|o| o.name == "queue").unwrap();
+    assert!(!queue.breaching, "queue depth stays far under the target");
+    assert!(!report.healthy());
+    assert!(report.health_line().contains("BREACHING"), "{}", report.health_line());
+
+    // the breach surfaces through the snapshot and the Prometheus text
+    let snap = expo::snapshot(&engine.metrics);
+    let slo = snap.get("slo").unwrap();
+    assert_eq!(slo.get("healthy").and_then(|j| j.as_bool()), Some(false));
+    assert_eq!(slo.get("observed").unwrap().as_usize(), Some(3));
+    let text = expo::prometheus_text(&engine.metrics);
+    assert!(text.contains("ge_spmm_slo_breaching{objective=\"p99\"} 1"), "{text}");
+    assert!(text.contains("ge_spmm_slo_breaching{objective=\"queue\"} 0"), "{text}");
+    assert!(text.contains("ge_spmm_slo_observed_total 3"), "{text}");
+}
+
+#[test]
+fn trace_capacity_is_configurable_and_drops_are_counted() {
+    let engine = SpmmEngine::serving_with_selector_traced(
+        16 << 20,
+        usize::MAX,
+        2,
+        AdaptiveSelector::default(),
+        4,
+    );
+    assert_eq!(engine.metrics.recorder().capacity(), 4);
+    let h = engine.register(uniform_csr(48, 40, 0.1, 95)).unwrap();
+    let mut rng = Xoshiro256::seeded(96);
+    let x = int_dense(40, 3, &mut rng);
+    for _ in 0..10 {
+        engine.spmm(h, &x).unwrap();
+    }
+    let rec = engine.metrics.recorder();
+    assert_eq!(rec.committed(), 10);
+    assert_eq!(rec.len(), 4, "the ring keeps only the newest N");
+    assert_eq!(rec.dropped(), 6, "evictions are counted");
+
+    let snap = expo::snapshot(&engine.metrics);
+    let traces = snap.get("traces").unwrap();
+    assert_eq!(traces.get("capacity").unwrap().as_usize(), Some(4));
+    assert_eq!(traces.get("dropped").unwrap().as_usize(), Some(6));
+    assert!(!traces.get("exemplars").unwrap().as_arr().unwrap().is_empty());
+    let text = expo::prometheus_text(&engine.metrics);
+    assert!(text.contains("ge_spmm_traces_dropped_total 6"), "{text}");
 }
